@@ -1,0 +1,49 @@
+//! Bench for **Tables 2-4** (reduced): one representative accuracy cell per
+//! family — regenerates the Ours/w-o-V comparison on a test subset and
+//! times full-model inference per engine configuration.
+
+use cvapprox::approx::Family;
+use cvapprox::datasets::Dataset;
+use cvapprox::nn::{loader, Engine, ForwardOpts};
+use cvapprox::report::accuracy::sweep_net;
+use cvapprox::util::bench::Bencher;
+
+fn main() {
+    println!("== bench: accuracy_sweep ==");
+    let art = cvapprox::artifacts_dir();
+    if !art.join("models").is_dir() {
+        println!("(skipped: run `make artifacts` first)");
+        return;
+    }
+    let b = Bencher::default();
+
+    // Single-inference latency per configuration (mininet).
+    let model = loader::load_model(&art.join("models/mininet_synth10.cvm")).unwrap();
+    let macs = model.macs() as f64;
+    let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
+    let engine = Engine::new(model);
+    let img = ds.image(0);
+    for (label, opts) in [
+        ("exact", ForwardOpts::exact()),
+        ("perforated m=3 +V", ForwardOpts::approx(Family::Perforated, 3, true)),
+        ("truncated m=7 +V", ForwardOpts::approx(Family::Truncated, 7, true)),
+        ("recursive m=4 +V", ForwardOpts::approx(Family::Recursive, 4, true)),
+    ] {
+        let r = b.run(&format!("mininet inference {label}"), macs, || {
+            std::hint::black_box(engine.forward(&img, &opts).unwrap());
+        });
+        println!("{}", r.report());
+    }
+    println!();
+
+    // Regenerate one reduced table cell per family (60 images).
+    let mut log = |s: &str| println!("{s}");
+    for family in Family::APPROX {
+        let cells =
+            sweep_net(&art, "resnet8", "synth10", family, 60, 1, false, &mut log)
+                .unwrap();
+        for c in &cells {
+            assert!(c.exact_acc > 0.5, "sanity: model learned");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: end-to-end service throughput/latency through the batching
+//! coordinator, across batch sizes — the L3 hot path.
+
+use std::time::Duration;
+
+use cvapprox::approx::Family;
+use cvapprox::coordinator::{InferenceService, ServiceConfig};
+use cvapprox::datasets::Dataset;
+use cvapprox::nn::{loader, Engine};
+
+fn main() {
+    println!("== bench: coordinator_serve ==");
+    let art = cvapprox::artifacts_dir();
+    if !art.join("models").is_dir() {
+        println!("(skipped: run `make artifacts` first)");
+        return;
+    }
+    let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
+    let n = 120usize;
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>9}",
+        "batch", "img/s", "mean ms", "~p95 ms", "batches"
+    );
+    for batch in [1usize, 4, 8, 16] {
+        let model = loader::load_model(&art.join("models/shufflenet_synth10.cvm")).unwrap();
+        let engine = Engine::new(model);
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            batch_size: batch,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(engine, cfg);
+        let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i % ds.n))).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let snap = svc.shutdown();
+        println!(
+            "{:<10} {:>10.1} {:>12.2} {:>12.2} {:>9}",
+            batch,
+            snap.throughput_rps,
+            snap.mean_latency.as_secs_f64() * 1e3,
+            snap.p95_latency.as_secs_f64() * 1e3,
+            snap.batches
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Core hot-path bench: approximate GEMM throughput (MAC/s) across engines —
+//! native identity vs LUT vs the two PJRT artifact variants (fast / pallas).
+//! This is the measurement the §Perf optimization loop drives on.
+
+use cvapprox::approx::Family;
+use cvapprox::nn::gemm::{am_acc_identity, am_acc_lut};
+use cvapprox::runtime::{TileGemm, Variant, TK, TM, TN};
+use cvapprox::approx::MulLut;
+use cvapprox::util::bench::Bencher;
+use cvapprox::util::rng::Rng;
+
+fn main() {
+    println!("== bench: gemm_throughput ==");
+    let b = Bencher::default();
+    let mut rng = Rng::new(0x6E);
+    // Layer-realistic GEMM: 48 filters, K=288 (3x3x32), N=256 positions.
+    let (m_rows, k, n) = (48usize, 288usize, 256usize);
+    let macs = (m_rows * k * n) as f64;
+    let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+    let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+
+    for family in Family::ALL {
+        let m = *family.paper_levels().last().unwrap();
+        let r = b.run(
+            &format!("identity {} m={m} {}x{}x{}", family.name(), m_rows, k, n),
+            macs,
+            || {
+                std::hint::black_box(am_acc_identity(family, m, &w, &a, m_rows, k, n));
+            },
+        );
+        println!("{}", r.report());
+    }
+    for family in Family::APPROX {
+        let m = *family.paper_levels().last().unwrap();
+        let lut = MulLut::build(family, m);
+        let r = b.run(
+            &format!("lut      {} m={m} {}x{}x{}", family.name(), m_rows, k, n),
+            macs,
+            || {
+                std::hint::black_box(am_acc_lut(&lut, &w, &a, m_rows, k, n));
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    // PJRT tile executions (one artifact tile per call).
+    match TileGemm::new(&cvapprox::artifacts_dir()) {
+        Ok(rt) => {
+            let tile_macs = (TM * TK * TN) as f64;
+            let wt: Vec<i32> = (0..TM * TK).map(|_| rng.u8() as i32).collect();
+            let at: Vec<i32> = (0..TK * TN).map(|_| rng.u8() as i32).collect();
+            for variant in [Variant::Fast, Variant::Pallas] {
+                for family in [Family::Exact, Family::Perforated, Family::Truncated] {
+                    let m = *family.paper_levels().last().unwrap();
+                    rt.warmup(family, variant).unwrap();
+                    let r = b.run(
+                        &format!(
+                            "pjrt-{} {} m={m} tile {}x{}x{}",
+                            variant.name(),
+                            family.name(),
+                            TM,
+                            TK,
+                            TN
+                        ),
+                        tile_macs,
+                        || {
+                            std::hint::black_box(
+                                rt.run_tile(family, variant, m, &wt, &at).unwrap(),
+                            );
+                        },
+                    );
+                    println!("{}", r.report());
+                }
+            }
+        }
+        Err(e) => println!("(pjrt benches skipped: {e})"),
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench for **Figs 7-9 + Table 5**: regenerates every hardware sweep row
+//! and times the cost model (it is called inside accuracy/pareto sweeps, so
+//! it must be cheap).
+
+use cvapprox::approx::Family;
+use cvapprox::hw::array::{array_cost, PAPER_NS};
+use cvapprox::util::bench::Bencher;
+
+fn main() {
+    println!("== bench: hw_model ==");
+    let b = Bencher::default();
+    let r = b.run("full Fig7+8+9 sweep (36 design points)", 36.0, || {
+        for family in Family::APPROX {
+            for &m in family.paper_levels() {
+                for &n in &PAPER_NS {
+                    std::hint::black_box(array_cost(family, m, n));
+                }
+            }
+        }
+    });
+    println!("{}", r.report());
+    println!();
+    // Regenerate the actual artifacts.
+    for family in Family::APPROX {
+        println!("{}", cvapprox::report::tables::render_hw_figure(family));
+    }
+    println!("{}", cvapprox::report::tables::render_table5());
+}

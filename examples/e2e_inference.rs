@@ -1,0 +1,106 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): serve the synth10
+//! test set through the batching coordinator for the exact design and every
+//! approximate family (with and without the control variate), reporting
+//! accuracy, latency, throughput and modeled power — the paper's headline
+//! claim ("same performance, ~45% power reduction, <1% accuracy loss").
+//!
+//! Run: `cargo run --release --example e2e_inference [-- n_images [engine]]`
+//! engine ∈ {native, lut, pjrt, pjrt-pallas} (default native)
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use cvapprox::approx::Family;
+use cvapprox::coordinator::{InferenceService, ServiceConfig};
+use cvapprox::datasets::Dataset;
+use cvapprox::nn::{loader, Engine};
+use cvapprox::runtime::{TileGemm, Variant};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let engine_kind = args.get(1).map(|s| s.as_str()).unwrap_or("native").to_string();
+    let art = cvapprox::artifacts_dir();
+    let ds = Dataset::load(&art.join("data/synth10_test.cvd"))?;
+    let n = n.min(ds.n);
+    let net = "resnet8";
+    let n_array = 64;
+
+    // The paper's representative design points (Tables 2-4 midpoints).
+    let mut points: Vec<(Family, u32, bool)> = vec![(Family::Exact, 0, false)];
+    for family in Family::APPROX {
+        let m = family.paper_levels()[1]; // mid approximation
+        points.push((family, m, false));
+        points.push((family, m, true));
+    }
+
+    println!(
+        "E2E: {net}/synth10, {n} requests through the batching coordinator \
+         (engine={engine_kind}, array {n_array}x{n_array})\n"
+    );
+    println!(
+        "{:<26} {:>8} {:>10} {:>11} {:>11} {:>9}",
+        "design point", "acc", "img/s", "mean ms", "~p95 ms", "energy"
+    );
+
+    let pjrt: Option<Arc<TileGemm>> = if engine_kind.starts_with("pjrt") {
+        let rt = Arc::new(TileGemm::new(&art)?);
+        eprintln!("PJRT platform: {}", rt.platform());
+        Some(rt)
+    } else {
+        None
+    };
+
+    let mut exact_acc = None;
+    for (family, m, use_cv) in points {
+        let model = loader::load_model(&art.join(format!("models/{net}_synth10.cvm")))?;
+        let mut engine = Engine::new(model);
+        match engine_kind.as_str() {
+            "lut" => engine.prepare_lut(family, m),
+            "pjrt" => engine.attach_pjrt(pjrt.clone().unwrap(), Variant::Fast),
+            "pjrt-pallas" => engine.attach_pjrt(pjrt.clone().unwrap(), Variant::Pallas),
+            _ => {}
+        }
+        let cfg = ServiceConfig {
+            family,
+            m,
+            use_cv,
+            n_array,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let svc = InferenceService::start(engine, cfg);
+        let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i))).collect();
+        let mut correct = 0usize;
+        for (i, p) in pending.into_iter().enumerate() {
+            correct += (p.wait()?.top1 == ds.label(i)) as usize;
+        }
+        let snap = svc.shutdown();
+        let acc = correct as f64 / n as f64;
+        if family == Family::Exact {
+            exact_acc = Some(acc);
+        }
+        let label = if family == Family::Exact {
+            "exact".to_string()
+        } else {
+            format!("{} m={m} {}", family.name(), if use_cv { "+V (ours)" } else { "raw" })
+        };
+        println!(
+            "{:<26} {:>7.1}% {:>10.1} {:>11.2} {:>11.2} {:>8.3}x",
+            label,
+            100.0 * acc,
+            snap.throughput_rps,
+            snap.mean_latency.as_secs_f64() * 1e3,
+            snap.p95_latency.as_secs_f64() * 1e3,
+            snap.energy_vs_exact,
+        );
+    }
+    if let Some(e) = exact_acc {
+        println!(
+            "\n(accuracy loss vs exact = {:.1}% minus each row; energy is modeled \
+             power of the {n_array}x{n_array} array, 1.0 = exact design)",
+            100.0 * e
+        );
+    }
+    Ok(())
+}

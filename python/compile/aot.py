@@ -1,0 +1,145 @@
+"""AOT build driver: HLO artifacts + trained/quantized models + datasets + goldens.
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+
+Emits HLO **text** (not serialized protos): the rust `xla` crate links
+xla_extension 0.5.1 which rejects jax>=0.5's 64-bit instruction ids; the text
+parser reassigns ids (see /opt/xla-example/README.md). Everything here is
+build-time only — python never runs on the request path.
+
+Outputs:
+  artifacts/hlo/gemm_<family>_<pallas|fast>.hlo.txt   (8 tile-GEMM executables)
+  artifacts/data/<ds>_{test,calib}.cvd
+  artifacts/models/<net>_<ds>.cvm                     (12 quantized models)
+  artifacts/golden/*.gv                               (integration vectors)
+  artifacts/ckpt/*.pkl                                (float training cache)
+  artifacts/BUILD_OK                                  (make stamp)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets, export, model, quant, train
+from .kernels import approx, gemm
+
+NETS = ["mininet", "vggnet11", "resnet8", "resnet14", "inceptionnet", "shufflenet"]
+DATASETS = ["synth10", "synth100"]
+# Representative (family, m) points for golden vectors — one per family plus
+# exact, both with and without V.
+GOLDEN_POINTS = [("exact", 0, False), ("perforated", 2, False),
+                 ("perforated", 2, True), ("recursive", 3, True),
+                 ("truncated", 6, True), ("truncated", 6, False)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def build_hlo(out: Path, log=print) -> None:
+    hlo_dir = out / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    m_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((gemm.TM, gemm.TK), jnp.int32)
+    a_spec = jax.ShapeDtypeStruct((gemm.TK, gemm.TN), jnp.int32)
+    for family in approx.FAMILIES:
+        for variant, fn in (("pallas", gemm.pallas_tile_gemm),
+                            ("fast", gemm.jnp_tile_gemm)):
+            path = hlo_dir / f"gemm_{family}_{variant}.hlo.txt"
+            lowered = jax.jit(functools.partial(fn, family)).lower(
+                m_spec, w_spec, a_spec)
+            text = to_hlo_text(lowered)
+            path.write_text(text)
+            log(f"  hlo: {path.name} ({len(text) // 1024} KiB)")
+
+
+def build_datasets(out: Path, log=print) -> None:
+    data_dir = out / "data"
+    data_dir.mkdir(parents=True, exist_ok=True)
+    for ds in DATASETS:
+        for split in ("test", "calib"):
+            path = data_dir / f"{ds}_{split}.cvd"
+            if path.exists():
+                continue
+            imgs, labels, _ = datasets.load(ds, split)
+            scale, zp = quant.INPUT_SCALE, 0
+            imgs_q = quant.quantize(imgs, scale, zp)
+            export.write_dataset(path, imgs_q, labels, scale, zp)
+            log(f"  data: {path.name} n={len(labels)}")
+
+
+def build_models(out: Path, epochs: int, log=print) -> dict:
+    """Train (cached), quantize, export; returns {model_key: QuantModel}."""
+    models_dir = out / "models"
+    models_dir.mkdir(parents=True, exist_ok=True)
+    ckpt_dir = out / "ckpt"
+    qms = {}
+    for ds in DATASETS:
+        calib_imgs, _, n_classes = datasets.load(ds, "calib")
+        for net in NETS:
+            key = f"{net}_{ds}"
+            nodes, params, facc = train.train_or_load(net, ds, ckpt_dir,
+                                                      epochs=epochs, log=log)
+            qm = model.quantize_model(key, nodes, params, calib_imgs)
+            export.write_model(models_dir / f"{key}.cvm", qm, n_classes)
+            qms[key] = qm
+            log(f"  model: {key}.cvm float_acc={facc:.3f}")
+    return qms
+
+
+def build_golden(out: Path, qms: dict, log=print) -> None:
+    """Golden logits from the numpy quantized reference for rust cross-checks."""
+    gold_dir = out / "golden"
+    gold_dir.mkdir(parents=True, exist_ok=True)
+    # Two models exercise every op: shufflenet (groups/shuffle/add) and
+    # inceptionnet (concat); plus resnet8 for the e2e example.
+    for key in ("resnet8_synth10", "shufflenet_synth10", "inceptionnet_synth100"):
+        qm = qms[key]
+        ds = key.rsplit("_", 1)[1]
+        imgs, _, _ = datasets.load(ds, "test")
+        for img_idx in (0, 7):
+            img_q = quant.quantize(imgs[img_idx], quant.INPUT_SCALE, 0)
+            for family, m, use_cv in GOLDEN_POINTS:
+                logits = qm.forward(img_q, family, m, use_cv)
+                name = f"{key}_i{img_idx}_{family}{m}_{'cv' if use_cv else 'raw'}.gv"
+                export.write_golden(gold_dir / name, key, family, m, use_cv,
+                                    img_idx, logits)
+        log(f"  golden: {key} ({len(GOLDEN_POINTS) * 2} vectors)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--hlo-only", action="store_true",
+                    help="only regenerate the HLO artifacts")
+    args = ap.parse_args()
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    print("[aot] lowering HLO artifacts")
+    build_hlo(out)
+    if not args.hlo_only:
+        print("[aot] generating datasets")
+        build_datasets(out)
+        print("[aot] training + quantizing models")
+        qms = build_models(out, args.epochs)
+        print("[aot] golden vectors")
+        build_golden(out, qms)
+    (out / "BUILD_OK").write_text(f"built in {time.time() - t0:.0f}s\n")
+    print(f"[aot] done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Deterministic synthetic image datasets: synth10 / synth100.
+
+Stand-in for Cifar-10 / Cifar-100 (no dataset downloads in this environment —
+see DESIGN.md §2). 32x32x3 class-conditional images: a textured background
+plus a geometric figure whose (shape, hue) defines the class. synth10 uses 10
+shapes at a fixed hue family; synth100 crosses 10 shapes x 10 hues. Position,
+scale, rotation-ish jitter, occlusion noise and sensor noise make the task
+non-trivial, so trained networks develop natural, non-degenerate weight and
+activation distributions — which is what the paper's error model feeds on.
+
+Generation is seeded and identical across runs; the exported .cvd binaries
+(export.py) are the single source of truth consumed by the rust engine.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+H = W = 32
+C = 3
+N_SHAPES = 10
+
+
+def _coords(cx, cy, r):
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32)
+    return (yy - cy) / r, (xx - cx) / r
+
+
+def shape_mask(shape_id: int, cx: float, cy: float, r: float) -> np.ndarray:
+    """[H,W] float mask in [0,1] for one of the 10 figure classes."""
+    v, u = _coords(cx, cy, r)
+    d = np.sqrt(u * u + v * v)
+    if shape_id == 0:  # disc
+        m = d < 1.0
+    elif shape_id == 1:  # square
+        m = np.maximum(np.abs(u), np.abs(v)) < 0.9
+    elif shape_id == 2:  # triangle
+        m = (v > -0.8) & (np.abs(u) < (0.9 - v) * 0.6)
+    elif shape_id == 3:  # ring
+        m = (d < 1.0) & (d > 0.55)
+    elif shape_id == 4:  # cross
+        m = (np.abs(u) < 0.35) | (np.abs(v) < 0.35)
+        m &= np.maximum(np.abs(u), np.abs(v)) < 1.0
+    elif shape_id == 5:  # diamond
+        m = (np.abs(u) + np.abs(v)) < 1.1
+    elif shape_id == 6:  # horizontal stripes
+        m = (np.sin(v * 3 * np.pi) > 0) & (d < 1.1)
+    elif shape_id == 7:  # vertical stripes
+        m = (np.sin(u * 3 * np.pi) > 0) & (d < 1.1)
+    elif shape_id == 8:  # checkerboard
+        m = ((np.sin(u * 2.5 * np.pi) * np.sin(v * 2.5 * np.pi)) > 0) & (d < 1.1)
+    elif shape_id == 9:  # dot grid
+        m = ((np.sin(u * 4 * np.pi) > 0.3) & (np.sin(v * 4 * np.pi) > 0.3)) & (d < 1.1)
+    else:
+        raise ValueError(shape_id)
+    return m.astype(np.float32)
+
+
+def _hue_rgb(hue_id: int, n_hues: int) -> np.ndarray:
+    """Well-separated RGB triplet for hue class `hue_id`."""
+    t = hue_id / n_hues * 2 * np.pi
+    return 0.5 + 0.45 * np.array(
+        [np.cos(t), np.cos(t - 2 * np.pi / 3), np.cos(t + 2 * np.pi / 3)],
+        np.float32,
+    )
+
+
+def class_spec(label: int, n_classes: int) -> tuple[int, int, int]:
+    """label -> (shape_id, hue_id, n_hues)."""
+    if n_classes == 10:
+        return label % N_SHAPES, label // N_SHAPES, 1
+    if n_classes == 100:
+        return label % N_SHAPES, label // N_SHAPES, 10
+    raise ValueError(n_classes)
+
+
+def render(label: int, n_classes: int, rng: np.random.Generator) -> np.ndarray:
+    """One [H,W,C] float32 image in [0,1] for `label`."""
+    shape_id, hue_id, n_hues = class_spec(label, n_classes)
+    fg = _hue_rgb(hue_id, max(n_hues, 3))
+    # Background: low-frequency noise field with a random tint.
+    bg_tint = rng.uniform(0.1, 0.9, 3).astype(np.float32)
+    coarse = rng.uniform(0, 1, (4, 4, 1)).astype(np.float32)
+    bg = np.kron(coarse, np.ones((8, 8, 1), np.float32)) * 0.4 + 0.3
+    img = bg * bg_tint
+    # Figure with jittered placement/size and brightness.
+    cx = W / 2 + rng.uniform(-5, 5)
+    cy = H / 2 + rng.uniform(-5, 5)
+    r = rng.uniform(7.5, 11.5)
+    mask = shape_mask(shape_id, cx, cy, r)[..., None]
+    glow = rng.uniform(0.75, 1.15)
+    img = img * (1 - mask) + mask * np.clip(fg * glow, 0, 1)
+    # Occlusion speckle + sensor noise.
+    speck = rng.uniform(0, 1, (H, W, 1)) < 0.02
+    img = np.where(speck, rng.uniform(0, 1, (H, W, C)).astype(np.float32), img)
+    img = img + rng.normal(0, 0.03, (H, W, C)).astype(np.float32)
+    return np.clip(img, 0, 1).astype(np.float32)
+
+
+def make_split(n_classes: int, n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Balanced split: images [n,H,W,C] f32, labels [n] i32."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % n_classes
+    rng.shuffle(labels)
+    imgs = np.stack([render(int(l), n_classes, rng) for l in labels])
+    return imgs, labels.astype(np.int32)
+
+
+# Canonical split seeds — rust-side tests rely on these being stable.
+SPLITS = {
+    "synth10": dict(n_classes=10, train=(4000, 101), calib=(256, 103), test=(1000, 102)),
+    "synth100": dict(n_classes=100, train=(6000, 201), calib=(256, 203), test=(1000, 202)),
+}
+
+
+def load(name: str, split: str) -> tuple[np.ndarray, np.ndarray, int]:
+    spec = SPLITS[name]
+    n, seed = spec[split]
+    imgs, labels = make_split(spec["n_classes"], n, seed)
+    return imgs, labels, spec["n_classes"]

@@ -1,0 +1,110 @@
+"""Binary export of quantized models (.cvm), datasets (.cvd) and golden vectors.
+
+Little-endian throughout. rust/src/nn/loader.rs and rust/src/datasets/ are the
+consuming parsers — keep the three in lockstep.
+
+.cvd (dataset):
+  magic  "CVD1"
+  u32 n, u32 h, u32 w, u32 c
+  f32 scale, i32 zero_point          # input quantization of the images
+  u8  images[n*h*w*c]                # already quantized (HWC, row-major)
+  u16 labels[n]
+
+.cvm (model):
+  magic  "CVM1"
+  u16 name_len, utf8 name
+  u16 n_classes
+  u32 n_nodes
+  per node:
+    u8 op      (0 input, 1 conv, 2 maxpool, 3 gap, 4 dense, 5 add, 6 concat,
+                7 shuffle)
+    u8 relu
+    u16 n_inputs, u32 inputs[n_inputs]
+    u32 out_h, u32 out_w, u32 out_c
+    f32 out_scale, i32 out_zp
+    op params:
+      conv : u16 cout, u8 k, u8 stride, u8 pad, u8 _rsv, u16 groups,
+             f32 s_w, i32 zp_w,
+             u8 w_q[cout * k*k*(cin/groups)]   # row-major [cout][ky][kx][cin/g]
+             i32 b_q[cout]
+      dense: u32 nout, u32 nin, f32 s_w, i32 zp_w,
+             u8 w_q[nout*nin], i32 b_q[nout]
+      shuffle: u16 groups
+      others: none
+
+golden vector (.gv): exact/approx forward outputs for integration tests:
+  magic "CVG1", u16 name_len + name (model file stem),
+  u8 family (0 exact,1 perforated,2 recursive,3 truncated), u8 m, u8 use_cv,
+  u32 img_index, u32 n_logits, f64 logits[n_logits]
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .model import QuantModel
+
+OPCODE = {"input": 0, "conv": 1, "maxpool": 2, "gap": 3, "dense": 4,
+          "add": 5, "concat": 6, "shuffle": 7}
+FAMCODE = {"exact": 0, "perforated": 1, "recursive": 2, "truncated": 3}
+
+
+def write_dataset(path: Path, imgs_q: np.ndarray, labels: np.ndarray,
+                  scale: float, zp: int) -> None:
+    n, h, w, c = imgs_q.shape
+    assert imgs_q.dtype == np.uint8
+    with open(path, "wb") as f:
+        f.write(b"CVD1")
+        f.write(struct.pack("<IIII", n, h, w, c))
+        f.write(struct.pack("<fi", scale, zp))
+        f.write(imgs_q.tobytes())
+        f.write(labels.astype(np.uint16).tobytes())
+
+
+def write_model(path: Path, qm: QuantModel, n_classes: int) -> None:
+    with open(path, "wb") as f:
+        f.write(b"CVM1")
+        name = qm.name.encode()
+        f.write(struct.pack("<H", len(name)))
+        f.write(name)
+        f.write(struct.pack("<H", n_classes))
+        f.write(struct.pack("<I", len(qm.nodes)))
+        for i, n in enumerate(qm.nodes):
+            oh, ow, oc = qm.shapes[i]
+            s, zp = qm.out_q[i]
+            f.write(struct.pack("<BB", OPCODE[n.op], int(n.relu)))
+            f.write(struct.pack("<H", len(n.inputs)))
+            for j in n.inputs:
+                f.write(struct.pack("<I", j))
+            f.write(struct.pack("<IIIfi", oh, ow, oc, s, zp))
+            if n.op == "conv":
+                wrec = qm.weights[i]
+                f.write(struct.pack("<HBBBBH", n.cout, n.k, n.stride, n.pad,
+                                    0, n.groups))
+                f.write(struct.pack("<fi", wrec["s_w"], wrec["zp_w"]))
+                f.write(wrec["w_q"].astype(np.uint8).tobytes())
+                f.write(wrec["b_q"].astype(np.int32).tobytes())
+            elif n.op == "dense":
+                wrec = qm.weights[i]
+                nout, nin = wrec["w_q"].shape
+                f.write(struct.pack("<II", nout, nin))
+                f.write(struct.pack("<fi", wrec["s_w"], wrec["zp_w"]))
+                f.write(wrec["w_q"].astype(np.uint8).tobytes())
+                f.write(wrec["b_q"].astype(np.int32).tobytes())
+            elif n.op == "shuffle":
+                f.write(struct.pack("<H", n.groups))
+
+
+def write_golden(path: Path, model_name: str, family: str, m: int,
+                 use_cv: bool, img_index: int, logits: np.ndarray) -> None:
+    with open(path, "wb") as f:
+        f.write(b"CVG1")
+        name = model_name.encode()
+        f.write(struct.pack("<H", len(name)))
+        f.write(name)
+        f.write(struct.pack("<BBB", FAMCODE[family], m, int(use_cv)))
+        f.write(struct.pack("<II", img_index, logits.shape[0]))
+        f.write(logits.astype(np.float64).tobytes())

@@ -1,0 +1,106 @@
+"""Arithmetic identities for the paper's approximate 8x8 multipliers.
+
+All three families (perforated [22], recursive [23,24], truncated [17-19])
+admit *exact* integer identities of the form AM(W, A) = W*A - eps(W, A),
+where eps is the multiplication error of eq. (3)/(6)/(8) in the paper.
+Operands are uint8 values carried in i32 tensors (bit ops + products stay
+well inside i32: max error term < 2^16, max accumulator growth is bounded
+by the K dimension which the coordinator tiles).
+
+These functions are the single source of truth shared by:
+  - ref.py           (pure-jnp oracle used by pytest/hypothesis),
+  - gemm.py          (Pallas kernels — same expressions inside the kernel),
+  - the rust `approx` module re-implements them and cross-checks against a
+    partial-product bit-level model for all 2^16 operand pairs.
+
+`m` is a traced scalar (i32) so one lowered artifact serves every
+approximation level of a family.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Highest approximation knob the paper evaluates (truncated m=7 on 8x8).
+MAX_M = 7
+
+FAMILIES = ("exact", "perforated", "recursive", "truncated")
+
+
+def _mask(m):
+    """2^m - 1 as an i32 scalar (m may be traced)."""
+    return jnp.left_shift(jnp.int32(1), m.astype(jnp.int32)) - 1
+
+
+def err_perforated(w, a, m):
+    """eps = W * (A mod 2^m)  — eq. (3), s=0."""
+    return w * (a & _mask(m))
+
+
+def err_recursive(w, a, m):
+    """eps = W_L * A_L = (W mod 2^m)(A mod 2^m) — eq. (6)."""
+    return (w & _mask(m)) * (a & _mask(m))
+
+
+def err_truncated(w, a, m):
+    """eps = sum_{i<m} (W mod 2^{m-i}) * a_i * 2^i — eq. (8).
+
+    Static unroll over i in [0, MAX_M); terms with i >= m are masked out so
+    `m` can stay a traced runtime scalar.
+    """
+    m = m.astype(jnp.int32)
+    eps = jnp.zeros(jnp.broadcast_shapes(jnp.shape(w), jnp.shape(a)), jnp.int32)
+    for i in range(MAX_M):
+        sh = jnp.maximum(m - i, 0)  # clamp: negative shifts are UB
+        term = (w & _mask(sh)) * ((a >> i) & 1) << i
+        eps = eps + jnp.where(i < m, term, 0)
+    return eps
+
+
+_ERR = {
+    "perforated": err_perforated,
+    "recursive": err_recursive,
+    "truncated": err_truncated,
+}
+
+
+def err(family, w, a, m):
+    """Multiplication error eps(W, A) for `family` (0 for exact)."""
+    if family == "exact":
+        return jnp.zeros(jnp.broadcast_shapes(jnp.shape(w), jnp.shape(a)), jnp.int32)
+    return _ERR[family](w, a, m)
+
+
+def am(family, w, a, m):
+    """Approximate product AM(W, A) = W*A - eps(W, A)."""
+    return w * a - err(family, w, a, m)
+
+
+def xvar(family, a, m):
+    """Control-variate input term x_j of eq. (18)/(25)/(29).
+
+    perforated / recursive: x_j = A mod 2^m (m-bit value)
+    truncated:              x_j = OR(A[m-1:0]) in {0, 1}
+    exact:                  0 (V is unused)
+    """
+    if family == "exact":
+        return jnp.zeros(jnp.shape(a), jnp.int32)
+    low = a & _mask(m)
+    if family == "truncated":
+        return (low != 0).astype(jnp.int32)
+    return low
+
+
+def w_hat_q1(w, m):
+    """2 * What_j  (eq. 24, scaled by 2 so it stays integral).
+
+    What_j = 1/2 sum_{i<m} (W mod 2^{m-i}) 2^i is the average truncation
+    error of AM_T(W, .) over uniform A. The hardware carries it in fixed
+    point; we keep one fractional bit (Q.1).
+    """
+    m = m.astype(jnp.int32)
+    acc = jnp.zeros(jnp.shape(w), jnp.int32)
+    for i in range(MAX_M):
+        sh = jnp.maximum(m - i, 0)
+        acc = acc + jnp.where(i < m, (w & _mask(sh)) << i, 0)
+    return acc  # = 2 * What

@@ -1,0 +1,132 @@
+"""L1 Pallas kernels: approximate quantized tile-GEMM with fused control-variate sums.
+
+One kernel per multiplier family. Each computes, for a fixed-shape tile
+W[TM,TK] x A[TK,TN] (uint8 values in i32):
+
+    am_acc[f,p] = sum_k AM(W[f,k], A[k,p])      (MAC* accumulator chain)
+    sum_x[p]    = sum_k x(A[k,p])               (MAC* sumX chain, fused)
+    sum_a[p]    = sum_k A[k,p]                  (zero-point correction)
+    sum_w[f]    = sum_k W[f,k]                  (zero-point correction)
+
+The approximation level m is a runtime scalar, so ONE artifact per family
+serves every m — the coordinator never recompiles to change m.
+
+TPU mapping (DESIGN.md §8): instead of emulating the systolic array cell by
+cell, the error identities AM = W*A - eps turn every family into 1-2 extra
+*matmuls over masked operands* (truncated: up to MAX_M rank-preserving
+bit-plane matmuls) — exactly what the MXU runs as int8 dots with i32
+accumulation. The sumX reduction rides the same A tile while it is resident
+in VMEM, mirroring the paper's observation that the sumX adder is off the
+critical path. interpret=True everywhere: CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU perf is estimated in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import approx
+
+# Fixed artifact tile shape (the "systolic array unroll"). K is the reduction;
+# the rust coordinator accumulates across K tiles (exact: all outputs are
+# k-sums) and pads with zeros (exact: eps(w,0)=eps(0,a)=0 and x(0)=0).
+TM, TK, TN = 64, 64, 256
+
+# VMEM footprint estimate for the default tile (i32 everywhere):
+#   W 64x64 + A 64x256 + am_acc 64x256 + vectors  ~= 64*64*4 + 2*64*256*4
+#   + (256+256+64)*4 ~= 16 KiB + 128 KiB + 2.3 KiB ~= 147 KiB << 16 MiB VMEM.
+# Truncated adds MAX_M masked operand temporaries (transient, fused on MXU).
+
+
+def _mask(m):
+    return jnp.left_shift(jnp.int32(1), m) - 1
+
+
+def _dot(x, y):
+    """i32 matmul on the MXU path (int8 operands, 32-bit accumulate on TPU)."""
+    return jax.lax.dot_general(
+        x, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _err_acc(family, w, a, m):
+    """sum_k eps(W[f,k],A[k,p]) as masked-operand matmuls (see module doc)."""
+    if family == "exact":
+        return jnp.zeros((w.shape[0], a.shape[1]), jnp.int32)
+    if family == "perforated":
+        return _dot(w, a & _mask(m))
+    if family == "recursive":
+        return _dot(w & _mask(m), a & _mask(m))
+    if family == "truncated":
+        acc = jnp.zeros((w.shape[0], a.shape[1]), jnp.int32)
+        for i in range(approx.MAX_M):
+            sh = jnp.maximum(m - i, 0)
+            bitplane = (a >> i) & 1
+            term = _dot(w & _mask(sh), bitplane) << i
+            acc = acc + jnp.where(i < m, term, 0)
+        return acc
+    raise ValueError(family)
+
+
+def _sum_x(family, a, m):
+    """sum_k x(A[k,p]) over the K axis of the resident A tile."""
+    if family == "exact":
+        return jnp.zeros((a.shape[1],), jnp.int32)
+    low = a & _mask(m)
+    if family == "truncated":
+        low = (low != 0).astype(jnp.int32)
+    return low.sum(axis=0, dtype=jnp.int32)
+
+
+def _tile_kernel(family, m_ref, w_ref, a_ref, am_ref, sx_ref, sa_ref, sw_ref):
+    m = m_ref[0]
+    w = w_ref[...]
+    a = a_ref[...]
+    am_ref[...] = _dot(w, a) - _err_acc(family, w, a, m)
+    sx_ref[...] = _sum_x(family, a, m)
+    sa_ref[...] = a.sum(axis=0, dtype=jnp.int32)
+    sw_ref[...] = w.sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def pallas_tile_gemm(family, m, w, a):
+    """Run the family's Pallas tile kernel. Shapes: m[1] i32, w[TM,TK], a[TK,TN].
+
+    Returns (am_acc[TM,TN], sum_x[TN], sum_a[TN], sum_w[TM]), all i32.
+    """
+    tm, tk = w.shape
+    tk2, tn = a.shape
+    assert tk == tk2, (w.shape, a.shape)
+    return pl.pallas_call(
+        functools.partial(_tile_kernel, family),
+        out_shape=(
+            jax.ShapeDtypeStruct((tm, tn), jnp.int32),
+            jax.ShapeDtypeStruct((tn,), jnp.int32),
+            jax.ShapeDtypeStruct((tn,), jnp.int32),
+            jax.ShapeDtypeStruct((tm,), jnp.int32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(m.astype(jnp.int32), w.astype(jnp.int32), a.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def jnp_tile_gemm(family, m, w, a):
+    """Identity-based fast path (no Pallas): same outputs, XLA-fused matmuls.
+
+    Kept as a separate artifact for the serving fast path; the ablation bench
+    compares it against the Pallas lowering (EXPERIMENTS.md §Perf).
+    """
+    m_s = m.astype(jnp.int32)[0]
+    w = w.astype(jnp.int32)
+    a = a.astype(jnp.int32)
+    am_acc = _dot(w, a) - _err_acc(family, w, a, m_s)
+    # Keep `m` alive for the exact family too: jax would otherwise DCE the
+    # parameter and the AOT artifact would expect 2 buffers instead of 3.
+    am_acc = am_acc + (m_s & 0)
+    return am_acc, _sum_x(family, a, m_s), a.sum(0, dtype=jnp.int32), w.sum(
+        1, dtype=jnp.int32
+    )

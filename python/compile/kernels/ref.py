@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the approximate tile-GEMM + control-variate kernels.
+
+This is the CORE correctness reference: the Pallas kernels in gemm.py and the
+rust GEMM engines must agree bit-exactly with these functions. Everything is
+i32; operands are uint8 values.
+
+Conv-as-GEMM orientation (matches the systolic array in the paper, Fig 5/6):
+    G[f, p] = sum_k W[f, k] * A[k, p]
+f indexes filters (rows of W), p output positions (columns of A), k the
+k*k*Cin reduction. The control variate V[f, p] = C_f * sumX[p] is rank-1:
+sumX depends only on the activation column, C only on the filter row.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import approx
+
+
+def gemm_parts(family, w, a, m):
+    """All accumulator outputs the hardware array produces for one tile.
+
+    Args:
+      family: one of approx.FAMILIES.
+      w: [M, K] i32 (uint8 values) — weights, filter-major.
+      a: [K, N] i32 (uint8 values) — im2col activations.
+      m: scalar i32 — approximation level (ignored for exact).
+
+    Returns dict of:
+      am_acc: [M, N] i32 — sum_k AM(W[f,k], A[k,p])  (the MAC* chain output)
+      sum_x:  [N] i32    — sum_k x(A[k,p])           (the MAC* sumX chain)
+      sum_a:  [N] i32    — sum_k A[k,p]              (zero-point row sum)
+      sum_w:  [M] i32    — sum_k W[f,k]              (zero-point col sum)
+    """
+    m = jnp.asarray(m, jnp.int32)
+    prod = approx.am(family, w[:, None, :], a.T[None, :, :], m)  # [M, N, K]
+    am_acc = prod.sum(axis=2, dtype=jnp.int32)
+    sum_x = approx.xvar(family, a, m).sum(axis=0, dtype=jnp.int32)
+    sum_a = a.sum(axis=0, dtype=jnp.int32)
+    sum_w = w.sum(axis=1, dtype=jnp.int32)
+    return {"am_acc": am_acc, "sum_x": sum_x, "sum_a": sum_a, "sum_w": sum_w}
+
+
+def cv_constants(family, w, m, k_valid=None):
+    """Per-filter control-variate constants (C and C0 in Q.4 fixed point).
+
+    perforated: C = E[W_j]            (eq. 21), C0 = 0
+    recursive:  C = E[W_j mod 2^m]    (eq. 32), C0 = 0
+    truncated:  C = E[What_j]         (eq. 26), C0 = 2^-m sum_j What_j (eq. 28)
+
+    Args:
+      w: [M, K] i32 weights (uint8 values).
+      k_valid: effective filter size k (defaults to K). When the coordinator
+        zero-pads K, padding contributes 0 to every sum, but the *averages*
+        must divide by the true k — pass it.
+
+    Returns (c_q4 [M] i32, c0_q4 [M] i32), both scaled by 16 (Q.4).
+    """
+    m = jnp.asarray(m, jnp.int32)
+    k = jnp.asarray(w.shape[1] if k_valid is None else k_valid, jnp.int32)
+    if family == "exact":
+        z = jnp.zeros(w.shape[0], jnp.int32)
+        return z, z
+    if family == "perforated":
+        num = w.sum(axis=1, dtype=jnp.int32)  # sum_j W_j
+    elif family == "recursive":
+        mask = jnp.left_shift(jnp.int32(1), m) - 1
+        num = (w & mask).sum(axis=1, dtype=jnp.int32)
+    elif family == "truncated":
+        num = approx.w_hat_q1(w, m).sum(axis=1, dtype=jnp.int32)  # 2*sum What
+    else:
+        raise ValueError(family)
+    # C = num / k (truncated: num / 2k); round-to-nearest in Q.4.
+    den = k * (2 if family == "truncated" else 1)
+    c_q4 = (num * 16 + den // 2) // den
+    if family == "truncated":
+        # C0 = 2^-m sum What = num / 2^(m+1); in Q.4: num * 16 / 2^(m+1).
+        sh = jnp.left_shift(jnp.int32(1), m + 1)
+        c0_q4 = (num * 16 + sh // 2) // sh
+    else:
+        c0_q4 = jnp.zeros(w.shape[0], jnp.int32)
+    return c_q4, c0_q4
+
+
+def apply_cv(parts, c_q4, c0_q4):
+    """MAC+ epilogue: G*[f,p] = am_acc[f,p] + round((C_f*sumX[p] + C0_f)/16).
+
+    Returns the V-corrected hardware accumulator (still excludes zero-point
+    terms and bias — the coordinator owns those).
+    """
+    v_q4 = c_q4[:, None] * parts["sum_x"][None, :] + c0_q4[:, None]
+    v = (v_q4 + 8) >> 4  # round-to-nearest in Q.4 (ties up)
+    return parts["am_acc"] + v
+
+
+def exact_gemm(w, a):
+    """Plain exact i32 GEMM reference."""
+    return (w.astype(jnp.int32) @ a.astype(jnp.int32)).astype(jnp.int32)

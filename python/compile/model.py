@@ -1,0 +1,340 @@
+"""L2 model: float (training) and quantized (reference) forward passes.
+
+Float path: jax, NHWC, used only at build time to train the six nets.
+Quantized path: numpy, bit-exact mirror of the rust `nn` engine — every
+rounding rule here is replicated in rust/src/nn/ and checked by golden-vector
+tests. The approximate-multiplier families enter ONLY in conv/dense (the ops
+the paper's MAC array executes); everything else is exact integer arithmetic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .nets import Node
+
+# ---------------------------------------------------------------------------
+# Shape inference
+# ---------------------------------------------------------------------------
+
+
+def infer_shapes(nodes: list[Node], in_shape=(32, 32, 3)) -> list[tuple[int, int, int]]:
+    """Per-node output shape (h, w, c); dense -> (1, 1, nout)."""
+    shapes: list[tuple[int, int, int]] = []
+    for n in nodes:
+        if n.op == "input":
+            shapes.append(in_shape)
+        elif n.op == "conv":
+            h, w, _ = shapes[n.inputs[0]]
+            oh = (h + 2 * n.pad - n.k) // n.stride + 1
+            ow = (w + 2 * n.pad - n.k) // n.stride + 1
+            shapes.append((oh, ow, n.cout))
+        elif n.op == "maxpool":
+            h, w, c = shapes[n.inputs[0]]
+            shapes.append((h // 2, w // 2, c))
+        elif n.op == "gap":
+            _, _, c = shapes[n.inputs[0]]
+            shapes.append((1, 1, c))
+        elif n.op == "dense":
+            shapes.append((1, 1, n.nout))
+        elif n.op == "add":
+            shapes.append(shapes[n.inputs[0]])
+        elif n.op == "concat":
+            h, w, _ = shapes[n.inputs[0]]
+            shapes.append((h, w, sum(shapes[i][2] for i in n.inputs)))
+        elif n.op == "shuffle":
+            shapes.append(shapes[n.inputs[0]])
+        else:
+            raise ValueError(n.op)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Float path (build-time training + calibration)
+# ---------------------------------------------------------------------------
+
+
+def init_params(nodes: list[Node], seed: int, in_shape=(32, 32, 3)):
+    """He-init conv/dense weights. Conv weights jax-layout [k,k,cin/g,cout]."""
+    shapes = infer_shapes(nodes, in_shape)
+    rng = np.random.default_rng(seed)
+    params = {}
+    for i, n in enumerate(nodes):
+        if n.op == "conv":
+            cin = shapes[n.inputs[0]][2] // n.groups
+            fan_in = n.k * n.k * cin
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), (n.k, n.k, cin, n.cout))
+            params[i] = {"w": jnp.asarray(w, jnp.float32),
+                         "b": jnp.zeros((n.cout,), jnp.float32)}
+        elif n.op == "dense":
+            nin = int(np.prod(shapes[n.inputs[0]]))
+            w = rng.normal(0, np.sqrt(2.0 / nin), (nin, n.nout))
+            params[i] = {"w": jnp.asarray(w, jnp.float32),
+                         "b": jnp.zeros((n.nout,), jnp.float32)}
+    return params
+
+
+def float_forward_all(nodes, params, x):
+    """Float forward on an NHWC batch returning every node's output."""
+    outs = []
+    for i, n in enumerate(nodes):
+        if n.op == "input":
+            y = x
+        elif n.op == "conv":
+            y = jax.lax.conv_general_dilated(
+                outs[n.inputs[0]], params[i]["w"], (n.stride, n.stride),
+                [(n.pad, n.pad)] * 2, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=n.groups) + params[i]["b"]
+            if n.relu:
+                y = jax.nn.relu(y)
+        elif n.op == "maxpool":
+            y = jax.lax.reduce_window(outs[n.inputs[0]], -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        elif n.op == "gap":
+            y = outs[n.inputs[0]].mean(axis=(1, 2), keepdims=True)
+        elif n.op == "dense":
+            bsz = outs[n.inputs[0]].shape[0]
+            y = outs[n.inputs[0]].reshape(bsz, -1) @ params[i]["w"] + params[i]["b"]
+            y = y[:, None, None, :]
+            if n.relu:
+                y = jax.nn.relu(y)
+        elif n.op == "add":
+            y = outs[n.inputs[0]] + outs[n.inputs[1]]
+            if n.relu:
+                y = jax.nn.relu(y)
+        elif n.op == "concat":
+            y = jnp.concatenate([outs[j] for j in n.inputs], axis=-1)
+        elif n.op == "shuffle":
+            bsz, h, w, c = outs[n.inputs[0]].shape
+            g = n.groups
+            y = outs[n.inputs[0]].reshape(bsz, h, w, g, c // g)
+            y = y.transpose(0, 1, 2, 4, 3).reshape(bsz, h, w, c)
+        else:
+            raise ValueError(n.op)
+        outs.append(y)
+    return outs
+
+
+def float_forward(nodes, params, x):
+    """Float logits [B, n_classes]."""
+    return float_forward_all(nodes, params, x)[-1].reshape(x.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# Quantized reference path (numpy; mirror of rust/src/nn)
+# ---------------------------------------------------------------------------
+
+
+def im2col(a_q: np.ndarray, k: int, stride: int, pad: int, zp: int) -> np.ndarray:
+    """uint8 [H,W,C] -> [k*k*C, OH*OW]; padding uses the zero-point (real 0)."""
+    h, w, c = a_q.shape
+    ap = np.full((h + 2 * pad, w + 2 * pad, c), zp, np.uint8)
+    ap[pad:pad + h, pad:pad + w] = a_q
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = np.empty((k * k * c, oh * ow), np.uint8)
+    idx = 0
+    for ky in range(k):
+        for kx in range(k):
+            patch = ap[ky:ky + oh * stride:stride, kx:kx + ow * stride:stride]
+            cols[idx * c:(idx + 1) * c] = patch.reshape(oh * ow, c).T
+            idx += 1
+    return cols
+
+
+def np_err_acc(family: str, w: np.ndarray, a: np.ndarray, m: int) -> np.ndarray:
+    """sum_k eps(W,A) via the identity matmuls (i64)."""
+    w = w.astype(np.int64)
+    a = a.astype(np.int64)
+    mask = (1 << m) - 1
+    if family == "exact" or m == 0:
+        return np.zeros((w.shape[0], a.shape[1]), np.int64)
+    if family == "perforated":
+        return w @ (a & mask)
+    if family == "recursive":
+        return (w & mask) @ (a & mask)
+    if family == "truncated":
+        acc = np.zeros((w.shape[0], a.shape[1]), np.int64)
+        for i in range(m):
+            acc += ((w & ((1 << (m - i)) - 1)) @ ((a >> i) & 1)) << i
+        return acc
+    raise ValueError(family)
+
+
+def np_sum_x(family: str, a: np.ndarray, m: int) -> np.ndarray:
+    low = a.astype(np.int64) & ((1 << m) - 1)
+    if family == "truncated":
+        low = (low != 0).astype(np.int64)
+    return low.sum(axis=0)
+
+
+def np_cv_constants(family: str, w: np.ndarray, m: int):
+    """Mirror of kernels.ref.cv_constants in numpy (Q.4 integers)."""
+    k = w.shape[1]
+    w = w.astype(np.int64)
+    if family == "perforated":
+        num = w.sum(axis=1)
+    elif family == "recursive":
+        num = (w & ((1 << m) - 1)).sum(axis=1)
+    elif family == "truncated":
+        num = np.zeros(w.shape[0], np.int64)
+        for i in range(m):
+            num += (w & ((1 << (m - i)) - 1)).sum(axis=1) << i  # = 2*sum(What)
+    else:
+        raise ValueError(family)
+    den = k * (2 if family == "truncated" else 1)
+    c_q4 = (num * 16 + den // 2) // den
+    if family == "truncated":
+        sh = 1 << (m + 1)
+        c0_q4 = (num * 16 + sh // 2) // sh
+    else:
+        c0_q4 = np.zeros(w.shape[0], np.int64)
+    return c_q4, c0_q4
+
+
+def approx_gemm(family: str, m: int, use_cv: bool,
+                w_q: np.ndarray, a_q: np.ndarray,
+                zp_w: int, zp_a: int, bias_q: np.ndarray) -> np.ndarray:
+    """The full hardware accumulator for one GEMM: [M,N] i64.
+
+    acc = CV(sum AM(W,A)) - zw*sum_a - za*sum_w + K*zw*za + bias
+    """
+    wi = w_q.astype(np.int64)
+    ai = a_q.astype(np.int64)
+    kdim = wi.shape[1]
+    am_acc = wi @ ai - np_err_acc(family, wi, ai, m)
+    if use_cv and family != "exact" and m > 0:
+        c_q4, c0_q4 = np_cv_constants(family, w_q, m)
+        sum_x = np_sum_x(family, ai, m)
+        v_q4 = c_q4[:, None] * sum_x[None, :] + c0_q4[:, None]
+        am_acc = am_acc + ((v_q4 + 8) >> 4)
+    sum_a = ai.sum(axis=0)
+    sum_w = wi.sum(axis=1)
+    return (am_acc - zp_w * sum_a[None, :] - zp_a * sum_w[:, None]
+            + kdim * zp_w * zp_a + bias_q.astype(np.int64)[:, None])
+
+
+class QuantModel:
+    """Quantized network: nodes + per-node qparams + uint8 weights.
+
+    Produced by `quantize_model`; serialized by export.py; mirrored in rust.
+    """
+
+    def __init__(self, name, nodes, shapes, out_q, weights):
+        self.name = name
+        self.nodes = nodes
+        self.shapes = shapes          # per-node (h, w, c)
+        self.out_q = out_q            # per-node (scale, zp)
+        self.weights = weights        # node_id -> {w_q, b_q, s_w, zp_w}
+
+    def forward(self, img_q: np.ndarray, family="exact", m=0, use_cv=False):
+        """One uint8 [H,W,C] image -> float logits [n_classes]."""
+        outs: list[np.ndarray] = []
+        for i, n in enumerate(self.nodes):
+            s_out, zp_out = self.out_q[i]
+            if n.op == "input":
+                y = img_q
+            elif n.op in ("conv", "dense"):
+                y = self._mac_layer(i, n, outs, family, m, use_cv)
+            elif n.op == "maxpool":
+                x = outs[n.inputs[0]]
+                h, w, c = x.shape
+                y = x[:h // 2 * 2, :w // 2 * 2].reshape(h // 2, 2, w // 2, 2, c)
+                y = y.max(axis=(1, 3))
+            elif n.op == "gap":
+                x = outs[n.inputs[0]].astype(np.int64)
+                npix = x.shape[0] * x.shape[1]
+                y = ((x.sum(axis=(0, 1)) * 2 + npix) // (2 * npix)).astype(np.uint8)
+                y = y.reshape(1, 1, -1)
+            elif n.op == "add":
+                a, b = outs[n.inputs[0]], outs[n.inputs[1]]
+                (s1, z1), (s2, z2) = (self.out_q[j] for j in n.inputs)
+                acc = ((a.astype(np.float64) - z1) * s1
+                       + (b.astype(np.float64) - z2) * s2)
+                y = quant.round_half_away(acc / s_out) + zp_out
+                lo = zp_out if n.relu else 0
+                y = np.clip(y, lo, 255).astype(np.uint8)
+            elif n.op == "concat":
+                parts = []
+                for j in n.inputs:
+                    s_j, z_j = self.out_q[j]
+                    q = quant.round_half_away(
+                        (outs[j].astype(np.float64) - z_j) * (s_j / s_out)) + zp_out
+                    parts.append(np.clip(q, 0, 255).astype(np.uint8))
+                y = np.concatenate(parts, axis=-1)
+            elif n.op == "shuffle":
+                x = outs[n.inputs[0]]
+                h, w, c = x.shape
+                g = n.groups
+                y = x.reshape(h, w, g, c // g).transpose(0, 1, 3, 2).reshape(h, w, c)
+            else:
+                raise ValueError(n.op)
+            outs.append(y)
+        s, zp = self.out_q[-1]
+        return (outs[-1].reshape(-1).astype(np.float64) - zp) * s
+
+    def _mac_layer(self, i, n, outs, family, m, use_cv):
+        wrec = self.weights[i]
+        x = outs[n.inputs[0]]
+        s_in, zp_in = self.out_q[n.inputs[0]]
+        s_out, zp_out = self.out_q[i]
+        mult = wrec["s_w"] * s_in / s_out
+        zp_w = wrec["zp_w"]
+        if n.op == "dense":
+            a_cols = x.reshape(-1, 1)  # [nin, 1]
+            acc = approx_gemm(family, m, use_cv, wrec["w_q"], a_cols,
+                              zp_w, zp_in, wrec["b_q"])
+            q = quant.requantize(acc, mult, zp_out).reshape(-1)
+            if n.relu:
+                q = np.maximum(q, zp_out)
+            return q.reshape(1, 1, -1)
+        # conv (possibly grouped)
+        h, w, cin = x.shape
+        oh, ow, cout = self.shapes[i]
+        g = n.groups
+        y = np.empty((cout, oh * ow), np.uint8)
+        cpg_in, cpg_out = cin // g, cout // g
+        for gi in range(g):
+            xg = x[..., gi * cpg_in:(gi + 1) * cpg_in]
+            a_cols = im2col(xg, n.k, n.stride, n.pad, zp_in)
+            wq = wrec["w_q"][gi * cpg_out:(gi + 1) * cpg_out]
+            bq = wrec["b_q"][gi * cpg_out:(gi + 1) * cpg_out]
+            acc = approx_gemm(family, m, use_cv, wq, a_cols, zp_w, zp_in, bq)
+            q = quant.requantize(acc, mult, zp_out)
+            if n.relu:
+                q = np.maximum(q, zp_out)
+            y[gi * cpg_out:(gi + 1) * cpg_out] = q
+        return y.T.reshape(oh, ow, cout)
+
+
+def quantize_model(name, nodes, params, calib_imgs, in_shape=(32, 32, 3)) -> QuantModel:
+    """Post-training quantization: calibrate activations, quantize weights."""
+    shapes = infer_shapes(nodes, in_shape)
+    cals = [quant.Calibrator() for _ in nodes]
+    outs = float_forward_all(nodes, params, jnp.asarray(calib_imgs))
+    for i, y in enumerate(outs):
+        cals[i].observe(np.asarray(y))
+    out_q = [cals[i].qparams() for i in range(len(nodes))]
+    out_q[0] = (quant.INPUT_SCALE, 0)  # inputs live on an exact /255 grid
+
+    weights = {}
+    for i, n in enumerate(nodes):
+        if n.op not in ("conv", "dense"):
+            continue
+        w = np.asarray(params[i]["w"], np.float64)
+        b = np.asarray(params[i]["b"], np.float64)
+        if n.op == "conv":
+            # jax layout [k,k,cin/g,cout] -> engine layout [cout, k*k*cin/g]
+            # with (ky,kx,cin) minor ordering matching im2col.
+            w = w.transpose(3, 0, 1, 2).reshape(w.shape[3], -1)
+        else:
+            w = w.T  # [nout, nin]
+        s_w, zp_w = quant.choose_qparams(w.min(), w.max())
+        w_q = quant.quantize(w, s_w, zp_w)
+        s_in = out_q[n.inputs[0]][0]
+        b_q = quant.quantize_bias(b, s_w, s_in)
+        weights[i] = {"w_q": w_q, "b_q": b_q, "s_w": s_w, "zp_w": zp_w}
+    return QuantModel(name, nodes, shapes, out_q, weights)

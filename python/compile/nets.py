@@ -1,0 +1,191 @@
+"""Network IR + the six CNN architectures.
+
+A model is a flat list of nodes (a DAG in topological order). The same IR is
+(a) trained in float by model.py / train.py, (b) quantized + exported by
+export.py, and (c) executed by the rust `nn` engine — rust/src/nn/graph.rs
+mirrors these op semantics exactly.
+
+Ops:
+  input                              — quantized image entry point
+  conv(cout,k,stride,pad,groups)     — 2D conv, optional fused ReLU
+  maxpool(k=2,s=2)                   — 2x2 max pooling
+  gap                                — global average pool -> 1x1xC
+  dense(nout)                        — fully connected, optional fused ReLU
+  add(a,b)                           — residual addition (+ optional ReLU)
+  concat(x...)                       — channel concat (inception)
+  shuffle(groups)                    — channel shuffle (shufflenet)
+
+The six nets echo the paper's families (GoogLeNet, ResNet44/56, ShuffleNet,
+VGG13/16) scaled to this environment's 1-core budget: same motifs, fewer
+channels (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Node:
+    op: str
+    inputs: list[int] = field(default_factory=list)
+    # op params (used subset depends on op)
+    cout: int = 0
+    k: int = 0
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    relu: bool = False
+    nout: int = 0
+
+
+class Builder:
+    def __init__(self):
+        self.nodes: list[Node] = [Node("input")]
+
+    def _add(self, node: Node) -> int:
+        self.nodes.append(node)
+        return len(self.nodes) - 1
+
+    def conv(self, x, cout, k=3, stride=1, pad=None, groups=1, relu=True):
+        pad = (k // 2) if pad is None else pad
+        return self._add(Node("conv", [x], cout=cout, k=k, stride=stride,
+                               pad=pad, groups=groups, relu=relu))
+
+    def maxpool(self, x):
+        return self._add(Node("maxpool", [x], k=2, stride=2))
+
+    def gap(self, x):
+        return self._add(Node("gap", [x]))
+
+    def dense(self, x, nout, relu=False):
+        return self._add(Node("dense", [x], nout=nout, relu=relu))
+
+    def add(self, a, b, relu=True):
+        return self._add(Node("add", [a, b], relu=relu))
+
+    def concat(self, xs):
+        return self._add(Node("concat", list(xs)))
+
+    def shuffle(self, x, groups):
+        return self._add(Node("shuffle", [x], groups=groups))
+
+
+def mininet(n_classes: int) -> list[Node]:
+    """Small plain CNN (the quickstart net)."""
+    b = Builder()
+    x = b.conv(0, 16)
+    x = b.conv(x, 24)
+    x = b.maxpool(x)           # 16x16
+    x = b.conv(x, 32)
+    x = b.maxpool(x)           # 8x8
+    x = b.conv(x, 48)
+    x = b.gap(x)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+def vggnet11(n_classes: int) -> list[Node]:
+    """VGG-style: stacked 3x3 blocks + maxpool (echoes VGG13)."""
+    b = Builder()
+    x = 0
+    for cout, reps in [(16, 1), (32, 2), (48, 2), (64, 2)]:
+        for _ in range(reps):
+            x = b.conv(x, cout)
+        x = b.maxpool(x)
+    x = b.gap(x)               # 2x2 -> gap
+    x = b.dense(x, 64, relu=True)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+def _res_block(b: Builder, x: int, cout: int, stride: int) -> int:
+    y = b.conv(x, cout, stride=stride)
+    y = b.conv(y, cout, relu=False)
+    if stride != 1:
+        x = b.conv(x, cout, k=1, stride=stride, relu=False)  # projection
+    return b.add(x, y, relu=True)
+
+
+def resnet8(n_classes: int) -> list[Node]:
+    """3 residual blocks (echoes ResNet44 family, shallow)."""
+    b = Builder()
+    x = b.conv(0, 16)
+    x = _res_block(b, x, 16, 1)
+    x = _res_block(b, x, 32, 2)
+    x = _res_block(b, x, 48, 2)
+    x = b.gap(x)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+def resnet14(n_classes: int) -> list[Node]:
+    """6 residual blocks (echoes ResNet56, deeper variant)."""
+    b = Builder()
+    x = b.conv(0, 16)
+    x = _res_block(b, x, 16, 1)
+    x = _res_block(b, x, 16, 1)
+    x = _res_block(b, x, 32, 2)
+    x = _res_block(b, x, 32, 1)
+    x = _res_block(b, x, 48, 2)
+    x = _res_block(b, x, 48, 1)
+    x = b.gap(x)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+def _inception(b: Builder, x: int, c1: int, c3: int, c5: int, cp: int) -> int:
+    br1 = b.conv(x, c1, k=1)
+    br3 = b.conv(b.conv(x, c3 // 2, k=1), c3)
+    br5 = b.conv(b.conv(b.conv(x, c5 // 2, k=1), c5), c5)  # 5x5 as 2x 3x3
+    brp = b.conv(x, cp, k=1)
+    return b.concat([br1, br3, br5, brp])
+
+
+def inceptionnet(n_classes: int) -> list[Node]:
+    """Parallel-branch concat modules (echoes GoogLeNet)."""
+    b = Builder()
+    x = b.conv(0, 16)
+    x = b.maxpool(x)                       # 16x16
+    x = _inception(b, x, 8, 16, 8, 8)      # -> 40ch
+    x = b.maxpool(x)                       # 8x8
+    x = _inception(b, x, 16, 24, 12, 12)   # -> 64ch
+    x = _inception(b, x, 16, 32, 16, 16)   # -> 80ch
+    x = b.gap(x)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+def _shuffle_unit(b: Builder, x: int, cout: int, groups: int, stride: int) -> int:
+    y = b.conv(x, cout, k=1, groups=groups)
+    y = b.shuffle(y, groups)
+    y = b.conv(y, cout, k=3, stride=stride, groups=cout, relu=False)  # depthwise
+    y = b.conv(y, cout, k=1, groups=groups, relu=False)
+    if stride == 1:
+        return b.add(x, y, relu=True)
+    x = b.conv(x, cout, k=1, stride=stride, relu=False)  # projection shortcut
+    return b.add(x, y, relu=True)
+
+
+def shufflenet(n_classes: int) -> list[Node]:
+    """Grouped 1x1 conv + channel shuffle + depthwise 3x3 (echoes ShuffleNet)."""
+    b = Builder()
+    x = b.conv(0, 16)
+    x = b.maxpool(x)                        # 16x16
+    x = _shuffle_unit(b, x, 32, 2, 2)       # 8x8
+    x = _shuffle_unit(b, x, 32, 2, 1)
+    x = _shuffle_unit(b, x, 64, 4, 2)       # 4x4
+    x = _shuffle_unit(b, x, 64, 4, 1)
+    x = b.gap(x)
+    b.dense(x, n_classes)
+    return b.nodes
+
+
+NETS = {
+    "mininet": mininet,
+    "vggnet11": vggnet11,
+    "resnet8": resnet8,
+    "resnet14": resnet14,
+    "inceptionnet": inceptionnet,
+    "shufflenet": shufflenet,
+}

@@ -1,0 +1,85 @@
+"""Asymmetric uint8 quantization (TPU-style), shared python/rust semantics.
+
+Per-tensor affine quantization: real = scale * (q - zero_point), q in [0,255].
+Weights and activations are both uint8 (the paper's multipliers are unsigned
+8x8); accumulation is i32. The integer GEMM with zero points expands as
+
+  sum_k (W-z_w)(A-z_a) = sum_k W*A - z_w*sum_a - z_a*sum_w + K*z_w*z_a
+
+and only the raw uint8 product sum_k W*A goes through the approximate
+multiplier array; the row/column sums are exact side accumulators the
+hardware keeps anyway (they share the sumX datapath structure).
+
+Requantization to the next layer's uint8 domain uses a single f32 multiplier
+M = s_w*s_a/s_out with round-half-away-from-zero — both the python reference
+and the rust engine implement exactly this, so quantized forwards match
+bit-for-bit (asserted by golden-vector integration tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Input images live on an exact 1/255 grid; stored as f32 in the .cvd binaries.
+INPUT_SCALE = float(np.float32(1.0 / 255.0))
+
+
+def choose_qparams(x_min: float, x_max: float) -> tuple[float, int]:
+    """Scale/zero-point covering [x_min, x_max] with 0 exactly representable."""
+    x_min = min(0.0, float(x_min))
+    x_max = max(0.0, float(x_max))
+    if x_max == x_min:
+        return 1.0, 0
+    # Round the scale to f32 BEFORE deriving anything from it: the .cvm/.cvd
+    # binaries store f32, and the rust engine must compute bit-identical
+    # requantization multipliers.
+    scale = float(np.float32((x_max - x_min) / 255.0))
+    zp = int(round(-x_min / scale))
+    return scale, int(np.clip(zp, 0, 255))
+
+
+def quantize(x: np.ndarray, scale: float, zp: int) -> np.ndarray:
+    """float -> uint8."""
+    q = np.round(x / scale) + zp
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def dequantize(q: np.ndarray, scale: float, zp: int) -> np.ndarray:
+    return (q.astype(np.float32) - zp) * scale
+
+
+def round_half_away(x: np.ndarray) -> np.ndarray:
+    """Deterministic round-half-away-from-zero (np.round is half-to-even)."""
+    return np.sign(x) * np.floor(np.abs(x) + 0.5)
+
+
+def requantize(acc: np.ndarray, mult: float, out_zp: int) -> np.ndarray:
+    """i32 accumulator -> uint8 output: clamp(round(acc*mult) + zp)."""
+    q = round_half_away(acc.astype(np.float64) * np.float64(mult)) + out_zp
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def quantize_bias(b: np.ndarray, s_w: float, s_a: float) -> np.ndarray:
+    """Bias folds into the i32 accumulator domain: b_q = round(b/(s_w*s_a))."""
+    return round_half_away(b.astype(np.float64) / (s_w * s_a)).astype(np.int64).astype(np.int32)
+
+
+class Calibrator:
+    """Tracks min/max of a float tensor stream for post-training calibration.
+
+    Uses percentile clipping (99.95%) to shave outliers — standard PTQ
+    practice; keeps the uint8 grid dense where activations actually live.
+    """
+
+    def __init__(self, percentile: float = 99.95):
+        self.percentile = percentile
+        self.mins: list[float] = []
+        self.maxs: list[float] = []
+
+    def observe(self, x: np.ndarray) -> None:
+        lo = 100.0 - self.percentile
+        self.mins.append(float(np.percentile(x, lo)))
+        self.maxs.append(float(np.percentile(x, self.percentile)))
+
+    def qparams(self) -> tuple[float, int]:
+        return choose_qparams(np.mean(self.mins), np.mean(self.maxs))

@@ -1,0 +1,104 @@
+"""Build-time training of the six nets on synth10/synth100 (hand-rolled Adam).
+
+No optax in this environment — Adam is ~20 lines. Training is float32, jit'd,
+single CPU core; the nets are sized so each (net, dataset) pair trains in a
+couple of minutes. Checkpoints are cached under artifacts/ckpt/ as .npz so
+`make artifacts` is incremental.
+"""
+
+from __future__ import annotations
+
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model, nets
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -logp[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def train_net(net_name: str, ds_name: str, epochs: int = 10, batch: int = 128,
+              lr: float = 2e-3, seed: int = 7, log=print):
+    """Train one net; returns (nodes, params, float_test_accuracy)."""
+    xs, ys, n_classes = datasets.load(ds_name, "train")
+    xt, yt, _ = datasets.load(ds_name, "test")
+    nodes = nets.NETS[net_name](n_classes)
+    params = model.init_params(nodes, seed)
+
+    def loss_fn(p, x, y):
+        return cross_entropy(model.float_forward(nodes, p, x), y)
+
+    @jax.jit
+    def step(p, st, x, y, lr_now):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, st = adam_update(p, grads, st, lr_now)
+        return p, st, loss
+
+    @jax.jit
+    def accuracy(p, x, y):
+        return (model.float_forward(nodes, p, x).argmax(-1) == y).mean()
+
+    st = adam_init(params)
+    rng = np.random.default_rng(seed)
+    n = xs.shape[0]
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        lr_now = lr * (0.5 ** (ep / max(epochs - 1, 1) * 2))  # ~4x decay
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, st, loss = step(params, st, jnp.asarray(xs[idx]),
+                                    jnp.asarray(ys[idx]), lr_now)
+            losses.append(float(loss))
+        if ep == epochs - 1 or ep % 3 == 0:
+            acc = float(accuracy(params, jnp.asarray(xt[:500]), jnp.asarray(yt[:500])))
+            log(f"  [{net_name}/{ds_name}] epoch {ep + 1}/{epochs} "
+                f"loss={np.mean(losses):.3f} test_acc={acc:.3f} "
+                f"({time.time() - t0:.0f}s)")
+    acc = float(accuracy(params, jnp.asarray(xt), jnp.asarray(yt)))
+    return nodes, params, acc
+
+
+def train_or_load(net_name: str, ds_name: str, ckpt_dir: Path, **kw):
+    """Cached training: artifacts/ckpt/<net>_<ds>.pkl."""
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    path = ckpt_dir / f"{net_name}_{ds_name}.pkl"
+    if path.exists():
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        n_classes = datasets.SPLITS[ds_name]["n_classes"]
+        nodes = nets.NETS[net_name](n_classes)
+        params = {int(k): {"w": jnp.asarray(v["w"]), "b": jnp.asarray(v["b"])}
+                  for k, v in blob["params"].items()}
+        return nodes, params, blob["acc"]
+    nodes, params, acc = train_net(net_name, ds_name, **kw)
+    blob = {"params": {k: {"w": np.asarray(v["w"]), "b": np.asarray(v["b"])}
+                       for k, v in params.items()},
+            "acc": acc}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    return nodes, params, acc

@@ -1,0 +1,129 @@
+"""Approximate-multiplier identities vs bit-level partial-product models.
+
+The identities in kernels/approx.py (AM = W*A - eps) are the foundation of
+everything (kernels, numpy reference, rust engine). Here they are checked
+against *structural* models that build the approximate product the way the
+hardware does — by summing the partial products the circuit actually keeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import approx
+
+u8 = st.integers(0, 255)
+
+
+def am_perforated_bits(w: int, a: int, m: int) -> int:
+    """eq. (2): keep partial products i not in [0, m) (s=0)."""
+    return sum(w * ((a >> i) & 1) << i for i in range(m, 8))
+
+
+def am_recursive_bits(w: int, a: int, m: int) -> int:
+    """eq. (5): drop the W_L*A_L sub-product."""
+    wh, wl = w >> m, w & ((1 << m) - 1)
+    ah, al = a >> m, a & ((1 << m) - 1)
+    return (wh * ah << (2 * m)) + ((wh * al + wl * ah) << m)
+
+
+def am_truncated_bits(w: int, a: int, m: int) -> int:
+    """eq. (7): drop partial-product bits w_j*a_i with i+j < m."""
+    out = 0
+    for i in range(8):
+        for j in range(8):
+            if i + j >= m:
+                out += ((w >> j) & 1) * ((a >> i) & 1) << (i + j)
+    return out
+
+
+BITS = {"perforated": am_perforated_bits, "recursive": am_recursive_bits,
+        "truncated": am_truncated_bits}
+
+
+def _am_jnp(family, w, a, m):
+    return int(approx.am(family, jnp.int32(w), jnp.int32(a), jnp.int32(m)))
+
+
+@pytest.mark.parametrize("family", ["perforated", "recursive", "truncated"])
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 5, 6, 7])
+def test_identity_matches_bit_model_sampled(family, m):
+    rng = np.random.default_rng(42 + m)
+    ws = rng.integers(0, 256, 300)
+    as_ = rng.integers(0, 256, 300)
+    w_arr = jnp.asarray(ws, jnp.int32)
+    a_arr = jnp.asarray(as_, jnp.int32)
+    got = np.asarray(approx.am(family, w_arr, a_arr, jnp.int32(m)))
+    want = np.array([BITS[family](int(w), int(a), m) for w, a in zip(ws, as_)])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("family", ["perforated", "recursive", "truncated"])
+def test_identity_exhaustive_one_m(family):
+    """Full 256x256 operand sweep at a mid m (rust covers all m exhaustively)."""
+    m = {"perforated": 2, "recursive": 3, "truncated": 6}[family]
+    w, a = np.meshgrid(np.arange(256), np.arange(256), indexing="ij")
+    got = np.asarray(approx.am(family, jnp.asarray(w, jnp.int32),
+                               jnp.asarray(a, jnp.int32), jnp.int32(m)))
+    # vectorized bit models
+    if family == "perforated":
+        want = w * (a >> m << m)
+    elif family == "recursive":
+        want = w * a - (w & ((1 << m) - 1)) * (a & ((1 << m) - 1))
+    else:
+        want = np.zeros_like(w)
+        for i in range(8):
+            for j in range(8):
+                if i + j >= m:
+                    want += ((w >> j) & 1) * ((a >> i) & 1) << (i + j)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(w=u8, a=u8, m=st.integers(1, 7))
+@settings(max_examples=300, deadline=None)
+def test_error_nonnegative_and_bounded(w, a, m):
+    """eps >= 0 (all three drop positive partial products) and AM <= W*A."""
+    for family in ("perforated", "recursive", "truncated"):
+        e = int(approx.err(family, jnp.int32(w), jnp.int32(a), jnp.int32(m)))
+        assert 0 <= e <= w * a
+
+
+@given(w=u8, a=u8, m=st.integers(1, 7))
+@settings(max_examples=200, deadline=None)
+def test_truncated_error_le_perforated(w, a, m):
+    """Truncation keeps a superset of perforation's partial-product bits."""
+    et = int(approx.err("truncated", jnp.int32(w), jnp.int32(a), jnp.int32(m)))
+    ep = int(approx.err("perforated", jnp.int32(w), jnp.int32(a), jnp.int32(m)))
+    assert et <= ep
+
+
+@given(w=u8, a=u8)
+@settings(max_examples=100, deadline=None)
+def test_m_zero_is_exact(w, a):
+    for family in ("perforated", "recursive", "truncated"):
+        assert int(approx.am(family, jnp.int32(w), jnp.int32(a), jnp.int32(0))) == w * a
+
+
+@given(w=u8, m=st.integers(1, 7))
+@settings(max_examples=200, deadline=None)
+def test_w_hat_is_mean_truncation_error(w, m):
+    """What (eq. 24) equals the empirical mean of eps_T over all 256 A values."""
+    a = jnp.arange(256, dtype=jnp.int32)
+    eps = np.asarray(approx.err("truncated", jnp.int32(w), a, jnp.int32(m)))
+    what_q1 = int(approx.w_hat_q1(jnp.int32(w), jnp.int32(m)))
+    assert what_q1 == round(2 * eps.mean() * 1e9) / 1e9 * 1 or abs(
+        what_q1 / 2 - eps.mean()) < 1e-9
+
+
+@given(a=u8, m=st.integers(1, 7))
+@settings(max_examples=200, deadline=None)
+def test_xvar_definitions(a, m):
+    mask = (1 << m) - 1
+    xp = int(approx.xvar("perforated", jnp.int32(a), jnp.int32(m)))
+    xr = int(approx.xvar("recursive", jnp.int32(a), jnp.int32(m)))
+    xt = int(approx.xvar("truncated", jnp.int32(a), jnp.int32(m)))
+    assert xp == xr == (a & mask)
+    assert xt == (1 if (a & mask) else 0)

@@ -1,0 +1,95 @@
+"""Statistical properties of the control variate (the paper's §3 claims).
+
+These are the paper's theorems checked empirically on the oracle:
+  (i)  E[eps_G*] ~= 0            (mean convolution error nullified, eqs 22/28)
+  (ii) Var(eps_G*) << Var(eps_G) (variance reduced, eq 20)
+  (iii) C = E[W] minimizes the variance over C (eq 21)
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+
+def _conv_errors(family, m, w, a_batch, use_cv):
+    """eps_G(*) for a batch of activation columns: [n_trials, M]."""
+    exact = np.asarray(ref.exact_gemm(jnp.asarray(w), jnp.asarray(a_batch)))
+    parts = ref.gemm_parts(family, jnp.asarray(w), jnp.asarray(a_batch), m)
+    if use_cv:
+        c_q4, c0_q4 = ref.cv_constants(family, jnp.asarray(w), m)
+        approx_out = np.asarray(ref.apply_cv(parts, c_q4, c0_q4))
+    else:
+        approx_out = np.asarray(parts["am_acc"])
+    return (exact - approx_out).T  # [N, M]
+
+
+@pytest.mark.parametrize("family,m", [("perforated", 1), ("perforated", 2),
+                                      ("perforated", 3), ("recursive", 3),
+                                      ("recursive", 4), ("truncated", 5),
+                                      ("truncated", 6), ("truncated", 7)])
+def test_cv_nullifies_mean_and_cuts_variance(family, m):
+    rng = np.random.default_rng(11)
+    k, n = 64, 4000
+    # weights concentrated like trained filters (paper Fig 4)
+    w = np.clip(rng.normal(128, 20, (4, k)), 0, 255).astype(np.int32)
+    a = rng.integers(0, 256, (k, n)).astype(np.int32)
+    e_raw = _conv_errors(family, m, w, a, use_cv=False)
+    e_cv = _conv_errors(family, m, w, a, use_cv=True)
+    raw_mean = np.abs(e_raw.mean(axis=0))
+    cv_mean = np.abs(e_cv.mean(axis=0))
+    # (i) mean error: CV mean is tiny relative to raw mean (k*mu_AM)
+    assert np.all(cv_mean <= 0.05 * raw_mean + 2.0), (cv_mean, raw_mean)
+    # (ii) variance strictly reduced
+    assert np.all(e_cv.var(axis=0) < e_raw.var(axis=0))
+
+
+def test_c_equals_mean_w_is_optimal():
+    """Perforated: Var over C has its minimum at C = E[W] (eq. 21)."""
+    rng = np.random.default_rng(5)
+    k, n, m = 48, 3000, 2
+    w = np.clip(rng.normal(110, 25, (1, k)), 0, 255).astype(np.int32)
+    a = rng.integers(0, 256, (k, n)).astype(np.int64)
+    x = a & ((1 << m) - 1)
+    eps = (w.astype(np.int64).T * x).sum(axis=0)  # [n]
+    c_opt = w.mean()
+
+    def var_with_c(c):
+        v = c * x.sum(axis=0)
+        return (eps - v).var()
+
+    v_opt = var_with_c(c_opt)
+    for dc in (-20, -10, 10, 20):
+        assert var_with_c(c_opt + dc) > v_opt
+
+
+def test_truncated_c0_matches_eq28():
+    """Residual mean error without C0 equals 2^-m * sum(What) (eq. 28)."""
+    rng = np.random.default_rng(6)
+    k, n, m = 32, 20000, 5
+    w = rng.integers(0, 256, (1, k)).astype(np.int32)
+    a = rng.integers(0, 256, (k, n)).astype(np.int32)
+    parts = ref.gemm_parts("truncated", jnp.asarray(w), jnp.asarray(a), m)
+    exact = np.asarray(ref.exact_gemm(jnp.asarray(w), jnp.asarray(a)))
+    c_q4, _ = ref.cv_constants("truncated", jnp.asarray(w), m)
+    # apply V with C only (C0 = 0):
+    v = (np.asarray(c_q4)[:, None] * np.asarray(parts["sum_x"])[None, :] + 8) >> 4
+    resid = (exact - (np.asarray(parts["am_acc"]) + v)).mean()
+    what = np.asarray(ref.cv_constants("truncated", jnp.asarray(w), m)[0])  # C in Q4
+    from compile.kernels import approx
+    what_sum = float(np.asarray(approx.w_hat_q1(jnp.asarray(w), jnp.int32(m))).sum()) / 2
+    expect = what_sum / (1 << m)
+    assert abs(resid - expect) < max(0.15 * expect, 1.5), (resid, expect)
+
+
+def test_exact_family_cv_is_noop():
+    rng = np.random.default_rng(7)
+    w = rng.integers(0, 256, (4, 16)).astype(np.int32)
+    a = rng.integers(0, 256, (16, 8)).astype(np.int32)
+    parts = ref.gemm_parts("exact", jnp.asarray(w), jnp.asarray(a), 0)
+    c, c0 = ref.cv_constants("exact", jnp.asarray(w), 0)
+    out = np.asarray(ref.apply_cv(parts, c, c0))
+    np.testing.assert_array_equal(out, np.asarray(ref.exact_gemm(
+        jnp.asarray(w), jnp.asarray(a))))

@@ -1,0 +1,60 @@
+"""Synthetic dataset generator: determinism, balance, learnability signals."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+def test_deterministic():
+    a, la = datasets.make_split(10, 64, 123)
+    b, lb = datasets.make_split(10, 64, 123)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_different_seeds_differ():
+    a, _ = datasets.make_split(10, 16, 1)
+    b, _ = datasets.make_split(10, 16, 2)
+    assert not np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("n_classes", [10, 100])
+def test_balanced_and_in_range(n_classes):
+    imgs, labels = datasets.make_split(n_classes, n_classes * 4, 9)
+    counts = np.bincount(labels, minlength=n_classes)
+    assert counts.min() == counts.max() == 4
+    assert imgs.min() >= 0 and imgs.max() <= 1
+    assert imgs.dtype == np.float32
+
+
+def test_classes_are_visually_distinct():
+    """Mean intra-class distance < mean inter-class distance (learnable)."""
+    rng = np.random.default_rng(0)
+    imgs, labels = datasets.make_split(10, 200, 77)
+    flat = imgs.reshape(len(imgs), -1)
+    intra, inter = [], []
+    for _ in range(300):
+        i, j = rng.integers(0, len(imgs), 2)
+        d = np.linalg.norm(flat[i] - flat[j])
+        (intra if labels[i] == labels[j] else inter).append(d)
+    assert np.mean(intra) < np.mean(inter)
+
+
+def test_shapes_all_defined():
+    for s in range(10):
+        m = datasets.shape_mask(s, 16, 16, 9)
+        assert m.shape == (32, 32)
+        assert 0 < m.sum() < 32 * 32  # neither empty nor full
+
+
+def test_class_spec_bijection_synth100():
+    specs = {datasets.class_spec(l, 100)[:2] for l in range(100)}
+    assert len(specs) == 100
+
+
+def test_canonical_splits_disjoint_seeds():
+    s = datasets.SPLITS
+    for name in ("synth10", "synth100"):
+        seeds = [s[name][k][1] for k in ("train", "calib", "test")]
+        assert len(set(seeds)) == 3

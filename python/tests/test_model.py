@@ -1,0 +1,117 @@
+"""Model graph + quantized forward: shape inference, im2col, float-vs-quant."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import datasets, model, nets, quant
+
+
+@pytest.mark.parametrize("net", list(nets.NETS))
+def test_shape_inference_all_nets(net):
+    nodes = nets.NETS[net](10)
+    shapes = model.infer_shapes(nodes)
+    assert shapes[-1] == (1, 1, 10)
+    for i, n in enumerate(nodes):
+        if n.op == "add":
+            assert shapes[n.inputs[0]] == shapes[n.inputs[1]]
+        if n.op == "conv":
+            cin = shapes[n.inputs[0]][2]
+            assert cin % n.groups == 0
+
+
+@pytest.mark.parametrize("net", list(nets.NETS))
+def test_float_forward_runs(net):
+    nodes = nets.NETS[net](10)
+    params = model.init_params(nodes, 0)
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (2, 32, 32, 3)),
+                    jnp.float32)
+    logits = model.float_forward(nodes, params, x)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_im2col_matches_lax_conv():
+    """Quantized conv via im2col+GEMM == float conv on dequantized operands
+    (when the quantization grid is the data grid, i.e. no rounding)."""
+    rng = np.random.default_rng(2)
+    h, w, cin, cout, k = 8, 8, 3, 4, 3
+    a_q = rng.integers(0, 256, (h, w, cin)).astype(np.uint8)
+    w_q = rng.integers(0, 256, (cout, k * k * cin)).astype(np.uint8)
+    zp_a, zp_w = 10, 20
+    cols = model.im2col(a_q, k, 1, 1, zp_a)
+    acc = (w_q.astype(np.int64) - zp_w) @ (cols.astype(np.int64) - zp_a)
+    # float path
+    x = (a_q.astype(np.float32) - zp_a)[None]
+    wf = (w_q.astype(np.float32) - zp_w).reshape(cout, k, k, cin)
+    wf = wf.transpose(1, 2, 3, 0)  # HWIO
+    import jax
+    y = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wf), (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # NOTE: im2col pads with zp which dequantizes to real 0 — conv pads with 0.
+    got = acc.T.reshape(h, w, cout)
+    np.testing.assert_allclose(got, np.asarray(y)[0], rtol=0, atol=1e-3)
+
+
+def test_zero_point_expansion_identity():
+    """approx_gemm(exact) == sum (W-zw)(A-za) + bias."""
+    rng = np.random.default_rng(3)
+    w_q = rng.integers(0, 256, (5, 18)).astype(np.uint8)
+    a_q = rng.integers(0, 256, (18, 7)).astype(np.uint8)
+    bias = rng.integers(-1000, 1000, 5).astype(np.int32)
+    zw, za = 13, 97
+    acc = model.approx_gemm("exact", 0, False, w_q, a_q, zw, za, bias)
+    want = ((w_q.astype(np.int64) - zw) @ (a_q.astype(np.int64) - za)
+            + bias[:, None])
+    np.testing.assert_array_equal(acc, want)
+
+
+def test_quantized_forward_close_to_float():
+    """Quantized exact inference tracks the float model on a tiny net."""
+    nodes = nets.NETS["mininet"](10)
+    params = model.init_params(nodes, 1)
+    calib, _, _ = datasets.load("synth10", "calib")
+    qm = model.quantize_model("t", nodes, params, calib[:64])
+    imgs, _, _ = datasets.load("synth10", "calib")
+    agree = 0
+    for i in range(10):
+        fl = np.asarray(model.float_forward(nodes, params,
+                                            jnp.asarray(imgs[i:i + 1])))[0]
+        q = quant.quantize(imgs[i], 1 / 255.0, 0)
+        qg = qm.forward(q, "exact", 0, False)
+        agree += int(fl.argmax() == qg.argmax())
+    assert agree >= 8  # untrained logits are near-ties; allow slack
+
+
+def test_cv_reduces_logit_error_on_real_net():
+    """On a real net, ||logits_cv - logits_exact|| < ||logits_raw - logits_exact||."""
+    nodes = nets.NETS["mininet"](10)
+    params = model.init_params(nodes, 4)
+    calib, _, _ = datasets.load("synth10", "calib")
+    qm = model.quantize_model("t", nodes, params, calib[:64])
+    q = quant.quantize(calib[5], 1 / 255.0, 0)
+    exact = qm.forward(q, "exact", 0, False)
+    worse = better = 0
+    for fam, m in (("perforated", 2), ("truncated", 6), ("recursive", 4)):
+        raw = np.linalg.norm(qm.forward(q, fam, m, False) - exact)
+        cv = np.linalg.norm(qm.forward(q, fam, m, True) - exact)
+        if cv < raw:
+            better += 1
+        else:
+            worse += 1
+    assert better >= 2, (better, worse)
+
+
+@pytest.mark.parametrize("net", ["shufflenet", "inceptionnet"])
+def test_grouped_and_concat_paths_quantized(net):
+    """The exotic ops (groups, shuffle, concat) run and give stable shapes."""
+    nodes = nets.NETS[net](10)
+    params = model.init_params(nodes, 2)
+    calib, _, _ = datasets.load("synth10", "calib")
+    qm = model.quantize_model("t", nodes, params, calib[:32])
+    q = quant.quantize(calib[0], 1 / 255.0, 0)
+    out = qm.forward(q, "recursive", 3, True)
+    assert out.shape == (10,)
+    assert np.isfinite(out).all()

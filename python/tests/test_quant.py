@@ -1,0 +1,60 @@
+"""Quantization primitives: roundtrips, rounding rules, calibration."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+
+@given(lo=st.floats(-50, 0), hi=st.floats(0.01, 50))
+@settings(max_examples=100, deadline=None)
+def test_qparams_cover_range(lo, hi):
+    s, zp = quant.choose_qparams(lo, hi)
+    assert 0 <= zp <= 255
+    # representable range covers [lo, hi] with one-step slack
+    assert (0 - zp) * s <= lo + s + 1e-6
+    assert (255 - zp) * s >= hi - s - 1e-6
+
+
+@given(st.lists(st.floats(-10, 10), min_size=4, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_quant_roundtrip_error_bounded(vals):
+    x = np.array(vals, np.float32)
+    s, zp = quant.choose_qparams(x.min(), x.max())
+    q = quant.quantize(x, s, zp)
+    back = quant.dequantize(q, s, zp)
+    assert np.max(np.abs(back - x)) <= s * 0.5 + 1e-5
+
+
+def test_zero_exactly_representable():
+    s, zp = quant.choose_qparams(-3.7, 9.2)
+    assert quant.dequantize(np.array([zp], np.uint8), s, zp)[0] == 0.0
+
+
+def test_round_half_away():
+    x = np.array([0.5, 1.5, -0.5, -1.5, 2.4, -2.4])
+    np.testing.assert_array_equal(quant.round_half_away(x),
+                                  [1, 2, -1, -2, 2, -2])
+
+
+def test_requantize_clamps_and_rounds():
+    acc = np.array([-100000, 0, 100000], np.int64)
+    q = quant.requantize(acc, 0.01, 128)
+    np.testing.assert_array_equal(q, [0, 128, 255])
+    q2 = quant.requantize(np.array([50], np.int64), 0.01, 128)  # 0.5 -> 1
+    assert q2[0] == 129
+
+
+def test_bias_quantization():
+    b = np.array([0.05, -0.02])
+    bq = quant.quantize_bias(b, 0.01, 0.01)
+    np.testing.assert_array_equal(bq, [500, -200])
+
+
+def test_calibrator_percentile_clips_outliers():
+    cal = quant.Calibrator(percentile=99.0)
+    x = np.concatenate([np.random.default_rng(0).uniform(0, 1, 10000), [1000.0]])
+    cal.observe(x)
+    s, zp = cal.qparams()
+    assert s < 0.02  # outlier did not blow up the scale

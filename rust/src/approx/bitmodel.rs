@@ -1,0 +1,112 @@
+//! Structural (partial-product-level) models of the approximate multipliers.
+//!
+//! These build each product the way the *circuit* does — by generating the
+//! AND-array of partial-product bits and summing only the ones the
+//! approximate hardware keeps (paper Figs 1-3). They are deliberately slow
+//! and obvious; the exhaustive test in `approx::tests` proves the fast
+//! closed-form identities equal these for every operand pair and m.
+
+use super::Family;
+
+/// Perforated multiplier, eq. (2) with s = 0: partial products i ∈ [0, m)
+/// are never generated.
+pub fn am_perforated_bits(w: u8, a: u8, m: u32) -> i32 {
+    let mut acc = 0i32;
+    for i in m..8 {
+        let ai = ((a >> i) & 1) as i32;
+        acc += (w as i32) * ai << i;
+    }
+    acc
+}
+
+/// Recursive multiplier, eq. (5): 2^m-split sub-products with W_L·A_L pruned.
+pub fn am_recursive_bits(w: u8, a: u8, m: u32) -> i32 {
+    let mask = (1u32 << m) - 1;
+    let (wh, wl) = ((w as u32) >> m, (w as u32) & mask);
+    let (ah, al) = ((a as u32) >> m, (a as u32) & mask);
+    // (W_H·A_H·2^m + W_H·A_L + W_L·A_H) · 2^m  — eq. (5)
+    (((wh * ah) << m) + wh * al + wl * ah << m) as i32
+}
+
+/// Truncated multiplier, eq. (7): AND gates w_j·a_i with i + j < m are not
+/// implemented; every kept partial-product bit is summed individually.
+pub fn am_truncated_bits(w: u8, a: u8, m: u32) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..8u32 {
+        for j in 0..8u32 {
+            if i + j >= m {
+                let bit = (((w >> j) & 1) & ((a >> i) & 1)) as i32;
+                acc += bit << (i + j);
+            }
+        }
+    }
+    acc
+}
+
+/// Structural AM for any family (Exact sums the full partial-product array).
+pub fn am_bits(family: Family, w: u8, a: u8, m: u32) -> i32 {
+    match family {
+        Family::Exact => am_truncated_bits(w, a, 0),
+        Family::Perforated => am_perforated_bits(w, a, m),
+        Family::Recursive => am_recursive_bits(w, a, m),
+        Family::Truncated => am_truncated_bits(w, a, m),
+    }
+}
+
+/// Count of partial-product bits the truncated multiplier keeps — drives the
+/// hardware cost model (compressor count scales with kept bits).
+pub fn truncated_kept_bits(m: u32) -> u32 {
+    let mut kept = 0;
+    for i in 0..8u32 {
+        for j in 0..8u32 {
+            if i + j >= m {
+                kept += 1;
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_via_full_array() {
+        for (w, a) in [(0u8, 0u8), (255, 255), (200, 3), (13, 77)] {
+            assert_eq!(am_truncated_bits(w, a, 0), (w as i32) * (a as i32));
+        }
+    }
+
+    #[test]
+    fn kulkarni_style_recursive_prunes_low_product() {
+        // m=4: AM_R(W,A) misses exactly W_L*A_L.
+        let (w, a) = (0xAB_u8, 0xCD_u8);
+        let wl = (w & 0xF) as i32;
+        let al = (a & 0xF) as i32;
+        assert_eq!(
+            am_recursive_bits(w, a, 4),
+            (w as i32) * (a as i32) - wl * al
+        );
+    }
+
+    #[test]
+    fn truncated_kept_bits_counts() {
+        assert_eq!(truncated_kept_bits(0), 64);
+        // m=1 drops exactly the single (0,0) bit
+        assert_eq!(truncated_kept_bits(1), 63);
+        // m=7 drops 1+2+...+7 = 28 bits
+        assert_eq!(truncated_kept_bits(7), 36);
+    }
+
+    #[test]
+    fn perforation_is_row_removal() {
+        // Perforating m rows == zeroing the m low bits of A before multiplying.
+        for m in 0..8u32 {
+            for (w, a) in [(255u8, 255u8), (170, 85), (9, 250)] {
+                let expect = (w as i32) * (((a as u32) >> m << m) as i32);
+                assert_eq!(am_perforated_bits(w, a, m), expect);
+            }
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Bit-exact models of the paper's approximate 8×8 unsigned multipliers.
+//!
+//! Three families (paper §2), each with knob `m`:
+//! * **perforated** [22]: drop the `m` least-significant partial products
+//!   (s = 0) — error ε = W·(A mod 2^m) (eq. 3).
+//! * **recursive** [23,24]: split each operand into m-bit low / (8−m)-bit
+//!   high parts and drop the W_L·A_L sub-product — ε = W_L·A_L (eq. 6).
+//! * **truncated** [17-19]: remove all partial-product bits in the `m`
+//!   least-significant columns — ε = Σ_{i<m} (W mod 2^{m−i})·a_i·2^i (eq. 8).
+//!
+//! Everything downstream (GEMM engines, systolic simulator, Pallas kernels)
+//! uses the closed-form identities; [`bitmodel`] re-derives the products
+//! from the partial-product array structure and the exhaustive tests prove
+//! the two agree for **all 2^16 operand pairs and every m** — so the fast
+//! identity path *is* the hardware behaviour.
+
+pub mod bitmodel;
+pub mod stats;
+
+/// Approximate-multiplier family. `Exact` is the baseline (m ignored).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Family {
+    Exact,
+    Perforated,
+    Recursive,
+    Truncated,
+}
+
+impl Family {
+    pub const ALL: [Family; 4] =
+        [Family::Exact, Family::Perforated, Family::Recursive, Family::Truncated];
+
+    /// The three approximate families (everything but `Exact`).
+    pub const APPROX: [Family; 3] =
+        [Family::Perforated, Family::Recursive, Family::Truncated];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Exact => "exact",
+            Family::Perforated => "perforated",
+            Family::Recursive => "recursive",
+            Family::Truncated => "truncated",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Family> {
+        Family::ALL.into_iter().find(|f| f.name() == s)
+    }
+
+    /// Byte code used by the .gv golden-vector format.
+    pub fn code(self) -> u8 {
+        match self {
+            Family::Exact => 0,
+            Family::Perforated => 1,
+            Family::Recursive => 2,
+            Family::Truncated => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Family> {
+        Family::ALL.into_iter().find(|f| f.code() == c)
+    }
+
+    /// The approximation levels the paper evaluates for this family
+    /// (Tables 2-4 / Figs 7-9).
+    pub fn paper_levels(self) -> &'static [u32] {
+        match self {
+            Family::Exact => &[0],
+            Family::Perforated => &[1, 2, 3],
+            Family::Recursive => &[2, 3, 4],
+            Family::Truncated => &[5, 6, 7],
+        }
+    }
+
+    /// Extended levels used by the error analysis (Table 1).
+    pub fn table1_levels(self) -> &'static [u32] {
+        match self {
+            Family::Exact => &[0],
+            Family::Perforated => &[1, 2, 3],
+            Family::Recursive => &[2, 3, 4, 5],
+            Family::Truncated => &[4, 5, 6, 7],
+        }
+    }
+}
+
+/// Multiplication error ε(W, A) = W·A − AM(W, A) ≥ 0 via the closed forms.
+#[inline]
+pub fn err(family: Family, w: u8, a: u8, m: u32) -> i32 {
+    debug_assert!(m <= 7);
+    let (w, a) = (w as i32, a as i32);
+    let mask = (1i32 << m) - 1;
+    match family {
+        Family::Exact => 0,
+        Family::Perforated => w * (a & mask),
+        Family::Recursive => (w & mask) * (a & mask),
+        Family::Truncated => {
+            let mut e = 0i32;
+            for i in 0..m {
+                let sub = w & ((1 << (m - i)) - 1);
+                e += sub * ((a >> i) & 1) << i;
+            }
+            e
+        }
+    }
+}
+
+/// Approximate product AM(W, A) = W·A − ε(W, A).
+#[inline]
+pub fn am(family: Family, w: u8, a: u8, m: u32) -> i32 {
+    (w as i32) * (a as i32) - err(family, w, a, m)
+}
+
+/// Control-variate input x_j (eqs. 18/25/29):
+/// perforated/recursive → A mod 2^m; truncated → OR(A[m−1:0]) ∈ {0,1}.
+#[inline]
+pub fn xvar(family: Family, a: u8, m: u32) -> i32 {
+    let low = (a as i32) & ((1i32 << m) - 1);
+    match family {
+        Family::Exact => 0,
+        Family::Perforated | Family::Recursive => low,
+        Family::Truncated => (low != 0) as i32,
+    }
+}
+
+/// 2·Ŵ (eq. 24 scaled to stay integral): the mean truncation error of
+/// AM_T(W, ·) over uniform A, in Q.1 fixed point.
+#[inline]
+pub fn w_hat_q1(w: u8, m: u32) -> i32 {
+    let w = w as i32;
+    let mut acc = 0i32;
+    for i in 0..m {
+        acc += (w & ((1 << (m - i)) - 1)) << i;
+    }
+    acc
+}
+
+/// 256×256 lookup table of AM products for one (family, m) — the
+/// hardware-faithful path used by the systolic simulator (TFApprox-style).
+pub struct MulLut {
+    pub family: Family,
+    pub m: u32,
+    table: Vec<i32>, // [w * 256 + a]
+}
+
+impl MulLut {
+    pub fn build(family: Family, m: u32) -> MulLut {
+        let mut table = vec![0i32; 65536];
+        for w in 0..256usize {
+            for a in 0..256usize {
+                table[w * 256 + a] = am(family, w as u8, a as u8, m);
+            }
+        }
+        MulLut { family, m, table }
+    }
+
+    #[inline]
+    pub fn mul(&self, w: u8, a: u8) -> i32 {
+        self.table[(w as usize) * 256 + a as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exhaustive_identity_vs_bitmodel_all_m() {
+        // The cornerstone: closed forms == structural partial-product models
+        // for ALL operand pairs and every m in 0..=7.
+        for family in Family::APPROX {
+            for m in 0..=7u32 {
+                for w in 0..=255u8 {
+                    for a in 0..=255u8 {
+                        let fast = am(family, w, a, m);
+                        let slow = bitmodel::am_bits(family, w, a, m);
+                        assert_eq!(
+                            fast, slow,
+                            "{} m={m} w={w} a={a}", family.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_nonnegative_and_bounded() {
+        prop::check(
+            "0 <= eps <= w*a",
+            2000,
+            0xE44,
+            |r| (r.u8(), r.u8(), r.below(8) as u32),
+            |&(w, a, m)| {
+                Family::APPROX.into_iter().all(|f| {
+                    let e = err(f, w, a, m);
+                    0 <= e && e <= (w as i32) * (a as i32)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn m_zero_is_exact() {
+        for f in Family::ALL {
+            for (w, a) in [(0u8, 0u8), (255, 255), (17, 203), (1, 128)] {
+                assert_eq!(am(f, w, a, 0), (w as i32) * (a as i32));
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_error_le_perforated() {
+        // Truncation keeps a superset of perforation's partial-product bits.
+        prop::check(
+            "eps_T <= eps_P",
+            2000,
+            0xBEE,
+            |r| (r.u8(), r.u8(), 1 + r.below(7) as u32),
+            |&(w, a, m)| err(Family::Truncated, w, a, m) <= err(Family::Perforated, w, a, m),
+        );
+    }
+
+    #[test]
+    fn recursive_error_symmetric() {
+        prop::check(
+            "eps_R(w,a) == eps_R(a,w)",
+            1000,
+            0x5EC,
+            |r| (r.u8(), r.u8(), 1 + r.below(7) as u32),
+            |&(w, a, m)| err(Family::Recursive, w, a, m) == err(Family::Recursive, a, w, m),
+        );
+    }
+
+    #[test]
+    fn w_hat_is_mean_truncation_error() {
+        // Ŵ (eq. 24) equals the empirical mean of ε_T over all 256 A values.
+        for m in 1..=7u32 {
+            let mut r = Rng::new(m as u64);
+            for _ in 0..64 {
+                let w = r.u8();
+                let sum: i64 =
+                    (0..=255u8).map(|a| err(Family::Truncated, w, a, m) as i64).sum();
+                // mean * 2 * 256 == w_hat_q1 * 256  <=>  sum*2 == w_hat_q1*256
+                assert_eq!(sum * 2, (w_hat_q1(w, m) as i64) * 256, "w={w} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn xvar_matches_or_reduction() {
+        for a in 0..=255u8 {
+            for m in 1..=7u32 {
+                let low = (a as i32) & ((1 << m) - 1);
+                assert_eq!(xvar(Family::Truncated, a, m), (low != 0) as i32);
+                assert_eq!(xvar(Family::Perforated, a, m), low);
+                // x == 0 iff the truncated multiplication is error-free for all w
+                let always_exact =
+                    (0..=255u8).all(|w| err(Family::Truncated, w, a, m) == 0);
+                assert_eq!(always_exact, xvar(Family::Truncated, a, m) == 0);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matches_direct() {
+        for family in Family::APPROX {
+            let m = family.paper_levels()[1];
+            let lut = MulLut::build(family, m);
+            let mut r = Rng::new(99);
+            for _ in 0..2000 {
+                let (w, a) = (r.u8(), r.u8());
+                assert_eq!(lut.mul(w, a), am(family, w, a, m));
+            }
+        }
+    }
+
+    #[test]
+    fn family_name_roundtrip() {
+        for f in Family::ALL {
+            assert_eq!(Family::from_name(f.name()), Some(f));
+            assert_eq!(Family::from_code(f.code()), Some(f));
+        }
+        assert_eq!(Family::from_name("bogus"), None);
+    }
+}

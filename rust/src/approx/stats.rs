@@ -1,0 +1,165 @@
+//! Error analysis of the approximate multipliers — regenerates **Table 1**.
+//!
+//! μ and σ of ε over 1M operand pairs for uniform U(0,255) and normal
+//! N(125, 24²) input distributions, per family and m.
+
+use super::{err, Family};
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// Input operand distribution used by the paper's Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    Uniform,
+    /// N(125, 24²), rounded + clamped to [0, 255].
+    Normal,
+}
+
+impl Dist {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dist::Uniform => "U(0,255)",
+            Dist::Normal => "N(125,24^2)",
+        }
+    }
+
+    fn sample(self, rng: &mut Rng) -> u8 {
+        match self {
+            Dist::Uniform => rng.u8(),
+            Dist::Normal => rng.u8_normal(125.0, 24.0),
+        }
+    }
+}
+
+/// One Table-1 row: error moments for (family, m, dist).
+#[derive(Clone, Debug)]
+pub struct ErrorRow {
+    pub family: Family,
+    pub m: u32,
+    pub dist: Dist,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Monte-Carlo error moments over `n` operand pairs (paper uses 1M).
+pub fn error_moments(family: Family, m: u32, dist: Dist, n: u64, seed: u64) -> ErrorRow {
+    let mut rng = Rng::new(seed);
+    let mut acc = Welford::new();
+    for _ in 0..n {
+        let w = dist.sample(&mut rng);
+        let a = dist.sample(&mut rng);
+        acc.push(err(family, w, a, m) as f64);
+    }
+    ErrorRow { family, m, dist, mean: acc.mean(), std: acc.std() }
+}
+
+/// Exact (closed-form, full 2^16 enumeration) moments for the uniform case —
+/// used to validate the Monte-Carlo within tolerance.
+pub fn error_moments_exhaustive_uniform(family: Family, m: u32) -> (f64, f64) {
+    let mut acc = Welford::new();
+    for w in 0..=255u8 {
+        for a in 0..=255u8 {
+            acc.push(err(family, w, a, m) as f64);
+        }
+    }
+    (acc.mean(), acc.std())
+}
+
+/// All Table-1 rows (both distributions, table1 m-levels).
+pub fn table1(n: u64, seed: u64) -> Vec<ErrorRow> {
+    let mut rows = Vec::new();
+    for family in Family::APPROX {
+        for &m in family.table1_levels() {
+            for dist in [Dist::Uniform, Dist::Normal] {
+                rows.push(error_moments(family, m, dist, n, seed ^ (m as u64) << 8));
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 1, uniform columns: (family, m, mu, sigma).
+    const PAPER_UNIFORM: &[(Family, u32, f64, f64)] = &[
+        (Family::Perforated, 1, 63.7, 82.0),
+        (Family::Perforated, 2, 191.0, 198.0),
+        (Family::Perforated, 3, 447.0, 425.0),
+        (Family::Recursive, 2, 2.24, 2.67),
+        (Family::Recursive, 3, 12.26, 12.51),
+        (Family::Recursive, 4, 56.0, 53.4),
+        (Family::Recursive, 5, 239.0, 219.0),
+        (Family::Truncated, 4, 12.0, 9.9),
+        (Family::Truncated, 5, 32.0, 23.0),
+        (Family::Truncated, 6, 80.0, 52.0),
+        (Family::Truncated, 7, 192.0, 115.0),
+    ];
+
+    #[test]
+    fn uniform_moments_match_paper_table1() {
+        for &(family, m, mu, sigma) in PAPER_UNIFORM {
+            let (got_mu, got_sigma) = error_moments_exhaustive_uniform(family, m);
+            // Paper reports ~3 significant digits.
+            assert!(
+                (got_mu - mu).abs() / mu.max(1.0) < 0.03,
+                "{} m={m}: mu {got_mu} vs paper {mu}", family.name()
+            );
+            assert!(
+                (got_sigma - sigma).abs() / sigma.max(1.0) < 0.05,
+                "{} m={m}: sigma {got_sigma} vs paper {sigma}", family.name()
+            );
+        }
+    }
+
+    #[test]
+    fn monte_carlo_converges_to_exhaustive() {
+        let (mu_ex, sd_ex) =
+            error_moments_exhaustive_uniform(Family::Truncated, 6);
+        let row = error_moments(Family::Truncated, 6, Dist::Uniform, 200_000, 7);
+        assert!((row.mean - mu_ex).abs() / mu_ex < 0.02);
+        assert!((row.std - sd_ex).abs() / sd_ex < 0.02);
+    }
+
+    #[test]
+    fn recursive_and_truncated_insensitive_to_distribution() {
+        // Paper §2.4: their error moments barely change under N(125,24²).
+        for (family, m) in [(Family::Recursive, 3), (Family::Truncated, 5)] {
+            let u = error_moments(family, m, Dist::Uniform, 150_000, 3);
+            let n = error_moments(family, m, Dist::Normal, 150_000, 4);
+            assert!(
+                (u.mean - n.mean).abs() / u.mean < 0.08,
+                "{} m={m}: {} vs {}", family.name(), u.mean, n.mean
+            );
+        }
+    }
+
+    #[test]
+    fn perforated_has_highest_dispersion() {
+        // Paper §2.4: perforated shows the highest μ and σ at comparable m.
+        let p = error_moments_exhaustive_uniform(Family::Perforated, 3);
+        let r = error_moments_exhaustive_uniform(Family::Recursive, 3);
+        let t = error_moments_exhaustive_uniform(Family::Truncated, 3);
+        assert!(p.0 > r.0 && p.0 > t.0);
+        assert!(p.1 > r.1 && p.1 > t.1);
+    }
+
+    #[test]
+    fn truncated_lowest_coefficient_of_variation() {
+        // σ/μ: truncated < recursive, perforated at the paper's m points.
+        let t = error_moments_exhaustive_uniform(Family::Truncated, 6);
+        let p = error_moments_exhaustive_uniform(Family::Perforated, 2);
+        let r = error_moments_exhaustive_uniform(Family::Recursive, 4);
+        let cv = |x: (f64, f64)| x.1 / x.0;
+        assert!(cv(t) < cv(p));
+        assert!(cv(t) < cv(r));
+    }
+
+    #[test]
+    fn table1_has_all_rows() {
+        let rows = table1(1000, 1);
+        // 3+4+4 m-levels × 2 distributions
+        assert_eq!(rows.len(), (3 + 4 + 4) * 2);
+    }
+}

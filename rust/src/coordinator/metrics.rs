@@ -1,0 +1,160 @@
+//! Service metrics: latency/throughput counters + the modeled-energy bridge
+//! from the hw cost model to per-inference numbers.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::approx::Family;
+use crate::hw::array_cost;
+use crate::util::stats::Welford;
+
+/// Converts inference work (MACs) into modeled energy, using the hw cost
+/// model for the configured array design point.
+///
+/// Energy accounting: the array processes one MAC per unit cell per cycle at
+/// a fixed clock (iso-delay), so energy/inference ∝ power_norm × MACs; we
+/// report energy *normalized to the exact design* — the paper's quantity.
+#[derive(Clone, Debug)]
+pub struct PowerModel {
+    pub family: Family,
+    pub m: u32,
+    pub n_array: u32,
+    /// Power of this design normalized to the exact array.
+    pub power_norm: f64,
+}
+
+impl PowerModel {
+    pub fn new(family: Family, m: u32, n_array: u32) -> PowerModel {
+        let power_norm = array_cost(family, m, n_array).power_norm;
+        PowerModel { family, m, n_array, power_norm }
+    }
+
+    /// Modeled energy for `macs` MACs, in exact-design MAC-energy units.
+    pub fn energy_units(&self, macs: u64) -> f64 {
+        self.power_norm * macs as f64
+    }
+}
+
+/// Aggregated service metrics (interior mutability; shared by workers).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    completed: u64,
+    batches: u64,
+    latency_us: Welford,
+    queue_us: Welford,
+    macs: u64,
+    energy_units: f64,
+    energy_units_exact: f64,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_latency: Duration,
+    pub p95_latency: Duration,
+    pub mean_queue: Duration,
+    pub throughput_rps: f64,
+    pub total_macs: u64,
+    /// Modeled energy normalized to running the same work on the exact array.
+    pub energy_vs_exact: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(
+        &self,
+        latency: Duration,
+        queue_wait: Duration,
+        macs: u64,
+        power: &PowerModel,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.latency_us.push(latency.as_secs_f64() * 1e6);
+        g.queue_us.push(queue_wait.as_secs_f64() * 1e6);
+        g.macs += macs;
+        g.energy_units += power.energy_units(macs);
+        g.energy_units_exact += macs as f64;
+        let now = std::time::Instant::now();
+        if g.started.is_none() {
+            g.started = Some(now);
+        }
+        g.finished = Some(now);
+    }
+
+    pub fn record_batch(&self) {
+        self.inner.lock().unwrap().batches += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let wall = match (g.started, g.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            completed: g.completed,
+            batches: g.batches,
+            mean_latency: Duration::from_secs_f64(g.latency_us.mean() / 1e6),
+            // Welford has no p95; approximate with mean + 1.64σ (reported as such)
+            p95_latency: Duration::from_secs_f64(
+                (g.latency_us.mean() + 1.64 * g.latency_us.std()).max(0.0) / 1e6,
+            ),
+            mean_queue: Duration::from_secs_f64(g.queue_us.mean() / 1e6),
+            throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
+            total_macs: g.macs,
+            energy_vs_exact: if g.energy_units_exact > 0.0 {
+                g.energy_units / g.energy_units_exact
+            } else {
+                1.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_model_tracks_cost_model() {
+        let exact = PowerModel::new(Family::Exact, 0, 64);
+        assert!((exact.power_norm - 1.0).abs() < 1e-12);
+        let perf = PowerModel::new(Family::Perforated, 3, 64);
+        assert!(perf.power_norm < 0.65); // ~45% reduction
+        assert!(perf.energy_units(1000) < exact.energy_units(1000));
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let m = Metrics::new();
+        let pm = PowerModel::new(Family::Truncated, 6, 32);
+        for i in 0..10 {
+            m.record(
+                Duration::from_micros(100 + i * 10),
+                Duration::from_micros(5),
+                1_000_000,
+                &pm,
+            );
+        }
+        m.record_batch();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.total_macs, 10_000_000);
+        assert!(s.mean_latency >= Duration::from_micros(100));
+        assert!((s.energy_vs_exact - pm.power_norm).abs() < 1e-9);
+    }
+}

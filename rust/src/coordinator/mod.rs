@@ -1,0 +1,17 @@
+//! L3 coordinator: a batching inference service over the quantized engine.
+//!
+//! The paper's contribution is the accelerator datapath (MAC\*/MAC⁺), so the
+//! coordinator is the *deployment* shell around it: request queue, dynamic
+//! batcher, worker loop, latency/throughput metrics, and the power/energy
+//! accounting that converts the [`crate::hw`] cost model + array occupancy
+//! into per-inference modeled energy (how the e2e example reports the
+//! paper's headline "45% power, <1% loss").
+//!
+//! * [`service`] — request queue + dynamic batcher + worker loop
+//! * [`metrics`] — latency/throughput/energy accounting
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::{MetricsSnapshot, PowerModel};
+pub use service::{InferenceService, ServiceConfig};

@@ -1,0 +1,267 @@
+//! The inference service: request queue → dynamic batcher → worker loop.
+//!
+//! std-threads + channels (no tokio in the offline vendor set). Requests are
+//! submitted from any thread; a worker drains the queue into batches of up
+//! to `batch_size` (batching amortizes dispatch overhead — and on the PJRT
+//! path, executable-call overhead), runs the engine, and answers each
+//! request through its own oneshot channel.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::{Metrics, MetricsSnapshot, PowerModel};
+use crate::approx::Family;
+use crate::nn::{Engine, ForwardOpts, Tensor};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+    /// Simulated MAC array dimension (for the power model).
+    pub n_array: u32,
+    /// Max requests fused into one worker batch.
+    pub batch_size: usize,
+    /// How long the batcher waits to fill a batch before running a partial
+    /// one.
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            family: Family::Exact,
+            m: 0,
+            use_cv: false,
+            n_array: 64,
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One classification result.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f64>,
+    pub top1: usize,
+    pub latency: Duration,
+}
+
+struct Request {
+    image: Tensor,
+    enqueued: Instant,
+    respond: SyncSender<Result<Reply, String>>,
+}
+
+/// Handle for a submitted request.
+pub struct Pending {
+    rx: Receiver<Result<Reply, String>>,
+}
+
+impl Pending {
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<Reply> {
+        self.rx
+            .recv()
+            .context("service dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// A running inference service (worker thread + queue).
+pub struct InferenceService {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub power: PowerModel,
+    stop: Arc<AtomicBool>,
+}
+
+impl InferenceService {
+    /// Start the service over a prepared engine.
+    pub fn start(engine: Engine, cfg: ServiceConfig) -> InferenceService {
+        let metrics = Arc::new(Metrics::new());
+        let power = PowerModel::new(cfg.family, cfg.m, cfg.n_array);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker = {
+            let metrics = metrics.clone();
+            let power = power.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                worker_loop(engine, cfg, rx, metrics, power, stop);
+            })
+        };
+        InferenceService { tx: Some(tx), worker: Some(worker), metrics, power, stop }
+    }
+
+    /// Submit an image; returns a handle to wait on.
+    pub fn submit(&self, image: Tensor) -> Pending {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        let req = Request { image, enqueued: Instant::now(), respond: rtx };
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(req)
+            .expect("worker alive");
+        Pending { rx: rrx }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, image: Tensor) -> Result<Reply> {
+        self.submit(image).wait()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: Engine,
+    cfg: ServiceConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    power: PowerModel,
+    stop: Arc<AtomicBool>,
+) {
+    let opts = ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv);
+    let macs = engine.model.macs();
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all senders dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while batch.len() < cfg.batch_size {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.record_batch();
+        for req in batch {
+            let queue_wait = req.enqueued.elapsed();
+            let t0 = Instant::now();
+            let result = engine
+                .forward(&req.image, &opts)
+                .map(|logits| {
+                    let top1 = argmax(&logits);
+                    Reply { logits, top1, latency: t0.elapsed() }
+                })
+                .map_err(|e| e.to_string());
+            let latency = req.enqueued.elapsed();
+            metrics.record(latency, queue_wait, macs, &power);
+            let _ = req.respond.send(result);
+        }
+        if stop.load(Ordering::SeqCst) {
+            // drain whatever is left, then exit
+            while let Ok(req) = rx.try_recv() {
+                let _ = req.respond.send(Err("service shutting down".into()));
+            }
+            break;
+        }
+    }
+}
+
+pub fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_dir;
+    use crate::nn::loader;
+
+    fn engine() -> Option<Engine> {
+        let path = artifacts_dir().join("models/mininet_synth10.cvm");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::new(loader::load_model(&path).unwrap()))
+    }
+
+    #[test]
+    fn serves_requests_and_counts_metrics() {
+        let Some(engine) = engine() else { return };
+        let ds = crate::datasets::Dataset::load(
+            &artifacts_dir().join("data/synth10_test.cvd"),
+        )
+        .unwrap();
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let svc = InferenceService::start(engine, cfg);
+        let pendings: Vec<Pending> =
+            (0..8).map(|i| svc.submit(ds.image(i))).collect();
+        let mut correct = 0;
+        for (i, p) in pendings.into_iter().enumerate() {
+            let reply = p.wait().unwrap();
+            assert_eq!(reply.logits.len(), 10);
+            if reply.top1 == ds.label(i) {
+                correct += 1;
+            }
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 8);
+        assert!(snap.batches >= 1 && snap.batches <= 8);
+        assert!(snap.total_macs > 0);
+        assert!(snap.energy_vs_exact < 1.0); // approximate design saves power
+        assert!(correct >= 4, "sanity: {correct}/8 correct");
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_no_requests() {
+        let Some(engine) = engine() else { return };
+        let svc = InferenceService::start(engine, ServiceConfig::default());
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 0);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

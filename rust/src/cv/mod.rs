@@ -1,0 +1,221 @@
+//! Control-variate constants and epilogue (paper §3).
+//!
+//! For a filter row W[0..k) and family/m, the MAC⁺ column adds
+//! V = C·ΣX + C₀ to the accumulated approximate convolution:
+//!
+//! | family     | x_j              | C            | C₀                      |
+//! |------------|------------------|--------------|--------------------------|
+//! | perforated | A_j mod 2^m      | E[W_j]       | 0          (eqs. 18/21) |
+//! | recursive  | A_j mod 2^m      | E[W_j mod 2^m]| 0         (eqs. 29/32) |
+//! | truncated  | OR(A_j[m−1:0])   | E[Ŵ_j]       | 2^−m·ΣŴ_j (eqs. 25/26/28)|
+//!
+//! C and C₀ are carried in **Q.4 fixed point** (4 fractional bits): the
+//! hardware MAC⁺ multiplier is a narrow exact multiplier (paper §4.4), and 4
+//! fractional bits keep the rounding error of V below ±0.5 LSB of the
+//! accumulator for every array size the paper sweeps. The Q.4 choice is
+//! ablated in `benches/ablation.rs`. These integers match the python side
+//! (`kernels/ref.cv_constants`) bit-for-bit.
+
+use crate::approx::{w_hat_q1, xvar, Family};
+
+/// Fixed-point fractional bits for C / C₀ / V.
+pub const CV_FRAC_BITS: u32 = 4;
+const Q: i64 = 1 << CV_FRAC_BITS;
+
+/// Per-filter control-variate constants in Q.4.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CvConstants {
+    pub c_q4: i64,
+    pub c0_q4: i64,
+}
+
+/// Round-to-nearest division for non-negative operands.
+#[inline]
+fn div_round(num: i64, den: i64) -> i64 {
+    debug_assert!(num >= 0 && den > 0);
+    (num + den / 2) / den
+}
+
+/// Compute C and C₀ for one filter row of uint8 weights.
+///
+/// `k_valid` is the true filter size; pass it when `w` is zero-padded (the
+/// averages divide by k, and padded zeros must not dilute them).
+pub fn constants(family: Family, m: u32, w: &[u8], k_valid: usize) -> CvConstants {
+    debug_assert!(k_valid <= w.len() || w.is_empty());
+    if family == Family::Exact || m == 0 {
+        return CvConstants::default();
+    }
+    let k = k_valid as i64;
+    if k == 0 {
+        return CvConstants::default();
+    }
+    let num: i64 = match family {
+        Family::Perforated => w.iter().map(|&x| x as i64).sum(),
+        Family::Recursive => {
+            let mask = (1i64 << m) - 1;
+            w.iter().map(|&x| (x as i64) & mask).sum()
+        }
+        // num = Σ 2·Ŵ_j (Q.1 per weight)
+        Family::Truncated => w.iter().map(|&x| w_hat_q1(x, m) as i64).sum(),
+        Family::Exact => unreachable!(),
+    };
+    let den = k * if family == Family::Truncated { 2 } else { 1 };
+    let c_q4 = div_round(num * Q, den);
+    let c0_q4 = if family == Family::Truncated {
+        // C₀ = 2^−m · ΣŴ = num / 2^{m+1}
+        div_round(num * Q, 1i64 << (m + 1))
+    } else {
+        0
+    };
+    CvConstants { c_q4, c0_q4 }
+}
+
+/// ΣX over an activation column.
+#[inline]
+pub fn sum_x(family: Family, m: u32, activations: &[u8]) -> i64 {
+    activations.iter().map(|&a| xvar(family, a, m) as i64).sum()
+}
+
+/// The MAC⁺ epilogue: V = round((C·ΣX + C₀) / 2^4), added to the accumulator.
+#[inline]
+pub fn v_term(c: &CvConstants, sum_x: i64) -> i64 {
+    let v_q4 = c.c_q4 * sum_x + c.c0_q4;
+    (v_q4 + Q / 2) >> CV_FRAC_BITS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{am, err};
+    use crate::util::rng::Rng;
+    use crate::util::stats::Welford;
+
+    /// Simulate one convolution: returns (exact, approx_raw, approx_cv).
+    fn conv(family: Family, m: u32, w: &[u8], a: &[u8]) -> (i64, i64, i64) {
+        let exact: i64 = w.iter().zip(a).map(|(&w, &a)| (w as i64) * (a as i64)).sum();
+        let am_acc: i64 =
+            w.iter().zip(a).map(|(&w, &a)| am(family, w, a, m) as i64).sum();
+        let c = constants(family, m, w, w.len());
+        let sx = sum_x(family, m, a);
+        (exact, am_acc, am_acc + v_term(&c, sx))
+    }
+
+    #[test]
+    fn cv_nullifies_mean_and_cuts_variance_all_families() {
+        // The paper's central claims (eqs. 20/22/28), checked per family/m.
+        let mut rng = Rng::new(0xC0);
+        let k = 64;
+        for family in Family::APPROX {
+            for &m in family.paper_levels() {
+                // trained-like weights: concentrated (paper Fig. 4)
+                let w: Vec<u8> = (0..k).map(|_| rng.u8_normal(128.0, 22.0)).collect();
+                let mut raw = Welford::new();
+                let mut cv = Welford::new();
+                for _ in 0..3000 {
+                    let a: Vec<u8> = (0..k).map(|_| rng.u8()).collect();
+                    let (ex, r, c) = conv(family, m, &w, &a);
+                    raw.push((ex - r) as f64);
+                    cv.push((ex - c) as f64);
+                }
+                assert!(
+                    cv.mean().abs() <= 0.05 * raw.mean().abs() + 2.0,
+                    "{} m={m}: cv mean {} raw mean {}",
+                    family.name(), cv.mean(), raw.mean()
+                );
+                assert!(
+                    cv.variance() < raw.variance(),
+                    "{} m={m}: var not reduced", family.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn perforated_c_is_mean_weight() {
+        let w: Vec<u8> = vec![10, 20, 30, 40];
+        let c = constants(Family::Perforated, 2, &w, 4);
+        assert_eq!(c.c_q4, 25 * 16);
+        assert_eq!(c.c0_q4, 0);
+    }
+
+    #[test]
+    fn recursive_c_is_mean_low_part() {
+        let w: Vec<u8> = vec![0b1111_1101, 0b0000_0011]; // low 2 bits: 1, 3
+        let c = constants(Family::Recursive, 2, &w, 2);
+        assert_eq!(c.c_q4, 2 * 16);
+    }
+
+    #[test]
+    fn truncated_c0_matches_eq28() {
+        let mut rng = Rng::new(5);
+        let w: Vec<u8> = (0..32).map(|_| rng.u8()).collect();
+        let m = 5;
+        let c = constants(Family::Truncated, m, &w, 32);
+        let sum_what_x2: i64 = w.iter().map(|&x| w_hat_q1(x, m) as i64).sum();
+        // C0 = sum_what / 2^m, in Q.4: sum_what_x2 * 16 / 2^(m+1)
+        let expect = (sum_what_x2 * 16 + (1 << m)) >> (m + 1);
+        assert_eq!(c.c0_q4, expect);
+    }
+
+    #[test]
+    fn zero_padding_with_k_valid_matches_unpadded() {
+        let mut rng = Rng::new(6);
+        let w: Vec<u8> = (0..20).map(|_| rng.u8()).collect();
+        let mut wp = w.clone();
+        wp.extend(std::iter::repeat(0u8).take(44));
+        for family in [Family::Perforated, Family::Recursive, Family::Truncated] {
+            let a = constants(family, 3, &w, 20);
+            let b = constants(family, 3, &wp, 20);
+            assert_eq!(a, b, "{}", family.name());
+        }
+    }
+
+    #[test]
+    fn exact_family_has_zero_v() {
+        let c = constants(Family::Exact, 0, &[1, 2, 3], 3);
+        assert_eq!(v_term(&c, 12345), 0);
+    }
+
+    #[test]
+    fn c_optimality_eq21() {
+        // Var(eps - C·x) is minimized at C = E[W] (perforated).
+        let mut rng = Rng::new(0x21);
+        let k = 48;
+        let m = 2;
+        let w: Vec<u8> = (0..k).map(|_| rng.u8_normal(110.0, 25.0)).collect();
+        let var_with_c = |c_q4: i64| {
+            let mut acc = Welford::new();
+            let mut r = Rng::new(1);
+            for _ in 0..2000 {
+                let a: Vec<u8> = (0..k).map(|_| r.u8()).collect();
+                let eps: i64 = w.iter().zip(&a)
+                    .map(|(&w, &a)| err(Family::Perforated, w, a, m) as i64)
+                    .sum();
+                let sx = sum_x(Family::Perforated, m, &a);
+                let v = (c_q4 * sx + 8) >> 4;
+                acc.push((eps - v) as f64);
+            }
+            acc.variance()
+        };
+        let c_opt = constants(Family::Perforated, m, &w, k).c_q4;
+        let v_opt = var_with_c(c_opt);
+        for dc in [-320, -160, 160, 320] {
+            assert!(var_with_c(c_opt + dc) > v_opt, "dc={dc}");
+        }
+    }
+
+    #[test]
+    fn q4_rounding_error_is_small() {
+        // |V_q4 - V_real| < k/2 LSB-equivalents even for the largest array.
+        let mut rng = Rng::new(9);
+        let k = 256;
+        let w: Vec<u8> = (0..k).map(|_| rng.u8()).collect();
+        let a: Vec<u8> = (0..k).map(|_| rng.u8()).collect();
+        let c = constants(Family::Perforated, 3, &w, k);
+        let sx = sum_x(Family::Perforated, 3, &a);
+        let c_real = w.iter().map(|&x| x as f64).sum::<f64>() / k as f64;
+        let v_real = c_real * sx as f64;
+        let v_fix = v_term(&c, sx) as f64;
+        assert!((v_fix - v_real).abs() <= sx as f64 / 32.0 + 1.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Loaders for the synth10/synth100 dataset binaries (.cvd) and the golden
+//! inference vectors (.gv) exported by `make artifacts`
+//! (format spec: python/compile/export.py docstring).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::approx::Family;
+use crate::nn::Tensor;
+use crate::util::io::ByteReader;
+
+/// A quantized image dataset.
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Input quantization (dequant: real = scale * (q - zp)).
+    pub scale: f32,
+    pub zero_point: i32,
+    images: Vec<u8>,
+    pub labels: Vec<u16>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Dataset> {
+        let mut r = ByteReader::new(buf);
+        r.magic(b"CVD1")?;
+        let n = r.u32()? as usize;
+        let h = r.u32()? as usize;
+        let w = r.u32()? as usize;
+        let c = r.u32()? as usize;
+        if n * h * w * c == 0 || n > 1_000_000 {
+            bail!("implausible dataset dims {n}x{h}x{w}x{c}");
+        }
+        let scale = r.f32()?;
+        let zero_point = r.i32()?;
+        let images = r.bytes(n * h * w * c)?;
+        let labels = r.vec_u16(n)?;
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes", r.remaining());
+        }
+        Ok(Dataset { n, h, w, c, scale, zero_point, images, labels })
+    }
+
+    /// Image `i` as a tensor (borrows copy).
+    pub fn image(&self, i: usize) -> Tensor {
+        let sz = self.h * self.w * self.c;
+        Tensor::from_data(self.h, self.w, self.c, self.images[i * sz..(i + 1) * sz].to_vec())
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// Number of distinct classes present.
+    pub fn n_classes(&self) -> usize {
+        self.labels.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0)
+    }
+}
+
+/// One golden inference vector (python reference logits).
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub model_name: String,
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+    pub img_index: usize,
+    pub logits: Vec<f64>,
+}
+
+impl Golden {
+    pub fn load(path: &Path) -> Result<Golden> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading golden {}", path.display()))?;
+        let mut r = ByteReader::new(&buf);
+        r.magic(b"CVG1")?;
+        let model_name = r.string()?;
+        let family = Family::from_code(r.u8()?).context("bad family code")?;
+        let m = r.u8()? as u32;
+        let use_cv = r.u8()? != 0;
+        let img_index = r.u32()? as usize;
+        let n = r.u32()? as usize;
+        let logits = r.vec_f64(n)?;
+        Ok(Golden { model_name, family, m, use_cv, img_index, logits })
+    }
+
+    /// All golden vectors in a directory.
+    pub fn load_dir(dir: &Path) -> Result<Vec<Golden>> {
+        let mut out = Vec::new();
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?.filter_map(|e| e.ok()).collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            if e.path().extension().map(|x| x == "gv").unwrap_or(false) {
+                out.push(Golden::load(&e.path())?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_dir;
+
+    #[test]
+    fn loads_exported_datasets() {
+        let dir = artifacts_dir().join("data");
+        if !dir.is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        for name in ["synth10_test", "synth100_test", "synth10_calib"] {
+            let ds = Dataset::load(&dir.join(format!("{name}.cvd"))).unwrap();
+            assert_eq!((ds.h, ds.w, ds.c), (32, 32, 3), "{name}");
+            assert!(ds.n >= 256);
+            assert_eq!(ds.labels.len(), ds.n);
+            let img = ds.image(0);
+            assert_eq!(img.data.len(), 32 * 32 * 3);
+            // balanced-ish labels
+            let classes = ds.n_classes();
+            assert!(classes == 10 || classes == 100, "{name}: {classes}");
+        }
+    }
+
+    #[test]
+    fn loads_golden_vectors() {
+        let dir = artifacts_dir().join("golden");
+        if !dir.is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let gs = Golden::load_dir(&dir).unwrap();
+        assert!(gs.len() >= 36, "{}", gs.len());
+        assert!(gs.iter().any(|g| g.use_cv));
+        assert!(gs.iter().any(|g| g.family == Family::Truncated));
+        for g in &gs {
+            assert!(!g.logits.is_empty());
+            assert!(g.logits.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_magic() {
+        assert!(Dataset::parse(b"NOPE").is_err());
+    }
+}

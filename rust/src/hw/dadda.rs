@@ -1,0 +1,178 @@
+//! Dadda column-reduction calculator over arbitrary partial-product column
+//! heights.
+//!
+//! Works for the full 8×8 array *and* for the holed arrays left by
+//! truncation (columns 0..m removed) or perforation (rows removed), so a
+//! single algorithm prices every multiplier variant. Returns the compressor
+//! counts (FA/HA), the number of reduction stages (delay proxy), and the
+//! final carry-propagate adder width.
+
+/// Dadda height sequence d_1=2, d_{j+1} = floor(1.5 * d_j): 2,3,4,6,9,13,...
+fn dadda_targets(max_height: u32) -> Vec<u32> {
+    let mut seq = vec![2u32];
+    while *seq.last().unwrap() < max_height {
+        let next = (*seq.last().unwrap() as f64 * 1.5).floor() as u32;
+        seq.push(next);
+    }
+    seq.pop(); // last one >= max_height is not a target
+    seq.reverse(); // descending: ..., 6, 4, 3, 2
+    seq
+}
+
+/// Result of reducing a partial-product array to two rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Reduction {
+    pub full_adders: u32,
+    pub half_adders: u32,
+    pub stages: u32,
+    /// Width of the final CPA (columns with >= 1 bit after reduction).
+    pub cpa_width: u32,
+    /// Total partial-product bits fed into the tree.
+    pub pp_bits: u32,
+}
+
+/// Run Dadda reduction over `heights[c]` = number of pp bits in column c.
+pub fn reduce(heights: &[u32]) -> Reduction {
+    let mut h: Vec<u32> = heights.to_vec();
+    let max = h.iter().copied().max().unwrap_or(0);
+    let pp_bits = h.iter().sum();
+    let mut fa = 0u32;
+    let mut ha = 0u32;
+    let mut stages = 0u32;
+    if max > 2 {
+        for target in dadda_targets(max) {
+            if h.iter().all(|&x| x <= target) {
+                continue; // already below this stage's target
+            }
+            stages += 1;
+            let mut carry_in = vec![0u32; h.len() + 1];
+            for c in 0..h.len() {
+                let mut cur = h[c] + carry_in[c];
+                // Dadda: compress just enough to reach `target`.
+                while cur > target {
+                    if cur >= target + 2 {
+                        // FA: 3 bits -> 1 sum + 1 carry
+                        fa += 1;
+                        cur -= 2;
+                        carry_in[c + 1] += 1;
+                    } else {
+                        // HA: 2 bits -> 1 sum + 1 carry
+                        ha += 1;
+                        cur -= 1;
+                        carry_in[c + 1] += 1;
+                    }
+                }
+                h[c] = cur;
+            }
+            if carry_in[h.len()] > 0 {
+                h.push(carry_in[h.len()]);
+            }
+        }
+    }
+    // Final CPA over columns that still hold 2 bits (plus ripple to MSB).
+    let first2 = h.iter().position(|&x| x >= 2);
+    let cpa_width = match first2 {
+        Some(lo) => (h.len() - lo) as u32,
+        None => 0,
+    };
+    Reduction { full_adders: fa, half_adders: ha, stages, cpa_width, pp_bits }
+}
+
+/// Column heights of an exact n×n unsigned multiplier.
+pub fn full_heights(n: u32) -> Vec<u32> {
+    (0..2 * n - 1).map(|c| (c + 1).min(n).min(2 * n - 1 - c)).collect()
+}
+
+/// Column heights after truncating the `m` least-significant columns
+/// (paper Fig. 3: bits with i + j < m never generated).
+pub fn truncated_heights(n: u32, m: u32) -> Vec<u32> {
+    full_heights(n)
+        .into_iter()
+        .enumerate()
+        .map(|(c, h)| if (c as u32) < m { 0 } else { h })
+        .collect()
+}
+
+/// Column heights after perforating the first `m` partial-product rows
+/// (paper Fig. 1b: rows i in [0, m) never generated; row i spans columns
+/// i..i+n).
+pub fn perforated_heights(n: u32, m: u32) -> Vec<u32> {
+    let mut h = vec![0u32; (2 * n - 1) as usize];
+    for row in m..n {
+        for j in 0..n {
+            h[(row + j) as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_8x8_dadda_canonical_counts() {
+        // Known result for the 8x8 Dadda multiplier: 35 FAs, 7 HAs, 4 stages.
+        let r = reduce(&full_heights(8));
+        assert_eq!(r.pp_bits, 64);
+        assert_eq!(r.stages, 4);
+        assert_eq!(r.full_adders, 35);
+        assert_eq!(r.half_adders, 7);
+        assert!(r.cpa_width >= 10 && r.cpa_width <= 14, "{}", r.cpa_width);
+    }
+
+    #[test]
+    fn targets_sequence() {
+        assert_eq!(dadda_targets(8), vec![6, 4, 3, 2]);
+        assert_eq!(dadda_targets(3), vec![2]);
+        assert_eq!(dadda_targets(2), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn truncation_reduces_compressors_monotonically() {
+        let mut last = u32::MAX;
+        for m in 0..=7 {
+            let r = reduce(&truncated_heights(8, m));
+            let total = r.full_adders + r.half_adders;
+            assert!(total <= last, "m={m}");
+            last = total;
+        }
+    }
+
+    #[test]
+    fn perforation_reduces_stages() {
+        let exact = reduce(&full_heights(8));
+        let perf3 = reduce(&perforated_heights(8, 3));
+        assert!(perf3.stages < exact.stages);
+        assert_eq!(perf3.pp_bits, 40); // (8-3) rows * 8 bits
+    }
+
+    #[test]
+    fn truncated_pp_bits_match_bitmodel() {
+        use crate::approx::bitmodel::truncated_kept_bits;
+        for m in 0..=7 {
+            let r = reduce(&truncated_heights(8, m));
+            assert_eq!(r.pp_bits, truncated_kept_bits(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn degenerate_arrays() {
+        assert_eq!(reduce(&[]).pp_bits, 0);
+        let single = reduce(&[1, 1, 1]);
+        assert_eq!(single.full_adders + single.half_adders, 0);
+        assert_eq!(single.stages, 0);
+    }
+
+    #[test]
+    fn reduction_conserves_bit_count() {
+        // Each FA turns 3 bits into 2, each HA 2 into 2: final bit count =
+        // pp_bits - fa (only FAs net-remove a bit per stage accounting).
+        let h = truncated_heights(8, 5);
+        let r = reduce(&h);
+        let final_bits: u32 = r.pp_bits - r.full_adders;
+        // after reduction every column holds <= 2 bits; total final bits
+        // must fit in 2 * (#columns+possible growth)
+        assert!(final_bits <= 2 * (h.len() as u32 + r.stages));
+    }
+}

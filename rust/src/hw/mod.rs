@@ -1,0 +1,27 @@
+//! Gate-level hardware cost model — the stand-in for the paper's Synopsys DC
+//! + 14 nm synthesis flow (DESIGN.md §2).
+//!
+//! The paper's area/power story is *structural*: how many partial-product
+//! AND gates, Dadda-tree compressors, CPA bits and pipeline flip-flops each
+//! MAC variant needs, plus the iso-delay slack that lets the synthesizer
+//! downsize gates on the relaxed critical path. We model exactly those
+//! quantities:
+//!
+//! * [`components`] — standard-cell library: area (gate equivalents) and
+//!   switching energy per cell, generic 14 nm calibration.
+//! * [`dadda`] — Dadda column-reduction calculator over arbitrary
+//!   partial-product column heights (handles truncation/perforation holes).
+//! * [`units`] — multiplier + MAC / MAC\* / MAC⁺ unit inventories, delay
+//!   model, and iso-delay downsizing.
+//! * [`array`] — N×N array aggregation; regenerates Figs 7–9 and Table 5.
+//!
+//! All reported numbers are *normalized to the accurate design* (as in the
+//! paper), so only relative calibration matters.
+
+pub mod array;
+pub mod components;
+pub mod dadda;
+pub mod units;
+
+pub use array::{array_cost, mac_plus_overhead, ArrayCost};
+pub use units::{mac_exact, mac_plus, mac_star, UnitCost};

@@ -1,0 +1,51 @@
+//! # cvapprox — Control-Variate Approximation for DNN Inference
+//!
+//! Reproduction of *"Leveraging Highly Approximated Multipliers in DNN
+//! Inference"* (Zervakis et al., 2024): a TPU-like systolic MAC array whose
+//! exact 8×8 multipliers are replaced by highly approximate ones (perforated,
+//! recursive, truncated), with a per-filter **control variate** V = C·ΣX + C₀
+//! added by an extra MAC⁺ column to nullify the mean convolution error and
+//! shrink its variance — no retraining.
+//!
+//! Layer map (DESIGN.md):
+//! * [`approx`] — bit-exact approximate multipliers + error analysis (Table 1)
+//! * [`cv`] — control-variate constants and epilogue (paper §3)
+//! * [`hw`] — gate-level area/power cost model @ iso-delay (Figs 7–9, Table 5)
+//! * [`systolic`] — cycle-level N×N array simulator with toggle counting
+//! * [`nn`] — quantized inference engine (uint8, i64 accumulators)
+//! * [`datasets`] — synth10/synth100 binary loaders
+//! * [`runtime`] — PJRT client running the AOT-compiled XLA tile kernels
+//! * [`coordinator`] — batching inference service + power/latency metrics
+//! * [`report`] — paper-style table/figure renderers
+//!
+//! Python (JAX + Pallas) exists only on the build path (`make artifacts`);
+//! this crate is self-contained at inference time.
+
+pub mod approx;
+pub mod coordinator;
+pub mod cv;
+pub mod datasets;
+pub mod hw;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod systolic;
+pub mod util;
+
+/// Canonical artifact directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory,
+/// walking up so tests/examples work from any subdirectory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(ARTIFACTS_DIR);
+        }
+    }
+}

@@ -1,0 +1,3 @@
+fn main() {
+    cvapprox::report::cli_main();
+}

@@ -1,0 +1,604 @@
+//! Graph executor: runs a loaded [`Model`] on quantized images.
+//!
+//! Bit-exact mirror of python `model.QuantModel.forward` — identical
+//! rounding (`round-half-away-from-zero` on f64), identical integer
+//! arithmetic, asserted by golden-vector integration tests
+//! (rust/tests/golden.rs). The engine also exposes a systolic-array mode
+//! that routes every MAC GEMM through the cycle-level simulator and returns
+//! aggregate toggle statistics.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::gemm::{approx_gemm, GemmCtx, GemmKind};
+use super::graph::{Model, Node, Op, Tensor};
+use crate::approx::{Family, MulLut};
+use crate::cv::{self, CvConstants};
+use crate::runtime::{TileGemm, Variant};
+use crate::systolic::{SystolicArray, ToggleStats};
+
+/// Forward-pass configuration.
+#[derive(Clone, Debug)]
+pub struct ForwardOpts {
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+    pub kind: GemmKind,
+    /// Layer-wise approximation (ALWANN-style extension, DESIGN.md §12):
+    /// per-MAC-layer m override. Because `m` is a *runtime* input of both
+    /// the engines and the AOT artifacts, mixed-m operation needs no
+    /// recompilation — unlike heterogeneous-hardware approaches [9].
+    /// `None` entries (or a missing vec) fall back to `self.m`;
+    /// m = 0 runs that layer exact.
+    pub m_per_layer: Option<std::sync::Arc<Vec<u32>>>,
+}
+
+impl Default for ForwardOpts {
+    fn default() -> Self {
+        ForwardOpts {
+            family: Family::Exact,
+            m: 0,
+            use_cv: false,
+            kind: GemmKind::Identity,
+            m_per_layer: None,
+        }
+    }
+}
+
+impl ForwardOpts {
+    pub fn exact() -> Self {
+        Self::default()
+    }
+
+    pub fn approx(family: Family, m: u32, use_cv: bool) -> Self {
+        ForwardOpts { family, m, use_cv, kind: GemmKind::Identity, m_per_layer: None }
+    }
+
+    /// Layer-wise configuration: `ms[i]` is the approximation level of the
+    /// i-th MAC layer (conv/dense, in topological order).
+    pub fn layerwise(family: Family, ms: Vec<u32>, use_cv: bool) -> Self {
+        ForwardOpts {
+            family,
+            m: 0,
+            use_cv,
+            kind: GemmKind::Identity,
+            m_per_layer: Some(std::sync::Arc::new(ms)),
+        }
+    }
+
+    /// Effective m for MAC layer ordinal `mac_idx`.
+    pub fn m_for(&self, mac_idx: usize) -> u32 {
+        match &self.m_per_layer {
+            Some(ms) => ms.get(mac_idx).copied().unwrap_or(self.m),
+            None => self.m,
+        }
+    }
+}
+
+/// Deterministic round-half-away-from-zero (mirror of quant.round_half_away).
+#[inline]
+pub fn round_half_away(x: f64) -> f64 {
+    x.signum() * (x.abs() + 0.5).floor()
+}
+
+/// i64 accumulator -> uint8: clamp(round(acc*mult) + zp, 0, 255).
+#[inline]
+fn requantize(acc: i64, mult: f64, zp: i32) -> u8 {
+    let q = round_half_away(acc as f64 * mult) + zp as f64;
+    q.clamp(0.0, 255.0) as u8
+}
+
+/// The inference engine for one model. Holds per-(family, m) LUTs lazily.
+pub struct Engine {
+    pub model: Model,
+    lut: Option<MulLut>,
+    systolic: Option<SystolicArray>,
+    pjrt: Option<(Arc<TileGemm>, Variant)>,
+}
+
+impl Engine {
+    pub fn new(model: Model) -> Engine {
+        Engine { model, lut: None, systolic: None, pjrt: None }
+    }
+
+    /// Route MAC GEMMs through the PJRT runtime (the AOT XLA kernels).
+    pub fn attach_pjrt(&mut self, rt: Arc<TileGemm>, variant: Variant) {
+        self.pjrt = Some((rt, variant));
+    }
+
+    /// Pre-build the LUT for a (family, m) pair (Lut engine only).
+    pub fn prepare_lut(&mut self, family: Family, m: u32) {
+        if family != Family::Exact {
+            self.lut = Some(MulLut::build(family, m));
+        }
+    }
+
+    /// Attach a systolic array simulator (enables `forward_systolic`).
+    pub fn prepare_systolic(&mut self, family: Family, m: u32, n: usize) {
+        self.systolic = Some(SystolicArray::new(family, m, n));
+    }
+
+    /// Run one quantized image; returns dequantized logits.
+    pub fn forward(&self, img: &Tensor, opts: &ForwardOpts) -> Result<Vec<f64>> {
+        let (logits, _) = self.forward_inner(img, opts, false)?;
+        Ok(logits)
+    }
+
+    /// Run one image through the systolic simulator (hardware-faithful),
+    /// returning logits and toggle statistics.
+    pub fn forward_systolic(
+        &self,
+        img: &Tensor,
+        opts: &ForwardOpts,
+    ) -> Result<(Vec<f64>, ToggleStats)> {
+        if self.systolic.is_none() {
+            bail!("call prepare_systolic first");
+        }
+        self.forward_inner(img, opts, true)
+    }
+
+    fn forward_inner(
+        &self,
+        img: &Tensor,
+        opts: &ForwardOpts,
+        systolic: bool,
+    ) -> Result<(Vec<f64>, ToggleStats)> {
+        let nodes = &self.model.nodes;
+        let mut outs: Vec<Tensor> = Vec::with_capacity(nodes.len());
+        let mut toggles = ToggleStats::default();
+        let mut mac_idx = 0usize;
+        for (i, node) in nodes.iter().enumerate() {
+            let t = match node.op {
+                Op::Input => {
+                    let (h, w, c) = node.out_shape;
+                    if (img.h, img.w, img.c) != (h, w, c) {
+                        bail!("input shape mismatch");
+                    }
+                    img.clone()
+                }
+                Op::Conv | Op::Dense => {
+                    let t = self.mac_layer(
+                        i, mac_idx, node, &outs, opts, systolic, &mut toggles,
+                    )?;
+                    mac_idx += 1;
+                    t
+                }
+                Op::Maxpool => maxpool2(&outs[node.inputs[0]]),
+                Op::Gap => gap(&outs[node.inputs[0]]),
+                Op::Add => {
+                    let a = &outs[node.inputs[0]];
+                    let b = &outs[node.inputs[1]];
+                    let (s1, z1) = out_q(nodes, node.inputs[0]);
+                    let (s2, z2) = out_q(nodes, node.inputs[1]);
+                    add(a, b, s1, z1, s2, z2, node)
+                }
+                Op::Concat => {
+                    let parts: Vec<(&Tensor, f64, i32)> = node
+                        .inputs
+                        .iter()
+                        .map(|&j| {
+                            let (s, z) = out_q(nodes, j);
+                            (&outs[j], s, z)
+                        })
+                        .collect();
+                    concat(&parts, node)
+                }
+                Op::Shuffle => shuffle(&outs[node.inputs[0]], node.groups),
+            };
+            debug_assert_eq!(
+                (t.h, t.w, t.c),
+                node.out_shape,
+                "node {i} {:?} shape mismatch",
+                node.op
+            );
+            outs.push(t);
+        }
+        let last = outs.last().unwrap();
+        let n = nodes.last().unwrap();
+        let logits = last
+            .data
+            .iter()
+            .map(|&q| (q as f64 - n.out_zp as f64) * n.out_scale as f64)
+            .collect();
+        Ok((logits, toggles))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn mac_layer(
+        &self,
+        idx: usize,
+        mac_idx: usize,
+        node: &Node,
+        outs: &[Tensor],
+        opts: &ForwardOpts,
+        systolic: bool,
+        toggles: &mut ToggleStats,
+    ) -> Result<Tensor> {
+        let wrec = node.weights.as_ref().expect("mac layer has weights");
+        let x = &outs[node.inputs[0]];
+        let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
+        let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
+        let mult = wrec.s_w as f64 * s_in / s_out;
+        let m_eff = opts.m_for(mac_idx);
+        let ctx = GemmCtx {
+            family: if m_eff == 0 { Family::Exact } else { opts.family },
+            m: m_eff,
+            use_cv: opts.use_cv,
+            zp_w: wrec.zp_w as i64,
+            zp_a: zp_in as i64,
+        };
+        if node.op == Op::Dense {
+            let k = wrec.k_dim;
+            let nout = node.cout;
+            debug_assert_eq!(x.data.len(), k, "dense input size");
+            let acc = self.dispatch_gemm(
+                &ctx, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic, toggles,
+            );
+            let mut data = Vec::with_capacity(nout);
+            for &a in acc.iter() {
+                let mut q = requantize(a, mult, zp_out);
+                if node.relu {
+                    q = q.max(zp_out.clamp(0, 255) as u8);
+                }
+                data.push(q);
+            }
+            return Ok(Tensor::from_data(1, 1, nout, data));
+        }
+        // conv (possibly grouped)
+        let (oh, ow, cout) = node.out_shape;
+        let g = node.groups;
+        let cin = x.c;
+        let (cpg_in, cpg_out) = (cin / g, cout / g);
+        let kdim = wrec.k_dim;
+        let n_cols = oh * ow;
+        let mut out = Tensor::new(oh, ow, cout);
+        let mut a_cols = vec![0u8; kdim * n_cols];
+        for gi in 0..g {
+            im2col_group(x, node, gi * cpg_in, cpg_in, zp_in, &mut a_cols);
+            let w_g = &wrec.w_q[gi * cpg_out * kdim..(gi + 1) * cpg_out * kdim];
+            let b_g = &wrec.b_q[gi * cpg_out..(gi + 1) * cpg_out];
+            let acc = self.dispatch_gemm(
+                &ctx, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic, toggles,
+            );
+            for f in 0..cpg_out {
+                let ch = gi * cpg_out + f;
+                for p in 0..n_cols {
+                    let mut q = requantize(acc[f * n_cols + p], mult, zp_out);
+                    if node.relu {
+                        q = q.max(zp_out.clamp(0, 255) as u8);
+                    }
+                    out.data[p * cout + ch] = q;
+                }
+            }
+        }
+        let _ = idx;
+        Ok(out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_gemm(
+        &self,
+        ctx: &GemmCtx,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+        bias: &[i32],
+        systolic: bool,
+        toggles: &mut ToggleStats,
+    ) -> Vec<i64> {
+        if systolic {
+            if let Some(arr) = &self.systolic {
+                return systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
+            }
+        }
+        if let Some((rt, variant)) = &self.pjrt {
+            return pjrt_gemm(rt, *variant, ctx, w, a, m_rows, k, n, bias);
+        }
+        approx_gemm(ctx_kind(self, ctx), ctx, self.lut.as_ref(), w, a, m_rows, k, n, bias)
+    }
+}
+
+/// Route one GEMM through the PJRT runtime; the CV + zero-point epilogue is
+/// applied here (shared semantics with the native engines).
+#[allow(clippy::too_many_arguments)]
+fn pjrt_gemm(
+    rt: &TileGemm,
+    variant: Variant,
+    ctx: &GemmCtx,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+) -> Vec<i64> {
+    let (mut acc, sum_x) = rt
+        .am_acc(ctx.family, variant, ctx.m, w, a, m_rows, k, n)
+        .expect("pjrt gemm execution");
+    if ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0 {
+        for f in 0..m_rows {
+            let c = cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k);
+            let orow = &mut acc[f * n..(f + 1) * n];
+            for (o, &sx) in orow.iter_mut().zip(&sum_x) {
+                *o += cv::v_term(&c, sx);
+            }
+        }
+    }
+    let mut sum_a = vec![0i64; n];
+    for kk in 0..k {
+        let arow = &a[kk * n..(kk + 1) * n];
+        for (sa, &av) in sum_a.iter_mut().zip(arow) {
+            *sa += av as i64;
+        }
+    }
+    let kzz = k as i64 * ctx.zp_w * ctx.zp_a;
+    for f in 0..m_rows {
+        let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+        let b = bias[f] as i64;
+        let orow = &mut acc[f * n..(f + 1) * n];
+        for (o, &sa) in orow.iter_mut().zip(&sum_a) {
+            *o += -ctx.zp_w * sa - ctx.zp_a * sum_w + kzz + b;
+        }
+    }
+    acc
+}
+
+fn ctx_kind(e: &Engine, ctx: &GemmCtx) -> GemmKind {
+    // Use the LUT when one matching the context is prepared.
+    match &e.lut {
+        Some(l) if l.family == ctx.family && l.m == ctx.m => GemmKind::Lut,
+        _ => GemmKind::Identity,
+    }
+}
+
+fn out_q(nodes: &[Node], i: usize) -> (f64, i32) {
+    (nodes[i].out_scale as f64, nodes[i].out_zp)
+}
+
+/// im2col for one channel group: fills `cols` as [kdim, n_cols] row-major,
+/// (ky, kx, c) minor ordering, zero-point padding. Mirrors python im2col.
+fn im2col_group(
+    x: &Tensor,
+    node: &Node,
+    c0: usize,
+    cpg: usize,
+    zp_in: i32,
+    cols: &mut [u8],
+) {
+    let k = node.ksize;
+    let stride = node.stride;
+    let pad = node.pad as isize;
+    let (oh, ow, _) = node.out_shape;
+    let n_cols = oh * ow;
+    let zp = zp_in.clamp(0, 255) as u8;
+    for ky in 0..k {
+        for kx in 0..k {
+            for c in 0..cpg {
+                let row = ((ky * k + kx) * cpg + c) * n_cols;
+                for oy in 0..oh {
+                    let iy = (oy * stride) as isize + ky as isize - pad;
+                    for ox in 0..ow {
+                        let ix = (ox * stride) as isize + kx as isize - pad;
+                        let v = if iy >= 0
+                            && iy < x.h as isize
+                            && ix >= 0
+                            && ix < x.w as isize
+                        {
+                            x.at(iy as usize, ix as usize, c0 + c)
+                        } else {
+                            zp
+                        };
+                        cols[row + oy * ow + ox] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Route one GEMM through the cycle-level systolic simulator, tiling the
+/// reduction dimension to the array width and accumulating partial results
+/// (exact: all outputs are k-sums; CV is applied once on the final sumX).
+#[allow(clippy::too_many_arguments)]
+fn systolic_gemm(
+    arr: &SystolicArray,
+    ctx: &GemmCtx,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    toggles: &mut ToggleStats,
+) -> Vec<i64> {
+    let nn = arr.n;
+    let consts: Vec<CvConstants> = (0..m_rows)
+        .map(|f| cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k))
+        .collect();
+    let mut acc = vec![0i64; m_rows * n];
+    let mut sum_x = vec![0i64; n];
+    for k0 in (0..k).step_by(nn) {
+        let klen = nn.min(k - k0);
+        for f0 in (0..m_rows).step_by(nn) {
+            let flen = nn.min(m_rows - f0);
+            let w_tile: Vec<Vec<u8>> = (0..flen)
+                .map(|f| w[(f0 + f) * k + k0..(f0 + f) * k + k0 + klen].to_vec())
+                .collect();
+            let cols: Vec<Vec<u8>> = (0..n)
+                .map(|p| (0..klen).map(|kk| a[(k0 + kk) * n + p]).collect())
+                .collect();
+            // raw accumulation; V applied after all K tiles.
+            let (tile_out, stats) = arr.run_tile(&w_tile, &cols, &consts, false);
+            toggles.merge(&stats);
+            for (p, col_out) in tile_out.iter().enumerate() {
+                for (f, &v) in col_out.iter().enumerate() {
+                    acc[(f0 + f) * n + p] += v;
+                }
+            }
+            if f0 == 0 {
+                for (p, col) in cols.iter().enumerate() {
+                    sum_x[p] += cv::sum_x(ctx.family, ctx.m, col);
+                }
+            }
+        }
+    }
+    if ctx.use_cv && ctx.family != Family::Exact {
+        for f in 0..m_rows {
+            for p in 0..n {
+                acc[f * n + p] += cv::v_term(&consts[f], sum_x[p]);
+            }
+        }
+    }
+    // zero-point + bias epilogue (same as fast path)
+    let mut sum_a = vec![0i64; n];
+    for kk in 0..k {
+        for p in 0..n {
+            sum_a[p] += a[kk * n + p] as i64;
+        }
+    }
+    let kzz = k as i64 * ctx.zp_w * ctx.zp_a;
+    for f in 0..m_rows {
+        let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+        for p in 0..n {
+            acc[f * n + p] += -ctx.zp_w * sum_a[p] - ctx.zp_a * sum_w + kzz + bias[f] as i64;
+        }
+    }
+    acc
+}
+
+fn maxpool2(x: &Tensor) -> Tensor {
+    let (oh, ow) = (x.h / 2, x.w / 2);
+    let mut out = Tensor::new(oh, ow, x.c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..x.c {
+                let v = x
+                    .at(oy * 2, ox * 2, c)
+                    .max(x.at(oy * 2, ox * 2 + 1, c))
+                    .max(x.at(oy * 2 + 1, ox * 2, c))
+                    .max(x.at(oy * 2 + 1, ox * 2 + 1, c));
+                out.set(oy, ox, c, v);
+            }
+        }
+    }
+    out
+}
+
+fn gap(x: &Tensor) -> Tensor {
+    let npix = (x.h * x.w) as i64;
+    let mut out = Tensor::new(1, 1, x.c);
+    for c in 0..x.c {
+        let mut s = 0i64;
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                s += x.at(y, xx, c) as i64;
+            }
+        }
+        // mirror python: (sum*2 + npix) // (2*npix)  (round-half-up, nonneg)
+        out.data[c] = ((s * 2 + npix) / (2 * npix)) as u8;
+    }
+    out
+}
+
+fn add(a: &Tensor, b: &Tensor, s1: f64, z1: i32, s2: f64, z2: i32, node: &Node) -> Tensor {
+    let s_out = node.out_scale as f64;
+    let zp_out = node.out_zp;
+    let lo = if node.relu { zp_out.clamp(0, 255) as f64 } else { 0.0 };
+    let mut out = Tensor::new(a.h, a.w, a.c);
+    for (o, (&qa, &qb)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        let acc = (qa as f64 - z1 as f64) * s1 + (qb as f64 - z2 as f64) * s2;
+        let q = round_half_away(acc / s_out) + zp_out as f64;
+        *o = q.clamp(lo, 255.0) as u8;
+    }
+    out
+}
+
+fn concat(parts: &[(&Tensor, f64, i32)], node: &Node) -> Tensor {
+    let s_out = node.out_scale as f64;
+    let zp_out = node.out_zp;
+    let (h, w, c) = node.out_shape;
+    let mut out = Tensor::new(h, w, c);
+    let mut c_off = 0;
+    for &(t, s_j, z_j) in parts {
+        let ratio = s_j / s_out; // mirror python: (q - z) * (s_j / s_out)
+        for y in 0..h {
+            for x in 0..w {
+                for cc in 0..t.c {
+                    let q = round_half_away((t.at(y, x, cc) as f64 - z_j as f64) * ratio)
+                        + zp_out as f64;
+                    out.set(y, x, c_off + cc, q.clamp(0.0, 255.0) as u8);
+                }
+            }
+        }
+        c_off += t.c;
+    }
+    out
+}
+
+fn shuffle(x: &Tensor, groups: usize) -> Tensor {
+    let cpg = x.c / groups;
+    let mut out = Tensor::new(x.h, x.w, x.c);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for gi in 0..groups {
+                for p in 0..cpg {
+                    // python: out[.., p*g + gi] = in[.., gi*cpg + p]
+                    out.set(y, xx, p * groups + gi, x.at(y, xx, gi * cpg + p));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_away_matches_python() {
+        for (x, want) in [(0.5, 1.0), (1.5, 2.0), (-0.5, -1.0), (-1.5, -2.0), (2.4, 2.0)] {
+            assert_eq!(round_half_away(x), want, "{x}");
+        }
+    }
+
+    #[test]
+    fn requantize_clamps_and_rounds() {
+        assert_eq!(requantize(-100_000, 0.01, 128), 0);
+        assert_eq!(requantize(0, 0.01, 128), 128);
+        assert_eq!(requantize(100_000, 0.01, 128), 255);
+        assert_eq!(requantize(50, 0.01, 128), 129); // 0.5 rounds away
+    }
+
+    #[test]
+    fn maxpool_takes_window_max() {
+        let t = Tensor::from_data(2, 2, 1, vec![1, 9, 3, 4]);
+        let p = maxpool2(&t);
+        assert_eq!(p.data, vec![9]);
+    }
+
+    #[test]
+    fn gap_rounds_half_up() {
+        // sum=3 over 2 pixels -> 1.5 -> 2
+        let t = Tensor::from_data(1, 2, 1, vec![1, 2]);
+        assert_eq!(gap(&t).data, vec![2]);
+    }
+
+    #[test]
+    fn shuffle_permutes_channels() {
+        // 4 channels, 2 groups: [a0 a1 | b0 b1] -> [a0 b0 a1 b1]
+        let t = Tensor::from_data(1, 1, 4, vec![10, 11, 20, 21]);
+        let s = shuffle(&t, 2);
+        assert_eq!(s.data, vec![10, 20, 11, 21]);
+    }
+
+    #[test]
+    fn shuffle_twice_with_transpose_groups_restores() {
+        let t = Tensor::from_data(1, 1, 6, vec![0, 1, 2, 3, 4, 5]);
+        let s = shuffle(&shuffle(&t, 2), 3);
+        assert_eq!(s.data, t.data);
+    }
+}

@@ -1,0 +1,377 @@
+//! Approximate quantized GEMM engines.
+//!
+//! Computes, for one layer GEMM W[M,K] × A[K,N] (uint8 operands):
+//!
+//! ```text
+//! acc[f,p] = CV( Σ_k AM(W[f,k], A[k,p]) )
+//!          − zp_w·Σ_k A[k,p] − zp_a·Σ_k W[f,k] + K·zp_w·zp_a + bias[f]
+//! ```
+//!
+//! Engines (all bit-identical; equivalence asserted by tests):
+//! * **Identity** — fast path: the error identities turn each family into
+//!   1..m extra exact GEMMs over masked operands (AM = W·A − ε); this is
+//!   what the accuracy sweeps run, and what the Pallas kernel computes on
+//!   the PJRT path.
+//! * **Lut** — hardware-faithful path: every product is a 256×256 table
+//!   lookup (TFApprox-style), exactly what the RTL multiplier emits.
+//! * the systolic simulator ([`crate::systolic`]) is the third, cycle-level
+//!   engine, wired in by the engine layer for power measurements.
+
+use crate::approx::{Family, MulLut};
+use crate::cv::{self, CvConstants};
+
+/// Which GEMM engine to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    Identity,
+    Lut,
+}
+
+/// Layer-level GEMM descriptor (quantization + CV context).
+#[derive(Clone, Debug)]
+pub struct GemmCtx {
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+    pub zp_w: i64,
+    pub zp_a: i64,
+}
+
+/// Exact u8×u8 GEMM core with **i32 accumulation** (`sign` = ±1 folds the
+/// error-term subtraction into the same kernel).
+///
+/// Overflow safety: |Σ_k w·a| ≤ K·255² < 2^31 for K ≤ 33 000 — far beyond
+/// any layer this engine sees (max K here is 3×3×64 = 576; the coordinator
+/// would tile anything larger). Asserted below.
+///
+/// §Perf note (EXPERIMENTS.md): accumulating in i32 with a pre-widened A
+/// panel lets LLVM vectorize the inner loop (u8→i64 per element in the
+/// original version blocked it): 1.95 → ~6 GMAC/s on the bench shape.
+fn gemm_core_i32(
+    w: &[u8],
+    a_i32: &[i32],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    sign: i32,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(w.len(), m_rows * k);
+    debug_assert_eq!(a_i32.len(), k * n);
+    debug_assert_eq!(out.len(), m_rows * n);
+    assert!(k <= 33_000, "K too large for i32 accumulation — tile it");
+    // 4-row register blocking: one pass over the A panel feeds 4 output
+    // rows, cutting A-panel memory traffic 4× (§Perf iteration 2).
+    let mut f = 0;
+    while f + 4 <= m_rows {
+        let (w0, w1, w2, w3) = (
+            &w[f * k..(f + 1) * k],
+            &w[(f + 1) * k..(f + 2) * k],
+            &w[(f + 2) * k..(f + 3) * k],
+            &w[(f + 3) * k..(f + 4) * k],
+        );
+        let (head, rest) = out[f * n..].split_at_mut(n);
+        let (r1, rest) = rest.split_at_mut(n);
+        let (r2, r3full) = rest.split_at_mut(n);
+        let r3 = &mut r3full[..n];
+        for kk in 0..k {
+            let arow = &a_i32[kk * n..(kk + 1) * n];
+            let v0 = sign * w0[kk] as i32;
+            let v1 = sign * w1[kk] as i32;
+            let v2 = sign * w2[kk] as i32;
+            let v3 = sign * w3[kk] as i32;
+            if v0 | v1 | v2 | v3 == 0 {
+                continue;
+            }
+            for (j, &av) in arow.iter().enumerate() {
+                head[j] += v0 * av;
+                r1[j] += v1 * av;
+                r2[j] += v2 * av;
+                r3[j] += v3 * av;
+            }
+        }
+        f += 4;
+    }
+    while f < m_rows {
+        let wrow = &w[f * k..(f + 1) * k];
+        let orow = &mut out[f * n..(f + 1) * n];
+        for (kk, &wv) in wrow.iter().enumerate() {
+            if wv == 0 {
+                continue;
+            }
+            let wv = sign * wv as i32;
+            let arow = &a_i32[kk * n..(kk + 1) * n];
+            for (o, &av) in orow.iter_mut().zip(arow) {
+                *o += wv * av;
+            }
+        }
+        f += 1;
+    }
+}
+
+/// Widen a u8 panel to i32 (hoisted out of the inner loop so it vectorizes).
+fn widen(a: &[u8]) -> Vec<i32> {
+    a.iter().map(|&x| x as i32).collect()
+}
+
+/// Widen with a mask applied (the error-term operand transforms).
+fn widen_mask(a: &[u8], mask: u8) -> Vec<i32> {
+    a.iter().map(|&x| (x & mask) as i32).collect()
+}
+
+/// Σ_k AM(W,A) via the closed-form identities (fast path).
+pub fn am_acc_identity(
+    family: Family,
+    m: u32,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i64> {
+    let mut acc = vec![0i32; m_rows * n];
+    let a_wide = widen(a);
+    gemm_core_i32(w, &a_wide, m_rows, k, n, 1, &mut acc);
+    if family == Family::Exact || m == 0 {
+        return acc.into_iter().map(|x| x as i64).collect();
+    }
+    let mask = ((1u32 << m) - 1) as u8;
+    match family {
+        Family::Perforated => {
+            let a_low = widen_mask(a, mask);
+            gemm_core_i32(w, &a_low, m_rows, k, n, -1, &mut acc);
+        }
+        Family::Recursive => {
+            let w_low: Vec<u8> = w.iter().map(|&x| x & mask).collect();
+            let a_low = widen_mask(a, mask);
+            gemm_core_i32(&w_low, &a_low, m_rows, k, n, -1, &mut acc);
+        }
+        Family::Truncated => {
+            // ε = Σ_{i<m} (W mod 2^{m−i}) · a_i · 2^i: m bit-plane GEMMs.
+            // Each term fits i32 (≤ K·127·2^i ≤ K·2^13); the weighted merge
+            // happens per plane with the shift folded into the i32 domain.
+            let mut a_bit = vec![0i32; k * n];
+            let mut term = vec![0i32; m_rows * n];
+            for i in 0..m {
+                let wm = ((1u32 << (m - i)) - 1) as u8;
+                let w_sub: Vec<u8> = w.iter().map(|&x| x & wm).collect();
+                for (dst, &src) in a_bit.iter_mut().zip(a) {
+                    *dst = ((src >> i) & 1) as i32;
+                }
+                term.fill(0);
+                gemm_core_i32(&w_sub, &a_bit, m_rows, k, n, 1, &mut term);
+                for (o, &t) in acc.iter_mut().zip(&term) {
+                    *o -= t << i;
+                }
+            }
+        }
+        Family::Exact => unreachable!(),
+    }
+    acc.into_iter().map(|x| x as i64).collect()
+}
+
+/// Σ_k AM(W,A) via 256×256 lookup (hardware-faithful path).
+pub fn am_acc_lut(
+    lut: &MulLut,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i64> {
+    let mut acc = vec![0i64; m_rows * n];
+    for f in 0..m_rows {
+        let wrow = &w[f * k..(f + 1) * k];
+        let orow = &mut acc[f * n..(f + 1) * n];
+        for (kk, &wv) in wrow.iter().enumerate() {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (o, &av) in orow.iter_mut().zip(arow) {
+                *o += lut.mul(wv, av) as i64;
+            }
+        }
+    }
+    acc
+}
+
+/// Full layer GEMM: AM accumulation (+V) + zero-point/bias epilogue.
+///
+/// Mirrors python `model.approx_gemm` exactly. Returns [m_rows, n] i64.
+#[allow(clippy::too_many_arguments)]
+pub fn approx_gemm(
+    kind: GemmKind,
+    ctx: &GemmCtx,
+    lut: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+) -> Vec<i64> {
+    let mut acc = match kind {
+        GemmKind::Identity => am_acc_identity(ctx.family, ctx.m, w, a, m_rows, k, n),
+        GemmKind::Lut => match lut {
+            Some(l) => am_acc_lut(l, w, a, m_rows, k, n),
+            None => am_acc_identity(ctx.family, ctx.m, w, a, m_rows, k, n),
+        },
+    };
+    // Control variate (MAC+ column).
+    if ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0 {
+        let consts: Vec<CvConstants> = (0..m_rows)
+            .map(|f| cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k))
+            .collect();
+        // sum_x per output column
+        let mut sum_x = vec![0i64; n];
+        for kk in 0..k {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (sx, &av) in sum_x.iter_mut().zip(arow) {
+                *sx += crate::approx::xvar(ctx.family, av, ctx.m) as i64;
+            }
+        }
+        for f in 0..m_rows {
+            let c = &consts[f];
+            let orow = &mut acc[f * n..(f + 1) * n];
+            for (o, &sx) in orow.iter_mut().zip(&sum_x) {
+                *o += cv::v_term(c, sx);
+            }
+        }
+    }
+    // Zero-point + bias epilogue.
+    let mut sum_a = vec![0i64; n];
+    for kk in 0..k {
+        let arow = &a[kk * n..(kk + 1) * n];
+        for (sa, &av) in sum_a.iter_mut().zip(arow) {
+            *sa += av as i64;
+        }
+    }
+    let kzz = k as i64 * ctx.zp_w * ctx.zp_a;
+    for f in 0..m_rows {
+        let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+        let b = bias[f] as i64;
+        let orow = &mut acc[f * n..(f + 1) * n];
+        for (o, &sa) in orow.iter_mut().zip(&sum_a) {
+            *o += -ctx.zp_w * sa - ctx.zp_a * sum_w + kzz + b;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::am;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn naive_am_acc(
+        family: Family,
+        m: u32,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<i64> {
+        let mut out = vec![0i64; m_rows * n];
+        for f in 0..m_rows {
+            for p in 0..n {
+                let mut s = 0i64;
+                for kk in 0..k {
+                    s += am(family, w[f * k + kk], a[kk * n + p], m) as i64;
+                }
+                out[f * n + p] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn identity_and_lut_match_naive() {
+        prop::check_msg(
+            "gemm engines agree",
+            40,
+            0x6E,
+            |r| {
+                let m_rows = 1 + r.below(6) as usize;
+                let k = 1 + r.below(40) as usize;
+                let n = 1 + r.below(10) as usize;
+                let w: Vec<u8> = (0..m_rows * k).map(|_| r.u8()).collect();
+                let a: Vec<u8> = (0..k * n).map(|_| r.u8()).collect();
+                let fam = Family::ALL[r.below(4) as usize];
+                let m = if fam == Family::Exact { 0 } else { 1 + r.below(7) as u32 };
+                (fam, m, w, a, m_rows, k, n)
+            },
+            |(fam, m, w, a, m_rows, k, n)| {
+                let want = naive_am_acc(*fam, *m, w, a, *m_rows, *k, *n);
+                let ident = am_acc_identity(*fam, *m, w, a, *m_rows, *k, *n);
+                if ident != want {
+                    return Err("identity != naive".into());
+                }
+                if *fam != Family::Exact {
+                    let lut = MulLut::build(*fam, *m);
+                    let l = am_acc_lut(&lut, w, a, *m_rows, *k, *n);
+                    if l != want {
+                        return Err("lut != naive".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_point_epilogue_matches_definition() {
+        // approx_gemm(exact) == Σ (W-zw)(A-za) + bias
+        let mut rng = Rng::new(3);
+        let (m_rows, k, n) = (4, 18, 5);
+        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let bias: Vec<i32> = (0..m_rows).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+        let ctx = GemmCtx { family: Family::Exact, m: 0, use_cv: false, zp_w: 13, zp_a: 97 };
+        let got = approx_gemm(GemmKind::Identity, &ctx, None, &w, &a, m_rows, k, n, &bias);
+        for f in 0..m_rows {
+            for p in 0..n {
+                let mut want = bias[f] as i64;
+                for kk in 0..k {
+                    want += (w[f * k + kk] as i64 - 13) * (a[kk * n + p] as i64 - 97);
+                }
+                assert_eq!(got[f * n + p], want);
+            }
+        }
+    }
+
+    #[test]
+    fn cv_moves_accumulator_toward_exact() {
+        let mut rng = Rng::new(8);
+        let (m_rows, k, n) = (3, 64, 16);
+        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8_normal(120.0, 30.0)).collect();
+        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let bias = vec![0i32; m_rows];
+        for family in Family::APPROX {
+            let m = *family.paper_levels().last().unwrap();
+            let exact_ctx =
+                GemmCtx { family: Family::Exact, m: 0, use_cv: false, zp_w: 10, zp_a: 5 };
+            let raw_ctx = GemmCtx { family, m, use_cv: false, zp_w: 10, zp_a: 5 };
+            let cv_ctx = GemmCtx { family, m, use_cv: true, zp_w: 10, zp_a: 5 };
+            let ex = approx_gemm(GemmKind::Identity, &exact_ctx, None, &w, &a, m_rows, k, n, &bias);
+            let raw = approx_gemm(GemmKind::Identity, &raw_ctx, None, &w, &a, m_rows, k, n, &bias);
+            let cvv = approx_gemm(GemmKind::Identity, &cv_ctx, None, &w, &a, m_rows, k, n, &bias);
+            let err = |x: &[i64]| -> f64 {
+                x.iter().zip(&ex).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+            };
+            assert!(
+                err(&cvv) < err(&raw) * 0.6,
+                "{}: cv {} raw {}", family.name(), err(&cvv), err(&raw)
+            );
+        }
+    }
+
+    #[test]
+    fn lut_falls_back_to_identity_for_exact() {
+        let w = vec![7u8; 4];
+        let a = vec![9u8; 4];
+        let ctx = GemmCtx { family: Family::Exact, m: 0, use_cv: false, zp_w: 0, zp_a: 0 };
+        let got = approx_gemm(GemmKind::Lut, &ctx, None, &w, &a, 2, 2, 2, &[0, 0]);
+        assert_eq!(got, vec![126i64; 4]);
+    }
+}

@@ -1,0 +1,194 @@
+//! Network IR: a flat topological list of nodes (mirror of python nets.py)
+//! plus the quantized-tensor type.
+
+/// Operator kind (byte codes fixed by the .cvm format).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Input,
+    Conv,
+    Maxpool,
+    Gap,
+    Dense,
+    Add,
+    Concat,
+    Shuffle,
+}
+
+impl Op {
+    pub fn from_code(c: u8) -> Option<Op> {
+        Some(match c {
+            0 => Op::Input,
+            1 => Op::Conv,
+            2 => Op::Maxpool,
+            3 => Op::Gap,
+            4 => Op::Dense,
+            5 => Op::Add,
+            6 => Op::Concat,
+            7 => Op::Shuffle,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-node weight payload (conv/dense only).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    /// Quantized weights, row-major [cout][k*k*cin_per_group] (conv) or
+    /// [nout][nin] (dense).
+    pub w_q: Vec<u8>,
+    /// Reduction length per output row.
+    pub k_dim: usize,
+    /// Bias in the i32 accumulator domain.
+    pub b_q: Vec<i32>,
+    pub s_w: f32,
+    pub zp_w: i32,
+}
+
+/// One graph node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub relu: bool,
+    pub inputs: Vec<usize>,
+    /// Output shape (h, w, c); dense = (1, 1, nout).
+    pub out_shape: (usize, usize, usize),
+    /// Output quantization.
+    pub out_scale: f32,
+    pub out_zp: i32,
+    // conv params
+    pub cout: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub weights: Option<Weights>,
+}
+
+/// A loaded quantized model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub n_classes: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl Model {
+    /// Total multiply-accumulate count for one inference (conv + dense).
+    pub fn macs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| {
+                let w = n.weights.as_ref()?;
+                let (h, ww, c) = n.out_shape;
+                Some((h * ww * c) as u64 * w.k_dim as u64)
+            })
+            .sum()
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn params(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.weights.as_ref())
+            .map(|w| (w.w_q.len() + 4 * w.b_q.len()) as u64)
+            .sum()
+    }
+
+    /// Number of MAC layers (conv + dense).
+    pub fn mac_layers(&self) -> usize {
+        self.nodes.iter().filter(|n| n.weights.is_some()).count()
+    }
+}
+
+/// A quantized activation tensor, HWC row-major.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(h: usize, w: usize, c: usize) -> Tensor {
+        Tensor { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    pub fn from_data(h: usize, w: usize, c: usize, data: Vec<u8>) -> Tensor {
+        assert_eq!(data.len(), h * w * c);
+        Tensor { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> u8 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: u8) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_codes_roundtrip() {
+        for c in 0..8u8 {
+            assert!(Op::from_code(c).is_some());
+        }
+        assert!(Op::from_code(99).is_none());
+    }
+
+    #[test]
+    fn tensor_indexing_is_hwc_row_major() {
+        let mut t = Tensor::new(2, 3, 4);
+        t.set(1, 2, 3, 42);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 42);
+        assert_eq!(t.at(1, 2, 3), 42);
+    }
+
+    #[test]
+    fn macs_counts_conv_work() {
+        let node = Node {
+            op: Op::Conv,
+            relu: true,
+            inputs: vec![0],
+            out_shape: (4, 4, 8),
+            out_scale: 1.0,
+            out_zp: 0,
+            cout: 8,
+            ksize: 3,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            weights: Some(Weights {
+                w_q: vec![0; 8 * 27],
+                k_dim: 27,
+                b_q: vec![0; 8],
+                s_w: 1.0,
+                zp_w: 0,
+            }),
+        };
+        let input = Node {
+            op: Op::Input,
+            relu: false,
+            inputs: vec![],
+            out_shape: (4, 4, 3),
+            out_scale: 1.0,
+            out_zp: 0,
+            cout: 0,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: None,
+        };
+        let m = Model { name: "t".into(), n_classes: 2, nodes: vec![input, node] };
+        assert_eq!(m.macs(), 4 * 4 * 8 * 27);
+        assert_eq!(m.mac_layers(), 1);
+        assert_eq!(m.params(), (8 * 27 + 32) as u64);
+    }
+}

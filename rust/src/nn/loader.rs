@@ -1,0 +1,161 @@
+//! .cvm model binary parser (format: python/compile/export.py docstring).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::{Model, Node, Op, Weights};
+use crate::util::io::ByteReader;
+
+/// Load a quantized model from a .cvm file.
+pub fn load_model(path: &Path) -> Result<Model> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading model {}", path.display()))?;
+    parse_model(&buf).with_context(|| format!("parsing model {}", path.display()))
+}
+
+pub fn parse_model(buf: &[u8]) -> Result<Model> {
+    let mut r = ByteReader::new(buf);
+    r.magic(b"CVM1")?;
+    let name = r.string()?;
+    let n_classes = r.u16()? as usize;
+    let n_nodes = r.u32()? as usize;
+    if n_nodes > 10_000 {
+        bail!("implausible node count {n_nodes}");
+    }
+    let mut nodes: Vec<Node> = Vec::with_capacity(n_nodes);
+    for idx in 0..n_nodes {
+        let op = Op::from_code(r.u8()?)
+            .with_context(|| format!("node {idx}: bad op code"))?;
+        let relu = r.u8()? != 0;
+        let n_in = r.u16()? as usize;
+        let inputs: Vec<usize> =
+            r.vec_u32(n_in)?.into_iter().map(|x| x as usize).collect();
+        for &i in &inputs {
+            if i >= idx {
+                bail!("node {idx}: input {i} not topologically earlier");
+            }
+        }
+        let oh = r.u32()? as usize;
+        let ow = r.u32()? as usize;
+        let oc = r.u32()? as usize;
+        let out_scale = r.f32()?;
+        let out_zp = r.i32()?;
+        let mut node = Node {
+            op,
+            relu,
+            inputs,
+            out_shape: (oh, ow, oc),
+            out_scale,
+            out_zp,
+            cout: 0,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: None,
+        };
+        match op {
+            Op::Conv => {
+                node.cout = r.u16()? as usize;
+                node.ksize = r.u8()? as usize;
+                node.stride = r.u8()? as usize;
+                node.pad = r.u8()? as usize;
+                let _rsv = r.u8()?;
+                node.groups = r.u16()? as usize;
+                let s_w = r.f32()?;
+                let zp_w = r.i32()?;
+                // cin_per_group from the producing node's channel count
+                let cin = nodes[node.inputs[0]]
+                    .out_shape
+                    .2
+                    / node.groups;
+                let k_dim = node.ksize * node.ksize * cin;
+                let w_q = r.bytes(node.cout * k_dim)?;
+                let b_q = r.vec_i32(node.cout)?;
+                node.weights = Some(Weights { w_q, k_dim, b_q, s_w, zp_w });
+            }
+            Op::Dense => {
+                let nout = r.u32()? as usize;
+                let nin = r.u32()? as usize;
+                let s_w = r.f32()?;
+                let zp_w = r.i32()?;
+                let w_q = r.bytes(nout * nin)?;
+                let b_q = r.vec_i32(nout)?;
+                node.cout = nout;
+                node.weights = Some(Weights { w_q, k_dim: nin, b_q, s_w, zp_w });
+            }
+            Op::Shuffle => {
+                node.groups = r.u16()? as usize;
+            }
+            _ => {}
+        }
+        nodes.push(node);
+    }
+    if r.remaining() != 0 {
+        bail!("{} trailing bytes after last node", r.remaining());
+    }
+    Ok(Model { name, n_classes, nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_dir;
+
+    fn models_available() -> bool {
+        artifacts_dir().join("models").is_dir()
+    }
+
+    #[test]
+    fn loads_all_exported_models() {
+        if !models_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let dir = artifacts_dir().join("models");
+        let mut count = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().map(|e| e == "cvm").unwrap_or(false) {
+                let m = load_model(&path).unwrap();
+                assert!(m.nodes.len() > 3, "{}", m.name);
+                assert!(m.macs() > 100_000, "{}: {} MACs", m.name, m.macs());
+                assert!(m.n_classes == 10 || m.n_classes == 100);
+                // every conv/dense got weights; shapes sane
+                for n in &m.nodes {
+                    if let Some(w) = &n.weights {
+                        assert_eq!(w.b_q.len(), n.cout.max(n.out_shape.2));
+                        assert!(!w.w_q.is_empty());
+                        assert!(w.s_w > 0.0);
+                    }
+                }
+                count += 1;
+            }
+        }
+        assert_eq!(count, 12, "expected 12 exported models");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_model(b"XXXX").is_err());
+        assert!(parse_model(b"CVM1\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_forward_references() {
+        // Construct a minimal model whose node 0 references node 5.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"CVM1");
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b't');
+        buf.extend_from_slice(&10u16.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(5); // op add
+        buf.push(0);
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.extend_from_slice(&5u32.to_le_bytes()); // bad input
+        buf.extend_from_slice(&[0u8; 20]);
+        assert!(parse_model(&buf).is_err());
+    }
+}

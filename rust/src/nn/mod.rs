@@ -1,0 +1,20 @@
+//! Quantized DNN inference engine (uint8 operands, i64 accumulators).
+//!
+//! Bit-exact mirror of the python reference (`python/compile/model.py`):
+//! every rounding rule is identical, asserted end-to-end by the golden
+//! vectors `make artifacts` exports. The approximate multipliers enter only
+//! in conv/dense — the ops the paper's MAC array executes.
+//!
+//! * [`graph`] — the node IR (shared with python's nets.py) + model struct
+//! * [`loader`] — .cvm binary parser
+//! * [`gemm`] — the approximate GEMM engines (identity / LUT / systolic)
+//! * [`engine`] — the graph executor
+
+pub mod engine;
+pub mod gemm;
+pub mod graph;
+pub mod loader;
+
+pub use engine::{Engine, ForwardOpts};
+pub use gemm::GemmKind;
+pub use graph::{Model, Node, Op, Tensor};

@@ -1,0 +1,243 @@
+//! Accuracy evaluation harness — regenerates **Tables 2-4** (accuracy loss
+//! per net × family × m, with and without V) and **Fig. 10** (accuracy-loss
+//! vs normalized-power Pareto space).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::approx::Family;
+use crate::coordinator::service::argmax;
+use crate::datasets::Dataset;
+use crate::hw::array_cost;
+use crate::nn::{loader, Engine, ForwardOpts};
+use crate::util::threadpool::par_map;
+
+/// The six nets and two datasets of the evaluation (§5.2).
+pub const NETS: [&str; 6] =
+    ["mininet", "vggnet11", "resnet8", "resnet14", "inceptionnet", "shufflenet"];
+pub const DATASETS: [&str; 2] = ["synth10", "synth100"];
+
+/// Accuracy of one configuration over the first `n` test images.
+pub fn evaluate(
+    engine: &Engine,
+    ds: &Dataset,
+    opts: &ForwardOpts,
+    n: usize,
+    workers: usize,
+) -> Result<f64> {
+    let n = n.min(ds.n);
+    let correct: usize = par_map(n, workers, |i| {
+        let img = ds.image(i);
+        let logits = engine.forward(&img, opts).expect("forward");
+        (argmax(&logits) == ds.label(i)) as usize
+    })
+    .into_iter()
+    .sum();
+    Ok(correct as f64 / n as f64)
+}
+
+/// One Table 2-4 row cell: accuracy losses for a (net, ds, family, m).
+#[derive(Clone, Debug)]
+pub struct AccuracyCell {
+    pub net: String,
+    pub dataset: String,
+    pub family: Family,
+    pub m: u32,
+    pub exact_acc: f64,
+    pub ours_acc: f64,
+    pub raw_acc: f64,
+}
+
+impl AccuracyCell {
+    /// Accuracy loss (%) vs the exact design — the paper's "Ours" column.
+    pub fn ours_loss(&self) -> f64 {
+        100.0 * (self.exact_acc - self.ours_acc)
+    }
+
+    /// Accuracy loss (%) without the control variate — "w/o V".
+    pub fn raw_loss(&self) -> f64 {
+        100.0 * (self.exact_acc - self.raw_acc)
+    }
+}
+
+/// Evaluate one (net, dataset) across every m of `family`, with/without V.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_net(
+    artifacts: &Path,
+    net: &str,
+    dataset: &str,
+    family: Family,
+    n_images: usize,
+    workers: usize,
+    lut: bool,
+    log: &mut dyn FnMut(&str),
+) -> Result<Vec<AccuracyCell>> {
+    let model = loader::load_model(&artifacts.join(format!("models/{net}_{dataset}.cvm")))
+        .with_context(|| format!("{net}_{dataset}"))?;
+    let ds = Dataset::load(&artifacts.join(format!("data/{dataset}_test.cvd")))?;
+    let mut engine = Engine::new(model);
+    let exact = evaluate(&engine, &ds, &ForwardOpts::exact(), n_images, workers)?;
+    let mut cells = Vec::new();
+    for &m in family.paper_levels() {
+        // The LUT engine is ~4x faster than the m bit-plane GEMMs of the
+        // truncated identity path (EXPERIMENTS.md §Perf) — auto-select it.
+        if lut || family == Family::Truncated {
+            engine.prepare_lut(family, m);
+        }
+        let ours = evaluate(
+            &engine,
+            &ds,
+            &ForwardOpts::approx(family, m, true),
+            n_images,
+            workers,
+        )?;
+        let raw = evaluate(
+            &engine,
+            &ds,
+            &ForwardOpts::approx(family, m, false),
+            n_images,
+            workers,
+        )?;
+        let cell = AccuracyCell {
+            net: net.into(),
+            dataset: dataset.into(),
+            family,
+            m,
+            exact_acc: exact,
+            ours_acc: ours,
+            raw_acc: raw,
+        };
+        log(&format!(
+            "  {net}/{dataset} {} m={m}: exact {:.3} ours {:.3} (loss {:+.2}%) \
+             w/oV {:.3} (loss {:+.2}%)",
+            family.name(),
+            exact,
+            ours,
+            cell.ours_loss(),
+            raw,
+            cell.raw_loss()
+        ));
+        cells.push(cell);
+    }
+    Ok(cells)
+}
+
+/// One Fig.-10 Pareto point.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+    pub power_norm: f64,
+    pub acc_loss_pct: f64,
+}
+
+/// Accuracy-vs-power points for one (net, dataset) over every family × m ×
+/// {with V, without V} at array size `n_array` (Fig. 10 uses N=64).
+pub fn pareto_points(
+    artifacts: &Path,
+    net: &str,
+    dataset: &str,
+    n_images: usize,
+    n_array: u32,
+    workers: usize,
+) -> Result<Vec<ParetoPoint>> {
+    let model =
+        loader::load_model(&artifacts.join(format!("models/{net}_{dataset}.cvm")))?;
+    let ds = Dataset::load(&artifacts.join(format!("data/{dataset}_test.cvd")))?;
+    let mut engine = Engine::new(model);
+    let exact = evaluate(&engine, &ds, &ForwardOpts::exact(), n_images, workers)?;
+    let mut points = Vec::new();
+    for family in Family::APPROX {
+        for &m in family.paper_levels() {
+            if family == Family::Truncated {
+                engine.prepare_lut(family, m); // see sweep_net
+            }
+            let power = array_cost(family, m, n_array).power_norm;
+            for use_cv in [true, false] {
+                let acc = evaluate(
+                    &engine,
+                    &ds,
+                    &ForwardOpts::approx(family, m, use_cv),
+                    n_images,
+                    workers,
+                )?;
+                points.push(ParetoPoint {
+                    family,
+                    m,
+                    use_cv,
+                    power_norm: power,
+                    acc_loss_pct: 100.0 * (exact - acc),
+                });
+            }
+        }
+    }
+    Ok(points)
+}
+
+/// Non-dominated subset (min power, min loss).
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.power_norm < p.power_norm && q.acc_loss_pct <= p.acc_loss_pct)
+                || (q.power_norm <= p.power_norm && q.acc_loss_pct < p.acc_loss_pct)
+        });
+        if !dominated {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.power_norm.partial_cmp(&b.power_norm).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_dir;
+
+    #[test]
+    fn cv_beats_raw_on_aggressive_approximation() {
+        let art = artifacts_dir();
+        if !art.join("models").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut cells = Vec::new();
+        let mut log = |_: &str| {};
+        for family in [Family::Perforated, Family::Truncated] {
+            cells.extend(
+                sweep_net(&art, "mininet", "synth10", family, 60, 1, false, &mut log)
+                    .unwrap(),
+            );
+        }
+        // At the most aggressive m, ours must beat w/o V (the paper's claim).
+        for family in [Family::Perforated, Family::Truncated] {
+            let worst = cells
+                .iter()
+                .filter(|c| c.family == family)
+                .max_by_key(|c| c.m)
+                .unwrap();
+            assert!(
+                worst.ours_acc > worst.raw_acc,
+                "{}: ours {} !> raw {}",
+                family.name(),
+                worst.ours_acc,
+                worst.raw_acc
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated() {
+        let pts = vec![
+            ParetoPoint { family: Family::Perforated, m: 1, use_cv: true, power_norm: 0.7, acc_loss_pct: 1.0 },
+            ParetoPoint { family: Family::Perforated, m: 2, use_cv: true, power_norm: 0.6, acc_loss_pct: 2.0 },
+            ParetoPoint { family: Family::Recursive, m: 2, use_cv: true, power_norm: 0.8, acc_loss_pct: 3.0 }, // dominated
+        ];
+        let front = pareto_front(&pts);
+        assert_eq!(front.len(), 2);
+        assert!(front.iter().all(|p| p.family != Family::Recursive));
+    }
+}

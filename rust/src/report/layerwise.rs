@@ -1,0 +1,222 @@
+//! Layer-wise approximation extension (DESIGN.md §12).
+//!
+//! The paper's related work (ALWANN [9], reconfigurable multipliers [10])
+//! assigns *different* approximation levels per layer, but needs either a
+//! heterogeneous accelerator per DNN or reconfigurable circuits. In this
+//! design `m` is already a runtime input of every engine and of the AOT
+//! XLA artifacts, so mixed-m operation costs nothing: the coordinator just
+//! streams a different m with each layer's tile batch.
+//!
+//! This module implements the offline search: per-layer sensitivity
+//! analysis (approximate one layer at a time at the family's most
+//! aggressive m) and a greedy policy that raises m layer-by-layer, most
+//! error-tolerant layer first, while measured accuracy stays within the
+//! loss budget. The result frequently beats every uniform-m point: it
+//! reaches power savings between the uniform grid points at lower loss.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::accuracy::evaluate;
+use crate::approx::Family;
+use crate::datasets::Dataset;
+use crate::hw::array_cost;
+use crate::nn::{loader, Engine, ForwardOpts};
+
+/// Sensitivity of each MAC layer: accuracy when ONLY that layer runs
+/// approximate (at `m`, with V), everything else exact.
+pub struct LayerSensitivity {
+    pub layer: usize,
+    pub macs: u64,
+    pub acc: f64,
+}
+
+pub fn sensitivity(
+    engine: &Engine,
+    ds: &Dataset,
+    family: Family,
+    m: u32,
+    n_images: usize,
+) -> Result<Vec<LayerSensitivity>> {
+    let n_layers = engine.model.mac_layers();
+    let per_layer_macs: Vec<u64> = engine
+        .model
+        .nodes
+        .iter()
+        .filter_map(|n| {
+            let w = n.weights.as_ref()?;
+            let (h, ww, c) = n.out_shape;
+            Some((h * ww * c) as u64 * w.k_dim as u64)
+        })
+        .collect();
+    let mut out = Vec::new();
+    for layer in 0..n_layers {
+        let mut ms = vec![0u32; n_layers];
+        ms[layer] = m;
+        let opts = ForwardOpts::layerwise(family, ms, true);
+        let acc = evaluate(engine, ds, &opts, n_images, 1)?;
+        out.push(LayerSensitivity { layer, macs: per_layer_macs[layer], acc });
+    }
+    Ok(out)
+}
+
+/// Result of the greedy mixed-m search.
+pub struct Policy {
+    pub ms: Vec<u32>,
+    pub acc: f64,
+    pub exact_acc: f64,
+    /// MAC-weighted normalized power of the mixed design.
+    pub power_norm: f64,
+}
+
+/// Greedily raise each layer to `m_hi` (most tolerant first, by the
+/// sensitivity pass), keeping measured accuracy within `budget_pct` of
+/// exact. Layers that do not fit stay exact (m = 0).
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_policy(
+    engine: &Engine,
+    ds: &Dataset,
+    family: Family,
+    m_hi: u32,
+    budget_pct: f64,
+    n_images: usize,
+    n_array: u32,
+    sens: &[LayerSensitivity],
+) -> Result<Policy> {
+    let exact_acc = evaluate(engine, ds, &ForwardOpts::exact(), n_images, 1)?;
+    let floor = exact_acc - budget_pct / 100.0;
+    let mut order: Vec<usize> = (0..sens.len()).collect();
+    order.sort_by(|&a, &b| sens[b].acc.partial_cmp(&sens[a].acc).unwrap());
+    let mut ms = vec![0u32; sens.len()];
+    let mut acc = exact_acc;
+    for &layer in &order {
+        ms[layer] = m_hi;
+        let trial = evaluate(
+            engine,
+            ds,
+            &ForwardOpts::layerwise(family, ms.clone(), true),
+            n_images,
+            1,
+        )?;
+        if trial >= floor {
+            acc = trial;
+        } else {
+            ms[layer] = 0; // revert
+        }
+    }
+    // MAC-weighted power: approximate layers at array_cost(m_hi), exact at 1.
+    let p_hi = array_cost(family, m_hi, n_array).power_norm;
+    let total: u64 = sens.iter().map(|s| s.macs).sum();
+    let approx_macs: u64 =
+        sens.iter().filter(|s| ms[s.layer] != 0).map(|s| s.macs).sum();
+    let power_norm =
+        (approx_macs as f64 * p_hi + (total - approx_macs) as f64) / total as f64;
+    Ok(Policy { ms, acc, exact_acc, power_norm })
+}
+
+/// CLI driver: sensitivity table + greedy policy for one (net, family).
+pub fn run(
+    artifacts: &Path,
+    net: &str,
+    dataset: &str,
+    family: Family,
+    m_hi: u32,
+    budget_pct: f64,
+    n_images: usize,
+) -> Result<()> {
+    let model =
+        loader::load_model(&artifacts.join(format!("models/{net}_{dataset}.cvm")))?;
+    let ds = Dataset::load(&artifacts.join(format!("data/{dataset}_test.cvd")))?;
+    let mut engine = Engine::new(model);
+    if family == Family::Truncated {
+        engine.prepare_lut(family, m_hi);
+    }
+    println!(
+        "Layer-wise approximation: {net}/{dataset}, {} m={m_hi}, budget {budget_pct}% \
+         ({n_images} images)\n",
+        family.name()
+    );
+    let sens = sensitivity(&engine, &ds, family, m_hi, n_images)?;
+    println!("per-layer sensitivity (only that layer approximate, with V):");
+    for s in &sens {
+        println!(
+            "  layer {:>2} ({:>9} MACs): acc {:.3}",
+            s.layer, s.macs, s.acc
+        );
+    }
+    let pol = greedy_policy(&engine, &ds, family, m_hi, budget_pct, n_images, 64, &sens)?;
+    let n_on = pol.ms.iter().filter(|&&m| m != 0).count();
+    println!(
+        "\ngreedy mixed-m policy: {n_on}/{} layers at m={m_hi}, rest exact",
+        pol.ms.len()
+    );
+    println!("  ms = {:?}", pol.ms);
+    println!(
+        "  accuracy {:.3} (exact {:.3}, loss {:+.2}%)",
+        pol.acc,
+        pol.exact_acc,
+        100.0 * (pol.exact_acc - pol.acc)
+    );
+    println!(
+        "  MAC-weighted power {:.3}x vs uniform-m {:.3}x (uniform loss would be higher)",
+        pol.power_norm,
+        array_cost(family, m_hi, 64).power_norm
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts_dir;
+
+    #[test]
+    fn layerwise_single_layer_softer_than_uniform() {
+        let art = artifacts_dir();
+        if !art.join("models").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let model = loader::load_model(&art.join("models/mininet_synth10.cvm")).unwrap();
+        let n_layers = model.mac_layers();
+        let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
+        let engine = Engine::new(model);
+        let n = 80;
+        let uniform = evaluate(
+            &engine,
+            &ds,
+            &ForwardOpts::approx(Family::Perforated, 3, false),
+            n,
+            1,
+        )
+        .unwrap();
+        // only the first layer approximate: must be at least as accurate
+        let mut ms = vec![0u32; n_layers];
+        ms[0] = 3;
+        let mut single = ForwardOpts::layerwise(Family::Perforated, ms, false);
+        single.use_cv = false;
+        let single_acc = evaluate(&engine, &ds, &single, n, 1).unwrap();
+        assert!(
+            single_acc >= uniform,
+            "single-layer {single_acc} < uniform {uniform}"
+        );
+    }
+
+    #[test]
+    fn m_zero_layers_run_exact() {
+        let art = artifacts_dir();
+        if !art.join("models").is_dir() {
+            return;
+        }
+        let model = loader::load_model(&art.join("models/mininet_synth10.cvm")).unwrap();
+        let n_layers = model.mac_layers();
+        let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
+        let engine = Engine::new(model);
+        let all_zero = ForwardOpts::layerwise(Family::Perforated, vec![0; n_layers], true);
+        let img = ds.image(0);
+        let a = engine.forward(&img, &all_zero).unwrap();
+        let b = engine.forward(&img, &ForwardOpts::exact()).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,358 @@
+//! Report generation + the `cvapprox` CLI.
+//!
+//! Subcommands (one per paper artifact, see DESIGN.md §4):
+//!
+//! ```text
+//! cvapprox table1   [--samples 1000000]           # Table 1 error moments
+//! cvapprox figure7|figure8|figure9                # hw cost sweeps
+//! cvapprox table5                                 # MAC+ overhead
+//! cvapprox accuracy [--family F] [--nets a,b] [--datasets d] [--n 200]
+//!                   [--lut] [--json out.json]     # Tables 2-4
+//! cvapprox pareto   [--nets a,b] [--n 200]        # Fig 10
+//! cvapprox e2e      [--net resnet8] [--n 200]     # end-to-end service demo
+//! cvapprox info                                   # artifact inventory
+//! ```
+
+pub mod accuracy;
+pub mod layerwise;
+pub mod tables;
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::approx::stats::table1;
+use crate::approx::Family;
+use crate::coordinator::{InferenceService, ServiceConfig};
+use crate::datasets::Dataset;
+use crate::nn::{loader, Engine};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::threadpool::default_workers;
+use crate::{artifacts_dir, runtime};
+
+const KNOWN_OPTS: &[&str] = &[
+    "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
+    "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
+];
+
+pub fn cli_main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, KNOWN_OPTS)?;
+    match args.command.as_deref() {
+        Some("table1") => cmd_table1(&args),
+        Some("figure7") => cmd_figure(Family::Perforated, &args),
+        Some("figure8") => cmd_figure(Family::Truncated, &args),
+        Some("figure9") => cmd_figure(Family::Recursive, &args),
+        Some("table5") => {
+            println!("{}", tables::render_table5());
+            Ok(())
+        }
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("pareto") => cmd_pareto(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("layerwise") => cmd_layerwise(&args),
+        Some("figure4") => cmd_figure4(&args),
+        Some("info") => cmd_info(),
+        other => {
+            bail!(
+                "unknown or missing subcommand {:?}; try: table1 figure7 figure8 \
+                 figure9 table5 accuracy pareto e2e layerwise figure4 info",
+                other
+            )
+        }
+    }
+}
+
+fn write_json(args: &Args, j: &Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, j.render()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let n = args.get_usize("samples", 1_000_000)? as u64;
+    let t0 = Instant::now();
+    let rows = table1(n, 2024);
+    println!("{}", tables::render_table1(&rows));
+    println!("({n} samples per cell, {:.1}s)", t0.elapsed().as_secs_f64());
+    write_json(args, &tables::table1_json(&rows))
+}
+
+fn cmd_figure(family: Family, args: &Args) -> Result<()> {
+    println!("{}", tables::render_hw_figure(family));
+    write_json(args, &tables::hw_figure_json(family))
+}
+
+fn parse_families(args: &Args) -> Result<Vec<Family>> {
+    match args.get("family") {
+        None | Some("all") => Ok(Family::APPROX.to_vec()),
+        Some(name) => {
+            let f = Family::from_name(name)
+                .with_context(|| format!("unknown family {name}"))?;
+            Ok(vec![f])
+        }
+    }
+}
+
+fn parse_list<'a>(args: &'a Args, key: &str, default: &[&'a str]) -> Vec<String> {
+    match args.get(key) {
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        None => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let art = artifacts_dir();
+    let families = parse_families(args)?;
+    let nets = parse_list(args, "nets", &accuracy::NETS);
+    let datasets = parse_list(args, "datasets", &accuracy::DATASETS);
+    let n = args.get_usize("n", 200)?;
+    let workers = args.get_usize("workers", default_workers())?;
+    let lut = args.flag("lut");
+    let t0 = Instant::now();
+    let mut all = Vec::new();
+    for family in &families {
+        let mut cells = Vec::new();
+        for ds in &datasets {
+            for net in &nets {
+                let mut log = |s: &str| println!("{s}");
+                cells.extend(accuracy::sweep_net(
+                    &art, net, ds, *family, n, workers, lut, &mut log,
+                )?);
+            }
+        }
+        println!("\n{}", tables::render_accuracy_table(*family, &cells));
+        all.extend(cells);
+    }
+    println!("({n} test images per cell, {:.1}s)", t0.elapsed().as_secs_f64());
+    write_json(args, &tables::accuracy_json(&all))
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let art = artifacts_dir();
+    let nets = parse_list(args, "nets", &["resnet8", "shufflenet", "vggnet11"]);
+    let n = args.get_usize("n", 200)?;
+    let n_array = args.get_usize("array", 64)? as u32;
+    let workers = args.get_usize("workers", default_workers())?;
+    let max_loss: f64 = args.get_or("max-loss", "10").parse()?;
+    let mut all_json = Vec::new();
+    for net in &nets {
+        let pts = accuracy::pareto_points(&art, net, "synth100", n, n_array, workers)?;
+        let front = accuracy::pareto_front(&pts);
+        println!("{}", tables::render_pareto(net, &pts, &front, max_loss));
+        for p in &pts {
+            all_json.push(
+                Json::obj()
+                    .field("net", net.as_str())
+                    .field("family", p.family.name())
+                    .field("m", p.m as i64)
+                    .field("use_cv", p.use_cv)
+                    .field("power_norm", p.power_norm)
+                    .field("acc_loss_pct", p.acc_loss_pct),
+            );
+        }
+    }
+    write_json(args, &Json::Arr(all_json))
+}
+
+/// End-to-end demo: serve the test set through the coordinator on one
+/// configuration and print the service metrics.
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let art = artifacts_dir();
+    let net = args.get_or("net", "resnet8");
+    let ds_name = args.get_or("datasets", "synth10");
+    let family = Family::from_name(args.get_or("family", "perforated"))
+        .context("bad family")?;
+    let m: u32 = args.get_or("m", "2").parse()?;
+    let use_cv = args.get_or("cv", "true").parse::<bool>()?;
+    let n = args.get_usize("n", 200)?;
+    let batch = args.get_usize("batch", 8)?;
+    let n_array = args.get_usize("array", 64)? as u32;
+
+    let model = loader::load_model(&art.join(format!("models/{net}_{ds_name}.cvm")))?;
+    let macs = model.macs();
+    let ds = Dataset::load(&art.join(format!("data/{ds_name}_test.cvd")))?;
+    let mut engine = Engine::new(model);
+    match args.get_or("engine", "native") {
+        "native" => {}
+        "lut" => engine.prepare_lut(family, m),
+        "pjrt" => {
+            let variant = match args.get_or("variant", "fast") {
+                "pallas" => runtime::Variant::Pallas,
+                _ => runtime::Variant::Fast,
+            };
+            let rt = std::sync::Arc::new(runtime::TileGemm::new(&art)?);
+            println!("PJRT platform: {}", rt.platform());
+            engine.attach_pjrt(rt, variant);
+        }
+        other => bail!("unknown engine {other}"),
+    }
+    let cfg = ServiceConfig {
+        family,
+        m,
+        use_cv,
+        n_array,
+        batch_size: batch,
+        ..Default::default()
+    };
+    println!(
+        "e2e: {net}/{ds_name} {} m={m} cv={use_cv} engine={} n={n} ({} MACs/img)",
+        family.name(),
+        args.get_or("engine", "native"),
+        macs
+    );
+    let svc = InferenceService::start(engine, cfg);
+    let n = n.min(ds.n);
+    let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i))).collect();
+    let mut correct = 0usize;
+    for (i, p) in pending.into_iter().enumerate() {
+        let r = p.wait()?;
+        correct += (r.top1 == ds.label(i)) as usize;
+    }
+    let snap = svc.shutdown();
+    println!("  accuracy:        {:.3} ({correct}/{n})", correct as f64 / n as f64);
+    println!("  throughput:      {:.1} img/s", snap.throughput_rps);
+    println!(
+        "  latency:         mean {:.2} ms, ~p95 {:.2} ms (incl. queueing)",
+        snap.mean_latency.as_secs_f64() * 1e3,
+        snap.p95_latency.as_secs_f64() * 1e3
+    );
+    println!(
+        "  batches:         {} (avg {:.1} img/batch)",
+        snap.batches,
+        snap.completed as f64 / snap.batches.max(1) as f64
+    );
+    println!(
+        "  modeled energy:  {:.3}x exact array ({:.1}% saving) on {}x{} MACs",
+        snap.energy_vs_exact,
+        100.0 * (1.0 - snap.energy_vs_exact),
+        n_array,
+        n_array
+    );
+    Ok(())
+}
+
+/// Fig. 4: weight distributions of trained filters — the "squeezed
+/// dispersion" premise behind C = E[W] (eq. 21). Prints an ASCII histogram
+/// of the uint8 weights of a few filters plus the per-filter coefficient of
+/// variation summary.
+fn cmd_figure4(args: &Args) -> Result<()> {
+    let art = artifacts_dir();
+    let net = args.get_or("net", "resnet8");
+    let ds = args.get_or("datasets", "synth10");
+    let model = loader::load_model(&art.join(format!("models/{net}_{ds}.cvm")))?;
+    println!("FIG 4 — weight distributions, {net}/{ds} (uint8 domain)\n");
+    let mut shown = 0;
+    let mut cv_sum = 0.0;
+    let mut cv_n = 0usize;
+    for (i, node) in model.nodes.iter().enumerate() {
+        let Some(w) = &node.weights else { continue };
+        // per-filter stats across the whole layer
+        for f in 0..(w.b_q.len()) {
+            let row = &w.w_q[f * w.k_dim..(f + 1) * w.k_dim];
+            let mean = row.iter().map(|&x| x as f64).sum::<f64>() / row.len() as f64;
+            let var = row.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+                / row.len() as f64;
+            if mean > 0.0 {
+                cv_sum += var.sqrt() / mean;
+                cv_n += 1;
+            }
+        }
+        if shown < 3 && w.k_dim >= 27 {
+            let row = &w.w_q[..w.k_dim];
+            let mut hist = [0u32; 16];
+            for &x in row {
+                hist[(x >> 4) as usize] += 1;
+            }
+            let peak = *hist.iter().max().unwrap() as f64;
+            println!("  node {i} filter 0 ({} weights):", w.k_dim);
+            for (b, &h) in hist.iter().enumerate() {
+                let bar = "#".repeat((h as f64 / peak * 40.0).round() as usize);
+                println!("    [{:>3}-{:>3}] {bar}", b * 16, b * 16 + 15);
+            }
+            shown += 1;
+        }
+    }
+    println!(
+        "\n  mean per-filter coefficient of variation sigma/mu = {:.2} \
+         (weights concentrate around E[W], which is what makes C = E[W] an \
+         effective control-variate coefficient — paper Fig. 4)",
+        cv_sum / cv_n as f64
+    );
+    Ok(())
+}
+
+/// Layer-wise mixed-m search (the ALWANN-style extension, DESIGN.md §12).
+fn cmd_layerwise(args: &Args) -> Result<()> {
+    let art = artifacts_dir();
+    let net = args.get_or("net", "resnet8");
+    let ds = args.get_or("datasets", "synth10");
+    let family = Family::from_name(args.get_or("family", "perforated"))
+        .context("bad family")?;
+    let m_hi: u32 = args.get_or("m", "3").parse()?;
+    let budget: f64 = args.get_or("budget", "1.0").parse()?;
+    let n = args.get_usize("n", 150)?;
+    layerwise::run(&art, net, ds, family, m_hi, budget, n)
+}
+
+fn cmd_info() -> Result<()> {
+    let art = artifacts_dir();
+    println!("artifacts: {}", art.display());
+    for sub in ["hlo", "models", "data", "golden"] {
+        let dir = art.join(sub);
+        let count = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        println!("  {sub:<8} {count} files");
+    }
+    let models = art.join("models");
+    if models.is_dir() {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(&models)?.filter_map(|e| e.ok()).collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            if let Ok(m) = loader::load_model(&e.path()) {
+                println!(
+                    "    {:<24} {:>3} nodes {:>2} MAC layers {:>9} params {:>10} MACs",
+                    m.name,
+                    m.nodes.len(),
+                    m.mac_layers(),
+                    m.params(),
+                    m.macs()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(vec!["bogus".into()]).is_err());
+        assert!(run(vec![]).is_err());
+    }
+
+    #[test]
+    fn table1_small_sample_runs() {
+        run(vec!["table1".into(), "--samples".into(), "2000".into()]).unwrap();
+    }
+
+    #[test]
+    fn hw_figures_run() {
+        for cmd in ["figure7", "figure8", "figure9", "table5"] {
+            run(vec![cmd.into()]).unwrap();
+        }
+    }
+}

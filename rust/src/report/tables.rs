@@ -1,0 +1,290 @@
+//! Paper-style text renderers for Table 1, Figs 7-9, Table 5 and the
+//! accuracy tables, plus JSON dumps for external plotting.
+
+use crate::approx::stats::{Dist, ErrorRow};
+use crate::approx::Family;
+use crate::hw::array::{array_cost, ArrayCost, PAPER_NS};
+use crate::util::json::Json;
+
+use super::accuracy::{AccuracyCell, ParetoPoint};
+
+/// Table 1: error μ/σ per multiplier/distribution.
+pub fn render_table1(rows: &[ErrorRow]) -> String {
+    let mut out = String::new();
+    out.push_str("TABLE 1 — Error analysis of the approximate multipliers\n");
+    for family in Family::APPROX {
+        out.push_str(&format!("\n  {} multiplier\n", family.name()));
+        out.push_str("    m   U(0,255)  mu      sigma   |  N(125,24^2) mu    sigma\n");
+        for &m in family.table1_levels() {
+            let u = rows
+                .iter()
+                .find(|r| r.family == family && r.m == m && r.dist == Dist::Uniform)
+                .unwrap();
+            let n = rows
+                .iter()
+                .find(|r| r.family == family && r.m == m && r.dist == Dist::Normal)
+                .unwrap();
+            out.push_str(&format!(
+                "    {:<3} {:>12.2} {:>9.2}  | {:>12.2} {:>9.2}\n",
+                m, u.mean, u.std, n.mean, n.std
+            ));
+        }
+    }
+    out
+}
+
+pub fn table1_json(rows: &[ErrorRow]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj()
+            .field("family", r.family.name())
+            .field("m", r.m as i64)
+            .field("dist", r.dist.name())
+            .field("mu", r.mean)
+            .field("sigma", r.std)
+    }))
+}
+
+/// Figs 7-9: normalized power/area for one family across m × N.
+pub fn render_hw_figure(family: Family) -> String {
+    let fig = match family {
+        Family::Perforated => "FIG 7",
+        Family::Truncated => "FIG 8",
+        Family::Recursive => "FIG 9",
+        Family::Exact => "FIG -",
+    };
+    let mut out = format!(
+        "{fig} — Normalized power/area, {} multipliers (1.0 = exact design)\n",
+        family.name()
+    );
+    out.push_str("    m    N    power   (reduction)    area   (reduction)\n");
+    for &m in family.paper_levels() {
+        for &n in &PAPER_NS {
+            let c = array_cost(family, m, n);
+            out.push_str(&format!(
+                "    {:<4} {:<4} {:.3}  ({:>5.1}%)       {:.3}  ({:>5.1}%)\n",
+                m,
+                n,
+                c.power_norm,
+                100.0 * (1.0 - c.power_norm),
+                c.area_norm,
+                100.0 * (1.0 - c.area_norm),
+            ));
+        }
+    }
+    out
+}
+
+pub fn hw_figure_json(family: Family) -> Json {
+    let mut items = Vec::new();
+    for &m in family.paper_levels() {
+        for &n in &PAPER_NS {
+            let c = array_cost(family, m, n);
+            items.push(
+                Json::obj()
+                    .field("family", family.name())
+                    .field("m", m as i64)
+                    .field("n", n as i64)
+                    .field("power_norm", c.power_norm)
+                    .field("area_norm", c.area_norm),
+            );
+        }
+    }
+    Json::Arr(items)
+}
+
+/// Table 5: MAC+ overhead percentages.
+pub fn render_table5() -> String {
+    let mut out = String::new();
+    out.push_str("TABLE 5 — MAC+ area/power overhead (% of approximate array total)\n");
+    for family in Family::APPROX {
+        out.push_str(&format!("\n  {} multiplier in MAC*\n", family.name()));
+        out.push_str("    m    16x16   32x32   48x48   64x64   (area% | power%)\n");
+        for &m in family.paper_levels() {
+            let cells: Vec<ArrayCost> =
+                PAPER_NS.iter().map(|&n| array_cost(family, m, n)).collect();
+            let area: Vec<String> =
+                cells.iter().map(|c| format!("{:.2}", c.mac_plus_area_pct)).collect();
+            let power: Vec<String> =
+                cells.iter().map(|c| format!("{:.2}", c.mac_plus_power_pct)).collect();
+            out.push_str(&format!(
+                "    {:<4} {}  |  {}\n",
+                m,
+                area.join("   "),
+                power.join("   ")
+            ));
+        }
+    }
+    out
+}
+
+/// Tables 2-4 layout: one table per family, rows = nets, cols = m levels.
+pub fn render_accuracy_table(family: Family, cells: &[AccuracyCell]) -> String {
+    let table = match family {
+        Family::Perforated => "TABLE 2",
+        Family::Truncated => "TABLE 3",
+        Family::Recursive => "TABLE 4",
+        Family::Exact => "TABLE -",
+    };
+    let levels = family.paper_levels();
+    let mut out = format!(
+        "{table} — Accuracy loss (%) with the {} multiplier (Ours = with V)\n",
+        family.name()
+    );
+    for ds in super::accuracy::DATASETS {
+        out.push_str(&format!("\n  {} dataset\n", ds));
+        out.push_str("    net            ");
+        for m in levels {
+            out.push_str(&format!("m={m}: Ours   w/o V   "));
+        }
+        out.push('\n');
+        let mut net_order: Vec<&str> = Vec::new();
+        for c in cells.iter().filter(|c| c.dataset == ds && c.family == family) {
+            if !net_order.contains(&c.net.as_str()) {
+                net_order.push(&c.net);
+            }
+        }
+        for net in &net_order {
+            out.push_str(&format!("    {:<14} ", net));
+            for &m in levels {
+                if let Some(c) = cells.iter().find(|c| {
+                    c.net == *net && c.dataset == ds && c.m == m && c.family == family
+                }) {
+                    out.push_str(&format!(
+                        "{:>+9.2} {:>+7.2}   ",
+                        c.ours_loss(),
+                        c.raw_loss()
+                    ));
+                } else {
+                    out.push_str("        -       -   ");
+                }
+            }
+            out.push('\n');
+        }
+        // averages
+        let avg = |cv: bool| -> Option<Vec<f64>> {
+            let mut v = Vec::new();
+            for &m in levels {
+                let xs: Vec<f64> = cells
+                    .iter()
+                    .filter(|c| c.dataset == ds && c.m == m && c.family == family)
+                    .map(|c| if cv { c.ours_loss() } else { c.raw_loss() })
+                    .collect();
+                if xs.is_empty() {
+                    return None;
+                }
+                v.push(xs.iter().sum::<f64>() / xs.len() as f64);
+            }
+            Some(v)
+        };
+        if let (Some(ours), Some(raw)) = (avg(true), avg(false)) {
+            out.push_str("    Average        ");
+            for i in 0..levels.len() {
+                out.push_str(&format!("{:>+9.2} {:>+7.2}   ", ours[i], raw[i]));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+pub fn accuracy_json(cells: &[AccuracyCell]) -> Json {
+    Json::arr(cells.iter().map(|c| {
+        Json::obj()
+            .field("net", c.net.as_str())
+            .field("dataset", c.dataset.as_str())
+            .field("family", c.family.name())
+            .field("m", c.m as i64)
+            .field("exact_acc", c.exact_acc)
+            .field("ours_acc", c.ours_acc)
+            .field("raw_acc", c.raw_acc)
+            .field("ours_loss_pct", c.ours_loss())
+            .field("raw_loss_pct", c.raw_loss())
+    }))
+}
+
+/// Fig 10: Pareto space rendering (points ≤ max_loss, front marked).
+pub fn render_pareto(
+    net: &str,
+    points: &[ParetoPoint],
+    front: &[ParetoPoint],
+    max_loss: f64,
+) -> String {
+    let mut out = format!(
+        "FIG 10 — Accuracy loss vs normalized power, {net} (synth100, N=64)\n"
+    );
+    out.push_str("    family       m   V?   power    loss%   pareto\n");
+    let mut sorted: Vec<&ParetoPoint> =
+        points.iter().filter(|p| p.acc_loss_pct <= max_loss).collect();
+    sorted.sort_by(|a, b| a.power_norm.partial_cmp(&b.power_norm).unwrap());
+    for p in sorted {
+        let on_front = front.iter().any(|f| {
+            f.family == p.family && f.m == p.m && f.use_cv == p.use_cv
+        });
+        out.push_str(&format!(
+            "    {:<12} {:<3} {:<4} {:.3}   {:>+7.2}  {}\n",
+            p.family.name(),
+            p.m,
+            if p.use_cv { "yes" } else { "no" },
+            p.power_norm,
+            p.acc_loss_pct,
+            if on_front { "*" } else { "" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_families() {
+        let rows = crate::approx::stats::table1(2_000, 42);
+        let s = render_table1(&rows);
+        for f in ["perforated", "recursive", "truncated"] {
+            assert!(s.contains(f), "{s}");
+        }
+        let j = table1_json(&rows).render();
+        assert!(j.contains("\"sigma\""));
+    }
+
+    #[test]
+    fn hw_figures_render() {
+        for f in Family::APPROX {
+            let s = render_hw_figure(f);
+            assert!(s.contains("power"));
+            assert!(s.lines().count() > 10);
+        }
+        assert!(render_table5().contains("MAC+"));
+    }
+
+    #[test]
+    fn accuracy_table_renders_with_averages() {
+        let cells = vec![
+            AccuracyCell {
+                net: "mininet".into(),
+                dataset: "synth10".into(),
+                family: Family::Perforated,
+                m: 1,
+                exact_acc: 0.8,
+                ours_acc: 0.79,
+                raw_acc: 0.5,
+            },
+            AccuracyCell {
+                net: "mininet".into(),
+                dataset: "synth10".into(),
+                family: Family::Perforated,
+                m: 2,
+                exact_acc: 0.8,
+                ours_acc: 0.78,
+                raw_acc: 0.4,
+            },
+        ];
+        let s = render_accuracy_table(Family::Perforated, &cells);
+        assert!(s.contains("TABLE 2"));
+        assert!(s.contains("mininet"));
+        // Not all m present -> no average row for incomplete sets is fine;
+        // but m=1 and m=2 exist while m=3 is missing, so Average is absent.
+        assert!(!s.contains("Average") || s.contains("+"));
+    }
+}

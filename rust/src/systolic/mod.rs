@@ -1,0 +1,307 @@
+//! Cycle-level model of the paper's systolic MAC array (Figs 5-6).
+//!
+//! Weight-stationary N×N array + the extra MAC⁺ column:
+//!
+//! * each **MAC\*** in row f, column h holds weight W[f, h]; activation
+//!   columns stream in skewed; partial sums flow left→right through the
+//!   `sum` chain while the side `sumX` chain accumulates Σx(A) in parallel
+//!   (eqs. 33-35);
+//! * the **MAC⁺** column multiplies C_f·ΣX, adds C₀ and the bias LSBs via
+//!   the {sum, B[m-1:0]} concatenation (eqs. 36-37).
+//!
+//! The simulator is bit-exact (drives the same [`crate::approx`] multiplier
+//! models, via LUT, exactly like the RTL would) and counts **bit toggles**
+//! on every register, which feeds the dynamic-power side of the
+//! [`crate::hw`] cost model — our stand-in for the paper's Questasim
+//! back-annotated switching activity (DESIGN.md §2). Functional equivalence
+//! against the direct GEMM engine is asserted by tests, proving the
+//! *hardware* computes exactly what the fast engine computes.
+
+use crate::approx::{xvar, Family, MulLut};
+use crate::cv::{self, CvConstants};
+
+/// Per-run toggle/energy statistics from the simulator.
+#[derive(Clone, Debug, Default)]
+pub struct ToggleStats {
+    /// Total bit flips in product/sum registers.
+    pub datapath_toggles: u64,
+    /// Total bit flips in the sumX side chain.
+    pub sumx_toggles: u64,
+    /// Total bit flips in the MAC+ column registers.
+    pub mac_plus_toggles: u64,
+    /// MAC cycles simulated.
+    pub cycles: u64,
+}
+
+impl ToggleStats {
+    pub fn merge(&mut self, o: &ToggleStats) {
+        self.datapath_toggles += o.datapath_toggles;
+        self.sumx_toggles += o.sumx_toggles;
+        self.mac_plus_toggles += o.mac_plus_toggles;
+        self.cycles += o.cycles;
+    }
+
+    /// Mean toggles per cycle (activity proxy for the power model).
+    pub fn activity(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            (self.datapath_toggles + self.sumx_toggles + self.mac_plus_toggles) as f64
+                / self.cycles as f64
+        }
+    }
+}
+
+fn popcount_diff(a: i64, b: i64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// The systolic array configured for one (family, m) design point.
+pub struct SystolicArray {
+    pub family: Family,
+    pub m: u32,
+    /// Array dimension N (rows = filters, columns = reduction index).
+    pub n: usize,
+    lut: Option<MulLut>,
+}
+
+impl SystolicArray {
+    pub fn new(family: Family, m: u32, n: usize) -> SystolicArray {
+        let lut = if family == Family::Exact {
+            None
+        } else {
+            Some(MulLut::build(family, m))
+        };
+        SystolicArray { family, m, n, lut }
+    }
+
+    #[inline]
+    fn mul(&self, w: u8, a: u8) -> i64 {
+        match &self.lut {
+            Some(l) => l.mul(w, a) as i64,
+            None => (w as i64) * (a as i64),
+        }
+    }
+
+    /// Run one weight tile against a stream of activation columns.
+    ///
+    /// * `weights`: row-major [rows][k] (rows ≤ N filters, k ≤ N reduction)
+    /// * `act_cols`: each entry is one activation column `[k]` (a GEMM rhs
+    ///   column, streamed over k cycles in hardware; simulated per-column)
+    /// * `consts`: per-row CV constants (Q.4); `apply_cv` enables the MAC⁺
+    ///   column.
+    ///
+    /// Returns (outputs[col][row] accumulators, toggle stats). Outputs
+    /// exclude zero-point/bias handling — the engine layer owns those, same
+    /// as for the fast GEMM, so equivalence can be asserted directly.
+    pub fn run_tile(
+        &self,
+        weights: &[Vec<u8>],
+        act_cols: &[Vec<u8>],
+        consts: &[CvConstants],
+        apply_cv: bool,
+    ) -> (Vec<Vec<i64>>, ToggleStats) {
+        let rows = weights.len();
+        assert!(rows <= self.n, "more filter rows than array rows");
+        let mut stats = ToggleStats::default();
+        let mut outputs = Vec::with_capacity(act_cols.len());
+        // Register state carried cycle to cycle (for toggle counting).
+        let mut prod_reg = vec![0i64; rows];
+        let mut sum_reg = vec![0i64; rows];
+        let mut sumx_reg: i64 = 0;
+        let mut v_reg: i64 = 0;
+        for col in act_cols {
+            assert!(col.len() <= self.n, "reduction dim exceeds array width");
+            // One output column: each row's MAC chain accumulates over k.
+            // (Hardware skews this over k cycles; dataflow-equivalent.)
+            let mut out_col = vec![0i64; rows];
+            let mut sumx: i64 = 0;
+            for (kk, &a) in col.iter().enumerate() {
+                stats.cycles += 1;
+                for (f, w_row) in weights.iter().enumerate() {
+                    let p = self.mul(w_row[kk], a);
+                    let acc = out_col[f] + p;
+                    stats.datapath_toggles += (popcount_diff(prod_reg[f], p)
+                        + popcount_diff(sum_reg[f], acc))
+                        as u64;
+                    prod_reg[f] = p;
+                    sum_reg[f] = acc;
+                    out_col[f] = acc;
+                }
+                let x = xvar(self.family, a, self.m) as i64;
+                let nx = sumx + x;
+                stats.sumx_toggles += popcount_diff(sumx_reg, nx) as u64;
+                sumx_reg = nx;
+                sumx = nx;
+            }
+            if apply_cv && self.family != Family::Exact {
+                for (f, c) in consts.iter().take(rows).enumerate() {
+                    let v = cv::v_term(c, sumx);
+                    stats.mac_plus_toggles += popcount_diff(v_reg, v) as u64;
+                    v_reg = v;
+                    out_col[f] += v;
+                }
+            }
+            outputs.push(out_col);
+        }
+        (outputs, stats)
+    }
+
+    /// Latency in cycles to stream `n_cols` outputs through the array
+    /// (paper §4.4: fill + drain + one extra cycle for the MAC⁺ column).
+    pub fn latency_cycles(&self, k: usize, n_cols: usize) -> u64 {
+        let fill = self.n as u64; // skew fill
+        let stream = (k.max(1) as u64) * n_cols as u64;
+        let mac_plus = if self.family == Family::Exact { 0 } else { 1 };
+        fill + stream + mac_plus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::am;
+    use crate::util::rng::Rng;
+
+    fn direct_gemm(
+        family: Family,
+        m: u32,
+        w: &[Vec<u8>],
+        cols: &[Vec<u8>],
+        consts: &[CvConstants],
+        apply_cv: bool,
+    ) -> Vec<Vec<i64>> {
+        cols.iter()
+            .map(|col| {
+                let sumx = cv::sum_x(family, m, col);
+                w.iter()
+                    .enumerate()
+                    .map(|(f, wr)| {
+                        let acc: i64 = wr
+                            .iter()
+                            .zip(col)
+                            .map(|(&w, &a)| am(family, w, a, m) as i64)
+                            .sum();
+                        if apply_cv && family != Family::Exact {
+                            acc + cv::v_term(&consts[f], sumx)
+                        } else {
+                            acc
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn array_matches_direct_gemm_all_families() {
+        let mut rng = Rng::new(0xA11);
+        for family in Family::ALL {
+            let m = family.paper_levels()[family.paper_levels().len() / 2];
+            let arr = SystolicArray::new(family, m, 16);
+            let rows = 5;
+            let k = 12;
+            let w: Vec<Vec<u8>> =
+                (0..rows).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+            let cols: Vec<Vec<u8>> =
+                (0..7).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+            let consts: Vec<CvConstants> =
+                w.iter().map(|wr| cv::constants(family, m, wr, k)).collect();
+            for apply_cv in [false, true] {
+                let (got, _) = arr.run_tile(&w, &cols, &consts, apply_cv);
+                let want = direct_gemm(family, m, &w, &cols, &consts, apply_cv);
+                assert_eq!(got, want, "{} cv={apply_cv}", family.name());
+            }
+        }
+    }
+
+    #[test]
+    fn toggle_counts_scale_with_data_activity() {
+        let arr = SystolicArray::new(Family::Perforated, 2, 8);
+        let w = vec![vec![200u8; 8]; 4];
+        let hot: Vec<Vec<u8>> = (0..4)
+            .map(|i| (0..8).map(|j| if (i + j) % 2 == 0 { 255 } else { 0 }).collect())
+            .collect();
+        let cold = vec![vec![0u8; 8]; 4];
+        let c: Vec<CvConstants> =
+            w.iter().map(|wr| cv::constants(Family::Perforated, 2, wr, 8)).collect();
+        let (_, s_hot) = arr.run_tile(&w, &hot, &c, true);
+        let (_, s_cold) = arr.run_tile(&w, &cold, &c, true);
+        assert!(s_hot.datapath_toggles > s_cold.datapath_toggles * 2);
+        assert!(s_hot.activity() > 0.0);
+    }
+
+    #[test]
+    fn exact_array_has_no_sumx_or_v_activity() {
+        let arr = SystolicArray::new(Family::Exact, 0, 8);
+        let mut rng = Rng::new(2);
+        let w: Vec<Vec<u8>> =
+            (0..3).map(|_| (0..8).map(|_| rng.u8()).collect()).collect();
+        let cols: Vec<Vec<u8>> =
+            (0..5).map(|_| (0..8).map(|_| rng.u8()).collect()).collect();
+        let c = vec![CvConstants::default(); 3];
+        let (out, stats) = arr.run_tile(&w, &cols, &c, true);
+        assert_eq!(stats.sumx_toggles, 0);
+        assert_eq!(stats.mac_plus_toggles, 0);
+        // And it is the exact GEMM.
+        for (col, oc) in cols.iter().zip(&out) {
+            for (f, wr) in w.iter().enumerate() {
+                let want: i64 =
+                    wr.iter().zip(col).map(|(&w, &a)| (w as i64) * (a as i64)).sum();
+                assert_eq!(oc[f], want);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_includes_mac_plus_cycle() {
+        let exact = SystolicArray::new(Family::Exact, 0, 64);
+        let approx = SystolicArray::new(Family::Truncated, 6, 64);
+        assert_eq!(
+            approx.latency_cycles(64, 100),
+            exact.latency_cycles(64, 100) + 1
+        );
+    }
+
+    #[test]
+    fn approx_array_toggles_less_than_exact() {
+        // The paper's power win, observed directly in switching activity.
+        let mut rng = Rng::new(7);
+        let k = 16;
+        let w: Vec<Vec<u8>> =
+            (0..8).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        let cols: Vec<Vec<u8>> =
+            (0..32).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        let c = vec![CvConstants::default(); 8];
+        let exact = SystolicArray::new(Family::Exact, 0, 16);
+        let perf = SystolicArray::new(Family::Perforated, 3, 16);
+        let (_, se) = exact.run_tile(&w, &cols, &c, false);
+        let (_, sp) = perf.run_tile(&w, &cols, &c, false);
+        assert!(
+            sp.datapath_toggles < se.datapath_toggles,
+            "{} !< {}",
+            sp.datapath_toggles,
+            se.datapath_toggles
+        );
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = ToggleStats {
+            datapath_toggles: 1,
+            sumx_toggles: 2,
+            mac_plus_toggles: 3,
+            cycles: 4,
+        };
+        let b = ToggleStats {
+            datapath_toggles: 10,
+            sumx_toggles: 20,
+            mac_plus_toggles: 30,
+            cycles: 40,
+        };
+        a.merge(&b);
+        assert_eq!(a.datapath_toggles, 11);
+        assert_eq!(a.cycles, 44);
+        assert!(a.activity() > 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Micro-benchmark harness (no criterion offline).
+//!
+//! `Bencher::run` warms up, then samples the closure until a time budget is
+//! hit, reporting median/mean/p95 per-iteration times. Used by the
+//! `benches/*.rs` targets (`harness = false`) and the CLI perf commands.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional work units per iteration (e.g. MACs) for throughput lines.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Throughput in units/second if `units_per_iter` was set.
+    pub fn throughput(&self) -> f64 {
+        if self.units_per_iter > 0.0 && self.median_ns > 0.0 {
+            self.units_per_iter / (self.median_ns * 1e-9)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>10}  median {:>12}  p95 {:>12}",
+            self.name,
+            format!("{}x", self.samples),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+        );
+        if self.units_per_iter > 0.0 {
+            line.push_str(&format!("  {:>12}/s", fmt_count(self.throughput())));
+        }
+        line
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest budgets: the benches cover many configurations on one core.
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(700),
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(150),
+            max_samples: 50,
+        }
+    }
+
+    /// Benchmark `f`, which should perform one full iteration of the
+    /// operation under test. `units` is the per-iteration work (0 = n/a).
+    pub fn run(&self, name: &str, units: f64, mut f: impl FnMut()) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Sample.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget && samples_ns.len() < self.max_samples {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        if samples_ns.is_empty() {
+            samples_ns.push(0.0);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        BenchResult {
+            name: name.to_string(),
+            samples: n,
+            median_ns: samples_ns[n / 2],
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+            min_ns: samples_ns[0],
+            units_per_iter: units,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let r = b.run("spin", 1000.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.samples > 0);
+        assert!(r.median_ns >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_count(2_500_000.0), "2.50M");
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional subcommand. Unknown flags are errors so typos surface.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: one positional subcommand + `--key value|flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>, known: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if !known.contains(&key) {
+                    bail!("unknown option --{key} (known: {})", known.join(", "));
+                }
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.opts.insert(key.to_string(), v);
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                bail!("unexpected positional argument: {arg}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(
+            s.split_whitespace().map(String::from),
+            &["family", "n", "verbose", "out"],
+        )
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("accuracy --family perforated --n 100 --verbose").unwrap();
+        assert_eq!(a.command.as_deref(), Some("accuracy"));
+        assert_eq!(a.get("family"), Some("perforated"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("out"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(parse("run --bogus 1").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("table1").unwrap();
+        assert_eq!(a.get_or("family", "all"), "all");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+}

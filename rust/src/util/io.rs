@@ -1,0 +1,122 @@
+//! Little-endian binary reading for the .cvm / .cvd / .gv artifact formats
+//! (spec: python/compile/export.py docstring — keep in lockstep).
+
+use anyhow::{bail, Context, Result};
+
+/// Cursor over a byte buffer with typed little-endian reads.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated buffer: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn magic(&mut self, expect: &[u8; 4]) -> Result<()> {
+        let got = self.take(4)?;
+        if got != expect {
+            bail!("bad magic: expected {:?}, got {:?}", expect, got);
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        String::from_utf8(self.take(len)?.to_vec()).context("invalid utf8 string")
+    }
+
+    pub fn vec_u32(&mut self, n: usize) -> Result<Vec<u32>> {
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn vec_i32(&mut self, n: usize) -> Result<Vec<i32>> {
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    pub fn vec_u16(&mut self, n: usize) -> Result<Vec<u16>> {
+        (0..n).map(|_| self.u16()).collect()
+    }
+
+    pub fn vec_f64(&mut self, n: usize) -> Result<Vec<f64>> {
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"CVD1");
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        buf.extend_from_slice(&(-3i32).to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&2u16.to_le_bytes());
+        buf.extend_from_slice(b"hi");
+        let mut r = ByteReader::new(&buf);
+        r.magic(b"CVD1").unwrap();
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.i32().unwrap(), -3);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.string().unwrap(), "hi");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let buf = [1u8, 2];
+        let mut r = ByteReader::new(&buf);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn bad_magic_errors() {
+        let mut r = ByteReader::new(b"XXXX");
+        assert!(r.magic(b"CVM1").is_err());
+    }
+}

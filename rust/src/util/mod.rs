@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the offline vendor set has no tokio /
+//! clap / criterion / proptest / serde — these fill the gaps).
+
+pub mod bench;
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,72 @@
+//! Seeded property-testing helper (no proptest offline).
+//!
+//! `check` runs a property over `n` generated cases; on failure it reports
+//! the case index and seed so the exact input can be replayed. Shrinking is
+//! replaced by deterministic replay — good enough for the integer domains
+//! this crate works in (operands are u8, knobs are tiny enums).
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` cases drawn from `gen`; panic with the replay seed on
+/// the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    n: u64,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..n {
+        let mut rng = Rng::new(seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15)));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns `Result` with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    n: u64,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..n {
+        let mut rng = Rng::new(seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15)));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        check("true", 50, 1, |r| r.u8(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'even'")]
+    fn reports_failure() {
+        check("even", 50, 1, |r| r.u8(), |&x| x % 2 == 0);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("collect-a", 10, 9, |r| { let v = r.u8(); a.push(v); v }, |_| true);
+        check("collect-b", 10, 9, |r| { let v = r.u8(); b.push(v); v }, |_| true);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,85 @@
+//! Scoped worker pool over std threads (no tokio/rayon offline).
+//!
+//! The coordinator and the sweep harnesses fan work out over
+//! `available_parallelism` threads; `scope_chunks` is the core primitive:
+//! split an indexed range into chunks and run a closure per chunk.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (min 1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every i in 0..n across `workers` threads (work stealing via
+/// an atomic counter). `f` must be Sync; results are discarded.
+pub fn for_each_index<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f(i)` over 0..n in parallel, collecting results in index order.
+pub fn par_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    for_each_index(n, workers, |i| {
+        let v = f(i);
+        results.lock().unwrap().push((i, v));
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    pairs.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicU64::new(0);
+        for_each_index(1000, 4, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(64, 4, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        for_each_index(0, 4, |_| panic!("should not run"));
+    }
+}

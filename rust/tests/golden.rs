@@ -1,0 +1,118 @@
+//! Golden-vector integration tests: the rust engine must reproduce the
+//! python quantized reference **bit-exactly** (logits are dequantized from
+//! identical uint8 outputs, so equality is exact, not approximate).
+
+use cvapprox::artifacts_dir;
+use cvapprox::datasets::{Dataset, Golden};
+use cvapprox::nn::{loader, Engine, ForwardOpts, GemmKind};
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("golden").is_dir() && artifacts_dir().join("models").is_dir()
+}
+
+fn run_golden(g: &Golden, kind: GemmKind) -> Vec<f64> {
+    let art = artifacts_dir();
+    let model = loader::load_model(&art.join(format!("models/{}.cvm", g.model_name)))
+        .expect("model loads");
+    let ds_name = g.model_name.rsplit('_').next().unwrap();
+    let ds = Dataset::load(&art.join(format!("data/{ds_name}_test.cvd"))).unwrap();
+    let img = ds.image(g.img_index);
+    let mut engine = Engine::new(model);
+    let mut opts = ForwardOpts::approx(g.family, g.m, g.use_cv);
+    opts.kind = kind;
+    if kind == GemmKind::Lut {
+        engine.prepare_lut(g.family, g.m);
+    }
+    engine.forward(&img, &opts).expect("forward runs")
+}
+
+#[test]
+fn identity_engine_matches_python_reference_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
+    assert!(goldens.len() >= 36);
+    for g in &goldens {
+        let got = run_golden(g, GemmKind::Identity);
+        assert_eq!(
+            got.len(),
+            g.logits.len(),
+            "{} {:?} m={} cv={}",
+            g.model_name,
+            g.family,
+            g.m,
+            g.use_cv
+        );
+        for (i, (a, b)) in got.iter().zip(&g.logits).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "{} {:?} m={} cv={} img={} logit[{i}]: rust {a} vs python {b}",
+                g.model_name,
+                g.family,
+                g.m,
+                g.use_cv,
+                g.img_index
+            );
+        }
+    }
+}
+
+#[test]
+fn lut_engine_matches_python_reference_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
+    // LUT path on the approximate subset (exact family has no LUT).
+    for g in goldens.iter().filter(|g| g.family != cvapprox::approx::Family::Exact) {
+        let got = run_golden(g, GemmKind::Lut);
+        for (a, b) in got.iter().zip(&g.logits) {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "lut {} {:?} m={} cv={}: {a} vs {b}",
+                g.model_name,
+                g.family,
+                g.m,
+                g.use_cv
+            );
+        }
+    }
+}
+
+#[test]
+fn systolic_engine_matches_python_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // The cycle-level array on one golden per family (slower).
+    let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
+    let mut done = std::collections::BTreeSet::new();
+    for g in &goldens {
+        if g.model_name != "resnet8_synth10" || !done.insert((g.family.code(), g.use_cv)) {
+            continue;
+        }
+        let art = artifacts_dir();
+        let model =
+            loader::load_model(&art.join(format!("models/{}.cvm", g.model_name))).unwrap();
+        let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
+        let img = ds.image(g.img_index);
+        let mut engine = Engine::new(model);
+        engine.prepare_systolic(g.family, g.m, 64);
+        let opts = ForwardOpts::approx(g.family, g.m, g.use_cv);
+        let (logits, stats) = engine.forward_systolic(&img, &opts).unwrap();
+        for (a, b) in logits.iter().zip(&g.logits) {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "systolic {:?} m={} cv={}: {a} vs {b}",
+                g.family,
+                g.m,
+                g.use_cv
+            );
+        }
+        assert!(stats.cycles > 0);
+    }
+}
