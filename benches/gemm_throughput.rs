@@ -1,24 +1,77 @@
 //! Core hot-path bench: approximate GEMM throughput (MAC/s) across engines —
-//! native identity vs LUT vs the two PJRT artifact variants (fast / pallas).
-//! This is the measurement the §Perf optimization loop drives on.
+//! native identity (planned, blocked, multithreaded) vs LUT vs the two PJRT
+//! artifact variants (fast / pallas). This is the measurement the §Perf
+//! optimization loop drives on (EXPERIMENTS.md).
+//!
+//! Besides the stdout report it emits `BENCH_gemm_throughput.json` (in the
+//! working directory) so the perf trajectory is trackable across PRs:
+//! one record per configuration with GMAC/s, median ns and thread count.
+//!
+//! Env knobs: `CVAPPROX_THREADS` (worker count for the threaded rows),
+//! `CVAPPROX_BENCH_QUICK=1` (short CI smoke budgets).
 
-use cvapprox::approx::Family;
-use cvapprox::nn::gemm::{am_acc_identity, am_acc_lut};
+use cvapprox::approx::{Family, MulLut};
+use cvapprox::nn::gemm::{
+    am_acc_identity, am_acc_lut, approx_gemm_planned, GemmCtx, GemmKind,
+};
+use cvapprox::nn::{LayerPlan, Scratch};
 use cvapprox::runtime::{TileGemm, Variant, TK, TM, TN};
-use cvapprox::approx::MulLut;
-use cvapprox::util::bench::Bencher;
+use cvapprox::util::bench::{BenchResult, Bencher};
+use cvapprox::util::json::Json;
 use cvapprox::util::rng::Rng;
+use cvapprox::util::threadpool::configured_workers;
+
+struct Record {
+    result: BenchResult,
+    engine: String,
+    family: &'static str,
+    m: u32,
+    /// Requested worker count.
+    threads: usize,
+    /// What the row-block fan-out can actually use: the kernel splits
+    /// 4-row blocks, so a 48-row panel saturates at 12 workers. Recorded
+    /// separately so scaling curves flattening at the block limit are
+    /// visible in the trajectory data.
+    threads_effective: usize,
+}
+
+fn push(
+    records: &mut Vec<Record>,
+    r: BenchResult,
+    engine: &str,
+    family: &'static str,
+    m: u32,
+    threads: usize,
+    m_rows: usize,
+) {
+    println!("{}", r.report());
+    let threads_effective = threads.max(1).min((m_rows + 3) / 4);
+    records.push(Record {
+        result: r,
+        engine: engine.to_string(),
+        family,
+        m,
+        threads,
+        threads_effective,
+    });
+}
 
 fn main() {
     println!("== bench: gemm_throughput ==");
-    let b = Bencher::default();
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let workers = configured_workers();
     let mut rng = Rng::new(0x6E);
+    let mut records: Vec<Record> = Vec::new();
     // Layer-realistic GEMM: 48 filters, K=288 (3x3x32), N=256 positions.
     let (m_rows, k, n) = (48usize, 288usize, 256usize);
     let macs = (m_rows * k * n) as f64;
     let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
     let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+    println!("(shape {m_rows}x{k}x{n}, CVAPPROX_THREADS={workers})");
 
+    // Identity engine through the public wrapper (plan built per call, the
+    // worst case) at the configured thread count.
     for family in Family::ALL {
         let m = *family.paper_levels().last().unwrap();
         let r = b.run(
@@ -28,8 +81,37 @@ fn main() {
                 std::hint::black_box(am_acc_identity(family, m, &w, &a, m_rows, k, n));
             },
         );
-        println!("{}", r.report());
+        push(&mut records, r, "identity", family.name(), m, workers, m_rows);
     }
+
+    // Planned + scratch-reusing path (what Engine::forward runs in steady
+    // state) across thread counts — the perf-trajectory rows.
+    let bias = vec![0i32; m_rows];
+    let mut threads_list = vec![1usize, 2, 4];
+    if !threads_list.contains(&workers) {
+        threads_list.push(workers);
+    }
+    for family in Family::ALL {
+        let m = *family.paper_levels().last().unwrap();
+        let ctx = GemmCtx { family, m, use_cv: true, zp_w: 9, zp_a: 101 };
+        let plan = LayerPlan::build(family, m, &w, m_rows, k);
+        let mut scratch = Scratch::new();
+        for &t in &threads_list {
+            let r = b.run(
+                &format!("planned  {} m={m} t{t} {}x{}x{}", family.name(), m_rows, k, n),
+                macs,
+                || {
+                    approx_gemm_planned(
+                        GemmKind::Identity, &ctx, &plan, 0, None, &w, &a, m_rows, k, n,
+                        &bias, &mut scratch, t,
+                    );
+                    std::hint::black_box(scratch.acc.last().copied());
+                },
+            );
+            push(&mut records, r, "planned", family.name(), m, t, m_rows);
+        }
+    }
+
     for family in Family::APPROX {
         let m = *family.paper_levels().last().unwrap();
         let lut = MulLut::build(family, m);
@@ -40,10 +122,11 @@ fn main() {
                 std::hint::black_box(am_acc_lut(&lut, &w, &a, m_rows, k, n));
             },
         );
-        println!("{}", r.report());
+        push(&mut records, r, "lut", family.name(), m, workers, m_rows);
     }
 
-    // PJRT tile executions (one artifact tile per call).
+    // PJRT tile executions (one artifact tile per call). Skipped without the
+    // `pjrt` feature / HLO artifacts.
     match TileGemm::new(&cvapprox::artifacts_dir()) {
         Ok(rt) => {
             let tile_macs = (TM * TK * TN) as f64;
@@ -69,10 +152,44 @@ fn main() {
                             );
                         },
                     );
-                    println!("{}", r.report());
+                    let engine = format!("pjrt-{}", variant.name());
+                    push(&mut records, r, &engine, family.name(), m, 1, TM);
                 }
             }
         }
-        Err(e) => println!("(pjrt benches skipped: {e})"),
+        Err(e) => println!("(pjrt benches skipped: {e:#})"),
+    }
+
+    // Machine-readable trajectory dump.
+    let json = Json::obj()
+        .field("bench", "gemm_throughput")
+        .field("shape", Json::arr([m_rows, k, n]))
+        .field("threads_configured", workers)
+        .field("quick", quick)
+        .field(
+            "results",
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|rec| {
+                        Json::obj()
+                            .field("name", rec.result.name.as_str())
+                            .field("engine", rec.engine.as_str())
+                            .field("family", rec.family)
+                            .field("m", rec.m as i64)
+                            .field("threads", rec.threads)
+                            .field("threads_effective", rec.threads_effective)
+                            .field("median_ns", rec.result.median_ns)
+                            .field("p95_ns", rec.result.p95_ns)
+                            .field("samples", rec.result.samples)
+                            .field("gmacs", rec.result.throughput() / 1e9)
+                    })
+                    .collect(),
+            ),
+        );
+    let path = "BENCH_gemm_throughput.json";
+    match std::fs::write(path, json.render()) {
+        Ok(()) => println!("\nwrote {path} ({} records)", records.len()),
+        Err(e) => println!("\n(could not write {path}: {e})"),
     }
 }

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use super::metrics::{Metrics, MetricsSnapshot, PowerModel};
 use crate::approx::Family;
-use crate::nn::{Engine, ForwardOpts, Tensor};
+use crate::nn::{Engine, ForwardOpts, Scratch, Tensor};
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -154,6 +154,14 @@ fn worker_loop(
 ) {
     let opts = ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv);
     let macs = engine.model.macs();
+    // Warm the weight-side layer plans before serving so the first request
+    // does not pay the one-time build, and keep a single scratch arena for
+    // the worker's whole lifetime: plans survive across batches (the cache
+    // sits on the engine) and steady-state forwards allocate nothing.
+    engine.prepare_plans(cfg.family, cfg.m);
+    let mut scratch = Scratch::new();
+    let (panel, acc) = engine.model.max_gemm_footprint();
+    scratch.reserve(panel, acc);
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -175,7 +183,7 @@ fn worker_loop(
             let queue_wait = req.enqueued.elapsed();
             let t0 = Instant::now();
             let result = engine
-                .forward(&req.image, &opts)
+                .forward_with_scratch(&req.image, &opts, &mut scratch)
                 .map(|logits| {
                     let top1 = argmax(&logits);
                     Reply { logits, top1, latency: t0.elapsed() }

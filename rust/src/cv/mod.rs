@@ -70,6 +70,22 @@ pub fn constants(family: Family, m: u32, w: &[u8], k_valid: usize) -> CvConstant
     CvConstants { c_q4, c0_q4 }
 }
 
+/// Per-filter constants for a whole layer: row f of `w` is
+/// `w[f*k..(f+1)*k]`. This is the **plan-building** entry point — C/C₀ are
+/// functions of the static weights only, so callers cache the result per
+/// (layer, family, m) instead of recomputing inside every GEMM
+/// (see [`crate::nn::plan::LayerPlan`]).
+pub fn constants_for_rows(
+    family: Family,
+    m: u32,
+    w: &[u8],
+    m_rows: usize,
+    k: usize,
+) -> Vec<CvConstants> {
+    debug_assert_eq!(w.len(), m_rows * k);
+    (0..m_rows).map(|f| constants(family, m, &w[f * k..(f + 1) * k], k)).collect()
+}
+
 /// ΣX over an activation column.
 #[inline]
 pub fn sum_x(family: Family, m: u32, activations: &[u8]) -> i64 {
@@ -167,6 +183,20 @@ mod tests {
             let a = constants(family, 3, &w, 20);
             let b = constants(family, 3, &wp, 20);
             assert_eq!(a, b, "{}", family.name());
+        }
+    }
+
+    #[test]
+    fn constants_for_rows_matches_per_row() {
+        let mut rng = Rng::new(11);
+        let (m_rows, k) = (5, 18);
+        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+        for family in Family::APPROX {
+            let all = constants_for_rows(family, 3, &w, m_rows, k);
+            assert_eq!(all.len(), m_rows);
+            for f in 0..m_rows {
+                assert_eq!(all[f], constants(family, 3, &w[f * k..(f + 1) * k], k));
+            }
         }
     }
 

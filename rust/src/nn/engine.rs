@@ -11,12 +11,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::gemm::{approx_gemm, GemmCtx, GemmKind};
+use super::gemm::{approx_gemm_planned, GemmCtx, GemmKind};
 use super::graph::{Model, Node, Op, Tensor};
+use super::plan::{LayerPlan, PlanCache, Scratch};
 use crate::approx::{Family, MulLut};
 use crate::cv::{self, CvConstants};
 use crate::runtime::{TileGemm, Variant};
 use crate::systolic::{SystolicArray, ToggleStats};
+use crate::util::threadpool::configured_workers;
 
 /// Forward-pass configuration.
 #[derive(Clone, Debug)]
@@ -89,17 +91,21 @@ fn requantize(acc: i64, mult: f64, zp: i32) -> u8 {
     q.clamp(0.0, 255.0) as u8
 }
 
-/// The inference engine for one model. Holds per-(family, m) LUTs lazily.
+/// The inference engine for one model. Holds per-(family, m) LUTs lazily
+/// plus the [`PlanCache`] of per-layer weight-side precomputations: masked
+/// panels, Σw and CV constants are built at most once per (layer, family, m)
+/// and reused across every image (tested by `plan_built_once_across_forwards`).
 pub struct Engine {
     pub model: Model,
     lut: Option<MulLut>,
     systolic: Option<SystolicArray>,
     pjrt: Option<(Arc<TileGemm>, Variant)>,
+    plans: PlanCache,
 }
 
 impl Engine {
     pub fn new(model: Model) -> Engine {
-        Engine { model, lut: None, systolic: None, pjrt: None }
+        Engine { model, lut: None, systolic: None, pjrt: None, plans: PlanCache::new() }
     }
 
     /// Route MAC GEMMs through the PJRT runtime (the AOT XLA kernels).
@@ -119,9 +125,47 @@ impl Engine {
         self.systolic = Some(SystolicArray::new(family, m, n));
     }
 
+    /// Eagerly build the layer plans for a uniform (family, m) design point
+    /// (they are otherwise built lazily on the first forward). The
+    /// coordinator warms plans here so request latency never pays the
+    /// one-time cost.
+    pub fn prepare_plans(&self, family: Family, m: u32) {
+        for idx in self.model.mac_node_indices() {
+            let node = &self.model.nodes[idx];
+            let wrec = node.weights.as_ref().expect("mac node has weights");
+            let (fam_eff, m_eff) =
+                if m == 0 { (Family::Exact, 0) } else { (family, m) };
+            self.plans.get_or_build(idx, fam_eff, m_eff, || {
+                LayerPlan::build(fam_eff, m_eff, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+            });
+        }
+    }
+
+    /// How many layer plans have been built so far (a steady-state serving
+    /// loop must not grow this).
+    pub fn plan_builds(&self) -> usize {
+        self.plans.builds()
+    }
+
     /// Run one quantized image; returns dequantized logits.
+    ///
+    /// Allocates a fresh [`Scratch`] — batch/serving loops should hold one
+    /// scratch per worker and call [`Engine::forward_with_scratch`] instead.
     pub fn forward(&self, img: &Tensor, opts: &ForwardOpts) -> Result<Vec<f64>> {
-        let (logits, _) = self.forward_inner(img, opts, false)?;
+        let mut scratch = Scratch::new();
+        self.forward_with_scratch(img, opts, &mut scratch)
+    }
+
+    /// Run one quantized image reusing a caller-owned scratch arena; the
+    /// steady-state hot path (no per-GEMM heap allocations once the arena
+    /// has grown to the largest layer).
+    pub fn forward_with_scratch(
+        &self,
+        img: &Tensor,
+        opts: &ForwardOpts,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<f64>> {
+        let (logits, _) = self.forward_inner(img, opts, false, scratch)?;
         Ok(logits)
     }
 
@@ -135,7 +179,8 @@ impl Engine {
         if self.systolic.is_none() {
             bail!("call prepare_systolic first");
         }
-        self.forward_inner(img, opts, true)
+        let mut scratch = Scratch::new();
+        self.forward_inner(img, opts, true, &mut scratch)
     }
 
     fn forward_inner(
@@ -143,6 +188,7 @@ impl Engine {
         img: &Tensor,
         opts: &ForwardOpts,
         systolic: bool,
+        scratch: &mut Scratch,
     ) -> Result<(Vec<f64>, ToggleStats)> {
         let nodes = &self.model.nodes;
         let mut outs: Vec<Tensor> = Vec::with_capacity(nodes.len());
@@ -159,7 +205,7 @@ impl Engine {
                 }
                 Op::Conv | Op::Dense => {
                     let t = self.mac_layer(
-                        i, mac_idx, node, &outs, opts, systolic, &mut toggles,
+                        i, mac_idx, node, &outs, opts, systolic, &mut toggles, scratch,
                     )?;
                     mac_idx += 1;
                     t
@@ -214,6 +260,7 @@ impl Engine {
         opts: &ForwardOpts,
         systolic: bool,
         toggles: &mut ToggleStats,
+        scratch: &mut Scratch,
     ) -> Result<Tensor> {
         let wrec = node.weights.as_ref().expect("mac layer has weights");
         let x = &outs[node.inputs[0]];
@@ -228,15 +275,21 @@ impl Engine {
             zp_w: wrec.zp_w as i64,
             zp_a: zp_in as i64,
         };
+        // Fetch (or lazily build) the weight-side plan for this layer at the
+        // effective design point; subsequent images reuse it untouched.
+        let plan = self.plans.get_or_build(idx, ctx.family, ctx.m, || {
+            LayerPlan::build(ctx.family, ctx.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+        });
         if node.op == Op::Dense {
             let k = wrec.k_dim;
             let nout = node.cout;
             debug_assert_eq!(x.data.len(), k, "dense input size");
-            let acc = self.dispatch_gemm(
-                &ctx, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic, toggles,
+            self.dispatch_gemm(
+                &ctx, &plan, 0, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic,
+                toggles, scratch,
             );
             let mut data = Vec::with_capacity(nout);
-            for &a in acc.iter() {
+            for &a in scratch.acc.iter() {
                 let mut q = requantize(a, mult, zp_out);
                 if node.relu {
                     q = q.max(zp_out.clamp(0, 255) as u8);
@@ -253,18 +306,24 @@ impl Engine {
         let kdim = wrec.k_dim;
         let n_cols = oh * ow;
         let mut out = Tensor::new(oh, ow, cout);
-        let mut a_cols = vec![0u8; kdim * n_cols];
+        // The im2col buffer lives in the scratch arena; it is taken out for
+        // the duration of the layer so the GEMM can borrow scratch mutably.
+        let mut a_cols = std::mem::take(&mut scratch.a_cols);
+        a_cols.clear();
+        a_cols.resize(kdim * n_cols, 0);
         for gi in 0..g {
             im2col_group(x, node, gi * cpg_in, cpg_in, zp_in, &mut a_cols);
-            let w_g = &wrec.w_q[gi * cpg_out * kdim..(gi + 1) * cpg_out * kdim];
-            let b_g = &wrec.b_q[gi * cpg_out..(gi + 1) * cpg_out];
-            let acc = self.dispatch_gemm(
-                &ctx, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic, toggles,
+            let row0 = gi * cpg_out;
+            let w_g = &wrec.w_q[row0 * kdim..(row0 + cpg_out) * kdim];
+            let b_g = &wrec.b_q[row0..row0 + cpg_out];
+            self.dispatch_gemm(
+                &ctx, &plan, row0, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic,
+                toggles, scratch,
             );
             for f in 0..cpg_out {
                 let ch = gi * cpg_out + f;
                 for p in 0..n_cols {
-                    let mut q = requantize(acc[f * n_cols + p], mult, zp_out);
+                    let mut q = requantize(scratch.acc[f * n_cols + p], mult, zp_out);
                     if node.relu {
                         q = q.max(zp_out.clamp(0, 255) as u8);
                     }
@@ -272,14 +331,18 @@ impl Engine {
                 }
             }
         }
-        let _ = idx;
+        scratch.a_cols = a_cols;
         Ok(out)
     }
 
+    /// Route one GEMM to the configured backend, leaving the [m_rows × n]
+    /// i64 accumulator in `scratch.acc`.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_gemm(
         &self,
         ctx: &GemmCtx,
+        plan: &LayerPlan,
+        row0: usize,
         w: &[u8],
         a: &[u8],
         m_rows: usize,
@@ -288,16 +351,33 @@ impl Engine {
         bias: &[i32],
         systolic: bool,
         toggles: &mut ToggleStats,
-    ) -> Vec<i64> {
+        scratch: &mut Scratch,
+    ) {
         if systolic {
             if let Some(arr) = &self.systolic {
-                return systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
+                scratch.acc = systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
+                return;
             }
         }
         if let Some((rt, variant)) = &self.pjrt {
-            return pjrt_gemm(rt, *variant, ctx, w, a, m_rows, k, n, bias);
+            scratch.acc = pjrt_gemm(rt, *variant, ctx, w, a, m_rows, k, n, bias);
+            return;
         }
-        approx_gemm(ctx_kind(self, ctx), ctx, self.lut.as_ref(), w, a, m_rows, k, n, bias)
+        approx_gemm_planned(
+            ctx_kind(self, ctx),
+            ctx,
+            plan,
+            row0,
+            self.lut.as_ref(),
+            w,
+            a,
+            m_rows,
+            k,
+            n,
+            bias,
+            scratch,
+            configured_workers(),
+        );
     }
 }
 
@@ -557,6 +637,125 @@ fn shuffle(x: &Tensor, groups: usize) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::graph::Weights;
+    use crate::util::rng::Rng;
+
+    /// Tiny synthetic model: input(4,4,3) -> conv3x3(8, relu) -> dense(5).
+    /// Output scales are chosen so requantized values stay inside the u8
+    /// range (non-saturating) while exercising both MAC layer kinds.
+    fn toy_model() -> Model {
+        let mut rng = Rng::new(0xE2E);
+        let input = Node {
+            op: Op::Input,
+            relu: false,
+            inputs: vec![],
+            out_shape: (4, 4, 3),
+            out_scale: 1.0,
+            out_zp: 0,
+            cout: 0,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: None,
+        };
+        let conv = Node {
+            op: Op::Conv,
+            relu: true,
+            inputs: vec![0],
+            out_shape: (4, 4, 8),
+            out_scale: 4096.0,
+            out_zp: 0,
+            cout: 8,
+            ksize: 3,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            weights: Some(Weights {
+                w_q: (0..8 * 27).map(|_| rng.u8()).collect(),
+                k_dim: 27,
+                b_q: vec![0; 8],
+                s_w: 1.0,
+                zp_w: 7,
+            }),
+        };
+        let dense = Node {
+            op: Op::Dense,
+            relu: false,
+            inputs: vec![1],
+            out_shape: (1, 1, 5),
+            // mult = s_w * s_in / s_out = 4096 / 7e7 ≈ 5.9e-5: keeps the
+            // ~±1.6M dense accumulators inside the u8 range around zp=128.
+            out_scale: 7.0e7,
+            out_zp: 128,
+            cout: 5,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: Some(Weights {
+                w_q: (0..5 * 4 * 4 * 8).map(|_| rng.u8()).collect(),
+                k_dim: 4 * 4 * 8,
+                b_q: vec![0; 5],
+                s_w: 1.0,
+                zp_w: 3,
+            }),
+        };
+        Model { name: "toy".into(), n_classes: 5, nodes: vec![input, conv, dense] }
+    }
+
+    fn toy_image() -> Tensor {
+        let mut rng = Rng::new(0x1136);
+        Tensor::from_data(4, 4, 3, (0..4 * 4 * 3).map(|_| rng.u8()).collect())
+    }
+
+    #[test]
+    fn plan_built_once_across_forwards() {
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        assert_eq!(engine.plan_builds(), 0);
+        let first = engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "one plan per MAC layer");
+        let second = engine.forward(&img, &opts).unwrap();
+        let third = engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "steady state builds no plans");
+        assert_eq!(first, second);
+        assert_eq!(second, third);
+        // A different design point builds its own plans once.
+        let opts3 = ForwardOpts::approx(Family::Truncated, 6, true);
+        engine.forward(&img, &opts3).unwrap();
+        assert_eq!(engine.plan_builds(), 4);
+        engine.forward(&img, &opts3).unwrap();
+        assert_eq!(engine.plan_builds(), 4);
+    }
+
+    #[test]
+    fn prepare_plans_prewarms_the_cache() {
+        let engine = Engine::new(toy_model());
+        engine.prepare_plans(Family::Recursive, 3);
+        assert_eq!(engine.plan_builds(), 2);
+        engine
+            .forward(&toy_image(), &ForwardOpts::approx(Family::Recursive, 3, true))
+            .unwrap();
+        assert_eq!(engine.plan_builds(), 2, "forward reuses prewarmed plans");
+    }
+
+    #[test]
+    fn scratch_reuse_is_transparent() {
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let mut scratch = Scratch::new();
+        for family in [Family::Exact, Family::Perforated, Family::Truncated] {
+            let m = *family.paper_levels().last().unwrap();
+            let opts = ForwardOpts::approx(family, m, true);
+            let fresh = engine.forward(&img, &opts).unwrap();
+            let reused = engine.forward_with_scratch(&img, &opts, &mut scratch).unwrap();
+            let reused2 = engine.forward_with_scratch(&img, &opts, &mut scratch).unwrap();
+            assert_eq!(fresh, reused, "{}", family.name());
+            assert_eq!(fresh, reused2, "{}", family.name());
+        }
+    }
 
     #[test]
     fn round_half_away_matches_python() {

@@ -98,6 +98,36 @@ impl Model {
     pub fn mac_layers(&self) -> usize {
         self.nodes.iter().filter(|n| n.weights.is_some()).count()
     }
+
+    /// Node indices of the MAC layers in topological order — the key space
+    /// of the engine's [`crate::nn::plan::PlanCache`] (plan `i` of a
+    /// layerwise config belongs to node `mac_node_indices()[i]`).
+    pub fn mac_node_indices(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.weights.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Upper bound on the scratch-arena sizes any layer of this model needs:
+    /// (max k_dim × n_cols panel, max rows × n_cols accumulator). Lets
+    /// serving loops pre-grow a [`crate::nn::plan::Scratch`] so even the
+    /// first request allocates nothing on the GEMM path.
+    pub fn max_gemm_footprint(&self) -> (usize, usize) {
+        let mut panel = 0usize;
+        let mut acc = 0usize;
+        for n in &self.nodes {
+            let Some(w) = &n.weights else { continue };
+            let (oh, ow, _) = n.out_shape;
+            let n_cols = if n.op == Op::Dense { 1 } else { oh * ow };
+            panel = panel.max(w.k_dim * n_cols);
+            let rows_per_group = n.cout.max(1) / n.groups.max(1);
+            acc = acc.max(rows_per_group * n_cols);
+        }
+        (panel, acc)
+    }
 }
 
 /// A quantized activation tensor, HWC row-major.
@@ -190,5 +220,9 @@ mod tests {
         assert_eq!(m.macs(), 4 * 4 * 8 * 27);
         assert_eq!(m.mac_layers(), 1);
         assert_eq!(m.params(), (8 * 27 + 32) as u64);
+        assert_eq!(m.mac_node_indices(), vec![1]);
+        let (panel, acc) = m.max_gemm_footprint();
+        assert_eq!(panel, 27 * 16);
+        assert_eq!(acc, 8 * 16);
     }
 }

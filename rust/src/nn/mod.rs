@@ -8,13 +8,16 @@
 //! * [`graph`] — the node IR (shared with python's nets.py) + model struct
 //! * [`loader`] — .cvm binary parser
 //! * [`gemm`] — the approximate GEMM engines (identity / LUT / systolic)
+//! * [`plan`] — precomputed layer plans + the reusable scratch arena
 //! * [`engine`] — the graph executor
 
 pub mod engine;
 pub mod gemm;
 pub mod graph;
 pub mod loader;
+pub mod plan;
 
 pub use engine::{Engine, ForwardOpts};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
+pub use plan::{LayerPlan, Scratch};

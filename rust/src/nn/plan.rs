@@ -1,0 +1,301 @@
+//! Precomputed layer plans + reusable scratch for the GEMM hot path.
+//!
+//! Everything in [`LayerPlan`] is a pure function of the **static weights**
+//! of one MAC layer and the (family, m) design point:
+//!
+//! * the masked weight panels the identity expansion needs (recursive:
+//!   `w & (2^m−1)`; truncated: one panel per bit plane),
+//! * per-filter `Σw` for the zero-point epilogue,
+//! * per-filter control-variate constants C/C₀ (Q.4).
+//!
+//! The seed recomputed all of these inside `approx_gemm` on **every
+//! image**; with plans they are built at most once per (layer, family, m)
+//! and shared across the whole batch stream ([`PlanCache`]). [`Scratch`]
+//! complements the plans on the activation side: it owns every
+//! per-image buffer (im2col staging, widened/masked panels, bit planes,
+//! `Σa`/`Σx`, accumulators), so a steady-state `Engine::forward` performs
+//! no weight-side recomputation and no per-GEMM heap allocation once the
+//! buffers have grown to the largest layer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::approx::Family;
+use crate::cv::{self, CvConstants};
+
+/// Weight-side precomputation for one MAC layer at one (family, m) point.
+pub struct LayerPlan {
+    pub family: Family,
+    pub m: u32,
+    /// Total filter rows in the layer (across all conv groups).
+    pub rows: usize,
+    /// Reduction length per filter row.
+    pub k: usize,
+    /// Recursive family: `w & (2^m − 1)`, same layout as `w` (else empty).
+    w_low: Vec<u8>,
+    /// Truncated family: `m` bit-plane panels, plane `i` (at offset
+    /// `i * rows * k`) holds `w & (2^(m−i) − 1)` (else empty).
+    w_planes: Vec<u8>,
+    /// Per-row Σw for the zero-point epilogue.
+    pub sum_w: Vec<i64>,
+    /// Per-row control-variate constants (zeroes for the exact family).
+    pub consts: Vec<CvConstants>,
+}
+
+impl LayerPlan {
+    /// Build the plan for a full layer weight panel `w` ([rows × k]).
+    pub fn build(family: Family, m: u32, w: &[u8], rows: usize, k: usize) -> LayerPlan {
+        assert_eq!(w.len(), rows * k, "weight panel shape");
+        let approx = family != Family::Exact && m > 0;
+        let mask = if approx { ((1u32 << m) - 1) as u8 } else { 0 };
+        let w_low = if approx && family == Family::Recursive {
+            w.iter().map(|&x| x & mask).collect()
+        } else {
+            Vec::new()
+        };
+        let w_planes = if approx && family == Family::Truncated {
+            let mut planes = Vec::with_capacity(m as usize * rows * k);
+            for i in 0..m {
+                let wm = ((1u32 << (m - i)) - 1) as u8;
+                planes.extend(w.iter().map(|&x| x & wm));
+            }
+            planes
+        } else {
+            Vec::new()
+        };
+        let sum_w =
+            (0..rows).map(|f| w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum()).collect();
+        let consts = cv::constants_for_rows(family, m, w, rows, k);
+        LayerPlan { family, m, rows, k, w_low, w_planes, sum_w, consts }
+    }
+
+    /// Masked weights (recursive family) for rows `row0..row0+nrows`.
+    pub fn w_low(&self, row0: usize, nrows: usize) -> &[u8] {
+        &self.w_low[row0 * self.k..(row0 + nrows) * self.k]
+    }
+
+    /// Bit-plane panel `plane` (truncated family) for rows `row0..row0+nrows`.
+    pub fn w_plane(&self, plane: usize, row0: usize, nrows: usize) -> &[u8] {
+        let base = plane * self.rows * self.k;
+        &self.w_planes[base + row0 * self.k..base + (row0 + nrows) * self.k]
+    }
+
+    /// Approximate heap footprint (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.w_low.len()
+            + self.w_planes.len()
+            + self.sum_w.len() * 8
+            + self.consts.len() * std::mem::size_of::<CvConstants>()
+    }
+}
+
+/// Engine-wide plan store, keyed by (node index, family, m).
+///
+/// Interior-mutable so `Engine::forward(&self)` can populate it lazily; the
+/// lock is held during builds, which keeps the build counter exact even when
+/// sweep harnesses drive one engine from many threads.
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<(usize, Family, u32), Arc<LayerPlan>>>,
+    builds: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch the plan for `(node, family, m)`, building it on first use.
+    pub fn get_or_build<F: FnOnce() -> LayerPlan>(
+        &self,
+        node: usize,
+        family: Family,
+        m: u32,
+        build: F,
+    ) -> Arc<LayerPlan> {
+        let mut map = self.map.lock().unwrap();
+        if let Some(p) = map.get(&(node, family, m)) {
+            return p.clone();
+        }
+        let plan = Arc::new(build());
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        map.insert((node, family, m), plan.clone());
+        plan
+    }
+
+    /// How many plans have been built since engine creation (tests assert
+    /// this stays flat across repeated forwards).
+    pub fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached plans.
+    pub fn cached(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+/// Zero out and size a buffer without shrinking its capacity.
+#[inline]
+pub(crate) fn reset<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    v.clear();
+    v.resize(len, T::default());
+}
+
+/// Reusable per-worker buffers for the forward pass. All fields grow to the
+/// largest layer once and are then reused allocation-free; one `Scratch` per
+/// thread (the coordinator worker keeps a single long-lived instance).
+#[derive(Default)]
+pub struct Scratch {
+    /// im2col staging buffer [kdim × n_cols] (engine layer).
+    pub a_cols: Vec<u8>,
+    /// Widened activation panel (u8 → i32) for the vectorized core.
+    pub(crate) a_wide: Vec<i32>,
+    /// Masked / bit-plane activation panel.
+    pub(crate) a_mask: Vec<i32>,
+    /// Per-bit-plane partial output (truncated family).
+    pub(crate) term: Vec<i32>,
+    /// i32 accumulator of the identity expansion.
+    pub(crate) acc32: Vec<i32>,
+    /// Σa per output column (zero-point epilogue).
+    pub(crate) sum_a: Vec<i64>,
+    /// Σx per output column (control variate).
+    pub(crate) sum_x: Vec<i64>,
+    /// Final i64 accumulator [m_rows × n] — the GEMM output the engine
+    /// requantizes from.
+    pub acc: Vec<i64>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Pre-grow the arena to a model's worst-case GEMM footprint
+    /// (`panel` = max k·n_cols activation panel, `acc` = max rows·n_cols
+    /// accumulator — see `Model::max_gemm_footprint`), so even the first
+    /// forward allocates nothing on the GEMM path.
+    pub fn reserve(&mut self, panel: usize, acc: usize) {
+        self.a_cols.reserve(panel);
+        self.a_wide.reserve(panel);
+        self.a_mask.reserve(panel);
+        self.term.reserve(acc);
+        self.acc32.reserve(acc);
+        self.acc.reserve(acc);
+        self.sum_a.reserve(acc);
+        self.sum_x.reserve(acc);
+    }
+
+    /// Total capacity currently held (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.a_cols.capacity()
+            + 4 * (self.a_wide.capacity()
+                + self.a_mask.capacity()
+                + self.term.capacity()
+                + self.acc32.capacity())
+            + 8 * (self.sum_a.capacity() + self.sum_x.capacity() + self.acc.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_masks_match_definitions() {
+        let mut rng = Rng::new(0x9A);
+        let (rows, k) = (6, 20);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+
+        let rec = LayerPlan::build(Family::Recursive, 3, &w, rows, k);
+        for (i, &x) in w.iter().enumerate() {
+            assert_eq!(rec.w_low(0, rows)[i], x & 0b111);
+        }
+        assert!(rec.w_planes.is_empty());
+
+        let m = 4u32;
+        let tr = LayerPlan::build(Family::Truncated, m, &w, rows, k);
+        assert!(tr.w_low.is_empty());
+        for plane in 0..m as usize {
+            let wm = ((1u32 << (m as usize - plane)) - 1) as u8;
+            let p = tr.w_plane(plane, 0, rows);
+            for (i, &x) in w.iter().enumerate() {
+                assert_eq!(p[i], x & wm, "plane {plane} idx {i}");
+            }
+        }
+
+        let perf = LayerPlan::build(Family::Perforated, 2, &w, rows, k);
+        assert!(perf.w_low.is_empty() && perf.w_planes.is_empty());
+    }
+
+    #[test]
+    fn plan_sums_and_consts_match_direct() {
+        let mut rng = Rng::new(0x9B);
+        let (rows, k) = (4, 33);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+        let plan = LayerPlan::build(Family::Perforated, 2, &w, rows, k);
+        for f in 0..rows {
+            let want: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+            assert_eq!(plan.sum_w[f], want);
+            assert_eq!(
+                plan.consts[f],
+                crate::cv::constants(Family::Perforated, 2, &w[f * k..(f + 1) * k], k)
+            );
+        }
+    }
+
+    #[test]
+    fn row_slicing_addresses_group_panels() {
+        let mut rng = Rng::new(0x9C);
+        let (rows, k) = (8, 5);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+        let plan = LayerPlan::build(Family::Recursive, 2, &w, rows, k);
+        // group 1 of 2: rows 4..8
+        let g = plan.w_low(4, 4);
+        for i in 0..4 * k {
+            assert_eq!(g[i], w[4 * k + i] & 0b11);
+        }
+    }
+
+    #[test]
+    fn cache_builds_once_per_key() {
+        let cache = PlanCache::new();
+        let w = vec![7u8; 12];
+        for _ in 0..3 {
+            let p = cache.get_or_build(0, Family::Perforated, 2, || {
+                LayerPlan::build(Family::Perforated, 2, &w, 3, 4)
+            });
+            assert_eq!(p.rows, 3);
+        }
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.cached(), 1);
+        cache.get_or_build(0, Family::Perforated, 3, || {
+            LayerPlan::build(Family::Perforated, 3, &w, 3, 4)
+        });
+        assert_eq!(cache.builds(), 2);
+        assert_eq!(cache.cached(), 2);
+    }
+
+    #[test]
+    fn scratch_reset_grows_and_zeroes() {
+        let mut s = Scratch::new();
+        reset(&mut s.acc32, 16);
+        s.acc32.iter_mut().for_each(|x| *x = 7);
+        reset(&mut s.acc32, 8);
+        assert_eq!(s.acc32, vec![0; 8]);
+        reset(&mut s.acc32, 32);
+        assert!(s.acc32.iter().all(|&x| x == 0));
+        assert!(s.bytes() > 0);
+    }
+
+    #[test]
+    fn reserve_pregrows_without_resizing() {
+        let mut s = Scratch::new();
+        s.reserve(1000, 400);
+        assert!(s.a_wide.capacity() >= 1000);
+        assert!(s.acc.capacity() >= 400);
+        assert!(s.a_wide.is_empty(), "reserve must not change lengths");
+    }
+}

@@ -12,19 +12,22 @@
 //! [`TileGemm::am_acc`] tiles an arbitrary GEMM over the fixed shape with
 //! zero padding (exact: ε(w,0) = ε(0,a) = 0 and x(0) = 0 — asserted by the
 //! python property tests) and accumulates the partial outputs in i64.
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{bail, Context, Result};
-
-use crate::approx::Family;
+//!
+//! ## Feature gating
+//!
+//! The XLA dependency only exists behind the off-by-default **`pjrt`**
+//! feature. Without it this module still exports the same `TileGemm` API,
+//! but `TileGemm::new` returns an error — every caller (engine, CLI,
+//! benches, examples) already treats PJRT as optional, so the default build
+//! is fully functional on the native engines alone.
 
 /// Tile shape baked into the artifacts (keep in sync with kernels/gemm.py).
 pub const TM: usize = 64;
 pub const TK: usize = 64;
 pub const TN: usize = 256;
+
+/// True when this build can actually execute HLO (feature `pjrt`).
+pub const PJRT_COMPILED: bool = cfg!(feature = "pjrt");
 
 /// Which lowering variant to execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -52,226 +55,12 @@ pub struct TileOut {
     pub sum_w: Vec<i32>,  // [TM]
 }
 
-/// PJRT client + per-(family, variant) executable cache.
-pub struct TileGemm {
-    client: xla::PjRtClient,
-    hlo_dir: PathBuf,
-    cache: Mutex<HashMap<(Family, Variant), xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::TileGemm;
 
-// The PJRT CPU client/executables are driven behind &self; calls from the
-// coordinator are serialized per executable by the cache Mutex.
-unsafe impl Send for TileGemm {}
-unsafe impl Sync for TileGemm {}
-
-impl TileGemm {
-    /// Create from the artifacts directory (expects `hlo/gemm_*.hlo.txt`).
-    pub fn new(artifacts: &Path) -> Result<TileGemm> {
-        let hlo_dir = artifacts.join("hlo");
-        if !hlo_dir.is_dir() {
-            bail!(
-                "HLO artifact dir {} missing — run `make artifacts`",
-                hlo_dir.display()
-            );
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(TileGemm { client, hlo_dir, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (and cache) the executable for one (family, variant).
-    pub fn warmup(&self, family: Family, variant: Variant) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&(family, variant)) {
-            return Ok(());
-        }
-        let path = self
-            .hlo_dir
-            .join(format!("gemm_{}_{}.hlo.txt", family.name(), variant.name()));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        cache.insert((family, variant), exe);
-        Ok(())
-    }
-
-    /// Execute one padded tile. `w_tile` is [TM*TK], `a_tile` is [TK*TN].
-    pub fn run_tile(
-        &self,
-        family: Family,
-        variant: Variant,
-        m: u32,
-        w_tile: &[i32],
-        a_tile: &[i32],
-    ) -> Result<TileOut> {
-        assert_eq!(w_tile.len(), TM * TK);
-        assert_eq!(a_tile.len(), TK * TN);
-        self.warmup(family, variant)?;
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(&(family, variant)).unwrap();
-        let m_lit = xla::Literal::vec1(&[m as i32]);
-        let w_lit = xla::Literal::vec1(w_tile).reshape(&[TM as i64, TK as i64])?;
-        let a_lit = xla::Literal::vec1(a_tile).reshape(&[TK as i64, TN as i64])?;
-        let result = exe.execute::<xla::Literal>(&[m_lit, w_lit, a_lit])?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 4 {
-            bail!("expected 4 outputs, got {}", parts.len());
-        }
-        let mut it = parts.into_iter();
-        Ok(TileOut {
-            am_acc: it.next().unwrap().to_vec::<i32>()?,
-            sum_x: it.next().unwrap().to_vec::<i32>()?,
-            sum_a: it.next().unwrap().to_vec::<i32>()?,
-            sum_w: it.next().unwrap().to_vec::<i32>()?,
-        })
-    }
-
-    /// Full AM-accumulation GEMM over arbitrary shapes by tiling + padding.
-    ///
-    /// Returns (am_acc [m_rows*n], sum_x [n]) in i64 — the same quantities
-    /// the native engines produce, so the caller's epilogue is shared.
-    #[allow(clippy::too_many_arguments)]
-    pub fn am_acc(
-        &self,
-        family: Family,
-        variant: Variant,
-        m: u32,
-        w: &[u8],
-        a: &[u8],
-        m_rows: usize,
-        k: usize,
-        n: usize,
-    ) -> Result<(Vec<i64>, Vec<i64>)> {
-        let mut am_acc = vec![0i64; m_rows * n];
-        let mut sum_x = vec![0i64; n];
-        let mut w_tile = vec![0i32; TM * TK];
-        let mut a_tile = vec![0i32; TK * TN];
-        for n0 in (0..n).step_by(TN) {
-            let nlen = TN.min(n - n0);
-            for k0 in (0..k).step_by(TK) {
-                let klen = TK.min(k - k0);
-                // pack A tile (zero-padded; padding is error-free)
-                a_tile.fill(0);
-                for kk in 0..klen {
-                    let src = &a[(k0 + kk) * n + n0..(k0 + kk) * n + n0 + nlen];
-                    for (j, &v) in src.iter().enumerate() {
-                        a_tile[kk * TN + j] = v as i32;
-                    }
-                }
-                for f0 in (0..m_rows).step_by(TM) {
-                    let flen = TM.min(m_rows - f0);
-                    w_tile.fill(0);
-                    for f in 0..flen {
-                        let src = &w[(f0 + f) * k + k0..(f0 + f) * k + k0 + klen];
-                        for (j, &v) in src.iter().enumerate() {
-                            w_tile[f * TK + j] = v as i32;
-                        }
-                    }
-                    let out = self.run_tile(family, variant, m, &w_tile, &a_tile)?;
-                    for f in 0..flen {
-                        let orow =
-                            &mut am_acc[(f0 + f) * n + n0..(f0 + f) * n + n0 + nlen];
-                        let trow = &out.am_acc[f * TN..f * TN + nlen];
-                        for (o, &t) in orow.iter_mut().zip(trow) {
-                            *o += t as i64;
-                        }
-                    }
-                    if f0 == 0 {
-                        for j in 0..nlen {
-                            sum_x[n0 + j] += out.sum_x[j] as i64;
-                        }
-                    }
-                }
-            }
-        }
-        Ok((am_acc, sum_x))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::artifacts_dir;
-    use crate::nn::gemm::am_acc_identity;
-    use crate::util::rng::Rng;
-
-    fn runtime() -> Option<TileGemm> {
-        let art = artifacts_dir();
-        if !art.join("hlo").is_dir() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        Some(TileGemm::new(&art).expect("PJRT client"))
-    }
-
-    #[test]
-    fn fast_variant_matches_native_identity_engine() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(0xF00D);
-        for family in Family::ALL {
-            let m = *family.paper_levels().last().unwrap();
-            // deliberately non-tile-aligned shapes
-            let (m_rows, k, n) = (10, 70, 33);
-            let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
-            let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-            let (got, sum_x) = rt
-                .am_acc(family, Variant::Fast, m, &w, &a, m_rows, k, n)
-                .expect("pjrt gemm");
-            let want = am_acc_identity(family, m, &w, &a, m_rows, k, n);
-            assert_eq!(got, want, "{} m={m}", family.name());
-            let want_sx: i64 = a
-                .chunks(n)
-                .map(|row| {
-                    row.iter()
-                        .map(|&v| crate::approx::xvar(family, v, m) as i64)
-                        .sum::<i64>()
-                })
-                .sum();
-            assert_eq!(sum_x.iter().sum::<i64>(), want_sx);
-        }
-    }
-
-    #[test]
-    fn pallas_variant_matches_fast_variant() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(0xBA11);
-        let (m_rows, k, n) = (TM, TK, TN); // one exact tile
-        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
-        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-        for family in [Family::Perforated, Family::Truncated] {
-            let m = family.paper_levels()[1];
-            let (fast, sxf) =
-                rt.am_acc(family, Variant::Fast, m, &w, &a, m_rows, k, n).unwrap();
-            let (pallas, sxp) =
-                rt.am_acc(family, Variant::Pallas, m, &w, &a, m_rows, k, n).unwrap();
-            assert_eq!(fast, pallas, "{} m={m}", family.name());
-            assert_eq!(sxf, sxp);
-        }
-    }
-
-    #[test]
-    fn one_executable_serves_all_m() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(1);
-        let (m_rows, k, n) = (4, 16, 8);
-        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
-        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-        for m in [1u32, 2, 3] {
-            let (got, _) = rt
-                .am_acc(Family::Perforated, Variant::Fast, m, &w, &a, m_rows, k, n)
-                .unwrap();
-            let want = am_acc_identity(Family::Perforated, m, &w, &a, m_rows, k, n);
-            assert_eq!(got, want, "m={m}");
-        }
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::TileGemm;

@@ -1,0 +1,71 @@
+//! No-op [`TileGemm`] used when the crate is built **without** the `pjrt`
+//! feature. Same API as the XLA-backed one; `new` fails with a clear
+//! message, so every PJRT-optional caller degrades gracefully.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{TileOut, Variant};
+use crate::approx::Family;
+
+const MSG: &str = "cvapprox was built without the `pjrt` feature — \
+                   rebuild with `cargo build --release --features pjrt` \
+                   (and the real xla crate, see rust/vendor/xla-stub) \
+                   to run the AOT XLA tile kernels";
+
+/// Placeholder runtime handle; construction always fails.
+pub struct TileGemm {
+    _private: (),
+}
+
+impl TileGemm {
+    pub fn new(_artifacts: &Path) -> Result<TileGemm> {
+        bail!("{MSG}")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+
+    pub fn warmup(&self, _family: Family, _variant: Variant) -> Result<()> {
+        bail!("{MSG}")
+    }
+
+    pub fn run_tile(
+        &self,
+        _family: Family,
+        _variant: Variant,
+        _m: u32,
+        _w_tile: &[i32],
+        _a_tile: &[i32],
+    ) -> Result<TileOut> {
+        bail!("{MSG}")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn am_acc(
+        &self,
+        _family: Family,
+        _variant: Variant,
+        _m: u32,
+        _w: &[u8],
+        _a: &[u8],
+        _m_rows: usize,
+        _k: usize,
+        _n: usize,
+    ) -> Result<(Vec<i64>, Vec<i64>)> {
+        bail!("{MSG}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_reports_missing_feature() {
+        let err = TileGemm::new(Path::new("/nonexistent")).err().unwrap();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+    }
+}

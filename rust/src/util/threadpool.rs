@@ -12,6 +12,25 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Worker count for the GEMM hot path: the `CVAPPROX_THREADS` environment
+/// variable when set to a positive integer, else [`default_workers`].
+/// Read once and cached — the engines consult this on every GEMM call.
+pub fn configured_workers() -> usize {
+    static CACHE: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHE.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let v = std::env::var("CVAPPROX_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(default_workers)
+        .clamp(1, 256);
+    CACHE.store(v, Ordering::Relaxed);
+    v
+}
+
 /// Run `f(i)` for every i in 0..n across `workers` threads (work stealing via
 /// an atomic counter). `f` must be Sync; results are discarded.
 pub fn for_each_index<F>(n: usize, workers: usize, f: F)
@@ -81,5 +100,13 @@ mod tests {
     #[test]
     fn zero_items_is_noop() {
         for_each_index(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn configured_workers_is_positive_and_stable() {
+        let a = configured_workers();
+        let b = configured_workers();
+        assert!(a >= 1);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate + perf smoke.
+#
+#   scripts/verify.sh          # build + tests + gemm_throughput smoke
+#   SKIP_BENCH=1 scripts/verify.sh   # tier-1 only
+#
+# The bench smoke runs with CVAPPROX_BENCH_QUICK=1 (short budgets) and
+# leaves BENCH_gemm_throughput.json in the repo root for perf tracking.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+    echo "== perf smoke: gemm_throughput (quick budgets) =="
+    CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench gemm_throughput
+    if [ -f BENCH_gemm_throughput.json ]; then
+        echo "== BENCH_gemm_throughput.json written =="
+    else
+        echo "error: bench did not write BENCH_gemm_throughput.json" >&2
+        exit 1
+    fi
+fi
+
+echo "== verify OK =="
