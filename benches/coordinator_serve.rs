@@ -28,12 +28,17 @@ fn main() {
             family: Family::Perforated,
             m: 2,
             use_cv: true,
+            // One worker isolates the batch-size effect; the serving bench
+            // (benches/serving.rs) sweeps the worker dimension.
+            workers: 1,
             batch_size: batch,
             batch_timeout: Duration::from_millis(1),
             ..Default::default()
         };
         let svc = InferenceService::start(engine, cfg);
-        let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i % ds.n))).collect();
+        let pending: Vec<_> = (0..n)
+            .map(|i| svc.submit(ds.image(i % ds.n)).expect("service accepting"))
+            .collect();
         for p in pending {
             p.wait().unwrap();
         }

@@ -1,0 +1,202 @@
+//! Serving-path bench: end-to-end images/s and latency through the
+//! multi-worker batching coordinator, swept across
+//! `{workers} × {batch_size} × {family}` — the measurement the ROADMAP's
+//! production-serving trajectory drives on.
+//!
+//! Uses a synthetic conv net (no artifacts needed, so CI always runs it)
+//! and emits `BENCH_serving.json` next to the stdout report: one record per
+//! configuration with images/s, mean/~p95 latency, batch statistics and
+//! per-worker occupancy. Acceptance signal across PRs: at a fixed batch
+//! size, `images_s` should increase with `workers`.
+//!
+//! Env knobs: `CVAPPROX_BENCH_QUICK=1` (short CI budgets);
+//! `CVAPPROX_THREADS` is pinned to 1 (unless already set) so the sweep
+//! measures worker-level scaling, not intra-GEMM threading.
+
+use std::time::Duration;
+
+use cvapprox::approx::Family;
+use cvapprox::coordinator::{InferenceService, ServiceConfig};
+use cvapprox::nn::graph::Weights;
+use cvapprox::nn::{Engine, Model, Node, Op, Tensor};
+use cvapprox::util::json::Json;
+use cvapprox::util::rng::Rng;
+
+/// Synthetic serving model (~2.2 MMAC/img): 16x16x3 input → conv3x3(24)
+/// → maxpool → conv3x3(48) → conv3x3(48) → gap → dense(10). Shapes are
+/// sized so a per-image GEMM is narrow (n = 64..256 columns) and batching
+/// visibly widens it; quantization scales only need to keep values finite.
+fn bench_model() -> Model {
+    let mut rng = Rng::new(0x5E12);
+    let conv = |input: usize,
+                in_c: usize,
+                out: (usize, usize, usize),
+                rng: &mut Rng| {
+        let kdim = 3 * 3 * in_c;
+        Node {
+            op: Op::Conv,
+            relu: true,
+            inputs: vec![input],
+            out_shape: out,
+            out_scale: 4096.0,
+            cout: out.2,
+            ksize: 3,
+            pad: 1,
+            weights: Some(Weights {
+                w_q: (0..out.2 * kdim).map(|_| rng.u8()).collect(),
+                k_dim: kdim,
+                b_q: vec![0; out.2],
+                s_w: 1.0,
+                zp_w: 7,
+            }),
+            ..Node::default()
+        }
+    };
+    let input = Node { out_shape: (16, 16, 3), ..Node::default() };
+    let c1 = conv(0, 3, (16, 16, 24), &mut rng);
+    let pool = Node {
+        op: Op::Maxpool,
+        inputs: vec![1],
+        out_shape: (8, 8, 24),
+        out_scale: 4096.0,
+        ..Node::default()
+    };
+    let c2 = conv(2, 24, (8, 8, 48), &mut rng);
+    let c3 = conv(3, 48, (8, 8, 48), &mut rng);
+    let gap = Node {
+        op: Op::Gap,
+        inputs: vec![4],
+        out_shape: (1, 1, 48),
+        out_scale: 4096.0,
+        ..Node::default()
+    };
+    let dense = Node {
+        op: Op::Dense,
+        inputs: vec![5],
+        out_shape: (1, 1, 10),
+        out_scale: 7.0e7,
+        out_zp: 128,
+        cout: 10,
+        weights: Some(Weights {
+            w_q: (0..10 * 48).map(|_| rng.u8()).collect(),
+            k_dim: 48,
+            b_q: vec![0; 10],
+            s_w: 1.0,
+            zp_w: 3,
+        }),
+        ..Node::default()
+    };
+    Model {
+        name: "serving-synth".into(),
+        n_classes: 10,
+        nodes: vec![input, c1, pool, c2, c3, gap, dense],
+    }
+}
+
+fn main() {
+    // Pin intra-GEMM threading to 1 (unless explicitly overridden) so the
+    // workers axis measures pool scaling, not nested parallelism. Must run
+    // before the first configured_workers() call caches the value.
+    if std::env::var("CVAPPROX_THREADS").is_err() {
+        std::env::set_var("CVAPPROX_THREADS", "1");
+    }
+    println!("== bench: serving ==");
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let gemm_threads = cvapprox::util::threadpool::configured_workers();
+    let n_images = if quick { 64 } else { 256 };
+    let macs = bench_model().macs();
+    println!(
+        "(synthetic model, {:.2} MMAC/img, {n_images} requests per config, \
+         CVAPPROX_THREADS={gemm_threads})",
+        macs as f64 / 1e6
+    );
+
+    let mut rng = Rng::new(0x1A6E);
+    let imgs: Vec<Tensor> = (0..n_images)
+        .map(|_| {
+            Tensor::from_data(16, 16, 3, (0..16 * 16 * 3).map(|_| rng.u8()).collect())
+        })
+        .collect();
+
+    let families: &[(Family, u32, bool)] = &[
+        (Family::Exact, 0, false),
+        (Family::Perforated, 2, true),
+        (Family::Truncated, 6, true),
+    ];
+    let workers_list: &[usize] = &[1, 2, 4];
+    let batch_list: &[usize] = &[1, 8];
+
+    println!(
+        "{:<14} {:>7} {:>6} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "family", "workers", "batch", "img/s", "mean ms", "~p95 ms", "batches", "avg b"
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &(family, m, use_cv) in families {
+        for &workers in workers_list {
+            for &batch_size in batch_list {
+                let cfg = ServiceConfig {
+                    family,
+                    m,
+                    use_cv,
+                    n_array: 64,
+                    workers,
+                    batch_size,
+                    batch_timeout: Duration::from_millis(1),
+                };
+                let svc = InferenceService::start(Engine::new(bench_model()), cfg);
+                let pending: Vec<_> = imgs
+                    .iter()
+                    .map(|im| svc.submit(im.clone()).expect("service accepting"))
+                    .collect();
+                for p in pending {
+                    p.wait().expect("reply");
+                }
+                let snap = svc.shutdown();
+                println!(
+                    "{:<14} {:>7} {:>6} {:>10.1} {:>10.2} {:>10.2} {:>9} {:>9.1}",
+                    family.name(),
+                    workers,
+                    batch_size,
+                    snap.throughput_rps,
+                    snap.mean_latency.as_secs_f64() * 1e3,
+                    snap.p95_latency.as_secs_f64() * 1e3,
+                    snap.batches,
+                    snap.mean_batch_size
+                );
+                records.push(
+                    Json::obj()
+                        .field("family", family.name())
+                        .field("m", m as i64)
+                        .field("use_cv", use_cv)
+                        .field("workers", workers)
+                        .field("batch_size", batch_size)
+                        .field("requests", n_images)
+                        .field("images_s", snap.throughput_rps)
+                        .field("mean_ms", snap.mean_latency.as_secs_f64() * 1e3)
+                        .field("p95_ms", snap.p95_latency.as_secs_f64() * 1e3)
+                        .field("mean_queue_ms", snap.mean_queue.as_secs_f64() * 1e3)
+                        .field("batches", snap.batches as i64)
+                        .field("mean_batch_size", snap.mean_batch_size)
+                        .field(
+                            "worker_occupancy",
+                            Json::arr(snap.worker_occupancy.clone()),
+                        )
+                        .field("energy_vs_exact", snap.energy_vs_exact),
+                );
+            }
+        }
+    }
+
+    let json = Json::obj()
+        .field("bench", "serving")
+        .field("model_mmacs", macs as f64 / 1e6)
+        .field("requests_per_config", n_images)
+        .field("quick", quick)
+        .field("gemm_threads", gemm_threads)
+        .field("results", Json::Arr(records));
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, json.render()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\n(could not write {path}: {e})"),
+    }
+}

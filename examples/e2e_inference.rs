@@ -70,7 +70,9 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let svc = InferenceService::start(engine, cfg);
-        let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i))).collect();
+        let pending = (0..n)
+            .map(|i| svc.submit(ds.image(i)))
+            .collect::<Result<Vec<_>>>()?;
         let mut correct = 0usize;
         for (i, p) in pending.into_iter().enumerate() {
             correct += (p.wait()?.top1 == ds.label(i)) as usize;

@@ -1,8 +1,9 @@
 //! Service metrics: latency/throughput counters + the modeled-energy bridge
-//! from the hw cost model to per-inference numbers.
+//! from the hw cost model to per-inference numbers, plus per-worker
+//! batch-size and occupancy accounting for the worker pool.
 
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::approx::Family;
 use crate::hw::array_cost;
@@ -41,6 +42,14 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Per-worker counters for the pool (indexed by worker id).
+#[derive(Clone, Debug, Default)]
+struct WorkerCounters {
+    batches: u64,
+    requests: u64,
+    busy_secs: f64,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     completed: u64,
@@ -50,8 +59,9 @@ struct Inner {
     macs: u64,
     energy_units: f64,
     energy_units_exact: f64,
-    started: Option<std::time::Instant>,
-    finished: Option<std::time::Instant>,
+    workers: Vec<WorkerCounters>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
 }
 
 /// Point-in-time copy for reporting.
@@ -66,11 +76,41 @@ pub struct MetricsSnapshot {
     pub total_macs: u64,
     /// Modeled energy normalized to running the same work on the exact array.
     pub energy_vs_exact: f64,
+    /// Mean requests fused per batch (completed work / batches run).
+    pub mean_batch_size: f64,
+    /// Batches executed by each pool worker (index = worker id).
+    pub worker_batches: Vec<u64>,
+    /// Requests served by each pool worker.
+    pub worker_requests: Vec<u64>,
+    /// Fraction of the service wall-clock each worker spent inside
+    /// `forward_batch` (busy / wall); 0 when no wall-clock has elapsed.
+    pub worker_occupancy: Vec<f64>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Anchor the throughput wall-clock at service start. Without this,
+    /// `record` anchors at the *first* completion, which made a session
+    /// with one completed request report `throughput_rps == 0.0`.
+    pub fn mark_started(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+    }
+
+    /// Declare the pool size up front so the per-worker vectors in the
+    /// snapshot cover *every* worker — idle workers report zeros instead of
+    /// being silently absent (the lazy grow in `record_batch` only reaches
+    /// the highest worker id that actually ran a batch).
+    pub fn init_workers(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.workers.len() < n {
+            g.workers.resize(n, WorkerCounters::default());
+        }
     }
 
     pub fn record(
@@ -87,15 +127,25 @@ impl Metrics {
         g.macs += macs;
         g.energy_units += power.energy_units(macs);
         g.energy_units_exact += macs as f64;
-        let now = std::time::Instant::now();
+        let now = Instant::now();
         if g.started.is_none() {
             g.started = Some(now);
         }
         g.finished = Some(now);
     }
 
-    pub fn record_batch(&self) {
-        self.inner.lock().unwrap().batches += 1;
+    /// Account one executed batch to pool worker `worker`: `requests` fused
+    /// into it and the time the worker spent running it.
+    pub fn record_batch(&self, worker: usize, requests: usize, busy: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        if g.workers.len() <= worker {
+            g.workers.resize(worker + 1, WorkerCounters::default());
+        }
+        let wc = &mut g.workers[worker];
+        wc.batches += 1;
+        wc.requests += requests as u64;
+        wc.busy_secs += busy.as_secs_f64();
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -120,6 +170,19 @@ impl Metrics {
             } else {
                 1.0
             },
+            mean_batch_size: if g.batches > 0 {
+                g.workers.iter().map(|w| w.requests).sum::<u64>() as f64
+                    / g.batches as f64
+            } else {
+                0.0
+            },
+            worker_batches: g.workers.iter().map(|w| w.batches).collect(),
+            worker_requests: g.workers.iter().map(|w| w.requests).collect(),
+            worker_occupancy: g
+                .workers
+                .iter()
+                .map(|w| if wall > 0.0 { w.busy_secs / wall } else { 0.0 })
+                .collect(),
         }
     }
 }
@@ -149,12 +212,61 @@ mod tests {
                 &pm,
             );
         }
-        m.record_batch();
+        m.record_batch(0, 10, Duration::from_micros(800));
         let s = m.snapshot();
         assert_eq!(s.completed, 10);
         assert_eq!(s.batches, 1);
         assert_eq!(s.total_macs, 10_000_000);
         assert!(s.mean_latency >= Duration::from_micros(100));
         assert!((s.energy_vs_exact - pm.power_norm).abs() < 1e-9);
+        assert_eq!(s.worker_batches, vec![1]);
+        assert_eq!(s.worker_requests, vec![10]);
+        assert!((s.mean_batch_size - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_request_reports_nonzero_throughput() {
+        // Regression: wall-clock used to span first..last record, so one
+        // completed request meant wall == 0 and throughput_rps == 0.
+        let m = Metrics::new();
+        m.mark_started();
+        std::thread::sleep(Duration::from_millis(2));
+        let pm = PowerModel::new(Family::Exact, 0, 64);
+        m.record(Duration::from_micros(50), Duration::ZERO, 1000, &pm);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1);
+        assert!(
+            s.throughput_rps > 0.0,
+            "single completed request must report nonzero throughput"
+        );
+        // And the rate is measured against service start, not the record
+        // instant: ≥2 ms wall means ≤500 rps here.
+        assert!(s.throughput_rps <= 500.0, "rps {}", s.throughput_rps);
+    }
+
+    #[test]
+    fn init_workers_reports_idle_workers_as_zeros() {
+        let m = Metrics::new();
+        m.init_workers(3);
+        m.record_batch(1, 2, Duration::from_micros(10));
+        let s = m.snapshot();
+        assert_eq!(s.worker_batches, vec![0, 1, 0]);
+        assert_eq!(s.worker_requests, vec![0, 2, 0]);
+        assert_eq!(s.worker_occupancy.len(), 3);
+    }
+
+    #[test]
+    fn per_worker_counters_accumulate_independently() {
+        let m = Metrics::new();
+        m.record_batch(1, 3, Duration::from_micros(30));
+        m.record_batch(1, 5, Duration::from_micros(50));
+        m.record_batch(3, 2, Duration::from_micros(20));
+        let s = m.snapshot();
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.worker_batches, vec![0, 2, 0, 1]);
+        assert_eq!(s.worker_requests, vec![0, 8, 0, 2]);
+        assert!((s.mean_batch_size - 10.0 / 3.0).abs() < 1e-12);
+        // No wall-clock elapsed (no record/mark_started): occupancy is 0.
+        assert!(s.worker_occupancy.iter().all(|&o| o == 0.0));
     }
 }

@@ -2,16 +2,18 @@
 //!
 //! The paper's contribution is the accelerator datapath (MAC\*/MAC⁺), so the
 //! coordinator is the *deployment* shell around it: request queue, dynamic
-//! batcher, worker loop, latency/throughput metrics, and the power/energy
-//! accounting that converts the [`crate::hw`] cost model + array occupancy
-//! into per-inference modeled energy (how the e2e example reports the
-//! paper's headline "45% power, <1% loss").
+//! batcher, a **worker pool** (`ServiceConfig::workers`) that fuses each
+//! drained batch into one wide GEMM per layer via
+//! `Engine::forward_batch_with_scratch`, latency/throughput/occupancy
+//! metrics, and the power/energy accounting that converts the [`crate::hw`]
+//! cost model + array occupancy into per-inference modeled energy (how the
+//! e2e example reports the paper's headline "45% power, <1% loss").
 //!
-//! * [`service`] — request queue + dynamic batcher + worker loop
-//! * [`metrics`] — latency/throughput/energy accounting
+//! * [`service`] — request queue + dynamic batcher + worker pool
+//! * [`metrics`] — latency/throughput/energy + per-worker accounting
 
 pub mod metrics;
 pub mod service;
 
 pub use metrics::{MetricsSnapshot, PowerModel};
-pub use service::{InferenceService, ServiceConfig};
+pub use service::{default_service_workers, InferenceService, ServiceConfig};

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::gemm::{approx_gemm_planned, GemmCtx, GemmKind};
 use super::graph::{Model, Node, Op, Tensor};
@@ -169,6 +169,249 @@ impl Engine {
         Ok(logits)
     }
 
+    /// Run a batch of images, fusing each MAC layer into **one wide GEMM**:
+    /// the im2col panels of the whole batch are laid side by side into a
+    /// [k × batch·oh·ow] panel and multiplied against the layer's prebuilt
+    /// weight-side [`LayerPlan`] in a single planned call, so masked panels,
+    /// Σw and CV constants are paid once per layer for the entire batch.
+    ///
+    /// Every column of the GEMM (and of the Σa/Σx/CV/zero-point epilogue) is
+    /// computed independently with the same integer arithmetic as the
+    /// per-image path, so the result is **bit-identical** to calling
+    /// [`Engine::forward`] on each image (property-tested across families,
+    /// engines and thread counts). Returns one logits vector per image.
+    ///
+    /// Allocates a fresh [`Scratch`]; serving workers hold one arena and
+    /// call [`Engine::forward_batch_with_scratch`].
+    pub fn forward_batch(
+        &self,
+        imgs: &[&Tensor],
+        opts: &ForwardOpts,
+    ) -> Result<Vec<Vec<f64>>> {
+        let mut scratch = Scratch::new();
+        self.forward_batch_with_scratch(imgs, opts, &mut scratch)
+    }
+
+    /// Batched forward reusing a caller-owned scratch arena (the serving hot
+    /// path — no per-GEMM heap allocations once the arena has grown to the
+    /// largest layer at this batch size).
+    pub fn forward_batch_with_scratch(
+        &self,
+        imgs: &[&Tensor],
+        opts: &ForwardOpts,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.forward_batch_with_threads(imgs, opts, scratch, configured_workers())
+    }
+
+    /// Batched forward with an explicit GEMM worker count. Tests sweep this
+    /// to assert bit-exactness across thread counts; production callers use
+    /// [`Engine::forward_batch_with_scratch`], which reads
+    /// `CVAPPROX_THREADS`.
+    pub fn forward_batch_with_threads(
+        &self,
+        imgs: &[&Tensor],
+        opts: &ForwardOpts,
+        scratch: &mut Scratch,
+        threads: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        if imgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let nodes = &self.model.nodes;
+        let mut outs: Vec<Vec<Tensor>> = Vec::with_capacity(nodes.len());
+        let mut mac_idx = 0usize;
+        for (i, node) in nodes.iter().enumerate() {
+            let ts: Vec<Tensor> = match node.op {
+                Op::Input => {
+                    let (h, w, c) = node.out_shape;
+                    for img in imgs {
+                        if (img.h, img.w, img.c) != (h, w, c) {
+                            bail!("input shape mismatch");
+                        }
+                    }
+                    imgs.iter().map(|&t| t.clone()).collect()
+                }
+                Op::Conv | Op::Dense => {
+                    let t = self.mac_layer_batch(
+                        i, mac_idx, node, &outs, opts, scratch, threads,
+                    )?;
+                    mac_idx += 1;
+                    t
+                }
+                Op::Maxpool => outs[node.inputs[0]].iter().map(maxpool2).collect(),
+                Op::Gap => outs[node.inputs[0]].iter().map(gap).collect(),
+                Op::Add => {
+                    let (s1, z1) = out_q(nodes, node.inputs[0]);
+                    let (s2, z2) = out_q(nodes, node.inputs[1]);
+                    outs[node.inputs[0]]
+                        .iter()
+                        .zip(&outs[node.inputs[1]])
+                        .map(|(a, b)| add(a, b, s1, z1, s2, z2, node))
+                        .collect()
+                }
+                Op::Concat => (0..imgs.len())
+                    .map(|b| {
+                        let parts: Vec<(&Tensor, f64, i32)> = node
+                            .inputs
+                            .iter()
+                            .map(|&j| {
+                                let (s, z) = out_q(nodes, j);
+                                (&outs[j][b], s, z)
+                            })
+                            .collect();
+                        concat(&parts, node)
+                    })
+                    .collect(),
+                Op::Shuffle => outs[node.inputs[0]]
+                    .iter()
+                    .map(|t| shuffle(t, node.groups))
+                    .collect(),
+            };
+            for t in &ts {
+                debug_assert_eq!(
+                    (t.h, t.w, t.c),
+                    node.out_shape,
+                    "node {i} {:?} shape mismatch",
+                    node.op
+                );
+            }
+            outs.push(ts);
+        }
+        let n = nodes.last().unwrap();
+        Ok(outs
+            .last()
+            .unwrap()
+            .iter()
+            .map(|t| {
+                t.data
+                    .iter()
+                    .map(|&q| (q as f64 - n.out_zp as f64) * n.out_scale as f64)
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// One MAC layer over the whole batch: a single planned GEMM per conv
+    /// group with `batch·oh·ow` output columns (dense: `batch` columns), the
+    /// weight side amortized across every image via the shared [`LayerPlan`].
+    #[allow(clippy::too_many_arguments)]
+    fn mac_layer_batch(
+        &self,
+        idx: usize,
+        mac_idx: usize,
+        node: &Node,
+        outs: &[Vec<Tensor>],
+        opts: &ForwardOpts,
+        scratch: &mut Scratch,
+        threads: usize,
+    ) -> Result<Vec<Tensor>> {
+        let wrec = node.weights.as_ref().expect("mac layer has weights");
+        let xs = &outs[node.inputs[0]];
+        let batch = xs.len();
+        let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
+        let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
+        let mult = wrec.s_w as f64 * s_in / s_out;
+        let m_eff = opts.m_for(mac_idx);
+        let ctx = GemmCtx {
+            family: if m_eff == 0 { Family::Exact } else { opts.family },
+            m: m_eff,
+            use_cv: opts.use_cv,
+            zp_w: wrec.zp_w as i64,
+            zp_a: zp_in as i64,
+        };
+        let plan = self.plans.get_or_build(idx, ctx.family, ctx.m, || {
+            LayerPlan::build(ctx.family, ctx.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+        });
+        // The batched path never routes through the systolic simulator
+        // (that is a per-image measurement mode), so toggles are discarded.
+        let mut toggles = ToggleStats::default();
+        let relu_floor = zp_out.clamp(0, 255) as u8;
+        if node.op == Op::Dense {
+            let k = wrec.k_dim;
+            let nout = node.cout;
+            let mut a_cols = std::mem::take(&mut scratch.a_cols);
+            a_cols.clear();
+            a_cols.resize(k * batch, 0);
+            for (b, x) in xs.iter().enumerate() {
+                debug_assert_eq!(x.data.len(), k, "dense input size");
+                for (kk, &v) in x.data.iter().enumerate() {
+                    a_cols[kk * batch + b] = v;
+                }
+            }
+            let gemm_status = self.dispatch_gemm(
+                &ctx, &plan, 0, &wrec.w_q, &a_cols, nout, k, batch, &wrec.b_q, false,
+                &mut toggles, scratch, threads,
+            );
+            // Return the arena before propagating any backend error, so a
+            // transient failure does not throw away the grown buffer.
+            scratch.a_cols = a_cols;
+            gemm_status?;
+            let mut res = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let mut data = Vec::with_capacity(nout);
+                for f in 0..nout {
+                    let mut q = requantize(scratch.acc[f * batch + b], mult, zp_out);
+                    if node.relu {
+                        q = q.max(relu_floor);
+                    }
+                    data.push(q);
+                }
+                res.push(Tensor::from_data(1, 1, nout, data));
+            }
+            return Ok(res);
+        }
+        // conv (possibly grouped): one [kdim × batch·oh·ow] panel per group.
+        let (oh, ow, cout) = node.out_shape;
+        let g = node.groups;
+        let cin = xs[0].c;
+        let (cpg_in, cpg_out) = (cin / g, cout / g);
+        let kdim = wrec.k_dim;
+        let n_cols = oh * ow;
+        let n_total = batch * n_cols;
+        let mut res: Vec<Tensor> = (0..batch).map(|_| Tensor::new(oh, ow, cout)).collect();
+        let mut a_cols = std::mem::take(&mut scratch.a_cols);
+        a_cols.clear();
+        a_cols.resize(kdim * n_total, 0);
+        let mut gemm_status = Ok(());
+        for gi in 0..g {
+            for (b, x) in xs.iter().enumerate() {
+                im2col_group(
+                    x, node, gi * cpg_in, cpg_in, zp_in, n_total, b * n_cols,
+                    &mut a_cols,
+                );
+            }
+            let row0 = gi * cpg_out;
+            let w_g = &wrec.w_q[row0 * kdim..(row0 + cpg_out) * kdim];
+            let b_g = &wrec.b_q[row0..row0 + cpg_out];
+            gemm_status = self.dispatch_gemm(
+                &ctx, &plan, row0, w_g, &a_cols, cpg_out, kdim, n_total, b_g, false,
+                &mut toggles, scratch, threads,
+            );
+            if gemm_status.is_err() {
+                break;
+            }
+            for f in 0..cpg_out {
+                let ch = gi * cpg_out + f;
+                for (b, out) in res.iter_mut().enumerate() {
+                    let base = f * n_total + b * n_cols;
+                    let arow = &scratch.acc[base..base + n_cols];
+                    for (p, &acc) in arow.iter().enumerate() {
+                        let mut q = requantize(acc, mult, zp_out);
+                        if node.relu {
+                            q = q.max(relu_floor);
+                        }
+                        out.data[p * cout + ch] = q;
+                    }
+                }
+            }
+        }
+        // Return the arena before propagating any backend error (see dense).
+        scratch.a_cols = a_cols;
+        gemm_status?;
+        Ok(res)
+    }
+
     /// Run one image through the systolic simulator (hardware-faithful),
     /// returning logits and toggle statistics.
     pub fn forward_systolic(
@@ -286,8 +529,8 @@ impl Engine {
             debug_assert_eq!(x.data.len(), k, "dense input size");
             self.dispatch_gemm(
                 &ctx, &plan, 0, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic,
-                toggles, scratch,
-            );
+                toggles, scratch, configured_workers(),
+            )?;
             let mut data = Vec::with_capacity(nout);
             for &a in scratch.acc.iter() {
                 let mut q = requantize(a, mult, zp_out);
@@ -311,15 +554,19 @@ impl Engine {
         let mut a_cols = std::mem::take(&mut scratch.a_cols);
         a_cols.clear();
         a_cols.resize(kdim * n_cols, 0);
+        let mut gemm_status = Ok(());
         for gi in 0..g {
-            im2col_group(x, node, gi * cpg_in, cpg_in, zp_in, &mut a_cols);
+            im2col_group(x, node, gi * cpg_in, cpg_in, zp_in, n_cols, 0, &mut a_cols);
             let row0 = gi * cpg_out;
             let w_g = &wrec.w_q[row0 * kdim..(row0 + cpg_out) * kdim];
             let b_g = &wrec.b_q[row0..row0 + cpg_out];
-            self.dispatch_gemm(
+            gemm_status = self.dispatch_gemm(
                 &ctx, &plan, row0, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic,
-                toggles, scratch,
+                toggles, scratch, configured_workers(),
             );
+            if gemm_status.is_err() {
+                break;
+            }
             for f in 0..cpg_out {
                 let ch = gi * cpg_out + f;
                 for p in 0..n_cols {
@@ -331,12 +578,17 @@ impl Engine {
                 }
             }
         }
+        // Return the arena before propagating any backend error, so a
+        // transient failure does not throw away the grown buffer.
         scratch.a_cols = a_cols;
+        gemm_status?;
         Ok(out)
     }
 
     /// Route one GEMM to the configured backend, leaving the [m_rows × n]
-    /// i64 accumulator in `scratch.acc`.
+    /// i64 accumulator in `scratch.acc`. A backend failure (PJRT execution
+    /// error) surfaces as `Err` so a serving worker can answer the request
+    /// instead of panicking.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_gemm(
         &self,
@@ -352,16 +604,18 @@ impl Engine {
         systolic: bool,
         toggles: &mut ToggleStats,
         scratch: &mut Scratch,
-    ) {
+        threads: usize,
+    ) -> Result<()> {
         if systolic {
             if let Some(arr) = &self.systolic {
                 scratch.acc = systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
-                return;
+                return Ok(());
             }
         }
         if let Some((rt, variant)) = &self.pjrt {
-            scratch.acc = pjrt_gemm(rt, *variant, ctx, w, a, m_rows, k, n, bias);
-            return;
+            scratch.acc =
+                pjrt_gemm(rt, *variant, ctx, plan, row0, w, a, m_rows, k, n, bias)?;
+            return Ok(());
         }
         approx_gemm_planned(
             ctx_kind(self, ctx),
@@ -376,34 +630,39 @@ impl Engine {
             n,
             bias,
             scratch,
-            configured_workers(),
+            threads,
         );
+        Ok(())
     }
 }
 
 /// Route one GEMM through the PJRT runtime; the CV + zero-point epilogue is
-/// applied here (shared semantics with the native engines).
+/// applied here (shared semantics with the native engines). Per-filter Σw
+/// and CV constants come from the prebuilt [`LayerPlan`] (`row0` selects the
+/// conv-group window) — nothing weight-side is recomputed per image.
 #[allow(clippy::too_many_arguments)]
 fn pjrt_gemm(
     rt: &TileGemm,
     variant: Variant,
     ctx: &GemmCtx,
+    plan: &LayerPlan,
+    row0: usize,
     w: &[u8],
     a: &[u8],
     m_rows: usize,
     k: usize,
     n: usize,
     bias: &[i32],
-) -> Vec<i64> {
+) -> Result<Vec<i64>> {
     let (mut acc, sum_x) = rt
         .am_acc(ctx.family, variant, ctx.m, w, a, m_rows, k, n)
-        .expect("pjrt gemm execution");
+        .context("pjrt gemm execution")?;
     if ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0 {
         for f in 0..m_rows {
-            let c = cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k);
+            let c = &plan.consts[row0 + f];
             let orow = &mut acc[f * n..(f + 1) * n];
             for (o, &sx) in orow.iter_mut().zip(&sum_x) {
-                *o += cv::v_term(&c, sx);
+                *o += cv::v_term(c, sx);
             }
         }
     }
@@ -416,14 +675,14 @@ fn pjrt_gemm(
     }
     let kzz = k as i64 * ctx.zp_w * ctx.zp_a;
     for f in 0..m_rows {
-        let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+        let sum_w = plan.sum_w[row0 + f];
         let b = bias[f] as i64;
         let orow = &mut acc[f * n..(f + 1) * n];
         for (o, &sa) in orow.iter_mut().zip(&sum_a) {
             *o += -ctx.zp_w * sa - ctx.zp_a * sum_w + kzz + b;
         }
     }
-    acc
+    Ok(acc)
 }
 
 fn ctx_kind(e: &Engine, ctx: &GemmCtx) -> GemmKind {
@@ -438,26 +697,31 @@ fn out_q(nodes: &[Node], i: usize) -> (f64, i32) {
     (nodes[i].out_scale as f64, nodes[i].out_zp)
 }
 
-/// im2col for one channel group: fills `cols` as [kdim, n_cols] row-major,
-/// (ky, kx, c) minor ordering, zero-point padding. Mirrors python im2col.
+/// im2col for one channel group of one image: fills columns
+/// `col0..col0+oh·ow` of `cols` (a row-major [kdim × n_stride] panel),
+/// (ky, kx, c) minor ordering, zero-point padding. `n_stride` is the
+/// panel's total column count — `oh·ow` for a single image, `batch·oh·ow`
+/// when a batch is fused into one wide panel. Mirrors python im2col.
+#[allow(clippy::too_many_arguments)]
 fn im2col_group(
     x: &Tensor,
     node: &Node,
     c0: usize,
     cpg: usize,
     zp_in: i32,
+    n_stride: usize,
+    col0: usize,
     cols: &mut [u8],
 ) {
     let k = node.ksize;
     let stride = node.stride;
     let pad = node.pad as isize;
     let (oh, ow, _) = node.out_shape;
-    let n_cols = oh * ow;
     let zp = zp_in.clamp(0, 255) as u8;
     for ky in 0..k {
         for kx in 0..k {
             for c in 0..cpg {
-                let row = ((ky * k + kx) * cpg + c) * n_cols;
+                let row = ((ky * k + kx) * cpg + c) * n_stride + col0;
                 for oy in 0..oh {
                     let iy = (oy * stride) as isize + ky as isize - pad;
                     for ox in 0..ow {
@@ -799,5 +1063,237 @@ mod tests {
         let t = Tensor::from_data(1, 1, 6, vec![0, 1, 2, 3, 4, 5]);
         let s = shuffle(&shuffle(&t, 2), 3);
         assert_eq!(s.data, t.data);
+    }
+
+    /// Random tiny conv net: input → conv (random ksize/stride/pad, relu)
+    /// → grouped 1×1/3×3 conv → dense. Exercises pad/stride/group edges and
+    /// nonzero input zero-points; scale choices are uncritical for the
+    /// batched-vs-per-image equality (both paths share them bit for bit).
+    fn rand_model(rng: &mut Rng) -> Model {
+        let h = 4 + rng.below(5) as usize;
+        let w = 4 + rng.below(5) as usize;
+        let c = 1 + rng.below(3) as usize;
+        let input = Node {
+            op: Op::Input,
+            relu: false,
+            inputs: vec![],
+            out_shape: (h, w, c),
+            out_scale: 1.0,
+            out_zp: rng.below(12) as i32,
+            cout: 0,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: None,
+        };
+        let k1 = if rng.below(2) == 0 { 1 } else { 3 };
+        let pad1 = if k1 == 3 { rng.below(2) as usize } else { 0 };
+        let s1 = 1 + rng.below(2) as usize;
+        let cout1 = 4 + 2 * rng.below(3) as usize; // 4, 6, 8 (even for groups)
+        let oh1 = (h + 2 * pad1 - k1) / s1 + 1;
+        let ow1 = (w + 2 * pad1 - k1) / s1 + 1;
+        let kdim1 = k1 * k1 * c;
+        let conv1 = Node {
+            op: Op::Conv,
+            relu: rng.below(2) == 1,
+            inputs: vec![0],
+            out_shape: (oh1, ow1, cout1),
+            out_scale: 4096.0,
+            out_zp: rng.below(4) as i32,
+            cout: cout1,
+            ksize: k1,
+            stride: s1,
+            pad: pad1,
+            groups: 1,
+            weights: Some(Weights {
+                w_q: (0..cout1 * kdim1).map(|_| rng.u8()).collect(),
+                k_dim: kdim1,
+                b_q: (0..cout1).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+                s_w: 1.0,
+                zp_w: rng.below(20) as i32,
+            }),
+        };
+        let k2 = if rng.below(2) == 0 { 1 } else { 3 };
+        let pad2 = if k2 == 3 { 1 } else { 0 };
+        let g2 = 2usize;
+        let cout2 = 8usize;
+        let kdim2 = k2 * k2 * (cout1 / g2);
+        let conv2 = Node {
+            op: Op::Conv,
+            relu: rng.below(2) == 1,
+            inputs: vec![1],
+            out_shape: (oh1, ow1, cout2),
+            out_scale: 4.0e7,
+            out_zp: 128,
+            cout: cout2,
+            ksize: k2,
+            stride: 1,
+            pad: pad2,
+            groups: g2,
+            weights: Some(Weights {
+                w_q: (0..cout2 * kdim2).map(|_| rng.u8()).collect(),
+                k_dim: kdim2,
+                b_q: (0..cout2).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+                s_w: 1.0,
+                zp_w: rng.below(20) as i32,
+            }),
+        };
+        let kdim3 = oh1 * ow1 * cout2;
+        let dense = Node {
+            op: Op::Dense,
+            relu: false,
+            inputs: vec![2],
+            out_shape: (1, 1, 5),
+            out_scale: 7.0e7,
+            out_zp: 128,
+            cout: 5,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: Some(Weights {
+                w_q: (0..5 * kdim3).map(|_| rng.u8()).collect(),
+                k_dim: kdim3,
+                b_q: vec![0; 5],
+                s_w: 1.0,
+                zp_w: rng.below(10) as i32,
+            }),
+        };
+        Model {
+            name: "rand".into(),
+            n_classes: 5,
+            nodes: vec![input, conv1, conv2, dense],
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_image_forward() {
+        // The tentpole invariant: fusing a batch into one wide GEMM per
+        // layer is bit-identical to running each image alone — for random
+        // model shapes, every family, both engines (native identity and
+        // prepared LUT) and several GEMM thread counts.
+        crate::util::prop::check_msg(
+            "forward_batch bit-exact",
+            10,
+            0xBA7C,
+            |r| {
+                let model_seed = r.next_u64();
+                let batch = 1 + r.below(5) as usize;
+                let fam = Family::ALL[r.below(4) as usize];
+                let m = if fam == Family::Exact { 0 } else { 1 + r.below(7) as u32 };
+                let use_cv = r.below(2) == 1;
+                let use_lut = r.below(2) == 1;
+                (model_seed, batch, fam, m, use_cv, use_lut)
+            },
+            |&(model_seed, batch, fam, m, use_cv, use_lut)| {
+                let mut rng = Rng::new(model_seed);
+                let model = rand_model(&mut rng);
+                let (h, w, c) = model.nodes[0].out_shape;
+                let imgs: Vec<Tensor> = (0..batch)
+                    .map(|_| {
+                        Tensor::from_data(
+                            h,
+                            w,
+                            c,
+                            (0..h * w * c).map(|_| rng.u8()).collect(),
+                        )
+                    })
+                    .collect();
+                let mut engine = Engine::new(model);
+                if use_lut {
+                    engine.prepare_lut(fam, m);
+                }
+                let opts = ForwardOpts::approx(fam, m, use_cv);
+                let per: Vec<Vec<f64>> = imgs
+                    .iter()
+                    .map(|img| engine.forward(img, &opts).unwrap())
+                    .collect();
+                let refs: Vec<&Tensor> = imgs.iter().collect();
+                let mut scratch = Scratch::new();
+                for threads in [1usize, 2, 5] {
+                    let batched = engine
+                        .forward_batch_with_threads(&refs, &opts, &mut scratch, threads)
+                        .unwrap();
+                    if batched != per {
+                        return Err(format!(
+                            "{} m={m} cv={use_cv} lut={use_lut} batch={batch} \
+                             threads={threads}: batched != per-image",
+                            fam.name()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn forward_batch_layerwise_and_empty() {
+        let engine = Engine::new(toy_model());
+        let imgs: Vec<Tensor> = (0..3)
+            .map(|i| {
+                let mut r = Rng::new(0x500 + i);
+                Tensor::from_data(4, 4, 3, (0..48).map(|_| r.u8()).collect())
+            })
+            .collect();
+        let opts = ForwardOpts::layerwise(Family::Truncated, vec![6, 0], true);
+        let per: Vec<Vec<f64>> = imgs
+            .iter()
+            .map(|im| engine.forward(im, &opts).unwrap())
+            .collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let batched = engine.forward_batch(&refs, &opts).unwrap();
+        assert_eq!(batched, per);
+        assert!(engine.forward_batch(&[], &opts).unwrap().is_empty());
+    }
+
+    #[test]
+    fn forward_batch_shares_plans_with_per_image() {
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2);
+        let imgs = [&img, &img, &img];
+        engine.forward_batch(&imgs, &opts).unwrap();
+        assert_eq!(
+            engine.plan_builds(),
+            2,
+            "the batched path must reuse the per-image plans"
+        );
+    }
+
+    #[test]
+    fn pjrt_route_reuses_plans_across_forwards() {
+        // The PJRT path consumes plan.consts / plan.sum_w from the prebuilt
+        // LayerPlan; repeated forwards must not rebuild plans (the native
+        // path's invariant, now shared). Skips — like all runtime tests —
+        // when no PJRT client or no HLO artifacts are available.
+        let art = crate::artifacts_dir();
+        let rt = match crate::runtime::TileGemm::new(&art) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: PJRT unavailable ({e:#})");
+                return;
+            }
+        };
+        let mut engine = Engine::new(toy_model());
+        engine.attach_pjrt(std::sync::Arc::new(rt), crate::runtime::Variant::Fast);
+        let img = toy_image();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        let first = match engine.forward(&img, &opts) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("skipping: PJRT execution failed ({e:#})");
+                return;
+            }
+        };
+        assert_eq!(engine.plan_builds(), 2);
+        let second = engine.forward(&img, &opts).unwrap();
+        let third = engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "pjrt route must reuse plans");
+        assert_eq!(first, second);
+        assert_eq!(second, third);
     }
 }

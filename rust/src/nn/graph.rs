@@ -45,6 +45,11 @@ pub struct Weights {
 }
 
 /// One graph node.
+///
+/// `Default` gives a bare Input node (unit scale, zero zero-point, no
+/// weights) so synthetic-model builders in tests/benches can spell out
+/// only the fields that matter: `Node { op: Op::Maxpool, inputs: vec![1],
+/// out_shape, ..Node::default() }`.
 #[derive(Clone, Debug)]
 pub struct Node {
     pub op: Op,
@@ -62,6 +67,25 @@ pub struct Node {
     pub pad: usize,
     pub groups: usize,
     pub weights: Option<Weights>,
+}
+
+impl Default for Node {
+    fn default() -> Node {
+        Node {
+            op: Op::Input,
+            relu: false,
+            inputs: vec![],
+            out_shape: (0, 0, 0),
+            out_scale: 1.0,
+            out_zp: 0,
+            cout: 0,
+            ksize: 0,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            weights: None,
+        }
+    }
 }
 
 /// A loaded quantized model.
@@ -109,6 +133,18 @@ impl Model {
             .filter(|(_, n)| n.weights.is_some())
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// Input tensor shape (h, w, c) — the out_shape of the graph's Input
+    /// node. Serving workers validate each request against this *before*
+    /// fusing it into a batch, so one malformed image fails alone instead
+    /// of poisoning the whole batched forward.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.nodes
+            .iter()
+            .find(|n| n.op == Op::Input)
+            .map(|n| n.out_shape)
+            .unwrap_or((0, 0, 0))
     }
 
     /// Upper bound on the scratch-arena sizes any layer of this model needs:
@@ -224,5 +260,6 @@ mod tests {
         let (panel, acc) = m.max_gemm_footprint();
         assert_eq!(panel, 27 * 16);
         assert_eq!(acc, 8 * 16);
+        assert_eq!(m.input_shape(), (4, 4, 3));
     }
 }

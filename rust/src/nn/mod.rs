@@ -16,6 +16,8 @@ pub mod gemm;
 pub mod graph;
 pub mod loader;
 pub mod plan;
+#[cfg(test)]
+pub(crate) mod testutil;
 
 pub use engine::{Engine, ForwardOpts};
 pub use gemm::GemmKind;

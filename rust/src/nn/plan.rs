@@ -145,10 +145,14 @@ pub(crate) fn reset<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
 
 /// Reusable per-worker buffers for the forward pass. All fields grow to the
 /// largest layer once and are then reused allocation-free; one `Scratch` per
-/// thread (the coordinator worker keeps a single long-lived instance).
+/// thread (each coordinator pool worker keeps a single long-lived instance,
+/// sized for its batch via [`Scratch::reserve`] — batched forwards widen
+/// every activation-side buffer by the batch factor, so reserve with
+/// `panel·batch` / `acc·batch` from `Model::max_gemm_footprint`).
 #[derive(Default)]
 pub struct Scratch {
-    /// im2col staging buffer [kdim × n_cols] (engine layer).
+    /// im2col staging buffer [kdim × n_cols] — `n_cols` spans the whole
+    /// batch (`batch·oh·ow`) on the batched path (engine layer).
     pub a_cols: Vec<u8>,
     /// Widened activation panel (u8 → i32) for the vectorized core.
     pub(crate) a_wide: Vec<i32>,

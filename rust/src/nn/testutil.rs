@@ -1,0 +1,71 @@
+//! Shared synthetic-model builders for unit tests (engine + coordinator).
+//!
+//! Everything here is artifact-free: the models are generated from a seeded
+//! RNG, so service/concurrency tests run on every machine instead of
+//! skipping when `make artifacts` has not been run.
+
+use crate::nn::graph::{Model, Node, Op, Tensor, Weights};
+use crate::util::rng::Rng;
+
+/// Tiny but non-trivial net: input(6,6,3) → conv3x3(8, relu) → dense(10).
+/// Output scales are chosen so requantized values stay inside the u8 range;
+/// 10 classes match the synth10 label space used by the service tests.
+pub fn tiny_model() -> Model {
+    let mut rng = Rng::new(0x71E5);
+    let input = Node { out_shape: (6, 6, 3), ..Node::default() };
+    let conv = Node {
+        op: Op::Conv,
+        relu: true,
+        inputs: vec![0],
+        out_shape: (6, 6, 8),
+        out_scale: 4096.0,
+        cout: 8,
+        ksize: 3,
+        pad: 1,
+        weights: Some(Weights {
+            w_q: (0..8 * 27).map(|_| rng.u8()).collect(),
+            k_dim: 27,
+            b_q: vec![0; 8],
+            s_w: 1.0,
+            zp_w: 7,
+        }),
+        ..Node::default()
+    };
+    let dense = Node {
+        op: Op::Dense,
+        inputs: vec![1],
+        out_shape: (1, 1, 10),
+        // mult = s_w * s_in / s_out keeps the dense accumulators inside the
+        // u8 range around zp = 128 (same sizing rationale as the engine's
+        // toy model, scaled to the 6x6x8 = 288-wide reduction).
+        out_scale: 1.6e8,
+        out_zp: 128,
+        cout: 10,
+        weights: Some(Weights {
+            w_q: (0..10 * 6 * 6 * 8).map(|_| rng.u8()).collect(),
+            k_dim: 6 * 6 * 8,
+            b_q: vec![0; 10],
+            s_w: 1.0,
+            zp_w: 3,
+        }),
+        ..Node::default()
+    };
+    Model { name: "tiny".into(), n_classes: 10, nodes: vec![input, conv, dense] }
+}
+
+/// [`tiny_model`] whose final dequant scale is NaN, so every logit comes out
+/// NaN — the adversarial input for the service's NaN-hardening tests (the
+/// requantize path saturates NaN to 0 without panicking; the NaN appears in
+/// the dequantized logits).
+pub fn nan_logit_model() -> Model {
+    let mut m = tiny_model();
+    let last = m.nodes.last_mut().unwrap();
+    last.out_scale = f32::NAN;
+    m
+}
+
+/// Deterministic random image matching [`tiny_model`]'s input shape.
+pub fn tiny_image(seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::from_data(6, 6, 3, (0..6 * 6 * 3).map(|_| rng.u8()).collect())
+}

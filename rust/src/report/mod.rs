@@ -197,23 +197,29 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         }
         other => bail!("unknown engine {other}"),
     }
+    let workers =
+        args.get_usize("workers", crate::coordinator::default_service_workers())?;
     let cfg = ServiceConfig {
         family,
         m,
         use_cv,
         n_array,
+        workers,
         batch_size: batch,
         ..Default::default()
     };
     println!(
-        "e2e: {net}/{ds_name} {} m={m} cv={use_cv} engine={} n={n} ({} MACs/img)",
+        "e2e: {net}/{ds_name} {} m={m} cv={use_cv} engine={} n={n} workers={workers} \
+         ({} MACs/img)",
         family.name(),
         args.get_or("engine", "native"),
         macs
     );
     let svc = InferenceService::start(engine, cfg);
     let n = n.min(ds.n);
-    let pending: Vec<_> = (0..n).map(|i| svc.submit(ds.image(i))).collect();
+    let pending = (0..n)
+        .map(|i| svc.submit(ds.image(i)))
+        .collect::<Result<Vec<_>>>()?;
     let mut correct = 0usize;
     for (i, p) in pending.into_iter().enumerate() {
         let r = p.wait()?;
@@ -228,9 +234,10 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         snap.p95_latency.as_secs_f64() * 1e3
     );
     println!(
-        "  batches:         {} (avg {:.1} img/batch)",
+        "  batches:         {} over {} workers (avg {:.1} img/batch)",
         snap.batches,
-        snap.completed as f64 / snap.batches.max(1) as f64
+        snap.worker_batches.len(),
+        snap.mean_batch_size
     );
     println!(
         "  modeled energy:  {:.3}x exact array ({:.1}% saving) on {}x{} MACs",

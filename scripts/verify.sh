@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate + perf smoke.
+# Tier-1 verification gate + perf/serving smoke.
 #
-#   scripts/verify.sh          # build + tests + gemm_throughput smoke
-#   SKIP_BENCH=1 scripts/verify.sh   # tier-1 only
+#   scripts/verify.sh          # build + tests + bench smokes
+#   SKIP_BENCH=1 scripts/verify.sh   # tier-1 + serving tests only
 #
-# The bench smoke runs with CVAPPROX_BENCH_QUICK=1 (short budgets) and
-# leaves BENCH_gemm_throughput.json in the repo root for perf tracking.
+# The bench smokes run with CVAPPROX_BENCH_QUICK=1 (short budgets) and
+# leave BENCH_gemm_throughput.json / BENCH_serving.json in the repo root
+# for cross-PR perf tracking.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,6 +17,16 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# The coordinator worker pool must behave identically at 1 worker and at a
+# small pool (bit-exact replies, batch fusion, clean shutdown, no panics).
+# The burst/NaN/default-config service tests size their pools from
+# CVAPPROX_SERVICE_WORKERS, so these two runs genuinely vary the pool.
+echo "== serving smoke: coordinator tests at 1 worker =="
+CVAPPROX_SERVICE_WORKERS=1 cargo test -q -p cvapprox --lib coordinator
+
+echo "== serving smoke: coordinator tests at 4 workers =="
+CVAPPROX_SERVICE_WORKERS=4 cargo test -q -p cvapprox --lib coordinator
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
     echo "== perf smoke: gemm_throughput (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench gemm_throughput
@@ -23,6 +34,15 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
         echo "== BENCH_gemm_throughput.json written =="
     else
         echo "error: bench did not write BENCH_gemm_throughput.json" >&2
+        exit 1
+    fi
+
+    echo "== perf smoke: serving (quick budgets) =="
+    CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench serving
+    if [ -f BENCH_serving.json ]; then
+        echo "== BENCH_serving.json written =="
+    else
+        echo "error: bench did not write BENCH_serving.json" >&2
         exit 1
     fi
 fi
