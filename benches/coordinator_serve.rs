@@ -35,7 +35,7 @@ fn main() {
             batch_timeout: Duration::from_millis(1),
             ..Default::default()
         };
-        let svc = InferenceService::start(engine, cfg);
+        let svc = InferenceService::start(engine, cfg).expect("service starts");
         let pending: Vec<_> = (0..n)
             .map(|i| svc.submit(ds.image(i % ds.n)).expect("service accepting"))
             .collect();

@@ -1,0 +1,298 @@
+//! Policy-serving bench: per-layer heterogeneous approximation end to end.
+//!
+//! Runs entirely on the checked-in hermetic artifacts (no `make artifacts`,
+//! no network — CI always executes it): the greedy layerwise search from
+//! `report::layerwise` derives a mixed [`LayerPolicy`] on the hermetic
+//! model, the coordinator worker pool serves it (`ServiceConfig::policy`),
+//! and the result is compared against every uniform (family, m) grid point
+//! on three axes: synthetic accuracy loss, MAC-weighted estimated power,
+//! and measured images/s.
+//!
+//! Emits `BENCH_policy.json`. The headline acceptance claim is asserted,
+//! not just reported: the mixed policy must beat **every** uniform point
+//! that achieves equal-or-lower accuracy loss on estimated power (on the
+//! hermetic set the greedy policy reaches zero loss while every uniform
+//! approximate point loses accuracy, so it strictly dominates the grid).
+//! The pool's replies are also checked bit-identical to the per-image
+//! policy forward — the coordinator-level forward/forward_batch identity.
+//!
+//! Env knobs: `CVAPPROX_BENCH_QUICK=1` (short serving budgets);
+//! `CVAPPROX_THREADS` pinned to 1 unless set (measure pool scaling, not
+//! intra-GEMM threading).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cvapprox::approx::Family;
+use cvapprox::coordinator::{InferenceService, PowerModel, ServiceConfig};
+use cvapprox::datasets::Dataset;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::{loader, Engine, ForwardOpts, LayerPolicy, Model, Tensor};
+use cvapprox::report::accuracy::evaluate;
+use cvapprox::report::layerwise::{greedy_policy, sensitivity};
+use cvapprox::util::json::Json;
+
+const N_ARRAY: u32 = 64;
+
+fn load_hermetic() -> (Model, Dataset) {
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm"))
+        .expect("hermetic model (regenerate with scripts/gen_hermetic_golden.py)");
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).expect("hermetic dataset");
+    (model, ds)
+}
+
+struct Measured {
+    label: String,
+    acc: f64,
+    power_norm: f64,
+    images_s: f64,
+    mean_ms: f64,
+    p95_ms: f64,
+    json: Json,
+}
+
+/// Serve `n_req` requests through a fresh pool and measure throughput.
+fn serve(model: &Model, ds: &Dataset, cfg: ServiceConfig, n_req: usize) -> (f64, f64, f64) {
+    let svc = InferenceService::start(Engine::new(model.clone()), cfg)
+        .expect("service starts");
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| svc.submit(ds.image(i % ds.n)).expect("service accepting"))
+        .collect();
+    for p in pending {
+        p.wait().expect("reply");
+    }
+    let snap = svc.shutdown();
+    (
+        snap.throughput_rps,
+        snap.mean_latency.as_secs_f64() * 1e3,
+        snap.p95_latency.as_secs_f64() * 1e3,
+    )
+}
+
+fn main() {
+    if std::env::var("CVAPPROX_THREADS").is_err() {
+        std::env::set_var("CVAPPROX_THREADS", "1");
+    }
+    println!("== bench: policy_serving (hermetic) ==");
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (model, ds) = load_hermetic();
+    let n_eval = ds.n; // 64 hermetic images, deterministic accuracies
+    let n_req = if quick { 96 } else { 384 };
+    let workers = 2usize;
+    let batch_size = 8usize;
+    println!(
+        "(hermetic model {} MACs/img, {} eval images, {} requests/config, \
+         {workers} workers x batch {batch_size})",
+        model.macs(),
+        n_eval,
+        n_req
+    );
+
+    let engine = Engine::new(model.clone());
+    let exact_acc = evaluate(&engine, &ds, &ForwardOpts::exact(), n_eval, 1).unwrap();
+    println!("exact accuracy {exact_acc:.4} (labels are the exact argmax)");
+
+    let mut rows: Vec<Measured> = Vec::new();
+
+    // ---- uniform grid: every paper (family, m) point, with V ------------
+    let mut grid: Vec<(Family, u32)> = vec![(Family::Exact, 0)];
+    for family in Family::APPROX {
+        for &m in family.paper_levels() {
+            grid.push((family, m));
+        }
+    }
+    for &(family, m) in &grid {
+        let use_cv = family != Family::Exact;
+        let acc =
+            evaluate(&engine, &ds, &ForwardOpts::approx(family, m, use_cv), n_eval, 1)
+                .unwrap();
+        let power = PowerModel::new(family, m, N_ARRAY).power_norm;
+        let cfg = ServiceConfig {
+            family,
+            m,
+            use_cv,
+            n_array: N_ARRAY,
+            workers,
+            batch_size,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let (rps, mean_ms, p95_ms) = serve(&model, &ds, cfg, n_req);
+        let label = if family == Family::Exact {
+            "uniform exact".to_string()
+        } else {
+            format!("uniform {} m={m}", family.name())
+        };
+        rows.push(Measured {
+            label: label.clone(),
+            acc,
+            power_norm: power,
+            images_s: rps,
+            mean_ms,
+            p95_ms,
+            json: Json::obj()
+                .field("kind", "uniform")
+                .field("family", family.name())
+                .field("m", m as i64)
+                .field("use_cv", use_cv)
+                .field("acc", acc)
+                .field("acc_loss_pct", 100.0 * (exact_acc - acc))
+                .field("power_norm", power)
+                .field("images_s", rps)
+                .field("mean_ms", mean_ms)
+                .field("p95_ms", p95_ms),
+        });
+    }
+
+    // ---- greedy mixed policy (the layerwise search artifact) ------------
+    let (fam_hi, m_hi, budget_pct) = (Family::Perforated, 3u32, 0.8f64);
+    let sens = sensitivity(&engine, &ds, fam_hi, m_hi, n_eval).unwrap();
+    let pol = greedy_policy(
+        &engine, &ds, fam_hi, m_hi, budget_pct, n_eval, N_ARRAY, &sens,
+    )
+    .unwrap();
+    let policy = Arc::new(pol.layer_policy().unwrap());
+    assert!(
+        policy.approx_layers() > 0 && policy.approx_layers() < policy.len(),
+        "greedy result must be genuinely mixed, got {}",
+        policy.describe()
+    );
+    // Round-trip through the serialized artifact, like a deployment would.
+    let policy_path = "POLICY_hermnet_hsynth.json";
+    policy.save_json(std::path::Path::new(policy_path)).unwrap();
+    let policy = Arc::new(LayerPolicy::load(std::path::Path::new(policy_path)).unwrap());
+    println!(
+        "greedy {} m_hi={m_hi} budget={budget_pct}%: {} (acc {:.4}) -> {policy_path}",
+        fam_hi.name(),
+        policy.describe(),
+        pol.acc
+    );
+
+    let policy_opts = ForwardOpts::with_policy(policy.clone());
+    let mixed_acc = evaluate(&engine, &ds, &policy_opts, n_eval, 1).unwrap();
+    let mixed_power = PowerModel::for_policy(&policy, &model, N_ARRAY).power_norm;
+
+    // Coordinator-level bit-identity: pool replies (batched forwards) must
+    // equal the per-image policy forward.
+    let svc = InferenceService::start(
+        Engine::new(model.clone()),
+        ServiceConfig {
+            policy: Some(policy.clone()),
+            n_array: N_ARRAY,
+            workers,
+            batch_size,
+            batch_timeout: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .expect("policy service starts");
+    let imgs: Vec<Tensor> = (0..16).map(|i| ds.image(i)).collect();
+    let pending: Vec<_> =
+        imgs.iter().map(|im| svc.submit(im.clone()).unwrap()).collect();
+    for (img, p) in imgs.iter().zip(pending) {
+        let reply = p.wait().unwrap();
+        let want = engine.forward(img, &policy_opts).unwrap();
+        assert_eq!(
+            reply.logits, want,
+            "pool reply must be bit-identical to the per-image policy forward"
+        );
+    }
+    svc.shutdown();
+    // Engine-level check on the same policy: forward == forward_batch.
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    let batched = engine.forward_batch(&refs, &policy_opts).unwrap();
+    for (img, got) in imgs.iter().zip(&batched) {
+        assert_eq!(*got, engine.forward(img, &policy_opts).unwrap());
+    }
+    println!("bit-identity: pool replies == forward == forward_batch (16 images)");
+
+    let cfg = ServiceConfig {
+        policy: Some(policy.clone()),
+        n_array: N_ARRAY,
+        workers,
+        batch_size,
+        batch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let (rps, mean_ms, p95_ms) = serve(&model, &ds, cfg, n_req);
+    rows.push(Measured {
+        label: format!("policy {}", policy.describe()),
+        acc: mixed_acc,
+        power_norm: mixed_power,
+        images_s: rps,
+        mean_ms,
+        p95_ms,
+        json: Json::obj()
+            .field("kind", "policy")
+            .field("policy", policy.describe())
+            .field("layers", policy.to_json())
+            .field("acc", mixed_acc)
+            .field("acc_loss_pct", 100.0 * (exact_acc - mixed_acc))
+            .field("power_norm", mixed_power)
+            .field("images_s", rps)
+            .field("mean_ms", mean_ms)
+            .field("p95_ms", p95_ms),
+    });
+
+    // ---- report + the dominance claim -----------------------------------
+    println!(
+        "\n{:<34} {:>8} {:>8} {:>9} {:>9} {:>9}",
+        "config", "acc", "power", "img/s", "mean ms", "~p95 ms"
+    );
+    for r in &rows {
+        println!(
+            "{:<34} {:>8.4} {:>8.3} {:>9.1} {:>9.2} {:>9.2}",
+            r.label, r.acc, r.power_norm, r.images_s, r.mean_ms, r.p95_ms
+        );
+    }
+    let mixed_loss = exact_acc - mixed_acc;
+    let mut dominates = true;
+    for r in rows.iter().filter(|r| r.label.starts_with("uniform")) {
+        let loss = exact_acc - r.acc;
+        if loss <= mixed_loss + 1e-9 && r.power_norm <= mixed_power {
+            println!(
+                "NOT dominated: {} (loss {:.4} <= {:.4}, power {:.3} <= {:.3})",
+                r.label, loss, mixed_loss, r.power_norm, mixed_power
+            );
+            dominates = false;
+        }
+    }
+    println!(
+        "\nmixed policy loss {:.4}, power {:.3}x -> {}",
+        mixed_loss,
+        mixed_power,
+        if dominates {
+            "beats every uniform point at equal-or-lower loss"
+        } else {
+            "does NOT dominate the uniform grid"
+        }
+    );
+
+    let json = Json::obj()
+        .field("bench", "policy_serving")
+        .field("model", "hermnet_hsynth (hermetic)")
+        .field("model_macs", model.macs() as i64)
+        .field("eval_images", n_eval)
+        .field("requests_per_config", n_req)
+        .field("workers", workers)
+        .field("batch_size", batch_size)
+        .field("quick", quick)
+        .field("exact_acc", exact_acc)
+        .field("greedy", Json::obj()
+            .field("family", fam_hi.name())
+            .field("m_hi", m_hi as i64)
+            .field("budget_pct", budget_pct)
+            .field("policy_file", policy_path))
+        .field("mixed_dominates_uniform", dominates)
+        .field("results", Json::Arr(rows.into_iter().map(|r| r.json).collect()));
+    let path = "BENCH_policy.json";
+    match std::fs::write(path, json.render()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+    // The acceptance gate: on the hermetic set the greedy mixed policy must
+    // strictly dominate (deterministic data + deterministic arithmetic, so
+    // this cannot flake).
+    assert!(dominates, "mixed policy failed to dominate the uniform grid");
+}

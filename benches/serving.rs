@@ -142,8 +142,10 @@ fn main() {
                     workers,
                     batch_size,
                     batch_timeout: Duration::from_millis(1),
+                    ..Default::default()
                 };
-                let svc = InferenceService::start(Engine::new(bench_model()), cfg);
+                let svc = InferenceService::start(Engine::new(bench_model()), cfg)
+                    .expect("service starts");
                 let pending: Vec<_> = imgs
                     .iter()
                     .map(|im| svc.submit(im.clone()).expect("service accepting"))

@@ -1,18 +1,35 @@
 //! Design-space exploration: joint accuracy/power sweep across every
 //! (family, m) point — a compact Fig.-10-style Pareto walk plus the
-//! hardware figures, for one network.
+//! hardware figures, for one network. Optionally overlays a per-layer
+//! heterogeneous policy (e.g. the artifact `cvapprox layerwise --json`
+//! emits) to show where mixed-m assignments land relative to the uniform
+//! front.
 //!
-//! Run: `cargo run --release --example design_space [-- net [n_images]]`
+//! Run: `cargo run --release --example design_space [-- net [n_images] [--policy FILE]]`
 
 use anyhow::Result;
 use cvapprox::approx::Family;
+use cvapprox::datasets::Dataset;
 use cvapprox::hw::array_cost;
-use cvapprox::report::accuracy::{pareto_front, pareto_points};
+use cvapprox::nn::{loader, Engine, ForwardOpts, LayerPolicy};
+use cvapprox::report::accuracy::{evaluate, pareto_front, pareto_points};
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let net = args.first().map(|s| s.as_str()).unwrap_or("resnet8").to_string();
-    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let mut positional: Vec<String> = Vec::new();
+    let mut policy_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--policy" {
+            policy_path = Some(
+                args.next()
+                    .ok_or_else(|| anyhow::anyhow!("--policy needs a FILE argument"))?,
+            );
+        } else {
+            positional.push(a);
+        }
+    }
+    let net = positional.first().map(|s| s.as_str()).unwrap_or("resnet8").to_string();
+    let n: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
     let art = cvapprox::artifacts_dir();
 
     println!("Design space for {net} on synth100 (N=64 array, {n} test images)\n");
@@ -54,6 +71,38 @@ fn main() -> Result<()> {
             p.family.name(),
             p.m,
             p.use_cv
+        );
+    }
+
+    // ---- per-layer policy overlay (ALWANN-style mixed-m) -----------------
+    if let Some(path) = policy_path {
+        let policy = LayerPolicy::load(std::path::Path::new(&path))?;
+        let model =
+            loader::load_model(&art.join(format!("models/{net}_synth100.cvm")))?;
+        policy.validate_for(&model)?;
+        let ds = Dataset::load(&art.join("data/synth100_test.cvd"))?;
+        let engine = Engine::new(model);
+        let exact = evaluate(&engine, &ds, &ForwardOpts::exact(), n, 1)?;
+        let policy = std::sync::Arc::new(policy);
+        let acc =
+            evaluate(&engine, &ds, &ForwardOpts::with_policy(policy.clone()), n, 1)?;
+        let loss = 100.0 * (exact - acc);
+        let power = policy.power_norm(&engine.model, 64);
+        println!(
+            "\npolicy {path}: {}\n  loss {loss:+.2}%  MAC-weighted power {power:.3}x",
+            policy.describe()
+        );
+        let beaten = points
+            .iter()
+            .filter(|u| u.acc_loss_pct <= loss + 1e-9 && power < u.power_norm)
+            .count();
+        let at_or_below = points
+            .iter()
+            .filter(|u| u.acc_loss_pct <= loss + 1e-9)
+            .count();
+        println!(
+            "  beats {beaten}/{at_or_below} uniform points at equal-or-lower loss \
+             on power"
         );
     }
     Ok(())

@@ -69,7 +69,7 @@ fn main() -> Result<()> {
             batch_size: 8,
             ..Default::default()
         };
-        let svc = InferenceService::start(engine, cfg);
+        let svc = InferenceService::start(engine, cfg)?;
         let pending = (0..n)
             .map(|i| svc.submit(ds.image(i)))
             .collect::<Result<Vec<_>>>()?;

@@ -7,6 +7,7 @@ use std::time::{Duration, Instant};
 
 use crate::approx::Family;
 use crate::hw::array_cost;
+use crate::nn::{LayerPolicy, Model};
 use crate::util::stats::Welford;
 
 /// Converts inference work (MACs) into modeled energy, using the hw cost
@@ -28,6 +29,22 @@ impl PowerModel {
     pub fn new(family: Family, m: u32, n_array: u32) -> PowerModel {
         let power_norm = array_cost(family, m, n_array).power_norm;
         PowerModel { family, m, n_array, power_norm }
+    }
+
+    /// Power model for a heterogeneous [`LayerPolicy`]: `power_norm` is the
+    /// MAC-weighted mean over the layers (each at its own point's array
+    /// cost, exact layers at 1.0). `family`/`m` are labeled from the
+    /// policy's most aggressive approximate layer — informational only; the
+    /// energy accounting uses the blended `power_norm`.
+    pub fn for_policy(policy: &LayerPolicy, model: &Model, n_array: u32) -> PowerModel {
+        let power_norm = policy.power_norm(model, n_array);
+        let label = policy
+            .points()
+            .filter(|p| p.family != Family::Exact)
+            .max_by_key(|p| p.m)
+            .map(|p| (p.family, p.m))
+            .unwrap_or((Family::Exact, 0));
+        PowerModel { family: label.0, m: label.1, n_array, power_norm }
     }
 
     /// Modeled energy for `macs` MACs, in exact-design MAC-energy units.
@@ -198,6 +215,32 @@ mod tests {
         let perf = PowerModel::new(Family::Perforated, 3, 64);
         assert!(perf.power_norm < 0.65); // ~45% reduction
         assert!(perf.energy_units(1000) < exact.energy_units(1000));
+    }
+
+    #[test]
+    fn policy_power_model_blends_mac_weighted() {
+        let model = crate::nn::testutil::tiny_model();
+        let macs = model.mac_layer_macs();
+        // All-exact policy: power 1.0.
+        let exact = LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap();
+        let pm = PowerModel::for_policy(&exact, &model, 64);
+        assert!((pm.power_norm - 1.0).abs() < 1e-12);
+        assert_eq!((pm.family, pm.m), (Family::Exact, 0));
+        // Uniform policy matches the uniform constructor.
+        let uni = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
+        let pm_uni = PowerModel::for_policy(&uni, &model, 64);
+        let direct = PowerModel::new(Family::Perforated, 3, 64);
+        assert!((pm_uni.power_norm - direct.power_norm).abs() < 1e-12);
+        assert_eq!((pm_uni.family, pm_uni.m), (Family::Perforated, 3));
+        // Mixed: exactly the hand-computed MAC-weighted blend.
+        let mixed = LayerPolicy::from_ms(Family::Perforated, &[3, 0], true).unwrap();
+        let pm_mixed = PowerModel::for_policy(&mixed, &model, 64);
+        let total = (macs[0] + macs[1]) as f64;
+        let want =
+            (macs[0] as f64 * direct.power_norm + macs[1] as f64) / total;
+        assert!((pm_mixed.power_norm - want).abs() < 1e-12);
+        assert!(pm_mixed.power_norm > direct.power_norm);
+        assert!(pm_mixed.power_norm < 1.0);
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //!   has no live workers — they never panic the caller.
 //! * A malformed (wrong-shape) image fails alone; it is split out before
 //!   the batch is fused so neighbors still get answers.
+//! * A bad per-layer policy (`ServiceConfig::policy` /
+//!   `CVAPPROX_SERVICE_POLICY`) fails at `start` — before any worker
+//!   spawns — so it can never poison a live pool.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,7 +30,7 @@ use anyhow::{bail, Context, Result};
 
 use super::metrics::{Metrics, MetricsSnapshot, PowerModel};
 use crate::approx::Family;
-use crate::nn::{Engine, ForwardOpts, Scratch, Tensor};
+use crate::nn::{Engine, ForwardOpts, LayerPolicy, Scratch, SharedPolicy, Tensor};
 use crate::util::threadpool::default_workers;
 
 /// Worker-pool size: `CVAPPROX_SERVICE_WORKERS` when set to a positive
@@ -54,6 +57,12 @@ pub struct ServiceConfig {
     pub family: Family,
     pub m: u32,
     pub use_cv: bool,
+    /// Per-layer heterogeneous policy. When set it supersedes the uniform
+    /// `family`/`m`/`use_cv` triple: every worker serves mixed-m batches,
+    /// each layer at its policy point, sharing one plan cache. When unset,
+    /// `InferenceService::start` also consults `CVAPPROX_SERVICE_POLICY`
+    /// (path to a JSON/text policy file — see `nn::policy`).
+    pub policy: Option<SharedPolicy>,
     /// Simulated MAC array dimension (for the power model).
     pub n_array: u32,
     /// Pool workers sharing one engine (plans/LUT) with one scratch each.
@@ -71,11 +80,34 @@ impl Default for ServiceConfig {
             family: Family::Exact,
             m: 0,
             use_cv: false,
+            policy: None,
             n_array: 64,
             workers: default_service_workers(),
             batch_size: 8,
             batch_timeout: Duration::from_millis(2),
         }
+    }
+}
+
+/// Resolve the effective policy for a service: an explicit
+/// `ServiceConfig::policy` wins; otherwise `env_path` (the value of
+/// `CVAPPROX_SERVICE_POLICY`) names a policy file to load. Factored out of
+/// `start` so the file/parse error paths are unit-testable without touching
+/// process-global env state.
+fn resolve_policy(
+    explicit: Option<&SharedPolicy>,
+    env_path: Option<&str>,
+) -> Result<Option<SharedPolicy>> {
+    if let Some(p) = explicit {
+        return Ok(Some(p.clone()));
+    }
+    match env_path.map(str::trim) {
+        Some(path) if !path.is_empty() => {
+            let policy = LayerPolicy::load(std::path::Path::new(path))
+                .context("CVAPPROX_SERVICE_POLICY")?;
+            Ok(Some(std::sync::Arc::new(policy)))
+        }
+        _ => Ok(None),
     }
 }
 
@@ -236,14 +268,40 @@ pub struct InferenceService {
 
 impl InferenceService {
     /// Start the service over a prepared engine.
-    pub fn start(engine: Engine, cfg: ServiceConfig) -> InferenceService {
+    ///
+    /// Fails — before any worker thread spawns, so there is no pool to
+    /// poison — when the effective per-layer policy (from
+    /// `ServiceConfig::policy` or the `CVAPPROX_SERVICE_POLICY` file) does
+    /// not parse or does not match the model's MAC layer count.
+    pub fn start(engine: Engine, cfg: ServiceConfig) -> Result<InferenceService> {
+        let policy = resolve_policy(
+            cfg.policy.as_ref(),
+            std::env::var("CVAPPROX_SERVICE_POLICY").ok().as_deref(),
+        )?;
         let metrics = Arc::new(Metrics::new());
-        let power = PowerModel::new(cfg.family, cfg.m, cfg.n_array);
         let queue = Arc::new(SharedQueue::new());
         // Warm the weight-side plans once, before any worker spawns: the
         // pool shares one PlanCache through the Arc'd engine, so no request
-        // on any worker pays the one-time build.
-        engine.prepare_plans(cfg.family, cfg.m);
+        // on any worker pays the one-time build. With a policy, each layer
+        // is warmed at its own point — and the layer-count validation
+        // happens here, turning a bad policy into a start-time `Err`.
+        let (power, opts) = match &policy {
+            Some(p) => {
+                p.validate_for(&engine.model).context("service policy")?;
+                engine.prepare_plans_policy(p).context("service policy")?;
+                (
+                    PowerModel::for_policy(p, &engine.model, cfg.n_array),
+                    ForwardOpts::with_policy(p.clone()),
+                )
+            }
+            None => {
+                engine.prepare_plans(cfg.family, cfg.m);
+                (
+                    PowerModel::new(cfg.family, cfg.m, cfg.n_array),
+                    ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv),
+                )
+            }
+        };
         // Anchor the throughput clock at "service ready" — after the plan
         // warm-up, so the one-time build does not deflate throughput /
         // occupancy, but before any request can complete, so even a
@@ -258,6 +316,7 @@ impl InferenceService {
             .map(|id| {
                 let engine = engine.clone();
                 let cfg = cfg.clone();
+                let opts = opts.clone();
                 let queue = queue.clone();
                 let metrics = metrics.clone();
                 let power = power.clone();
@@ -265,12 +324,12 @@ impl InferenceService {
                 std::thread::Builder::new()
                     .name(format!("cvapprox-worker-{id}"))
                     .spawn(move || {
-                        worker_loop(id, engine, cfg, queue, metrics, power, alive)
+                        worker_loop(id, engine, cfg, opts, queue, metrics, power, alive)
                     })
                     .expect("spawn service worker")
             })
             .collect();
-        InferenceService { queue, workers, alive, metrics, power }
+        Ok(InferenceService { queue, workers, alive, metrics, power })
     }
 
     /// Submit an image; returns a handle to wait on, or `Err` when the
@@ -322,17 +381,18 @@ impl Drop for InferenceService {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     engine: Arc<Engine>,
     cfg: ServiceConfig,
+    opts: ForwardOpts,
     queue: Arc<SharedQueue>,
     metrics: Arc<Metrics>,
     power: PowerModel,
     alive: Arc<AtomicUsize>,
 ) {
     let _guard = AliveGuard { alive, queue: queue.clone() };
-    let opts = ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv);
     let macs = engine.model.macs();
     let input_shape = engine.model.input_shape();
     // One scratch arena per worker, pre-grown to the model's worst-case
@@ -444,7 +504,7 @@ mod tests {
             batch_size: 4,
             ..Default::default()
         };
-        let svc = InferenceService::start(engine, cfg);
+        let svc = InferenceService::start(engine, cfg).unwrap();
         let pendings: Vec<Pending> =
             (0..8).map(|i| svc.submit(ds.image(i)).unwrap()).collect();
         let mut correct = 0;
@@ -468,7 +528,7 @@ mod tests {
         let svc = InferenceService::start(
             Engine::new(testutil::tiny_model()),
             ServiceConfig::default(),
-        );
+        ).unwrap();
         let snap = svc.shutdown();
         assert_eq!(snap.completed, 0);
     }
@@ -488,7 +548,7 @@ mod tests {
             batch_size: 4,
             ..Default::default()
         };
-        let svc = InferenceService::start(Engine::new(model), cfg);
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
         let opts = ForwardOpts::approx(Family::Truncated, 6, true);
         let clients = 6usize;
         let per_client = 8usize;
@@ -541,7 +601,7 @@ mod tests {
             batch_timeout: Duration::from_millis(50),
             ..Default::default()
         };
-        let svc = InferenceService::start(Engine::new(model), cfg);
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
         let opts = ForwardOpts::approx(Family::Perforated, 2, true);
         let imgs: Vec<Tensor> =
             (0..24).map(|i| testutil::tiny_image(i as u64)).collect();
@@ -577,7 +637,7 @@ mod tests {
             ..Default::default()
         };
         let svc =
-            InferenceService::start(Engine::new(testutil::nan_logit_model()), cfg);
+            InferenceService::start(Engine::new(testutil::nan_logit_model()), cfg).unwrap();
         for _ in 0..2 {
             let pend: Vec<Pending> = (0..4)
                 .map(|i| svc.submit(testutil::tiny_image(i)).unwrap())
@@ -598,7 +658,7 @@ mod tests {
         let svc = InferenceService::start(
             Engine::new(testutil::tiny_model()),
             ServiceConfig { workers: 1, ..Default::default() },
-        );
+        ).unwrap();
         let p = svc.submit(testutil::tiny_image(1)).unwrap();
         assert!(p.wait().is_ok());
         svc.close();
@@ -615,7 +675,7 @@ mod tests {
         let svc = InferenceService::start(
             Engine::new(model),
             ServiceConfig { workers: 1, batch_size: 4, ..Default::default() },
-        );
+        ).unwrap();
         let good = testutil::tiny_image(7);
         let bad = Tensor::new(2, 2, 1);
         let p_good = svc.submit(good.clone()).unwrap();
@@ -632,7 +692,7 @@ mod tests {
         let svc = InferenceService::start(
             Engine::new(testutil::tiny_model()),
             ServiceConfig { workers: 2, ..Default::default() },
-        );
+        ).unwrap();
         svc.infer(testutil::tiny_image(0)).unwrap();
         let snap = svc.shutdown();
         assert_eq!(snap.completed, 1);
@@ -640,6 +700,111 @@ mod tests {
             snap.throughput_rps > 0.0,
             "one-request session must report a rate (was the start anchor lost?)"
         );
+    }
+
+    #[test]
+    fn policy_service_serves_mixed_batches_bit_identically() {
+        // The tentpole acceptance path: a mixed per-layer policy flows
+        // through the worker pool (batched forwards, shared plan cache) and
+        // every reply is bit-equal to the per-image policy forward.
+        let model = testutil::tiny_model(); // 2 MAC layers
+        let reference = Engine::new(model.clone());
+        let policy = std::sync::Arc::new(
+            LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap(),
+        );
+        let cfg = ServiceConfig {
+            policy: Some(policy.clone()),
+            workers: 2,
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let opts = ForwardOpts::with_policy(policy);
+        let imgs: Vec<Tensor> =
+            (0..16).map(|i| testutil::tiny_image(1000 + i)).collect();
+        let pendings: Vec<Pending> =
+            imgs.iter().map(|im| svc.submit(im.clone()).unwrap()).collect();
+        for (img, p) in imgs.iter().zip(pendings) {
+            let reply = p.wait().unwrap();
+            assert_eq!(reply.logits, reference.forward(img, &opts).unwrap());
+        }
+        // Wrong-shape requests still fail alone under a policy config.
+        let err = svc.infer(Tensor::new(2, 2, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("shape"), "{err:#}");
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 16);
+        // Mixed power estimate: strictly between the aggressive uniform
+        // point and exact.
+        let uniform = PowerModel::new(Family::Perforated, 2, 64).power_norm;
+        assert!(snap.energy_vs_exact > uniform && snap.energy_vs_exact < 1.0);
+    }
+
+    #[test]
+    fn start_rejects_mismatched_policy_before_spawning() {
+        // 3 policy layers vs tiny_model's 2 MAC layers: start must fail
+        // (nothing spawns, nothing to poison) — and a subsequent valid
+        // service on the same config shape works fine.
+        let bad = std::sync::Arc::new(
+            LayerPolicy::uniform(Family::Perforated, 2, true, 3).unwrap(),
+        );
+        let err = InferenceService::start(
+            Engine::new(testutil::tiny_model()),
+            ServiceConfig { policy: Some(bad), workers: 2, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("MAC layers"), "{err:#}");
+        let good = std::sync::Arc::new(
+            LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap(),
+        );
+        let svc = InferenceService::start(
+            Engine::new(testutil::tiny_model()),
+            ServiceConfig { policy: Some(good), workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(svc.infer(testutil::tiny_image(5)).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resolve_policy_sources_and_errors() {
+        let dir = std::env::temp_dir();
+        let ok_path = dir.join(format!("cvapprox_policy_ok_{}.txt", std::process::id()));
+        let bad_path = dir.join(format!("cvapprox_policy_bad_{}.txt", std::process::id()));
+        std::fs::write(&ok_path, "perforated 2 cv\nexact\n").unwrap();
+        std::fs::write(&bad_path, "bogusfamily 2 cv\n").unwrap();
+
+        // No sources -> no policy.
+        assert!(resolve_policy(None, None).unwrap().is_none());
+        assert!(resolve_policy(None, Some("  ")).unwrap().is_none());
+        // Env path loads the file.
+        let loaded = resolve_policy(None, Some(ok_path.to_str().unwrap()))
+            .unwrap()
+            .unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.approx_layers(), 1);
+        // Unknown family / missing file surface as Err, tagged with the knob.
+        let err = resolve_policy(None, Some(bad_path.to_str().unwrap())).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("CVAPPROX_SERVICE_POLICY"), "{msg}");
+        assert!(msg.contains("unknown family"), "{msg}");
+        assert!(resolve_policy(None, Some("/nonexistent/policy.json")).is_err());
+        // Explicit config policy wins over the env path.
+        let explicit = std::sync::Arc::new(
+            LayerPolicy::uniform(Family::Truncated, 6, true, 2).unwrap(),
+        );
+        let got = resolve_policy(
+            Some(&explicit),
+            Some(bad_path.to_str().unwrap()),
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(
+            got.as_uniform().unwrap(),
+            crate::nn::LayerPoint::new(Family::Truncated, 6, true)
+        );
+        let _ = std::fs::remove_file(&ok_path);
+        let _ = std::fs::remove_file(&bad_path);
     }
 
     #[test]

@@ -29,11 +29,21 @@ pub struct CvConstants {
     pub c0_q4: i64,
 }
 
-/// Round-to-nearest division for non-negative operands.
+/// Round-to-nearest division (half away from zero), `den > 0`.
+///
+/// The numerator used to be assumed non-negative (true for Σ of uint8
+/// weights), but policy-driven constants can be built from arbitrary rows —
+/// e.g. effective signed weights `w − zp_w` — where truncating division
+/// rounded negative halves toward zero. Matches `round_half_away` / the
+/// python reference for every sign.
 #[inline]
 fn div_round(num: i64, den: i64) -> i64 {
-    debug_assert!(num >= 0 && den > 0);
-    (num + den / 2) / den
+    debug_assert!(den > 0);
+    if num >= 0 {
+        (num + den / 2) / den
+    } else {
+        -((-num + den / 2) / den)
+    }
 }
 
 /// Compute C and C₀ for one filter row of uint8 weights.
@@ -142,6 +152,30 @@ mod tests {
                     cv.variance() < raw.variance(),
                     "{} m={m}: var not reduced", family.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn div_round_is_half_away_from_zero_for_both_signs() {
+        // Positive halves round up (unchanged behaviour)...
+        assert_eq!(div_round(5, 2), 3); // 2.5 -> 3
+        assert_eq!(div_round(4, 2), 2);
+        assert_eq!(div_round(7, 3), 2); // 2.33 -> 2
+        assert_eq!(div_round(0, 4), 0);
+        // ...and negative halves round away from zero, not toward it (the
+        // old `(num + den/2) / den` gave -5/2 -> -2 via truncation).
+        assert_eq!(div_round(-5, 2), -3); // -2.5 -> -3
+        assert_eq!(div_round(-4, 2), -2);
+        assert_eq!(div_round(-7, 3), -2); // -2.33 -> -2
+        assert_eq!(div_round(-1, 2), -1); // -0.5 -> -1
+        assert_eq!(div_round(1, 2), 1); //  0.5 -> 1
+        // Pinned against the f64 reference on a sweep of both signs.
+        for num in -50i64..=50 {
+            for den in 1i64..=7 {
+                let want = crate::nn::engine::round_half_away(num as f64 / den as f64)
+                    as i64;
+                assert_eq!(div_round(num, den), want, "{num}/{den}");
             }
         }
     }

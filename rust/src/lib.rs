@@ -49,3 +49,13 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         }
     }
 }
+
+/// The checked-in hermetic mini-artifacts (same `models/` + `data/` +
+/// `golden/` layout as `artifacts_dir`, generated once by
+/// `scripts/gen_hermetic_golden.py` from the python reference): a small
+/// synthetic model, a 64-image dataset and 38 golden vectors that make the
+/// golden/layerwise/policy test suites run everywhere — CI included —
+/// without `make artifacts` or network access.
+pub fn hermetic_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/hermetic")
+}

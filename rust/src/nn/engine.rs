@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 use super::gemm::{approx_gemm_planned, GemmCtx, GemmKind};
 use super::graph::{Model, Node, Op, Tensor};
 use super::plan::{LayerPlan, PlanCache, Scratch};
+use super::policy::{LayerPoint, LayerPolicy, SharedPolicy, MAX_M};
 use crate::approx::{Family, MulLut};
 use crate::cv::{self, CvConstants};
 use crate::runtime::{TileGemm, Variant};
@@ -34,6 +35,12 @@ pub struct ForwardOpts {
     /// `None` entries (or a missing vec) fall back to `self.m`;
     /// m = 0 runs that layer exact.
     pub m_per_layer: Option<std::sync::Arc<Vec<u32>>>,
+    /// Fully heterogeneous per-layer policy: when set, each MAC layer
+    /// resolves its own `(family, m, use_cv)` from the policy and every
+    /// uniform field above (plus `m_per_layer`) is ignored. Validated
+    /// against the model's layer count at forward entry — a mismatched
+    /// policy returns `Err` instead of running a wrong configuration.
+    pub policy: Option<SharedPolicy>,
 }
 
 impl Default for ForwardOpts {
@@ -44,6 +51,7 @@ impl Default for ForwardOpts {
             use_cv: false,
             kind: GemmKind::Identity,
             m_per_layer: None,
+            policy: None,
         }
     }
 }
@@ -54,7 +62,7 @@ impl ForwardOpts {
     }
 
     pub fn approx(family: Family, m: u32, use_cv: bool) -> Self {
-        ForwardOpts { family, m, use_cv, kind: GemmKind::Identity, m_per_layer: None }
+        ForwardOpts { family, m, use_cv, ..Self::default() }
     }
 
     /// Layer-wise configuration: `ms[i]` is the approximation level of the
@@ -62,11 +70,18 @@ impl ForwardOpts {
     pub fn layerwise(family: Family, ms: Vec<u32>, use_cv: bool) -> Self {
         ForwardOpts {
             family,
-            m: 0,
             use_cv,
-            kind: GemmKind::Identity,
             m_per_layer: Some(std::sync::Arc::new(ms)),
+            ..Self::default()
         }
+    }
+
+    /// Fully heterogeneous configuration from a [`LayerPolicy`]: layer `i`
+    /// runs at `policy.point(i)`. A policy whose every layer carries the
+    /// same point is bit-identical to the uniform [`ForwardOpts::approx`]
+    /// path (property-tested in the engine suite).
+    pub fn with_policy(policy: SharedPolicy) -> Self {
+        ForwardOpts { policy: Some(policy), ..Self::default() }
     }
 
     /// Effective m for MAC layer ordinal `mac_idx`.
@@ -74,6 +89,19 @@ impl ForwardOpts {
         match &self.m_per_layer {
             Some(ms) => ms.get(mac_idx).copied().unwrap_or(self.m),
             None => self.m,
+        }
+    }
+
+    /// Effective design point for MAC layer ordinal `mac_idx` (normalized:
+    /// `m == 0` collapses to the exact point) — the single source of truth
+    /// both forward paths resolve plans, LUTs and the CV epilogue from.
+    pub fn point_for(&self, mac_idx: usize) -> LayerPoint {
+        match &self.policy {
+            Some(p) => p.point(mac_idx),
+            None => {
+                LayerPoint::new(self.family, self.m_for(mac_idx), self.use_cv)
+                    .normalized()
+            }
         }
     }
 }
@@ -95,9 +123,14 @@ fn requantize(acc: i64, mult: f64, zp: i32) -> u8 {
 /// plus the [`PlanCache`] of per-layer weight-side precomputations: masked
 /// panels, Σw and CV constants are built at most once per (layer, family, m)
 /// and reused across every image (tested by `plan_built_once_across_forwards`).
+/// With a heterogeneous [`LayerPolicy`] every layer resolves its own plan
+/// (and LUT, when one is prepared) from the same caches — mixed-m serving
+/// shares them exactly like uniform serving does.
 pub struct Engine {
     pub model: Model,
-    lut: Option<MulLut>,
+    /// Prepared LUTs, one per distinct (family, m) — a mixed policy can
+    /// route every approximate layer through its own table.
+    luts: Vec<MulLut>,
     systolic: Option<SystolicArray>,
     pjrt: Option<(Arc<TileGemm>, Variant)>,
     plans: PlanCache,
@@ -105,7 +138,7 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: Model) -> Engine {
-        Engine { model, lut: None, systolic: None, pjrt: None, plans: PlanCache::new() }
+        Engine { model, luts: Vec::new(), systolic: None, pjrt: None, plans: PlanCache::new() }
     }
 
     /// Route MAC GEMMs through the PJRT runtime (the AOT XLA kernels).
@@ -113,11 +146,26 @@ impl Engine {
         self.pjrt = Some((rt, variant));
     }
 
-    /// Pre-build the LUT for a (family, m) pair (Lut engine only).
+    /// Pre-build the LUT for a (family, m) pair (Lut engine only). Tables
+    /// accumulate — preparing several points lets a heterogeneous policy
+    /// serve every layer from its matching LUT.
     pub fn prepare_lut(&mut self, family: Family, m: u32) {
-        if family != Family::Exact {
-            self.lut = Some(MulLut::build(family, m));
+        if family != Family::Exact && self.lut_lookup(family, m).is_none() {
+            self.luts.push(MulLut::build(family, m));
         }
+    }
+
+    /// Prepare a LUT for every distinct approximate point of `policy`.
+    pub fn prepare_luts_for_policy(&mut self, policy: &LayerPolicy) {
+        for p in policy.points() {
+            if p != LayerPoint::EXACT {
+                self.prepare_lut(p.family, p.m);
+            }
+        }
+    }
+
+    fn lut_lookup(&self, family: Family, m: u32) -> Option<&MulLut> {
+        self.luts.iter().find(|l| l.family == family && l.m == m)
     }
 
     /// Attach a systolic array simulator (enables `forward_systolic`).
@@ -139,6 +187,44 @@ impl Engine {
                 LayerPlan::build(fam_eff, m_eff, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
             });
         }
+    }
+
+    /// Eagerly build each layer's plan at its policy point (the coordinator
+    /// warms mixed-m serving here). Fails — without building anything — on
+    /// a policy/model layer-count mismatch.
+    pub fn prepare_plans_policy(&self, policy: &LayerPolicy) -> Result<()> {
+        policy.validate_for(&self.model)?;
+        for (mac_idx, idx) in self.model.mac_node_indices().into_iter().enumerate() {
+            let p = policy.point(mac_idx);
+            let node = &self.model.nodes[idx];
+            let wrec = node.weights.as_ref().expect("mac node has weights");
+            self.plans.get_or_build(idx, p.family, p.m, || {
+                LayerPlan::build(p.family, p.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+            });
+        }
+        Ok(())
+    }
+
+    /// Validate the per-layer configuration against this model before any
+    /// GEMM runs: a policy must match the MAC layer count, and uniform /
+    /// `m_per_layer` levels must be in range. Returning `Err` here is what
+    /// keeps a bad policy from poisoning a serving worker mid-batch.
+    fn check_opts(&self, opts: &ForwardOpts) -> Result<()> {
+        match &opts.policy {
+            Some(p) => p.validate_for(&self.model)?,
+            None => {
+                for i in 0..self.model.mac_layers() {
+                    let m = opts.m_for(i);
+                    if m > MAX_M {
+                        bail!(
+                            "m = {m} out of range at MAC layer {i} (max {MAX_M} \
+                             for 8-bit operands)"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// How many layer plans have been built so far (a steady-state serving
@@ -215,6 +301,7 @@ impl Engine {
         scratch: &mut Scratch,
         threads: usize,
     ) -> Result<Vec<Vec<f64>>> {
+        self.check_opts(opts)?;
         if imgs.is_empty() {
             return Ok(Vec::new());
         }
@@ -312,11 +399,13 @@ impl Engine {
         let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
         let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
         let mult = wrec.s_w as f64 * s_in / s_out;
-        let m_eff = opts.m_for(mac_idx);
+        // Each layer resolves its own design point (uniform opts are the
+        // trivial policy) — and from it its own plan and CV epilogue.
+        let pt = opts.point_for(mac_idx);
         let ctx = GemmCtx {
-            family: if m_eff == 0 { Family::Exact } else { opts.family },
-            m: m_eff,
-            use_cv: opts.use_cv,
+            family: pt.family,
+            m: pt.m,
+            use_cv: pt.use_cv,
             zp_w: wrec.zp_w as i64,
             zp_a: zp_in as i64,
         };
@@ -433,6 +522,7 @@ impl Engine {
         systolic: bool,
         scratch: &mut Scratch,
     ) -> Result<(Vec<f64>, ToggleStats)> {
+        self.check_opts(opts)?;
         let nodes = &self.model.nodes;
         let mut outs: Vec<Tensor> = Vec::with_capacity(nodes.len());
         let mut toggles = ToggleStats::default();
@@ -510,11 +600,13 @@ impl Engine {
         let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
         let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
         let mult = wrec.s_w as f64 * s_in / s_out;
-        let m_eff = opts.m_for(mac_idx);
+        // Each layer resolves its own design point (uniform opts are the
+        // trivial policy) — and from it its own plan and CV epilogue.
+        let pt = opts.point_for(mac_idx);
         let ctx = GemmCtx {
-            family: if m_eff == 0 { Family::Exact } else { opts.family },
-            m: m_eff,
-            use_cv: opts.use_cv,
+            family: pt.family,
+            m: pt.m,
+            use_cv: pt.use_cv,
             zp_w: wrec.zp_w as i64,
             zp_a: zp_in as i64,
         };
@@ -608,6 +700,22 @@ impl Engine {
     ) -> Result<()> {
         if systolic {
             if let Some(arr) = &self.systolic {
+                // The cycle-level array bakes its multiplier at
+                // `prepare_systolic` time; a layer whose resolved point
+                // differs would silently run through the wrong LUT, so
+                // reject it here (per-layer policies on the simulator need
+                // every layer at the prepared point).
+                if (arr.family, arr.m) != (ctx.family, ctx.m) {
+                    bail!(
+                        "systolic array prepared for {} m={} but this layer \
+                         resolves to {} m={} — mixed per-layer points are not \
+                         supported by the cycle-level simulator",
+                        arr.family.name(),
+                        arr.m,
+                        ctx.family.name(),
+                        ctx.m
+                    );
+                }
                 scratch.acc = systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
                 return Ok(());
             }
@@ -617,12 +725,13 @@ impl Engine {
                 pjrt_gemm(rt, *variant, ctx, plan, row0, w, a, m_rows, k, n, bias)?;
             return Ok(());
         }
+        let lut = self.lut_lookup(ctx.family, ctx.m);
         approx_gemm_planned(
-            ctx_kind(self, ctx),
+            if lut.is_some() { GemmKind::Lut } else { GemmKind::Identity },
             ctx,
             plan,
             row0,
-            self.lut.as_ref(),
+            lut,
             w,
             a,
             m_rows,
@@ -683,14 +792,6 @@ fn pjrt_gemm(
         }
     }
     Ok(acc)
-}
-
-fn ctx_kind(e: &Engine, ctx: &GemmCtx) -> GemmKind {
-    // Use the LUT when one matching the context is prepared.
-    match &e.lut {
-        Some(l) if l.family == ctx.family && l.m == ctx.m => GemmKind::Lut,
-        _ => GemmKind::Identity,
-    }
 }
 
 fn out_q(nodes: &[Node], i: usize) -> (f64, i32) {
@@ -902,6 +1003,7 @@ fn shuffle(x: &Tensor, groups: usize) -> Tensor {
 mod tests {
     use super::*;
     use crate::nn::graph::Weights;
+    use crate::nn::testutil::{rand_image, rand_model};
     use crate::util::rng::Rng;
 
     /// Tiny synthetic model: input(4,4,3) -> conv3x3(8, relu) -> dense(5).
@@ -1065,108 +1167,6 @@ mod tests {
         assert_eq!(s.data, t.data);
     }
 
-    /// Random tiny conv net: input → conv (random ksize/stride/pad, relu)
-    /// → grouped 1×1/3×3 conv → dense. Exercises pad/stride/group edges and
-    /// nonzero input zero-points; scale choices are uncritical for the
-    /// batched-vs-per-image equality (both paths share them bit for bit).
-    fn rand_model(rng: &mut Rng) -> Model {
-        let h = 4 + rng.below(5) as usize;
-        let w = 4 + rng.below(5) as usize;
-        let c = 1 + rng.below(3) as usize;
-        let input = Node {
-            op: Op::Input,
-            relu: false,
-            inputs: vec![],
-            out_shape: (h, w, c),
-            out_scale: 1.0,
-            out_zp: rng.below(12) as i32,
-            cout: 0,
-            ksize: 0,
-            stride: 1,
-            pad: 0,
-            groups: 1,
-            weights: None,
-        };
-        let k1 = if rng.below(2) == 0 { 1 } else { 3 };
-        let pad1 = if k1 == 3 { rng.below(2) as usize } else { 0 };
-        let s1 = 1 + rng.below(2) as usize;
-        let cout1 = 4 + 2 * rng.below(3) as usize; // 4, 6, 8 (even for groups)
-        let oh1 = (h + 2 * pad1 - k1) / s1 + 1;
-        let ow1 = (w + 2 * pad1 - k1) / s1 + 1;
-        let kdim1 = k1 * k1 * c;
-        let conv1 = Node {
-            op: Op::Conv,
-            relu: rng.below(2) == 1,
-            inputs: vec![0],
-            out_shape: (oh1, ow1, cout1),
-            out_scale: 4096.0,
-            out_zp: rng.below(4) as i32,
-            cout: cout1,
-            ksize: k1,
-            stride: s1,
-            pad: pad1,
-            groups: 1,
-            weights: Some(Weights {
-                w_q: (0..cout1 * kdim1).map(|_| rng.u8()).collect(),
-                k_dim: kdim1,
-                b_q: (0..cout1).map(|_| rng.range_i64(-300, 300) as i32).collect(),
-                s_w: 1.0,
-                zp_w: rng.below(20) as i32,
-            }),
-        };
-        let k2 = if rng.below(2) == 0 { 1 } else { 3 };
-        let pad2 = if k2 == 3 { 1 } else { 0 };
-        let g2 = 2usize;
-        let cout2 = 8usize;
-        let kdim2 = k2 * k2 * (cout1 / g2);
-        let conv2 = Node {
-            op: Op::Conv,
-            relu: rng.below(2) == 1,
-            inputs: vec![1],
-            out_shape: (oh1, ow1, cout2),
-            out_scale: 4.0e7,
-            out_zp: 128,
-            cout: cout2,
-            ksize: k2,
-            stride: 1,
-            pad: pad2,
-            groups: g2,
-            weights: Some(Weights {
-                w_q: (0..cout2 * kdim2).map(|_| rng.u8()).collect(),
-                k_dim: kdim2,
-                b_q: (0..cout2).map(|_| rng.range_i64(-300, 300) as i32).collect(),
-                s_w: 1.0,
-                zp_w: rng.below(20) as i32,
-            }),
-        };
-        let kdim3 = oh1 * ow1 * cout2;
-        let dense = Node {
-            op: Op::Dense,
-            relu: false,
-            inputs: vec![2],
-            out_shape: (1, 1, 5),
-            out_scale: 7.0e7,
-            out_zp: 128,
-            cout: 5,
-            ksize: 0,
-            stride: 1,
-            pad: 0,
-            groups: 1,
-            weights: Some(Weights {
-                w_q: (0..5 * kdim3).map(|_| rng.u8()).collect(),
-                k_dim: kdim3,
-                b_q: vec![0; 5],
-                s_w: 1.0,
-                zp_w: rng.below(10) as i32,
-            }),
-        };
-        Model {
-            name: "rand".into(),
-            n_classes: 5,
-            nodes: vec![input, conv1, conv2, dense],
-        }
-    }
-
     #[test]
     fn forward_batch_matches_per_image_forward() {
         // The tentpole invariant: fusing a batch into one wide GEMM per
@@ -1262,6 +1262,191 @@ mod tests {
             2,
             "the batched path must reuse the per-image plans"
         );
+    }
+
+    #[test]
+    fn uniform_policy_is_bit_identical_to_uniform_opts() {
+        // Satellite property: a LayerPolicy with every layer at the same
+        // (family, m, use_cv) must be bit-identical to the uniform
+        // ForwardOpts path — across engines (identity / prepared LUT),
+        // batch sizes and GEMM thread counts — and share its plan cache.
+        crate::util::prop::check_msg(
+            "uniform policy == uniform opts",
+            8,
+            0xB0C1,
+            |r| {
+                let model_seed = r.next_u64();
+                let fam = Family::ALL[r.below(4) as usize];
+                let m = if fam == Family::Exact { 0 } else { 1 + r.below(7) as u32 };
+                let use_cv = r.below(2) == 1;
+                let use_lut = r.below(2) == 1;
+                let batch = 1 + r.below(4) as usize;
+                (model_seed, fam, m, use_cv, use_lut, batch)
+            },
+            |&(model_seed, fam, m, use_cv, use_lut, batch)| {
+                let mut rng = Rng::new(model_seed);
+                let model = rand_model(&mut rng);
+                let n_layers = model.mac_layers();
+                let imgs: Vec<Tensor> =
+                    (0..batch).map(|_| rand_image(&model, &mut rng)).collect();
+                let mut engine = Engine::new(model);
+                if use_lut {
+                    engine.prepare_lut(fam, m);
+                }
+                let uniform = ForwardOpts::approx(fam, m, use_cv);
+                let policy = std::sync::Arc::new(
+                    LayerPolicy::uniform(fam, m, use_cv, n_layers).unwrap(),
+                );
+                let via_policy = ForwardOpts::with_policy(policy);
+                let mut scratch = Scratch::new();
+                for img in &imgs {
+                    let a = engine.forward(img, &uniform).unwrap();
+                    let b = engine.forward(img, &via_policy).unwrap();
+                    if a != b {
+                        return Err(format!(
+                            "{} m={m} cv={use_cv} lut={use_lut}: per-image \
+                             policy != uniform",
+                            fam.name()
+                        ));
+                    }
+                }
+                let builds_after_both = engine.plan_builds();
+                let refs: Vec<&Tensor> = imgs.iter().collect();
+                let per: Vec<Vec<f64>> = imgs
+                    .iter()
+                    .map(|img| engine.forward(img, &uniform).unwrap())
+                    .collect();
+                for threads in [1usize, 3] {
+                    let batched = engine
+                        .forward_batch_with_threads(
+                            &refs,
+                            &via_policy,
+                            &mut scratch,
+                            threads,
+                        )
+                        .unwrap();
+                    if batched != per {
+                        return Err(format!(
+                            "{} m={m} cv={use_cv} lut={use_lut} batch={batch} \
+                             threads={threads}: batched policy != uniform",
+                            fam.name()
+                        ));
+                    }
+                }
+                if engine.plan_builds() != builds_after_both {
+                    return Err(
+                        "policy path must share the uniform plan cache".into()
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mixed_policy_forward_matches_forward_batch() {
+        // Satellite property: for arbitrary heterogeneous policies (every
+        // layer its own family/m/V), the batched path is bit-identical to
+        // per-image forwards, across thread counts and with/without
+        // per-point LUTs prepared.
+        crate::util::prop::check_msg(
+            "mixed policy forward == forward_batch",
+            8,
+            0xB0C2,
+            |r| {
+                let model_seed = r.next_u64();
+                let policy_seed = r.next_u64();
+                let batch = 1 + r.below(4) as usize;
+                let use_luts = r.below(2) == 1;
+                (model_seed, policy_seed, batch, use_luts)
+            },
+            |&(model_seed, policy_seed, batch, use_luts)| {
+                let mut rng = Rng::new(model_seed);
+                let model = rand_model(&mut rng);
+                let n_layers = model.mac_layers();
+                let imgs: Vec<Tensor> =
+                    (0..batch).map(|_| rand_image(&model, &mut rng)).collect();
+                let mut pr = Rng::new(policy_seed);
+                let points: Vec<LayerPoint> = (0..n_layers)
+                    .map(|_| {
+                        let fam = Family::ALL[pr.below(4) as usize];
+                        let m = if fam == Family::Exact {
+                            0
+                        } else {
+                            pr.below(8) as u32 // 0 = exact layer, else 1..7
+                        };
+                        LayerPoint::new(fam, m, pr.below(2) == 1)
+                    })
+                    .collect();
+                let policy =
+                    std::sync::Arc::new(LayerPolicy::new(points).unwrap());
+                let mut engine = Engine::new(model);
+                if use_luts {
+                    engine.prepare_luts_for_policy(&policy);
+                }
+                let opts = ForwardOpts::with_policy(policy.clone());
+                let per: Vec<Vec<f64>> = imgs
+                    .iter()
+                    .map(|img| engine.forward(img, &opts).unwrap())
+                    .collect();
+                let refs: Vec<&Tensor> = imgs.iter().collect();
+                let mut scratch = Scratch::new();
+                for threads in [1usize, 2, 5] {
+                    let batched = engine
+                        .forward_batch_with_threads(&refs, &opts, &mut scratch, threads)
+                        .unwrap();
+                    if batched != per {
+                        return Err(format!(
+                            "policy {} luts={use_luts} batch={batch} \
+                             threads={threads}: batched != per-image",
+                            policy.describe()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn policy_layer_count_mismatch_is_an_error() {
+        let engine = Engine::new(toy_model()); // 2 MAC layers
+        let img = toy_image();
+        for n in [1usize, 3] {
+            let policy = std::sync::Arc::new(
+                LayerPolicy::uniform(Family::Perforated, 2, true, n).unwrap(),
+            );
+            let opts = ForwardOpts::with_policy(policy.clone());
+            let err = engine.forward(&img, &opts).unwrap_err();
+            assert!(format!("{err:#}").contains("MAC layers"), "{err:#}");
+            let err = engine.forward_batch(&[&img], &opts).unwrap_err();
+            assert!(format!("{err:#}").contains("MAC layers"), "{err:#}");
+            assert!(engine.prepare_plans_policy(&policy).is_err());
+        }
+        // And nothing was cached by the failed attempts.
+        assert_eq!(engine.plan_builds(), 0);
+        // A matching policy then works.
+        let ok = std::sync::Arc::new(
+            LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap(),
+        );
+        engine.forward(&img, &ForwardOpts::with_policy(ok)).unwrap();
+    }
+
+    #[test]
+    fn m_out_of_range_is_an_error_not_garbage() {
+        // The seed silently masked with a truncated shift for m > 7; now
+        // both uniform and layerwise opts fail fast at forward entry.
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let too_big = ForwardOpts::approx(Family::Perforated, 9, true);
+        let err = engine.forward(&img, &too_big).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        assert!(engine.forward_batch(&[&img], &too_big).is_err());
+        let lw = ForwardOpts::layerwise(Family::Truncated, vec![6, 9], true);
+        assert!(engine.forward(&img, &lw).is_err());
+        // m = 7 is the last valid level.
+        let edge = ForwardOpts::approx(Family::Perforated, 7, true);
+        engine.forward(&img, &edge).unwrap();
     }
 
     #[test]

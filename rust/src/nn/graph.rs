@@ -123,6 +123,20 @@ impl Model {
         self.nodes.iter().filter(|n| n.weights.is_some()).count()
     }
 
+    /// MAC count of each MAC layer, in the same topological order as
+    /// `mac_node_indices` — the weights for policy-level power estimates
+    /// (`LayerPolicy::power_norm`, the layerwise greedy search).
+    pub fn mac_layer_macs(&self) -> Vec<u64> {
+        self.nodes
+            .iter()
+            .filter_map(|n| {
+                let w = n.weights.as_ref()?;
+                let (h, ww, c) = n.out_shape;
+                Some((h * ww * c) as u64 * w.k_dim as u64)
+            })
+            .collect()
+    }
+
     /// Node indices of the MAC layers in topological order — the key space
     /// of the engine's [`crate::nn::plan::PlanCache`] (plan `i` of a
     /// layerwise config belongs to node `mac_node_indices()[i]`).
@@ -254,6 +268,7 @@ mod tests {
         };
         let m = Model { name: "t".into(), n_classes: 2, nodes: vec![input, node] };
         assert_eq!(m.macs(), 4 * 4 * 8 * 27);
+        assert_eq!(m.mac_layer_macs(), vec![4 * 4 * 8 * 27]);
         assert_eq!(m.mac_layers(), 1);
         assert_eq!(m.params(), (8 * 27 + 32) as u64);
         assert_eq!(m.mac_node_indices(), vec![1]);

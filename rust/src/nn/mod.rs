@@ -6,9 +6,10 @@
 //! in conv/dense — the ops the paper's MAC array executes.
 //!
 //! * [`graph`] — the node IR (shared with python's nets.py) + model struct
-//! * [`loader`] — .cvm binary parser
+//! * [`loader`] — .cvm binary parser/writer
 //! * [`gemm`] — the approximate GEMM engines (identity / LUT / systolic)
 //! * [`plan`] — precomputed layer plans + the reusable scratch arena
+//! * [`policy`] — per-layer heterogeneous approximation policies
 //! * [`engine`] — the graph executor
 
 pub mod engine;
@@ -16,6 +17,7 @@ pub mod gemm;
 pub mod graph;
 pub mod loader;
 pub mod plan;
+pub mod policy;
 #[cfg(test)]
 pub(crate) mod testutil;
 
@@ -23,3 +25,4 @@ pub use engine::{Engine, ForwardOpts};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
 pub use plan::{LayerPlan, Scratch};
+pub use policy::{LayerPoint, LayerPolicy, SharedPolicy};

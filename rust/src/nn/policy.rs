@@ -1,0 +1,500 @@
+//! Per-layer heterogeneous approximation policies (ALWANN-style, runtime).
+//!
+//! The offline layerwise search (`report::layerwise`) shows that **mixed**
+//! per-layer approximation levels dominate uniform ones on the
+//! accuracy/power Pareto front. A [`LayerPolicy`] makes that result a
+//! first-class runtime concept: one [`LayerPoint`] — `(family, m, use_cv)`
+//! — per MAC layer (conv/dense, topological order). Because `m` and the
+//! family are *runtime* inputs of every GEMM engine and of the per-layer
+//! [`crate::nn::plan::LayerPlan`] cache, serving a mixed policy needs no
+//! recompilation: each layer simply resolves its own plan, LUT and CV
+//! epilogue from its point.
+//!
+//! Policies serialize two ways (both parsed back by [`LayerPolicy::load`]):
+//!
+//! * **JSON** — what the greedy search emits and benches consume:
+//!   `{"layers": [{"family": "perforated", "m": 2, "use_cv": true}, ...]}`
+//! * **text** — one line per layer for hand-written files:
+//!   `perforated 2 cv` / `truncated 6 nocv` / `exact`, with `#` comments.
+//!
+//! Validation is split so errors surface at the right level: structural
+//! validity (`m ≤ 7`, approximate families need `m ≥ 1`) at parse/build
+//! time, and the layer-count match against a concrete model
+//! ([`LayerPolicy::validate_for`]) at engine / coordinator entry, where it
+//! returns `Err` instead of poisoning a worker.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::Model;
+use crate::approx::Family;
+use crate::util::json::Json;
+
+/// Highest meaningful approximation level for 8-bit operands.
+pub const MAX_M: u32 = 7;
+
+/// One MAC layer's design point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerPoint {
+    pub family: Family,
+    pub m: u32,
+    pub use_cv: bool,
+}
+
+impl LayerPoint {
+    /// The exact (baseline) point.
+    pub const EXACT: LayerPoint =
+        LayerPoint { family: Family::Exact, m: 0, use_cv: false };
+
+    pub fn new(family: Family, m: u32, use_cv: bool) -> LayerPoint {
+        LayerPoint { family, m, use_cv }
+    }
+
+    /// Canonical form: `m == 0` or the exact family both mean "run exact"
+    /// — collapse them to [`LayerPoint::EXACT`] so plan-cache keys and
+    /// equality checks agree with the engine's effective behaviour.
+    pub fn normalized(self) -> LayerPoint {
+        if self.family == Family::Exact || self.m == 0 {
+            LayerPoint::EXACT
+        } else {
+            self
+        }
+    }
+
+    /// Structural validity: `m ≤ 7` always; approximate families need
+    /// `m ≥ 1` unless the point normalizes to exact.
+    pub fn validate(&self) -> Result<()> {
+        if self.m > MAX_M {
+            bail!(
+                "m = {} out of range for {} (max {MAX_M} for 8-bit operands)",
+                self.m,
+                self.family.name()
+            );
+        }
+        if self.family == Family::Exact && self.m != 0 {
+            bail!("exact family takes m = 0, got m = {}", self.m);
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj()
+            .field("family", self.family.name())
+            .field("m", self.m as i64)
+            .field("use_cv", self.use_cv)
+    }
+
+    fn from_json(j: &Json) -> Result<LayerPoint> {
+        let name = j
+            .get("family")
+            .and_then(|f| f.as_str())
+            .context("layer entry missing \"family\"")?;
+        let family = Family::from_name(name)
+            .with_context(|| format!("unknown family name {name:?}"))?;
+        let m = j.get("m").and_then(|m| m.as_f64()).context("layer entry missing \"m\"")?;
+        if m < 0.0 || m.fract() != 0.0 || m > 255.0 {
+            bail!("bad m {m} in layer entry");
+        }
+        // An omitted use_cv defaults to ON for approximate points — the
+        // same rule as the text format (`perforated 3` == `perforated 3
+        // cv`), so a hand-written policy behaves identically in either
+        // serialization. (What the search emits always writes it.)
+        let use_cv = j
+            .get("use_cv")
+            .and_then(|c| c.as_bool())
+            .unwrap_or(family != Family::Exact);
+        let p = LayerPoint { family, m: m as u32, use_cv };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// A per-MAC-layer approximation assignment: entry `i` configures the i-th
+/// conv/dense layer in topological order (the ordinal the engine's plan
+/// cache and `Model::mac_node_indices` use).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerPolicy {
+    layers: Vec<LayerPoint>,
+}
+
+impl LayerPolicy {
+    /// Build from explicit points; structurally validates every entry.
+    pub fn new(layers: Vec<LayerPoint>) -> Result<LayerPolicy> {
+        if layers.is_empty() {
+            bail!("a layer policy needs at least one layer");
+        }
+        for (i, p) in layers.iter().enumerate() {
+            p.validate().with_context(|| format!("layer {i}"))?;
+        }
+        Ok(LayerPolicy { layers })
+    }
+
+    /// The trivial policy: every one of `n_layers` at the same point.
+    pub fn uniform(family: Family, m: u32, use_cv: bool, n_layers: usize) -> Result<LayerPolicy> {
+        LayerPolicy::new(vec![LayerPoint::new(family, m, use_cv); n_layers.max(1)])
+    }
+
+    /// A per-layer-m policy at one family (the layerwise-search shape):
+    /// `ms[i] == 0` runs layer `i` exact.
+    pub fn from_ms(family: Family, ms: &[u32], use_cv: bool) -> Result<LayerPolicy> {
+        LayerPolicy::new(
+            ms.iter()
+                .map(|&m| LayerPoint::new(family, m, use_cv).normalized())
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// The point for MAC layer ordinal `mac_idx` (normalized).
+    pub fn point(&self, mac_idx: usize) -> LayerPoint {
+        self.layers[mac_idx].normalized()
+    }
+
+    pub fn points(&self) -> impl Iterator<Item = LayerPoint> + '_ {
+        self.layers.iter().map(|p| p.normalized())
+    }
+
+    /// `Some(point)` when every layer normalizes to the same point — such a
+    /// policy is semantically identical to uniform `ForwardOpts`
+    /// (property-tested bit-identical in the engine suite).
+    pub fn as_uniform(&self) -> Option<LayerPoint> {
+        let first = self.point(0);
+        self.points().all(|p| p == first).then_some(first)
+    }
+
+    /// Number of layers that actually run approximate.
+    pub fn approx_layers(&self) -> usize {
+        self.points().filter(|p| *p != LayerPoint::EXACT).count()
+    }
+
+    /// Check this policy against a concrete model: one entry per MAC layer.
+    pub fn validate_for(&self, model: &Model) -> Result<()> {
+        let want = model.mac_layers();
+        if self.layers.len() != want {
+            bail!(
+                "policy has {} layers but model {:?} has {} MAC layers",
+                self.layers.len(),
+                model.name,
+                want
+            );
+        }
+        Ok(())
+    }
+
+    /// MAC-weighted normalized power of this policy on `model` at array
+    /// size `n_array`: approximate layers cost their family's
+    /// `array_cost(m).power_norm`, exact layers cost 1.0 — the serving
+    /// metrics' estimated-power quantity (and the layerwise report's).
+    pub fn power_norm(&self, model: &Model, n_array: u32) -> f64 {
+        let macs = model.mac_layer_macs();
+        debug_assert_eq!(macs.len(), self.layers.len(), "call validate_for first");
+        let total: u64 = macs.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let weighted: f64 = self
+            .points()
+            .zip(&macs)
+            .map(|(p, &w)| {
+                let pn = if p == LayerPoint::EXACT {
+                    1.0
+                } else {
+                    crate::hw::array_cost(p.family, p.m, n_array).power_norm
+                };
+                pn * w as f64
+            })
+            .sum();
+        weighted / total as f64
+    }
+
+    // ---- serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("n_layers", self.layers.len())
+            .field(
+                "layers",
+                Json::Arr(self.layers.iter().map(|p| p.to_json()).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerPolicy> {
+        let layers = j
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .context("policy JSON missing \"layers\" array")?;
+        let points = layers
+            .iter()
+            .enumerate()
+            .map(|(i, e)| LayerPoint::from_json(e).with_context(|| format!("layer {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        LayerPolicy::new(points)
+    }
+
+    /// One line per layer: `<family> <m> <cv|nocv>`, or bare `exact`.
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# per-layer approximation policy: one MAC layer per line\n");
+        for p in &self.layers {
+            let p = p.normalized();
+            if p == LayerPoint::EXACT {
+                s.push_str("exact\n");
+            } else {
+                s.push_str(&format!(
+                    "{} {} {}\n",
+                    p.family.name(),
+                    p.m,
+                    if p.use_cv { "cv" } else { "nocv" }
+                ));
+            }
+        }
+        s
+    }
+
+    pub fn parse_text(text: &str) -> Result<LayerPolicy> {
+        let mut points = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().unwrap();
+            let family = Family::from_name(name).with_context(|| {
+                format!("line {}: unknown family name {name:?}", lineno + 1)
+            })?;
+            let point = if family == Family::Exact {
+                LayerPoint::EXACT
+            } else {
+                let m: u32 = parts
+                    .next()
+                    .with_context(|| format!("line {}: missing m", lineno + 1))?
+                    .parse()
+                    .with_context(|| format!("line {}: bad m", lineno + 1))?;
+                let use_cv = match parts.next() {
+                    None | Some("cv") => true,
+                    Some("nocv") => false,
+                    Some(other) => {
+                        bail!("line {}: expected cv|nocv, got {other:?}", lineno + 1)
+                    }
+                };
+                LayerPoint::new(family, m, use_cv)
+            };
+            if let Some(extra) = parts.next() {
+                bail!("line {}: trailing token {extra:?}", lineno + 1);
+            }
+            point.validate().with_context(|| format!("line {}", lineno + 1))?;
+            points.push(point);
+        }
+        LayerPolicy::new(points)
+    }
+
+    /// Parse either serialization (sniffed: JSON starts with `{`).
+    pub fn parse(text: &str) -> Result<LayerPolicy> {
+        if text.trim_start().starts_with('{') {
+            LayerPolicy::from_json(&Json::parse(text).context("policy JSON")?)
+        } else {
+            LayerPolicy::parse_text(text)
+        }
+    }
+
+    /// Load a policy file (JSON or text — see [`LayerPolicy::parse`]).
+    pub fn load(path: &Path) -> Result<LayerPolicy> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing policy {}", path.display()))
+    }
+
+    /// Write the JSON form (what `cvapprox layerwise` emits).
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().render())
+            .with_context(|| format!("writing policy {}", path.display()))
+    }
+
+    /// Compact human-readable summary, e.g. `[perforated:3+V, exact, ...]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .points()
+            .map(|p| {
+                if p == LayerPoint::EXACT {
+                    "exact".to_string()
+                } else {
+                    format!(
+                        "{}:{}{}",
+                        p.family.name(),
+                        p.m,
+                        if p.use_cv { "+V" } else { "" }
+                    )
+                }
+            })
+            .collect();
+        format!("[{}]", parts.join(", "))
+    }
+}
+
+/// Shared-ownership alias — the engine, coordinator and every worker hold
+/// the same immutable policy.
+pub type SharedPolicy = Arc<LayerPolicy>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil;
+
+    #[test]
+    fn uniform_policy_is_uniform() {
+        let p = LayerPolicy::uniform(Family::Perforated, 2, true, 3).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(
+            p.as_uniform(),
+            Some(LayerPoint::new(Family::Perforated, 2, true))
+        );
+        assert_eq!(p.approx_layers(), 3);
+    }
+
+    #[test]
+    fn m_zero_normalizes_to_exact() {
+        let p = LayerPolicy::from_ms(Family::Truncated, &[6, 0], true).unwrap();
+        assert_eq!(p.point(0), LayerPoint::new(Family::Truncated, 6, true));
+        assert_eq!(p.point(1), LayerPoint::EXACT);
+        assert_eq!(p.approx_layers(), 1);
+        assert!(p.as_uniform().is_none());
+        // all-zero ms normalize to a uniform exact policy
+        let z = LayerPolicy::from_ms(Family::Perforated, &[0, 0], true).unwrap();
+        assert_eq!(z.as_uniform(), Some(LayerPoint::EXACT));
+    }
+
+    #[test]
+    fn structural_validation_rejects_bad_points() {
+        assert!(LayerPolicy::uniform(Family::Perforated, 8, true, 2).is_err());
+        assert!(LayerPoint::new(Family::Exact, 3, false).validate().is_err());
+        assert!(LayerPolicy::new(vec![]).is_err());
+        assert!(LayerPoint::new(Family::Recursive, 7, true).validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_points() {
+        let p = LayerPolicy::new(vec![
+            LayerPoint::new(Family::Perforated, 3, true),
+            LayerPoint::EXACT,
+            LayerPoint::new(Family::Truncated, 6, false),
+        ])
+        .unwrap();
+        let j = p.to_json().render();
+        let back = LayerPolicy::parse(&j).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(
+            j.contains("\"family\": \"perforated\""),
+            true,
+            "stable field names: {j}"
+        );
+    }
+
+    #[test]
+    fn text_roundtrip_preserves_points() {
+        let p = LayerPolicy::new(vec![
+            LayerPoint::new(Family::Recursive, 4, false),
+            LayerPoint::EXACT,
+            LayerPoint::new(Family::Perforated, 1, true),
+        ])
+        .unwrap();
+        let back = LayerPolicy::parse(&p.to_text()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn text_parser_accepts_comments_and_defaults_cv() {
+        let p = LayerPolicy::parse_text(
+            "# header\nperforated 2   # inline comment, cv defaults on\n\nexact\n",
+        )
+        .unwrap();
+        assert_eq!(p.point(0), LayerPoint::new(Family::Perforated, 2, true));
+        assert_eq!(p.point(1), LayerPoint::EXACT);
+    }
+
+    #[test]
+    fn json_omitted_use_cv_defaults_on_like_text() {
+        // Both serializations must agree on what an omitted use_cv means:
+        // ON for approximate points.
+        let p = LayerPolicy::parse(
+            "{\"layers\": [{\"family\": \"perforated\", \"m\": 3}, \
+             {\"family\": \"exact\", \"m\": 0}]}",
+        )
+        .unwrap();
+        assert_eq!(p.point(0), LayerPoint::new(Family::Perforated, 3, true));
+        assert_eq!(p.point(1), LayerPoint::EXACT);
+    }
+
+    #[test]
+    fn parsers_reject_malformed_policies() {
+        // unknown family name (both formats)
+        assert!(LayerPolicy::parse_text("bogus 2 cv").is_err());
+        assert!(LayerPolicy::parse(
+            "{\"layers\": [{\"family\": \"bogus\", \"m\": 2}]}"
+        )
+        .is_err());
+        // m out of range
+        assert!(LayerPolicy::parse_text("perforated 9 cv").is_err());
+        assert!(LayerPolicy::parse(
+            "{\"layers\": [{\"family\": \"perforated\", \"m\": 9}]}"
+        )
+        .is_err());
+        // structural garbage
+        assert!(LayerPolicy::parse_text("perforated two cv").is_err());
+        assert!(LayerPolicy::parse_text("perforated 2 maybe").is_err());
+        assert!(LayerPolicy::parse_text("perforated 2 cv extra").is_err());
+        assert!(LayerPolicy::parse_text("").is_err());
+        assert!(LayerPolicy::parse("{\"layers\": []}").is_err());
+        assert!(LayerPolicy::parse("{\"nope\": 1}").is_err());
+        assert!(LayerPolicy::parse("{\"layers\": [{\"m\": 2}]}").is_err());
+    }
+
+    #[test]
+    fn validate_for_checks_layer_count() {
+        let model = testutil::tiny_model(); // 2 MAC layers
+        let ok = LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap();
+        assert!(ok.validate_for(&model).is_ok());
+        let bad = LayerPolicy::uniform(Family::Perforated, 2, true, 3).unwrap();
+        let err = bad.validate_for(&model).unwrap_err();
+        assert!(format!("{err:#}").contains("MAC layers"), "{err:#}");
+    }
+
+    #[test]
+    fn power_norm_is_mac_weighted() {
+        let model = testutil::tiny_model();
+        let exact = LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap();
+        assert!((exact.power_norm(&model, 64) - 1.0).abs() < 1e-12);
+        let uni = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
+        let p_uni = uni.power_norm(&model, 64);
+        let cost = crate::hw::array_cost(Family::Perforated, 3, 64).power_norm;
+        assert!((p_uni - cost).abs() < 1e-12, "uniform == array cost");
+        // Mixed: strictly between exact and uniform.
+        let mixed = LayerPolicy::from_ms(Family::Perforated, &[3, 0], true).unwrap();
+        let p_mixed = mixed.power_norm(&model, 64);
+        assert!(p_uni < p_mixed && p_mixed < 1.0, "{p_uni} < {p_mixed} < 1");
+        // And MAC-weighted: approximating the big layer saves more.
+        let macs = model.mac_layer_macs();
+        let big_first = macs[0] > macs[1];
+        let other = LayerPolicy::from_ms(Family::Perforated, &[0, 3], true).unwrap();
+        let p_other = other.power_norm(&model, 64);
+        if big_first {
+            assert!(p_mixed < p_other);
+        } else {
+            assert!(p_other < p_mixed);
+        }
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        let p = LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap();
+        assert_eq!(p.describe(), "[perforated:2+V, exact]");
+    }
+}

@@ -69,3 +69,113 @@ pub fn tiny_image(seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
     Tensor::from_data(6, 6, 3, (0..6 * 6 * 3).map(|_| rng.u8()).collect())
 }
+
+/// Random tiny conv net: input → conv (random ksize/stride/pad, relu)
+/// → grouped 1×1/3×3 conv → dense. Exercises pad/stride/group edges and
+/// nonzero input zero-points; scale choices are uncritical for the
+/// bit-identity properties (batched vs per-image, policy vs uniform) —
+/// both paths share them bit for bit. Shared by the engine and policy
+/// property suites (3 MAC layers).
+pub fn rand_model(rng: &mut Rng) -> Model {
+    let h = 4 + rng.below(5) as usize;
+    let w = 4 + rng.below(5) as usize;
+    let c = 1 + rng.below(3) as usize;
+    let input = Node {
+        op: Op::Input,
+        relu: false,
+        inputs: vec![],
+        out_shape: (h, w, c),
+        out_scale: 1.0,
+        out_zp: rng.below(12) as i32,
+        cout: 0,
+        ksize: 0,
+        stride: 1,
+        pad: 0,
+        groups: 1,
+        weights: None,
+    };
+    let k1 = if rng.below(2) == 0 { 1 } else { 3 };
+    let pad1 = if k1 == 3 { rng.below(2) as usize } else { 0 };
+    let s1 = 1 + rng.below(2) as usize;
+    let cout1 = 4 + 2 * rng.below(3) as usize; // 4, 6, 8 (even for groups)
+    let oh1 = (h + 2 * pad1 - k1) / s1 + 1;
+    let ow1 = (w + 2 * pad1 - k1) / s1 + 1;
+    let kdim1 = k1 * k1 * c;
+    let conv1 = Node {
+        op: Op::Conv,
+        relu: rng.below(2) == 1,
+        inputs: vec![0],
+        out_shape: (oh1, ow1, cout1),
+        out_scale: 4096.0,
+        out_zp: rng.below(4) as i32,
+        cout: cout1,
+        ksize: k1,
+        stride: s1,
+        pad: pad1,
+        groups: 1,
+        weights: Some(Weights {
+            w_q: (0..cout1 * kdim1).map(|_| rng.u8()).collect(),
+            k_dim: kdim1,
+            b_q: (0..cout1).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+            s_w: 1.0,
+            zp_w: rng.below(20) as i32,
+        }),
+    };
+    let k2 = if rng.below(2) == 0 { 1 } else { 3 };
+    let pad2 = if k2 == 3 { 1 } else { 0 };
+    let g2 = 2usize;
+    let cout2 = 8usize;
+    let kdim2 = k2 * k2 * (cout1 / g2);
+    let conv2 = Node {
+        op: Op::Conv,
+        relu: rng.below(2) == 1,
+        inputs: vec![1],
+        out_shape: (oh1, ow1, cout2),
+        out_scale: 4.0e7,
+        out_zp: 128,
+        cout: cout2,
+        ksize: k2,
+        stride: 1,
+        pad: pad2,
+        groups: g2,
+        weights: Some(Weights {
+            w_q: (0..cout2 * kdim2).map(|_| rng.u8()).collect(),
+            k_dim: kdim2,
+            b_q: (0..cout2).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+            s_w: 1.0,
+            zp_w: rng.below(20) as i32,
+        }),
+    };
+    let kdim3 = oh1 * ow1 * cout2;
+    let dense = Node {
+        op: Op::Dense,
+        relu: false,
+        inputs: vec![2],
+        out_shape: (1, 1, 5),
+        out_scale: 7.0e7,
+        out_zp: 128,
+        cout: 5,
+        ksize: 0,
+        stride: 1,
+        pad: 0,
+        groups: 1,
+        weights: Some(Weights {
+            w_q: (0..5 * kdim3).map(|_| rng.u8()).collect(),
+            k_dim: kdim3,
+            b_q: vec![0; 5],
+            s_w: 1.0,
+            zp_w: rng.below(10) as i32,
+        }),
+    };
+    Model {
+        name: "rand".into(),
+        n_classes: 5,
+        nodes: vec![input, conv1, conv2, dense],
+    }
+}
+
+/// A random image matching `model`'s input shape.
+pub fn rand_image(model: &Model, rng: &mut Rng) -> Tensor {
+    let (h, w, c) = model.nodes[0].out_shape;
+    Tensor::from_data(h, w, c, (0..h * w * c).map(|_| rng.u8()).collect())
+}

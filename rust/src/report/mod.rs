@@ -34,6 +34,7 @@ use crate::{artifacts_dir, runtime};
 const KNOWN_OPTS: &[&str] = &[
     "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
     "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
+    "policy",
 ];
 
 pub fn cli_main() {
@@ -199,10 +200,21 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     }
     let workers =
         args.get_usize("workers", crate::coordinator::default_service_workers())?;
+    // --policy FILE serves a per-layer heterogeneous policy (e.g. the one
+    // `cvapprox layerwise --json` emits) instead of the uniform triple.
+    let policy = match args.get("policy") {
+        Some(path) => {
+            let p = crate::nn::LayerPolicy::load(std::path::Path::new(path))?;
+            println!("policy: {}", p.describe());
+            Some(std::sync::Arc::new(p))
+        }
+        None => None,
+    };
     let cfg = ServiceConfig {
         family,
         m,
         use_cv,
+        policy,
         n_array,
         workers,
         batch_size: batch,
@@ -215,7 +227,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         args.get_or("engine", "native"),
         macs
     );
-    let svc = InferenceService::start(engine, cfg);
+    let svc = InferenceService::start(engine, cfg)?;
     let n = n.min(ds.n);
     let pending = (0..n)
         .map(|i| svc.submit(ds.image(i)))
@@ -309,7 +321,8 @@ fn cmd_layerwise(args: &Args) -> Result<()> {
     let m_hi: u32 = args.get_or("m", "3").parse()?;
     let budget: f64 = args.get_or("budget", "1.0").parse()?;
     let n = args.get_usize("n", 150)?;
-    layerwise::run(&art, net, ds, family, m_hi, budget, n)
+    let out = args.get("json").map(std::path::Path::new);
+    layerwise::run(&art, net, ds, family, m_hi, budget, n, out)
 }
 
 fn cmd_info() -> Result<()> {

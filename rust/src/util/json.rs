@@ -1,7 +1,11 @@
-//! Minimal JSON writer (no serde offline). Reports and bench outputs are
-//! emitted as JSON so they can be diffed / plotted outside the binary.
+//! Minimal JSON writer + parser (no serde offline). Reports and bench
+//! outputs are emitted as JSON so they can be diffed / plotted outside the
+//! binary; the parser exists for the small configuration artifacts the
+//! binary reads back (per-layer approximation policies).
 
 use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
 
 /// A JSON value builder with ergonomic constructors.
 #[derive(Clone, Debug)]
@@ -34,6 +38,54 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s, 0);
         s
+    }
+
+    /// Parse a JSON document (strict enough for the artifacts this crate
+    /// writes itself: no comments, no trailing commas).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -90,6 +142,182 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Recursive-descent parser over the raw bytes (ASCII structure; string
+/// contents pass through as UTF-8).
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        match self.b.get(self.pos) {
+            Some(&c) => Ok(c),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.pos);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let Some(&c) = self.b.get(self.pos) else { bail!("unterminated string") };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let Some(&e) = self.b.get(self.pos) else {
+                        bail!("unterminated escape")
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32);
+                            match hex {
+                                Some(ch) => {
+                                    s.push(ch);
+                                    self.pos += 4;
+                                }
+                                None => bail!("bad \\u escape at byte {}", self.pos),
+                            }
+                        }
+                        _ => bail!("bad escape '\\{}'", e as char),
+                    }
+                }
+                _ => {
+                    // Re-assemble multi-byte UTF-8 sequences from raw bytes.
+                    let start = self.pos - 1;
+                    let len = match c {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        _ => 4,
+                    };
+                    match self
+                        .b
+                        .get(start..start + len)
+                        .and_then(|x| std::str::from_utf8(x).ok())
+                    {
+                        Some(frag) => {
+                            s.push_str(frag);
+                            self.pos = start + len;
+                        }
+                        None => bail!("invalid utf8 in string at byte {start}"),
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .b
+            .get(self.pos)
+            .map(|c| c.is_ascii_digit() || b"+-.eE".contains(c))
+            .unwrap_or(false)
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| anyhow::anyhow!("bad number at byte {start}"))
     }
 }
 
@@ -150,5 +378,62 @@ mod tests {
     fn escapes_strings() {
         let s = Json::Str("a\"b\\c\nd".into()).render();
         assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .field("name", "pölicy \"x\"\n")
+            .field("n", 3i64)
+            .field("pi", 3.25f64)
+            .field("neg", -17i64)
+            .field("rows", Json::arr([1.5f64, 2.0]))
+            .field("ok", true)
+            .field("nothing", Json::Null)
+            .field("nested", Json::obj().field("deep", Json::arr(["a", "b"])));
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "pölicy \"x\"\n");
+        assert_eq!(parsed.get("n").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(parsed.get("pi").unwrap().as_f64().unwrap(), 3.25);
+        assert_eq!(parsed.get("neg").unwrap().as_f64().unwrap(), -17.0);
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(parsed.get("ok").unwrap().as_bool(), Some(true));
+        assert!(matches!(parsed.get("nothing"), Some(Json::Null)));
+        let deep = parsed.get("nested").unwrap().get("deep").unwrap();
+        assert_eq!(deep.as_arr().unwrap()[1].as_str(), Some("b"));
+        // rendering the parse re-parses to the same shape
+        assert!(Json::parse(&parsed.render()).is_ok());
+    }
+
+    #[test]
+    fn parse_accepts_plain_scalars_and_empties() {
+        assert_eq!(Json::parse("42").unwrap().as_f64(), Some(42.0));
+        assert_eq!(Json::parse(" \"hi\" ").unwrap().as_str(), Some("hi"));
+        assert!(Json::parse("[]").unwrap().as_arr().unwrap().is_empty());
+        assert!(Json::parse("{}").unwrap().get("x").is_none());
+        assert_eq!(
+            Json::parse("[1, 2, 3]").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            Json::parse("\"\\u0041\\t\"").unwrap().as_str(),
+            Some("A\t")
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\": 1} x",
+            "\"unterminated",
+            "nul",
+            "{1: 2}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?}");
+        }
     }
 }

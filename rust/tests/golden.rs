@@ -1,23 +1,40 @@
 //! Golden-vector integration tests: the rust engine must reproduce the
 //! python quantized reference **bit-exactly** (logits are dequantized from
 //! identical uint8 outputs, so equality is exact, not approximate).
+//!
+//! Two tiers:
+//! * **Hermetic** (always runs — never skips, in CI too): the checked-in
+//!   mini-artifacts under `rust/tests/hermetic/`, generated once from the
+//!   python reference by `scripts/gen_hermetic_golden.py`. Covers the full
+//!   (family, m, ±V) paper grid on a synthetic net through the identity,
+//!   LUT, batched and systolic engines.
+//! * **Artifact superset** (runs when `make artifacts` has been built):
+//!   the six trained nets × 36+ golden vectors.
 
-use cvapprox::artifacts_dir;
+use std::path::Path;
+
+use cvapprox::approx::Family;
 use cvapprox::datasets::{Dataset, Golden};
-use cvapprox::nn::{loader, Engine, ForwardOpts, GemmKind};
+use cvapprox::nn::{loader, Engine, ForwardOpts, GemmKind, Tensor};
+use cvapprox::{artifacts_dir, hermetic_dir};
 
 fn have_artifacts() -> bool {
     artifacts_dir().join("golden").is_dir() && artifacts_dir().join("models").is_dir()
 }
 
-fn run_golden(g: &Golden, kind: GemmKind) -> Vec<f64> {
-    let art = artifacts_dir();
-    let model = loader::load_model(&art.join(format!("models/{}.cvm", g.model_name)))
+/// Load the model + image a golden vector refers to, rooted at `root`
+/// (the artifacts dir or the hermetic dir — same layout).
+fn load_case(root: &Path, g: &Golden) -> (Engine, Tensor) {
+    let model = loader::load_model(&root.join(format!("models/{}.cvm", g.model_name)))
         .expect("model loads");
     let ds_name = g.model_name.rsplit('_').next().unwrap();
-    let ds = Dataset::load(&art.join(format!("data/{ds_name}_test.cvd"))).unwrap();
+    let ds = Dataset::load(&root.join(format!("data/{ds_name}_test.cvd"))).unwrap();
     let img = ds.image(g.img_index);
-    let mut engine = Engine::new(model);
+    (Engine::new(model), img)
+}
+
+fn run_golden(root: &Path, g: &Golden, kind: GemmKind) -> Vec<f64> {
+    let (mut engine, img) = load_case(root, g);
     let mut opts = ForwardOpts::approx(g.family, g.m, g.use_cv);
     opts.kind = kind;
     if kind == GemmKind::Lut {
@@ -26,93 +43,176 @@ fn run_golden(g: &Golden, kind: GemmKind) -> Vec<f64> {
     engine.forward(&img, &opts).expect("forward runs")
 }
 
+fn assert_logits_match(got: &[f64], g: &Golden, label: &str) {
+    assert_eq!(
+        got.len(),
+        g.logits.len(),
+        "{label} {} {:?} m={} cv={}",
+        g.model_name,
+        g.family,
+        g.m,
+        g.use_cv
+    );
+    for (i, (a, b)) in got.iter().zip(&g.logits).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-12,
+            "{label} {} {:?} m={} cv={} img={} logit[{i}]: rust {a} vs python {b}",
+            g.model_name,
+            g.family,
+            g.m,
+            g.use_cv,
+            g.img_index
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hermetic tier: always executes — a missing hermetic set is a FAILURE,
+// not a skip (that silent skip was exactly the CI gap this suite closes).
+// ---------------------------------------------------------------------------
+
+fn hermetic_goldens() -> Vec<Golden> {
+    let dir = hermetic_dir().join("golden");
+    assert!(
+        dir.is_dir(),
+        "hermetic golden set missing at {} — regenerate with \
+         scripts/gen_hermetic_golden.py",
+        dir.display()
+    );
+    let goldens = Golden::load_dir(&dir).unwrap();
+    assert!(
+        goldens.len() >= 38,
+        "hermetic set is incomplete: {} vectors",
+        goldens.len()
+    );
+    // The grid must cover every family, both V modes, and 2 images.
+    for fam in Family::ALL {
+        assert!(goldens.iter().any(|g| g.family == fam), "{fam:?} missing");
+    }
+    assert!(goldens.iter().any(|g| g.use_cv));
+    assert!(goldens.iter().any(|g| !g.use_cv && g.family != Family::Exact));
+    goldens
+}
+
+#[test]
+fn hermetic_identity_engine_matches_python_reference_exactly() {
+    let root = hermetic_dir();
+    for g in &hermetic_goldens() {
+        let got = run_golden(&root, g, GemmKind::Identity);
+        assert_logits_match(&got, g, "hermetic identity");
+    }
+}
+
+#[test]
+fn hermetic_lut_engine_matches_python_reference_exactly() {
+    let root = hermetic_dir();
+    for g in hermetic_goldens().iter().filter(|g| g.family != Family::Exact) {
+        let got = run_golden(&root, g, GemmKind::Lut);
+        assert_logits_match(&got, g, "hermetic lut");
+    }
+}
+
+#[test]
+fn hermetic_batched_forward_matches_python_reference_exactly() {
+    // The batched serving path (one wide GEMM per layer) against the python
+    // reference: for every (family, m, cv) config, fuse both golden images
+    // into one batch and compare each reply to its golden vector.
+    let root = hermetic_dir();
+    let goldens = hermetic_goldens();
+    let mut configs: Vec<(Family, u32, bool)> =
+        goldens.iter().map(|g| (g.family, g.m, g.use_cv)).collect();
+    configs.sort();
+    configs.dedup();
+    for (family, m, use_cv) in configs {
+        let cases: Vec<&Golden> = goldens
+            .iter()
+            .filter(|g| (g.family, g.m, g.use_cv) == (family, m, use_cv))
+            .collect();
+        assert!(cases.len() >= 2, "{family:?} m={m} cv={use_cv}");
+        let (engine, _) = load_case(&root, cases[0]);
+        let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).unwrap();
+        let imgs: Vec<Tensor> = cases.iter().map(|g| ds.image(g.img_index)).collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let opts = ForwardOpts::approx(family, m, use_cv);
+        let batched = engine.forward_batch(&refs, &opts).expect("batched forward");
+        for (g, got) in cases.iter().zip(&batched) {
+            assert_logits_match(got, g, "hermetic batched");
+        }
+    }
+}
+
+#[test]
+fn hermetic_systolic_engine_matches_python_reference() {
+    // The cycle-level array on one golden per (family, V) — slower, so a
+    // subset; still hermetic and never skipped.
+    let root = hermetic_dir();
+    let mut done = std::collections::BTreeSet::new();
+    for g in &hermetic_goldens() {
+        if g.family == Family::Exact || !done.insert((g.family.code(), g.use_cv)) {
+            continue;
+        }
+        let (mut engine, img) = load_case(&root, g);
+        engine.prepare_systolic(g.family, g.m, 64);
+        let opts = ForwardOpts::approx(g.family, g.m, g.use_cv);
+        let (logits, stats) = engine.forward_systolic(&img, &opts).unwrap();
+        assert_logits_match(&logits, g, "hermetic systolic");
+        assert!(stats.cycles > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact superset tier: the trained nets, when `make artifacts` exists.
+// ---------------------------------------------------------------------------
+
 #[test]
 fn identity_engine_matches_python_reference_exactly() {
     if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping artifact superset (hermetic tier still ran): run `make artifacts`");
         return;
     }
     let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
     assert!(goldens.len() >= 36);
+    let root = artifacts_dir();
     for g in &goldens {
-        let got = run_golden(g, GemmKind::Identity);
-        assert_eq!(
-            got.len(),
-            g.logits.len(),
-            "{} {:?} m={} cv={}",
-            g.model_name,
-            g.family,
-            g.m,
-            g.use_cv
-        );
-        for (i, (a, b)) in got.iter().zip(&g.logits).enumerate() {
-            assert!(
-                (a - b).abs() < 1e-12,
-                "{} {:?} m={} cv={} img={} logit[{i}]: rust {a} vs python {b}",
-                g.model_name,
-                g.family,
-                g.m,
-                g.use_cv,
-                g.img_index
-            );
-        }
+        let got = run_golden(&root, g, GemmKind::Identity);
+        assert_logits_match(&got, g, "identity");
     }
 }
 
 #[test]
 fn lut_engine_matches_python_reference_exactly() {
     if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping artifact superset (hermetic tier still ran): run `make artifacts`");
         return;
     }
     let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
+    let root = artifacts_dir();
     // LUT path on the approximate subset (exact family has no LUT).
-    for g in goldens.iter().filter(|g| g.family != cvapprox::approx::Family::Exact) {
-        let got = run_golden(g, GemmKind::Lut);
-        for (a, b) in got.iter().zip(&g.logits) {
-            assert!(
-                (a - b).abs() < 1e-12,
-                "lut {} {:?} m={} cv={}: {a} vs {b}",
-                g.model_name,
-                g.family,
-                g.m,
-                g.use_cv
-            );
-        }
+    for g in goldens.iter().filter(|g| g.family != Family::Exact) {
+        let got = run_golden(&root, g, GemmKind::Lut);
+        assert_logits_match(&got, g, "lut");
     }
 }
 
 #[test]
 fn systolic_engine_matches_python_reference() {
     if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping artifact superset (hermetic tier still ran): run `make artifacts`");
         return;
     }
     // The cycle-level array on one golden per family (slower).
     let goldens = Golden::load_dir(&artifacts_dir().join("golden")).unwrap();
+    let root = artifacts_dir();
     let mut done = std::collections::BTreeSet::new();
     for g in &goldens {
         if g.model_name != "resnet8_synth10" || !done.insert((g.family.code(), g.use_cv)) {
             continue;
         }
-        let art = artifacts_dir();
-        let model =
-            loader::load_model(&art.join(format!("models/{}.cvm", g.model_name))).unwrap();
-        let ds = Dataset::load(&art.join("data/synth10_test.cvd")).unwrap();
-        let img = ds.image(g.img_index);
-        let mut engine = Engine::new(model);
+        let (mut engine, img) = load_case(&root, g);
         engine.prepare_systolic(g.family, g.m, 64);
         let opts = ForwardOpts::approx(g.family, g.m, g.use_cv);
         let (logits, stats) = engine.forward_systolic(&img, &opts).unwrap();
-        for (a, b) in logits.iter().zip(&g.logits) {
-            assert!(
-                (a - b).abs() < 1e-12,
-                "systolic {:?} m={} cv={}: {a} vs {b}",
-                g.family,
-                g.m,
-                g.use_cv
-            );
-        }
+        assert_logits_match(&logits, g, "systolic");
         assert!(stats.cycles > 0);
     }
 }

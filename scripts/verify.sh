@@ -17,6 +17,14 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# The hermetic golden suite must EXECUTE (not skip): it runs on the
+# checked-in rust/tests/hermetic mini-artifacts, so a pass here proves the
+# engine still matches the python reference bit-for-bit without
+# `make artifacts`. (Included in `cargo test -q` above; run by name so a
+# silent skip regression is visible in the log.)
+echo "== tier-1: hermetic golden vectors =="
+cargo test -q -p cvapprox --test golden hermetic
+
 # The coordinator worker pool must behave identically at 1 worker and at a
 # small pool (bit-exact replies, batch fusion, clean shutdown, no panics).
 # The burst/NaN/default-config service tests size their pools from
@@ -43,6 +51,20 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
         echo "== BENCH_serving.json written =="
     else
         echo "error: bench did not write BENCH_serving.json" >&2
+        exit 1
+    fi
+
+    # Heterogeneous-policy serving: hermetic (no artifacts needed). The
+    # bench itself asserts the acceptance claim — the greedy mixed policy
+    # beats every uniform point at equal-or-lower synthetic accuracy loss —
+    # and that pool replies are bit-identical to the per-image policy
+    # forward, so a nonzero exit here is a real regression.
+    echo "== policy smoke: policy_serving (quick budgets) =="
+    CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench policy_serving
+    if [ -f BENCH_policy.json ]; then
+        echo "== BENCH_policy.json written =="
+    else
+        echo "error: bench did not write BENCH_policy.json" >&2
         exit 1
     fi
 fi
