@@ -1,0 +1,298 @@
+//! Paired-policy bench: positive/negative multiplier pairing end to end.
+//!
+//! Runs entirely on the checked-in hermetic artifacts (no `make artifacts`,
+//! no network — CI always executes it): the mixed greedy search from
+//! `report::layerwise` derives the PR 3 baseline policy, the paired ladder
+//! search upgrades it into the even/odd pairing space, and both are
+//! compared on the (estimated power, synthetic accuracy loss) plane and
+//! served through the coordinator pool.
+//!
+//! Emits `BENCH_paired.json`. Asserted, not just reported:
+//! * the greedy paired policy **dominates or matches** the mixed policy on
+//!   the (power, loss) plane (guaranteed by the search's floor + power
+//!   guards; on the hermetic set it strictly dominates — the pinned result
+//!   is one previously exact layer running a mirrored perforated m=1
+//!   pairing at zero loss);
+//! * pool replies are **bit-identical** to per-image paired forwards;
+//! * existing uniform and mixed policies are untouched (their bit-exactness
+//!   vs the PR 3 golden vectors is enforced by the hermetic golden suite,
+//!   which CI runs by name).
+//!
+//! Env knobs: `CVAPPROX_BENCH_QUICK=1` (short serving budgets);
+//! `CVAPPROX_THREADS` pinned to 1 unless set.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cvapprox::approx::stats::{pairing_residual, signed_moments};
+use cvapprox::approx::{Family, Polarity};
+use cvapprox::coordinator::{InferenceService, ServiceConfig};
+use cvapprox::datasets::Dataset;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::{loader, Engine, ForwardOpts, LayerPolicy, Model, SharedPolicy, Tensor};
+use cvapprox::report::accuracy::evaluate;
+use cvapprox::report::layerwise::{greedy_paired_policy, greedy_policy, sensitivity};
+use cvapprox::util::json::Json;
+
+const N_ARRAY: u32 = 64;
+
+fn load_hermetic() -> (Model, Dataset) {
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm"))
+        .expect("hermetic model (regenerate with scripts/gen_hermetic_golden.py)");
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).expect("hermetic dataset");
+    (model, ds)
+}
+
+/// Serve `n_req` requests through a fresh pool and measure throughput.
+fn serve(
+    model: &Model,
+    ds: &Dataset,
+    policy: Option<SharedPolicy>,
+    n_req: usize,
+    workers: usize,
+    batch_size: usize,
+) -> (f64, f64, f64) {
+    let cfg = ServiceConfig {
+        policy,
+        n_array: N_ARRAY,
+        workers,
+        batch_size,
+        batch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let svc =
+        InferenceService::start(Engine::new(model.clone()), cfg).expect("service starts");
+    let pending: Vec<_> = (0..n_req)
+        .map(|i| svc.submit(ds.image(i % ds.n)).expect("service accepting"))
+        .collect();
+    for p in pending {
+        p.wait().expect("reply");
+    }
+    let snap = svc.shutdown();
+    (
+        snap.throughput_rps,
+        snap.mean_latency.as_secs_f64() * 1e3,
+        snap.p95_latency.as_secs_f64() * 1e3,
+    )
+}
+
+fn main() {
+    if std::env::var("CVAPPROX_THREADS").is_err() {
+        std::env::set_var("CVAPPROX_THREADS", "1");
+    }
+    println!("== bench: paired_policy (hermetic) ==");
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (model, ds) = load_hermetic();
+    let n_eval = ds.n;
+    let n_req = if quick { 96 } else { 384 };
+    let (workers, batch_size) = (2usize, 8usize);
+    let engine = Engine::new(model.clone());
+    let exact_acc = evaluate(&engine, &ds, &ForwardOpts::exact(), n_eval, 1).unwrap();
+    println!(
+        "(hermetic model {} MACs/img, {} eval images, {} requests/config, exact \
+         acc {exact_acc:.4})",
+        model.macs(),
+        n_eval,
+        n_req
+    );
+
+    // ---- signed-error profiles: the cancellation the pairing exploits ----
+    let (fam, m_hi) = (Family::Perforated, 3u32);
+    let neg = signed_moments(fam, m_hi, Polarity::Neg);
+    let pos = signed_moments(fam, m_hi, Polarity::Pos);
+    let resid = pairing_residual((fam, m_hi, Polarity::Neg), (fam, m_hi, Polarity::Pos));
+    println!(
+        "signed profiles {} m={m_hi}: neg μ={:+.1} σ={:.1}, pos μ={:+.1} σ={:.1}, \
+         pairing residual {resid:+.3}",
+        fam.name(),
+        neg.mean,
+        neg.std,
+        pos.mean,
+        pos.std
+    );
+    assert!(
+        resid.abs() < 1e-6 * neg.mean.abs(),
+        "mirrored pairing must cancel the mean exactly"
+    );
+
+    // ---- PR 3 baseline: the mixed greedy policy ---------------------------
+    let sens = sensitivity(&engine, &ds, fam, m_hi, n_eval).unwrap();
+    let mixed =
+        greedy_policy(&engine, &ds, fam, m_hi, 0.8, n_eval, N_ARRAY, &sens).unwrap();
+    let mixed_policy = Arc::new(mixed.layer_policy().unwrap());
+    let mixed_power = mixed_policy.power_norm(&model, N_ARRAY);
+    println!(
+        "mixed policy {} acc {:.4} power {:.3}x",
+        mixed_policy.describe(),
+        mixed.acc,
+        mixed_power
+    );
+
+    // ---- the paired ladder search ----------------------------------------
+    let paired = greedy_paired_policy(
+        &engine, &ds, fam, m_hi, n_eval, N_ARRAY, &sens, &mixed_policy, exact_acc,
+    )
+    .unwrap();
+    let paired_policy = Arc::new(paired.policy.clone());
+    println!(
+        "paired policy {} acc {:.4} power {:.3}x ({} paired layers)",
+        paired_policy.describe(),
+        paired.acc,
+        paired.power_norm,
+        paired_policy.paired_layers()
+    );
+    // The acceptance gate: dominates or matches the mixed policy on the
+    // (estimated power, synthetic accuracy loss) plane. Deterministic data
+    // + integer arithmetic: cannot flake.
+    let mixed_loss = exact_acc - paired.base_acc;
+    let paired_loss = exact_acc - paired.acc;
+    assert!(
+        paired_loss <= mixed_loss + 1e-12,
+        "paired loss {paired_loss} must not exceed mixed loss {mixed_loss}"
+    );
+    assert!(
+        paired.power_norm <= mixed_power + 1e-12,
+        "paired power {} must not exceed mixed power {mixed_power}",
+        paired.power_norm
+    );
+    let strict = paired.power_norm < mixed_power - 1e-12 && paired_loss <= mixed_loss;
+    println!(
+        "dominance: paired (loss {:.4}, power {:.3}) vs mixed (loss {:.4}, \
+         power {:.3}) -> {}",
+        paired_loss,
+        paired.power_norm,
+        mixed_loss,
+        mixed_power,
+        if strict { "STRICTLY dominates" } else { "matches" }
+    );
+
+    // ---- pool bit-identity: replies == per-image paired forwards ---------
+    let svc = InferenceService::start(
+        Engine::new(model.clone()),
+        ServiceConfig {
+            policy: Some(paired_policy.clone()),
+            n_array: N_ARRAY,
+            workers,
+            batch_size,
+            batch_timeout: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .expect("paired service starts");
+    let opts = ForwardOpts::with_policy(paired_policy.clone());
+    let imgs: Vec<Tensor> = (0..16).map(|i| ds.image(i)).collect();
+    let pending: Vec<_> = imgs.iter().map(|im| svc.submit(im.clone()).unwrap()).collect();
+    for (img, p) in imgs.iter().zip(pending) {
+        let reply = p.wait().unwrap();
+        let want = engine.forward(img, &opts).unwrap();
+        assert_eq!(
+            reply.logits, want,
+            "pool reply must be bit-identical to the per-image paired forward"
+        );
+    }
+    svc.shutdown();
+    println!("bit-identity: pool replies == per-image paired forwards (16 images)");
+
+    // ---- mirrored-pairing grid (reference rows, no serving) --------------
+    let mut grid_rows = Vec::new();
+    for family in Family::APPROX {
+        for &m in family.paper_levels() {
+            let uni = Arc::new(
+                LayerPolicy::uniform(family, m, true, model.mac_layers()).unwrap(),
+            );
+            let pair = Arc::new(
+                LayerPolicy::paired_uniform(family, m, true, model.mac_layers())
+                    .unwrap(),
+            );
+            let acc_uni =
+                evaluate(&engine, &ds, &ForwardOpts::with_policy(uni), n_eval, 1)
+                    .unwrap();
+            let acc_pair =
+                evaluate(&engine, &ds, &ForwardOpts::with_policy(pair.clone()), n_eval, 1)
+                    .unwrap();
+            let power = pair.power_norm(&model, N_ARRAY);
+            println!(
+                "  {} m={m}: uniform+V {acc_uni:.4}  mirrored-pair+V \
+                 {acc_pair:.4}  (power {power:.3}x both)",
+                family.name()
+            );
+            grid_rows.push(
+                Json::obj()
+                    .field("family", family.name())
+                    .field("m", m as i64)
+                    .field("acc_uniform_cv", acc_uni)
+                    .field("acc_paired_cv", acc_pair)
+                    .field("power_norm", power),
+            );
+        }
+    }
+
+    // ---- serving throughput: exact vs mixed vs paired --------------------
+    let mut served = Vec::new();
+    for (label, policy) in [
+        ("uniform exact", None),
+        ("mixed policy", Some(mixed_policy.clone())),
+        ("paired policy", Some(paired_policy.clone())),
+    ] {
+        let (rps, mean_ms, p95_ms) =
+            serve(&model, &ds, policy, n_req, workers, batch_size);
+        println!("  serve {label:<14} {rps:>8.1} img/s  mean {mean_ms:.2} ms");
+        served.push(
+            Json::obj()
+                .field("config", label)
+                .field("images_s", rps)
+                .field("mean_ms", mean_ms)
+                .field("p95_ms", p95_ms),
+        );
+    }
+
+    let json = Json::obj()
+        .field("bench", "paired_policy")
+        .field("model", "hermnet_hsynth (hermetic)")
+        .field("model_macs", model.macs() as i64)
+        .field("eval_images", n_eval)
+        .field("requests_per_config", n_req)
+        .field("quick", quick)
+        .field("exact_acc", exact_acc)
+        .field(
+            "signed_profiles",
+            Json::obj()
+                .field("family", fam.name())
+                .field("m", m_hi as i64)
+                .field("neg_mean", neg.mean)
+                .field("pos_mean", pos.mean)
+                .field("std", neg.std)
+                .field("pairing_residual", resid),
+        )
+        .field(
+            "mixed",
+            Json::obj()
+                .field("policy", mixed_policy.describe())
+                .field("acc", paired.base_acc)
+                .field("power_norm", mixed_power),
+        )
+        .field(
+            "paired",
+            Json::obj()
+                .field("policy", paired_policy.describe())
+                .field("layers", paired_policy.to_json())
+                .field("acc", paired.acc)
+                .field("power_norm", paired.power_norm)
+                .field("paired_layers", paired_policy.paired_layers()),
+        )
+        .field("paired_dominates_strictly", strict)
+        .field("mirrored_grid", Json::Arr(grid_rows))
+        .field("serving", Json::Arr(served));
+    let path = "BENCH_paired.json";
+    match std::fs::write(path, json.render()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+    // On the hermetic set the upgrade is pinned (python mirror): at least
+    // one layer pairs, so dominance is strict.
+    assert!(
+        paired_policy.paired_layers() >= 1 && strict,
+        "hermetic paired search must strictly dominate the mixed policy"
+    );
+}

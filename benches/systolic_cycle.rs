@@ -38,7 +38,7 @@ fn main() {
                 ),
                 cycles,
                 || {
-                    std::hint::black_box(arr.run_tile(&w, &cols, &consts, apply_cv));
+                    std::hint::black_box(arr.run_tile(&w, &cols, &consts, apply_cv, 0));
                 },
             );
             println!("{}", r.report());

@@ -6,7 +6,7 @@
 //! and obvious; the exhaustive test in `approx::tests` proves the fast
 //! closed-form identities equal these for every operand pair and m.
 
-use super::Family;
+use super::{Family, Polarity};
 
 /// Perforated multiplier, eq. (2) with s = 0: partial products i ∈ [0, m)
 /// are never generated.
@@ -50,6 +50,60 @@ pub fn am_bits(family: Family, w: u8, a: u8, m: u32) -> i32 {
         Family::Perforated => am_perforated_bits(w, a, m),
         Family::Recursive => am_recursive_bits(w, a, m),
         Family::Truncated => am_truncated_bits(w, a, m),
+    }
+}
+
+/// Positive (round-up) perforated multiplier: the kept rows i ≥ m, plus a
+/// conditional W·2^m carry-in when any dropped row of A fires — the high
+/// part of A rounds *up* instead of truncating, so AM ≥ W·A.
+pub fn am_perforated_bits_pos(w: u8, a: u8, m: u32) -> i32 {
+    let mut acc = 0i32;
+    for i in m..8 {
+        let ai = ((a >> i) & 1) as i32;
+        acc += (w as i32) * ai << i;
+    }
+    // OR over the dropped rows gates one extra W row at weight 2^m.
+    let dropped_or = ((a as i32) & ((1i32 << m) - 1) != 0) as i32;
+    acc + ((w as i32) * dropped_or << m)
+}
+
+/// Positive recursive multiplier: the exact sub-product recombination plus
+/// the *complement* sub-product comp(W_L)·comp(A_L) injected — the mirrored
+/// twin of pruning W_L·A_L, built sub-product by sub-product like eq. (5).
+pub fn am_recursive_bits_pos(w: u8, a: u8, m: u32) -> i32 {
+    let mask = (1u32 << m) - 1;
+    let (wh, wl) = ((w as u32) >> m, (w as u32) & mask);
+    let (ah, al) = ((a as u32) >> m, (a as u32) & mask);
+    let cw = ((1u32 << m) - wl) & mask;
+    let ca = ((1u32 << m) - al) & mask;
+    // exact recombination (all four sub-products) + the complement product
+    ((((wh * ah) << m) + wh * al + wl * ah << m) + wl * al + cw * ca) as i32
+}
+
+/// Positive truncated multiplier: the kept partial-product bits plus, for
+/// each row i < m whose dropped group W mod 2^{m−i} is nonzero, one 2^m
+/// carry-in gated by a_i — each truncated row product rounds *up* to the
+/// next multiple of 2^{m−i} instead of down. The "dropped group nonzero"
+/// flag is a function of the *stationary* weight, so the hardware computes
+/// it once at weight-load time; per cycle the compensation is one AND gate
+/// per row feeding the 2^m column.
+pub fn am_truncated_bits_pos(w: u8, a: u8, m: u32) -> i32 {
+    let mut acc = am_truncated_bits(w, a, m);
+    for i in 0..m {
+        let ai = ((a >> i) & 1) as i32;
+        let dropped_nonzero = ((w as i32) & ((1i32 << (m - i)) - 1) != 0) as i32;
+        acc += dropped_nonzero * ai << m;
+    }
+    acc
+}
+
+/// Structural AM for any (family, polarity) point.
+pub fn am_bits_pol(family: Family, pol: Polarity, w: u8, a: u8, m: u32) -> i32 {
+    match (pol, family) {
+        (Polarity::Neg, _) | (_, Family::Exact) => am_bits(family, w, a, m),
+        (Polarity::Pos, Family::Perforated) => am_perforated_bits_pos(w, a, m),
+        (Polarity::Pos, Family::Recursive) => am_recursive_bits_pos(w, a, m),
+        (Polarity::Pos, Family::Truncated) => am_truncated_bits_pos(w, a, m),
     }
 }
 

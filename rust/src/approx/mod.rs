@@ -17,6 +17,54 @@
 pub mod bitmodel;
 pub mod stats;
 
+/// Signed-error direction of an approximate multiplier point (the
+/// positive/negative pairing axis of Spantidi et al.).
+///
+/// * `Neg` — the paper's original designs: dropped partial products make
+///   AM(W, A) ≤ W·A, so ε = W·A − AM ≥ 0 (the error *underestimates*).
+/// * `Pos` — the round-up-compensated counterpart: the dropped low part is
+///   replaced by its modular complement, so AM(W, A) ≥ W·A. The modular
+///   complement is a bijection on the dropped-bit domain, which makes the
+///   Pos error distribution the **exact mirror** of the Neg one — equal σ,
+///   mean exactly negated (asserted over the full 2^16 operand grid in
+///   [`stats`]).
+///
+/// Pairing one point of each polarity across the reduction dimension of a
+/// layer (even/odd systolic columns) cancels the accumulated column error
+/// in expectation *before* the control-variate epilogue runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Polarity {
+    Neg,
+    Pos,
+}
+
+impl Polarity {
+    pub const ALL: [Polarity; 2] = [Polarity::Neg, Polarity::Pos];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Polarity::Neg => "neg",
+            Polarity::Pos => "pos",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Polarity> {
+        Polarity::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// Byte code used by serialized artifacts.
+    pub fn code(self) -> u8 {
+        match self {
+            Polarity::Neg => 0,
+            Polarity::Pos => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Polarity> {
+        Polarity::ALL.into_iter().find(|p| p.code() == c)
+    }
+}
+
 /// Approximate-multiplier family. `Exact` is the baseline (m ignored).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Family {
@@ -110,6 +158,57 @@ pub fn am(family: Family, w: u8, a: u8, m: u32) -> i32 {
     (w as i32) * (a as i32) - err(family, w, a, m)
 }
 
+/// Modular complement of the `m` low bits: `(2^m − (x mod 2^m)) mod 2^m`.
+///
+/// The construction behind every `Pos` variant: `comp_low` is a bijection
+/// on `[0, 2^m)` (0 ↔ 0, l ↔ 2^m − l), so any error term built from it has
+/// exactly the distribution of the matching low-bits term — mirrored.
+#[inline]
+pub fn comp_low(x: i32, m: u32) -> i32 {
+    let mask = (1i32 << m) - 1;
+    ((1i32 << m) - (x & mask)) & mask
+}
+
+/// Signed multiplication error ε(W, A) = W·A − AM(W, A) of a `(family, m,
+/// polarity)` point. `Neg` is [`err`] (ε ≥ 0); `Pos` is the round-up
+/// counterpart (ε ≤ 0), built from modular complements of the dropped bits:
+///
+/// * perforated: the high part rounds up on OR of the dropped A rows —
+///   ε = −W · comp(A)
+/// * recursive: the pruned W_L·A_L sub-product mirrors to its complement —
+///   ε = −comp(W_L) · comp(A_L)
+/// * truncated: each dropped column rounds W's kept low bits up —
+///   ε = −Σ_{i<m} comp_{m−i}(W) · a_i · 2^i
+#[inline]
+pub fn err_pol(family: Family, pol: Polarity, w: u8, a: u8, m: u32) -> i32 {
+    match pol {
+        Polarity::Neg => err(family, w, a, m),
+        Polarity::Pos => {
+            debug_assert!(m <= 7);
+            let (w, a) = (w as i32, a as i32);
+            match family {
+                Family::Exact => 0,
+                Family::Perforated => -(w * comp_low(a, m)),
+                Family::Recursive => -(comp_low(w, m) * comp_low(a, m)),
+                Family::Truncated => {
+                    let mut e = 0i32;
+                    for i in 0..m {
+                        e += comp_low(w, m - i) * ((a >> i) & 1) << i;
+                    }
+                    -e
+                }
+            }
+        }
+    }
+}
+
+/// Approximate product of a `(family, m, polarity)` point:
+/// AM(W, A) = W·A − ε. `Pos` points overestimate (AM ≥ W·A).
+#[inline]
+pub fn am_pol(family: Family, pol: Polarity, w: u8, a: u8, m: u32) -> i32 {
+    (w as i32) * (a as i32) - err_pol(family, pol, w, a, m)
+}
+
 /// Control-variate input x_j (eqs. 18/25/29):
 /// perforated/recursive → A mod 2^m; truncated → OR(A[m−1:0]) ∈ {0,1}.
 #[inline]
@@ -119,6 +218,23 @@ pub fn xvar(family: Family, a: u8, m: u32) -> i32 {
         Family::Exact => 0,
         Family::Perforated | Family::Recursive => low,
         Family::Truncated => (low != 0) as i32,
+    }
+}
+
+/// Control-variate input x_j of a `(family, m, polarity)` point. `Neg` is
+/// [`xvar`]; `Pos` regresses on the mirrored quantity: perforated /
+/// recursive → comp(A mod 2^m) (the round-up residue), truncated → the same
+/// OR(A[m−1:0]) indicator (a dropped column is compensated iff a_i fires,
+/// exactly when the Neg design truncates).
+#[inline]
+pub fn xvar_pol(family: Family, pol: Polarity, a: u8, m: u32) -> i32 {
+    match pol {
+        Polarity::Neg => xvar(family, a, m),
+        Polarity::Pos => match family {
+            Family::Exact => 0,
+            Family::Perforated | Family::Recursive => comp_low(a as i32, m),
+            Family::Truncated => (((a as i32) & ((1i32 << m) - 1)) != 0) as i32,
+        },
     }
 }
 
@@ -134,23 +250,54 @@ pub fn w_hat_q1(w: u8, m: u32) -> i32 {
     acc
 }
 
-/// 256×256 lookup table of AM products for one (family, m) — the
+/// Positive-polarity counterpart of [`w_hat_q1`]: 2·Ŵ⁺, the mean *magnitude*
+/// of the round-up truncation error of AM_T⁺(W, ·) over uniform A, in Q.1.
+#[inline]
+pub fn w_hat_pos_q1(w: u8, m: u32) -> i32 {
+    let w = w as i32;
+    let mut acc = 0i32;
+    for i in 0..m {
+        acc += comp_low(w, m - i) << i;
+    }
+    acc
+}
+
+/// 256×256 lookup table of AM products for one (family, m, polarity) — the
 /// hardware-faithful path used by the systolic simulator (TFApprox-style).
 pub struct MulLut {
     pub family: Family,
     pub m: u32,
+    pub polarity: Polarity,
     table: Vec<i32>, // [w * 256 + a]
 }
 
 impl MulLut {
+    /// Build the negative-polarity (paper-original) table.
     pub fn build(family: Family, m: u32) -> MulLut {
+        MulLut::build_pol(family, m, Polarity::Neg)
+    }
+
+    /// Build the table for one (family, m, polarity) point.
+    pub fn build_pol(family: Family, m: u32, pol: Polarity) -> MulLut {
+        MulLut::from_fn(family, m, pol, |w, a| am_pol(family, pol, w, a, m))
+    }
+
+    /// Build a table from an arbitrary product function — the differential
+    /// harness injects the *structural* [`bitmodel`] products here, so a
+    /// forward pass can be driven product-for-product by the circuit model.
+    pub fn from_fn(
+        family: Family,
+        m: u32,
+        polarity: Polarity,
+        f: impl Fn(u8, u8) -> i32,
+    ) -> MulLut {
         let mut table = vec![0i32; 65536];
         for w in 0..256usize {
             for a in 0..256usize {
-                table[w * 256 + a] = am(family, w as u8, a as u8, m);
+                table[w * 256 + a] = f(w as u8, a as u8);
             }
         }
-        MulLut { family, m, table }
+        MulLut { family, m, polarity, table }
     }
 
     #[inline]
@@ -183,6 +330,148 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn exhaustive_pos_identity_vs_bitmodel_all_m() {
+        // The positive-polarity cornerstone: the Pos closed forms equal the
+        // structural round-up circuit models for ALL operand pairs and m.
+        for family in Family::APPROX {
+            for m in 0..=7u32 {
+                for w in 0..=255u8 {
+                    for a in 0..=255u8 {
+                        let fast = am_pol(family, Polarity::Pos, w, a, m);
+                        let slow = bitmodel::am_bits_pol(family, Polarity::Pos, w, a, m);
+                        assert_eq!(fast, slow, "{} m={m} w={w} a={a}", family.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pos_error_nonpositive_and_bounded() {
+        // Pos points overestimate: ε ≤ 0, |ε| bounded by the complement of
+        // the dropped low part (≤ W·(2^m − 1) for perforated, the analogous
+        // caps for the others).
+        prop::check(
+            "-w*(2^m-1) <= eps_pos <= 0",
+            2000,
+            0xE45,
+            |r| (r.u8(), r.u8(), r.below(8) as u32),
+            |&(w, a, m)| {
+                Family::APPROX.into_iter().all(|f| {
+                    let e = err_pol(f, Polarity::Pos, w, a, m);
+                    let cap = 255i32 * ((1i32 << m) - 1);
+                    -cap <= e && e <= 0
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn neg_polarity_is_the_original_error() {
+        let mut r = Rng::new(0xD1FF);
+        for _ in 0..500 {
+            let (w, a) = (r.u8(), r.u8());
+            let m = 1 + r.below(7) as u32;
+            for f in Family::ALL {
+                assert_eq!(err_pol(f, Polarity::Neg, w, a, m), err(f, w, a, m));
+                assert_eq!(am_pol(f, Polarity::Neg, w, a, m), am(f, w, a, m));
+                assert_eq!(xvar_pol(f, Polarity::Neg, a, m), xvar(f, a, m));
+            }
+        }
+    }
+
+    #[test]
+    fn pos_m_zero_is_exact() {
+        for f in Family::ALL {
+            for (w, a) in [(0u8, 0u8), (255, 255), (17, 203), (1, 128)] {
+                assert_eq!(am_pol(f, Polarity::Pos, w, a, 0), (w as i32) * (a as i32));
+            }
+        }
+    }
+
+    #[test]
+    fn comp_low_is_a_bijection_on_the_low_bits() {
+        for m in 0..=7u32 {
+            let l = 1i32 << m;
+            let mut seen = vec![false; l as usize];
+            for x in 0..l {
+                let c = comp_low(x, m);
+                assert!((0..l).contains(&c), "m={m} x={x} c={c}");
+                assert!(!seen[c as usize], "m={m}: comp not injective at {x}");
+                seen[c as usize] = true;
+                // involution: comp(comp(x)) == x
+                assert_eq!(comp_low(c, m), x, "m={m} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn w_hat_pos_is_mean_roundup_error_magnitude() {
+        // Ŵ⁺ equals the empirical mean of |ε⁺_T| over all 256 A values.
+        for m in 1..=7u32 {
+            let mut r = Rng::new(0x700 + m as u64);
+            for _ in 0..64 {
+                let w = r.u8();
+                let sum: i64 = (0..=255u8)
+                    .map(|a| -err_pol(Family::Truncated, Polarity::Pos, w, a, m) as i64)
+                    .sum();
+                assert_eq!(sum * 2, (w_hat_pos_q1(w, m) as i64) * 256, "w={w} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn pos_xvar_tracks_error_support() {
+        for a in 0..=255u8 {
+            for m in 1..=7u32 {
+                let low = (a as i32) & ((1 << m) - 1);
+                assert_eq!(
+                    xvar_pol(Family::Perforated, Polarity::Pos, a, m),
+                    comp_low(low, m)
+                );
+                // x⁺ == 0 iff the positive perforated point is error-free
+                // for every w (no round-up fires).
+                let always_exact = (0..=255u8)
+                    .all(|w| err_pol(Family::Perforated, Polarity::Pos, w, a, m) == 0);
+                assert_eq!(
+                    always_exact,
+                    xvar_pol(Family::Perforated, Polarity::Pos, a, m) == 0
+                );
+                assert_eq!(
+                    xvar_pol(Family::Truncated, Polarity::Pos, a, m),
+                    (low != 0) as i32
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lut_pol_matches_direct() {
+        for family in Family::APPROX {
+            let m = family.paper_levels()[1];
+            for pol in Polarity::ALL {
+                let lut = MulLut::build_pol(family, m, pol);
+                assert_eq!(lut.polarity, pol);
+                let mut r = Rng::new(0x99 + pol.code() as u64);
+                for _ in 0..2000 {
+                    let (w, a) = (r.u8(), r.u8());
+                    assert_eq!(lut.mul(w, a), am_pol(family, pol, w, a, m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn polarity_name_roundtrip() {
+        for p in Polarity::ALL {
+            assert_eq!(Polarity::from_name(p.name()), Some(p));
+            assert_eq!(Polarity::from_code(p.code()), Some(p));
+        }
+        assert_eq!(Polarity::from_name("bogus"), None);
+        assert_eq!(Polarity::from_code(9), None);
     }
 
     #[test]

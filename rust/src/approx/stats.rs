@@ -1,9 +1,18 @@
-//! Error analysis of the approximate multipliers — regenerates **Table 1**.
+//! Error analysis of the approximate multipliers — regenerates **Table 1**
+//! and characterizes the signed-error profile of every (family, m,
+//! polarity) point.
 //!
 //! μ and σ of ε over 1M operand pairs for uniform U(0,255) and normal
-//! N(125, 24²) input distributions, per family and m.
+//! N(125, 24²) input distributions, per family and m; plus
+//! [`signed_moments`]: exact mean/σ/sign of ε = W·A − AM over the **full
+//! 2^16 operand grid**, computed from the closed forms (proven equal to the
+//! [`super::bitmodel`] circuits) and cached process-wide like the LUTs —
+//! the quantity the paired-policy search consults to predict cancellation.
 
-use super::{err, Family};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::{err, err_pol, Family, Polarity};
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
@@ -63,6 +72,68 @@ pub fn error_moments_exhaustive_uniform(family: Family, m: u32) -> (f64, f64) {
         }
     }
     (acc.mean(), acc.std())
+}
+
+/// Signed-error profile of one (family, m, polarity) multiplier point:
+/// exact moments of ε = W·A − AM(W, A) over the full uniform 2^16 operand
+/// grid. `Neg` points have `mean ≥ 0` (underestimate), `Pos` points
+/// `mean ≤ 0` (overestimate) — and the two are exact mirrors (equal σ,
+/// negated mean), which is what makes even/odd pairing cancel.
+#[derive(Clone, Copy, Debug)]
+pub struct SignedMoments {
+    pub family: Family,
+    pub m: u32,
+    pub polarity: Polarity,
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl SignedMoments {
+    /// −1, 0 or +1: the direction this point biases an accumulator.
+    pub fn sign(&self) -> i32 {
+        if self.mean > 0.0 {
+            1
+        } else if self.mean < 0.0 {
+            -1
+        } else {
+            0
+        }
+    }
+}
+
+fn signed_moments_exhaustive(family: Family, m: u32, pol: Polarity) -> SignedMoments {
+    let mut acc = Welford::new();
+    for w in 0..=255u8 {
+        for a in 0..=255u8 {
+            acc.push(err_pol(family, pol, w, a, m) as f64);
+        }
+    }
+    SignedMoments { family, m, polarity: pol, mean: acc.mean(), std: acc.std() }
+}
+
+/// Exact signed-error moments for a (family, m, polarity) point, computed
+/// over the full 2^16 grid on first use and cached process-wide (like the
+/// product LUTs: one build, shared by every engine/search that asks).
+pub fn signed_moments(family: Family, m: u32, pol: Polarity) -> SignedMoments {
+    static CACHE: OnceLock<Mutex<HashMap<(Family, u32, Polarity), SignedMoments>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    *map.entry((family, m, pol))
+        .or_insert_with(|| signed_moments_exhaustive(family, m, pol))
+}
+
+/// Expected per-MAC accumulator bias of splitting a reduction evenly
+/// between two multiplier points (the even/odd column pairing): the mean of
+/// the two signed means. A well-chosen Neg/Pos pair drives this to ~0 —
+/// pairing a point with its own mirror drives it to *exactly* 0.
+pub fn pairing_residual(
+    a: (Family, u32, Polarity),
+    b: (Family, u32, Polarity),
+) -> f64 {
+    let ma = signed_moments(a.0, a.1, a.2).mean;
+    let mb = signed_moments(b.0, b.1, b.2).mean;
+    (ma + mb) / 2.0
 }
 
 /// All Table-1 rows (both distributions, table1 m-levels).
@@ -161,5 +232,126 @@ mod tests {
         let rows = table1(1000, 1);
         // 3+4+4 m-levels × 2 distributions
         assert_eq!(rows.len(), (3 + 4 + 4) * 2);
+    }
+
+    #[test]
+    fn signed_means_pinned_against_brute_force() {
+        // Perforated: ε = W·(A mod 2^m) with independent uniform operands,
+        // so the full-grid mean is exactly E[W]·E[A mod 2^m]
+        // = 127.5 · (2^m − 1)/2 — derived independently of err_pol.
+        for m in 1..=3u32 {
+            let want = 127.5 * ((1u32 << m) - 1) as f64 / 2.0;
+            let neg = signed_moments(Family::Perforated, m, Polarity::Neg);
+            assert!((neg.mean - want).abs() < 1e-9, "m={m}: {} vs {want}", neg.mean);
+            assert_eq!(neg.sign(), 1);
+            let pos = signed_moments(Family::Perforated, m, Polarity::Pos);
+            assert!((pos.mean + want).abs() < 1e-9, "m={m}: {} vs -{want}", pos.mean);
+            assert_eq!(pos.sign(), -1);
+        }
+        // Truncated: ε = Σ_{i<m} (W mod 2^{m−i})·a_i·2^i, so the mean is
+        // exactly Σ_i ((2^{m−i} − 1)/2) · (1/2) · 2^i.
+        for m in [4u32, 6] {
+            let want: f64 = (0..m)
+                .map(|i| ((1u64 << (m - i)) - 1) as f64 / 2.0 * 0.5 * (1u64 << i) as f64)
+                .sum();
+            let neg = signed_moments(Family::Truncated, m, Polarity::Neg);
+            assert!((neg.mean - want).abs() < 1e-9, "m={m}: {} vs {want}", neg.mean);
+            let pos = signed_moments(Family::Truncated, m, Polarity::Pos);
+            assert!((pos.mean + want).abs() < 1e-9, "m={m}: {} vs -{want}", pos.mean);
+        }
+    }
+
+    #[test]
+    fn pos_profile_is_the_exact_mirror_of_neg() {
+        // The modular-complement construction is a bijection on the dropped
+        // bits, so over the full grid the Pos error distribution is the
+        // mirrored Neg one: mean exactly negated, σ exactly equal.
+        for family in Family::APPROX {
+            for &m in family.paper_levels() {
+                let neg = signed_moments(family, m, Polarity::Neg);
+                let pos = signed_moments(family, m, Polarity::Pos);
+                let scale = neg.mean.abs().max(1.0);
+                assert!(
+                    (neg.mean + pos.mean).abs() / scale < 1e-9,
+                    "{} m={m}: {} vs {}",
+                    family.name(),
+                    neg.mean,
+                    pos.mean
+                );
+                assert!(
+                    (neg.std - pos.std).abs() / neg.std.max(1.0) < 1e-9,
+                    "{} m={m}: std {} vs {}",
+                    family.name(),
+                    neg.std,
+                    pos.std
+                );
+                let resid = pairing_residual(
+                    (family, m, Polarity::Neg),
+                    (family, m, Polarity::Pos),
+                );
+                assert!(resid.abs() < 1e-9 * scale, "{} m={m}: {resid}", family.name());
+            }
+        }
+    }
+
+    #[test]
+    fn signed_moments_cache_is_stable() {
+        let a = signed_moments(Family::Recursive, 3, Polarity::Pos);
+        let b = signed_moments(Family::Recursive, 3, Polarity::Pos);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.std, b.std);
+        // Exact point has a degenerate profile.
+        let e = signed_moments(Family::Exact, 0, Polarity::Neg);
+        assert_eq!(e.mean, 0.0);
+        assert_eq!(e.sign(), 0);
+    }
+
+    #[test]
+    fn paired_column_error_cancels_below_either_constituent() {
+        // The pairing claim, measured: split a k-long reduction between a
+        // Neg and a Pos point (even/odd), accumulate the signed column
+        // error over many random activation columns, and compare against
+        // running the whole column uniformly at either constituent. The
+        // paired mean must be strictly smaller in magnitude than both.
+        let mut rng = Rng::new(0xA17D);
+        for (family, m) in
+            [(Family::Perforated, 2), (Family::Truncated, 6), (Family::Recursive, 3)]
+        {
+            let k = 64usize;
+            let w: Vec<u8> = (0..k).map(|_| rng.u8_normal(128.0, 22.0)).collect();
+            let mut paired = Welford::new();
+            let mut neg_only = Welford::new();
+            let mut pos_only = Welford::new();
+            for _ in 0..4000 {
+                let a: Vec<u8> = (0..k).map(|_| rng.u8()).collect();
+                let mut e_pair = 0i64;
+                let mut e_neg = 0i64;
+                let mut e_pos = 0i64;
+                for (j, (&wj, &aj)) in w.iter().zip(&a).enumerate() {
+                    let en = err_pol(family, Polarity::Neg, wj, aj, m) as i64;
+                    let ep = err_pol(family, Polarity::Pos, wj, aj, m) as i64;
+                    e_pair += if j % 2 == 0 { en } else { ep };
+                    e_neg += en;
+                    e_pos += ep;
+                }
+                paired.push(e_pair as f64);
+                neg_only.push(e_neg as f64);
+                pos_only.push(e_pos as f64);
+            }
+            assert!(
+                paired.mean().abs() < neg_only.mean().abs(),
+                "{} m={m}: paired {} !< neg {}",
+                family.name(),
+                paired.mean(),
+                neg_only.mean()
+            );
+            assert!(
+                paired.mean().abs() < pos_only.mean().abs(),
+                "{} m={m}: paired {} !< pos {}",
+                family.name(),
+                paired.mean(),
+                pos_only.mean()
+            );
+        }
     }
 }

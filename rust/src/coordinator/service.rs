@@ -741,6 +741,44 @@ mod tests {
     }
 
     #[test]
+    fn paired_policy_service_serves_bit_identically() {
+        // A positive/negative paired policy flows through the worker pool
+        // (batched forwards, shared paired-plan cache) and every reply is
+        // bit-equal to the per-image paired forward; the estimated power of
+        // a mirrored pairing equals the uniform point's.
+        let model = testutil::tiny_model(); // 2 MAC layers
+        let reference = Engine::new(model.clone());
+        let policy = std::sync::Arc::new(
+            LayerPolicy::paired_uniform(Family::Perforated, 2, true, 2).unwrap(),
+        );
+        let cfg = ServiceConfig {
+            policy: Some(policy.clone()),
+            workers: 2,
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let opts = ForwardOpts::with_policy(policy);
+        let imgs: Vec<Tensor> =
+            (0..12).map(|i| testutil::tiny_image(2000 + i)).collect();
+        let pendings: Vec<Pending> =
+            imgs.iter().map(|im| svc.submit(im.clone()).unwrap()).collect();
+        for (img, p) in imgs.iter().zip(pendings) {
+            let reply = p.wait().unwrap();
+            assert_eq!(reply.logits, reference.forward(img, &opts).unwrap());
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 12);
+        let uniform = PowerModel::new(Family::Perforated, 2, 64).power_norm;
+        assert!(
+            (snap.energy_vs_exact - uniform).abs() < 1e-9,
+            "mirrored pairing is power-neutral vs the uniform point: {} vs {uniform}",
+            snap.energy_vs_exact
+        );
+    }
+
+    #[test]
     fn start_rejects_mismatched_policy_before_spawning() {
         // 3 policy layers vs tiny_model's 2 MAC layers: start must fail
         // (nothing spawns, nothing to poison) — and a subsequent valid

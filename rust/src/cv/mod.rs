@@ -16,7 +16,7 @@
 //! ablated in `benches/ablation.rs`. These integers match the python side
 //! (`kernels/ref.cv_constants`) bit-for-bit.
 
-use crate::approx::{w_hat_q1, xvar, Family};
+use crate::approx::{comp_low, w_hat_pos_q1, w_hat_q1, xvar, xvar_pol, Family, Polarity};
 
 /// Fixed-point fractional bits for C / C₀ / V.
 pub const CV_FRAC_BITS: u32 = 4;
@@ -80,6 +80,54 @@ pub fn constants(family: Family, m: u32, w: &[u8], k_valid: usize) -> CvConstant
     CvConstants { c_q4, c0_q4 }
 }
 
+/// C and C₀ for one filter row of a `(family, m, polarity)` point.
+///
+/// `Neg` is [`constants`]. `Pos` points overestimate — their signed error
+/// is the exact mirror of the matching magnitude statistic — so the
+/// constants are the negated means of the *complement* quantities, and
+/// V = C·ΣX + C₀ comes out negative, pulling the overestimating
+/// accumulator back down:
+///
+/// | family     | x_j (Pos)          | C (Pos)              | C₀ (Pos)          |
+/// |------------|--------------------|----------------------|-------------------|
+/// | perforated | comp(A_j mod 2^m)  | −E[W_j]              | 0                 |
+/// | recursive  | comp(A_j mod 2^m)  | −E[comp(W_j mod 2^m)]| 0                 |
+/// | truncated  | OR(A_j[m−1:0])     | −E[Ŵ⁺_j]             | −2^−m·ΣŴ⁺_j       |
+pub fn constants_pol(
+    family: Family,
+    pol: Polarity,
+    m: u32,
+    w: &[u8],
+    k_valid: usize,
+) -> CvConstants {
+    if pol == Polarity::Neg {
+        return constants(family, m, w, k_valid);
+    }
+    debug_assert!(k_valid <= w.len() || w.is_empty());
+    if family == Family::Exact || m == 0 {
+        return CvConstants::default();
+    }
+    let k = k_valid as i64;
+    if k == 0 {
+        return CvConstants::default();
+    }
+    let num: i64 = match family {
+        Family::Perforated => w.iter().map(|&x| x as i64).sum(),
+        Family::Recursive => w.iter().map(|&x| comp_low(x as i32, m) as i64).sum(),
+        // num = Σ 2·Ŵ⁺_j (Q.1 per weight)
+        Family::Truncated => w.iter().map(|&x| w_hat_pos_q1(x, m) as i64).sum(),
+        Family::Exact => unreachable!(),
+    };
+    let den = k * if family == Family::Truncated { 2 } else { 1 };
+    let c_q4 = -div_round(num * Q, den);
+    let c0_q4 = if family == Family::Truncated {
+        -div_round(num * Q, 1i64 << (m + 1))
+    } else {
+        0
+    };
+    CvConstants { c_q4, c0_q4 }
+}
+
 /// Per-filter constants for a whole layer: row f of `w` is
 /// `w[f*k..(f+1)*k]`. This is the **plan-building** entry point — C/C₀ are
 /// functions of the static weights only, so callers cache the result per
@@ -96,10 +144,35 @@ pub fn constants_for_rows(
     (0..m_rows).map(|f| constants(family, m, &w[f * k..(f + 1) * k], k)).collect()
 }
 
+/// Polarity-aware [`constants_for_rows`] with an explicit `k_valid`: paired
+/// partition plans pass the partition population (their weight panels are
+/// zero off-partition, and the averages must divide by the partition size,
+/// not the full reduction length).
+pub fn constants_pol_for_rows(
+    family: Family,
+    pol: Polarity,
+    m: u32,
+    w: &[u8],
+    m_rows: usize,
+    k: usize,
+    k_valid: usize,
+) -> Vec<CvConstants> {
+    debug_assert_eq!(w.len(), m_rows * k);
+    (0..m_rows)
+        .map(|f| constants_pol(family, pol, m, &w[f * k..(f + 1) * k], k_valid))
+        .collect()
+}
+
 /// ΣX over an activation column.
 #[inline]
 pub fn sum_x(family: Family, m: u32, activations: &[u8]) -> i64 {
     activations.iter().map(|&a| xvar(family, a, m) as i64).sum()
+}
+
+/// Polarity-aware ΣX over an activation column.
+#[inline]
+pub fn sum_x_pol(family: Family, pol: Polarity, m: u32, activations: &[u8]) -> i64 {
+    activations.iter().map(|&a| xvar_pol(family, pol, a, m) as i64).sum()
 }
 
 /// The MAC⁺ epilogue: V = round((C·ΣX + C₀) / 2^4), added to the accumulator.
@@ -154,6 +227,66 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cv_nullifies_mean_for_positive_polarity_too() {
+        // The mirrored constants correct the overestimating points exactly
+        // like the originals correct the underestimating ones.
+        use crate::approx::{am_pol, Polarity};
+        let mut rng = Rng::new(0xC1);
+        let k = 64;
+        for family in Family::APPROX {
+            let m = family.paper_levels()[1];
+            let w: Vec<u8> = (0..k).map(|_| rng.u8_normal(128.0, 22.0)).collect();
+            let c = constants_pol(family, Polarity::Pos, m, &w, k);
+            assert!(c.c_q4 <= 0, "{}: pos C must be non-positive", family.name());
+            let mut raw = Welford::new();
+            let mut cv = Welford::new();
+            for _ in 0..3000 {
+                let a: Vec<u8> = (0..k).map(|_| rng.u8()).collect();
+                let exact: i64 =
+                    w.iter().zip(&a).map(|(&w, &a)| (w as i64) * (a as i64)).sum();
+                let am_acc: i64 = w
+                    .iter()
+                    .zip(&a)
+                    .map(|(&w, &a)| am_pol(family, Polarity::Pos, w, a, m) as i64)
+                    .sum();
+                let sx = sum_x_pol(family, Polarity::Pos, m, &a);
+                raw.push((exact - am_acc) as f64);
+                cv.push((exact - (am_acc + v_term(&c, sx))) as f64);
+            }
+            assert!(raw.mean() < 0.0, "{}: pos raw error must overestimate", family.name());
+            assert!(
+                cv.mean().abs() <= 0.05 * raw.mean().abs() + 2.0,
+                "{} m={m}: cv mean {} raw mean {}",
+                family.name(),
+                cv.mean(),
+                raw.mean()
+            );
+            assert!(cv.variance() < raw.variance(), "{} m={m}", family.name());
+        }
+    }
+
+    #[test]
+    fn pos_constants_mirror_neg_for_perforated() {
+        use crate::approx::Polarity;
+        let mut rng = Rng::new(0xC2);
+        let w: Vec<u8> = (0..40).map(|_| rng.u8()).collect();
+        for m in [1u32, 2, 3] {
+            let neg = constants_pol(Family::Perforated, Polarity::Neg, m, &w, 40);
+            let pos = constants_pol(Family::Perforated, Polarity::Pos, m, &w, 40);
+            // Same Σw numerator, negated: exact mirror.
+            assert_eq!(pos.c_q4, -neg.c_q4, "m={m}");
+            assert_eq!(pos.c0_q4, 0);
+        }
+        // Neg delegation: constants_pol(Neg) == constants.
+        let a = constants_pol(Family::Truncated, Polarity::Neg, 5, &w, 40);
+        let b = constants(Family::Truncated, 5, &w, 40);
+        assert_eq!(a, b);
+        // k_valid == 0 (an empty pair partition) is a clean zero.
+        let z = constants_pol(Family::Perforated, Polarity::Pos, 2, &[], 0);
+        assert_eq!(z, CvConstants::default());
     }
 
     #[test]

@@ -11,14 +11,16 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::gemm::{approx_gemm_planned, GemmCtx, GemmKind};
-use super::graph::{Model, Node, Op, Tensor};
-use super::plan::{LayerPlan, PlanCache, Scratch};
-use super::policy::{LayerPoint, LayerPolicy, SharedPolicy, MAX_M};
-use crate::approx::{Family, MulLut};
+use super::gemm::{approx_gemm_planned, paired_gemm_planned, GemmCtx, GemmKind};
+use super::graph::{Model, Node, Op, Tensor, Weights};
+use super::plan::{LayerPlan, PairedPlan, PlanCache, Scratch};
+use super::policy::{
+    LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, SharedPolicy, MAX_M,
+};
+use crate::approx::{Family, MulLut, Polarity};
 use crate::cv::{self, CvConstants};
 use crate::runtime::{TileGemm, Variant};
-use crate::systolic::{SystolicArray, ToggleStats};
+use crate::systolic::{MulPoint, SystolicArray, ToggleStats};
 use crate::util::threadpool::configured_workers;
 
 /// Forward-pass configuration.
@@ -77,9 +79,10 @@ impl ForwardOpts {
     }
 
     /// Fully heterogeneous configuration from a [`LayerPolicy`]: layer `i`
-    /// runs at `policy.point(i)`. A policy whose every layer carries the
-    /// same point is bit-identical to the uniform [`ForwardOpts::approx`]
-    /// path (property-tested in the engine suite).
+    /// runs at `policy.assignment(i)` — a single point or an even/odd
+    /// pairing. A policy whose every layer carries the same point is
+    /// bit-identical to the uniform [`ForwardOpts::approx`] path
+    /// (property-tested in the engine suite).
     pub fn with_policy(policy: SharedPolicy) -> Self {
         ForwardOpts { policy: Some(policy), ..Self::default() }
     }
@@ -92,16 +95,18 @@ impl ForwardOpts {
         }
     }
 
-    /// Effective design point for MAC layer ordinal `mac_idx` (normalized:
+    /// Effective assignment for MAC layer ordinal `mac_idx` (normalized:
     /// `m == 0` collapses to the exact point) — the single source of truth
     /// both forward paths resolve plans, LUTs and the CV epilogue from.
-    pub fn point_for(&self, mac_idx: usize) -> LayerPoint {
+    /// Uniform opts are the trivial single-point policy (negative
+    /// polarity); paired layers only ever come from a [`LayerPolicy`].
+    pub fn assignment_for(&self, mac_idx: usize) -> LayerAssignment {
         match &self.policy {
-            Some(p) => p.point(mac_idx),
-            None => {
+            Some(p) => p.assignment(mac_idx),
+            None => LayerAssignment::Point(
                 LayerPoint::new(self.family, self.m_for(mac_idx), self.use_cv)
-                    .normalized()
-            }
+                    .normalized(),
+            ),
         }
     }
 }
@@ -128,12 +133,20 @@ fn requantize(acc: i64, mult: f64, zp: i32) -> u8 {
 /// shares them exactly like uniform serving does.
 pub struct Engine {
     pub model: Model,
-    /// Prepared LUTs, one per distinct (family, m) — a mixed policy can
-    /// route every approximate layer through its own table.
+    /// Prepared LUTs, one per distinct (family, m, polarity) — a mixed or
+    /// paired policy can route every approximate point through its own
+    /// table.
     luts: Vec<MulLut>,
     systolic: Option<SystolicArray>,
     pjrt: Option<(Arc<TileGemm>, Variant)>,
     plans: PlanCache,
+}
+
+/// A MAC layer resolved to its executable form: the quantization context
+/// plus the cached weight-side plan(s) for its assignment.
+enum LayerExec {
+    Uniform { ctx: GemmCtx, plan: Arc<LayerPlan> },
+    Paired { pair: PairedPoint, zp_w: i64, zp_a: i64, plan: Arc<PairedPlan> },
 }
 
 impl Engine {
@@ -146,31 +159,67 @@ impl Engine {
         self.pjrt = Some((rt, variant));
     }
 
-    /// Pre-build the LUT for a (family, m) pair (Lut engine only). Tables
-    /// accumulate — preparing several points lets a heterogeneous policy
-    /// serve every layer from its matching LUT.
+    /// Pre-build the negative-polarity LUT for a (family, m) pair (Lut
+    /// engine only). Tables accumulate — preparing several points lets a
+    /// heterogeneous policy serve every layer from its matching LUT.
     pub fn prepare_lut(&mut self, family: Family, m: u32) {
-        if family != Family::Exact && self.lut_lookup(family, m).is_none() {
-            self.luts.push(MulLut::build(family, m));
+        self.prepare_lut_pol(family, m, Polarity::Neg);
+    }
+
+    /// Pre-build the LUT for a (family, m, polarity) point.
+    pub fn prepare_lut_pol(&mut self, family: Family, m: u32, pol: Polarity) {
+        if family != Family::Exact && self.lut_lookup(family, m, pol).is_none() {
+            self.luts.push(MulLut::build_pol(family, m, pol));
         }
     }
 
-    /// Prepare a LUT for every distinct approximate point of `policy`.
+    /// Attach an externally built table — e.g. one generated from the
+    /// structural [`crate::approx::bitmodel`] by the differential harness —
+    /// replacing any prepared table for the same (family, m, polarity).
+    pub fn attach_lut(&mut self, lut: MulLut) {
+        self.luts
+            .retain(|l| (l.family, l.m, l.polarity) != (lut.family, lut.m, lut.polarity));
+        self.luts.push(lut);
+    }
+
+    /// Prepare a LUT for every distinct approximate constituent point of
+    /// `policy` (both halves of each pairing).
     pub fn prepare_luts_for_policy(&mut self, policy: &LayerPolicy) {
-        for p in policy.points() {
-            if p != LayerPoint::EXACT {
-                self.prepare_lut(p.family, p.m);
+        let points: Vec<LayerPoint> = policy.points().collect();
+        for p in points {
+            if p.normalized() != LayerPoint::EXACT {
+                self.prepare_lut_pol(p.family, p.m, p.polarity);
             }
         }
     }
 
-    fn lut_lookup(&self, family: Family, m: u32) -> Option<&MulLut> {
-        self.luts.iter().find(|l| l.family == family && l.m == m)
+    fn lut_lookup(&self, family: Family, m: u32, pol: Polarity) -> Option<&MulLut> {
+        self.luts
+            .iter()
+            .find(|l| l.family == family && l.m == m && l.polarity == pol)
     }
 
-    /// Attach a systolic array simulator (enables `forward_systolic`).
+    /// Attach a systolic array simulator (enables `forward_systolic`) at a
+    /// uniform negative-polarity (family, m) point.
     pub fn prepare_systolic(&mut self, family: Family, m: u32, n: usize) {
         self.systolic = Some(SystolicArray::new(family, m, n));
+    }
+
+    /// Systolic simulator at an explicit-polarity point.
+    pub fn prepare_systolic_pol(&mut self, family: Family, m: u32, pol: Polarity, n: usize) {
+        self.systolic = Some(SystolicArray::new_pol(family, m, pol, n));
+    }
+
+    /// Systolic simulator with alternating even/odd multiplier columns —
+    /// the hardware realization of a paired layer.
+    pub fn prepare_systolic_paired(&mut self, pair: PairedPoint, n: usize) {
+        let e = pair.even.normalized();
+        let o = pair.odd.normalized();
+        self.systolic = Some(SystolicArray::new_paired(
+            MulPoint::new(e.family, e.m, e.polarity),
+            MulPoint::new(o.family, o.m, o.polarity),
+            n,
+        ));
     }
 
     /// Eagerly build the layer plans for a uniform (family, m) design point
@@ -189,18 +238,34 @@ impl Engine {
         }
     }
 
-    /// Eagerly build each layer's plan at its policy point (the coordinator
-    /// warms mixed-m serving here). Fails — without building anything — on
-    /// a policy/model layer-count mismatch.
+    /// Eagerly build each layer's plan at its policy assignment (the
+    /// coordinator warms mixed-m and paired serving here). Fails — without
+    /// building anything — on a policy/model layer-count mismatch.
     pub fn prepare_plans_policy(&self, policy: &LayerPolicy) -> Result<()> {
         policy.validate_for(&self.model)?;
         for (mac_idx, idx) in self.model.mac_node_indices().into_iter().enumerate() {
-            let p = policy.point(mac_idx);
             let node = &self.model.nodes[idx];
             let wrec = node.weights.as_ref().expect("mac node has weights");
-            self.plans.get_or_build(idx, p.family, p.m, || {
-                LayerPlan::build(p.family, p.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
-            });
+            match policy.assignment(mac_idx) {
+                LayerAssignment::Point(p) => {
+                    self.plans.get_or_build_pol(idx, p.family, p.m, p.polarity, || {
+                        LayerPlan::build_pol(
+                            p.family,
+                            p.m,
+                            p.polarity,
+                            &wrec.w_q,
+                            wrec.b_q.len(),
+                            wrec.k_dim,
+                            wrec.k_dim,
+                        )
+                    });
+                }
+                LayerAssignment::Paired(pair) => {
+                    self.plans.get_or_build_paired(idx, pair, || {
+                        PairedPlan::build(pair, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+                    });
+                }
+            }
         }
         Ok(())
     }
@@ -399,19 +464,10 @@ impl Engine {
         let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
         let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
         let mult = wrec.s_w as f64 * s_in / s_out;
-        // Each layer resolves its own design point (uniform opts are the
-        // trivial policy) — and from it its own plan and CV epilogue.
-        let pt = opts.point_for(mac_idx);
-        let ctx = GemmCtx {
-            family: pt.family,
-            m: pt.m,
-            use_cv: pt.use_cv,
-            zp_w: wrec.zp_w as i64,
-            zp_a: zp_in as i64,
-        };
-        let plan = self.plans.get_or_build(idx, ctx.family, ctx.m, || {
-            LayerPlan::build(ctx.family, ctx.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
-        });
+        // Each layer resolves its own assignment (uniform opts are the
+        // trivial single-point policy) — and from it its own plan(s) and
+        // CV epilogue.
+        let exec = self.resolve_layer(idx, mac_idx, wrec, opts, zp_in);
         // The batched path never routes through the systolic simulator
         // (that is a per-image measurement mode), so toggles are discarded.
         let mut toggles = ToggleStats::default();
@@ -429,7 +485,7 @@ impl Engine {
                 }
             }
             let gemm_status = self.dispatch_gemm(
-                &ctx, &plan, 0, &wrec.w_q, &a_cols, nout, k, batch, &wrec.b_q, false,
+                &exec, 0, &wrec.w_q, &a_cols, nout, k, batch, &wrec.b_q, false,
                 &mut toggles, scratch, threads,
             );
             // Return the arena before propagating any backend error, so a
@@ -474,7 +530,7 @@ impl Engine {
             let w_g = &wrec.w_q[row0 * kdim..(row0 + cpg_out) * kdim];
             let b_g = &wrec.b_q[row0..row0 + cpg_out];
             gemm_status = self.dispatch_gemm(
-                &ctx, &plan, row0, w_g, &a_cols, cpg_out, kdim, n_total, b_g, false,
+                &exec, row0, w_g, &a_cols, cpg_out, kdim, n_total, b_g, false,
                 &mut toggles, scratch, threads,
             );
             if gemm_status.is_err() {
@@ -600,27 +656,16 @@ impl Engine {
         let (s_in, zp_in) = out_q(&self.model.nodes, node.inputs[0]);
         let (s_out, zp_out) = (node.out_scale as f64, node.out_zp);
         let mult = wrec.s_w as f64 * s_in / s_out;
-        // Each layer resolves its own design point (uniform opts are the
-        // trivial policy) — and from it its own plan and CV epilogue.
-        let pt = opts.point_for(mac_idx);
-        let ctx = GemmCtx {
-            family: pt.family,
-            m: pt.m,
-            use_cv: pt.use_cv,
-            zp_w: wrec.zp_w as i64,
-            zp_a: zp_in as i64,
-        };
-        // Fetch (or lazily build) the weight-side plan for this layer at the
-        // effective design point; subsequent images reuse it untouched.
-        let plan = self.plans.get_or_build(idx, ctx.family, ctx.m, || {
-            LayerPlan::build(ctx.family, ctx.m, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
-        });
+        // Each layer resolves its own assignment (uniform opts are the
+        // trivial single-point policy) and from it its own plan(s) —
+        // fetched (or lazily built) once; subsequent images reuse them.
+        let exec = self.resolve_layer(idx, mac_idx, wrec, opts, zp_in);
         if node.op == Op::Dense {
             let k = wrec.k_dim;
             let nout = node.cout;
             debug_assert_eq!(x.data.len(), k, "dense input size");
             self.dispatch_gemm(
-                &ctx, &plan, 0, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic,
+                &exec, 0, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic,
                 toggles, scratch, configured_workers(),
             )?;
             let mut data = Vec::with_capacity(nout);
@@ -653,7 +698,7 @@ impl Engine {
             let w_g = &wrec.w_q[row0 * kdim..(row0 + cpg_out) * kdim];
             let b_g = &wrec.b_q[row0..row0 + cpg_out];
             gemm_status = self.dispatch_gemm(
-                &ctx, &plan, row0, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic,
+                &exec, row0, w_g, &a_cols, cpg_out, kdim, n_cols, b_g, systolic,
                 toggles, scratch, configured_workers(),
             );
             if gemm_status.is_err() {
@@ -677,6 +722,50 @@ impl Engine {
         Ok(out)
     }
 
+    /// Resolve one MAC layer's assignment to its executable form: the
+    /// quantization context plus the cached weight-side plan(s), built on
+    /// first use and shared by every subsequent image/batch.
+    fn resolve_layer(
+        &self,
+        idx: usize,
+        mac_idx: usize,
+        wrec: &Weights,
+        opts: &ForwardOpts,
+        zp_in: i32,
+    ) -> LayerExec {
+        let (zp_w, zp_a) = (wrec.zp_w as i64, zp_in as i64);
+        match opts.assignment_for(mac_idx) {
+            LayerAssignment::Point(pt) => {
+                let ctx = GemmCtx {
+                    family: pt.family,
+                    m: pt.m,
+                    use_cv: pt.use_cv,
+                    zp_w,
+                    zp_a,
+                };
+                let plan =
+                    self.plans.get_or_build_pol(idx, pt.family, pt.m, pt.polarity, || {
+                        LayerPlan::build_pol(
+                            pt.family,
+                            pt.m,
+                            pt.polarity,
+                            &wrec.w_q,
+                            wrec.b_q.len(),
+                            wrec.k_dim,
+                            wrec.k_dim,
+                        )
+                    });
+                LayerExec::Uniform { ctx, plan }
+            }
+            LayerAssignment::Paired(pair) => {
+                let plan = self.plans.get_or_build_paired(idx, pair, || {
+                    PairedPlan::build(pair, &wrec.w_q, wrec.b_q.len(), wrec.k_dim)
+                });
+                LayerExec::Paired { pair, zp_w, zp_a, plan }
+            }
+        }
+    }
+
     /// Route one GEMM to the configured backend, leaving the [m_rows × n]
     /// i64 accumulator in `scratch.acc`. A backend failure (PJRT execution
     /// error) surfaces as `Err` so a serving worker can answer the request
@@ -684,8 +773,7 @@ impl Engine {
     #[allow(clippy::too_many_arguments)]
     fn dispatch_gemm(
         &self,
-        ctx: &GemmCtx,
-        plan: &LayerPlan,
+        exec: &LayerExec,
         row0: usize,
         w: &[u8],
         a: &[u8],
@@ -700,47 +788,131 @@ impl Engine {
     ) -> Result<()> {
         if systolic {
             if let Some(arr) = &self.systolic {
-                // The cycle-level array bakes its multiplier at
-                // `prepare_systolic` time; a layer whose resolved point
-                // differs would silently run through the wrong LUT, so
-                // reject it here (per-layer policies on the simulator need
-                // every layer at the prepared point).
-                if (arr.family, arr.m) != (ctx.family, ctx.m) {
-                    bail!(
-                        "systolic array prepared for {} m={} but this layer \
-                         resolves to {} m={} — mixed per-layer points are not \
-                         supported by the cycle-level simulator",
-                        arr.family.name(),
-                        arr.m,
-                        ctx.family.name(),
-                        ctx.m
-                    );
-                }
-                scratch.acc = systolic_gemm(arr, ctx, w, a, m_rows, k, n, bias, toggles);
-                return Ok(());
+                return self.systolic_route(
+                    arr, exec, row0, w, a, m_rows, k, n, bias, toggles, scratch,
+                );
             }
         }
         if let Some((rt, variant)) = &self.pjrt {
-            scratch.acc =
-                pjrt_gemm(rt, *variant, ctx, plan, row0, w, a, m_rows, k, n, bias)?;
-            return Ok(());
+            // The AOT kernels implement only the negative-polarity closed
+            // forms; routing anything else through them would silently run
+            // the wrong multiplier — reject instead (the native engines
+            // serve every point).
+            return match exec {
+                LayerExec::Uniform { ctx, plan } if plan.pol == Polarity::Neg => {
+                    scratch.acc =
+                        pjrt_gemm(rt, *variant, ctx, plan, row0, w, a, m_rows, k, n, bias)?;
+                    Ok(())
+                }
+                LayerExec::Uniform { .. } => bail!(
+                    "positive-polarity points are not supported on the PJRT \
+                     path — use the native engines"
+                ),
+                LayerExec::Paired { .. } => bail!(
+                    "paired layers are not supported on the PJRT path — use \
+                     the native engines"
+                ),
+            };
         }
-        let lut = self.lut_lookup(ctx.family, ctx.m);
-        approx_gemm_planned(
-            if lut.is_some() { GemmKind::Lut } else { GemmKind::Identity },
-            ctx,
-            plan,
-            row0,
-            lut,
-            w,
-            a,
-            m_rows,
-            k,
-            n,
-            bias,
-            scratch,
-            threads,
-        );
+        match exec {
+            LayerExec::Uniform { ctx, plan } => {
+                let lut = self.lut_lookup(ctx.family, ctx.m, plan.pol);
+                approx_gemm_planned(
+                    if lut.is_some() { GemmKind::Lut } else { GemmKind::Identity },
+                    ctx,
+                    plan,
+                    row0,
+                    lut,
+                    w,
+                    a,
+                    m_rows,
+                    k,
+                    n,
+                    bias,
+                    scratch,
+                    threads,
+                );
+            }
+            LayerExec::Paired { pair, zp_w, zp_a, plan } => {
+                let even = pair.even.normalized();
+                let odd = pair.odd.normalized();
+                let le = self.lut_lookup(even.family, even.m, even.polarity);
+                let lo = self.lut_lookup(odd.family, odd.m, odd.polarity);
+                // Hardware-faithful lookup only when every approximate
+                // half has its prepared table (same rule as the uniform
+                // path: no silent on-demand builds on the hot path).
+                let have_all = (even == LayerPoint::EXACT || le.is_some())
+                    && (odd == LayerPoint::EXACT || lo.is_some());
+                let kind = if have_all && (le.is_some() || lo.is_some()) {
+                    GemmKind::Lut
+                } else {
+                    GemmKind::Identity
+                };
+                paired_gemm_planned(
+                    kind, pair, *zp_w, *zp_a, plan, row0, le, lo, w, a, m_rows, k, n,
+                    bias, scratch, threads,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Route one GEMM through the cycle-level simulator, checking that the
+    /// array was prepared for exactly this layer's resolved assignment — a
+    /// mismatch would silently run the wrong multiplier columns, so it is
+    /// an error (per-layer policies on the simulator need every layer at
+    /// the prepared configuration).
+    #[allow(clippy::too_many_arguments)]
+    fn systolic_route(
+        &self,
+        arr: &SystolicArray,
+        exec: &LayerExec,
+        row0: usize,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+        bias: &[i32],
+        toggles: &mut ToggleStats,
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        match exec {
+            LayerExec::Uniform { ctx, plan } => {
+                let want = MulPoint::new(ctx.family, ctx.m, plan.pol);
+                if arr.is_paired() || arr.even != want {
+                    bail!(
+                        "systolic array prepared for {} but this layer resolves \
+                         to {} — mixed per-layer configurations are not \
+                         supported by the cycle-level simulator",
+                        arr.describe(),
+                        want.describe()
+                    );
+                }
+                scratch.acc =
+                    systolic_gemm(arr, ctx, plan.pol, w, a, m_rows, k, n, bias, toggles);
+            }
+            LayerExec::Paired { pair, zp_w, zp_a, plan } => {
+                let even = pair.even.normalized();
+                let odd = pair.odd.normalized();
+                let want_e = MulPoint::new(even.family, even.m, even.polarity);
+                let want_o = MulPoint::new(odd.family, odd.m, odd.polarity);
+                if arr.even != want_e || arr.odd != want_o {
+                    bail!(
+                        "systolic array prepared for {} but this layer resolves \
+                         to a {}/{} pairing — prepare_systolic_paired must \
+                         match the layer's assignment",
+                        arr.describe(),
+                        want_e.describe(),
+                        want_o.describe()
+                    );
+                }
+                scratch.acc = systolic_gemm_paired(
+                    arr, pair, *zp_w, *zp_a, plan, row0, w, a, m_rows, k, n, bias,
+                    toggles,
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -851,6 +1023,7 @@ fn im2col_group(
 fn systolic_gemm(
     arr: &SystolicArray,
     ctx: &GemmCtx,
+    pol: Polarity,
     w: &[u8],
     a: &[u8],
     m_rows: usize,
@@ -861,7 +1034,7 @@ fn systolic_gemm(
 ) -> Vec<i64> {
     let nn = arr.n;
     let consts: Vec<CvConstants> = (0..m_rows)
-        .map(|f| cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k))
+        .map(|f| cv::constants_pol(ctx.family, pol, ctx.m, &w[f * k..(f + 1) * k], k))
         .collect();
     let mut acc = vec![0i64; m_rows * n];
     let mut sum_x = vec![0i64; n];
@@ -876,7 +1049,7 @@ fn systolic_gemm(
                 .map(|p| (0..klen).map(|kk| a[(k0 + kk) * n + p]).collect())
                 .collect();
             // raw accumulation; V applied after all K tiles.
-            let (tile_out, stats) = arr.run_tile(&w_tile, &cols, &consts, false);
+            let (tile_out, stats) = arr.run_tile(&w_tile, &cols, &consts, false, k0);
             toggles.merge(&stats);
             for (p, col_out) in tile_out.iter().enumerate() {
                 for (f, &v) in col_out.iter().enumerate() {
@@ -885,7 +1058,7 @@ fn systolic_gemm(
             }
             if f0 == 0 {
                 for (p, col) in cols.iter().enumerate() {
-                    sum_x[p] += cv::sum_x(ctx.family, ctx.m, col);
+                    sum_x[p] += cv::sum_x_pol(ctx.family, pol, ctx.m, col);
                 }
             }
         }
@@ -909,6 +1082,98 @@ fn systolic_gemm(
         let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
         for p in 0..n {
             acc[f * n + p] += -ctx.zp_w * sum_a[p] - ctx.zp_a * sum_w + kzz + bias[f] as i64;
+        }
+    }
+    acc
+}
+
+/// Route one **paired** GEMM through the cycle-level simulator: the array
+/// multiplies each reduction column through its parity's multiplier (the
+/// alternating-column hardware layout), and the per-partition V terms come
+/// from the paired plan's constants (`row0` selects the conv-group window).
+#[allow(clippy::too_many_arguments)]
+fn systolic_gemm_paired(
+    arr: &SystolicArray,
+    pair: &PairedPoint,
+    zp_w: i64,
+    zp_a: i64,
+    plan: &PairedPlan,
+    row0: usize,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    toggles: &mut ToggleStats,
+) -> Vec<i64> {
+    let nn = arr.n;
+    let even = pair.even.normalized();
+    let odd = pair.odd.normalized();
+    let mut acc = vec![0i64; m_rows * n];
+    let mut sum_x_e = vec![0i64; n];
+    let mut sum_x_o = vec![0i64; n];
+    for k0 in (0..k).step_by(nn) {
+        let klen = nn.min(k - k0);
+        for f0 in (0..m_rows).step_by(nn) {
+            let flen = nn.min(m_rows - f0);
+            let w_tile: Vec<Vec<u8>> = (0..flen)
+                .map(|f| w[(f0 + f) * k + k0..(f0 + f) * k + k0 + klen].to_vec())
+                .collect();
+            let cols: Vec<Vec<u8>> = (0..n)
+                .map(|p| (0..klen).map(|kk| a[(k0 + kk) * n + p]).collect())
+                .collect();
+            // raw accumulation; per-partition V applied after all K tiles.
+            let (tile_out, stats) = arr.run_tile(&w_tile, &cols, &[], false, k0);
+            toggles.merge(&stats);
+            for (p, col_out) in tile_out.iter().enumerate() {
+                for (f, &v) in col_out.iter().enumerate() {
+                    acc[(f0 + f) * n + p] += v;
+                }
+            }
+            if f0 == 0 {
+                for (p, col) in cols.iter().enumerate() {
+                    for (kk, &av) in col.iter().enumerate() {
+                        if (k0 + kk) % 2 == 0 {
+                            sum_x_e[p] +=
+                                crate::approx::xvar_pol(even.family, even.polarity, av, even.m)
+                                    as i64;
+                        } else {
+                            sum_x_o[p] +=
+                                crate::approx::xvar_pol(odd.family, odd.polarity, av, odd.m)
+                                    as i64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if even.use_cv && even != LayerPoint::EXACT {
+        for f in 0..m_rows {
+            for p in 0..n {
+                acc[f * n + p] += cv::v_term(&plan.even.consts[row0 + f], sum_x_e[p]);
+            }
+        }
+    }
+    if odd.use_cv && odd != LayerPoint::EXACT {
+        for f in 0..m_rows {
+            for p in 0..n {
+                acc[f * n + p] += cv::v_term(&plan.odd.consts[row0 + f], sum_x_o[p]);
+            }
+        }
+    }
+    // zero-point + bias epilogue (same as fast path)
+    let mut sum_a = vec![0i64; n];
+    for kk in 0..k {
+        for p in 0..n {
+            sum_a[p] += a[kk * n + p] as i64;
+        }
+    }
+    let kzz = k as i64 * zp_w * zp_a;
+    for f in 0..m_rows {
+        let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+        for p in 0..n {
+            acc[f * n + p] += -zp_w * sum_a[p] - zp_a * sum_w + kzz + bias[f] as i64;
         }
     }
     acc
@@ -1406,6 +1671,175 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn paired_policy_forward_matches_forward_batch() {
+        // The pairing tentpole at engine level: arbitrary mixes of paired,
+        // positive-polarity and plain layers must be bit-identical between
+        // per-image and batched forwards, across engines (identity /
+        // prepared LUTs) and GEMM thread counts.
+        use crate::nn::policy::{LayerAssignment, PairedPoint};
+        crate::util::prop::check_msg(
+            "paired policy forward == forward_batch",
+            8,
+            0xB0C3,
+            |r| {
+                let model_seed = r.next_u64();
+                let policy_seed = r.next_u64();
+                let batch = 1 + r.below(4) as usize;
+                let use_luts = r.below(2) == 1;
+                (model_seed, policy_seed, batch, use_luts)
+            },
+            |&(model_seed, policy_seed, batch, use_luts)| {
+                let mut rng = Rng::new(model_seed);
+                let model = rand_model(&mut rng);
+                let n_layers = model.mac_layers();
+                let imgs: Vec<Tensor> =
+                    (0..batch).map(|_| rand_image(&model, &mut rng)).collect();
+                let mut pr = Rng::new(policy_seed);
+                let mut point = |pr: &mut Rng| {
+                    let fam = Family::ALL[pr.below(4) as usize];
+                    let m = if fam == Family::Exact { 0 } else { pr.below(8) as u32 };
+                    let pol = if fam == Family::Exact {
+                        Polarity::Neg
+                    } else {
+                        Polarity::ALL[pr.below(2) as usize]
+                    };
+                    LayerPoint::new_pol(fam, m, pol, pr.below(2) == 1)
+                };
+                let assignments: Vec<LayerAssignment> = (0..n_layers)
+                    .map(|_| {
+                        if pr.below(2) == 0 {
+                            LayerAssignment::Point(point(&mut pr))
+                        } else {
+                            LayerAssignment::Paired(PairedPoint::new(
+                                point(&mut pr),
+                                point(&mut pr),
+                            ))
+                        }
+                    })
+                    .collect();
+                let policy = std::sync::Arc::new(
+                    LayerPolicy::from_assignments(assignments).unwrap(),
+                );
+                let mut engine = Engine::new(model);
+                if use_luts {
+                    engine.prepare_luts_for_policy(&policy);
+                }
+                let opts = ForwardOpts::with_policy(policy.clone());
+                let per: Vec<Vec<f64>> = imgs
+                    .iter()
+                    .map(|img| engine.forward(img, &opts).unwrap())
+                    .collect();
+                let refs: Vec<&Tensor> = imgs.iter().collect();
+                let mut scratch = Scratch::new();
+                for threads in [1usize, 2, 5] {
+                    let batched = engine
+                        .forward_batch_with_threads(&refs, &opts, &mut scratch, threads)
+                        .unwrap();
+                    if batched != per {
+                        return Err(format!(
+                            "policy {} luts={use_luts} batch={batch} \
+                             threads={threads}: batched != per-image",
+                            policy.describe()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn paired_plans_and_luts_are_cached_per_assignment() {
+        use crate::nn::policy::PairedPoint;
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let policy = std::sync::Arc::new(
+            LayerPolicy::paired_uniform(Family::Perforated, 2, true, 2).unwrap(),
+        );
+        let opts = ForwardOpts::with_policy(policy.clone());
+        assert_eq!(engine.plan_builds(), 0);
+        let first = engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "one paired plan per MAC layer");
+        let second = engine.forward(&img, &opts).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "steady state builds no plans");
+        assert_eq!(first, second);
+        // A nocv twin hits the same (cv-stripped) plan keys.
+        let nocv = std::sync::Arc::new(
+            LayerPolicy::paired_uniform(Family::Perforated, 2, false, 2).unwrap(),
+        );
+        engine.forward(&img, &ForwardOpts::with_policy(nocv)).unwrap();
+        assert_eq!(engine.plan_builds(), 2, "cv-stripped pairing shares plans");
+        // Prewarm path: a fresh engine warms the same two paired plans.
+        let engine2 = Engine::new(toy_model());
+        engine2.prepare_plans_policy(&policy).unwrap();
+        assert_eq!(engine2.plan_builds(), 2);
+        engine2.forward(&img, &opts).unwrap();
+        assert_eq!(engine2.plan_builds(), 2, "forward reuses prewarmed plans");
+        // And the paired systolic array computes the same logits.
+        let mut engine3 = Engine::new(toy_model());
+        engine3.prepare_systolic_paired(
+            PairedPoint::mirrored(Family::Perforated, 2, true),
+            16,
+        );
+        let (sys_logits, stats) = engine3.forward_systolic(&img, &opts).unwrap();
+        assert_eq!(sys_logits, first, "paired systolic == paired fast path");
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn systolic_rejects_mismatched_pairing() {
+        use crate::nn::policy::PairedPoint;
+        let mut engine = Engine::new(toy_model());
+        // Array prepared uniform, layer resolves paired -> error.
+        engine.prepare_systolic(Family::Perforated, 2, 16);
+        let policy = std::sync::Arc::new(
+            LayerPolicy::paired_uniform(Family::Perforated, 2, true, 2).unwrap(),
+        );
+        let opts = ForwardOpts::with_policy(policy);
+        let err = engine.forward_systolic(&toy_image(), &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("pairing"), "{err:#}");
+        // Array prepared paired, layer resolves uniform -> error.
+        let mut engine2 = Engine::new(toy_model());
+        engine2.prepare_systolic_paired(
+            PairedPoint::mirrored(Family::Perforated, 2, true),
+            16,
+        );
+        let uni = ForwardOpts::approx(Family::Perforated, 2, true);
+        let err2 = engine2.forward_systolic(&toy_image(), &uni).unwrap_err();
+        assert!(format!("{err2:#}").contains("paired"), "{err2:#}");
+    }
+
+    #[test]
+    fn pos_polarity_policy_runs_end_to_end() {
+        // A uniform positive-polarity policy: runs, differs from the Neg
+        // twin (errors now overestimate), and stays engine-consistent
+        // (identity == prepared LUT == systolic).
+        let img = toy_image();
+        let pos_policy = std::sync::Arc::new(
+            LayerPolicy::new(vec![
+                LayerPoint::new_pol(
+                    Family::Perforated,
+                    2,
+                    Polarity::Pos,
+                    true,
+                );
+                2
+            ])
+            .unwrap(),
+        );
+        let opts = ForwardOpts::with_policy(pos_policy);
+        let engine = Engine::new(toy_model());
+        let ident = engine.forward(&img, &opts).unwrap();
+        let mut engine_lut = Engine::new(toy_model());
+        engine_lut.prepare_lut_pol(Family::Perforated, 2, Polarity::Pos);
+        assert_eq!(engine_lut.forward(&img, &opts).unwrap(), ident);
+        let mut engine_sys = Engine::new(toy_model());
+        engine_sys.prepare_systolic_pol(Family::Perforated, 2, Polarity::Pos, 16);
+        let (sys, _) = engine_sys.forward_systolic(&img, &opts).unwrap();
+        assert_eq!(sys, ident);
     }
 
     #[test]

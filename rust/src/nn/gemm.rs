@@ -35,11 +35,12 @@
 //!    (shared by the Identity, LUT and epilogue paths). Small GEMMs stay
 //!    single-threaded (`PAR_THRESHOLD`) so spawn cost never dominates.
 
-use crate::approx::{xvar, Family, MulLut};
+use crate::approx::{comp_low, xvar_pol, Family, MulLut, Polarity};
 use crate::cv;
 use crate::util::threadpool::configured_workers;
 
-use super::plan::{reset, LayerPlan, Scratch};
+use super::plan::{reset, LayerPlan, PairedPlan, Scratch};
+use super::policy::{LayerPoint, PairedPoint};
 
 /// Which GEMM engine to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -204,6 +205,107 @@ fn gemm_core_i32(
     });
 }
 
+/// Apply the signed-error expansion of `plan`'s (family, m, polarity)
+/// point to `scratch.acc32`, which must already hold the exact Σ W·A —
+/// afterwards acc32 = Σ AM(W, A). `w` is the raw weight window matching
+/// `row0` (the perforated expansion streams it directly; paired partitions
+/// pass their parity-masked panel, whose zeros contribute nothing to any
+/// family's ε term).
+fn eps_identity_into(
+    plan: &LayerPlan,
+    row0: usize,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut Scratch,
+    threads: usize,
+) {
+    let (family, m, pol) = (plan.family, plan.m, plan.pol);
+    if family == Family::Exact || m == 0 {
+        return;
+    }
+    // ε-term direction in the accumulator: Neg points drop value (subtract
+    // the ε GEMM), Pos points compensate upward (add it).
+    let sign = match pol {
+        Polarity::Neg => -1,
+        Polarity::Pos => 1,
+    };
+    if pol == Polarity::Pos {
+        // i32 headroom: exact (≤ K·255²) plus the compensation (≤ K·255·127)
+        // must stay inside i32 — tighter than the Neg bound.
+        assert!(
+            k <= 20_000,
+            "K too large for i32 accumulation with positive-polarity \
+             compensation — tile it"
+        );
+    }
+    let mask = ((1u32 << m) - 1) as u8;
+    match family {
+        Family::Perforated | Family::Recursive => {
+            // Shared activation transform (low bits for Neg, their modular
+            // complement for Pos); only the weight operand differs per
+            // family — raw weights for perforated, the plan's prebuilt
+            // low/complement panel for recursive.
+            reset(&mut scratch.a_mask, k * n);
+            match pol {
+                Polarity::Neg => {
+                    for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
+                        *dst = (src & mask) as i32;
+                    }
+                }
+                Polarity::Pos => {
+                    for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
+                        *dst = comp_low(src as i32, m);
+                    }
+                }
+            }
+            let w_panel =
+                if family == Family::Recursive { plan.w_low(row0, m_rows) } else { w };
+            gemm_core_i32(
+                w_panel,
+                &scratch.a_mask,
+                m_rows,
+                k,
+                n,
+                sign,
+                &mut scratch.acc32,
+                threads,
+            );
+        }
+        Family::Truncated => {
+            // ε = Σ_{i<m} (W mod 2^{m−i}) · a_i · 2^i (Neg) or its modular
+            // complement (Pos): m bit-plane GEMMs over the plan's
+            // precomputed weight planes. Each term fits i32 (≤ K·127·2^i ≤
+            // K·2^13); the weighted merge happens per plane with the shift
+            // folded into the i32 domain.
+            reset(&mut scratch.a_mask, k * n);
+            reset(&mut scratch.term, m_rows * n);
+            for i in 0..m {
+                for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
+                    *dst = ((src >> i) & 1) as i32;
+                }
+                scratch.term.fill(0);
+                gemm_core_i32(
+                    plan.w_plane(i as usize, row0, m_rows),
+                    &scratch.a_mask,
+                    m_rows,
+                    k,
+                    n,
+                    1,
+                    &mut scratch.term,
+                    threads,
+                );
+                for (o, &t) in scratch.acc32.iter_mut().zip(&scratch.term) {
+                    *o += sign * (t << i);
+                }
+            }
+        }
+        Family::Exact => unreachable!(),
+    }
+}
+
 /// Σ_k AM(W,A) via the closed-form identities into `scratch.acc` (fast
 /// path). `plan` supplies the precomputed masked weight panels; `row0`
 /// selects the filter-row window within the plan (conv groups) and `w` is
@@ -219,69 +321,13 @@ fn am_acc_identity_into(
     scratch: &mut Scratch,
     threads: usize,
 ) {
-    let (family, m) = (plan.family, plan.m);
     reset(&mut scratch.acc32, m_rows * n);
     reset(&mut scratch.a_wide, k * n);
     for (dst, &src) in scratch.a_wide.iter_mut().zip(a) {
         *dst = src as i32;
     }
     gemm_core_i32(w, &scratch.a_wide, m_rows, k, n, 1, &mut scratch.acc32, threads);
-    if family != Family::Exact && m > 0 {
-        let mask = ((1u32 << m) - 1) as u8;
-        match family {
-            Family::Perforated => {
-                reset(&mut scratch.a_mask, k * n);
-                for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                    *dst = (src & mask) as i32;
-                }
-                gemm_core_i32(w, &scratch.a_mask, m_rows, k, n, -1, &mut scratch.acc32, threads);
-            }
-            Family::Recursive => {
-                reset(&mut scratch.a_mask, k * n);
-                for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                    *dst = (src & mask) as i32;
-                }
-                gemm_core_i32(
-                    plan.w_low(row0, m_rows),
-                    &scratch.a_mask,
-                    m_rows,
-                    k,
-                    n,
-                    -1,
-                    &mut scratch.acc32,
-                    threads,
-                );
-            }
-            Family::Truncated => {
-                // ε = Σ_{i<m} (W mod 2^{m−i}) · a_i · 2^i: m bit-plane GEMMs
-                // over the plan's precomputed weight planes. Each term fits
-                // i32 (≤ K·127·2^i ≤ K·2^13); the weighted merge happens per
-                // plane with the shift folded into the i32 domain.
-                reset(&mut scratch.a_mask, k * n);
-                reset(&mut scratch.term, m_rows * n);
-                for i in 0..m {
-                    for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                        *dst = ((src >> i) & 1) as i32;
-                    }
-                    scratch.term.fill(0);
-                    gemm_core_i32(
-                        plan.w_plane(i as usize, row0, m_rows),
-                        &scratch.a_mask,
-                        m_rows,
-                        k,
-                        n,
-                        1,
-                        &mut scratch.term,
-                        threads,
-                    );
-                    for (o, &t) in scratch.acc32.iter_mut().zip(&scratch.term) {
-                        *o -= t << i;
-                    }
-                }
-            }
-            Family::Exact => unreachable!(),
-        }
-    }
+    eps_identity_into(plan, row0, w, a, m_rows, k, n, scratch, threads);
     reset(&mut scratch.acc, m_rows * n);
     for (o, &v) in scratch.acc.iter_mut().zip(&scratch.acc32) {
         *o = v as i64;
@@ -366,6 +412,206 @@ pub fn am_acc_lut(
     acc
 }
 
+/// N-blocked paired LUT accumulation over one contiguous row chunk: even
+/// reduction indices look up `even`, odd ones `odd` (`None` = an exact
+/// partition, plain product) — exactly what an array with alternating
+/// multiplier columns computes.
+fn lut_paired_chunk(
+    even: Option<&MulLut>,
+    odd: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i64],
+) {
+    let mut n0 = 0;
+    while n0 < n {
+        let nc = NC.min(n - n0);
+        for f in 0..rows {
+            let wrow = &w[f * k..(f + 1) * k];
+            let orow = &mut out[f * n + n0..f * n + n0 + nc];
+            for (kk, &wv) in wrow.iter().enumerate() {
+                let arow = &a[kk * n + n0..kk * n + n0 + nc];
+                match if kk % 2 == 0 { even } else { odd } {
+                    Some(l) => {
+                        for (o, &av) in orow.iter_mut().zip(arow) {
+                            *o += l.mul(wv, av) as i64;
+                        }
+                    }
+                    None => {
+                        for (o, &av) in orow.iter_mut().zip(arow) {
+                            *o += (wv as i64) * (av as i64);
+                        }
+                    }
+                }
+            }
+        }
+        n0 += nc;
+    }
+}
+
+/// Σ_k AM(W,A) of a paired layer via per-parity lookup, parallelized over
+/// output-row blocks.
+#[allow(clippy::too_many_arguments)]
+fn am_acc_lut_paired_into(
+    even: Option<&MulLut>,
+    odd: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    out: &mut [i64],
+) {
+    debug_assert_eq!(out.len(), m_rows * n);
+    let threads = if m_rows * k * n < PAR_THRESHOLD { 1 } else { threads };
+    par_row_blocks(out, n, threads, 8, |row0, chunk| {
+        let rows = chunk.len() / n;
+        lut_paired_chunk(even, odd, &w[row0 * k..(row0 + rows) * k], a, rows, k, n, chunk);
+    });
+}
+
+/// Resolve the LUT for one partition point: an attached table matching
+/// (family, m, polarity) is used as-is; a missing or mismatched one is
+/// built on demand (correctness fallback — steady-state callers prepare
+/// their tables). Exact partitions have no table: plain products.
+fn lut_for_point<'l>(
+    pt: LayerPoint,
+    attached: Option<&'l MulLut>,
+    built: &'l mut Option<MulLut>,
+) -> Option<&'l MulLut> {
+    if pt.family == Family::Exact || pt.m == 0 {
+        return None;
+    }
+    match attached {
+        Some(l) if l.family == pt.family && l.m == pt.m && l.polarity == pt.polarity => {
+            Some(l)
+        }
+        _ => Some(
+            built.get_or_insert_with(|| MulLut::build_pol(pt.family, pt.m, pt.polarity)),
+        ),
+    }
+}
+
+/// Full layer GEMM for an even/odd **paired** layer against a prebuilt
+/// [`PairedPlan`]: AM accumulation with the reduction dimension split by
+/// parity between the pair's two points, per-partition CV epilogues (each
+/// half regresses on its own ΣX over its own columns, with constants
+/// averaged over its partition), and the shared zero-point/bias epilogue —
+/// written into `scratch.acc` ([m_rows × n] i64).
+///
+/// `row0`/`m_rows` select a filter-row window (conv groups); `w` and
+/// `bias` are the matching windows of the raw weights/bias. Identity kind
+/// runs one exact pass plus each partition's signed ε expansion over its
+/// parity-masked panel; Lut kind streams every product through the
+/// partition's table — bit-identical by the error identities (tested).
+#[allow(clippy::too_many_arguments)]
+pub fn paired_gemm_planned(
+    kind: GemmKind,
+    pair: &PairedPoint,
+    zp_w: i64,
+    zp_a: i64,
+    plan: &PairedPlan,
+    row0: usize,
+    lut_even: Option<&MulLut>,
+    lut_odd: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    scratch: &mut Scratch,
+    threads: usize,
+) {
+    debug_assert!(row0 + m_rows <= plan.rows);
+    debug_assert_eq!(k, plan.k);
+    let even_pt = pair.even.normalized();
+    let odd_pt = pair.odd.normalized();
+    match kind {
+        GemmKind::Identity => {
+            reset(&mut scratch.acc32, m_rows * n);
+            reset(&mut scratch.a_wide, k * n);
+            for (dst, &src) in scratch.a_wide.iter_mut().zip(a) {
+                *dst = src as i32;
+            }
+            gemm_core_i32(w, &scratch.a_wide, m_rows, k, n, 1, &mut scratch.acc32, threads);
+            let w_even = &plan.w_even[row0 * k..(row0 + m_rows) * k];
+            let w_odd = &plan.w_odd[row0 * k..(row0 + m_rows) * k];
+            eps_identity_into(&plan.even, row0, w_even, a, m_rows, k, n, scratch, threads);
+            eps_identity_into(&plan.odd, row0, w_odd, a, m_rows, k, n, scratch, threads);
+            reset(&mut scratch.acc, m_rows * n);
+            for (o, &v) in scratch.acc.iter_mut().zip(&scratch.acc32) {
+                *o = v as i64;
+            }
+        }
+        GemmKind::Lut => {
+            let mut built_even: Option<MulLut> = None;
+            let mut built_odd: Option<MulLut> = None;
+            let le = lut_for_point(even_pt, lut_even, &mut built_even);
+            let lo = lut_for_point(odd_pt, lut_odd, &mut built_odd);
+            reset(&mut scratch.acc, m_rows * n);
+            am_acc_lut_paired_into(le, lo, w, a, m_rows, k, n, threads, &mut scratch.acc);
+        }
+    }
+    // Per-partition ΣX (each CV half sums its own x over its own columns).
+    let cv_even = even_pt.use_cv && even_pt != LayerPoint::EXACT;
+    let cv_odd = odd_pt.use_cv && odd_pt != LayerPoint::EXACT;
+    if cv_even {
+        reset(&mut scratch.sum_x, n);
+        for kk in (0..k).step_by(2) {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (sx, &av) in scratch.sum_x.iter_mut().zip(arow) {
+                *sx += xvar_pol(even_pt.family, even_pt.polarity, av, even_pt.m) as i64;
+            }
+        }
+    }
+    if cv_odd {
+        reset(&mut scratch.sum_x2, n);
+        for kk in (1..k).step_by(2) {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (sx, &av) in scratch.sum_x2.iter_mut().zip(arow) {
+                *sx += xvar_pol(odd_pt.family, odd_pt.polarity, av, odd_pt.m) as i64;
+            }
+        }
+    }
+    reset(&mut scratch.sum_a, n);
+    for kk in 0..k {
+        let arow = &a[kk * n..(kk + 1) * n];
+        for (sa, &av) in scratch.sum_a.iter_mut().zip(arow) {
+            *sa += av as i64;
+        }
+    }
+    // Fused per-partition V + shared zero-point/bias epilogue, parallelized
+    // over the same row blocks as the core. Σw (full-row) and each half's
+    // C/C₀ come from the paired plan.
+    let kzz = k as i64 * zp_w * zp_a;
+    let sum_a = &scratch.sum_a;
+    let sum_x = &scratch.sum_x;
+    let sum_x2 = &scratch.sum_x2;
+    let (even_plan, odd_plan) = (&plan.even, &plan.odd);
+    let epi_threads = if m_rows * n < PAR_THRESHOLD / 16 { 1 } else { threads };
+    par_row_blocks(&mut scratch.acc, n, epi_threads, 8, |r0, chunk| {
+        for (fi, orow) in chunk.chunks_mut(n).enumerate() {
+            let f = r0 + fi;
+            let base = -zp_a * plan.sum_w[row0 + f] + kzz + bias[f] as i64;
+            for (p, o) in orow.iter_mut().enumerate() {
+                let mut add = base - zp_w * sum_a[p];
+                if cv_even {
+                    add += cv::v_term(&even_plan.consts[row0 + f], sum_x[p]);
+                }
+                if cv_odd {
+                    add += cv::v_term(&odd_plan.consts[row0 + f], sum_x2[p]);
+                }
+                *o += add;
+            }
+        }
+    });
+}
+
 /// Full layer GEMM against a prebuilt [`LayerPlan`]: AM accumulation (+V) +
 /// zero-point/bias epilogue, written into `scratch.acc` ([m_rows × n] i64).
 ///
@@ -414,8 +660,16 @@ pub fn approx_gemm_planned(
                 am_acc_identity_into(plan, row0, w, a, m_rows, k, n, scratch, threads);
             } else {
                 let l: &MulLut = match lut {
-                    Some(l) if l.family == ctx.family && l.m == ctx.m => l,
-                    _ => built.get_or_insert_with(|| MulLut::build(ctx.family, ctx.m)),
+                    Some(l)
+                        if l.family == ctx.family
+                            && l.m == ctx.m
+                            && l.polarity == plan.pol =>
+                    {
+                        l
+                    }
+                    _ => built.get_or_insert_with(|| {
+                        MulLut::build_pol(ctx.family, ctx.m, plan.pol)
+                    }),
                 };
                 reset(&mut scratch.acc, m_rows * n);
                 am_acc_lut_into(l, w, a, m_rows, k, n, threads, &mut scratch.acc);
@@ -429,7 +683,7 @@ pub fn approx_gemm_planned(
         for kk in 0..k {
             let arow = &a[kk * n..(kk + 1) * n];
             for (sx, &av) in scratch.sum_x.iter_mut().zip(arow) {
-                *sx += xvar(ctx.family, av, ctx.m) as i64;
+                *sx += xvar_pol(ctx.family, plan.pol, av, ctx.m) as i64;
             }
         }
     }
@@ -506,12 +760,13 @@ pub fn approx_gemm(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::approx::am;
+    use crate::approx::am_pol;
     use crate::util::prop;
     use crate::util::rng::Rng;
 
-    fn naive_am_acc(
+    fn naive_am_acc_pol(
         family: Family,
+        pol: Polarity,
         m: u32,
         w: &[u8],
         a: &[u8],
@@ -524,7 +779,7 @@ mod tests {
             for p in 0..n {
                 let mut s = 0i64;
                 for kk in 0..k {
-                    s += am(family, w[f * k + kk], a[kk * n + p], m) as i64;
+                    s += am_pol(family, pol, w[f * k + kk], a[kk * n + p], m) as i64;
                 }
                 out[f * n + p] = s;
             }
@@ -532,10 +787,23 @@ mod tests {
         out
     }
 
+    fn naive_am_acc(
+        family: Family,
+        m: u32,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<i64> {
+        naive_am_acc_pol(family, Polarity::Neg, m, w, a, m_rows, k, n)
+    }
+
     /// Scalar reference for the *full* layer GEMM (AM + V + epilogue),
     /// mirroring the python reference term by term.
-    fn naive_full_gemm(
+    fn naive_full_gemm_pol(
         ctx: &GemmCtx,
+        pol: Polarity,
         w: &[u8],
         a: &[u8],
         m_rows: usize,
@@ -543,13 +811,14 @@ mod tests {
         n: usize,
         bias: &[i32],
     ) -> Vec<i64> {
-        let mut out = naive_am_acc(ctx.family, ctx.m, w, a, m_rows, k, n);
+        let mut out = naive_am_acc_pol(ctx.family, pol, ctx.m, w, a, m_rows, k, n);
         if ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0 {
             for f in 0..m_rows {
-                let c = cv::constants(ctx.family, ctx.m, &w[f * k..(f + 1) * k], k);
+                let c =
+                    cv::constants_pol(ctx.family, pol, ctx.m, &w[f * k..(f + 1) * k], k);
                 for p in 0..n {
                     let sx: i64 = (0..k)
-                        .map(|kk| xvar(ctx.family, a[kk * n + p], ctx.m) as i64)
+                        .map(|kk| xvar_pol(ctx.family, pol, a[kk * n + p], ctx.m) as i64)
                         .sum();
                     out[f * n + p] += cv::v_term(&c, sx);
                 }
@@ -562,6 +831,79 @@ mod tests {
                 let sum_a: i64 = (0..k).map(|kk| a[kk * n + p] as i64).sum();
                 out[f * n + p] +=
                     -ctx.zp_w * sum_a - ctx.zp_a * sum_w + kzz + bias[f] as i64;
+            }
+        }
+        out
+    }
+
+    fn naive_full_gemm(
+        ctx: &GemmCtx,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+        bias: &[i32],
+    ) -> Vec<i64> {
+        naive_full_gemm_pol(ctx, Polarity::Neg, w, a, m_rows, k, n, bias)
+    }
+
+    /// Scalar reference for a paired layer: per-product AM by reduction
+    /// parity, per-partition CV (constants from the parity-masked rows with
+    /// partition-sized averages), shared zero-point epilogue.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_paired_gemm(
+        pair: &PairedPoint,
+        zp_w: i64,
+        zp_a: i64,
+        w: &[u8],
+        a: &[u8],
+        m_rows: usize,
+        k: usize,
+        n: usize,
+        bias: &[i32],
+    ) -> Vec<i64> {
+        let even = pair.even.normalized();
+        let odd = pair.odd.normalized();
+        let mut out = vec![0i64; m_rows * n];
+        for f in 0..m_rows {
+            for p in 0..n {
+                let mut s = 0i64;
+                for kk in 0..k {
+                    let pt = if kk % 2 == 0 { even } else { odd };
+                    s += am_pol(pt.family, pt.polarity, w[f * k + kk], a[kk * n + p], pt.m)
+                        as i64;
+                }
+                out[f * n + p] = s;
+            }
+        }
+        for (parity, pt) in [(0usize, even), (1usize, odd)] {
+            if !pt.use_cv || pt == LayerPoint::EXACT {
+                continue;
+            }
+            let k_valid = if parity == 0 { k.div_ceil(2) } else { k / 2 };
+            for f in 0..m_rows {
+                let wp: Vec<u8> = (0..k)
+                    .map(|kk| if kk % 2 == parity { w[f * k + kk] } else { 0 })
+                    .collect();
+                let c = cv::constants_pol(pt.family, pt.polarity, pt.m, &wp, k_valid);
+                for p in 0..n {
+                    let sx: i64 = (parity..k)
+                        .step_by(2)
+                        .map(|kk| {
+                            xvar_pol(pt.family, pt.polarity, a[kk * n + p], pt.m) as i64
+                        })
+                        .sum();
+                    out[f * n + p] += cv::v_term(&c, sx);
+                }
+            }
+        }
+        let kzz = k as i64 * zp_w * zp_a;
+        for f in 0..m_rows {
+            let sum_w: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+            for p in 0..n {
+                let sum_a: i64 = (0..k).map(|kk| a[kk * n + p] as i64).sum();
+                out[f * n + p] += -zp_w * sum_a - zp_a * sum_w + kzz + bias[f] as i64;
             }
         }
         out
@@ -655,6 +997,229 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn pos_polarity_planned_gemm_matches_reference() {
+        // The uniform positive-polarity path: pos plans (complement panels)
+        // + pos activation transforms + negated CV constants must equal the
+        // scalar reference for every family, kind and thread count.
+        prop::check_msg(
+            "pos planned gemm bit-exact",
+            16,
+            0x91AB,
+            |r| {
+                let m_rows = 1 + r.below(10) as usize;
+                let k = 1 + r.below(40) as usize;
+                let n = 1 + r.below(10) as usize;
+                let w: Vec<u8> = (0..m_rows * k).map(|_| r.u8()).collect();
+                let a: Vec<u8> = (0..k * n).map(|_| r.u8()).collect();
+                let bias: Vec<i32> =
+                    (0..m_rows).map(|_| r.range_i64(-500, 500) as i32).collect();
+                let fam = Family::APPROX[r.below(3) as usize];
+                let m = 1 + r.below(7) as u32;
+                let use_cv = r.below(2) == 1;
+                let zp_w = r.range_i64(0, 40);
+                let zp_a = r.range_i64(0, 120);
+                (fam, m, use_cv, zp_w, zp_a, w, a, bias, m_rows, k, n)
+            },
+            |(fam, m, use_cv, zp_w, zp_a, w, a, bias, m_rows, k, n)| {
+                let ctx = GemmCtx {
+                    family: *fam,
+                    m: *m,
+                    use_cv: *use_cv,
+                    zp_w: *zp_w,
+                    zp_a: *zp_a,
+                };
+                let want =
+                    naive_full_gemm_pol(&ctx, Polarity::Pos, w, a, *m_rows, *k, *n, bias);
+                let plan =
+                    LayerPlan::build_pol(*fam, *m, Polarity::Pos, w, *m_rows, *k, *k);
+                let mut scratch = Scratch::new();
+                for kind in [GemmKind::Identity, GemmKind::Lut] {
+                    for threads in [1usize, 3] {
+                        approx_gemm_planned(
+                            kind, &ctx, &plan, 0, None, w, a, *m_rows, *k, *n, bias,
+                            &mut scratch, threads,
+                        );
+                        if scratch.acc != want {
+                            return Err(format!(
+                                "{} m={m} cv={use_cv} {kind:?} threads={threads}: \
+                                 pos planned != naive",
+                                fam.name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn paired_gemm_matches_scalar_reference() {
+        // The pairing tentpole: identity (exact pass + per-partition signed
+        // ε over parity-masked panels) and LUT (per-parity tables) engines
+        // both equal the scalar per-product reference — for arbitrary
+        // point pairs (mirrored, cross-family, half-exact), CV settings,
+        // shapes with odd k, and thread counts.
+        prop::check_msg(
+            "paired gemm bit-exact",
+            16,
+            0x91AC,
+            |r| {
+                let m_rows = 1 + r.below(9) as usize;
+                let k = 1 + r.below(40) as usize;
+                let n = 1 + r.below(9) as usize;
+                let w: Vec<u8> = (0..m_rows * k).map(|_| r.u8()).collect();
+                let a: Vec<u8> = (0..k * n).map(|_| r.u8()).collect();
+                let bias: Vec<i32> =
+                    (0..m_rows).map(|_| r.range_i64(-300, 300) as i32).collect();
+                let mut point = |r: &mut Rng| {
+                    let fam = Family::ALL[r.below(4) as usize];
+                    let m = if fam == Family::Exact { 0 } else { r.below(8) as u32 };
+                    let pol = if fam == Family::Exact {
+                        Polarity::Neg
+                    } else {
+                        Polarity::ALL[r.below(2) as usize]
+                    };
+                    LayerPoint::new_pol(fam, m, pol, r.below(2) == 1)
+                };
+                let pair = PairedPoint::new(point(r), point(r));
+                let zp_w = r.range_i64(0, 40);
+                let zp_a = r.range_i64(0, 120);
+                (pair, zp_w, zp_a, w, a, bias, m_rows, k, n)
+            },
+            |(pair, zp_w, zp_a, w, a, bias, m_rows, k, n)| {
+                let want =
+                    naive_paired_gemm(pair, *zp_w, *zp_a, w, a, *m_rows, *k, *n, bias);
+                let plan = PairedPlan::build(*pair, w, *m_rows, *k);
+                let mut scratch = Scratch::new();
+                for kind in [GemmKind::Identity, GemmKind::Lut] {
+                    for threads in [1usize, 2, 5] {
+                        paired_gemm_planned(
+                            kind, pair, *zp_w, *zp_a, &plan, 0, None, None, w, a,
+                            *m_rows, *k, *n, bias, &mut scratch, threads,
+                        );
+                        if scratch.acc != want {
+                            return Err(format!(
+                                "{} {kind:?} threads={threads}: paired != naive",
+                                pair.describe()
+                            ));
+                        }
+                    }
+                }
+                // Prepared (matching) LUTs take the fast lookup path and
+                // must agree too.
+                let le = (pair.even.normalized() != LayerPoint::EXACT).then(|| {
+                    MulLut::build_pol(
+                        pair.even.family,
+                        pair.even.m,
+                        pair.even.polarity,
+                    )
+                });
+                let lo = (pair.odd.normalized() != LayerPoint::EXACT).then(|| {
+                    MulLut::build_pol(pair.odd.family, pair.odd.m, pair.odd.polarity)
+                });
+                paired_gemm_planned(
+                    GemmKind::Lut, pair, *zp_w, *zp_a, &plan, 0, le.as_ref(),
+                    lo.as_ref(), w, a, *m_rows, *k, *n, bias, &mut scratch, 1,
+                );
+                if scratch.acc != want {
+                    return Err("paired lut with prepared tables != naive".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn paired_group_row_windows_match_whole_panel() {
+        // Conv groups run paired_gemm_planned over row windows of one
+        // shared paired plan; each window must equal the same rows of the
+        // full run.
+        let mut rng = Rng::new(0x6007);
+        let (rows, k, n) = (12usize, 27usize, 9usize);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let bias: Vec<i32> = (0..rows).map(|_| rng.range_i64(-50, 50) as i32).collect();
+        let pair = PairedPoint::mirrored(Family::Truncated, 6, true);
+        let plan = PairedPlan::build(pair, &w, rows, k);
+        let mut scratch = Scratch::new();
+        paired_gemm_planned(
+            GemmKind::Identity, &pair, 7, 31, &plan, 0, None, None, &w, &a, rows, k,
+            n, &bias, &mut scratch, 1,
+        );
+        let full = scratch.acc.clone();
+        let g = 3usize;
+        let rpg = rows / g;
+        for gi in 0..g {
+            let row0 = gi * rpg;
+            paired_gemm_planned(
+                GemmKind::Identity,
+                &pair,
+                7,
+                31,
+                &plan,
+                row0,
+                None,
+                None,
+                &w[row0 * k..(row0 + rpg) * k],
+                &a,
+                rpg,
+                k,
+                n,
+                &bias[row0..row0 + rpg],
+                &mut scratch,
+                1,
+            );
+            assert_eq!(
+                scratch.acc[..],
+                full[row0 * n..(row0 + rpg) * n],
+                "group {gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn mirrored_pair_cancels_accumulator_bias() {
+        // The headline property at GEMM level: a mirrored Neg/Pos pairing
+        // leaves the raw accumulator (no CV) much closer to exact than the
+        // uniform Neg point — the column error cancels inside the sum.
+        let mut rng = Rng::new(0x6008);
+        let (m_rows, k, n) = (4usize, 64usize, 24usize);
+        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8_normal(128.0, 22.0)).collect();
+        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let bias = vec![0i32; m_rows];
+        for (family, m) in [(Family::Perforated, 2), (Family::Truncated, 6)] {
+            let exact_ctx =
+                GemmCtx { family: Family::Exact, m: 0, use_cv: false, zp_w: 0, zp_a: 0 };
+            let ex = approx_gemm(
+                GemmKind::Identity, &exact_ctx, None, &w, &a, m_rows, k, n, &bias,
+            );
+            let raw_ctx = GemmCtx { family, m, use_cv: false, zp_w: 0, zp_a: 0 };
+            let raw = approx_gemm(
+                GemmKind::Identity, &raw_ctx, None, &w, &a, m_rows, k, n, &bias,
+            );
+            let pair = PairedPoint::mirrored(family, m, false);
+            let plan = PairedPlan::build(pair, &w, m_rows, k);
+            let mut scratch = Scratch::new();
+            paired_gemm_planned(
+                GemmKind::Identity, &pair, 0, 0, &plan, 0, None, None, &w, &a,
+                m_rows, k, n, &bias, &mut scratch, 1,
+            );
+            let bias_of = |x: &[i64]| -> f64 {
+                x.iter().zip(&ex).map(|(a, b)| (a - b) as f64).sum::<f64>()
+                    / x.len() as f64
+            };
+            let b_raw = bias_of(&raw).abs();
+            let b_pair = bias_of(&scratch.acc).abs();
+            assert!(
+                b_pair < b_raw * 0.2,
+                "{} m={m}: paired bias {b_pair} !<< uniform bias {b_raw}",
+                family.name()
+            );
+        }
     }
 
     #[test]

@@ -24,5 +24,5 @@ pub(crate) mod testutil;
 pub use engine::{Engine, ForwardOpts};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
-pub use plan::{LayerPlan, Scratch};
-pub use policy::{LayerPoint, LayerPolicy, SharedPolicy};
+pub use plan::{LayerPlan, PairedPlan, Scratch};
+pub use policy::{LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, SharedPolicy};

@@ -21,21 +21,26 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::approx::Family;
+use super::policy::{LayerPoint, PairedPoint};
+use crate::approx::{comp_low, Family, Polarity};
 use crate::cv::{self, CvConstants};
 
-/// Weight-side precomputation for one MAC layer at one (family, m) point.
+/// Weight-side precomputation for one MAC layer at one (family, m,
+/// polarity) point.
 pub struct LayerPlan {
     pub family: Family,
     pub m: u32,
+    pub pol: Polarity,
     /// Total filter rows in the layer (across all conv groups).
     pub rows: usize,
     /// Reduction length per filter row.
     pub k: usize,
-    /// Recursive family: `w & (2^m − 1)`, same layout as `w` (else empty).
+    /// Recursive family: `w & (2^m − 1)` (Neg) or its modular complement
+    /// (Pos), same layout as `w` (else empty).
     w_low: Vec<u8>,
     /// Truncated family: `m` bit-plane panels, plane `i` (at offset
-    /// `i * rows * k`) holds `w & (2^(m−i) − 1)` (else empty).
+    /// `i * rows * k`) holds `w & (2^(m−i) − 1)` (Neg) or its modular
+    /// complement (Pos) (else empty).
     w_planes: Vec<u8>,
     /// Per-row Σw for the zero-point epilogue.
     pub sum_w: Vec<i64>,
@@ -44,21 +49,53 @@ pub struct LayerPlan {
 }
 
 impl LayerPlan {
-    /// Build the plan for a full layer weight panel `w` ([rows × k]).
+    /// Build the negative-polarity plan for a full layer weight panel `w`
+    /// ([rows × k]).
     pub fn build(family: Family, m: u32, w: &[u8], rows: usize, k: usize) -> LayerPlan {
+        LayerPlan::build_pol(family, m, Polarity::Neg, w, rows, k, k)
+    }
+
+    /// Build the plan at one (family, m, polarity) point. `k_valid` is the
+    /// population the CV averages divide by — `k` for a whole layer;
+    /// paired partition plans pass the partition size, because their
+    /// weight panels are zero off-partition and comp/low masks of zero are
+    /// zero, so the sums are right but the averages must not be diluted.
+    pub fn build_pol(
+        family: Family,
+        m: u32,
+        pol: Polarity,
+        w: &[u8],
+        rows: usize,
+        k: usize,
+        k_valid: usize,
+    ) -> LayerPlan {
         assert_eq!(w.len(), rows * k, "weight panel shape");
         let approx = family != Family::Exact && m > 0;
         let mask = if approx { ((1u32 << m) - 1) as u8 } else { 0 };
         let w_low = if approx && family == Family::Recursive {
-            w.iter().map(|&x| x & mask).collect()
+            match pol {
+                Polarity::Neg => w.iter().map(|&x| x & mask).collect(),
+                Polarity::Pos => {
+                    w.iter().map(|&x| comp_low(x as i32, m) as u8).collect()
+                }
+            }
         } else {
             Vec::new()
         };
         let w_planes = if approx && family == Family::Truncated {
             let mut planes = Vec::with_capacity(m as usize * rows * k);
             for i in 0..m {
-                let wm = ((1u32 << (m - i)) - 1) as u8;
-                planes.extend(w.iter().map(|&x| x & wm));
+                match pol {
+                    Polarity::Neg => {
+                        let wm = ((1u32 << (m - i)) - 1) as u8;
+                        planes.extend(w.iter().map(|&x| x & wm));
+                    }
+                    Polarity::Pos => {
+                        planes.extend(
+                            w.iter().map(|&x| comp_low(x as i32, m - i) as u8),
+                        );
+                    }
+                }
             }
             planes
         } else {
@@ -66,8 +103,8 @@ impl LayerPlan {
         };
         let sum_w =
             (0..rows).map(|f| w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum()).collect();
-        let consts = cv::constants_for_rows(family, m, w, rows, k);
-        LayerPlan { family, m, rows, k, w_low, w_planes, sum_w, consts }
+        let consts = cv::constants_pol_for_rows(family, pol, m, w, rows, k, k_valid);
+        LayerPlan { family, m, pol, rows, k, w_low, w_planes, sum_w, consts }
     }
 
     /// Masked weights (recursive family) for rows `row0..row0+nrows`.
@@ -90,14 +127,100 @@ impl LayerPlan {
     }
 }
 
-/// Engine-wide plan store, keyed by (node index, family, m).
+/// Weight-side precomputation for one MAC layer running an even/odd
+/// [`PairedPoint`]: parity-masked copies of the weight panel (the other
+/// parity zeroed) plus one per-partition [`LayerPlan`] built from each —
+/// masked/complement panels and CV constants included, with the averages
+/// divided by the partition population. The full-row Σw stays at this
+/// level for the shared zero-point epilogue.
+pub struct PairedPlan {
+    pub rows: usize,
+    pub k: usize,
+    /// Per-row Σw over the **full** panel (zero-point epilogue).
+    pub sum_w: Vec<i64>,
+    /// Weight panel with odd-parity columns zeroed.
+    pub w_even: Vec<u8>,
+    /// Weight panel with even-parity columns zeroed.
+    pub w_odd: Vec<u8>,
+    /// Partition plan for even reduction indices (its `family`/`m`/`pol`
+    /// are the even half's point; `use_cv` stays with the assignment).
+    pub even: LayerPlan,
+    /// Partition plan for odd reduction indices.
+    pub odd: LayerPlan,
+}
+
+impl PairedPlan {
+    /// Build the paired plan for a full layer weight panel `w` ([rows × k]).
+    pub fn build(pair: PairedPoint, w: &[u8], rows: usize, k: usize) -> PairedPlan {
+        assert_eq!(w.len(), rows * k, "weight panel shape");
+        let (even_pt, odd_pt) = (pair.even.normalized(), pair.odd.normalized());
+        let mut w_even = w.to_vec();
+        let mut w_odd = w.to_vec();
+        for (i, (we, wo)) in w_even.iter_mut().zip(w_odd.iter_mut()).enumerate() {
+            if (i % k) % 2 == 0 {
+                *wo = 0;
+            } else {
+                *we = 0;
+            }
+        }
+        let (k_even, k_odd) = (k.div_ceil(2), k / 2);
+        let even = LayerPlan::build_pol(
+            even_pt.family, even_pt.m, even_pt.polarity, &w_even, rows, k, k_even,
+        );
+        let odd = LayerPlan::build_pol(
+            odd_pt.family, odd_pt.m, odd_pt.polarity, &w_odd, rows, k, k_odd,
+        );
+        // The masked panels partition the full panel, so the full-row Σw is
+        // the sum of the partition sums the sub-plans already computed.
+        let sum_w = even.sum_w.iter().zip(&odd.sum_w).map(|(a, b)| a + b).collect();
+        PairedPlan { rows, k, sum_w, w_even, w_odd, even, odd }
+    }
+
+    /// Approximate heap footprint (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.w_even.len()
+            + self.w_odd.len()
+            + self.sum_w.len() * 8
+            + self.even.bytes()
+            + self.odd.bytes()
+    }
+}
+
+/// Cache key: the plan-relevant part of a layer assignment — `(family, m,
+/// polarity)` per constituent point. `use_cv` is *not* part of the key:
+/// plans carry the CV constants unconditionally and the epilogue decides
+/// whether to apply them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanKey {
+    Point(Family, u32, Polarity),
+    Paired((Family, u32, Polarity), (Family, u32, Polarity)),
+}
+
+impl PlanKey {
+    pub fn point(p: LayerPoint) -> PlanKey {
+        let p = p.normalized();
+        PlanKey::Point(p.family, p.m, p.polarity)
+    }
+
+    pub fn paired(pp: PairedPoint) -> PlanKey {
+        let (e, o) = (pp.even.normalized(), pp.odd.normalized());
+        PlanKey::Paired((e.family, e.m, e.polarity), (o.family, o.m, o.polarity))
+    }
+}
+
+enum CachedPlan {
+    Point(Arc<LayerPlan>),
+    Paired(Arc<PairedPlan>),
+}
+
+/// Engine-wide plan store, keyed by (node index, [`PlanKey`]).
 ///
 /// Interior-mutable so `Engine::forward(&self)` can populate it lazily; the
 /// lock is held during builds, which keeps the build counter exact even when
 /// sweep harnesses drive one engine from many threads.
 #[derive(Default)]
 pub struct PlanCache {
-    map: Mutex<HashMap<(usize, Family, u32), Arc<LayerPlan>>>,
+    map: Mutex<HashMap<(usize, PlanKey), CachedPlan>>,
     builds: AtomicUsize,
 }
 
@@ -106,7 +229,8 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Fetch the plan for `(node, family, m)`, building it on first use.
+    /// Fetch the negative-polarity plan for `(node, family, m)`, building
+    /// it on first use.
     pub fn get_or_build<F: FnOnce() -> LayerPlan>(
         &self,
         node: usize,
@@ -114,13 +238,46 @@ impl PlanCache {
         m: u32,
         build: F,
     ) -> Arc<LayerPlan> {
+        self.get_or_build_pol(node, family, m, Polarity::Neg, build)
+    }
+
+    /// Fetch the plan for `(node, family, m, polarity)`, building it on
+    /// first use.
+    pub fn get_or_build_pol<F: FnOnce() -> LayerPlan>(
+        &self,
+        node: usize,
+        family: Family,
+        m: u32,
+        pol: Polarity,
+        build: F,
+    ) -> Arc<LayerPlan> {
+        let key = (node, PlanKey::Point(family, m, pol));
         let mut map = self.map.lock().unwrap();
-        if let Some(p) = map.get(&(node, family, m)) {
+        if let Some(CachedPlan::Point(p)) = map.get(&key) {
             return p.clone();
         }
         let plan = Arc::new(build());
         self.builds.fetch_add(1, Ordering::Relaxed);
-        map.insert((node, family, m), plan.clone());
+        map.insert(key, CachedPlan::Point(plan.clone()));
+        plan
+    }
+
+    /// Fetch the paired plan for `(node, pairing)`, building it on first
+    /// use.
+    pub fn get_or_build_paired<F: FnOnce() -> PairedPlan>(
+        &self,
+        node: usize,
+        pair: PairedPoint,
+        build: F,
+    ) -> Arc<PairedPlan> {
+        let key = (node, PlanKey::paired(pair));
+        let mut map = self.map.lock().unwrap();
+        if let Some(CachedPlan::Paired(p)) = map.get(&key) {
+            return p.clone();
+        }
+        let plan = Arc::new(build());
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, CachedPlan::Paired(plan.clone()));
         plan
     }
 
@@ -166,6 +323,9 @@ pub struct Scratch {
     pub(crate) sum_a: Vec<i64>,
     /// Σx per output column (control variate).
     pub(crate) sum_x: Vec<i64>,
+    /// Second Σx per output column — the odd partition of a paired layer
+    /// (each half of a pairing regresses on its own x over its own columns).
+    pub(crate) sum_x2: Vec<i64>,
     /// Final i64 accumulator [m_rows × n] — the GEMM output the engine
     /// requantizes from.
     pub acc: Vec<i64>,
@@ -189,6 +349,7 @@ impl Scratch {
         self.acc.reserve(acc);
         self.sum_a.reserve(acc);
         self.sum_x.reserve(acc);
+        self.sum_x2.reserve(acc);
     }
 
     /// Total capacity currently held (diagnostics).
@@ -198,7 +359,10 @@ impl Scratch {
                 + self.a_mask.capacity()
                 + self.term.capacity()
                 + self.acc32.capacity())
-            + 8 * (self.sum_a.capacity() + self.sum_x.capacity() + self.acc.capacity())
+            + 8 * (self.sum_a.capacity()
+                + self.sum_x.capacity()
+                + self.sum_x2.capacity()
+                + self.acc.capacity())
     }
 }
 
@@ -261,6 +425,108 @@ mod tests {
         for i in 0..4 * k {
             assert_eq!(g[i], w[4 * k + i] & 0b11);
         }
+    }
+
+    #[test]
+    fn pos_plan_masks_are_modular_complements() {
+        let mut rng = Rng::new(0x9D);
+        let (rows, k) = (5, 14);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+
+        let rec = LayerPlan::build_pol(
+            Family::Recursive, 3, Polarity::Pos, &w, rows, k, k,
+        );
+        assert_eq!(rec.pol, Polarity::Pos);
+        for (i, &x) in w.iter().enumerate() {
+            assert_eq!(rec.w_low(0, rows)[i], comp_low(x as i32, 3) as u8);
+        }
+
+        let m = 4u32;
+        let tr = LayerPlan::build_pol(
+            Family::Truncated, m, Polarity::Pos, &w, rows, k, k,
+        );
+        for plane in 0..m as usize {
+            let p = tr.w_plane(plane, 0, rows);
+            for (i, &x) in w.iter().enumerate() {
+                assert_eq!(
+                    p[i],
+                    comp_low(x as i32, m - plane as u32) as u8,
+                    "plane {plane} idx {i}"
+                );
+            }
+        }
+        // Neg delegation: build() == build_pol(Neg).
+        let a = LayerPlan::build(Family::Recursive, 3, &w, rows, k);
+        let b = LayerPlan::build_pol(Family::Recursive, 3, Polarity::Neg, &w, rows, k, k);
+        assert_eq!(a.w_low(0, rows), b.w_low(0, rows));
+        assert_eq!(a.consts, b.consts);
+    }
+
+    #[test]
+    fn paired_plan_partitions_by_parity() {
+        use crate::nn::policy::{LayerPoint, PairedPoint};
+        let mut rng = Rng::new(0x9E);
+        let (rows, k) = (4, 11); // odd k: even partition is one larger
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8().max(1)).collect();
+        let pair = PairedPoint::mirrored(Family::Perforated, 2, true);
+        let pp = PairedPlan::build(pair, &w, rows, k);
+        assert_eq!((pp.rows, pp.k), (rows, k));
+        for f in 0..rows {
+            for kk in 0..k {
+                let i = f * k + kk;
+                if kk % 2 == 0 {
+                    assert_eq!(pp.w_even[i], w[i]);
+                    assert_eq!(pp.w_odd[i], 0);
+                } else {
+                    assert_eq!(pp.w_even[i], 0);
+                    assert_eq!(pp.w_odd[i], w[i]);
+                }
+            }
+            // full-row Σw regardless of the split
+            let want: i64 = w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum();
+            assert_eq!(pp.sum_w[f], want);
+        }
+        assert_eq!(pp.even.pol, Polarity::Neg);
+        assert_eq!(pp.odd.pol, Polarity::Pos);
+        // Partition CV constants average over the partition population:
+        // even row 0 has ceil(11/2) = 6 live weights.
+        let even_row: Vec<u8> =
+            (0..k).map(|kk| if kk % 2 == 0 { w[kk] } else { 0 }).collect();
+        let want_c = crate::cv::constants_pol(
+            Family::Perforated, Polarity::Neg, 2, &even_row, k.div_ceil(2),
+        );
+        assert_eq!(pp.even.consts[0], want_c);
+        assert!(pp.bytes() > 0);
+    }
+
+    #[test]
+    fn cache_distinguishes_polarity_and_pairing() {
+        use crate::nn::policy::PairedPoint;
+        let cache = PlanCache::new();
+        let w = vec![7u8; 12];
+        let neg = cache.get_or_build_pol(0, Family::Perforated, 2, Polarity::Neg, || {
+            LayerPlan::build_pol(Family::Perforated, 2, Polarity::Neg, &w, 3, 4, 4)
+        });
+        let pos = cache.get_or_build_pol(0, Family::Perforated, 2, Polarity::Pos, || {
+            LayerPlan::build_pol(Family::Perforated, 2, Polarity::Pos, &w, 3, 4, 4)
+        });
+        assert_eq!(cache.builds(), 2, "polarities are distinct keys");
+        assert_eq!(neg.pol, Polarity::Neg);
+        assert_eq!(pos.pol, Polarity::Pos);
+        let pair = PairedPoint::mirrored(Family::Perforated, 2, true);
+        for _ in 0..3 {
+            let pp = cache
+                .get_or_build_paired(0, pair, || PairedPlan::build(pair, &w, 3, 4));
+            assert_eq!(pp.rows, 3);
+        }
+        assert_eq!(cache.builds(), 3, "paired plan built once");
+        assert_eq!(cache.cached(), 3);
+        // use_cv is NOT part of the key: the nocv twin hits the same entry.
+        let mut nocv = pair;
+        nocv.even.use_cv = false;
+        nocv.odd.use_cv = false;
+        cache.get_or_build_paired(0, nocv, || PairedPlan::build(nocv, &w, 3, 4));
+        assert_eq!(cache.builds(), 3, "cv-stripped key must hit the cache");
     }
 
     #[test]

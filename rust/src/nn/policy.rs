@@ -3,19 +3,25 @@
 //! The offline layerwise search (`report::layerwise`) shows that **mixed**
 //! per-layer approximation levels dominate uniform ones on the
 //! accuracy/power Pareto front. A [`LayerPolicy`] makes that result a
-//! first-class runtime concept: one [`LayerPoint`] — `(family, m, use_cv)`
-//! — per MAC layer (conv/dense, topological order). Because `m` and the
-//! family are *runtime* inputs of every GEMM engine and of the per-layer
-//! [`crate::nn::plan::LayerPlan`] cache, serving a mixed policy needs no
-//! recompilation: each layer simply resolves its own plan, LUT and CV
-//! epilogue from its point.
+//! first-class runtime concept: one [`LayerAssignment`] per MAC layer
+//! (conv/dense, topological order) — either a single [`LayerPoint`]
+//! `(family, m, polarity, use_cv)` or a [`PairedPoint`] that splits the
+//! layer's reduction dimension between two points by even/odd parity (the
+//! positive/negative multiplier pairing of Spantidi et al.: opposite-signed
+//! error distributions cancel the accumulated column error before the CV
+//! epilogue runs). Because every knob is a *runtime* input of the GEMM
+//! engines and the per-layer [`crate::nn::plan::LayerPlan`] cache, serving
+//! a mixed or paired policy needs no recompilation: each layer simply
+//! resolves its own plan, LUT(s) and CV epilogue from its assignment.
 //!
 //! Policies serialize two ways (both parsed back by [`LayerPolicy::load`]):
 //!
-//! * **JSON** — what the greedy search emits and benches consume:
-//!   `{"layers": [{"family": "perforated", "m": 2, "use_cv": true}, ...]}`
+//! * **JSON** — what the greedy searches emit and benches consume:
+//!   `{"layers": [{"family": "perforated", "m": 2, "polarity": "neg",
+//!   "use_cv": true}, {"paired": {"even": {...}, "odd": {...}}}, ...]}`
 //! * **text** — one line per layer for hand-written files:
-//!   `perforated 2 cv` / `truncated 6 nocv` / `exact`, with `#` comments.
+//!   `perforated 2 cv` / `truncated 6 pos nocv` / `exact` /
+//!   `paired perforated 2 cv + perforated 2 pos cv`, with `#` comments.
 //!
 //! Validation is split so errors surface at the right level: structural
 //! validity (`m ≤ 7`, approximate families need `m ≥ 1`) at parse/build
@@ -29,27 +35,40 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::graph::Model;
-use crate::approx::Family;
+use crate::approx::{Family, Polarity};
 use crate::util::json::Json;
 
 /// Highest meaningful approximation level for 8-bit operands.
 pub const MAX_M: u32 = 7;
 
-/// One MAC layer's design point.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// One multiplier design point: `(family, m, polarity, use_cv)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct LayerPoint {
     pub family: Family,
     pub m: u32,
     pub use_cv: bool,
+    /// Signed-error direction; `Neg` is the paper-original design, `Pos`
+    /// the round-up mirror (see [`crate::approx::Polarity`]).
+    pub polarity: Polarity,
 }
 
 impl LayerPoint {
     /// The exact (baseline) point.
-    pub const EXACT: LayerPoint =
-        LayerPoint { family: Family::Exact, m: 0, use_cv: false };
+    pub const EXACT: LayerPoint = LayerPoint {
+        family: Family::Exact,
+        m: 0,
+        use_cv: false,
+        polarity: Polarity::Neg,
+    };
 
+    /// Negative-polarity (paper-original) point.
     pub fn new(family: Family, m: u32, use_cv: bool) -> LayerPoint {
-        LayerPoint { family, m, use_cv }
+        LayerPoint { family, m, use_cv, polarity: Polarity::Neg }
+    }
+
+    /// Point with an explicit polarity.
+    pub fn new_pol(family: Family, m: u32, pol: Polarity, use_cv: bool) -> LayerPoint {
+        LayerPoint { family, m, use_cv, polarity: pol }
     }
 
     /// Canonical form: `m == 0` or the exact family both mean "run exact"
@@ -76,6 +95,9 @@ impl LayerPoint {
         if self.family == Family::Exact && self.m != 0 {
             bail!("exact family takes m = 0, got m = {}", self.m);
         }
+        if self.family == Family::Exact && self.polarity != Polarity::Neg {
+            bail!("exact family has no positive-polarity variant");
+        }
         Ok(())
     }
 
@@ -83,6 +105,7 @@ impl LayerPoint {
         Json::obj()
             .field("family", self.family.name())
             .field("m", self.m as i64)
+            .field("polarity", self.polarity.name())
             .field("use_cv", self.use_cv)
     }
 
@@ -97,6 +120,16 @@ impl LayerPoint {
         if m < 0.0 || m.fract() != 0.0 || m > 255.0 {
             bail!("bad m {m} in layer entry");
         }
+        // An omitted polarity means the paper-original negative design, so
+        // every pre-pairing policy document parses unchanged.
+        let polarity = match j.get("polarity") {
+            None => Polarity::Neg,
+            Some(p) => {
+                let s = p.as_str().context("\"polarity\" must be a string")?;
+                Polarity::from_name(s)
+                    .with_context(|| format!("unknown polarity {s:?}"))?
+            }
+        };
         // An omitted use_cv defaults to ON for approximate points — the
         // same rule as the text format (`perforated 3` == `perforated 3
         // cv`), so a hand-written policy behaves identically in either
@@ -105,9 +138,209 @@ impl LayerPoint {
             .get("use_cv")
             .and_then(|c| c.as_bool())
             .unwrap_or(family != Family::Exact);
-        let p = LayerPoint { family, m: m as u32, use_cv };
+        let p = LayerPoint { family, m: m as u32, use_cv, polarity };
         p.validate()?;
         Ok(p)
+    }
+
+    /// One point spec from text tokens: `exact` or
+    /// `<family> <m> [pos|neg] [cv|nocv]` (option order free).
+    fn parse_tokens<'a>(mut parts: impl Iterator<Item = &'a str>) -> Result<LayerPoint> {
+        let name = parts.next().context("empty point spec")?;
+        let family =
+            Family::from_name(name).with_context(|| format!("unknown family name {name:?}"))?;
+        let point = if family == Family::Exact {
+            LayerPoint::EXACT
+        } else {
+            let m: u32 = parts.next().context("missing m")?.parse().context("bad m")?;
+            let mut polarity = None;
+            let mut use_cv = None;
+            for tok in parts.by_ref() {
+                match tok {
+                    "pos" | "neg" if polarity.is_none() => {
+                        polarity = Polarity::from_name(tok);
+                    }
+                    "cv" if use_cv.is_none() => use_cv = Some(true),
+                    "nocv" if use_cv.is_none() => use_cv = Some(false),
+                    other => bail!("unexpected token {other:?} in point spec"),
+                }
+            }
+            LayerPoint::new_pol(
+                family,
+                m,
+                polarity.unwrap_or(Polarity::Neg),
+                use_cv.unwrap_or(true),
+            )
+        };
+        if let Some(extra) = parts.next() {
+            bail!("trailing token {extra:?}");
+        }
+        point.validate()?;
+        Ok(point)
+    }
+
+    fn to_text(self) -> String {
+        let p = self.normalized();
+        if p == LayerPoint::EXACT {
+            "exact".to_string()
+        } else {
+            let pol = if p.polarity == Polarity::Pos { " pos" } else { "" };
+            format!(
+                "{} {}{pol} {}",
+                p.family.name(),
+                p.m,
+                if p.use_cv { "cv" } else { "nocv" }
+            )
+        }
+    }
+
+    /// Compact human-readable form, e.g. `perforated:3+V` / `truncated:6:pos`.
+    pub fn describe(self) -> String {
+        let p = self.normalized();
+        if p == LayerPoint::EXACT {
+            "exact".to_string()
+        } else {
+            format!(
+                "{}:{}{}{}",
+                p.family.name(),
+                p.m,
+                if p.polarity == Polarity::Pos { ":pos" } else { "" },
+                if p.use_cv { "+V" } else { "" }
+            )
+        }
+    }
+}
+
+/// A positive/negative multiplier pairing for one layer: even reduction
+/// indices (even systolic columns) run `even`, odd ones run `odd`. Pairing
+/// a point with its polarity mirror cancels the accumulated column error in
+/// expectation *before* the CV epilogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PairedPoint {
+    pub even: LayerPoint,
+    pub odd: LayerPoint,
+}
+
+impl PairedPoint {
+    pub fn new(even: LayerPoint, odd: LayerPoint) -> PairedPoint {
+        PairedPoint { even, odd }
+    }
+
+    /// The canonical cancelling pair at one `(family, m)`: Neg on even
+    /// columns, its Pos mirror on odd ones.
+    pub fn mirrored(family: Family, m: u32, use_cv: bool) -> PairedPoint {
+        PairedPoint {
+            even: LayerPoint::new_pol(family, m, Polarity::Neg, use_cv),
+            odd: LayerPoint::new_pol(family, m, Polarity::Pos, use_cv),
+        }
+    }
+
+    pub fn normalized(self) -> PairedPoint {
+        PairedPoint { even: self.even.normalized(), odd: self.odd.normalized() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.even.validate().context("even half")?;
+        self.odd.validate().context("odd half")?;
+        Ok(())
+    }
+
+    pub fn describe(self) -> String {
+        format!("pair({} / {})", self.even.describe(), self.odd.describe())
+    }
+}
+
+/// What one MAC layer runs: a single point, or an even/odd pairing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerAssignment {
+    Point(LayerPoint),
+    Paired(PairedPoint),
+}
+
+impl LayerAssignment {
+    /// Canonical form: points normalize as usual; a pairing whose both
+    /// halves normalize to exact *is* the exact layer (bit-identical — no
+    /// error term, no V — so collapsing keeps plan-cache keys honest).
+    pub fn normalized(self) -> LayerAssignment {
+        match self {
+            LayerAssignment::Point(p) => LayerAssignment::Point(p.normalized()),
+            LayerAssignment::Paired(pp) => {
+                let pp = pp.normalized();
+                if pp.even == LayerPoint::EXACT && pp.odd == LayerPoint::EXACT {
+                    LayerAssignment::Point(LayerPoint::EXACT)
+                } else {
+                    LayerAssignment::Paired(pp)
+                }
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            LayerAssignment::Point(p) => p.validate(),
+            LayerAssignment::Paired(pp) => pp.validate(),
+        }
+    }
+
+    /// Does this layer effectively run exact?
+    pub fn is_exact(self) -> bool {
+        self.normalized() == LayerAssignment::Point(LayerPoint::EXACT)
+    }
+
+    /// The single point, when this is not a pairing.
+    pub fn as_point(self) -> Option<LayerPoint> {
+        match self {
+            LayerAssignment::Point(p) => Some(p),
+            LayerAssignment::Paired(_) => None,
+        }
+    }
+
+    /// The constituent points (one for a plain layer, two for a pairing) —
+    /// what LUT preparation and power labeling iterate over.
+    pub fn constituents(self) -> impl Iterator<Item = LayerPoint> {
+        let (a, b) = match self {
+            LayerAssignment::Point(p) => (p, None),
+            LayerAssignment::Paired(pp) => (pp.even, Some(pp.odd)),
+        };
+        std::iter::once(a).chain(b)
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            LayerAssignment::Point(p) => p.to_json(),
+            LayerAssignment::Paired(pp) => Json::obj().field(
+                "paired",
+                Json::obj()
+                    .field("even", pp.even.to_json())
+                    .field("odd", pp.odd.to_json()),
+            ),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<LayerAssignment> {
+        match j.get("paired") {
+            Some(pj) => {
+                let even = pj
+                    .get("even")
+                    .context("paired entry missing \"even\"")
+                    .and_then(LayerPoint::from_json)
+                    .context("even half")?;
+                let odd = pj
+                    .get("odd")
+                    .context("paired entry missing \"odd\"")
+                    .and_then(LayerPoint::from_json)
+                    .context("odd half")?;
+                Ok(LayerAssignment::Paired(PairedPoint { even, odd }))
+            }
+            None => Ok(LayerAssignment::Point(LayerPoint::from_json(j)?)),
+        }
+    }
+
+    pub fn describe(self) -> String {
+        match self.normalized() {
+            LayerAssignment::Point(p) => p.describe(),
+            LayerAssignment::Paired(pp) => pp.describe(),
+        }
     }
 }
 
@@ -116,17 +349,24 @@ impl LayerPoint {
 /// cache and `Model::mac_node_indices` use).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerPolicy {
-    layers: Vec<LayerPoint>,
+    layers: Vec<LayerAssignment>,
 }
 
 impl LayerPolicy {
     /// Build from explicit points; structurally validates every entry.
     pub fn new(layers: Vec<LayerPoint>) -> Result<LayerPolicy> {
+        LayerPolicy::from_assignments(
+            layers.into_iter().map(LayerAssignment::Point).collect(),
+        )
+    }
+
+    /// Build from explicit assignments (points and/or pairings).
+    pub fn from_assignments(layers: Vec<LayerAssignment>) -> Result<LayerPolicy> {
         if layers.is_empty() {
             bail!("a layer policy needs at least one layer");
         }
-        for (i, p) in layers.iter().enumerate() {
-            p.validate().with_context(|| format!("layer {i}"))?;
+        for (i, a) in layers.iter().enumerate() {
+            a.validate().with_context(|| format!("layer {i}"))?;
         }
         Ok(LayerPolicy { layers })
     }
@@ -134,6 +374,22 @@ impl LayerPolicy {
     /// The trivial policy: every one of `n_layers` at the same point.
     pub fn uniform(family: Family, m: u32, use_cv: bool, n_layers: usize) -> Result<LayerPolicy> {
         LayerPolicy::new(vec![LayerPoint::new(family, m, use_cv); n_layers.max(1)])
+    }
+
+    /// Every one of `n_layers` at the mirrored Neg/Pos pairing of one
+    /// `(family, m)` — the canonical cancelling configuration.
+    pub fn paired_uniform(
+        family: Family,
+        m: u32,
+        use_cv: bool,
+        n_layers: usize,
+    ) -> Result<LayerPolicy> {
+        LayerPolicy::from_assignments(vec![
+            LayerAssignment::Paired(PairedPoint::mirrored(
+                family, m, use_cv
+            ));
+            n_layers.max(1)
+        ])
     }
 
     /// A per-layer-m policy at one family (the layerwise-search shape):
@@ -154,26 +410,51 @@ impl LayerPolicy {
         self.layers.is_empty()
     }
 
-    /// The point for MAC layer ordinal `mac_idx` (normalized).
-    pub fn point(&self, mac_idx: usize) -> LayerPoint {
+    /// The assignment for MAC layer ordinal `mac_idx` (normalized).
+    pub fn assignment(&self, mac_idx: usize) -> LayerAssignment {
         self.layers[mac_idx].normalized()
     }
 
-    pub fn points(&self) -> impl Iterator<Item = LayerPoint> + '_ {
-        self.layers.iter().map(|p| p.normalized())
+    /// The single point for MAC layer ordinal `mac_idx` (normalized).
+    /// Panics on a paired layer — callers that may see pairings use
+    /// [`LayerPolicy::assignment`].
+    pub fn point(&self, mac_idx: usize) -> LayerPoint {
+        self.assignment(mac_idx)
+            .as_point()
+            .expect("point() on a paired layer — use assignment()")
     }
 
-    /// `Some(point)` when every layer normalizes to the same point — such a
-    /// policy is semantically identical to uniform `ForwardOpts`
-    /// (property-tested bit-identical in the engine suite).
+    /// Normalized assignments, one per layer.
+    pub fn assignments(&self) -> impl Iterator<Item = LayerAssignment> + '_ {
+        self.layers.iter().map(|a| a.normalized())
+    }
+
+    /// Every constituent point of the policy (paired layers contribute
+    /// both halves) — the set LUT preparation and power labeling walk.
+    pub fn points(&self) -> impl Iterator<Item = LayerPoint> + '_ {
+        self.assignments().flat_map(|a| a.constituents())
+    }
+
+    /// `Some(point)` when every layer is the same single (non-paired)
+    /// point — such a policy is semantically identical to uniform
+    /// `ForwardOpts` (property-tested bit-identical in the engine suite).
     pub fn as_uniform(&self) -> Option<LayerPoint> {
-        let first = self.point(0);
-        self.points().all(|p| p == first).then_some(first)
+        let first = self.assignment(0).as_point()?;
+        self.assignments()
+            .all(|a| a == LayerAssignment::Point(first))
+            .then_some(first)
     }
 
     /// Number of layers that actually run approximate.
     pub fn approx_layers(&self) -> usize {
-        self.points().filter(|p| *p != LayerPoint::EXACT).count()
+        self.assignments().filter(|a| !a.is_exact()).count()
+    }
+
+    /// Number of layers running an even/odd pairing.
+    pub fn paired_layers(&self) -> usize {
+        self.assignments()
+            .filter(|a| matches!(a, LayerAssignment::Paired(_)))
+            .count()
     }
 
     /// Check this policy against a concrete model: one entry per MAC layer.
@@ -192,9 +473,20 @@ impl LayerPolicy {
 
     /// MAC-weighted normalized power of this policy on `model` at array
     /// size `n_array`: approximate layers cost their family's
-    /// `array_cost(m).power_norm`, exact layers cost 1.0 — the serving
-    /// metrics' estimated-power quantity (and the layerwise report's).
+    /// `array_cost(m).power_norm`, exact layers cost 1.0, and a paired
+    /// layer averages its two halves (each polarity column population
+    /// handles half the MACs; `Pos` variants are costed at their `Neg`
+    /// point — the round-up compensation is a handful of gates against the
+    /// pruned columns, see README §Pairing) — the serving metrics'
+    /// estimated-power quantity (and the layerwise report's).
     pub fn power_norm(&self, model: &Model, n_array: u32) -> f64 {
+        fn point_power(p: LayerPoint, n_array: u32) -> f64 {
+            if p == LayerPoint::EXACT {
+                1.0
+            } else {
+                crate::hw::array_cost(p.family, p.m, n_array).power_norm
+            }
+        }
         let macs = model.mac_layer_macs();
         debug_assert_eq!(macs.len(), self.layers.len(), "call validate_for first");
         let total: u64 = macs.iter().sum();
@@ -202,13 +494,15 @@ impl LayerPolicy {
             return 1.0;
         }
         let weighted: f64 = self
-            .points()
+            .assignments()
             .zip(&macs)
-            .map(|(p, &w)| {
-                let pn = if p == LayerPoint::EXACT {
-                    1.0
-                } else {
-                    crate::hw::array_cost(p.family, p.m, n_array).power_norm
+            .map(|(a, &w)| {
+                let pn = match a {
+                    LayerAssignment::Point(p) => point_power(p, n_array),
+                    LayerAssignment::Paired(pp) => {
+                        0.5 * (point_power(pp.even, n_array)
+                            + point_power(pp.odd, n_array))
+                    }
                 };
                 pn * w as f64
             })
@@ -223,7 +517,7 @@ impl LayerPolicy {
             .field("n_layers", self.layers.len())
             .field(
                 "layers",
-                Json::Arr(self.layers.iter().map(|p| p.to_json()).collect()),
+                Json::Arr(self.layers.iter().map(|a| a.to_json()).collect()),
             )
     }
 
@@ -232,69 +526,67 @@ impl LayerPolicy {
             .get("layers")
             .and_then(|l| l.as_arr())
             .context("policy JSON missing \"layers\" array")?;
-        let points = layers
+        let assignments = layers
             .iter()
             .enumerate()
-            .map(|(i, e)| LayerPoint::from_json(e).with_context(|| format!("layer {i}")))
+            .map(|(i, e)| {
+                LayerAssignment::from_json(e).with_context(|| format!("layer {i}"))
+            })
             .collect::<Result<Vec<_>>>()?;
-        LayerPolicy::new(points)
+        LayerPolicy::from_assignments(assignments)
     }
 
-    /// One line per layer: `<family> <m> <cv|nocv>`, or bare `exact`.
+    /// One line per layer: `<family> <m> [pos] <cv|nocv>`, bare `exact`, or
+    /// `paired <spec> + <spec>`.
     pub fn to_text(&self) -> String {
         let mut s = String::from("# per-layer approximation policy: one MAC layer per line\n");
-        for p in &self.layers {
-            let p = p.normalized();
-            if p == LayerPoint::EXACT {
-                s.push_str("exact\n");
-            } else {
-                s.push_str(&format!(
-                    "{} {} {}\n",
-                    p.family.name(),
-                    p.m,
-                    if p.use_cv { "cv" } else { "nocv" }
-                ));
+        for a in &self.layers {
+            match a.normalized() {
+                LayerAssignment::Point(p) => {
+                    s.push_str(&p.to_text());
+                }
+                LayerAssignment::Paired(pp) => {
+                    s.push_str(&format!(
+                        "paired {} + {}",
+                        pp.even.to_text(),
+                        pp.odd.to_text()
+                    ));
+                }
             }
+            s.push('\n');
         }
         s
     }
 
     pub fn parse_text(text: &str) -> Result<LayerPolicy> {
-        let mut points = Vec::new();
+        let mut assignments = Vec::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }
-            let mut parts = line.split_whitespace();
-            let name = parts.next().unwrap();
-            let family = Family::from_name(name).with_context(|| {
-                format!("line {}: unknown family name {name:?}", lineno + 1)
-            })?;
-            let point = if family == Family::Exact {
-                LayerPoint::EXACT
+            let ctx = |e: anyhow::Error| e.context(format!("line {}", lineno + 1));
+            let assignment = if let Some(rest) = line.strip_prefix("paired ") {
+                let halves: Vec<&str> = rest.split('+').map(str::trim).collect();
+                if halves.len() != 2 {
+                    bail!(
+                        "line {}: paired spec needs exactly two '+'-separated halves",
+                        lineno + 1
+                    );
+                }
+                let even =
+                    LayerPoint::parse_tokens(halves[0].split_whitespace()).map_err(ctx)?;
+                let odd =
+                    LayerPoint::parse_tokens(halves[1].split_whitespace()).map_err(ctx)?;
+                LayerAssignment::Paired(PairedPoint { even, odd })
             } else {
-                let m: u32 = parts
-                    .next()
-                    .with_context(|| format!("line {}: missing m", lineno + 1))?
-                    .parse()
-                    .with_context(|| format!("line {}: bad m", lineno + 1))?;
-                let use_cv = match parts.next() {
-                    None | Some("cv") => true,
-                    Some("nocv") => false,
-                    Some(other) => {
-                        bail!("line {}: expected cv|nocv, got {other:?}", lineno + 1)
-                    }
-                };
-                LayerPoint::new(family, m, use_cv)
+                LayerAssignment::Point(
+                    LayerPoint::parse_tokens(line.split_whitespace()).map_err(ctx)?,
+                )
             };
-            if let Some(extra) = parts.next() {
-                bail!("line {}: trailing token {extra:?}", lineno + 1);
-            }
-            point.validate().with_context(|| format!("line {}", lineno + 1))?;
-            points.push(point);
+            assignments.push(assignment);
         }
-        LayerPolicy::new(points)
+        LayerPolicy::from_assignments(assignments)
     }
 
     /// Parse either serialization (sniffed: JSON starts with `{`).
@@ -319,23 +611,10 @@ impl LayerPolicy {
             .with_context(|| format!("writing policy {}", path.display()))
     }
 
-    /// Compact human-readable summary, e.g. `[perforated:3+V, exact, ...]`.
+    /// Compact human-readable summary, e.g.
+    /// `[perforated:3+V, pair(perforated:3+V / perforated:3:pos+V), exact]`.
     pub fn describe(&self) -> String {
-        let parts: Vec<String> = self
-            .points()
-            .map(|p| {
-                if p == LayerPoint::EXACT {
-                    "exact".to_string()
-                } else {
-                    format!(
-                        "{}:{}{}",
-                        p.family.name(),
-                        p.m,
-                        if p.use_cv { "+V" } else { "" }
-                    )
-                }
-            })
-            .collect();
+        let parts: Vec<String> = self.assignments().map(|a| a.describe()).collect();
         format!("[{}]", parts.join(", "))
     }
 }
@@ -358,6 +637,7 @@ mod tests {
             Some(LayerPoint::new(Family::Perforated, 2, true))
         );
         assert_eq!(p.approx_layers(), 3);
+        assert_eq!(p.paired_layers(), 0);
     }
 
     #[test]
@@ -378,6 +658,55 @@ mod tests {
         assert!(LayerPoint::new(Family::Exact, 3, false).validate().is_err());
         assert!(LayerPolicy::new(vec![]).is_err());
         assert!(LayerPoint::new(Family::Recursive, 7, true).validate().is_ok());
+        // exact family has no positive variant
+        assert!(LayerPoint::new_pol(Family::Exact, 0, Polarity::Pos, false)
+            .validate()
+            .is_err());
+        // paired halves are validated individually
+        let bad = PairedPoint::new(
+            LayerPoint::new(Family::Perforated, 9, true),
+            LayerPoint::new(Family::Perforated, 2, true),
+        );
+        assert!(bad.validate().is_err());
+        assert!(LayerPolicy::from_assignments(vec![LayerAssignment::Paired(bad)]).is_err());
+    }
+
+    #[test]
+    fn paired_assignment_normalizes() {
+        // both halves exact -> the exact point
+        let pp = PairedPoint::new(
+            LayerPoint::new(Family::Perforated, 0, true),
+            LayerPoint::new(Family::Exact, 0, false),
+        );
+        assert!(LayerAssignment::Paired(pp).is_exact());
+        assert_eq!(
+            LayerAssignment::Paired(pp).normalized(),
+            LayerAssignment::Point(LayerPoint::EXACT)
+        );
+        // half-exact pairings stay paired (half the columns run approximate)
+        let half = PairedPoint::new(
+            LayerPoint::new(Family::Perforated, 2, true),
+            LayerPoint::new(Family::Exact, 0, false),
+        );
+        assert!(!LayerAssignment::Paired(half).is_exact());
+        // a mirrored pairing keeps both halves
+        let m = PairedPoint::mirrored(Family::Truncated, 6, true);
+        assert_eq!(m.even.polarity, Polarity::Neg);
+        assert_eq!(m.odd.polarity, Polarity::Pos);
+        assert_eq!((m.even.family, m.even.m), (m.odd.family, m.odd.m));
+    }
+
+    #[test]
+    fn paired_uniform_policy_counts() {
+        let p = LayerPolicy::paired_uniform(Family::Perforated, 3, true, 4).unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.approx_layers(), 4);
+        assert_eq!(p.paired_layers(), 4);
+        assert!(p.as_uniform().is_none());
+        // constituent points: 2 per layer, both polarities present
+        assert_eq!(p.points().count(), 8);
+        assert!(p.points().any(|pt| pt.polarity == Polarity::Pos));
+        assert!(p.points().any(|pt| pt.polarity == Polarity::Neg));
     }
 
     #[test]
@@ -396,6 +725,33 @@ mod tests {
             true,
             "stable field names: {j}"
         );
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_polarity_and_pairing() {
+        let p = LayerPolicy::from_assignments(vec![
+            LayerAssignment::Point(LayerPoint::new_pol(
+                Family::Recursive,
+                3,
+                Polarity::Pos,
+                true,
+            )),
+            LayerAssignment::Paired(PairedPoint::mirrored(Family::Perforated, 2, true)),
+            LayerAssignment::Paired(PairedPoint::new(
+                LayerPoint::new(Family::Truncated, 6, false),
+                LayerPoint::new_pol(Family::Truncated, 5, Polarity::Pos, true),
+            )),
+            LayerAssignment::Point(LayerPoint::EXACT),
+        ])
+        .unwrap();
+        let j = p.to_json().render();
+        assert!(j.contains("\"polarity\": \"pos\""), "{j}");
+        assert!(j.contains("\"paired\""), "{j}");
+        let back = LayerPolicy::parse(&j).unwrap();
+        assert_eq!(back, p);
+        // And through the text form too.
+        let back_text = LayerPolicy::parse(&p.to_text()).unwrap();
+        assert_eq!(back_text.describe(), p.describe());
     }
 
     #[test]
@@ -421,15 +777,44 @@ mod tests {
     }
 
     #[test]
+    fn text_parser_accepts_polarity_and_paired_lines() {
+        let p = LayerPolicy::parse_text(
+            "truncated 6 pos nocv\n\
+             paired perforated 2 cv + perforated 2 pos cv  # mirror pair\n\
+             paired exact + recursive 3 pos\n",
+        )
+        .unwrap();
+        assert_eq!(
+            p.point(0),
+            LayerPoint::new_pol(Family::Truncated, 6, Polarity::Pos, false)
+        );
+        assert_eq!(
+            p.assignment(1),
+            LayerAssignment::Paired(PairedPoint::mirrored(Family::Perforated, 2, true))
+        );
+        match p.assignment(2) {
+            LayerAssignment::Paired(pp) => {
+                assert_eq!(pp.even, LayerPoint::EXACT);
+                assert_eq!(
+                    pp.odd,
+                    LayerPoint::new_pol(Family::Recursive, 3, Polarity::Pos, true)
+                );
+            }
+            other => panic!("expected paired, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn json_omitted_use_cv_defaults_on_like_text() {
         // Both serializations must agree on what an omitted use_cv means:
-        // ON for approximate points.
+        // ON for approximate points. An omitted polarity means Neg.
         let p = LayerPolicy::parse(
             "{\"layers\": [{\"family\": \"perforated\", \"m\": 3}, \
              {\"family\": \"exact\", \"m\": 0}]}",
         )
         .unwrap();
         assert_eq!(p.point(0), LayerPoint::new(Family::Perforated, 3, true));
+        assert_eq!(p.point(0).polarity, Polarity::Neg);
         assert_eq!(p.point(1), LayerPoint::EXACT);
     }
 
@@ -451,10 +836,27 @@ mod tests {
         assert!(LayerPolicy::parse_text("perforated two cv").is_err());
         assert!(LayerPolicy::parse_text("perforated 2 maybe").is_err());
         assert!(LayerPolicy::parse_text("perforated 2 cv extra").is_err());
+        assert!(LayerPolicy::parse_text("perforated 2 cv nocv").is_err());
+        assert!(LayerPolicy::parse_text("perforated 2 pos neg").is_err());
         assert!(LayerPolicy::parse_text("").is_err());
         assert!(LayerPolicy::parse("{\"layers\": []}").is_err());
         assert!(LayerPolicy::parse("{\"nope\": 1}").is_err());
         assert!(LayerPolicy::parse("{\"layers\": [{\"m\": 2}]}").is_err());
+        // bad polarity value
+        assert!(LayerPolicy::parse(
+            "{\"layers\": [{\"family\": \"perforated\", \"m\": 2, \
+             \"polarity\": \"sideways\"}]}"
+        )
+        .is_err());
+        // malformed paired specs
+        assert!(LayerPolicy::parse_text("paired perforated 2 cv").is_err());
+        assert!(LayerPolicy::parse_text(
+            "paired perforated 2 cv + perforated 2 cv + exact"
+        )
+        .is_err());
+        assert!(LayerPolicy::parse("{\"layers\": [{\"paired\": {\"even\": \
+             {\"family\": \"perforated\", \"m\": 2}}}]}")
+        .is_err());
     }
 
     #[test]
@@ -493,8 +895,45 @@ mod tests {
     }
 
     #[test]
+    fn paired_power_averages_the_halves() {
+        let model = testutil::tiny_model();
+        // A mirrored pairing costs exactly the uniform point (both halves
+        // carry the same (family, m) cost).
+        let uni = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
+        let pair = LayerPolicy::paired_uniform(Family::Perforated, 3, true, 2).unwrap();
+        let p_uni = uni.power_norm(&model, 64);
+        let p_pair = pair.power_norm(&model, 64);
+        assert!((p_uni - p_pair).abs() < 1e-12, "{p_uni} vs {p_pair}");
+        // A half-exact pairing sits exactly between exact and the point.
+        let half = LayerPolicy::from_assignments(vec![
+            LayerAssignment::Paired(PairedPoint::new(
+                LayerPoint::new(Family::Perforated, 3, true),
+                LayerPoint::EXACT,
+            ));
+            2
+        ])
+        .unwrap();
+        let p_half = half.power_norm(&model, 64);
+        assert!((p_half - 0.5 * (p_uni + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn describe_is_compact() {
         let p = LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap();
         assert_eq!(p.describe(), "[perforated:2+V, exact]");
+        let q = LayerPolicy::from_assignments(vec![
+            LayerAssignment::Paired(PairedPoint::mirrored(Family::Perforated, 2, true)),
+            LayerAssignment::Point(LayerPoint::new_pol(
+                Family::Truncated,
+                6,
+                Polarity::Pos,
+                false,
+            )),
+        ])
+        .unwrap();
+        assert_eq!(
+            q.describe(),
+            "[pair(perforated:2+V / perforated:2:pos+V), truncated:6:pos]"
+        );
     }
 }

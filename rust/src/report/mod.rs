@@ -34,7 +34,7 @@ use crate::{artifacts_dir, runtime};
 const KNOWN_OPTS: &[&str] = &[
     "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
     "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
-    "policy",
+    "policy", "paired",
 ];
 
 pub fn cli_main() {
@@ -322,7 +322,9 @@ fn cmd_layerwise(args: &Args) -> Result<()> {
     let budget: f64 = args.get_or("budget", "1.0").parse()?;
     let n = args.get_usize("n", 150)?;
     let out = args.get("json").map(std::path::Path::new);
-    layerwise::run(&art, net, ds, family, m_hi, budget, n, out)
+    // --paired upgrades the mixed result into the positive/negative paired
+    // space and emits the paired policy as the JSON artifact.
+    layerwise::run(&art, net, ds, family, m_hi, budget, n, args.flag("paired"), out)
 }
 
 fn cmd_info() -> Result<()> {

@@ -17,8 +17,39 @@
 //! against the direct GEMM engine is asserted by tests, proving the
 //! *hardware* computes exactly what the fast engine computes.
 
-use crate::approx::{xvar, Family, MulLut};
+use crate::approx::{xvar_pol, Family, MulLut, Polarity};
 use crate::cv::{self, CvConstants};
+
+/// One multiplier configuration of an array column population.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MulPoint {
+    pub family: Family,
+    pub m: u32,
+    pub pol: Polarity,
+}
+
+impl MulPoint {
+    pub fn new(family: Family, m: u32, pol: Polarity) -> MulPoint {
+        MulPoint { family, m, pol }
+    }
+
+    pub fn exact() -> MulPoint {
+        MulPoint { family: Family::Exact, m: 0, pol: Polarity::Neg }
+    }
+
+    pub fn describe(self) -> String {
+        if self.family == Family::Exact {
+            "exact".to_string()
+        } else {
+            format!(
+                "{} m={}{}",
+                self.family.name(),
+                self.m,
+                if self.pol == Polarity::Pos { " pos" } else { "" }
+            )
+        }
+    }
+}
 
 /// Per-run toggle/energy statistics from the simulator.
 #[derive(Clone, Debug, Default)]
@@ -56,28 +87,77 @@ fn popcount_diff(a: i64, b: i64) -> u32 {
     (a ^ b).count_ones()
 }
 
-/// The systolic array configured for one (family, m) design point.
+/// The systolic array configured for one design point per column parity:
+/// uniform arrays carry the same [`MulPoint`] in both populations; a
+/// **paired** array alternates multipliers column by column (even columns =
+/// `even`, odd = `odd`) — the positive/negative layout that cancels
+/// accumulated column error in the sum chain itself.
 pub struct SystolicArray {
-    pub family: Family,
-    pub m: u32,
+    pub even: MulPoint,
+    pub odd: MulPoint,
     /// Array dimension N (rows = filters, columns = reduction index).
     pub n: usize,
-    lut: Option<MulLut>,
+    lut_even: Option<MulLut>,
+    lut_odd: Option<MulLut>,
 }
 
 impl SystolicArray {
+    /// Uniform negative-polarity array (the paper's configuration).
     pub fn new(family: Family, m: u32, n: usize) -> SystolicArray {
-        let lut = if family == Family::Exact {
-            None
-        } else {
-            Some(MulLut::build(family, m))
+        SystolicArray::new_pol(family, m, Polarity::Neg, n)
+    }
+
+    /// Uniform array at an explicit-polarity point.
+    pub fn new_pol(family: Family, m: u32, pol: Polarity, n: usize) -> SystolicArray {
+        let pt = MulPoint::new(family, m, pol);
+        SystolicArray::new_paired(pt, pt, n)
+    }
+
+    /// Array with alternating even/odd multiplier columns.
+    pub fn new_paired(even: MulPoint, odd: MulPoint, n: usize) -> SystolicArray {
+        let build = |p: MulPoint| {
+            if p.family == Family::Exact {
+                None
+            } else {
+                Some(MulLut::build_pol(p.family, p.m, p.pol))
+            }
         };
-        SystolicArray { family, m, n, lut }
+        let lut_even = build(even);
+        let lut_odd = if odd == even { None } else { build(odd) };
+        SystolicArray { even, odd, n, lut_even, lut_odd }
+    }
+
+    /// Do the two column populations differ?
+    pub fn is_paired(&self) -> bool {
+        self.even != self.odd
+    }
+
+    pub fn describe(&self) -> String {
+        if self.is_paired() {
+            format!("paired {} / {}", self.even.describe(), self.odd.describe())
+        } else {
+            self.even.describe()
+        }
+    }
+
+    /// The point owning global reduction column `k_global`.
+    #[inline]
+    fn point_at(&self, k_global: usize) -> MulPoint {
+        if k_global % 2 == 0 {
+            self.even
+        } else {
+            self.odd
+        }
     }
 
     #[inline]
-    fn mul(&self, w: u8, a: u8) -> i64 {
-        match &self.lut {
+    fn mul(&self, k_global: usize, w: u8, a: u8) -> i64 {
+        let lut = if k_global % 2 == 0 || !self.is_paired() {
+            &self.lut_even
+        } else {
+            &self.lut_odd
+        };
+        match lut {
             Some(l) => l.mul(w, a) as i64,
             None => (w as i64) * (a as i64),
         }
@@ -89,7 +169,11 @@ impl SystolicArray {
     /// * `act_cols`: each entry is one activation column `[k]` (a GEMM rhs
     ///   column, streamed over k cycles in hardware; simulated per-column)
     /// * `consts`: per-row CV constants (Q.4); `apply_cv` enables the MAC⁺
-    ///   column.
+    ///   column (uniform arrays only — a paired array's per-partition V
+    ///   terms are applied by the engine after all K tiles).
+    /// * `k0`: global reduction offset of this tile — a paired array picks
+    ///   each column's multiplier by the **global** parity `k0 + kk`, so
+    ///   tiling never flips the column population.
     ///
     /// Returns (outputs[col][row] accumulators, toggle stats). Outputs
     /// exclude zero-point/bias handling — the engine layer owns those, same
@@ -100,26 +184,35 @@ impl SystolicArray {
         act_cols: &[Vec<u8>],
         consts: &[CvConstants],
         apply_cv: bool,
+        k0: usize,
     ) -> (Vec<Vec<i64>>, ToggleStats) {
         let rows = weights.len();
         assert!(rows <= self.n, "more filter rows than array rows");
+        assert!(
+            !(apply_cv && self.is_paired()),
+            "paired arrays apply their per-partition V outside run_tile"
+        );
         let mut stats = ToggleStats::default();
         let mut outputs = Vec::with_capacity(act_cols.len());
-        // Register state carried cycle to cycle (for toggle counting).
+        // Register state carried cycle to cycle (for toggle counting). A
+        // paired array keeps one sumX side chain per column population
+        // (each partition regresses on its own x), so toggles are counted
+        // on two registers; a uniform array has the single chain of the
+        // paper's design (lane 0).
         let mut prod_reg = vec![0i64; rows];
         let mut sum_reg = vec![0i64; rows];
-        let mut sumx_reg: i64 = 0;
+        let mut sumx_reg = [0i64; 2];
         let mut v_reg: i64 = 0;
         for col in act_cols {
             assert!(col.len() <= self.n, "reduction dim exceeds array width");
             // One output column: each row's MAC chain accumulates over k.
             // (Hardware skews this over k cycles; dataflow-equivalent.)
             let mut out_col = vec![0i64; rows];
-            let mut sumx: i64 = 0;
+            let mut sumx = [0i64; 2];
             for (kk, &a) in col.iter().enumerate() {
                 stats.cycles += 1;
                 for (f, w_row) in weights.iter().enumerate() {
-                    let p = self.mul(w_row[kk], a);
+                    let p = self.mul(k0 + kk, w_row[kk], a);
                     let acc = out_col[f] + p;
                     stats.datapath_toggles += (popcount_diff(prod_reg[f], p)
                         + popcount_diff(sum_reg[f], acc))
@@ -128,15 +221,17 @@ impl SystolicArray {
                     sum_reg[f] = acc;
                     out_col[f] = acc;
                 }
-                let x = xvar(self.family, a, self.m) as i64;
-                let nx = sumx + x;
-                stats.sumx_toggles += popcount_diff(sumx_reg, nx) as u64;
-                sumx_reg = nx;
-                sumx = nx;
+                let pt = self.point_at(k0 + kk);
+                let lane = if self.is_paired() { (k0 + kk) % 2 } else { 0 };
+                let x = xvar_pol(pt.family, pt.pol, a, pt.m) as i64;
+                let nx = sumx[lane] + x;
+                stats.sumx_toggles += popcount_diff(sumx_reg[lane], nx) as u64;
+                sumx_reg[lane] = nx;
+                sumx[lane] = nx;
             }
-            if apply_cv && self.family != Family::Exact {
+            if apply_cv && self.even.family != Family::Exact {
                 for (f, c) in consts.iter().take(rows).enumerate() {
-                    let v = cv::v_term(c, sumx);
+                    let v = cv::v_term(c, sumx[0]);
                     stats.mac_plus_toggles += popcount_diff(v_reg, v) as u64;
                     v_reg = v;
                     out_col[f] += v;
@@ -152,7 +247,8 @@ impl SystolicArray {
     pub fn latency_cycles(&self, k: usize, n_cols: usize) -> u64 {
         let fill = self.n as u64; // skew fill
         let stream = (k.max(1) as u64) * n_cols as u64;
-        let mac_plus = if self.family == Family::Exact { 0 } else { 1 };
+        let exact = self.even.family == Family::Exact && self.odd.family == Family::Exact;
+        let mac_plus = if exact { 0 } else { 1 };
         fill + stream + mac_plus
     }
 }
@@ -208,9 +304,91 @@ mod tests {
             let consts: Vec<CvConstants> =
                 w.iter().map(|wr| cv::constants(family, m, wr, k)).collect();
             for apply_cv in [false, true] {
-                let (got, _) = arr.run_tile(&w, &cols, &consts, apply_cv);
+                let (got, _) = arr.run_tile(&w, &cols, &consts, apply_cv, 0);
                 let want = direct_gemm(family, m, &w, &cols, &consts, apply_cv);
                 assert_eq!(got, want, "{} cv={apply_cv}", family.name());
+            }
+        }
+    }
+
+    #[test]
+    fn paired_array_alternates_columns_by_global_parity() {
+        use crate::approx::am_pol;
+        let mut rng = Rng::new(0xA12);
+        let even = MulPoint::new(Family::Perforated, 2, Polarity::Neg);
+        let odd = MulPoint::new(Family::Perforated, 2, Polarity::Pos);
+        let arr = SystolicArray::new_paired(even, odd, 16);
+        assert!(arr.is_paired());
+        assert!(arr.describe().contains("paired"));
+        let rows = 4;
+        let k = 9; // odd, so the parity pattern is asymmetric
+        let w: Vec<Vec<u8>> =
+            (0..rows).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        let cols: Vec<Vec<u8>> =
+            (0..6).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        for k0 in [0usize, 1, 16] {
+            let (got, stats) = arr.run_tile(&w, &cols, &[], false, k0);
+            assert!(stats.cycles > 0);
+            for (p, col) in cols.iter().enumerate() {
+                for (f, wr) in w.iter().enumerate() {
+                    let want: i64 = wr
+                        .iter()
+                        .zip(col)
+                        .enumerate()
+                        .map(|(kk, (&wv, &av))| {
+                            let pt = if (k0 + kk) % 2 == 0 { even } else { odd };
+                            am_pol(pt.family, pt.pol, wv, av, pt.m) as i64
+                        })
+                        .sum();
+                    assert_eq!(got[p][f], want, "k0={k0} col={p} row={f}");
+                }
+            }
+        }
+        // A half-exact pairing runs exact products on its exact columns.
+        let half = SystolicArray::new_paired(MulPoint::exact(), odd, 16);
+        let (got, _) = half.run_tile(&w, &cols, &[], false, 0);
+        for (p, col) in cols.iter().enumerate() {
+            for (f, wr) in w.iter().enumerate() {
+                let want: i64 = wr
+                    .iter()
+                    .zip(col)
+                    .enumerate()
+                    .map(|(kk, (&wv, &av))| {
+                        if kk % 2 == 0 {
+                            (wv as i64) * (av as i64)
+                        } else {
+                            am_pol(odd.family, odd.pol, wv, av, odd.m) as i64
+                        }
+                    })
+                    .sum();
+                assert_eq!(got[p][f], want);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_pos_array_matches_direct_gemm() {
+        use crate::approx::am_pol;
+        let mut rng = Rng::new(0xA13);
+        let arr = SystolicArray::new_pol(Family::Truncated, 6, Polarity::Pos, 16);
+        assert!(!arr.is_paired());
+        let rows = 3;
+        let k = 10;
+        let w: Vec<Vec<u8>> =
+            (0..rows).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        let cols: Vec<Vec<u8>> =
+            (0..5).map(|_| (0..k).map(|_| rng.u8()).collect()).collect();
+        let (got, _) = arr.run_tile(&w, &cols, &[], false, 0);
+        for (p, col) in cols.iter().enumerate() {
+            for (f, wr) in w.iter().enumerate() {
+                let want: i64 = wr
+                    .iter()
+                    .zip(col)
+                    .map(|(&wv, &av)| {
+                        am_pol(Family::Truncated, Polarity::Pos, wv, av, 6) as i64
+                    })
+                    .sum();
+                assert_eq!(got[p][f], want);
             }
         }
     }
@@ -225,8 +403,8 @@ mod tests {
         let cold = vec![vec![0u8; 8]; 4];
         let c: Vec<CvConstants> =
             w.iter().map(|wr| cv::constants(Family::Perforated, 2, wr, 8)).collect();
-        let (_, s_hot) = arr.run_tile(&w, &hot, &c, true);
-        let (_, s_cold) = arr.run_tile(&w, &cold, &c, true);
+        let (_, s_hot) = arr.run_tile(&w, &hot, &c, true, 0);
+        let (_, s_cold) = arr.run_tile(&w, &cold, &c, true, 0);
         assert!(s_hot.datapath_toggles > s_cold.datapath_toggles * 2);
         assert!(s_hot.activity() > 0.0);
     }
@@ -240,7 +418,7 @@ mod tests {
         let cols: Vec<Vec<u8>> =
             (0..5).map(|_| (0..8).map(|_| rng.u8()).collect()).collect();
         let c = vec![CvConstants::default(); 3];
-        let (out, stats) = arr.run_tile(&w, &cols, &c, true);
+        let (out, stats) = arr.run_tile(&w, &cols, &c, true, 0);
         assert_eq!(stats.sumx_toggles, 0);
         assert_eq!(stats.mac_plus_toggles, 0);
         // And it is the exact GEMM.
@@ -275,8 +453,8 @@ mod tests {
         let c = vec![CvConstants::default(); 8];
         let exact = SystolicArray::new(Family::Exact, 0, 16);
         let perf = SystolicArray::new(Family::Perforated, 3, 16);
-        let (_, se) = exact.run_tile(&w, &cols, &c, false);
-        let (_, sp) = perf.run_tile(&w, &cols, &c, false);
+        let (_, se) = exact.run_tile(&w, &cols, &c, false, 0);
+        let (_, sp) = perf.run_tile(&w, &cols, &c, false, 0);
         assert!(
             sp.datapath_toggles < se.datapath_toggles,
             "{} !< {}",

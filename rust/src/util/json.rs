@@ -436,4 +436,174 @@ mod tests {
             assert!(Json::parse(bad).is_err(), "{bad:?}");
         }
     }
+
+    // ---- property / fuzz suite (the service-path hardening tier) --------
+
+    use crate::approx::{Family, Polarity};
+    use crate::nn::{LayerAssignment, LayerPoint, LayerPolicy, PairedPoint};
+    use crate::util::rng::Rng;
+
+    /// A random (possibly paired / positive-polarity) policy document —
+    /// the artifact class the service parses from disk.
+    fn random_policy(r: &mut Rng) -> LayerPolicy {
+        let n_layers = 1 + r.below(6) as usize;
+        let mut point = |r: &mut Rng| {
+            let fam = Family::ALL[r.below(4) as usize];
+            let m = if fam == Family::Exact { 0 } else { 1 + r.below(7) as u32 };
+            let pol = if fam == Family::Exact {
+                Polarity::Neg
+            } else {
+                Polarity::ALL[r.below(2) as usize]
+            };
+            LayerPoint::new_pol(fam, m, pol, r.below(2) == 1)
+        };
+        let assignments: Vec<LayerAssignment> = (0..n_layers)
+            .map(|_| {
+                if r.below(3) == 0 {
+                    LayerAssignment::Paired(PairedPoint::new(point(r), point(r)))
+                } else {
+                    LayerAssignment::Point(point(r))
+                }
+            })
+            .collect();
+        LayerPolicy::from_assignments(assignments).unwrap()
+    }
+
+    #[test]
+    fn property_policy_documents_roundtrip_to_a_fixpoint() {
+        // emit -> parse -> emit must be a fixpoint (byte-identical second
+        // render), and the parsed policy must equal the original.
+        crate::util::prop::check_msg(
+            "json policy roundtrip fixpoint",
+            80,
+            0x15A1,
+            |r| random_policy(r),
+            |policy| {
+                let doc = policy.to_json().render();
+                let parsed = Json::parse(&doc).map_err(|e| format!("parse: {e:#}"))?;
+                if parsed.render() != doc {
+                    return Err(format!("render not a fixpoint for {doc}"));
+                }
+                let back =
+                    LayerPolicy::parse(&doc).map_err(|e| format!("policy: {e:#}"))?;
+                if &back != policy {
+                    return Err(format!("policy roundtrip mismatch for {doc}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Random nested JSON value (depth-bounded, no NaN/inf).
+    fn random_json(r: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.below(2) == 1),
+            2 => {
+                if r.below(2) == 0 {
+                    Json::Num(r.range_i64(-1_000_000, 1_000_000) as f64)
+                } else {
+                    Json::Num(r.range_i64(-4000, 4000) as f64 / 16.0)
+                }
+            }
+            3 => {
+                let len = r.below(8);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = r.below(96) as u8 + 32; // printable ascii
+                            if c == b'\\' { '"' } else { c as char }
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..r.below(4)).map(|_| random_json(r, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn property_random_values_roundtrip_to_a_fixpoint() {
+        crate::util::prop::check_msg(
+            "json value roundtrip fixpoint",
+            200,
+            0x15A2,
+            |r| random_json(r, 3).render(),
+            |doc| {
+                let parsed = Json::parse(doc).map_err(|e| format!("parse: {e:#}"))?;
+                if &parsed.render() != doc {
+                    return Err(format!("not a fixpoint: {doc}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fuzz_mutated_policy_documents_never_panic() {
+        // Byte-level mutations (substitute / delete / insert / swap) of
+        // valid policy documents: the parser must return Ok or Err — never
+        // panic — and so must the policy layer on top of it. ASCII
+        // substitutions keep the buffer valid UTF-8, so every mutant
+        // reaches the parser itself.
+        let mut r = Rng::new(0xF022);
+        for _case in 0..400u32 {
+            let policy = random_policy(&mut r);
+            let mut bytes = policy.to_json().render().into_bytes();
+            for _ in 0..1 + r.below(8) {
+                match r.below(4) {
+                    0 => {
+                        let i = r.below(bytes.len() as u64) as usize;
+                        bytes[i] = r.below(95) as u8 + 32;
+                    }
+                    1 => {
+                        let i = r.below(bytes.len() as u64) as usize;
+                        bytes.remove(i);
+                    }
+                    2 => {
+                        let i = r.below(bytes.len() as u64 + 1) as usize;
+                        bytes.insert(i, r.below(95) as u8 + 32);
+                    }
+                    _ => {
+                        let i = r.below(bytes.len() as u64) as usize;
+                        let j = r.below(bytes.len() as u64) as usize;
+                        bytes.swap(i, j);
+                    }
+                }
+                if bytes.is_empty() {
+                    bytes.push(b'{');
+                }
+            }
+            let text = String::from_utf8(bytes).expect("ascii mutations stay utf8");
+            // Must return (not panic); the result value is unconstrained.
+            let _ = Json::parse(&text);
+            let _ = LayerPolicy::parse(&text);
+        }
+    }
+
+    #[test]
+    fn fuzz_truncated_documents_are_errors_not_panics() {
+        // Every proper prefix of a valid document must parse to Err (the
+        // document is a single object, so no prefix is complete) without
+        // panicking — the byte-starved service read path.
+        let mut r = Rng::new(0xF023);
+        let doc = random_policy(&mut r).to_json().render();
+        for len in 0..doc.len() {
+            let prefix = &doc[..len];
+            assert!(
+                Json::parse(prefix).is_err(),
+                "prefix of len {len} unexpectedly parsed: {prefix:?}"
+            );
+            assert!(LayerPolicy::parse(prefix).is_err(), "len {len}");
+        }
+        // The full document still parses.
+        assert!(Json::parse(&doc).is_ok());
+        assert!(LayerPolicy::parse(&doc).is_ok());
+    }
 }

@@ -1,0 +1,201 @@
+//! Differential test harness: **every engine tier, bit-identical, on every
+//! multiplier point** — the class of silent-engine-swap bug fixed ad hoc in
+//! PR 1 (Lut falling back to Identity) and PR 3 (m > 7 silently masked)
+//! becomes structurally impossible to reintroduce unnoticed.
+//!
+//! For every family × m ≤ 7 × polarity, on the checked-in hermetic model,
+//! the following must produce bit-identical logits:
+//!
+//! * the planned blocked GEMM (Identity engine — the serving fast path),
+//! * the LUT engine (prepared 256×256 tables),
+//! * **direct structural-bitmodel evaluation** — a table generated from
+//!   `approx::bitmodel`'s partial-product circuit models drives every
+//!   product, so the forward is the circuit, product for product,
+//! * the batched forward (`forward_batch`, one wide GEMM per layer),
+//! * the cycle-level systolic simulator.
+//!
+//! A paired tier runs the same ladder for even/odd paired assignments.
+
+use std::sync::Arc;
+
+use cvapprox::approx::{bitmodel, Family, MulLut, Polarity};
+use cvapprox::datasets::Dataset;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::{
+    loader, Engine, ForwardOpts, LayerAssignment, LayerPoint, LayerPolicy, Model,
+    PairedPoint, Tensor,
+};
+
+fn hermetic() -> (Model, Dataset) {
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm"))
+        .expect("hermetic model (regenerate with scripts/gen_hermetic_golden.py)");
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).expect("hermetic dataset");
+    (model, ds)
+}
+
+/// Every approximate point of the differential sweep: family × m ∈ [1, 7]
+/// × polarity.
+fn all_points() -> Vec<(Family, u32, Polarity)> {
+    let mut pts = Vec::new();
+    for family in Family::APPROX {
+        for m in 1..=7u32 {
+            for pol in Polarity::ALL {
+                pts.push((family, m, pol));
+            }
+        }
+    }
+    pts
+}
+
+fn uniform_opts(model: &Model, family: Family, m: u32, pol: Polarity) -> ForwardOpts {
+    let policy = LayerPolicy::new(vec![
+        LayerPoint::new_pol(family, m, pol, true);
+        model.mac_layers()
+    ])
+    .unwrap();
+    ForwardOpts::with_policy(Arc::new(policy))
+}
+
+/// A LUT whose every entry comes from the structural partial-product
+/// circuit model — attaching it makes the engine a bitmodel evaluator.
+fn bitmodel_lut(family: Family, m: u32, pol: Polarity) -> MulLut {
+    MulLut::from_fn(family, m, pol, |w, a| bitmodel::am_bits_pol(family, pol, w, a, m))
+}
+
+#[test]
+fn every_point_identity_lut_bitmodel_and_batch_agree() {
+    let (model, ds) = hermetic();
+    let imgs = [ds.image(0), ds.image(1)];
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    for (family, m, pol) in all_points() {
+        let opts = uniform_opts(&model, family, m, pol);
+        // Tier 1: planned blocked GEMM (identity expansion).
+        let engine = Engine::new(model.clone());
+        let identity: Vec<Vec<f64>> = imgs
+            .iter()
+            .map(|im| engine.forward(im, &opts).unwrap())
+            .collect();
+        // Tier 2: LUT engine (closed-form tables).
+        let mut e_lut = Engine::new(model.clone());
+        e_lut.prepare_lut_pol(family, m, pol);
+        // Tier 3: direct structural-bitmodel evaluation.
+        let mut e_bits = Engine::new(model.clone());
+        e_bits.attach_lut(bitmodel_lut(family, m, pol));
+        for (i, im) in imgs.iter().enumerate() {
+            let label = format!("{} m={m} {} img {i}", family.name(), pol.name());
+            assert_eq!(e_lut.forward(im, &opts).unwrap(), identity[i], "lut {label}");
+            assert_eq!(
+                e_bits.forward(im, &opts).unwrap(),
+                identity[i],
+                "bitmodel {label}"
+            );
+        }
+        // Tier 4: batched forward, one wide GEMM per layer.
+        let batched = engine.forward_batch(&refs, &opts).unwrap();
+        assert_eq!(batched, identity, "{} m={m} {} batched", family.name(), pol.name());
+    }
+}
+
+#[test]
+fn every_point_systolic_simulator_agrees() {
+    // The cycle-level array on one image per point (slower tier).
+    let (model, ds) = hermetic();
+    let img = ds.image(0);
+    for (family, m, pol) in all_points() {
+        let opts = uniform_opts(&model, family, m, pol);
+        let reference = Engine::new(model.clone()).forward(&img, &opts).unwrap();
+        let mut engine = Engine::new(model.clone());
+        engine.prepare_systolic_pol(family, m, pol, 64);
+        let (logits, stats) = engine.forward_systolic(&img, &opts).unwrap();
+        assert_eq!(logits, reference, "{} m={m} {}", family.name(), pol.name());
+        assert!(stats.cycles > 0);
+    }
+}
+
+#[test]
+fn exact_baseline_agrees_across_engines() {
+    let (model, ds) = hermetic();
+    let img = ds.image(0);
+    let opts = ForwardOpts::exact();
+    let reference = Engine::new(model.clone()).forward(&img, &opts).unwrap();
+    // LUT kind falls back to the identity core for exact (no table exists).
+    let mut lut_opts = ForwardOpts::exact();
+    lut_opts.kind = cvapprox::nn::GemmKind::Lut;
+    assert_eq!(Engine::new(model.clone()).forward(&img, &lut_opts).unwrap(), reference);
+    let batched =
+        Engine::new(model.clone()).forward_batch(&[&img], &opts).unwrap();
+    assert_eq!(batched[0], reference);
+    let mut e_sys = Engine::new(model.clone());
+    e_sys.prepare_systolic(Family::Exact, 0, 64);
+    let (sys, _) = e_sys.forward_systolic(&img, &opts).unwrap();
+    assert_eq!(sys, reference);
+}
+
+#[test]
+fn paired_assignments_agree_across_engines() {
+    // The paired tier of the harness: mirrored, cross-point and half-exact
+    // pairings through identity, prepared-LUT, bitmodel-LUT, batched and
+    // paired-systolic engines.
+    let (model, ds) = hermetic();
+    let imgs = [ds.image(0), ds.image(1)];
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    let pairings: Vec<PairedPoint> = vec![
+        PairedPoint::mirrored(Family::Perforated, 2, true),
+        PairedPoint::mirrored(Family::Truncated, 6, true),
+        PairedPoint::mirrored(Family::Recursive, 3, false),
+        PairedPoint::new(
+            LayerPoint::new(Family::Truncated, 6, false),
+            LayerPoint::new_pol(Family::Truncated, 5, Polarity::Pos, true),
+        ),
+        PairedPoint::new(
+            LayerPoint::EXACT,
+            LayerPoint::new_pol(Family::Perforated, 2, Polarity::Pos, true),
+        ),
+    ];
+    for pair in pairings {
+        let policy = LayerPolicy::from_assignments(vec![
+            LayerAssignment::Paired(pair);
+            model.mac_layers()
+        ])
+        .unwrap();
+        let describe = policy.describe();
+        let policy = Arc::new(policy);
+        let opts = ForwardOpts::with_policy(policy.clone());
+        let engine = Engine::new(model.clone());
+        let identity: Vec<Vec<f64>> = imgs
+            .iter()
+            .map(|im| engine.forward(im, &opts).unwrap())
+            .collect();
+        // Prepared closed-form LUTs for both halves.
+        let mut e_lut = Engine::new(model.clone());
+        e_lut.prepare_luts_for_policy(&policy);
+        // Structural bitmodel tables for both halves.
+        let mut e_bits = Engine::new(model.clone());
+        for pt in [pair.even.normalized(), pair.odd.normalized()] {
+            if pt != LayerPoint::EXACT {
+                e_bits.attach_lut(bitmodel_lut(pt.family, pt.m, pt.polarity));
+            }
+        }
+        for (i, im) in imgs.iter().enumerate() {
+            assert_eq!(
+                e_lut.forward(im, &opts).unwrap(),
+                identity[i],
+                "lut {describe} img {i}"
+            );
+            assert_eq!(
+                e_bits.forward(im, &opts).unwrap(),
+                identity[i],
+                "bitmodel {describe} img {i}"
+            );
+        }
+        let batched = engine.forward_batch(&refs, &opts).unwrap();
+        assert_eq!(batched, identity, "batched {describe}");
+        // Cycle-level array with alternating multiplier columns.
+        let mut e_sys = Engine::new(model.clone());
+        e_sys.prepare_systolic_paired(pair, 64);
+        let (sys, stats) = e_sys.forward_systolic(&imgs[0], &opts).unwrap();
+        assert_eq!(sys, identity[0], "systolic {describe}");
+        assert!(stats.cycles > 0);
+    }
+}

@@ -12,10 +12,12 @@
 //!   the six trained nets × 36+ golden vectors.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use cvapprox::approx::Family;
 use cvapprox::datasets::{Dataset, Golden};
-use cvapprox::nn::{loader, Engine, ForwardOpts, GemmKind, Tensor};
+use cvapprox::nn::{loader, Engine, ForwardOpts, GemmKind, LayerPolicy, Tensor};
+use cvapprox::util::json::Json;
 use cvapprox::{artifacts_dir, hermetic_dir};
 
 fn have_artifacts() -> bool {
@@ -157,6 +159,97 @@ fn hermetic_systolic_engine_matches_python_reference() {
         let (logits, stats) = engine.forward_systolic(&img, &opts).unwrap();
         assert_logits_match(&logits, g, "hermetic systolic");
         assert!(stats.cycles > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hermetic paired tier: positive/negative polarity + even/odd pairings,
+// against the python mirror (scripts/gen_hermetic_golden.py). JSON sidecars
+// because the .gv format encodes only a uniform (family, m, cv) triple.
+// ---------------------------------------------------------------------------
+
+struct PairedGolden {
+    name: String,
+    img_index: usize,
+    policy: LayerPolicy,
+    logits: Vec<f64>,
+}
+
+fn hermetic_paired_goldens() -> Vec<PairedGolden> {
+    let dir = hermetic_dir().join("golden_paired");
+    assert!(
+        dir.is_dir(),
+        "hermetic paired golden set missing at {} — regenerate with \
+         scripts/gen_hermetic_golden.py",
+        dir.display()
+    );
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    let goldens: Vec<PairedGolden> = entries
+        .iter()
+        .map(|e| {
+            let text = std::fs::read_to_string(e.path()).unwrap();
+            let j = Json::parse(&text).expect("paired golden JSON parses");
+            let model = j.get("model").and_then(|v| v.as_str()).unwrap();
+            assert_eq!(model, "hermnet_hsynth");
+            let img_index =
+                j.get("img_index").and_then(|v| v.as_f64()).unwrap() as usize;
+            let policy = LayerPolicy::from_json(j.get("policy").unwrap())
+                .expect("paired policy document parses");
+            let logits: Vec<f64> = j
+                .get("logits")
+                .and_then(|v| v.as_arr())
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect();
+            PairedGolden {
+                name: e.file_name().to_string_lossy().into_owned(),
+                img_index,
+                policy,
+                logits,
+            }
+        })
+        .collect();
+    assert!(goldens.len() >= 10, "paired set incomplete: {}", goldens.len());
+    // The set must exercise pairings AND uniform positive polarity.
+    assert!(goldens.iter().any(|g| g.policy.paired_layers() > 0));
+    assert!(goldens
+        .iter()
+        .any(|g| g.policy.paired_layers() == 0 && g.policy.approx_layers() > 0));
+    goldens
+}
+
+#[test]
+fn hermetic_paired_policies_match_python_reference_exactly() {
+    // Identity engine, prepared-LUT engine and the batched path must all
+    // reproduce the python paired/polarity reference bit for bit.
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm")).unwrap();
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).unwrap();
+    for g in &hermetic_paired_goldens() {
+        let policy = Arc::new(g.policy.clone());
+        let opts = ForwardOpts::with_policy(policy.clone());
+        let img = ds.image(g.img_index);
+        let engine = Engine::new(model.clone());
+        let ident = engine.forward(&img, &opts).expect("paired forward");
+        assert_eq!(ident.len(), g.logits.len(), "{}", g.name);
+        for (i, (a, b)) in ident.iter().zip(&g.logits).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "{} logit[{i}]: rust {a} vs python {b}",
+                g.name
+            );
+        }
+        let mut e_lut = Engine::new(model.clone());
+        e_lut.prepare_luts_for_policy(&policy);
+        assert_eq!(e_lut.forward(&img, &opts).unwrap(), ident, "{} lut", g.name);
+        let batched = engine.forward_batch(&[&img], &opts).unwrap();
+        assert_eq!(batched[0], ident, "{} batched", g.name);
     }
 }
 

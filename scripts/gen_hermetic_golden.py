@@ -11,6 +11,12 @@ vectors for every (family, m, use_cv) point of the paper grid:
   rust/tests/hermetic/models/hermnet_hsynth.cvm
   rust/tests/hermetic/data/hsynth_test.cvd        (64 images, 10 classes)
   rust/tests/hermetic/golden/*.gv                 (38 vectors)
+  rust/tests/hermetic/golden_paired/*.json        (paired/polarity vectors)
+
+The golden_paired tier mirrors the rust positive/negative pairing axis:
+positive-polarity (round-up) multiplier variants and per-layer even/odd
+pairings, serialized as JSON (policy document + full-precision logits)
+because the .gv format encodes only a uniform (family, m, cv) triple.
 
 Everything is seeded and integer/float64-deterministic, so regenerating
 produces byte-identical files. Labels are the exact-forward argmax (last-max
@@ -25,6 +31,7 @@ Run from the repo root:  python3 scripts/gen_hermetic_golden.py
 
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -34,7 +41,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "python"))
 
 from compile import export, quant  # noqa: E402
-from compile.model import QuantModel, approx_gemm, infer_shapes  # noqa: E402
+from compile.model import QuantModel, approx_gemm, infer_shapes, np_err_acc  # noqa: E402
 from compile.nets import Node  # noqa: E402
 
 OUT = REPO / "rust/tests/hermetic"
@@ -189,6 +196,228 @@ def argmax_last(logits: np.ndarray) -> int:
     return int(len(logits) - 1 - np.argmax(logits[::-1]))
 
 
+# ---------------------------------------------------------------------------
+# Positive/negative polarity + paired-layer mirror (rust approx::Polarity,
+# nn::policy::{LayerPoint, PairedPoint}, nn::gemm::paired_gemm_planned)
+# ---------------------------------------------------------------------------
+
+
+def np_comp(x: np.ndarray, m: int) -> np.ndarray:
+    """Modular complement of the m low bits (rust approx::comp_low)."""
+    mask = (1 << m) - 1
+    return ((1 << m) - (x & mask)) & mask
+
+
+def np_err_acc_pol(family: str, pol: str, w: np.ndarray, a: np.ndarray,
+                   m: int) -> np.ndarray:
+    """Signed sum_k eps(W,A) = exact − AM (i64): ≥0 for neg, ≤0 for pos."""
+    w = w.astype(np.int64)
+    a = a.astype(np.int64)
+    if family == "exact" or m == 0:
+        return np.zeros((w.shape[0], a.shape[1]), np.int64)
+    if pol == "neg":
+        return np_err_acc(family, w, a, m)
+    if family == "perforated":
+        return -(w @ np_comp(a, m))
+    if family == "recursive":
+        return -(np_comp(w, m) @ np_comp(a, m))
+    if family == "truncated":
+        acc = np.zeros((w.shape[0], a.shape[1]), np.int64)
+        for i in range(m):
+            acc += (np_comp(w, m - i) @ ((a >> i) & 1)) << i
+        return -acc
+    raise ValueError(family)
+
+
+def np_x_pol(family: str, pol: str, a: np.ndarray, m: int) -> np.ndarray:
+    """Per-element CV regressor x (rust approx::xvar_pol)."""
+    a = a.astype(np.int64)
+    low = a & ((1 << m) - 1)
+    if family == "truncated":
+        return (low != 0).astype(np.int64)
+    if pol == "neg":
+        return low
+    return np_comp(a, m)
+
+
+def div_round(num: np.ndarray, den: int) -> np.ndarray:
+    """Round-half-away-from-zero division (rust cv::div_round)."""
+    num = num.astype(np.int64)
+    return np.where(num >= 0, (num + den // 2) // den,
+                    -((-num + den // 2) // den))
+
+
+def cv_constants_pol(family: str, pol: str, w: np.ndarray, m: int,
+                     k_valid: int):
+    """Per-row (C, C0) in Q.4 (rust cv::constants_pol). `w` may be a
+    parity-masked panel; `k_valid` divides the averages."""
+    w = w.astype(np.int64)
+    rows = w.shape[0]
+    if family == "exact" or m == 0 or k_valid == 0:
+        z = np.zeros(rows, np.int64)
+        return z, z
+    if family == "perforated":
+        num = w.sum(axis=1)
+    elif family == "recursive":
+        part = np_comp(w, m) if pol == "pos" else (w & ((1 << m) - 1))
+        num = part.sum(axis=1)
+    elif family == "truncated":
+        num = np.zeros(rows, np.int64)
+        for i in range(m):
+            b = m - i
+            part = np_comp(w, b) if pol == "pos" else (w & ((1 << b) - 1))
+            num += part.sum(axis=1) << i
+    else:
+        raise ValueError(family)
+    den = k_valid * (2 if family == "truncated" else 1)
+    c = div_round(num * 16, den)
+    c0 = div_round(num * 16, 1 << (m + 1)) if family == "truncated" \
+        else np.zeros(rows, np.int64)
+    if pol == "pos":
+        c, c0 = -c, -c0
+    return c, c0
+
+
+def point(family: str, m: int, pol: str = "neg", use_cv: bool = True) -> dict:
+    return {"family": family, "m": m, "polarity": pol, "use_cv": use_cv}
+
+
+EXACT_POINT = point("exact", 0, "neg", False)
+
+
+def norm_point(pt: dict) -> dict:
+    """rust LayerPoint::normalized: m == 0 or exact family -> EXACT."""
+    if pt["family"] == "exact" or pt["m"] == 0:
+        return dict(EXACT_POINT)
+    return pt
+
+
+def paired(even: dict, odd: dict) -> dict:
+    return {"paired": {"even": even, "odd": odd}}
+
+
+def assignment_gemm(assign: dict, w_q: np.ndarray, a_q: np.ndarray,
+                    zp_w: int, zp_a: int, bias_q: np.ndarray) -> np.ndarray:
+    """One layer GEMM under a point or paired assignment (rust
+    approx_gemm_planned / paired_gemm_planned, i64 accumulators)."""
+    wi = w_q.astype(np.int64)
+    ai = a_q.astype(np.int64)
+    k = wi.shape[1]
+    if "paired" not in assign:
+        pt = norm_point(assign)
+        fam, m, pol, use_cv = (pt["family"], pt["m"], pt["polarity"],
+                               pt["use_cv"])
+        acc = wi @ ai - np_err_acc_pol(fam, pol, wi, ai, m)
+        if use_cv and fam != "exact" and m > 0:
+            c, c0 = cv_constants_pol(fam, pol, wi, m, k)
+            sumx = np_x_pol(fam, pol, ai, m).sum(axis=0)
+            acc = acc + ((c[:, None] * sumx[None, :] + c0[:, None] + 8) >> 4)
+    else:
+        halves = (norm_point(assign["paired"]["even"]),
+                  norm_point(assign["paired"]["odd"]))
+        acc = wi @ ai
+        kk = np.arange(k)
+        for parity, pt in enumerate(halves):
+            fam, m, pol = pt["family"], pt["m"], pt["polarity"]
+            if fam == "exact" or m == 0:
+                continue
+            wp = wi.copy()
+            wp[:, (kk % 2) != parity] = 0
+            acc = acc - np_err_acc_pol(fam, pol, wp, ai, m)
+        for parity, pt in enumerate(halves):
+            fam, m, pol, use_cv = (pt["family"], pt["m"], pt["polarity"],
+                                   pt["use_cv"])
+            if not use_cv or fam == "exact" or m == 0:
+                continue
+            k_valid = (k + 1) // 2 if parity == 0 else k // 2
+            wp = wi.copy()
+            wp[:, (kk % 2) != parity] = 0
+            c, c0 = cv_constants_pol(fam, pol, wp, m, k_valid)
+            x = np_x_pol(fam, pol, ai, m)
+            sumx = x[(kk % 2) == parity].sum(axis=0)
+            acc = acc + ((c[:, None] * sumx[None, :] + c0[:, None] + 8) >> 4)
+    sum_a = ai.sum(axis=0)
+    sum_w = wi.sum(axis=1)
+    return (acc - zp_w * sum_a[None, :] - zp_a * sum_w[:, None]
+            + k * zp_w * zp_a + bias_q.astype(np.int64)[:, None])
+
+
+def forward_assignments(qm, img, assignments) -> np.ndarray:
+    """Quantized forward with one assignment per MAC layer (rust
+    ForwardOpts::with_policy over a possibly-paired LayerPolicy)."""
+    outs = []
+    mac_idx = 0
+    for i, n in enumerate(qm.nodes):
+        s_out, zp_out = qm.out_q[i]
+        if n.op == "input":
+            y = img
+        elif n.op in ("conv", "dense"):
+            assign = assignments[mac_idx]
+            mac_idx += 1
+            wrec = qm.weights[i]
+            x = outs[n.inputs[0]]
+            s_in, zp_in = qm.out_q[n.inputs[0]]
+            mult = wrec["s_w"] * s_in / s_out
+            zp_w = wrec["zp_w"]
+            if n.op == "dense":
+                acc = assignment_gemm(assign, wrec["w_q"], x.reshape(-1, 1),
+                                      zp_w, zp_in, wrec["b_q"])
+                q = quant.requantize(acc, mult, zp_out).reshape(-1)
+                if n.relu:
+                    q = np.maximum(q, zp_out)
+                y = q.reshape(1, 1, -1)
+            else:
+                from compile.model import im2col
+                h, w, cin = x.shape
+                oh, ow, cout = qm.shapes[i]
+                g = n.groups
+                y2 = np.empty((cout, oh * ow), np.uint8)
+                cpg_in, cpg_out = cin // g, cout // g
+                for gi in range(g):
+                    xg = x[..., gi * cpg_in:(gi + 1) * cpg_in]
+                    a_cols = im2col(xg, n.k, n.stride, n.pad, zp_in)
+                    wq = wrec["w_q"][gi * cpg_out:(gi + 1) * cpg_out]
+                    bq = wrec["b_q"][gi * cpg_out:(gi + 1) * cpg_out]
+                    acc = assignment_gemm(assign, wq, a_cols, zp_w, zp_in, bq)
+                    q = quant.requantize(acc, mult, zp_out)
+                    if n.relu:
+                        q = np.maximum(q, zp_out)
+                    y2[gi * cpg_out:(gi + 1) * cpg_out] = q
+                y = y2.T.reshape(oh, ow, cout)
+        elif n.op == "maxpool":
+            x = outs[n.inputs[0]]
+            h, w, c = x.shape
+            y = x[:h // 2 * 2, :w // 2 * 2].reshape(h // 2, 2, w // 2, 2, c)
+            y = y.max(axis=(1, 3))
+        elif n.op == "gap":
+            x = outs[n.inputs[0]].astype(np.int64)
+            npix = x.shape[0] * x.shape[1]
+            y = ((x.sum(axis=(0, 1)) * 2 + npix) // (2 * npix)).astype(np.uint8)
+            y = y.reshape(1, 1, -1)
+        elif n.op == "shuffle":
+            x = outs[n.inputs[0]]
+            h, w, c = x.shape
+            gg = n.groups
+            y = x.reshape(h, w, gg, c // gg).transpose(0, 1, 3, 2).reshape(h, w, c)
+        else:
+            raise ValueError(n.op)
+        outs.append(y)
+    s, zp = qm.out_q[len(qm.nodes) - 1]
+    return (outs[-1].reshape(-1).astype(np.float64) - zp) * s
+
+
+def mirrored(family: str, m: int, use_cv: bool = True) -> dict:
+    """The canonical cancelling pair (rust PairedPoint::mirrored)."""
+    return paired(point(family, m, "neg", use_cv), point(family, m, "pos", use_cv))
+
+
+def evaluate_assignments(qm, imgs, labels, assignments) -> float:
+    correct = 0
+    for img, label in zip(imgs, labels):
+        correct += argmax_last(forward_assignments(qm, img, assignments)) == label
+    return correct / len(imgs)
+
+
 GRID = [("perforated", m) for m in (1, 2, 3)] + \
        [("recursive", m) for m in (2, 3, 4)] + \
        [("truncated", m) for m in (5, 6, 7)]
@@ -280,7 +509,7 @@ def main() -> None:
         [argmax_last(qm.forward(img, "exact", 0, False)) for img in imgs],
         np.uint16)
 
-    for sub in ("models", "data", "golden"):
+    for sub in ("models", "data", "golden", "golden_paired"):
         (OUT / sub).mkdir(parents=True, exist_ok=True)
     export.write_model(OUT / f"models/{MODEL_NAME}.cvm", qm, 10)
     export.write_dataset(OUT / "data/hsynth_test.cvd", imgs, labels,
@@ -304,8 +533,42 @@ def main() -> None:
                                     logits)
                 n_gv += 1
 
+    # Paired/polarity golden vectors: JSON sidecars (policy document +
+    # full-precision logits) for the rust golden_paired tier. Fixed set of
+    # five policies exercising mirrored pairings, cross-point pairings,
+    # uniform positive polarity and half-exact pairings, on two images each.
+    paired_policies = [
+        ("pp_perf2_mirror", [mirrored("perforated", 2)] * 4),
+        ("pp_trunc6_mirror", [mirrored("truncated", 6)] * 4),
+        ("pp_mixed", [
+            mirrored("perforated", 3),
+            dict(EXACT_POINT),
+            point("recursive", 3, "pos", False),
+            paired(point("truncated", 6, "neg", False),
+                   point("truncated", 5, "pos", True)),
+        ]),
+        ("pp_perf2_pos_uniform", [point("perforated", 2, "pos", True)] * 4),
+        ("pp_half_exact", [paired(dict(EXACT_POINT),
+                                  point("perforated", 2, "pos", True))] * 4),
+    ]
+    n_pp = 0
+    for name, assignments in paired_policies:
+        for img_index in (0, 1):
+            logits = forward_assignments(qm, imgs[img_index], assignments)
+            doc = {
+                "model": MODEL_NAME,
+                "img_index": img_index,
+                "policy": {"n_layers": len(assignments),
+                           "layers": assignments},
+                "logits": [float(v) for v in logits],
+            }
+            path = OUT / f"golden_paired/{name}_{img_index}.json"
+            path.write_text(json.dumps(doc, indent=1) + "\n")
+            n_pp += 1
+
     # ---- verification summary (drives the policy bench tuning) ----------
-    print(f"wrote {OUT} ({n_gv} golden vectors, {N_IMAGES} images)")
+    print(f"wrote {OUT} ({n_gv} golden vectors, {n_pp} paired vectors, "
+          f"{N_IMAGES} images)")
     print("node out_q:", [(round(s, 6), z) for s, z in out_q])
     exact_acc = evaluate(qm, imgs, labels, "exact", 0, False,
                          ms=[0] * 4)
@@ -318,6 +581,42 @@ def main() -> None:
         ms, acc, exact, sens = greedy_sim(qm, imgs, labels, family, m_hi, budget)
         print(f"greedy {family} m_hi={m_hi} budget={budget}%: ms={ms} "
               f"acc={acc:.4f} exact={exact:.4f} sens={[round(s, 3) for s in sens]}")
+    # Paired-space reference numbers (pin the rust layerwise/bench claims).
+    for family, m in GRID:
+        acc_pair = evaluate_assignments(qm, imgs, labels, [mirrored(family, m)] * 4)
+        acc_pos = evaluate_assignments(
+            qm, imgs, labels, [point(family, m, "pos", True)] * 4)
+        print(f"  paired  {family:<10} m={m}: mirror {acc_pair:.4f}  "
+              f"uniform-pos {acc_pos:.4f}")
+    # Mirror of rust greedy_paired_policy seeded from the perforated m=3
+    # mixed result: per layer (most tolerant first) descend the m ladder of
+    # mirrored pairings, keeping the first rung whose measured accuracy
+    # stays at or above the mixed policy's. The power guard (a pairing may
+    # not cost more than what the layer runs today) means exact layers
+    # accept any m while the already-approximate layer only accepts the
+    # power-neutral m_hi mirror.
+    family, m_hi = "perforated", 3
+    ms, base_acc, exact_acc2, sens = greedy_sim(qm, imgs, labels, family, m_hi, 0.8)
+    assigns = [point(family, m, "neg", True) if m > 0 else dict(EXACT_POINT)
+               for m in ms]
+    order = sorted(range(len(sens)), key=lambda i: -sens[i])
+    acc = base_acc
+    upgraded = []
+    for layer in order:
+        was_exact = assigns[layer] == EXACT_POINT
+        for m in range(m_hi, 0, -1):
+            if not was_exact and m != m_hi:
+                continue  # power guard: cheaper rungs only for exact layers
+            prev = assigns[layer]
+            assigns[layer] = mirrored(family, m)
+            trial = evaluate_assignments(qm, imgs, labels, assigns)
+            if trial >= base_acc:
+                acc = trial
+                upgraded.append((layer, m))
+                break
+            assigns[layer] = prev
+    print(f"greedy paired {family} m_hi={m_hi}: upgraded (layer, m) {upgraded} "
+          f"acc={acc:.4f} (mixed {base_acc:.4f}, exact {exact_acc2:.4f})")
 
 
 if __name__ == "__main__":

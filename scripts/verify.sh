@@ -21,9 +21,14 @@ cargo test -q
 # checked-in rust/tests/hermetic mini-artifacts, so a pass here proves the
 # engine still matches the python reference bit-for-bit without
 # `make artifacts`. (Included in `cargo test -q` above; run by name so a
-# silent skip regression is visible in the log.)
-echo "== tier-1: hermetic golden vectors =="
+# silent skip regression is visible in the log.) The paired tier and the
+# differential harness (every engine tier bit-identical on every
+# family × m × polarity point) run the same way.
+echo "== tier-1: hermetic golden vectors (incl. paired tier) =="
 cargo test -q -p cvapprox --test golden hermetic
+
+echo "== tier-1: differential engine harness =="
+cargo test -q -p cvapprox --test differential
 
 # The coordinator worker pool must behave identically at 1 worker and at a
 # small pool (bit-exact replies, batch fusion, clean shutdown, no panics).
@@ -66,6 +71,43 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     else
         echo "error: bench did not write BENCH_policy.json" >&2
         exit 1
+    fi
+
+    # Positive/negative pairing: the bench asserts the paired ladder search
+    # dominates-or-matches the mixed policy on the (power, loss) plane
+    # (strictly, on the hermetic set) and that pool replies are
+    # bit-identical to per-image paired forwards.
+    echo "== pairing smoke: paired_policy (quick budgets) =="
+    CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench paired_policy
+    if [ -f BENCH_paired.json ]; then
+        echo "== BENCH_paired.json written =="
+    else
+        echo "error: bench did not write BENCH_paired.json" >&2
+        exit 1
+    fi
+fi
+
+# Lint gates (after the correctness gates, so a style failure never masks a
+# real regression in the log): formatting must be rustfmt-clean and clippy
+# must be warning-free. CVAPPROX_SKIP_LINT=1 skips both (for toolchains
+# without the components).
+if [ "${CVAPPROX_SKIP_LINT:-0}" != "1" ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== lint: cargo fmt --check =="
+        cargo fmt --check
+    else
+        echo "warning: rustfmt not installed; skipping fmt gate" >&2
+    fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== lint: cargo clippy -D warnings =="
+        # The GEMM/epilogue plumbing passes layer geometry explicitly
+        # (rows/k/n/zp/bias/scratch/threads), so the arity and index-loop
+        # style lints are allowed as established idiom; everything else is
+        # denied.
+        cargo clippy --workspace --all-targets -- -D warnings \
+            -A clippy::too_many_arguments -A clippy::needless-range-loop
+    else
+        echo "warning: clippy not installed; skipping clippy gate" >&2
     fi
 fi
 
