@@ -9,11 +9,19 @@
 //! cost model + array occupancy into per-inference modeled energy (how the
 //! e2e example reports the paper's headline "45% power, <1% loss").
 //!
-//! * [`service`] — request queue + dynamic batcher + worker pool
-//! * [`metrics`] — latency/throughput/energy + per-worker accounting
+//! The serving policy is **hot-swappable**: every batch captures an
+//! epoch-stamped policy generation ([`crate::nn::PolicySwitch`]), and a
+//! [`PolicyInstaller`] (held by the [`crate::qos`] governor) can validate,
+//! warm and install new generations into a live pool without stalling it —
+//! in-flight batches complete on their captured epoch, replies carry it.
+//!
+//! * [`service`] — request queue + dynamic batcher + worker pool + hot swap
+//! * [`metrics`] — latency histogram/throughput/energy + per-worker accounting
 
 pub mod metrics;
 pub mod service;
 
-pub use metrics::{MetricsSnapshot, PowerModel};
-pub use service::{default_service_workers, InferenceService, ServiceConfig};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, PowerModel};
+pub use service::{
+    default_service_workers, InferenceService, PolicyInstaller, ServiceConfig,
+};

@@ -19,7 +19,7 @@
 //!   `CVAPPROX_SERVICE_POLICY`) fails at `start` — before any worker
 //!   spawns — so it can never poison a live pool.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -30,7 +30,11 @@ use anyhow::{bail, Context, Result};
 
 use super::metrics::{Metrics, MetricsSnapshot, PowerModel};
 use crate::approx::Family;
-use crate::nn::{Engine, ForwardOpts, LayerPolicy, Scratch, SharedPolicy, Tensor};
+use crate::nn::{
+    Engine, ForwardOpts, LayerPolicy, Model, PolicySwitch, Scratch, SharedPolicy,
+    StampedPolicy, Tensor,
+};
+use crate::qos::Telemetry;
 use crate::util::threadpool::default_workers;
 
 /// Worker-pool size: `CVAPPROX_SERVICE_WORKERS` when set to a positive
@@ -117,6 +121,12 @@ pub struct Reply {
     pub logits: Vec<f64>,
     pub top1: usize,
     pub latency: Duration,
+    /// Policy generation that served this request (see
+    /// [`crate::nn::PolicySwitch`]): the whole batch this request was fused
+    /// into ran under exactly this epoch's policy, so the reply is
+    /// bit-identical to a static forward under that generation — the
+    /// hot-swap consistency anchor (property-tested below).
+    pub epoch: u64,
 }
 
 struct Request {
@@ -179,6 +189,11 @@ impl SharedQueue {
         self.cv.notify_all();
     }
 
+    /// Current queue depth (governor telemetry; racy by nature).
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
     /// Answer every still-queued request with `Err(msg)` — used when the
     /// last worker dies with work left in the queue.
     fn drain_reject(&self, msg: &str) {
@@ -193,8 +208,10 @@ impl SharedQueue {
 
     /// Dynamic batcher: block for the first request (`None` once closed
     /// *and* drained — the worker-exit signal), then wait up to `timeout`
-    /// for the batch to fill to `max`.
-    fn pop_batch(&self, max: usize, timeout: Duration) -> Option<Vec<Request>> {
+    /// for the batch to fill to `max`. Also returns the queue depth left
+    /// behind (read under the same lock — the telemetry gauge costs no
+    /// extra acquisition on the hot path).
+    fn pop_batch(&self, max: usize, timeout: Duration) -> Option<(Vec<Request>, usize)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if !g.queue.is_empty() {
@@ -232,7 +249,8 @@ impl SharedQueue {
                 }
             }
         }
-        Some(batch)
+        let depth = g.queue.len();
+        Some((batch, depth))
     }
 }
 
@@ -257,13 +275,130 @@ impl Drop for AliveGuard {
     }
 }
 
+/// Everything a pool worker shares with its siblings (one `Arc` bundle per
+/// worker instead of a parameter per handle). The policy half is the
+/// hot-swap surface: `switch` is loaded once per batch, `powers` maps each
+/// installed epoch to its precomputed [`PowerModel`] so energy accounting
+/// follows the rung that actually served the batch.
+#[derive(Clone)]
+struct WorkerShared {
+    engine: Arc<Engine>,
+    queue: Arc<SharedQueue>,
+    metrics: Arc<Metrics>,
+    telemetry: Arc<Telemetry>,
+    switch: Arc<PolicySwitch>,
+    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+    /// Uniform fallback for generations installed with `policy == None`.
+    base_opts: ForwardOpts,
+    base_power: PowerModel,
+    alive: Arc<AtomicUsize>,
+}
+
+impl WorkerShared {
+    /// Resolve the forward configuration for one batch from a captured
+    /// generation. The CV-proxy sampler is attached here so every batch
+    /// feeds the shared telemetry regardless of rung.
+    fn resolve_opts(&self, stamped: &StampedPolicy) -> ForwardOpts {
+        let mut opts = match &stamped.policy {
+            Some(p) => ForwardOpts::with_policy(p.clone()),
+            None => self.base_opts.clone(),
+        };
+        opts.cv_proxy = Some(self.telemetry.cv_sampler());
+        opts
+    }
+
+    /// Power model for a captured generation, memoized per worker: epochs
+    /// change at governor-dwell cadence (hundreds of ms), so the shared
+    /// `powers` lock is only touched when the epoch actually moved — the
+    /// steady-state batch path never contends on it.
+    fn resolve_power<'c>(
+        &self,
+        stamped: &StampedPolicy,
+        cache: &'c mut (u64, PowerModel),
+    ) -> &'c PowerModel {
+        if cache.0 != stamped.epoch {
+            let power = self
+                .powers
+                .lock()
+                .unwrap()
+                .get(&stamped.epoch)
+                .cloned()
+                .unwrap_or_else(|| self.base_power.clone());
+            *cache = (stamped.epoch, power);
+        }
+        &cache.1
+    }
+}
+
+/// Cloneable hot-swap handle into a running pool: validates, **warms** and
+/// atomically installs per-layer policies without owning the service (what
+/// the QoS governor holds). Warming happens before the swap — the new
+/// generation's `LayerPlan`s are built into the shared cache while the pool
+/// still serves the old one, so a swap never stalls a worker on a plan
+/// build (steady-state swaps between previously seen rungs are pure cache
+/// hits).
+#[derive(Clone)]
+pub struct PolicyInstaller {
+    engine: Arc<Engine>,
+    switch: Arc<PolicySwitch>,
+    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+    n_array: u32,
+}
+
+/// Epochs of power-model history kept for in-flight batches; a governed
+/// service installs a new generation per dwell, so without a cap the map
+/// would grow without bound. A batch only ever looks up the epoch it
+/// captured at pop time, which is always among the most recent handful
+/// (evicted epochs fall back to the start generation's power model).
+const POWER_EPOCHS_KEPT: usize = 64;
+
+impl PolicyInstaller {
+    /// Install `policy` as the next generation; returns its epoch. Errors
+    /// (layer-count mismatch) leave the current generation serving.
+    pub fn install(&self, policy: SharedPolicy) -> Result<u64> {
+        policy.validate_for(&self.engine.model).context("install policy")?;
+        self.engine.prepare_plans_policy(&policy).context("install policy")?;
+        let power = PowerModel::for_policy(&policy, &self.engine.model, self.n_array);
+        // Publish under the powers lock so a worker that loads the fresh
+        // epoch and immediately looks up its power blocks on this lock
+        // instead of falling back to the base model.
+        let mut powers = self.powers.lock().unwrap();
+        let epoch = self.switch.install(Some(policy));
+        powers.insert(epoch, power);
+        while powers.len() > POWER_EPOCHS_KEPT {
+            let oldest = *powers.keys().min().expect("nonempty map");
+            powers.remove(&oldest);
+        }
+        Ok(epoch)
+    }
+
+    /// Epoch of the currently serving generation.
+    pub fn epoch(&self) -> u64 {
+        self.switch.epoch()
+    }
+
+    /// The served model (ladder validation).
+    pub fn model(&self) -> &Model {
+        &self.engine.model
+    }
+}
+
 /// A running inference service: a worker pool over one shared engine.
 pub struct InferenceService {
     queue: Arc<SharedQueue>,
     workers: Vec<JoinHandle<()>>,
     alive: Arc<AtomicUsize>,
+    engine: Arc<Engine>,
+    switch: Arc<PolicySwitch>,
+    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+    n_array: u32,
     pub metrics: Arc<Metrics>,
+    /// Power model of the generation the service STARTED with (epoch 0);
+    /// per-request energy accounting follows the serving epoch.
     pub power: PowerModel,
+    /// Live serving telemetry (latency ring, queue depth, batch occupancy,
+    /// CV error proxy) — what the QoS governor polls.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl InferenceService {
@@ -280,12 +415,13 @@ impl InferenceService {
         )?;
         let metrics = Arc::new(Metrics::new());
         let queue = Arc::new(SharedQueue::new());
+        let telemetry = Arc::new(Telemetry::new(engine.model.mac_layers()));
         // Warm the weight-side plans once, before any worker spawns: the
         // pool shares one PlanCache through the Arc'd engine, so no request
         // on any worker pays the one-time build. With a policy, each layer
         // is warmed at its own point — and the layer-count validation
         // happens here, turning a bad policy into a start-time `Err`.
-        let (power, opts) = match &policy {
+        let (power, base_opts) = match &policy {
             Some(p) => {
                 p.validate_for(&engine.model).context("service policy")?;
                 engine.prepare_plans_policy(p).context("service policy")?;
@@ -302,6 +438,10 @@ impl InferenceService {
                 )
             }
         };
+        // Generation 0 is the start configuration; its power model seeds
+        // the epoch → power map the workers consult per batch.
+        let switch = Arc::new(PolicySwitch::new(policy));
+        let powers = Arc::new(Mutex::new(HashMap::from([(0u64, power.clone())])));
         // Anchor the throughput clock at "service ready" — after the plan
         // warm-up, so the one-time build does not deflate throughput /
         // occupancy, but before any request can complete, so even a
@@ -312,24 +452,73 @@ impl InferenceService {
         let engine = Arc::new(engine);
         let n_workers = cfg.workers.max(1);
         let alive = Arc::new(AtomicUsize::new(n_workers));
+        let shared = WorkerShared {
+            engine: engine.clone(),
+            queue: queue.clone(),
+            metrics: metrics.clone(),
+            telemetry: telemetry.clone(),
+            switch: switch.clone(),
+            powers: powers.clone(),
+            base_opts,
+            base_power: power.clone(),
+            alive: alive.clone(),
+        };
         let workers = (0..n_workers)
             .map(|id| {
-                let engine = engine.clone();
+                let shared = shared.clone();
                 let cfg = cfg.clone();
-                let opts = opts.clone();
-                let queue = queue.clone();
-                let metrics = metrics.clone();
-                let power = power.clone();
-                let alive = alive.clone();
                 std::thread::Builder::new()
                     .name(format!("cvapprox-worker-{id}"))
-                    .spawn(move || {
-                        worker_loop(id, engine, cfg, opts, queue, metrics, power, alive)
-                    })
+                    .spawn(move || worker_loop(id, shared, cfg))
                     .expect("spawn service worker")
             })
             .collect();
-        Ok(InferenceService { queue, workers, alive, metrics, power })
+        Ok(InferenceService {
+            queue,
+            workers,
+            alive,
+            engine,
+            switch,
+            powers,
+            n_array: cfg.n_array,
+            metrics,
+            power,
+            telemetry,
+        })
+    }
+
+    /// Hot-swap handle for governors/tests (see [`PolicyInstaller`]).
+    pub fn installer(&self) -> PolicyInstaller {
+        PolicyInstaller {
+            engine: self.engine.clone(),
+            switch: self.switch.clone(),
+            powers: self.powers.clone(),
+            n_array: self.n_array,
+        }
+    }
+
+    /// Validate, warm and atomically install a new per-layer policy; new
+    /// batches serve it immediately, in-flight batches complete on their
+    /// captured generation. Returns the new epoch.
+    pub fn install_policy(&self, policy: SharedPolicy) -> Result<u64> {
+        self.installer().install(policy)
+    }
+
+    /// Epoch of the currently serving policy generation.
+    pub fn current_epoch(&self) -> u64 {
+        self.switch.epoch()
+    }
+
+    /// Live queue-depth probe the QoS governor polls at decision time: a
+    /// saturated pool whose in-flight batches outlast a whole decision
+    /// window completes nothing — indistinguishable from idle on the
+    /// drained telemetry alone — but its backlog is visible here (queued
+    /// work) and in `Telemetry::in_flight` (popped work), and together
+    /// they keep the governor from "recovering" toward exact in the middle
+    /// of that overload. One cheap lock per decision, not per batch.
+    pub fn depth_probe(&self) -> Arc<dyn Fn() -> usize + Send + Sync> {
+        let queue = self.queue.clone();
+        Arc::new(move || queue.len())
     }
 
     /// Submit an image; returns a handle to wait on, or `Err` when the
@@ -381,28 +570,20 @@ impl Drop for InferenceService {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    worker_id: usize,
-    engine: Arc<Engine>,
-    cfg: ServiceConfig,
-    opts: ForwardOpts,
-    queue: Arc<SharedQueue>,
-    metrics: Arc<Metrics>,
-    power: PowerModel,
-    alive: Arc<AtomicUsize>,
-) {
-    let _guard = AliveGuard { alive, queue: queue.clone() };
-    let macs = engine.model.macs();
-    let input_shape = engine.model.input_shape();
+fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
+    let _guard = AliveGuard { alive: shared.alive.clone(), queue: shared.queue.clone() };
+    let macs = shared.engine.model.macs();
+    let input_shape = shared.engine.model.input_shape();
     // One scratch arena per worker, pre-grown to the model's worst-case
     // GEMM footprint at this batch size, so steady-state batches allocate
     // nothing on the GEMM path.
     let batch_cap = cfg.batch_size.max(1);
     let mut scratch = Scratch::new();
-    let (panel, acc) = engine.model.max_gemm_footprint();
+    let (panel, acc) = shared.engine.model.max_gemm_footprint();
     scratch.reserve(panel * batch_cap, acc * batch_cap);
-    while let Some(batch) = queue.pop_batch(batch_cap, cfg.batch_timeout) {
+    // Per-worker (epoch → power) memo: epoch 0 is the start generation.
+    let mut power_cache: (u64, PowerModel) = (0, shared.base_power.clone());
+    while let Some((batch, depth)) = shared.queue.pop_batch(batch_cap, cfg.batch_timeout) {
         if batch.is_empty() {
             continue;
         }
@@ -423,23 +604,42 @@ fn worker_loop(
         if good.is_empty() {
             continue;
         }
+        // Capture the policy generation ONCE per batch: the whole batch
+        // runs under this epoch's policy (a concurrent install affects only
+        // later batches), which is exactly the hot-swap consistency
+        // invariant the property tests pin.
+        let stamped = shared.switch.load();
+        let opts = shared.resolve_opts(&stamped);
+        let power = shared.resolve_power(&stamped, &mut power_cache).clone();
+        // Raise the in-flight gauge before the forward: requests inside an
+        // executing batch are visible to neither the queue depth nor the
+        // completion count, and the governor must not mistake a pool
+        // saturated by long batches for an idle one.
+        shared.telemetry.batch_started(good.len());
         let t0 = Instant::now();
         let imgs: Vec<&Tensor> = good.iter().map(|r| &r.image).collect();
-        let result = engine.forward_batch_with_scratch(&imgs, &opts, &mut scratch);
+        let result = shared.engine.forward_batch_with_scratch(&imgs, &opts, &mut scratch);
         drop(imgs);
-        metrics.record_batch(worker_id, good.len(), t0.elapsed());
+        shared.metrics.record_batch(worker_id, good.len(), t0.elapsed());
+        shared.telemetry.record_batch(good.len(), batch_cap, depth);
         match result {
             Ok(all_logits) => {
                 for (req, logits) in good.into_iter().zip(all_logits) {
                     let queue_wait = t0.saturating_duration_since(req.enqueued);
                     let latency = req.enqueued.elapsed();
-                    metrics.record(latency, queue_wait, macs, &power);
+                    shared.metrics.record(latency, queue_wait, macs, &power);
+                    shared.telemetry.record_latency(latency);
                     let reply = if !logits.is_empty()
                         && logits.iter().all(|v| v.is_nan())
                     {
                         Err("all logits are NaN (non-finite model output)".to_string())
                     } else {
-                        Ok(Reply { top1: argmax(&logits), logits, latency })
+                        Ok(Reply {
+                            top1: argmax(&logits),
+                            logits,
+                            latency,
+                            epoch: stamped.epoch,
+                        })
                     };
                     let _ = req.respond.send(reply);
                 }
@@ -448,7 +648,9 @@ fn worker_loop(
                 let msg = format!("batched forward failed: {e:#}");
                 for req in good {
                     let queue_wait = t0.saturating_duration_since(req.enqueued);
-                    metrics.record(req.enqueued.elapsed(), queue_wait, macs, &power);
+                    let latency = req.enqueued.elapsed();
+                    shared.metrics.record(latency, queue_wait, macs, &power);
+                    shared.telemetry.record_latency(latency);
                     let _ = req.respond.send(Err(msg.clone()));
                 }
             }
@@ -843,6 +1045,190 @@ mod tests {
         );
         let _ = std::fs::remove_file(&ok_path);
         let _ = std::fs::remove_file(&bad_path);
+    }
+
+    #[test]
+    fn hot_swap_replies_bit_identical_under_concurrent_random_swaps() {
+        // The hot-swap consistency property: while a swapper thread installs
+        // random ladder rungs into the live pool, every reply must be
+        // bit-identical to a single-policy forward under the rung its epoch
+        // names — i.e. no batch ever mixes two policies, and the epoch
+        // stamp is never wrong.
+        let model = testutil::tiny_model(); // 2 MAC layers
+        let rungs: Vec<SharedPolicy> = vec![
+            Arc::new(LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap()),
+            Arc::new(LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap()),
+            Arc::new(LayerPolicy::paired_uniform(Family::Perforated, 2, true, 2).unwrap()),
+            Arc::new(LayerPolicy::uniform(Family::Truncated, 6, true, 2).unwrap()),
+        ];
+        let svc = InferenceService::start(
+            Engine::new(model.clone()),
+            ServiceConfig {
+                workers: 3,
+                batch_size: 4,
+                batch_timeout: Duration::from_micros(500),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // epoch -> rung index; epoch 0 is the start config (uniform exact),
+        // which rungs[0] reproduces bit-for-bit.
+        let epoch_map: Mutex<std::collections::HashMap<u64, usize>> =
+            Mutex::new(std::collections::HashMap::from([(0u64, 0usize)]));
+        let reference = Engine::new(model);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let clients = 4usize;
+        let per_client = 40usize;
+        let mut seen_epochs = std::collections::HashSet::new();
+        std::thread::scope(|s| {
+            // Swapper: random-ish walk over the rungs, installing under the
+            // epoch_map lock so clients can always resolve a reply's epoch.
+            {
+                let svc = &svc;
+                let epoch_map = &epoch_map;
+                let rungs = &rungs;
+                let stop = stop.clone();
+                s.spawn(move || {
+                    let mut i = 1usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        let r = (i * 7 + 3) % rungs.len();
+                        let mut map = epoch_map.lock().unwrap();
+                        let epoch = svc.install_policy(rungs[r].clone()).unwrap();
+                        map.insert(epoch, r);
+                        drop(map);
+                        i += 1;
+                        std::thread::sleep(Duration::from_micros(300));
+                    }
+                });
+            }
+            let mut handles = Vec::new();
+            for t in 0..clients {
+                let svc = &svc;
+                let reference = &reference;
+                let epoch_map = &epoch_map;
+                let rungs = &rungs;
+                handles.push(s.spawn(move || {
+                    let mut epochs = Vec::new();
+                    for i in 0..per_client {
+                        let img = testutil::tiny_image((t * 1000 + i) as u64);
+                        let reply = svc.infer(img.clone()).unwrap();
+                        let rung = {
+                            // The swapper publishes the mapping under the
+                            // same lock it installs under, so the reply's
+                            // epoch is always resolvable.
+                            let map = epoch_map.lock().unwrap();
+                            *map.get(&reply.epoch).unwrap_or_else(|| {
+                                panic!("reply epoch {} not in map", reply.epoch)
+                            })
+                        };
+                        let opts = ForwardOpts::with_policy(rungs[rung].clone());
+                        let want = reference.forward(&img, &opts).unwrap();
+                        assert_eq!(
+                            reply.logits, want,
+                            "client {t} img {i}: reply (epoch {}, rung {rung}) \
+                             not bit-identical to its rung's static forward",
+                            reply.epoch
+                        );
+                        epochs.push(reply.epoch);
+                    }
+                    epochs
+                }));
+            }
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().unwrap());
+            }
+            stop.store(true, Ordering::SeqCst);
+            seen_epochs.extend(all);
+        });
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, (clients * per_client) as u64);
+        assert!(
+            seen_epochs.len() >= 2,
+            "swaps never landed mid-traffic (epochs {seen_epochs:?})"
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_queue_while_policies_step() {
+        // Satellite: shutdown must drain every queued request to an Ok
+        // reply even while a stepping thread keeps hot-swapping policies.
+        let model = testutil::tiny_model();
+        let rungs: Vec<SharedPolicy> = vec![
+            Arc::new(LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap()),
+            Arc::new(LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap()),
+            Arc::new(LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap()),
+        ];
+        let svc = InferenceService::start(
+            Engine::new(model),
+            ServiceConfig {
+                workers: 2,
+                batch_size: 4,
+                batch_timeout: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let installer = svc.installer();
+        let pendings: Vec<Pending> = (0..64)
+            .map(|i| svc.submit(testutil::tiny_image(i)).unwrap())
+            .collect();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stepper = {
+            let stop = stop.clone();
+            let rungs = rungs.clone();
+            std::thread::spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    installer.install(rungs[i % rungs.len()].clone()).unwrap();
+                    i += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                i
+            })
+        };
+        let snap = svc.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        let steps = stepper.join().unwrap();
+        assert_eq!(snap.completed, 64, "shutdown must drain the whole queue");
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        assert!(steps >= 1, "the stepper never stepped");
+    }
+
+    #[test]
+    fn install_policy_swaps_between_requests_and_rejects_bad_policies() {
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let svc = InferenceService::start(
+            Engine::new(model),
+            ServiceConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(svc.current_epoch(), 0);
+        let img = testutil::tiny_image(11);
+        let r0 = svc.infer(img.clone()).unwrap();
+        assert_eq!(r0.epoch, 0);
+        assert_eq!(r0.logits, reference.forward(&img, &ForwardOpts::exact()).unwrap());
+        // Install an approximate policy; subsequent replies serve it.
+        let p = Arc::new(LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap());
+        let epoch = svc.install_policy(p.clone()).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(svc.current_epoch(), 1);
+        let r1 = svc.infer(img.clone()).unwrap();
+        assert_eq!(r1.epoch, 1);
+        assert_eq!(r1.logits, reference.forward(&img, &ForwardOpts::with_policy(p)).unwrap());
+        // A mismatched policy is rejected and leaves the pool serving.
+        let bad = Arc::new(LayerPolicy::uniform(Family::Perforated, 2, true, 5).unwrap());
+        let err = svc.install_policy(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("MAC layers"), "{err:#}");
+        assert_eq!(svc.current_epoch(), 1, "failed install must not bump the epoch");
+        assert!(svc.infer(testutil::tiny_image(12)).is_ok());
+        // Energy accounting follows the serving rung: the approximate rung
+        // must have pulled the blended energy below exact.
+        let snap = svc.shutdown();
+        assert!(snap.energy_vs_exact < 1.0, "{}", snap.energy_vs_exact);
     }
 
     #[test]

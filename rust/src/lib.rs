@@ -16,6 +16,7 @@
 //! * [`datasets`] — synth10/synth100 binary loaders
 //! * [`runtime`] — PJRT client running the AOT-compiled XLA tile kernels
 //! * [`coordinator`] — batching inference service + power/latency metrics
+//! * [`qos`] — adaptive QoS: policy ladders, telemetry, hot-swap governor
 //! * [`report`] — paper-style table/figure renderers
 //!
 //! Python (JAX + Pallas) exists only on the build path (`make artifacts`);
@@ -27,6 +28,7 @@ pub mod cv;
 pub mod datasets;
 pub mod hw;
 pub mod nn;
+pub mod qos;
 pub mod report;
 pub mod runtime;
 pub mod systolic;

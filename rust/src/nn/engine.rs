@@ -7,6 +7,7 @@
 //! that routes every MAC GEMM through the cycle-level simulator and returns
 //! aggregate toggle statistics.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -43,6 +44,13 @@ pub struct ForwardOpts {
     /// against the model's layer count at forward entry — a mismatched
     /// policy returns `Err` instead of running a wrong configuration.
     pub policy: Option<SharedPolicy>,
+    /// Optional error-proxy sink: when set, every CV-running MAC layer
+    /// samples mean |V| / |G*| magnitudes out of the epilogue into the
+    /// sampler (V is already computed there, so the probe is a handful of
+    /// reads per GEMM). Strictly read-only on the accumulator — outputs
+    /// are bit-identical with or without a sampler attached (tested). The
+    /// QoS telemetry attaches one shared sampler across the worker pool.
+    pub cv_proxy: Option<Arc<CvProxySampler>>,
 }
 
 impl Default for ForwardOpts {
@@ -54,6 +62,99 @@ impl Default for ForwardOpts {
             kind: GemmKind::Identity,
             m_per_layer: None,
             policy: None,
+            cv_proxy: None,
+        }
+    }
+}
+
+/// Per-layer accumulator cell of a [`CvProxySampler`] (all-atomic: workers
+/// record lock-free, the governor drains with `swap`).
+#[derive(Debug, Default)]
+struct ProxyCell {
+    /// Σ |V| over the sampled epilogue entries.
+    num: AtomicU64,
+    /// Σ |G*| (final integer accumulator magnitude) over the same entries.
+    den: AtomicU64,
+    /// Sample count.
+    n: AtomicU64,
+}
+
+/// Lock-free per-layer CV-magnitude error proxy: mean |V| / |G*| sampled
+/// from the CV epilogue of each approximate layer. Because the control
+/// variate V = C·ΣX + C₀ is the *online estimate of the accumulated
+/// multiplier error* (the quantity the MAC⁺ column cancels), its magnitude
+/// relative to the final accumulator G* is a free per-inference error
+/// signal: it grows with the approximation level m and with how much error
+/// the live activations actually excite — exactly what an adaptive
+/// governor needs to bound, without any labeled data at serving time.
+///
+/// One sampler is shared across a whole worker pool (attach via
+/// [`ForwardOpts::cv_proxy`]); `drain` returns the window since the last
+/// drain and resets, so a polling governor sees sliding-window ratios.
+/// Exact layers record nothing (their error is identically zero).
+#[derive(Debug)]
+pub struct CvProxySampler {
+    layers: Vec<ProxyCell>,
+}
+
+/// One drained proxy window.
+#[derive(Clone, Debug)]
+pub struct CvProxyWindow {
+    /// Mean |V|/|G*| per MAC layer (0.0 for layers that recorded nothing —
+    /// exact layers, or layers outside the sampled batches).
+    pub per_layer: Vec<f64>,
+    /// Pooled ratio across every layer (Σ|V| / Σ|G*| over all samples).
+    pub aggregate: f64,
+    /// Total epilogue entries sampled in this window.
+    pub samples: u64,
+}
+
+impl CvProxySampler {
+    /// Sampler for a model with `n_layers` MAC layers.
+    pub fn new(n_layers: usize) -> CvProxySampler {
+        CvProxySampler {
+            layers: (0..n_layers).map(|_| ProxyCell::default()).collect(),
+        }
+    }
+
+    /// Number of per-layer cells.
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Accumulate `n` sampled entries for MAC layer `layer` (out-of-range
+    /// layers are ignored — the sampler stays safe across model mixups).
+    pub fn record(&self, layer: usize, abs_v: u64, abs_acc: u64, n: u64) {
+        if let Some(cell) = self.layers.get(layer) {
+            cell.num.fetch_add(abs_v, Ordering::Relaxed);
+            cell.den.fetch_add(abs_acc, Ordering::Relaxed);
+            cell.n.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Take the window accumulated since the last drain and reset it.
+    pub fn drain(&self) -> CvProxyWindow {
+        let (mut tn, mut td, mut ts) = (0u64, 0u64, 0u64);
+        let per_layer = self
+            .layers
+            .iter()
+            .map(|c| {
+                let num = c.num.swap(0, Ordering::Relaxed);
+                let den = c.den.swap(0, Ordering::Relaxed);
+                ts += c.n.swap(0, Ordering::Relaxed);
+                tn += num;
+                td += den;
+                if den > 0 {
+                    num as f64 / den as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        CvProxyWindow {
+            per_layer,
+            aggregate: if td > 0 { tn as f64 / td as f64 } else { 0.0 },
+            samples: ts,
         }
     }
 }
@@ -492,6 +593,7 @@ impl Engine {
             // transient failure does not throw away the grown buffer.
             scratch.a_cols = a_cols;
             gemm_status?;
+            self.sample_cv_proxy(opts, &exec, mac_idx, 0, nout, batch, scratch);
             let mut res = Vec::with_capacity(batch);
             for b in 0..batch {
                 let mut data = Vec::with_capacity(nout);
@@ -536,6 +638,7 @@ impl Engine {
             if gemm_status.is_err() {
                 break;
             }
+            self.sample_cv_proxy(opts, &exec, mac_idx, row0, cpg_out, n_total, scratch);
             for f in 0..cpg_out {
                 let ch = gi * cpg_out + f;
                 for (b, out) in res.iter_mut().enumerate() {
@@ -668,6 +771,9 @@ impl Engine {
                 &exec, 0, &wrec.w_q, &x.data, nout, k, 1, &wrec.b_q, systolic,
                 toggles, scratch, configured_workers(),
             )?;
+            if !systolic {
+                self.sample_cv_proxy(opts, &exec, mac_idx, 0, nout, 1, scratch);
+            }
             let mut data = Vec::with_capacity(nout);
             for &a in scratch.acc.iter() {
                 let mut q = requantize(a, mult, zp_out);
@@ -703,6 +809,9 @@ impl Engine {
             );
             if gemm_status.is_err() {
                 break;
+            }
+            if !systolic {
+                self.sample_cv_proxy(opts, &exec, mac_idx, row0, cpg_out, n_cols, scratch);
             }
             for f in 0..cpg_out {
                 let ch = gi * cpg_out + f;
@@ -763,6 +872,75 @@ impl Engine {
                 });
                 LayerExec::Paired { pair, zp_w, zp_a, plan }
             }
+        }
+    }
+
+    /// Sample the CV-magnitude error proxy out of the just-run epilogue:
+    /// mean |V| / |G*| over a few (filter, column) probes, accumulated into
+    /// `opts.cv_proxy` under this layer's MAC ordinal. Reads
+    /// `scratch.sum_x`/`sum_x2` (the per-column ΣX the epilogue already
+    /// computed) and `scratch.acc`; never writes, so the forward result is
+    /// bit-identical with or without a sampler. Only valid right after a
+    /// native (non-systolic, non-PJRT) [`Engine::dispatch_gemm`] — those
+    /// backends do not populate the scratch sums.
+    fn sample_cv_proxy(
+        &self,
+        opts: &ForwardOpts,
+        exec: &LayerExec,
+        mac_idx: usize,
+        row0: usize,
+        rows: usize,
+        n: usize,
+        scratch: &Scratch,
+    ) {
+        const MAX_ROWS: usize = 2;
+        const MAX_COLS: usize = 8;
+        let Some(proxy) = &opts.cv_proxy else { return };
+        if self.pjrt.is_some() || rows == 0 || n == 0 {
+            return;
+        }
+        let col_step = n.div_ceil(MAX_COLS).max(1);
+        let (mut num, mut den, mut cnt) = (0u64, 0u64, 0u64);
+        match exec {
+            LayerExec::Uniform { ctx, plan } => {
+                if !(ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0) {
+                    return;
+                }
+                for f in 0..rows.min(MAX_ROWS) {
+                    let c = &plan.consts[row0 + f];
+                    for p in (0..n).step_by(col_step) {
+                        num += cv::v_term(c, scratch.sum_x[p]).unsigned_abs();
+                        den += scratch.acc[f * n + p].unsigned_abs().max(1);
+                        cnt += 1;
+                    }
+                }
+            }
+            LayerExec::Paired { pair, plan, .. } => {
+                let even = pair.even.normalized();
+                let odd = pair.odd.normalized();
+                let cv_even = even.use_cv && even != LayerPoint::EXACT;
+                let cv_odd = odd.use_cv && odd != LayerPoint::EXACT;
+                if !cv_even && !cv_odd {
+                    return;
+                }
+                for f in 0..rows.min(MAX_ROWS) {
+                    for p in (0..n).step_by(col_step) {
+                        if cv_even {
+                            num += cv::v_term(&plan.even.consts[row0 + f], scratch.sum_x[p])
+                                .unsigned_abs();
+                        }
+                        if cv_odd {
+                            num += cv::v_term(&plan.odd.consts[row0 + f], scratch.sum_x2[p])
+                                .unsigned_abs();
+                        }
+                        den += scratch.acc[f * n + p].unsigned_abs().max(1);
+                        cnt += 1;
+                    }
+                }
+            }
+        }
+        if cnt > 0 {
+            proxy.record(mac_idx, num, den, cnt);
         }
     }
 
@@ -1338,6 +1516,57 @@ mod tests {
     fn toy_image() -> Tensor {
         let mut rng = Rng::new(0x1136);
         Tensor::from_data(4, 4, 3, (0..4 * 4 * 3).map(|_| rng.u8()).collect())
+    }
+
+    #[test]
+    fn cv_proxy_sampler_tracks_error_magnitude_without_changing_outputs() {
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let mut ratios = Vec::new();
+        for m in [1u32, 3] {
+            let proxy = Arc::new(CvProxySampler::new(engine.model.mac_layers()));
+            let mut opts = ForwardOpts::approx(Family::Perforated, m, true);
+            opts.cv_proxy = Some(proxy.clone());
+            let with = engine.forward(&img, &opts).unwrap();
+            let without = engine
+                .forward(&img, &ForwardOpts::approx(Family::Perforated, m, true))
+                .unwrap();
+            assert_eq!(with, without, "sampling must not change outputs");
+            let w = proxy.drain();
+            assert!(w.samples > 0, "m={m} recorded no samples");
+            assert!(w.aggregate > 0.0);
+            assert_eq!(w.per_layer.len(), 2);
+            assert!(w.per_layer.iter().any(|&r| r > 0.0));
+            ratios.push(w.aggregate);
+            // drain is a window: a second drain with no traffic is empty.
+            let empty = proxy.drain();
+            assert_eq!(empty.samples, 0);
+            assert_eq!(empty.aggregate, 0.0);
+        }
+        assert!(
+            ratios[1] > ratios[0],
+            "|V|/|G*| proxy must grow with approximation level: {ratios:?}"
+        );
+        // Exact forwards record nothing (their error is identically zero).
+        let proxy = Arc::new(CvProxySampler::new(2));
+        let mut opts = ForwardOpts::exact();
+        opts.cv_proxy = Some(proxy.clone());
+        engine.forward(&img, &opts).unwrap();
+        assert_eq!(proxy.drain().samples, 0);
+        // The batched path and paired policies feed the same sampler.
+        let policy = Arc::new(
+            crate::nn::LayerPolicy::paired_uniform(Family::Perforated, 2, true, 2)
+                .unwrap(),
+        );
+        let proxy = Arc::new(CvProxySampler::new(2));
+        let mut opts = ForwardOpts::with_policy(policy.clone());
+        opts.cv_proxy = Some(proxy.clone());
+        let imgs = [toy_image(), toy_image()];
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let got = engine.forward_batch(&refs, &opts).unwrap();
+        let want = engine.forward(&imgs[0], &ForwardOpts::with_policy(policy)).unwrap();
+        assert_eq!(got[0], want, "paired batched forward unchanged by sampler");
+        assert!(proxy.drain().samples > 0, "paired layers sample too");
     }
 
     #[test]

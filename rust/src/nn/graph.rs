@@ -137,6 +137,17 @@ impl Model {
             .collect()
     }
 
+    /// Reduction length (`k_dim`) of each MAC layer, in the same topological
+    /// order as `mac_node_indices` — what the paired power estimate weighs
+    /// its even/odd partitions by (an odd k gives the even partition
+    /// `ceil(k/2)` of the layer's MACs, not half).
+    pub fn mac_layer_kdims(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.weights.as_ref().map(|w| w.k_dim))
+            .collect()
+    }
+
     /// Node indices of the MAC layers in topological order — the key space
     /// of the engine's [`crate::nn::plan::PlanCache`] (plan `i` of a
     /// layerwise config belongs to node `mac_node_indices()[i]`).

@@ -21,8 +21,11 @@ pub mod policy;
 #[cfg(test)]
 pub(crate) mod testutil;
 
-pub use engine::{Engine, ForwardOpts};
+pub use engine::{CvProxySampler, CvProxyWindow, Engine, ForwardOpts};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
 pub use plan::{LayerPlan, PairedPlan, Scratch};
-pub use policy::{LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, SharedPolicy};
+pub use policy::{
+    LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, PolicySwitch, SharedPolicy,
+    StampedPolicy,
+};

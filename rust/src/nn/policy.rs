@@ -474,11 +474,14 @@ impl LayerPolicy {
     /// MAC-weighted normalized power of this policy on `model` at array
     /// size `n_array`: approximate layers cost their family's
     /// `array_cost(m).power_norm`, exact layers cost 1.0, and a paired
-    /// layer averages its two halves (each polarity column population
-    /// handles half the MACs; `Pos` variants are costed at their `Neg`
-    /// point — the round-up compensation is a handful of gates against the
-    /// pruned columns, see README §Pairing) — the serving metrics'
-    /// estimated-power quantity (and the layerwise report's).
+    /// layer blends its two halves **by partition population** — the even
+    /// half owns `ceil(k/2)` of the layer's reduction indices (hence of its
+    /// MACs), the odd half `floor(k/2)`, so an odd reduction length weighs
+    /// the even point heavier instead of the naive 50/50 split. (`Pos`
+    /// variants are costed at their `Neg` point — the round-up compensation
+    /// is a handful of gates against the pruned columns, see README
+    /// §Pairing.) This is the serving metrics' estimated-power quantity
+    /// (and the layerwise report's, and the QoS ladder's per-rung cost).
     pub fn power_norm(&self, model: &Model, n_array: u32) -> f64 {
         fn point_power(p: LayerPoint, n_array: u32) -> f64 {
             if p == LayerPoint::EXACT {
@@ -488,6 +491,7 @@ impl LayerPolicy {
             }
         }
         let macs = model.mac_layer_macs();
+        let kdims = model.mac_layer_kdims();
         debug_assert_eq!(macs.len(), self.layers.len(), "call validate_for first");
         let total: u64 = macs.iter().sum();
         if total == 0 {
@@ -495,13 +499,18 @@ impl LayerPolicy {
         }
         let weighted: f64 = self
             .assignments()
-            .zip(&macs)
-            .map(|(a, &w)| {
+            .zip(macs.iter().zip(&kdims))
+            .map(|(a, (&w, &k))| {
                 let pn = match a {
                     LayerAssignment::Point(p) => point_power(p, n_array),
                     LayerAssignment::Paired(pp) => {
-                        0.5 * (point_power(pp.even, n_array)
-                            + point_power(pp.odd, n_array))
+                        // Even columns are reduction indices 0, 2, 4, … —
+                        // ceil(k/2) of the k MACs each output accumulates.
+                        let k = k.max(1) as f64;
+                        let k_even = (k / 2.0).ceil();
+                        (k_even * point_power(pp.even, n_array)
+                            + (k - k_even) * point_power(pp.odd, n_array))
+                            / k
                     }
                 };
                 pn * w as f64
@@ -622,6 +631,60 @@ impl LayerPolicy {
 /// Shared-ownership alias — the engine, coordinator and every worker hold
 /// the same immutable policy.
 pub type SharedPolicy = Arc<LayerPolicy>;
+
+/// An epoch-stamped policy generation: what a serving worker captures at
+/// batch start. `policy == None` means "run the service's uniform
+/// (family, m, use_cv) configuration". Epochs are totally ordered and
+/// unique per [`PolicySwitch`], so a reply stamped with `epoch` identifies
+/// exactly one installed generation — the anchor for the hot-swap
+/// bit-identity property (no batch ever mixes two generations: the stamp
+/// and the policy travel together in one `Arc`).
+#[derive(Clone, Debug)]
+pub struct StampedPolicy {
+    pub epoch: u64,
+    pub policy: Option<SharedPolicy>,
+}
+
+/// Hot-swappable policy slot shared by a worker pool and its governor.
+///
+/// `load` is what every worker calls once per batch: it clones the current
+/// `Arc` under a Mutex held for nanoseconds (no allocation, no wait on
+/// installs beyond that clone), so a swap never stalls the pool — in-flight
+/// batches complete on the stamped generation they captured, new batches
+/// pick up the new one. `install` bumps the epoch and publishes atomically
+/// (same lock), so no two generations ever share a stamp.
+#[derive(Debug)]
+pub struct PolicySwitch {
+    cur: std::sync::Mutex<Arc<StampedPolicy>>,
+}
+
+impl PolicySwitch {
+    /// Slot holding generation 0 (the configuration the service started
+    /// with).
+    pub fn new(policy: Option<SharedPolicy>) -> PolicySwitch {
+        PolicySwitch {
+            cur: std::sync::Mutex::new(Arc::new(StampedPolicy { epoch: 0, policy })),
+        }
+    }
+
+    /// The current stamped generation (workers call this per batch).
+    pub fn load(&self) -> Arc<StampedPolicy> {
+        self.cur.lock().unwrap().clone()
+    }
+
+    /// Publish a new generation; returns its (fresh, unique) epoch.
+    pub fn install(&self, policy: Option<SharedPolicy>) -> u64 {
+        let mut g = self.cur.lock().unwrap();
+        let epoch = g.epoch + 1;
+        *g = Arc::new(StampedPolicy { epoch, policy });
+        epoch
+    }
+
+    /// Epoch of the current generation.
+    pub fn epoch(&self) -> u64 {
+        self.cur.lock().unwrap().epoch
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -898,13 +961,17 @@ mod tests {
     fn paired_power_averages_the_halves() {
         let model = testutil::tiny_model();
         // A mirrored pairing costs exactly the uniform point (both halves
-        // carry the same (family, m) cost).
+        // carry the same (family, m) cost, so the partition weighting
+        // cancels).
         let uni = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
         let pair = LayerPolicy::paired_uniform(Family::Perforated, 3, true, 2).unwrap();
         let p_uni = uni.power_norm(&model, 64);
         let p_pair = pair.power_norm(&model, 64);
         assert!((p_uni - p_pair).abs() < 1e-12, "{p_uni} vs {p_pair}");
-        // A half-exact pairing sits exactly between exact and the point.
+        // A half-exact pairing blends by partition population: the even
+        // (approximate) half owns ceil(k/2) of each layer's k reduction
+        // indices — 14/27 for tiny_model's conv, 144/288 for its dense —
+        // not a flat one half.
         let half = LayerPolicy::from_assignments(vec![
             LayerAssignment::Paired(PairedPoint::new(
                 LayerPoint::new(Family::Perforated, 3, true),
@@ -914,7 +981,128 @@ mod tests {
         ])
         .unwrap();
         let p_half = half.power_norm(&model, 64);
-        assert!((p_half - 0.5 * (p_uni + 1.0)).abs() < 1e-12);
+        let cost = crate::hw::array_cost(Family::Perforated, 3, 64).power_norm;
+        let macs = model.mac_layer_macs();
+        let kdims = model.mac_layer_kdims();
+        let want: f64 = macs
+            .iter()
+            .zip(&kdims)
+            .map(|(&w, &k)| {
+                let ke = k.div_ceil(2) as f64;
+                w as f64 * (ke * cost + (k as f64 - ke)) / k as f64
+            })
+            .sum::<f64>()
+            / macs.iter().sum::<u64>() as f64;
+        assert!((p_half - want).abs() < 1e-12, "{p_half} vs {want}");
+        // tiny_model's conv k = 27 is odd, so the blend must sit strictly
+        // on the approximate side of the naive 50/50 split.
+        assert!(kdims.contains(&27), "test premise: odd-k layer present");
+        let naive: f64 = macs
+            .iter()
+            .map(|&w| w as f64 * 0.5 * (cost + 1.0))
+            .sum::<f64>()
+            / macs.iter().sum::<u64>() as f64;
+        assert!(p_half < naive, "{p_half} !< naive {naive}");
+    }
+
+    #[test]
+    fn paired_vs_uniform_power_ratio_pinned_on_odd_k() {
+        // Regression pin for the paired power-costing bug: on a single
+        // conv3x3(cin=1) layer — k = 9, even partition 5/9 — a pairing of
+        // (perforated m=3) with an exact odd half must cost exactly
+        //   (5·cost(perforated,3) + 4·1.0) / 9
+        // of the exact array, i.e. the paired-vs-uniform power ratio is
+        //   (5·c + 4) / (9·c).
+        let mut model = testutil::tiny_model();
+        model.nodes.truncate(2); // input + conv only
+        {
+            let w = model.nodes[1].weights.as_mut().unwrap();
+            w.k_dim = 9;
+            w.w_q.truncate(8 * 9);
+        }
+        assert_eq!(model.mac_layer_kdims(), vec![9]);
+        let c = crate::hw::array_cost(Family::Perforated, 3, 64).power_norm;
+        let paired = LayerPolicy::from_assignments(vec![LayerAssignment::Paired(
+            PairedPoint::new(
+                LayerPoint::new(Family::Perforated, 3, true),
+                LayerPoint::EXACT,
+            ),
+        )])
+        .unwrap();
+        let uniform = LayerPolicy::uniform(Family::Perforated, 3, true, 1).unwrap();
+        let p_paired = paired.power_norm(&model, 64);
+        let p_uniform = uniform.power_norm(&model, 64);
+        assert!((p_paired - (5.0 * c + 4.0) / 9.0).abs() < 1e-12, "{p_paired}");
+        assert!((p_uniform - c).abs() < 1e-12);
+        let ratio = p_paired / p_uniform;
+        assert!(
+            (ratio - (5.0 * c + 4.0) / (9.0 * c)).abs() < 1e-12,
+            "paired/uniform ratio {ratio}"
+        );
+        // And the ratio is > 1: half the columns running exact costs more
+        // power than the uniform approximate point.
+        assert!(ratio > 1.0);
+    }
+
+    #[test]
+    fn policy_switch_stamps_unique_epochs() {
+        let p2 = Arc::new(LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap());
+        let p6 = Arc::new(LayerPolicy::uniform(Family::Truncated, 6, true, 2).unwrap());
+        let sw = PolicySwitch::new(None);
+        assert_eq!(sw.epoch(), 0);
+        assert!(sw.load().policy.is_none());
+        let e1 = sw.install(Some(p2.clone()));
+        assert_eq!(e1, 1);
+        let got = sw.load();
+        assert_eq!(got.epoch, 1);
+        assert_eq!(got.policy.as_deref(), Some(&*p2));
+        let e2 = sw.install(Some(p6));
+        assert_eq!(e2, 2);
+        assert_eq!(sw.epoch(), 2);
+        // Re-installing a previous policy still gets a FRESH epoch — the
+        // stamp identifies the installation, not the policy value.
+        let e3 = sw.install(Some(p2));
+        assert_eq!(e3, 3);
+        let e4 = sw.install(None);
+        assert_eq!(e4, 4);
+        assert!(sw.load().policy.is_none());
+    }
+
+    #[test]
+    fn policy_switch_loads_are_consistent_under_concurrent_installs() {
+        // Every load must observe a (epoch, policy) pair that was actually
+        // installed — never a torn combination — and epochs never repeat.
+        let rungs: Vec<SharedPolicy> = (1..=4)
+            .map(|m| Arc::new(LayerPolicy::uniform(Family::Perforated, m, true, 2).unwrap()))
+            .collect();
+        let sw = PolicySwitch::new(Some(rungs[0].clone()));
+        std::thread::scope(|s| {
+            let sw = &sw;
+            let rungs = &rungs;
+            let installer = s.spawn(move || {
+                for i in 0..200 {
+                    sw.install(Some(rungs[i % rungs.len()].clone()));
+                }
+            });
+            for _ in 0..4 {
+                s.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..500 {
+                        let st = sw.load();
+                        assert!(st.epoch >= last, "epochs are monotone per observer");
+                        last = st.epoch;
+                        let p = st.policy.as_ref().expect("always Some here");
+                        if st.epoch == 0 {
+                            assert_eq!(p.as_ref(), rungs[0].as_ref());
+                        } else {
+                            assert!(rungs.iter().any(|r| r.as_ref() == p.as_ref()));
+                        }
+                    }
+                });
+            }
+            installer.join().unwrap();
+        });
+        assert_eq!(sw.epoch(), 200);
     }
 
     #[test]

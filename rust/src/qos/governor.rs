@@ -1,0 +1,618 @@
+//! The adaptive approximation governor: a DVFS-analog hysteresis controller
+//! that walks a [`Ladder`] at runtime, scaling *approximation* instead of
+//! frequency.
+//!
+//! Control law (one decision per `min_dwell`, over the telemetry window
+//! accumulated since the previous decision — `tick` only paces dwell
+//! accounting and stop-responsiveness):
+//!
+//! 1. **Error guard** — if the measured CV error proxy (mean |V|/|G*| from
+//!    the serving epilogues) exceeds `error_ceiling`, step UP toward exact
+//!    regardless of latency. The proxy is the paper's control variate read
+//!    as an online error estimate, so the governor bounds *actual incurred*
+//!    approximation error, not just the offline estimate.
+//! 2. **Overload** — if the sliding-window p95 latency exceeds
+//!    `latency_target` (with at least `min_window` completions backing the
+//!    estimate), step DOWN the ladder to the next rung whose offline
+//!    `est_loss` fits `max_est_loss` — trading bounded accuracy for
+//!    power/thermal headroom under load.
+//! 3. **Idle recovery** — if the window is empty (no completions AND
+//!    nothing outstanding, queued or inside an executing batch — a
+//!    saturated pool mid-batch completes nothing too) or p95 is
+//!    comfortably under `step_up_frac · latency_target`, step UP to the
+//!    nearest in-bounds rung toward exact, one step per dwell
+//!    (out-of-bounds rungs are skipped on the way up exactly as down).
+//!
+//! The two thresholds (`latency_target` for down, `step_up_frac · target`
+//! for up) plus `min_dwell` form the hysteresis band that keeps the
+//! governor from oscillating on noisy windows. Every installation goes
+//! through [`PolicyInstaller::install`] — validate, warm the plan cache,
+//! then an epoch-stamped atomic swap — so a step never stalls the pool and
+//! every reply can be attributed to exactly one rung via its epoch.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::ladder::Ladder;
+use super::telemetry::{Telemetry, TelemetryWindow};
+use crate::coordinator::{InferenceService, PolicyInstaller};
+
+/// Governor knobs. Every field has an env override (`CVAPPROX_QOS_*`, see
+/// [`QosConfig::from_env`]) so deployments tune without recompiling.
+#[derive(Clone, Debug)]
+pub struct QosConfig {
+    /// p95 latency the governor defends (step-down threshold).
+    pub latency_target: Duration,
+    /// Step back toward exact when p95 < `step_up_frac · latency_target`.
+    pub step_up_frac: f64,
+    /// Ceiling on the measured CV error proxy (mean |V|/|G*|); above it the
+    /// governor steps toward exact even under load.
+    pub error_ceiling: f64,
+    /// Rungs whose offline `est_loss` exceeds this are never entered — by
+    /// the step-down path or the step-up path.
+    pub max_est_loss: f64,
+    /// Decision cadence: one control decision (hence at most one rung
+    /// change) per dwell, over the telemetry accumulated since the last.
+    pub min_dwell: Duration,
+    /// Sleep granularity of the governor thread (dwell accounting and
+    /// stop-responsiveness; decisions happen at `min_dwell` cadence).
+    pub tick: Duration,
+    /// Minimum completions in a decision window before its p95 is trusted
+    /// for a step-down decision.
+    pub min_window: u64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            latency_target: Duration::from_millis(50),
+            step_up_frac: 0.5,
+            error_ceiling: 0.25,
+            max_est_loss: 0.05,
+            min_dwell: Duration::from_millis(500),
+            tick: Duration::from_millis(100),
+            min_window: 8,
+        }
+    }
+}
+
+impl QosConfig {
+    /// Defaults overridden by the `CVAPPROX_QOS_*` environment:
+    /// `TARGET_MS`, `STEP_UP_FRAC`, `ERROR_CEILING`, `MAX_LOSS` (fraction),
+    /// `DWELL_MS`, `TICK_MS`, `MIN_WINDOW`.
+    pub fn from_env() -> QosConfig {
+        Self::from_lookup(|k| std::env::var(k).ok())
+    }
+
+    /// `from_env` over an injected lookup — tests exercise the parsing
+    /// without mutating process-global env (set_var racing the getenv
+    /// calls other parallel tests make is UB on glibc).
+    fn from_lookup(get: impl Fn(&str) -> Option<String>) -> QosConfig {
+        let num = |key: &str| -> Option<f64> { get(key)?.trim().parse().ok() };
+        let mut c = QosConfig::default();
+        if let Some(v) = num("CVAPPROX_QOS_TARGET_MS") {
+            c.latency_target = Duration::from_secs_f64((v / 1e3).max(1e-6));
+        }
+        if let Some(v) = num("CVAPPROX_QOS_STEP_UP_FRAC") {
+            c.step_up_frac = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = num("CVAPPROX_QOS_ERROR_CEILING") {
+            c.error_ceiling = v.max(0.0);
+        }
+        if let Some(v) = num("CVAPPROX_QOS_MAX_LOSS") {
+            c.max_est_loss = v.max(0.0);
+        }
+        if let Some(v) = num("CVAPPROX_QOS_DWELL_MS") {
+            c.min_dwell = Duration::from_secs_f64((v / 1e3).max(1e-6));
+        }
+        if let Some(v) = num("CVAPPROX_QOS_TICK_MS") {
+            c.tick = Duration::from_secs_f64((v / 1e3).max(1e-6));
+        }
+        if let Some(v) = num("CVAPPROX_QOS_MIN_WINDOW") {
+            c.min_window = v.max(0.0) as u64;
+        }
+        c
+    }
+}
+
+/// One rung change, recorded for reporting/benching.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    /// Offset from governor start.
+    pub at: Duration,
+    /// Epoch the new rung was installed under.
+    pub epoch: u64,
+    pub from: usize,
+    pub to: usize,
+    /// Window p95 that triggered the step.
+    pub p95: Duration,
+    /// Window error proxy at the step.
+    pub cv_proxy: f64,
+    pub reason: &'static str,
+}
+
+/// Everything the governor observed, returned by [`Governor::stop`].
+#[derive(Clone, Debug, Default)]
+pub struct GovernorReport {
+    pub transitions: Vec<Transition>,
+    /// Wall-clock seconds spent at each rung index.
+    pub dwell_secs: Vec<f64>,
+    /// Every installed generation: (epoch, rung index), including the
+    /// initial rung-0 install — the reply-epoch → rung map the bit-identity
+    /// checks join against.
+    pub epoch_rungs: Vec<(u64, usize)>,
+    pub final_rung: usize,
+}
+
+impl GovernorReport {
+    /// Fraction of governed wall-clock spent at each rung.
+    pub fn dwell_fractions(&self) -> Vec<f64> {
+        let total: f64 = self.dwell_secs.iter().sum();
+        if total <= 0.0 {
+            return vec![0.0; self.dwell_secs.len()];
+        }
+        self.dwell_secs.iter().map(|&s| s / total).collect()
+    }
+
+    /// Rung that served a given reply epoch, if the governor installed it.
+    pub fn rung_for_epoch(&self, epoch: u64) -> Option<usize> {
+        self.epoch_rungs
+            .iter()
+            .rev()
+            .find(|&&(e, _)| e == epoch)
+            .map(|&(_, r)| r)
+    }
+}
+
+#[derive(Default)]
+struct GovInner {
+    transitions: Vec<Transition>,
+    dwell_secs: Vec<f64>,
+    epoch_rungs: Vec<(u64, usize)>,
+}
+
+/// A running governor thread bound to one service's telemetry + installer.
+pub struct Governor {
+    stop: Arc<AtomicBool>,
+    rung: Arc<AtomicUsize>,
+    inner: Arc<Mutex<GovInner>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Governor {
+    /// Validate the ladder against the served model, install rung 0, and
+    /// start governing. The governor holds only `Arc` handles into the
+    /// service (telemetry + installer), so the service can be shut down
+    /// independently; an install into a torn-down pool simply has no one
+    /// left to serve it.
+    pub fn start(svc: &InferenceService, ladder: Ladder, cfg: QosConfig) -> Result<Governor> {
+        let installer = svc.installer();
+        ladder.validate_for(installer.model()).context("qos ladder")?;
+        let telemetry = svc.telemetry.clone();
+        let depth = svc.depth_probe();
+        let stop = Arc::new(AtomicBool::new(false));
+        let rung = Arc::new(AtomicUsize::new(0));
+        let mut inner0 =
+            GovInner { dwell_secs: vec![0.0; ladder.len()], ..GovInner::default() };
+        let epoch = installer
+            .install(ladder.rung(0).policy.clone())
+            .context("installing initial rung")?;
+        inner0.epoch_rungs.push((epoch, 0));
+        let inner = Arc::new(Mutex::new(inner0));
+        // Installing rung 0 may race telemetry left over from pre-governor
+        // traffic; start from a clean window.
+        let _ = telemetry.window();
+        let handle = {
+            let (stop, rung, inner) = (stop.clone(), rung.clone(), inner.clone());
+            std::thread::Builder::new()
+                .name("cvapprox-qos-governor".into())
+                .spawn(move || {
+                    run_loop(installer, telemetry, depth, ladder, cfg, stop, rung, inner)
+                })
+                .context("spawning governor thread")?
+        };
+        Ok(Governor { stop, rung, inner, handle: Some(handle) })
+    }
+
+    /// Ladder rung currently installed (0 = most accurate).
+    pub fn rung(&self) -> usize {
+        self.rung.load(Ordering::Acquire)
+    }
+
+    /// Snapshot of transitions/dwell so far (the governor keeps running).
+    pub fn report(&self) -> GovernorReport {
+        let g = self.inner.lock().unwrap();
+        GovernorReport {
+            transitions: g.transitions.clone(),
+            dwell_secs: g.dwell_secs.clone(),
+            epoch_rungs: g.epoch_rungs.clone(),
+            final_rung: self.rung(),
+        }
+    }
+
+    /// Stop governing (the pool keeps serving the last installed rung) and
+    /// return the final report.
+    pub fn stop(mut self) -> GovernorReport {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.report()
+    }
+}
+
+impl Drop for Governor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Next rung below `cur` whose offline loss estimate fits the bound (rungs
+/// over the bound are skipped, not entered).
+fn next_down(ladder: &Ladder, cur: usize, max_est_loss: f64) -> Option<usize> {
+    (cur + 1..ladder.len()).find(|&j| ladder.rung(j).est_loss <= max_est_loss)
+}
+
+/// Nearest rung above `cur` that fits the loss bound — step-up paths skip
+/// out-of-bounds rungs too (a ladder may interleave inadmissible rungs, and
+/// "recovering" INTO one would violate the bound the down path honors).
+/// Rung 0 is the accuracy anchor and is always reachable.
+fn next_up(ladder: &Ladder, cur: usize, max_est_loss: f64) -> Option<usize> {
+    if cur == 0 {
+        return None;
+    }
+    Some(
+        (0..cur)
+            .rev()
+            .find(|&j| ladder.rung(j).est_loss <= max_est_loss)
+            .unwrap_or(0),
+    )
+}
+
+/// Bound on the in-memory transition / epoch→rung logs: an oscillating
+/// governor in a long-running service must not grow its report without
+/// limit, so once a log reaches the cap its oldest half is dropped (recent
+/// epochs — the only ones live batches can still carry — always survive).
+const LOG_CAP: usize = 65_536;
+
+#[allow(clippy::too_many_arguments)]
+fn run_loop(
+    installer: PolicyInstaller,
+    telemetry: Arc<Telemetry>,
+    depth: Arc<dyn Fn() -> usize + Send + Sync>,
+    ladder: Ladder,
+    cfg: QosConfig,
+    stop: Arc<AtomicBool>,
+    rung_gauge: Arc<AtomicUsize>,
+    inner: Arc<Mutex<GovInner>>,
+) {
+    let t0 = Instant::now();
+    let mut cur = 0usize;
+    let mut last_tick = Instant::now();
+    // One decision per dwell, not per tick: telemetry windows accumulate
+    // between decisions, so a sustained-but-slow overload still clears
+    // `min_window` over the whole dwell (per-tick windows would gate it on
+    // per-tick completions), and "no completions" means idle across the
+    // entire dwell — one quiet tick amid a burst cannot read as idle.
+    let mut last_eval = Instant::now();
+    while !stop.load(Ordering::Acquire) {
+        std::thread::sleep(cfg.tick);
+        let now = Instant::now();
+        inner.lock().unwrap().dwell_secs[cur] += (now - last_tick).as_secs_f64();
+        last_tick = now;
+        if now.duration_since(last_eval) < cfg.min_dwell {
+            continue;
+        }
+        let w = telemetry.window();
+        last_eval = now;
+        // Outstanding work = still queued + already inside executing
+        // batches; either kind makes "no completions" mean saturation,
+        // not idleness.
+        let outstanding = depth() + telemetry.in_flight() as usize;
+        if let Some((to, reason)) = decide(&ladder, cur, &w, outstanding, &cfg) {
+            match installer.install(ladder.rung(to).policy.clone()) {
+                Ok(epoch) => {
+                    let mut g = inner.lock().unwrap();
+                    if g.transitions.len() >= LOG_CAP {
+                        g.transitions.drain(..LOG_CAP / 2);
+                    }
+                    if g.epoch_rungs.len() >= LOG_CAP {
+                        g.epoch_rungs.drain(..LOG_CAP / 2);
+                    }
+                    g.transitions.push(Transition {
+                        at: t0.elapsed(),
+                        epoch,
+                        from: cur,
+                        to,
+                        p95: w.p95,
+                        cv_proxy: w.cv_proxy,
+                        reason,
+                    });
+                    g.epoch_rungs.push((epoch, to));
+                    drop(g);
+                    cur = to;
+                    rung_gauge.store(cur, Ordering::Release);
+                }
+                // An install can only fail if the pool's model changed out
+                // from under us — impossible for a live service — so treat
+                // it as "stop governing" rather than spinning on errors.
+                Err(_) => break,
+            }
+        }
+    }
+    let now = Instant::now();
+    inner.lock().unwrap().dwell_secs[cur] += (now - last_tick).as_secs_f64();
+}
+
+/// The pure control law (unit-tested without threads): given the current
+/// rung, one telemetry window and the live outstanding-request count
+/// (queued + in-flight), which rung to move to, if any.
+fn decide(
+    ladder: &Ladder,
+    cur: usize,
+    w: &TelemetryWindow,
+    outstanding: usize,
+    cfg: &QosConfig,
+) -> Option<(usize, &'static str)> {
+    let target = cfg.latency_target.as_secs_f64();
+    let p95 = w.p95.as_secs_f64();
+    if w.cv_proxy > cfg.error_ceiling {
+        // Error pressure always vetoes descent: step toward exact, or —
+        // already there — hold even if overloaded (accuracy outranks
+        // latency, the paper's tight-loss constraint).
+        return next_up(ladder, cur, cfg.max_est_loss).map(|to| (to, "error-ceiling"));
+    }
+    if w.completions >= cfg.min_window && p95 > target {
+        return next_down(ladder, cur, cfg.max_est_loss).map(|to| (to, "latency-over-target"));
+    }
+    // "Nothing completed" only means idle when nothing is outstanding
+    // either (queued OR already inside an executing batch): a saturated
+    // pool whose in-flight batches outlast the decision window completes
+    // nothing too, and stepping up there would raise the cost of exactly
+    // the work that is drowning it. The fast-window step-up deliberately
+    // has NO min_window gate: `min_window` protects the step-DOWN decision
+    // from noisy p95 estimates, but stepping UP is the safe direction —
+    // a trickle of fast completions must recover toward exact instead of
+    // pinning the pool at a degraded rung forever.
+    let idle = w.completions == 0 && outstanding == 0;
+    if idle || (w.completions > 0 && p95 < target * cfg.step_up_frac) {
+        return next_up(ladder, cur, cfg.max_est_loss).map(|to| (to, "idle-recovery"));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::Family;
+    use crate::coordinator::ServiceConfig;
+    use crate::nn::{testutil, Engine, LayerPolicy};
+    use std::sync::Arc;
+
+    fn tiny_ladder() -> Ladder {
+        use super::super::ladder::Rung;
+        let mk = |name: &str, loss: f64, power: f64, p: LayerPolicy| Rung {
+            name: name.into(),
+            est_loss: loss,
+            power_norm: power,
+            policy: Arc::new(p),
+        };
+        Ladder::new(vec![
+            mk("exact", 0.0, 1.0, LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap()),
+            mk(
+                "mixed",
+                0.01,
+                0.9,
+                LayerPolicy::from_ms(Family::Perforated, &[2, 0], true).unwrap(),
+            ),
+            mk("lossy", 0.9, 0.8, LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap()),
+            mk(
+                "aggressive",
+                0.02,
+                0.6,
+                LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap(),
+            ),
+        ])
+        .unwrap()
+    }
+
+    fn window(completions: u64, p95: Duration, cv_proxy: f64) -> TelemetryWindow {
+        TelemetryWindow {
+            completions,
+            batches: completions,
+            p50: p95 / 2,
+            p95,
+            mean_queue_depth: 0.0,
+            mean_batch_occupancy: 0.5,
+            cv_proxy,
+            cv_proxy_per_layer: vec![],
+            cv_samples: completions,
+        }
+    }
+
+    #[test]
+    fn control_law_hysteresis_and_bounds() {
+        let ladder = tiny_ladder();
+        let cfg = QosConfig {
+            latency_target: Duration::from_millis(10),
+            step_up_frac: 0.5,
+            error_ceiling: 0.25,
+            max_est_loss: 0.05,
+            min_window: 4,
+            ..QosConfig::default()
+        };
+        // Overloaded at rung 0: step down — skipping the out-of-bounds
+        // "lossy" rung is the max_est_loss guard when coming from rung 1.
+        let over = window(32, Duration::from_millis(50), 0.01);
+        assert_eq!(decide(&ladder, 0, &over, 99, &cfg), Some((1, "latency-over-target")));
+        assert_eq!(decide(&ladder, 1, &over, 99, &cfg), Some((3, "latency-over-target")));
+        // Already at the bottom: nothing below fits.
+        assert_eq!(decide(&ladder, 3, &over, 99, &cfg), None);
+        // Too few completions: the p95 estimate is not trusted.
+        let thin = window(2, Duration::from_millis(50), 0.01);
+        assert_eq!(decide(&ladder, 0, &thin, 99, &cfg), None);
+        // In the hysteresis band (between up and down thresholds): hold.
+        let mid = window(32, Duration::from_millis(7), 0.01);
+        assert_eq!(decide(&ladder, 1, &mid, 0, &cfg), None);
+        // Comfortably fast: step up one rung.
+        let fast = window(32, Duration::from_millis(2), 0.01);
+        assert_eq!(decide(&ladder, 1, &fast, 0, &cfg), Some((0, "idle-recovery")));
+        assert_eq!(decide(&ladder, 0, &fast, 0, &cfg), None);
+        // Idle (no completions, empty queue): recover toward exact —
+        // skipping the out-of-bounds "lossy" rung on the way UP too
+        // (recovering INTO a 90%-loss rung would violate the bound the
+        // down path honors).
+        let idle = window(0, Duration::ZERO, 0.0);
+        assert_eq!(decide(&ladder, 3, &idle, 0, &cfg), Some((1, "idle-recovery")));
+        assert_eq!(decide(&ladder, 1, &idle, 0, &cfg), Some((0, "idle-recovery")));
+        assert_eq!(decide(&ladder, 0, &idle, 0, &cfg), None);
+        // Zero completions with a DEEP queue is saturation, not idleness:
+        // in-flight batches outlasting the window must not trigger a step
+        // up in the middle of the overload.
+        assert_eq!(decide(&ladder, 3, &idle, 17, &cfg), None);
+        // A trickle below min_window still recovers when it is fast —
+        // min_window gates only the (unsafe) step-down direction; without
+        // this, 1..min_window-1 completions per dwell would pin a degraded
+        // rung forever.
+        let trickle = window(2, Duration::from_millis(2), 0.01);
+        assert_eq!(decide(&ladder, 1, &trickle, 0, &cfg), Some((0, "idle-recovery")));
+        assert_eq!(decide(&ladder, 0, &trickle, 0, &cfg), None);
+        // Error proxy over the ceiling beats the latency signal.
+        let hot = window(32, Duration::from_millis(50), 0.4);
+        assert_eq!(decide(&ladder, 2, &hot, 99, &cfg), Some((1, "error-ceiling")));
+        assert_eq!(decide(&ladder, 0, &hot, 99, &cfg), None, "cannot go above exact");
+    }
+
+    #[test]
+    fn qos_config_lookup_overrides() {
+        // Exercised through the injected lookup, NOT set_var: mutating
+        // process env would race the getenv calls of concurrently running
+        // tests (UB on glibc).
+        let vars: std::collections::HashMap<&str, &str> = [
+            ("CVAPPROX_QOS_TARGET_MS", "12.5"),
+            ("CVAPPROX_QOS_STEP_UP_FRAC", "0.25"),
+            ("CVAPPROX_QOS_ERROR_CEILING", "0.5"),
+            ("CVAPPROX_QOS_MAX_LOSS", "0.02"),
+            ("CVAPPROX_QOS_DWELL_MS", "40"),
+            ("CVAPPROX_QOS_TICK_MS", "5"),
+            ("CVAPPROX_QOS_MIN_WINDOW", "3"),
+        ]
+        .into_iter()
+        .collect();
+        let c = QosConfig::from_lookup(|k| vars.get(k).map(|v| v.to_string()));
+        assert_eq!(c.latency_target, Duration::from_micros(12_500));
+        assert_eq!(c.step_up_frac, 0.25);
+        assert_eq!(c.error_ceiling, 0.5);
+        assert_eq!(c.max_est_loss, 0.02);
+        assert_eq!(c.min_dwell, Duration::from_millis(40));
+        assert_eq!(c.tick, Duration::from_millis(5));
+        assert_eq!(c.min_window, 3);
+        // Bad values fall back to defaults; absent keys keep defaults.
+        let d = QosConfig::from_lookup(|k| {
+            (k == "CVAPPROX_QOS_TARGET_MS").then(|| "bogus".to_string())
+        });
+        assert_eq!(d.latency_target, QosConfig::default().latency_target);
+        let e = QosConfig::from_lookup(|_| None);
+        assert_eq!(e.min_dwell, QosConfig::default().min_dwell);
+    }
+
+    #[test]
+    fn governor_steps_down_under_load_and_recovers_when_idle() {
+        // End-to-end miniature of the bench acceptance: a real pool, a real
+        // governor, a synthetic burst. The governor must step down while
+        // the burst is queued, recover to rung 0 when traffic stops, and
+        // every reply must be bit-identical to a static forward under its
+        // epoch's rung.
+        let model = testutil::tiny_model();
+        let ladder = tiny_ladder();
+        let svc = crate::coordinator::InferenceService::start(
+            Engine::new(model.clone()),
+            ServiceConfig {
+                workers: 1,
+                batch_size: 2,
+                batch_timeout: Duration::from_micros(200),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let cfg = QosConfig {
+            latency_target: Duration::from_millis(1),
+            min_dwell: Duration::from_millis(20),
+            tick: Duration::from_millis(5),
+            min_window: 4,
+            max_est_loss: 0.05,
+            error_ceiling: f64::INFINITY, // isolate the latency signal
+            ..QosConfig::default()
+        };
+        let gov = Governor::start(&svc, ladder.clone(), cfg).unwrap();
+        let mut replies = Vec::new();
+        // Burst until the governor leaves rung 0 (bounded): each wave
+        // floods the single worker so queueing pushes the tail latency far
+        // over the 1 ms target. Then push one more wave so some replies are
+        // actually served at the approximate rung.
+        let wave = 512usize;
+        let mut run_wave = |replies: &mut Vec<(u64, crate::coordinator::service::Reply)>| {
+            let pend: Vec<_> = (0..wave)
+                .map(|i| svc.submit(testutil::tiny_image((i % 32) as u64)).unwrap())
+                .collect();
+            replies.extend(
+                pend.into_iter()
+                    .enumerate()
+                    .map(|(i, p)| ((i % 32) as u64, p.wait().unwrap())),
+            );
+        };
+        let mut waves = 0;
+        while gov.rung() == 0 && waves < 100 {
+            run_wave(&mut replies);
+            waves += 1;
+        }
+        assert!(gov.rung() > 0, "governor never stepped down after {waves} waves");
+        run_wave(&mut replies);
+        // Go idle; the governor must walk back up to rung 0.
+        let t0 = Instant::now();
+        while gov.rung() != 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(gov.rung(), 0, "governor did not recover to exact when idle");
+        let report = gov.stop();
+        assert!(
+            report.transitions.len() >= 2,
+            "expected a down + an up transition, got {:?}",
+            report.transitions
+        );
+        assert!(report.transitions.iter().any(|t| t.reason == "latency-over-target"));
+        assert!(report.transitions.iter().any(|t| t.reason == "idle-recovery"));
+        // The out-of-bounds "lossy" rung (est_loss 0.9 > max 0.05) must
+        // never have been entered.
+        assert!(report.epoch_rungs.iter().all(|&(_, r)| r != 2));
+        assert!(report.dwell_fractions()[0] > 0.0);
+        // Bit-identity per epoch: each reply equals the static forward of
+        // the rung its epoch installed, for the exact image it answered.
+        let reference = Engine::new(model);
+        let mut cache: std::collections::HashMap<(usize, u64), Vec<f64>> =
+            std::collections::HashMap::new();
+        for (img, r) in &replies {
+            let rung = report
+                .rung_for_epoch(r.epoch)
+                .unwrap_or_else(|| panic!("reply epoch {} unknown to governor", r.epoch));
+            let want = cache.entry((rung, *img)).or_insert_with(|| {
+                let opts = crate::nn::ForwardOpts::with_policy(ladder.rung(rung).policy.clone());
+                reference.forward(&testutil::tiny_image(*img), &opts).unwrap()
+            });
+            assert_eq!(
+                &r.logits, want,
+                "reply (epoch {}, rung {rung}, img {img}) is not bit-identical \
+                 to the static forward of its rung",
+                r.epoch
+            );
+        }
+        svc.shutdown();
+    }
+}

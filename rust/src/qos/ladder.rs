@@ -1,0 +1,313 @@
+//! QoS ladders: ordered operating points for the adaptive governor.
+//!
+//! A [`Ladder`] is the offline half of the adaptive-QoS contract: an
+//! ordered vector of named rungs, each a per-layer [`LayerPolicy`] tagged
+//! with its offline-estimated accuracy loss (measured by the layerwise
+//! greedy/paired searches) and its MAC-weighted normalized power (from the
+//! hw cost model). Rung 0 is the most accurate operating point (normally
+//! exact); every later rung must cost **no more power** than its
+//! predecessor — the ladder descends the power axis, so "step down under
+//! load" always trades accuracy for power/thermal headroom, never for
+//! nothing. The governor walks this ladder at runtime exactly like a DVFS
+//! driver walks its P-state table, scaling *approximation* instead of
+//! frequency.
+//!
+//! Ladders serialize as a JSON artifact (`cvapprox qos-ladder --json`) in
+//! the same dialect as policy files, so a deployment can version them:
+//!
+//! ```json
+//! {"rungs": [{"name": "exact", "est_loss": 0, "power_norm": 1,
+//!             "policy": {"layers": [...]}}, ...]}
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::{LayerPolicy, Model, SharedPolicy};
+use crate::util::json::Json;
+
+/// One operating point of the ladder.
+#[derive(Clone, Debug)]
+pub struct Rung {
+    /// Human-readable label (`exact`, `greedy-mixed`, …), unique per ladder.
+    pub name: String,
+    /// Offline-estimated accuracy loss vs the exact design (fraction,
+    /// ≥ 0) — what the governor checks against its loss bound.
+    pub est_loss: f64,
+    /// MAC-weighted normalized power of the rung's policy
+    /// ([`LayerPolicy::power_norm`]).
+    pub power_norm: f64,
+    /// The per-layer policy the coordinator serves at this rung.
+    pub policy: SharedPolicy,
+}
+
+/// An ordered, validated ladder of operating points (see module docs).
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    rungs: Vec<Rung>,
+}
+
+impl Ladder {
+    /// Validate and build: at least one rung, unique nonempty names, finite
+    /// nonnegative losses, positive power, and power nonincreasing down the
+    /// ladder.
+    pub fn new(rungs: Vec<Rung>) -> Result<Ladder> {
+        if rungs.is_empty() {
+            bail!("a QoS ladder needs at least one rung");
+        }
+        for (i, r) in rungs.iter().enumerate() {
+            if r.name.trim().is_empty() {
+                bail!("rung {i} has an empty name");
+            }
+            if !(r.est_loss >= 0.0 && r.est_loss.is_finite()) {
+                bail!("rung {i} ({}) has invalid est_loss {}", r.name, r.est_loss);
+            }
+            if !(r.power_norm > 0.0 && r.power_norm.is_finite()) {
+                bail!("rung {i} ({}) has invalid power_norm {}", r.name, r.power_norm);
+            }
+            if i > 0 && r.power_norm > rungs[i - 1].power_norm + 1e-9 {
+                bail!(
+                    "rung {i} ({}) raises power over its predecessor \
+                     ({:.4} > {:.4}); a ladder must descend the power axis",
+                    r.name,
+                    r.power_norm,
+                    rungs[i - 1].power_norm
+                );
+            }
+            if rungs[..i].iter().any(|p| p.name == r.name) {
+                bail!("duplicate rung name {:?}", r.name);
+            }
+        }
+        Ok(Ladder { rungs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rungs.is_empty()
+    }
+
+    pub fn rung(&self, i: usize) -> &Rung {
+        &self.rungs[i]
+    }
+
+    pub fn rungs(&self) -> &[Rung] {
+        &self.rungs
+    }
+
+    /// Check every rung's policy against a concrete model's layer count.
+    pub fn validate_for(&self, model: &Model) -> Result<()> {
+        for r in &self.rungs {
+            r.policy
+                .validate_for(model)
+                .with_context(|| format!("ladder rung {:?}", r.name))?;
+        }
+        Ok(())
+    }
+
+    /// Compact one-line summary, e.g.
+    /// `exact(1.000x, -0.0%) → greedy-mixed(0.871x, -0.0%) → …`.
+    pub fn describe(&self) -> String {
+        self.rungs
+            .iter()
+            .map(|r| {
+                format!("{}({:.3}x, -{:.2}%)", r.name, r.power_norm, 100.0 * r.est_loss)
+            })
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+
+    // ---- serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().field(
+            "rungs",
+            Json::Arr(
+                self.rungs
+                    .iter()
+                    .map(|r| {
+                        Json::obj()
+                            .field("name", r.name.as_str())
+                            .field("est_loss", r.est_loss)
+                            .field("power_norm", r.power_norm)
+                            .field("policy", r.policy.to_json())
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Ladder> {
+        let rungs = j
+            .get("rungs")
+            .and_then(|r| r.as_arr())
+            .context("ladder JSON missing \"rungs\" array")?;
+        let rungs = rungs
+            .iter()
+            .enumerate()
+            .map(|(i, e)| -> Result<Rung> {
+                let name = e
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .with_context(|| format!("rung {i} missing \"name\""))?
+                    .to_string();
+                let est_loss = e
+                    .get("est_loss")
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("rung {i} missing \"est_loss\""))?;
+                let power_norm = e
+                    .get("power_norm")
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("rung {i} missing \"power_norm\""))?;
+                let policy = e
+                    .get("policy")
+                    .with_context(|| format!("rung {i} missing \"policy\""))
+                    .and_then(LayerPolicy::from_json)
+                    .with_context(|| format!("rung {i} policy"))?;
+                Ok(Rung { name, est_loss, power_norm, policy: Arc::new(policy) })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ladder::new(rungs)
+    }
+
+    pub fn parse(text: &str) -> Result<Ladder> {
+        Ladder::from_json(&Json::parse(text).context("ladder JSON")?)
+    }
+
+    pub fn load(path: &Path) -> Result<Ladder> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading ladder {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing ladder {}", path.display()))
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().render())
+            .with_context(|| format!("writing ladder {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::Family;
+    use crate::nn::testutil;
+    use crate::nn::{LayerAssignment, PairedPoint};
+
+    fn rung(name: &str, loss: f64, power: f64, policy: LayerPolicy) -> Rung {
+        Rung { name: name.into(), est_loss: loss, power_norm: power, policy: Arc::new(policy) }
+    }
+
+    fn sample_ladder() -> Ladder {
+        let exact = LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap();
+        let mixed = LayerPolicy::from_ms(Family::Perforated, &[3, 0], true).unwrap();
+        let paired = LayerPolicy::from_assignments(vec![
+            LayerAssignment::Paired(PairedPoint::mirrored(
+                Family::Perforated,
+                3,
+                true,
+            ));
+            2
+        ])
+        .unwrap();
+        Ladder::new(vec![
+            rung("exact", 0.0, 1.0, exact),
+            rung("greedy-mixed", 0.0, 0.9, mixed),
+            rung("aggressive", 0.05, 0.6, paired),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_validates_ordering_and_names() {
+        let exact = LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap();
+        let p = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
+        assert!(Ladder::new(vec![]).is_err());
+        // power must not rise down the ladder
+        let err = Ladder::new(vec![
+            rung("a", 0.0, 0.6, p.clone()),
+            rung("b", 0.0, 0.9, exact.clone()),
+        ])
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("descend"), "{err:#}");
+        // duplicate / empty names
+        assert!(Ladder::new(vec![
+            rung("a", 0.0, 1.0, exact.clone()),
+            rung("a", 0.0, 0.9, p.clone()),
+        ])
+        .is_err());
+        assert!(Ladder::new(vec![rung("  ", 0.0, 1.0, exact.clone())]).is_err());
+        // invalid numbers
+        assert!(Ladder::new(vec![rung("a", -0.1, 1.0, exact.clone())]).is_err());
+        assert!(Ladder::new(vec![rung("a", f64::NAN, 1.0, exact.clone())]).is_err());
+        assert!(Ladder::new(vec![rung("a", 0.0, 0.0, exact.clone())]).is_err());
+        // equal power on consecutive rungs is allowed (within tolerance)
+        assert!(Ladder::new(vec![
+            rung("a", 0.0, 0.9, p.clone()),
+            rung("b", 0.01, 0.9, p),
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_rungs_and_policies() {
+        let ladder = sample_ladder();
+        let text = ladder.to_json().render();
+        let back = Ladder::parse(&text).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in ladder.rungs().iter().zip(back.rungs()) {
+            assert_eq!(a.name, b.name);
+            assert!((a.est_loss - b.est_loss).abs() < 1e-12);
+            assert!((a.power_norm - b.power_norm).abs() < 1e-12);
+            assert_eq!(a.policy.describe(), b.policy.describe());
+        }
+        // Paired rungs survive the roundtrip intact.
+        assert_eq!(back.rung(2).policy.paired_layers(), 2);
+        assert!(text.contains("\"rungs\""), "{text}");
+    }
+
+    #[test]
+    fn file_roundtrip_and_parse_errors() {
+        let ladder = sample_ladder();
+        let path = std::env::temp_dir()
+            .join(format!("cvapprox_ladder_{}.json", std::process::id()));
+        ladder.save_json(&path).unwrap();
+        let back = Ladder::load(&path).unwrap();
+        assert_eq!(back.describe(), ladder.describe());
+        let _ = std::fs::remove_file(&path);
+        assert!(Ladder::parse("{\"nope\": 1}").is_err());
+        assert!(Ladder::parse("{\"rungs\": []}").is_err());
+        assert!(Ladder::parse(
+            "{\"rungs\": [{\"name\": \"x\", \"est_loss\": 0, \"power_norm\": 1}]}"
+        )
+        .is_err());
+        assert!(Ladder::load(Path::new("/nonexistent/ladder.json")).is_err());
+    }
+
+    #[test]
+    fn validate_for_checks_every_rung() {
+        let ladder = sample_ladder();
+        let model = testutil::tiny_model(); // 2 MAC layers
+        assert!(ladder.validate_for(&model).is_ok());
+        let three = LayerPolicy::uniform(Family::Perforated, 2, true, 3).unwrap();
+        let bad = Ladder::new(vec![
+            rung("exact", 0.0, 1.0, LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap()),
+            rung("mismatched", 0.0, 0.7, three),
+        ])
+        .unwrap();
+        let err = bad.validate_for(&model).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mismatched"), "{msg}");
+        assert!(msg.contains("MAC layers"), "{msg}");
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        let d = sample_ladder().describe();
+        assert!(d.contains("exact(1.000x"), "{d}");
+        assert!(d.contains("→"), "{d}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Adaptive QoS: runtime policy ladders with hot-swap serving.
+//!
+//! The paper operates under a *tight accuracy-loss constraint* while
+//! maximizing power savings — but a static deployment has to pick one
+//! operating point at start-up and keep it whether the pool is drowning or
+//! idle. This subsystem makes the approximation level a **governed runtime
+//! quantity**, the DVFS analogy applied to approximation instead of
+//! frequency:
+//!
+//! * [`ladder`] — an ordered, validated vector of named operating points
+//!   (exact → greedy mixed → greedy paired → aggressive uniform), each a
+//!   per-layer [`crate::nn::LayerPolicy`] tagged with offline-estimated
+//!   loss and MAC-weighted normalized power; JSON artifact via
+//!   `cvapprox qos-ladder`.
+//! * [`telemetry`] — lock-light (all-atomic) serving signals, drained per
+//!   decision window: latency percentiles over the window's completions,
+//!   queue depth, batch occupancy, a live in-flight gauge, and the
+//!   per-layer CV-magnitude error proxy (mean |V|/|G*| sampled from the
+//!   epilogue — free, because V is already computed there).
+//! * [`governor`] — the hysteresis controller thread that walks the ladder
+//!   (step down under load within a loss bound, step back up when idle or
+//!   when the measured error proxy crosses its ceiling) and installs rungs
+//!   into the live pool through an epoch-stamped atomic policy swap — no
+//!   drain, no stall, every reply attributable to exactly one rung.
+
+pub mod governor;
+pub mod ladder;
+pub mod telemetry;
+
+pub use governor::{Governor, GovernorReport, QosConfig, Transition};
+pub use ladder::{Ladder, Rung};
+pub use telemetry::{Telemetry, TelemetryWindow};

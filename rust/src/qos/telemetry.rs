@@ -1,0 +1,295 @@
+//! Lock-light serving telemetry for the adaptive governor.
+//!
+//! The governor needs four live signals — queue depth, batch occupancy,
+//! tail latency, and the CV-magnitude error proxy — sampled on the serving
+//! hot path without adding a contended lock to it. Everything here is
+//! atomics: workers `fetch_add` counters and overwrite a fixed ring of
+//! recent latency samples; the (single) governor thread drains windows with
+//! `swap(0)`. The only non-O(1) work is in [`Telemetry::window`], which the
+//! governor pays, not the pool.
+//!
+//! Every signal is **drain-on-read**: each `window()` call covers exactly
+//! what accumulated since the previous call — including the latency
+//! percentiles, which are computed over the samples recorded in the window
+//! (capped at the ring size; a window that overflows the ring keeps its
+//! most recent `window` samples). Stale burst latencies therefore cannot
+//! leak into later decisions and pin the governor at a wrong rung. Reads
+//! are racy by design — a sample landing on a window boundary counts in
+//! one window or the next, never corrupts. One poller is assumed (the
+//! governor); a second concurrent poller would split windows between them.
+//! The `in_flight` gauge is the exception: it is a live level, not a
+//! window aggregate — requests popped into executing batches are invisible
+//! to both the queue depth and the completion count, and without this
+//! gauge a saturated pool whose batches outlast a whole window would be
+//! indistinguishable from an idle one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::nn::CvProxySampler;
+
+/// Default sliding-window size for the latency percentile ring.
+pub const DEFAULT_WINDOW: usize = 1024;
+
+/// Shared serving telemetry: one instance per [`crate::coordinator::InferenceService`],
+/// recorded into by every pool worker, drained by the governor.
+#[derive(Debug)]
+pub struct Telemetry {
+    /// Ring of recent per-request latencies in µs (0 = never written).
+    lat_us: Vec<AtomicU64>,
+    /// Total latency samples ever pushed (ring slot = head % len).
+    head: AtomicU64,
+    /// `head` at the last `window()` call (completion-rate bookkeeping).
+    drained_head: AtomicU64,
+    /// Σ queue depth observed at batch pop / number of observations.
+    depth_sum: AtomicU64,
+    depth_n: AtomicU64,
+    /// Σ batch occupancy (fused requests / batch capacity) in per-mille.
+    occ_pm_sum: AtomicU64,
+    occ_n: AtomicU64,
+    /// Requests currently inside executing batches (live level gauge).
+    inflight: AtomicU64,
+    /// Per-layer CV-magnitude error proxy (attached to every batch's
+    /// `ForwardOpts` by the worker; see [`CvProxySampler`]).
+    cv: Arc<CvProxySampler>,
+}
+
+/// One drained telemetry window.
+#[derive(Clone, Debug)]
+pub struct TelemetryWindow {
+    /// Requests completed since the previous `window()` call.
+    pub completions: u64,
+    /// Batches executed since the previous call.
+    pub batches: u64,
+    /// Latency percentiles over THIS window's completions (up to the ring
+    /// size; zero when nothing completed in the window).
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Mean queue depth observed at batch pop since the previous call.
+    pub mean_queue_depth: f64,
+    /// Mean batch occupancy (0..1) since the previous call.
+    pub mean_batch_occupancy: f64,
+    /// Pooled CV error proxy Σ|V| / Σ|G*| since the previous call.
+    pub cv_proxy: f64,
+    /// Per-MAC-layer error proxy (0 for layers that recorded nothing).
+    pub cv_proxy_per_layer: Vec<f64>,
+    /// Epilogue entries the proxy averaged over.
+    pub cv_samples: u64,
+}
+
+impl Telemetry {
+    /// Telemetry for a model with `mac_layers` MAC layers, default window.
+    pub fn new(mac_layers: usize) -> Telemetry {
+        Telemetry::with_window(DEFAULT_WINDOW, mac_layers)
+    }
+
+    /// Explicit ring size (tests shrink it to exercise wraparound).
+    pub fn with_window(window: usize, mac_layers: usize) -> Telemetry {
+        Telemetry {
+            lat_us: (0..window.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicU64::new(0),
+            drained_head: AtomicU64::new(0),
+            depth_sum: AtomicU64::new(0),
+            depth_n: AtomicU64::new(0),
+            occ_pm_sum: AtomicU64::new(0),
+            occ_n: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            cv: Arc::new(CvProxySampler::new(mac_layers)),
+        }
+    }
+
+    /// The shared error-proxy sampler (workers attach it to
+    /// `ForwardOpts::cv_proxy`).
+    pub fn cv_sampler(&self) -> Arc<CvProxySampler> {
+        self.cv.clone()
+    }
+
+    /// Record one completed request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        let us = (d.as_secs_f64() * 1e6).round().max(1.0) as u64;
+        let slot = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.lat_us.len();
+        self.lat_us[slot].store(us, Ordering::Relaxed);
+    }
+
+    /// A worker is about to run a batch of `requests`: raise the in-flight
+    /// level ([`Telemetry::record_batch`] lowers it when the batch lands).
+    pub fn batch_started(&self, requests: usize) {
+        self.inflight.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch: how many requests fused (of `cap`
+    /// possible) and the queue depth left behind at pop time.
+    pub fn record_batch(&self, requests: usize, cap: usize, queue_depth: usize) {
+        // Saturating decrement: a record_batch without a matching
+        // batch_started (unit tests drive them independently) must not
+        // wrap the gauge.
+        let _ = self.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(requests as u64))
+        });
+        self.depth_sum.fetch_add(queue_depth as u64, Ordering::Relaxed);
+        self.depth_n.fetch_add(1, Ordering::Relaxed);
+        let pm = (1000 * requests / cap.max(1)).min(1000) as u64;
+        self.occ_pm_sum.fetch_add(pm, Ordering::Relaxed);
+        self.occ_n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently inside executing batches (live level, not a
+    /// window aggregate).
+    pub fn in_flight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Drain the window accumulated since the last call: depth, occupancy,
+    /// error proxy, completion count, AND the latency percentiles — which
+    /// cover only the samples recorded in this window (most recent
+    /// ring-size samples when the window overflowed the ring), so a past
+    /// burst's tail cannot haunt later decisions.
+    pub fn window(&self) -> TelemetryWindow {
+        let head = self.head.load(Ordering::Relaxed);
+        let prev = self.drained_head.swap(head, Ordering::Relaxed);
+        let cap = self.lat_us.len() as u64;
+        let take = head.saturating_sub(prev).min(cap);
+        let mut lats: Vec<u64> = (head - take..head)
+            .map(|j| self.lat_us[(j % cap) as usize].load(Ordering::Relaxed))
+            .filter(|&v| v > 0)
+            .collect();
+        lats.sort_unstable();
+        let pick = |q: f64| -> Duration {
+            if lats.is_empty() {
+                Duration::ZERO
+            } else {
+                let idx = ((lats.len() - 1) as f64 * q).round() as usize;
+                Duration::from_micros(lats[idx])
+            }
+        };
+        let (p50, p95) = (pick(0.50), pick(0.95));
+        let depth_n = self.depth_n.swap(0, Ordering::Relaxed);
+        let depth_sum = self.depth_sum.swap(0, Ordering::Relaxed);
+        let occ_n = self.occ_n.swap(0, Ordering::Relaxed);
+        let occ_pm = self.occ_pm_sum.swap(0, Ordering::Relaxed);
+        let cvw = self.cv.drain();
+        TelemetryWindow {
+            completions: head.saturating_sub(prev),
+            batches: occ_n,
+            p50,
+            p95,
+            mean_queue_depth: if depth_n > 0 {
+                depth_sum as f64 / depth_n as f64
+            } else {
+                0.0
+            },
+            mean_batch_occupancy: if occ_n > 0 {
+                occ_pm as f64 / (1000.0 * occ_n as f64)
+            } else {
+                0.0
+            },
+            cv_proxy: cvw.aggregate,
+            cv_proxy_per_layer: cvw.per_layer,
+            cv_samples: cvw.samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_drains_latency_and_counters() {
+        let t = Telemetry::with_window(8, 2);
+        for ms in [1u64, 2, 3, 4] {
+            t.record_latency(Duration::from_millis(ms));
+        }
+        t.record_batch(4, 8, 10);
+        t.record_batch(8, 8, 0);
+        let w = t.window();
+        assert_eq!(w.completions, 4);
+        assert_eq!(w.batches, 2);
+        assert_eq!(w.p50, Duration::from_millis(3)); // rank rounding picks idx 2
+        assert_eq!(w.p95, Duration::from_millis(4));
+        assert!((w.mean_queue_depth - 5.0).abs() < 1e-9);
+        assert!((w.mean_batch_occupancy - 0.75).abs() < 1e-3);
+        // Everything drains — including the latency percentiles: a stale
+        // burst must not haunt the next decision window.
+        let w2 = t.window();
+        assert_eq!(w2.completions, 0);
+        assert_eq!(w2.batches, 0);
+        assert_eq!(w2.mean_queue_depth, 0.0);
+        assert_eq!(w2.p95, Duration::ZERO, "p95 is per-window, not a sliding ring");
+        // A window that overflows the 8-slot ring keeps its most recent
+        // samples: 4 slow then 16 fast ones — the slow tail is gone.
+        for _ in 0..4 {
+            t.record_latency(Duration::from_millis(500));
+        }
+        for _ in 0..16 {
+            t.record_latency(Duration::from_millis(100));
+        }
+        let w3 = t.window();
+        assert_eq!(w3.completions, 20);
+        assert_eq!(w3.p50, Duration::from_millis(100));
+        assert_eq!(w3.p95, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn in_flight_gauge_tracks_executing_batches() {
+        let t = Telemetry::with_window(8, 1);
+        assert_eq!(t.in_flight(), 0);
+        t.batch_started(6);
+        t.batch_started(2);
+        assert_eq!(t.in_flight(), 8);
+        t.record_batch(6, 8, 0);
+        assert_eq!(t.in_flight(), 2);
+        t.record_batch(2, 8, 0);
+        assert_eq!(t.in_flight(), 0);
+        // Unmatched record_batch saturates instead of wrapping.
+        t.record_batch(4, 8, 0);
+        assert_eq!(t.in_flight(), 0);
+    }
+
+    #[test]
+    fn empty_window_is_zeroed() {
+        let t = Telemetry::new(3);
+        let w = t.window();
+        assert_eq!(w.completions, 0);
+        assert_eq!(w.p95, Duration::ZERO);
+        assert_eq!(w.cv_proxy, 0.0);
+        assert_eq!(w.cv_proxy_per_layer.len(), 3);
+        assert_eq!(w.cv_samples, 0);
+    }
+
+    #[test]
+    fn cv_sampler_flows_through_window() {
+        let t = Telemetry::new(2);
+        t.cv_sampler().record(0, 10, 100, 4);
+        t.cv_sampler().record(1, 30, 100, 4);
+        let w = t.window();
+        assert!((w.cv_proxy - 40.0 / 200.0).abs() < 1e-12);
+        assert!((w.cv_proxy_per_layer[0] - 0.1).abs() < 1e-12);
+        assert!((w.cv_proxy_per_layer[1] - 0.3).abs() < 1e-12);
+        assert_eq!(w.cv_samples, 8);
+        assert_eq!(t.window().cv_samples, 0, "drained");
+    }
+
+    #[test]
+    fn records_are_lock_free_across_threads() {
+        let t = Telemetry::new(1);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = &t;
+                s.spawn(move || {
+                    for i in 0..250 {
+                        t.record_latency(Duration::from_micros(100 + i));
+                        t.record_batch(2, 4, 1);
+                    }
+                });
+            }
+        });
+        let w = t.window();
+        assert_eq!(w.completions, 1000);
+        assert_eq!(w.batches, 1000);
+        assert!(w.p95 >= Duration::from_micros(100));
+        assert!((w.mean_batch_occupancy - 0.5).abs() < 1e-9);
+        assert!((w.mean_queue_depth - 1.0).abs() < 1e-9);
+    }
+}

@@ -208,6 +208,74 @@ pub fn greedy_paired_policy(
     Ok(PairedPolicyResult { policy, acc, exact_acc, base_acc, power_norm })
 }
 
+/// Build the adaptive-QoS [`crate::qos::Ladder`] for one engine/dataset:
+/// exact → greedy mixed → greedy paired → aggressive uniform, each rung
+/// tagged with its measured (synthetic) accuracy loss and MAC-weighted
+/// normalized power. Candidate rungs that fail to *descend* the power axis
+/// are dropped rather than reported twice — e.g. a paired search that found
+/// no upgrade ties the mixed rung, and a greedy search that kept every
+/// layer exact ties the exact rung — so the result is always a valid
+/// ladder whatever the searches returned.
+pub fn qos_ladder(
+    engine: &Engine,
+    ds: &Dataset,
+    family: Family,
+    m_hi: u32,
+    budget_pct: f64,
+    n_images: usize,
+    n_array: u32,
+) -> Result<crate::qos::Ladder> {
+    use crate::qos::{Ladder, Rung};
+    let n_layers = engine.model.mac_layers();
+    let sens = sensitivity(engine, ds, family, m_hi, n_images)?;
+    let pol = greedy_policy(engine, ds, family, m_hi, budget_pct, n_images, n_array, &sens)?;
+    let mixed = pol.layer_policy()?;
+    let pres = greedy_paired_policy(
+        engine, ds, family, m_hi, n_images, n_array, &sens, &mixed, pol.exact_acc,
+    )?;
+    let uniform = LayerPolicy::uniform(family, m_hi, true, n_layers)?;
+    let uni_acc = evaluate(engine, ds, &ForwardOpts::approx(family, m_hi, true), n_images, 1)?;
+    let exact_policy = LayerPolicy::uniform(Family::Exact, 0, false, n_layers)?;
+    let uniform_power = uniform.power_norm(&engine.model, n_array);
+    let candidates = vec![
+        Rung {
+            name: "exact".into(),
+            est_loss: 0.0,
+            power_norm: 1.0,
+            policy: Arc::new(exact_policy),
+        },
+        Rung {
+            name: "greedy-mixed".into(),
+            est_loss: (pol.exact_acc - pol.acc).max(0.0),
+            power_norm: pol.power_norm,
+            policy: Arc::new(mixed),
+        },
+        Rung {
+            name: "greedy-paired".into(),
+            est_loss: (pres.exact_acc - pres.acc).max(0.0),
+            power_norm: pres.power_norm,
+            policy: Arc::new(pres.policy),
+        },
+        Rung {
+            name: "aggressive-uniform".into(),
+            est_loss: (pol.exact_acc - uni_acc).max(0.0),
+            power_norm: uniform_power,
+            policy: Arc::new(uniform),
+        },
+    ];
+    let mut rungs: Vec<Rung> = Vec::new();
+    for r in candidates {
+        let descends = match rungs.last() {
+            None => true,
+            Some(prev) => r.power_norm < prev.power_norm - 1e-12,
+        };
+        if descends {
+            rungs.push(r);
+        }
+    }
+    Ladder::new(rungs)
+}
+
 /// CLI driver: sensitivity table + greedy policy for one (net, family).
 /// When `paired` is set, the mixed result seeds the paired greedy search
 /// and the paired policy becomes the artifact. When `policy_out` is set,
@@ -426,6 +494,38 @@ mod tests {
         )
         .unwrap();
         assert_eq!(acc, 60.0 / 64.0, "paired perforated m=1 mirror");
+    }
+
+    #[test]
+    fn hermetic_qos_ladder_descends_power_at_bounded_loss() {
+        // The QoS-ladder artifact on the hermetic set: four rungs (the
+        // paired search strictly dominates the mixed policy there, so
+        // nothing collapses), power strictly descending, the accurate end
+        // lossless and the aggressive end genuinely lossy — exactly the
+        // trade-off surface the governor walks.
+        let (engine, ds) = hermetic_engine_and_ds();
+        let ladder = qos_ladder(&engine, &ds, Family::Perforated, 3, 0.8, ds.n, 64).unwrap();
+        assert_eq!(ladder.len(), 4, "{}", ladder.describe());
+        assert_eq!(ladder.rung(0).name, "exact");
+        assert_eq!(ladder.rung(1).name, "greedy-mixed");
+        assert_eq!(ladder.rung(2).name, "greedy-paired");
+        assert_eq!(ladder.rung(3).name, "aggressive-uniform");
+        for w in ladder.rungs().windows(2) {
+            assert!(
+                w[1].power_norm < w[0].power_norm,
+                "{} !< {}",
+                w[1].power_norm,
+                w[0].power_norm
+            );
+        }
+        assert_eq!(ladder.rung(0).est_loss, 0.0);
+        assert_eq!(ladder.rung(1).est_loss, 0.0, "greedy keeps zero loss here");
+        assert_eq!(ladder.rung(2).est_loss, 0.0, "paired keeps zero loss here");
+        assert!(ladder.rung(3).est_loss > 0.0, "uniform m=3 must be lossy");
+        // The artifact roundtrips and validates against the model.
+        let back = crate::qos::Ladder::parse(&ladder.to_json().render()).unwrap();
+        assert_eq!(back.describe(), ladder.describe());
+        back.validate_for(&engine.model).unwrap();
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!                   [--lut] [--json out.json]     # Tables 2-4
 //! cvapprox pareto   [--nets a,b] [--n 200]        # Fig 10
 //! cvapprox e2e      [--net resnet8] [--n 200]     # end-to-end service demo
+//! cvapprox qos-ladder [--hermetic] [--json l.json] # adaptive-QoS ladder artifact
 //! cvapprox info                                   # artifact inventory
 //! ```
 
@@ -34,7 +35,7 @@ use crate::{artifacts_dir, runtime};
 const KNOWN_OPTS: &[&str] = &[
     "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
     "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
-    "policy", "paired",
+    "policy", "paired", "hermetic",
 ];
 
 pub fn cli_main() {
@@ -60,12 +61,14 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("pareto") => cmd_pareto(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("layerwise") => cmd_layerwise(&args),
+        Some("qos-ladder") => cmd_qos_ladder(&args),
         Some("figure4") => cmd_figure4(&args),
         Some("info") => cmd_info(),
         other => {
             bail!(
                 "unknown or missing subcommand {:?}; try: table1 figure7 figure8 \
-                 figure9 table5 accuracy pareto e2e layerwise figure4 info",
+                 figure9 table5 accuracy pareto e2e layerwise qos-ladder figure4 \
+                 info",
                 other
             )
         }
@@ -241,9 +244,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     println!("  accuracy:        {:.3} ({correct}/{n})", correct as f64 / n as f64);
     println!("  throughput:      {:.1} img/s", snap.throughput_rps);
     println!(
-        "  latency:         mean {:.2} ms, ~p95 {:.2} ms (incl. queueing)",
+        "  latency:         mean {:.2} ms, p50/p95/p99 {:.2}/{:.2}/{:.2} ms \
+         (histogram, incl. queueing)",
         snap.mean_latency.as_secs_f64() * 1e3,
-        snap.p95_latency.as_secs_f64() * 1e3
+        snap.p50_latency.as_secs_f64() * 1e3,
+        snap.p95_latency.as_secs_f64() * 1e3,
+        snap.p99_latency.as_secs_f64() * 1e3
     );
     println!(
         "  batches:         {} over {} workers (avg {:.1} img/batch)",
@@ -308,6 +314,57 @@ fn cmd_figure4(args: &Args) -> Result<()> {
          effective control-variate coefficient — paper Fig. 4)",
         cv_sum / cv_n as f64
     );
+    Ok(())
+}
+
+/// Generate the adaptive-QoS ladder artifact (exact → greedy mixed →
+/// greedy paired → aggressive uniform; see `qos::Ladder`). `--hermetic`
+/// builds it on the checked-in hermetic mini-artifacts — deterministic and
+/// artifact-free, which is what the CI smoke and `benches/qos_adaptive.rs`
+/// use; otherwise `--net`/`--datasets` select from `artifacts/`.
+fn cmd_qos_ladder(args: &Args) -> Result<()> {
+    let hermetic = args.flag("hermetic");
+    let (root, net, ds_name) = if hermetic {
+        (crate::hermetic_dir(), "hermnet".to_string(), "hsynth".to_string())
+    } else {
+        (
+            artifacts_dir(),
+            args.get_or("net", "resnet8").to_string(),
+            args.get_or("datasets", "synth10").to_string(),
+        )
+    };
+    let family = Family::from_name(args.get_or("family", "perforated"))
+        .context("bad family")?;
+    let m_hi: u32 = args.get_or("m", "3").parse()?;
+    let budget: f64 = args.get_or("budget", "0.8").parse()?;
+    let n_array = args.get_usize("array", 64)? as u32;
+    let model = loader::load_model(&root.join(format!("models/{net}_{ds_name}.cvm")))?;
+    let ds = Dataset::load(&root.join(format!("data/{ds_name}_test.cvd")))?;
+    let n = args.get_usize("n", 150)?.min(ds.n);
+    let engine = Engine::new(model);
+    println!(
+        "QoS ladder: {net}/{ds_name}, {} m_hi={m_hi}, budget {budget}% \
+         ({n} images, {n_array}x{n_array} array)\n",
+        family.name()
+    );
+    let ladder = layerwise::qos_ladder(&engine, &ds, family, m_hi, budget, n, n_array)?;
+    println!(
+        "{:<20} {:>10} {:>12}  policy",
+        "rung", "power", "est_loss"
+    );
+    for r in ladder.rungs() {
+        println!(
+            "{:<20} {:>9.3}x {:>11.2}%  {}",
+            r.name,
+            r.power_norm,
+            100.0 * r.est_loss,
+            r.policy.describe()
+        );
+    }
+    if let Some(path) = args.get("json") {
+        ladder.save_json(std::path::Path::new(path))?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 
@@ -376,5 +433,24 @@ mod tests {
         for cmd in ["figure7", "figure8", "figure9", "table5"] {
             run(vec![cmd.into()]).unwrap();
         }
+    }
+
+    #[test]
+    fn qos_ladder_cli_runs_on_hermetic() {
+        let path = std::env::temp_dir()
+            .join(format!("cvapprox_qos_ladder_{}.json", std::process::id()));
+        run(vec![
+            "qos-ladder".into(),
+            "--hermetic".into(),
+            "--n".into(),
+            "32".into(),
+            "--json".into(),
+            path.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let ladder = crate::qos::Ladder::load(&path).unwrap();
+        assert!(ladder.len() >= 2, "{}", ladder.describe());
+        assert_eq!(ladder.rung(0).name, "exact");
+        let _ = std::fs::remove_file(&path);
     }
 }

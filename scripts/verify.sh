@@ -85,6 +85,19 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
         echo "error: bench did not write BENCH_paired.json" >&2
         exit 1
     fi
+
+    # Adaptive QoS: a bursty trace must drive the governor down the ladder
+    # and back up (>= 2 transitions recorded in BENCH_qos.json), with every
+    # reply bit-identical to the static forward of its epoch's rung; the
+    # bench asserts all of it and emits the ladder artifact too.
+    echo "== qos smoke: qos_adaptive (quick budgets) =="
+    CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench qos_adaptive
+    if [ -f BENCH_qos.json ]; then
+        echo "== BENCH_qos.json written =="
+    else
+        echo "error: bench did not write BENCH_qos.json" >&2
+        exit 1
+    fi
 fi
 
 # Lint gates (after the correctness gates, so a style failure never masks a
