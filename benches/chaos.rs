@@ -1,0 +1,383 @@
+//! Chaos bench: the self-healing serving plane under deterministic fault
+//! injection.
+//!
+//! Runs entirely on the checked-in hermetic artifacts (no `make artifacts`,
+//! no network — CI always executes it) and pins the PR-6 robustness
+//! contract with hard assertions, not just reporting:
+//!
+//! 1. **Chaos property** — a seeded [`cvapprox::fault::FaultPlan`] flips
+//!    LUT/plan bits, panics workers, injects spikes and drops replies while
+//!    an open-loop burst flows through the pool. Every request resolves to
+//!    exactly one reply; every `Ok` is **bit-identical** to the fault-free
+//!    static forward (zero silent corruption — the assertion this bench
+//!    exists for); every `Err` is a typed `WorkerCrashed`/`Integrity`.
+//! 2. **Time-to-heal** — targeted corruption of a prepared LUT stripe and a
+//!    cached plan panel against a quiet pool; counts the requests until the
+//!    heal counter moves and bounds it (≤ [`HEAL_BUDGET`] batches).
+//! 3. **Admission smoke** — bounded-queue overload rejection, deadline
+//!    expiry at dequeue, and `infer_with_retry` surviving a panic schedule.
+//!
+//! Emits `BENCH_fault.json`: availability, error counts by kind,
+//! injected/healed/replayed/restart counters, per-cache time-to-heal and
+//! the `silent_corruptions == 0` field CI checks.
+//!
+//! Env knobs: `CVAPPROX_FAULT_SEED` (schedule seed, default 1002 — CI runs
+//! two fixed seeds), `CVAPPROX_BENCH_QUICK=1` (smaller burst),
+//! `CVAPPROX_THREADS` pinned to 1 unless set.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use cvapprox::approx::Family;
+use cvapprox::coordinator::{InferenceService, MetricsSnapshot, ReplyError, ServiceConfig};
+use cvapprox::datasets::Dataset;
+use cvapprox::fault::FaultConfig;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::{loader, Engine, ForwardOpts, Model};
+use cvapprox::util::json::Json;
+
+const N_ARRAY: u32 = 64;
+const WORKERS: usize = 2;
+const BATCH: usize = 4;
+const FAMILY: Family = Family::Perforated;
+const M: u32 = 2;
+/// Max batches the targeted-corruption probe may take to observe a heal.
+const HEAL_BUDGET: usize = 80;
+
+fn load_hermetic() -> (Model, Dataset) {
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm"))
+        .expect("hermetic model (regenerate with scripts/gen_hermetic_golden.py)");
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).expect("hermetic dataset");
+    (model, ds)
+}
+
+/// Start a pool at the uniform (FAMILY, M, cv) point with LUTs prepared —
+/// so LUT corruption always has a target — and the given fault plan.
+fn service(model: &Model, faults: FaultConfig, queue_cap: usize) -> InferenceService {
+    let mut engine = Engine::new(model.clone());
+    engine.prepare_lut(FAMILY, M);
+    InferenceService::start(
+        engine,
+        ServiceConfig {
+            family: FAMILY,
+            m: M,
+            use_cv: true,
+            n_array: N_ARRAY,
+            workers: WORKERS,
+            batch_size: BATCH,
+            batch_timeout: Duration::from_micros(500),
+            queue_cap,
+            faults: Some(faults),
+            ..Default::default()
+        },
+    )
+    .expect("service starts")
+}
+
+/// Silence the backtrace spam from *injected* worker panics (they are the
+/// point of this bench); every other panic still reports normally.
+fn quiet_injected_panics() {
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let on_worker = std::thread::current()
+            .name()
+            .is_some_and(|n| n.starts_with("cvapprox-worker-"));
+        let injected = info
+            .payload()
+            .downcast_ref::<&str>()
+            .is_some_and(|s| s.contains("injected worker panic"));
+        if !(on_worker && injected) {
+            default_hook(info);
+        }
+    }));
+}
+
+/// Fault-free reference logits, memoized per dataset index.
+struct Reference {
+    engine: Engine,
+    opts: ForwardOpts,
+    cache: HashMap<usize, Vec<f64>>,
+}
+
+impl Reference {
+    fn new(model: &Model) -> Reference {
+        Reference {
+            engine: Engine::new(model.clone()),
+            opts: ForwardOpts::approx(FAMILY, M, true),
+            cache: HashMap::new(),
+        }
+    }
+
+    fn logits(&mut self, ds: &Dataset, idx: usize) -> &Vec<f64> {
+        let (engine, opts) = (&self.engine, &self.opts);
+        self.cache
+            .entry(idx)
+            .or_insert_with(|| engine.forward(&ds.image(idx), opts).unwrap())
+    }
+}
+
+struct ChaosOutcome {
+    total: u64,
+    ok: u64,
+    worker_crashed: u64,
+    integrity: u64,
+    availability: f64,
+    snap: MetricsSnapshot,
+}
+
+/// Phase 1: the chaos property — exactly one reply per request, zero
+/// silent corruption, only typed errors.
+fn chaos_property(model: &Model, ds: &Dataset, seed: u64, n: usize) -> ChaosOutcome {
+    let faults = FaultConfig {
+        seed,
+        lut_flip_per_mille: 40,
+        plan_flip_per_mille: 25,
+        panic_per_mille: 40,
+        spike_per_mille: 25,
+        spike: Duration::from_millis(1),
+        drop_per_mille: 20,
+    };
+    let svc = service(model, faults, 0);
+    let mut reference = Reference::new(model);
+    let pendings: Vec<_> = (0..n)
+        .map(|i| svc.submit(ds.image(i % ds.n)).expect("open admission under chaos"))
+        .collect();
+    let (mut ok, mut worker_crashed, mut integrity) = (0u64, 0u64, 0u64);
+    for (i, p) in pendings.into_iter().enumerate() {
+        match p.wait_reply() {
+            Ok(reply) => {
+                assert_eq!(
+                    &reply.logits,
+                    reference.logits(ds, i % ds.n),
+                    "SILENT CORRUPTION: Ok reply for img {i} diverged from the \
+                     fault-free reference"
+                );
+                ok += 1;
+            }
+            Err(ReplyError::WorkerCrashed) => worker_crashed += 1,
+            Err(ReplyError::Integrity) => integrity += 1,
+            Err(e) => panic!("untyped/unexpected error under chaos: {e}"),
+        }
+    }
+    let total = n as u64;
+    assert_eq!(ok + worker_crashed + integrity, total, "exactly one reply per request");
+    let availability = ok as f64 / total as f64;
+    assert!(availability >= 0.80, "availability collapsed under chaos: {ok}/{total}");
+    let snap = svc.shutdown();
+    assert!(snap.injected_faults > 0, "the fault schedule never fired");
+    ChaosOutcome { total, ok, worker_crashed, integrity, availability, snap }
+}
+
+enum Target {
+    Lut,
+    Plan,
+}
+
+/// Phase 2: targeted corruption against a quiet pool; returns the number of
+/// serial requests until the heal counter moved. Every reply along the way
+/// must stay bit-identical (detection happens before the answer).
+fn time_to_heal(model: &Model, ds: &Dataset, seed: u64, target: Target) -> usize {
+    let svc = service(model, FaultConfig::quiet(seed), 0);
+    let mut reference = Reference::new(model);
+    // Warm one request so the serving path (plans, scratch) is steady.
+    let r = svc.infer(ds.image(0)).expect("warm request");
+    assert_eq!(&r.logits, reference.logits(ds, 0));
+    let hit = match target {
+        Target::Lut => svc.engine().corrupt_lut(seed, 100, 256, 24).map(|_| ()),
+        Target::Plan => svc.engine().corrupt_plan(seed, 11, 3).map(|_| ()),
+    };
+    assert!(hit.is_some(), "corruption target must exist (LUTs prepared, plans warmed)");
+    assert!(!svc.engine().verify_integrity().is_clean(), "corruption must be visible");
+    let mut served = 0usize;
+    while svc.snapshot().heal_events == 0 {
+        assert!(
+            served < HEAL_BUDGET,
+            "no heal within {HEAL_BUDGET} batches of targeted corruption"
+        );
+        let idx = served % ds.n;
+        let reply = svc.infer(ds.image(idx)).expect("quiet pool keeps serving");
+        assert_eq!(
+            &reply.logits,
+            reference.logits(ds, idx),
+            "reply served off corrupted state (request {served})"
+        );
+        served += 1;
+    }
+    assert!(svc.engine().verify_integrity().is_clean(), "healing must restore checksums");
+    let snap = svc.shutdown();
+    assert!(snap.heal_events >= 1);
+    assert!(snap.replayed_batches >= 1, "the corrupted batch was never replayed");
+    served
+}
+
+struct SmokeOutcome {
+    overload_submitted: u64,
+    overload_rejected: u64,
+    deadline_expired: u64,
+    retry_served: u64,
+}
+
+/// Phase 3: admission-control and client-robustness smoke.
+fn admission_smoke(model: &Model, ds: &Dataset, seed: u64) -> SmokeOutcome {
+    // Bounded queue + one slow worker (every batch spikes): a burst must
+    // split into accepted-and-served vs typed Overloaded.
+    let slow = FaultConfig {
+        spike_per_mille: 1000,
+        spike: Duration::from_millis(10),
+        ..FaultConfig::quiet(seed)
+    };
+    let svc = InferenceService::start(
+        Engine::new(model.clone()),
+        ServiceConfig {
+            family: FAMILY,
+            m: M,
+            use_cv: true,
+            n_array: N_ARRAY,
+            workers: 1,
+            batch_size: 1,
+            batch_timeout: Duration::from_micros(200),
+            queue_cap: 2,
+            faults: Some(slow),
+            ..Default::default()
+        },
+    )
+    .expect("service starts");
+    let submitted = 16u64;
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..submitted {
+        match svc.try_submit(ds.image(i as usize % ds.n), None) {
+            Ok(p) => accepted.push(p),
+            Err(ReplyError::Overloaded) => rejected += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "queue_cap=2 must shed part of an instant 16-burst");
+    for p in accepted {
+        p.wait_reply().expect("accepted requests must serve");
+    }
+    // Deadline expiry: enqueue behind a 10 ms batch with a 2 ms budget.
+    let pa = svc.submit(ds.image(0)).expect("reopenable");
+    std::thread::sleep(Duration::from_millis(3));
+    let pb = svc
+        .submit_with_deadline(ds.image(1), Duration::from_millis(2))
+        .expect("admission is open");
+    pa.wait_reply().expect("undeadlined request serves");
+    assert_eq!(pb.wait_reply().unwrap_err(), ReplyError::Deadline);
+    let snap = svc.shutdown();
+    assert_eq!(snap.rejected_overload, rejected);
+    assert!(snap.expired_deadline >= 1);
+
+    // Client retry rides out a panic schedule.
+    let crashy = FaultConfig { panic_per_mille: 300, ..FaultConfig::quiet(seed ^ 0xABCD) };
+    let svc = service(model, crashy, 0);
+    let mut reference = Reference::new(model);
+    let retry_served = 12u64;
+    for i in 0..retry_served {
+        let idx = i as usize % ds.n;
+        let reply = svc
+            .infer_with_retry(&ds.image(idx), 20, Duration::from_micros(200))
+            .expect("retry must eventually land on a surviving worker");
+        assert_eq!(&reply.logits, reference.logits(ds, idx));
+    }
+    let crashy_snap = svc.shutdown();
+    assert_eq!(crashy_snap.completed, retry_served);
+    SmokeOutcome {
+        overload_submitted: submitted,
+        overload_rejected: rejected,
+        deadline_expired: snap.expired_deadline,
+        retry_served,
+    }
+}
+
+fn main() {
+    if std::env::var("CVAPPROX_THREADS").is_err() {
+        std::env::set_var("CVAPPROX_THREADS", "1");
+    }
+    quiet_injected_panics();
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let seed = std::env::var("CVAPPROX_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(1002);
+    println!("== bench: chaos (hermetic, seed {seed}) ==");
+    let (model, ds) = load_hermetic();
+    let n = if quick { 240 } else { 720 };
+
+    // ---- phase 1: chaos property ----------------------------------------
+    let chaos = chaos_property(&model, &ds, seed, n);
+    println!(
+        "chaos: {}/{} ok ({:.1}% available), {} worker-crashed, {} integrity; \
+         {} faults injected, {} restarts, {} heals, {} alarms, {} replays",
+        chaos.ok,
+        chaos.total,
+        100.0 * chaos.availability,
+        chaos.worker_crashed,
+        chaos.integrity,
+        chaos.snap.injected_faults,
+        chaos.snap.worker_restarts,
+        chaos.snap.heal_events,
+        chaos.snap.integrity_alarms,
+        chaos.snap.replayed_batches,
+    );
+
+    // ---- phase 2: time-to-heal -------------------------------------------
+    let heal_lut = time_to_heal(&model, &ds, seed, Target::Lut);
+    let heal_plan = time_to_heal(&model, &ds, seed, Target::Plan);
+    println!("time-to-heal: LUT stripe in {heal_lut} batch(es), plan panel in {heal_plan}");
+
+    // ---- phase 3: admission smoke ----------------------------------------
+    let smoke = admission_smoke(&model, &ds, seed);
+    println!(
+        "admission: {}/{} shed as Overloaded, {} deadline-expired, {} served via retry",
+        smoke.overload_rejected,
+        smoke.overload_submitted,
+        smoke.deadline_expired,
+        smoke.retry_served,
+    );
+
+    // ---- report ----------------------------------------------------------
+    let s = &chaos.snap;
+    let json = Json::obj()
+        .field("bench", "chaos")
+        .field("model", "hermnet_hsynth (hermetic)")
+        .field("seed", seed as i64)
+        .field("quick", quick)
+        .field("workers", WORKERS)
+        .field("batch_size", BATCH)
+        .field("requests", chaos.total as i64)
+        .field("ok", chaos.ok as i64)
+        .field("worker_crashed", chaos.worker_crashed as i64)
+        .field("integrity_refused", chaos.integrity as i64)
+        .field("availability", chaos.availability)
+        // Every Ok reply was bit-compared against the fault-free reference
+        // above; reaching this line means none diverged.
+        .field("silent_corruptions", 0i64)
+        .field("injected_faults", s.injected_faults as i64)
+        .field("worker_restarts", s.worker_restarts as i64)
+        .field("heal_events", s.heal_events as i64)
+        .field("integrity_alarms", s.integrity_alarms as i64)
+        .field("replayed_batches", s.replayed_batches as i64)
+        .field("crashed_replies", s.crashed_replies as i64)
+        .field("chaos_images_s", s.throughput_rps)
+        .field("chaos_p95_ms", s.p95_latency.as_secs_f64() * 1e3)
+        .field(
+            "time_to_heal_batches",
+            Json::obj().field("lut", heal_lut).field("plan", heal_plan),
+        )
+        .field(
+            "admission",
+            Json::obj()
+                .field("submitted", smoke.overload_submitted as i64)
+                .field("rejected_overload", smoke.overload_rejected as i64)
+                .field("deadline_expired", smoke.deadline_expired as i64)
+                .field("retry_served", smoke.retry_served as i64),
+        );
+    let path = "BENCH_fault.json";
+    match std::fs::write(path, json.render()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+    println!("chaos OK");
+}

@@ -264,11 +264,17 @@ pub fn w_hat_pos_q1(w: u8, m: u32) -> i32 {
 
 /// 256×256 lookup table of AM products for one (family, m, polarity) — the
 /// hardware-faithful path used by the systolic simulator (TFApprox-style).
+///
+/// Each table carries a build-time content checksum so runtime corruption
+/// (an SRAM bit-flip, a chaos injection from `fault::FaultPlan`) can be
+/// detected by recomputation and healed by rebuilding the table from the
+/// closed-form / structural product functions.
 pub struct MulLut {
     pub family: Family,
     pub m: u32,
     pub polarity: Polarity,
     table: Vec<i32>, // [w * 256 + a]
+    checksum: u64,   // digest of `table` at construction
 }
 
 impl MulLut {
@@ -297,12 +303,43 @@ impl MulLut {
                 table[w * 256 + a] = f(w as u8, a as u8);
             }
         }
-        MulLut { family, m, polarity, table }
+        let checksum = crate::util::hash::checksum_i32s(&table);
+        MulLut { family, m, polarity, table, checksum }
     }
 
     #[inline]
     pub fn mul(&self, w: u8, a: u8) -> i32 {
         self.table[(w as usize) * 256 + a as usize]
+    }
+
+    /// Content digest stamped at construction.
+    pub fn checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    /// Recompute the digest; `false` means the table bits no longer match
+    /// what was built (corruption).
+    pub fn verify(&self) -> bool {
+        crate::util::hash::checksum_i32s(&self.table) == self.checksum
+    }
+
+    /// Chaos helper: a copy with `bit` flipped in each of `span` consecutive
+    /// entries starting at `entry` (wrapping), keeping the *original*
+    /// checksum — so [`MulLut::verify`] on the copy fails, modelling an
+    /// undetected in-place memory fault.
+    pub fn with_flipped_bits(&self, entry: usize, span: usize, bit: u32) -> MulLut {
+        let mut table = self.table.clone();
+        let n = table.len();
+        for i in 0..span.max(1) {
+            table[(entry + i) % n] ^= 1i32 << (bit % 31);
+        }
+        MulLut {
+            family: self.family,
+            m: self.m,
+            polarity: self.polarity,
+            table,
+            checksum: self.checksum,
+        }
     }
 }
 
@@ -462,6 +499,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn lut_checksum_detects_bit_flips() {
+        let lut = MulLut::build_pol(Family::Perforated, 2, Polarity::Neg);
+        assert!(lut.verify());
+        let twin = MulLut::build_pol(Family::Perforated, 2, Polarity::Neg);
+        assert_eq!(lut.checksum(), twin.checksum());
+        let bad = lut.with_flipped_bits(1234, 1, 22);
+        assert!(!bad.verify(), "single flipped bit must break verification");
+        assert_eq!(bad.checksum(), lut.checksum(), "copy keeps the build-time digest");
+        assert_eq!(bad.mul(4, 210), lut.mul(4, 210) ^ (1 << 22), "entry 4*256+210");
+        let burst = lut.with_flipped_bits(65_530, 16, 24);
+        assert!(!burst.verify(), "wrapping burst must break verification");
     }
 
     #[test]

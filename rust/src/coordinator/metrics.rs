@@ -9,6 +9,7 @@ use crate::approx::Family;
 use crate::hw::array_cost;
 use crate::nn::{LayerPolicy, Model};
 use crate::util::stats::Welford;
+use crate::util::sync::lock_clean;
 
 /// Converts inference work (MACs) into modeled energy, using the hw cost
 /// model for the configured array design point.
@@ -161,6 +162,20 @@ struct Inner {
     workers: Vec<WorkerCounters>,
     started: Option<Instant>,
     finished: Option<Instant>,
+    faults: FaultCounters,
+}
+
+/// Robustness counters for the fault/self-healing plane.
+#[derive(Clone, Copy, Debug, Default)]
+struct FaultCounters {
+    rejected_overload: u64,
+    expired_deadline: u64,
+    worker_restarts: u64,
+    heal_events: u64,
+    integrity_alarms: u64,
+    replayed_batches: u64,
+    crashed_replies: u64,
+    injected_faults: u64,
 }
 
 /// Point-in-time copy for reporting.
@@ -188,6 +203,22 @@ pub struct MetricsSnapshot {
     /// Fraction of the service wall-clock each worker spent inside
     /// `forward_batch` (busy / wall); 0 when no wall-clock has elapsed.
     pub worker_occupancy: Vec<f64>,
+    /// Requests rejected at admission by the bounded queue.
+    pub rejected_overload: u64,
+    /// Requests whose deadline expired before execution (dropped at dequeue).
+    pub expired_deadline: u64,
+    /// Crashed workers respawned by the supervisor.
+    pub worker_restarts: u64,
+    /// Corrupt LUTs/plans rebuilt or invalidated by healing.
+    pub heal_events: u64,
+    /// CV-residual band breaches that triggered a checksum sweep.
+    pub integrity_alarms: u64,
+    /// Batches re-executed after an integrity breach.
+    pub replayed_batches: u64,
+    /// Requests answered with a typed `WorkerCrashed` error.
+    pub crashed_replies: u64,
+    /// Faults the injection plan actually applied.
+    pub injected_faults: u64,
 }
 
 impl Metrics {
@@ -199,7 +230,7 @@ impl Metrics {
     /// `record` anchors at the *first* completion, which made a session
     /// with one completed request report `throughput_rps == 0.0`.
     pub fn mark_started(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.started.is_none() {
             g.started = Some(Instant::now());
         }
@@ -210,7 +241,7 @@ impl Metrics {
     /// being silently absent (the lazy grow in `record_batch` only reaches
     /// the highest worker id that actually ran a batch).
     pub fn init_workers(&self, n: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.workers.len() < n {
             g.workers.resize(n, WorkerCounters::default());
         }
@@ -223,7 +254,7 @@ impl Metrics {
         macs: u64,
         power: &PowerModel,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.completed += 1;
         g.latency_us.push(latency.as_secs_f64() * 1e6);
         g.lat_hist.record(latency);
@@ -241,7 +272,7 @@ impl Metrics {
     /// Account one executed batch to pool worker `worker`: `requests` fused
     /// into it and the time the worker spent running it.
     pub fn record_batch(&self, worker: usize, requests: usize, busy: Duration) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.batches += 1;
         if g.workers.len() <= worker {
             g.workers.resize(worker + 1, WorkerCounters::default());
@@ -252,8 +283,49 @@ impl Metrics {
         wc.busy_secs += busy.as_secs_f64();
     }
 
+    /// Count a request rejected at admission (bounded queue full).
+    pub fn record_overload(&self) {
+        lock_clean(&self.inner).faults.rejected_overload += 1;
+    }
+
+    /// Count a request whose deadline expired before execution.
+    pub fn record_deadline_expired(&self) {
+        lock_clean(&self.inner).faults.expired_deadline += 1;
+    }
+
+    /// Count a crashed worker respawned by the supervisor.
+    pub fn record_worker_restart(&self) {
+        lock_clean(&self.inner).faults.worker_restarts += 1;
+    }
+
+    /// Count `n` healed state objects (rebuilt LUTs + invalidated plans).
+    pub fn record_heal(&self, n: usize) {
+        lock_clean(&self.inner).faults.heal_events += n as u64;
+    }
+
+    /// Count a CV-residual band breach (alarm; may be a false positive —
+    /// the checksum sweep arbitrates).
+    pub fn record_integrity_alarm(&self) {
+        lock_clean(&self.inner).faults.integrity_alarms += 1;
+    }
+
+    /// Count a batch re-executed after an integrity breach.
+    pub fn record_replay(&self) {
+        lock_clean(&self.inner).faults.replayed_batches += 1;
+    }
+
+    /// Count `n` requests answered with a typed `WorkerCrashed` error.
+    pub fn record_crashed_replies(&self, n: usize) {
+        lock_clean(&self.inner).faults.crashed_replies += n as u64;
+    }
+
+    /// Count `n` faults the injection plan actually applied.
+    pub fn record_injected_faults(&self, n: usize) {
+        lock_clean(&self.inner).faults.injected_faults += n as u64;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let wall = match (g.started, g.finished) {
             (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
             _ => 0.0,
@@ -287,6 +359,14 @@ impl Metrics {
                 .iter()
                 .map(|w| if wall > 0.0 { w.busy_secs / wall } else { 0.0 })
                 .collect(),
+            rejected_overload: g.faults.rejected_overload,
+            expired_deadline: g.faults.expired_deadline,
+            worker_restarts: g.faults.worker_restarts,
+            heal_events: g.faults.heal_events,
+            integrity_alarms: g.faults.integrity_alarms,
+            replayed_batches: g.faults.replayed_batches,
+            crashed_replies: g.faults.crashed_replies,
+            injected_faults: g.faults.injected_faults,
         }
     }
 }
@@ -443,6 +523,32 @@ mod tests {
         assert_eq!(s.worker_batches, vec![0, 1, 0]);
         assert_eq!(s.worker_requests, vec![0, 2, 0]);
         assert_eq!(s.worker_occupancy.len(), 3);
+    }
+
+    #[test]
+    fn fault_counters_flow_into_snapshot() {
+        let m = Metrics::new();
+        m.record_overload();
+        m.record_overload();
+        m.record_deadline_expired();
+        m.record_worker_restart();
+        m.record_heal(3);
+        m.record_integrity_alarm();
+        m.record_replay();
+        m.record_crashed_replies(4);
+        m.record_injected_faults(2);
+        let s = m.snapshot();
+        assert_eq!(s.rejected_overload, 2);
+        assert_eq!(s.expired_deadline, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.heal_events, 3);
+        assert_eq!(s.integrity_alarms, 1);
+        assert_eq!(s.replayed_batches, 1);
+        assert_eq!(s.crashed_replies, 4);
+        assert_eq!(s.injected_faults, 2);
+        // A fresh snapshot starts all-zero.
+        let z = Metrics::new().snapshot();
+        assert_eq!(z.rejected_overload + z.heal_events + z.worker_restarts, 0);
     }
 
     #[test]

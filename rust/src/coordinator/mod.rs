@@ -15,6 +15,13 @@
 //! warm and install new generations into a live pool without stalling it —
 //! in-flight batches complete on their captured epoch, replies carry it.
 //!
+//! The serving plane is **supervised and self-healing** (see
+//! [`crate::fault`]): workers run their batches under `catch_unwind`, a
+//! supervisor thread respawns crashed workers with exponential backoff,
+//! cache corruption is checksum-detected / CV-band-alarmed, healed in place
+//! and the affected batch replayed, and every accepted request resolves to
+//! exactly one reply — `Ok` or a typed [`ReplyError`].
+//!
 //! * [`service`] — request queue + dynamic batcher + worker pool + hot swap
 //! * [`metrics`] — latency histogram/throughput/energy + per-worker accounting
 
@@ -23,5 +30,6 @@ pub mod service;
 
 pub use metrics::{LatencyHistogram, MetricsSnapshot, PowerModel};
 pub use service::{
-    default_service_workers, InferenceService, PolicyInstaller, ServiceConfig,
+    default_service_workers, InferenceService, Pending, PolicyInstaller, Reply, ReplyError,
+    ServiceConfig,
 };

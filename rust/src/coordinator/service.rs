@@ -1,4 +1,5 @@
-//! The inference service: request queue → dynamic batcher → worker pool.
+//! The inference service: request queue → dynamic batcher → supervised,
+//! self-healing worker pool.
 //!
 //! std-threads + a Mutex/Condvar queue (no tokio in the offline vendor
 //! set). Requests are submitted from any thread; each pool worker drains
@@ -8,33 +9,51 @@
 //! each request through its own oneshot channel.
 //!
 //! Hardening invariants (tested below):
+//! * Every accepted request gets **exactly one reply**: `Ok(Reply)` or a
+//!   typed [`ReplyError`] — never a hang, never a panic at the caller.
+//! * A crashed worker (injected or organic panic) answers its in-flight
+//!   batch with [`ReplyError::WorkerCrashed`] and retires; the supervisor
+//!   thread respawns a replacement (fresh scratch, exponential backoff),
+//!   so the pool heals instead of shrinking to zero.
+//! * Cache corruption (flipped LUT / plan-panel bits, injected via
+//!   [`crate::fault::FaultPlan`] or real) is detected by checksums plus the
+//!   CV-residual band monitor, healed in place
+//!   ([`Engine::heal_integrity`]), and the affected batch is **replayed** —
+//!   no silently-corrupted reply ever leaves the pool.
+//! * Locks never cascade a crash: all queue/metrics state uses the
+//!   poison-tolerant helpers in [`crate::util::sync`].
 //! * NaN logits never panic a worker: [`argmax`] ranks NaN below every real
 //!   value, and an all-NaN output answers the request with `Err` instead of
 //!   a garbage class.
-//! * `submit`/`infer` return `Err` after shutdown/close or when the pool
-//!   has no live workers — they never panic the caller.
 //! * A malformed (wrong-shape) image fails alone; it is split out before
 //!   the batch is fused so neighbors still get answers.
 //! * A bad per-layer policy (`ServiceConfig::policy` /
 //!   `CVAPPROX_SERVICE_POLICY`) fails at `start` — before any worker
 //!   spawns — so it can never poison a live pool.
+//! * Admission control: an optional bounded queue rejects with
+//!   [`ReplyError::Overloaded`] instead of buffering without bound, and
+//!   per-request deadlines are enforced at dequeue
+//!   ([`ReplyError::Deadline`]).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{AssertUnwindSafe, catch_unwind};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use super::metrics::{Metrics, MetricsSnapshot, PowerModel};
 use crate::approx::Family;
+use crate::fault::{Backoff, BatchFaults, FaultConfig, FaultPlan, IntegrityMonitor, retry};
 use crate::nn::{
-    Engine, ForwardOpts, LayerPolicy, Model, PolicySwitch, Scratch, SharedPolicy,
-    StampedPolicy, Tensor,
+    CvProxySampler, Engine, ForwardOpts, LayerPolicy, Model, PolicySwitch, Scratch,
+    SharedPolicy, StampedPolicy, Tensor,
 };
 use crate::qos::Telemetry;
+use crate::util::sync::{lock_clean, wait_clean, wait_timeout_clean};
 use crate::util::threadpool::default_workers;
 
 /// Worker-pool size: `CVAPPROX_SERVICE_WORKERS` when set to a positive
@@ -76,6 +95,16 @@ pub struct ServiceConfig {
     /// How long the batcher waits to fill a batch before running a partial
     /// one.
     pub batch_timeout: Duration,
+    /// Admission-queue bound: `0` (default) keeps the historic unbounded
+    /// queue; a positive cap rejects excess submits with
+    /// [`ReplyError::Overloaded`] instead of buffering without bound.
+    pub queue_cap: usize,
+    /// Deterministic fault injection (chaos testing). `None` — the default
+    /// unless `CVAPPROX_FAULT_SEED` is set — costs nothing on the batch
+    /// path. `Some` attaches a seeded [`FaultPlan`] and switches the pool
+    /// into chaos mode: per-batch integrity verification instead of the
+    /// periodic sweep.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -89,6 +118,8 @@ impl Default for ServiceConfig {
             workers: default_service_workers(),
             batch_size: 8,
             batch_timeout: Duration::from_millis(2),
+            queue_cap: 0,
+            faults: FaultConfig::from_env(),
         }
     }
 }
@@ -115,6 +146,60 @@ fn resolve_policy(
     }
 }
 
+/// Typed terminal outcome of a request that could not be served. Every
+/// accepted request resolves to `Ok(Reply)` or exactly one of these — the
+/// serving plane never panics a caller and never leaves a `Pending`
+/// hanging.
+#[derive(Clone, Debug, Eq, PartialEq)]
+pub enum ReplyError {
+    /// The service is shut down (or was closed before the submit).
+    Closed,
+    /// The bounded admission queue was full (see `ServiceConfig::queue_cap`).
+    Overloaded,
+    /// The request's deadline expired before a worker dequeued it.
+    Deadline,
+    /// The serving worker crashed (or chaos dropped the reply) before the
+    /// answer could be delivered; the batch was not silently corrupted —
+    /// it simply never completed. Retryable.
+    WorkerCrashed,
+    /// The request itself is unserviceable: wrong input shape, or the model
+    /// produced no finite logits for it.
+    BadInput(String),
+    /// Batch integrity could not be re-established within the replay
+    /// budget (persistent corruption faster than healing).
+    Integrity,
+}
+
+impl ReplyError {
+    /// Whether a client-side retry can plausibly succeed: transient
+    /// capacity/crash conditions are retryable, terminal states and
+    /// per-request defects are not.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ReplyError::Overloaded | ReplyError::WorkerCrashed)
+    }
+}
+
+impl std::fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyError::Closed => f.write_str("inference service is shut down"),
+            ReplyError::Overloaded => {
+                f.write_str("inference service overloaded: request rejected at admission")
+            }
+            ReplyError::Deadline => f.write_str("request deadline expired before execution"),
+            ReplyError::WorkerCrashed => {
+                f.write_str("worker crashed before the reply could be delivered")
+            }
+            ReplyError::BadInput(msg) => f.write_str(msg),
+            ReplyError::Integrity => f.write_str(
+                "batch integrity could not be re-established within the replay budget",
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReplyError {}
+
 /// One classification result.
 #[derive(Clone, Debug)]
 pub struct Reply {
@@ -132,29 +217,44 @@ pub struct Reply {
 struct Request {
     image: Tensor,
     enqueued: Instant,
-    respond: SyncSender<Result<Reply, String>>,
+    /// Absolute deadline; enforced at dequeue time (a worker never spends a
+    /// batch slot on a request its client has already abandoned).
+    deadline: Option<Instant>,
+    respond: SyncSender<std::result::Result<Reply, ReplyError>>,
 }
 
 /// Handle for a submitted request.
 pub struct Pending {
-    rx: Receiver<Result<Reply, String>>,
+    rx: Receiver<std::result::Result<Reply, ReplyError>>,
 }
 
 impl Pending {
-    /// Block until the reply arrives.
+    /// Block until the reply arrives; typed errors. A dropped reply channel
+    /// (worker died between dequeue and answer, or chaos dropped the batch)
+    /// maps to [`ReplyError::WorkerCrashed`] — the caller always gets a
+    /// terminal answer.
+    pub fn wait_reply(self) -> std::result::Result<Reply, ReplyError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ReplyError::WorkerCrashed),
+        }
+    }
+
+    /// Block until the reply arrives (anyhow-flavored convenience).
     pub fn wait(self) -> Result<Reply> {
-        self.rx
-            .recv()
-            .context("service dropped the request")?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.wait_reply().map_err(anyhow::Error::from)
     }
 }
 
 /// MPMC request queue feeding the worker pool: a Mutex'd VecDeque plus a
 /// Condvar, with the dynamic-batching wait built into [`SharedQueue::pop_batch`].
+/// All lock operations are poison-tolerant — a worker that panics while a
+/// sibling waits must not wedge the queue.
 struct SharedQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
+    /// Admission bound; 0 = unbounded.
+    cap: usize,
 }
 
 #[derive(Default)]
@@ -164,17 +264,21 @@ struct QueueInner {
 }
 
 impl SharedQueue {
-    fn new() -> SharedQueue {
-        SharedQueue { inner: Mutex::new(QueueInner::default()), cv: Condvar::new() }
+    fn new(cap: usize) -> SharedQueue {
+        SharedQueue { inner: Mutex::new(QueueInner::default()), cv: Condvar::new(), cap }
     }
 
-    /// Enqueue unless the service was closed; hands the request back on
-    /// rejection so the caller can answer it. (Checked under the same lock
-    /// as `close`, so no request can slip in after the drain decision.)
-    fn push(&self, req: Request) -> std::result::Result<(), Request> {
-        let mut g = self.inner.lock().unwrap();
+    /// Enqueue unless closed or full; hands the request back with the
+    /// rejection reason so the caller can answer it. (Checked under the
+    /// same lock as `close`, so no request can slip in after the drain
+    /// decision.)
+    fn push(&self, req: Request) -> std::result::Result<(), (Request, ReplyError)> {
+        let mut g = lock_clean(&self.inner);
         if g.closed {
-            return Err(req);
+            return Err((req, ReplyError::Closed));
+        }
+        if self.cap > 0 && g.queue.len() >= self.cap {
+            return Err((req, ReplyError::Overloaded));
         }
         g.queue.push_back(req);
         drop(g);
@@ -185,24 +289,28 @@ impl SharedQueue {
     /// Stop accepting; queued work still drains. Wakes every worker so
     /// idle ones can exit.
     fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_clean(&self.inner).closed = true;
         self.cv.notify_all();
+    }
+
+    fn is_closed(&self) -> bool {
+        lock_clean(&self.inner).closed
     }
 
     /// Current queue depth (governor telemetry; racy by nature).
     fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_clean(&self.inner).queue.len()
     }
 
-    /// Answer every still-queued request with `Err(msg)` — used when the
-    /// last worker dies with work left in the queue.
-    fn drain_reject(&self, msg: &str) {
+    /// Answer every still-queued request with the given typed error — used
+    /// when the pool drains its last worker during shutdown.
+    fn drain_reject(&self, err: ReplyError) {
         let drained: Vec<Request> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_clean(&self.inner);
             g.queue.drain(..).collect()
         };
         for req in drained {
-            let _ = req.respond.send(Err(msg.to_string()));
+            let _ = req.respond.send(Err(err.clone()));
         }
     }
 
@@ -212,7 +320,7 @@ impl SharedQueue {
     /// behind (read under the same lock — the telemetry gauge costs no
     /// extra acquisition on the hot path).
     fn pop_batch(&self, max: usize, timeout: Duration) -> Option<(Vec<Request>, usize)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if !g.queue.is_empty() {
                 break;
@@ -220,7 +328,7 @@ impl SharedQueue {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_clean(&self.cv, g);
         }
         let mut batch = Vec::with_capacity(max);
         while batch.len() < max {
@@ -236,7 +344,7 @@ impl SharedQueue {
                 if left.is_zero() {
                     break;
                 }
-                let (g2, wres) = self.cv.wait_timeout(g, left).unwrap();
+                let (g2, timed_out) = wait_timeout_clean(&self.cv, g, left);
                 g = g2;
                 while batch.len() < max {
                     match g.queue.pop_front() {
@@ -244,7 +352,7 @@ impl SharedQueue {
                         None => break,
                     }
                 }
-                if batch.len() >= max || g.closed || wres.timed_out() {
+                if batch.len() >= max || g.closed || timed_out {
                     break;
                 }
             }
@@ -254,23 +362,36 @@ impl SharedQueue {
     }
 }
 
+/// Shutdown/supervision flags shared between the service handle, the
+/// supervisor thread and the workers' [`AliveGuard`]s.
+#[derive(Default)]
+struct SupervisorState {
+    /// Set by `close`-with-intent-to-stop (`shutdown` / `Drop`): the
+    /// supervisor stops respawning once the queue is drained.
+    stopping: AtomicBool,
+    /// Set by the supervisor on exit, after the terminal queue drain — the
+    /// point past which a submit can never be answered.
+    done: AtomicBool,
+}
+
 /// Decrements the live-worker count on scope exit — including a panic
-/// unwind — so `submit` can report a dead pool instead of hanging callers.
-/// When the *last* worker exits it also closes the queue and rejects any
-/// requests still waiting in it: with nobody left to pop them, their reply
-/// channels would otherwise stay open and `Pending::wait` would block
-/// forever. (On graceful shutdown the queue is already closed and drained
-/// by the time the last worker exits, so this is a no-op there.)
+/// unwind. While the service is running, a dead pool is the **supervisor's**
+/// problem (it respawns); only during shutdown, when the last worker exits
+/// with the supervisor no longer respawning, does the guard close and drain
+/// the queue so no `Pending::wait` can block forever.
 struct AliveGuard {
     alive: Arc<AtomicUsize>,
     queue: Arc<SharedQueue>,
+    sup: Arc<SupervisorState>,
 }
 
 impl Drop for AliveGuard {
     fn drop(&mut self) {
-        if self.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+        if self.alive.fetch_sub(1, Ordering::SeqCst) == 1
+            && self.sup.stopping.load(Ordering::SeqCst)
+        {
             self.queue.close();
-            self.queue.drain_reject("inference service has no live workers");
+            self.queue.drain_reject(ReplyError::Closed);
         }
     }
 }
@@ -279,7 +400,10 @@ impl Drop for AliveGuard {
 /// worker instead of a parameter per handle). The policy half is the
 /// hot-swap surface: `switch` is loaded once per batch, `powers` maps each
 /// installed epoch to its precomputed [`PowerModel`] so energy accounting
-/// follows the rung that actually served the batch.
+/// follows the rung that actually served the batch. The fault half is the
+/// chaos surface: `faults` (when attached) draws the per-batch injection
+/// schedule, `monitor` bands the live CV residual, `batch_seq` numbers
+/// batches pool-wide for the periodic integrity sweep.
 #[derive(Clone)]
 struct WorkerShared {
     engine: Arc<Engine>,
@@ -292,19 +416,22 @@ struct WorkerShared {
     base_opts: ForwardOpts,
     base_power: PowerModel,
     alive: Arc<AtomicUsize>,
+    sup: Arc<SupervisorState>,
+    faults: Option<Arc<FaultPlan>>,
+    monitor: IntegrityMonitor,
+    batch_seq: Arc<AtomicU64>,
 }
 
 impl WorkerShared {
     /// Resolve the forward configuration for one batch from a captured
-    /// generation. The CV-proxy sampler is attached here so every batch
-    /// feeds the shared telemetry regardless of rung.
+    /// generation. The CV-proxy sampler is attached per batch in
+    /// `run_batch` (batch-local, folded into shared telemetry only once
+    /// the batch is trusted), not here.
     fn resolve_opts(&self, stamped: &StampedPolicy) -> ForwardOpts {
-        let mut opts = match &stamped.policy {
+        match &stamped.policy {
             Some(p) => ForwardOpts::with_policy(p.clone()),
             None => self.base_opts.clone(),
-        };
-        opts.cv_proxy = Some(self.telemetry.cv_sampler());
-        opts
+        }
     }
 
     /// Power model for a captured generation, memoized per worker: epochs
@@ -317,10 +444,7 @@ impl WorkerShared {
         cache: &'c mut (u64, PowerModel),
     ) -> &'c PowerModel {
         if cache.0 != stamped.epoch {
-            let power = self
-                .powers
-                .lock()
-                .unwrap()
+            let power = lock_clean(&self.powers)
                 .get(&stamped.epoch)
                 .cloned()
                 .unwrap_or_else(|| self.base_power.clone());
@@ -362,7 +486,7 @@ impl PolicyInstaller {
         // Publish under the powers lock so a worker that loads the fresh
         // epoch and immediately looks up its power blocks on this lock
         // instead of falling back to the base model.
-        let mut powers = self.powers.lock().unwrap();
+        let mut powers = lock_clean(&self.powers);
         let epoch = self.switch.install(Some(policy));
         powers.insert(epoch, power);
         while powers.len() > POWER_EPOCHS_KEPT {
@@ -383,10 +507,15 @@ impl PolicyInstaller {
     }
 }
 
-/// A running inference service: a worker pool over one shared engine.
+/// A running inference service: a supervised worker pool over one shared
+/// engine.
 pub struct InferenceService {
     queue: Arc<SharedQueue>,
-    workers: Vec<JoinHandle<()>>,
+    /// Live worker handles; shared with the supervisor, which reaps crashed
+    /// entries and pushes respawned ones.
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    supervisor: Option<JoinHandle<()>>,
+    sup: Arc<SupervisorState>,
     alive: Arc<AtomicUsize>,
     engine: Arc<Engine>,
     switch: Arc<PolicySwitch>,
@@ -414,7 +543,7 @@ impl InferenceService {
             std::env::var("CVAPPROX_SERVICE_POLICY").ok().as_deref(),
         )?;
         let metrics = Arc::new(Metrics::new());
-        let queue = Arc::new(SharedQueue::new());
+        let queue = Arc::new(SharedQueue::new(cfg.queue_cap));
         let telemetry = Arc::new(Telemetry::new(engine.model.mac_layers()));
         // Warm the weight-side plans once, before any worker spawns: the
         // pool shares one PlanCache through the Arc'd engine, so no request
@@ -451,7 +580,9 @@ impl InferenceService {
         metrics.init_workers(cfg.workers.max(1));
         let engine = Arc::new(engine);
         let n_workers = cfg.workers.max(1);
-        let alive = Arc::new(AtomicUsize::new(n_workers));
+        let alive = Arc::new(AtomicUsize::new(0));
+        let sup = Arc::new(SupervisorState::default());
+        let faults = cfg.faults.clone().map(|c| Arc::new(FaultPlan::new(c)));
         let shared = WorkerShared {
             engine: engine.clone(),
             queue: queue.clone(),
@@ -462,20 +593,29 @@ impl InferenceService {
             base_opts,
             base_power: power.clone(),
             alive: alive.clone(),
+            sup: sup.clone(),
+            faults,
+            monitor: IntegrityMonitor::new(),
+            batch_seq: Arc::new(AtomicU64::new(0)),
         };
-        let workers = (0..n_workers)
-            .map(|id| {
-                let shared = shared.clone();
-                let cfg = cfg.clone();
-                std::thread::Builder::new()
-                    .name(format!("cvapprox-worker-{id}"))
-                    .spawn(move || worker_loop(id, shared, cfg))
-                    .expect("spawn service worker")
-            })
-            .collect();
+        let handles: Vec<JoinHandle<()>> =
+            (0..n_workers).map(|id| spawn_worker(id, &shared, &cfg)).collect();
+        let handles = Arc::new(Mutex::new(handles));
+        let next_id = Arc::new(AtomicUsize::new(n_workers));
+        let supervisor = {
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            let handles = handles.clone();
+            std::thread::Builder::new()
+                .name("cvapprox-supervisor".to_string())
+                .spawn(move || supervisor_loop(shared, cfg, handles, next_id))
+                .expect("spawn service supervisor")
+        };
         Ok(InferenceService {
             queue,
-            workers,
+            handles,
+            supervisor: Some(supervisor),
+            sup,
             alive,
             engine,
             switch,
@@ -509,6 +649,13 @@ impl InferenceService {
         self.switch.epoch()
     }
 
+    /// The shared engine: integrity probes (`verify_integrity`,
+    /// `integrity_generation`) and targeted corruption (`corrupt_lut` /
+    /// `corrupt_plan`) for chaos tests and the chaos bench.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
     /// Live queue-depth probe the QoS governor polls at decision time: a
     /// saturated pool whose in-flight batches outlast a whole decision
     /// window completes nothing — indistinguishable from idle on the
@@ -521,18 +668,48 @@ impl InferenceService {
         Arc::new(move || queue.len())
     }
 
-    /// Submit an image; returns a handle to wait on, or `Err` when the
-    /// service is shut down / has no live workers (never panics).
-    pub fn submit(&self, image: Tensor) -> Result<Pending> {
-        if self.alive.load(Ordering::SeqCst) == 0 {
-            bail!("inference service has no live workers");
+    /// Submit an image with typed rejection: `Err(Closed)` after shutdown,
+    /// `Err(Overloaded)` when the bounded queue is full (counted in
+    /// `MetricsSnapshot::rejected_overload`). Never panics, never hangs.
+    ///
+    /// A momentarily empty pool (every worker crashed at once) is NOT
+    /// `Closed`: the supervisor is respawning, the queue is open, and the
+    /// request will be served — only a finished supervisor is terminal.
+    pub fn try_submit(
+        &self,
+        image: Tensor,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Pending, ReplyError> {
+        if self.alive.load(Ordering::SeqCst) == 0 && self.sup.done.load(Ordering::SeqCst) {
+            return Err(ReplyError::Closed);
         }
         let (rtx, rrx) = mpsc::sync_channel(1);
-        let req = Request { image, enqueued: Instant::now(), respond: rtx };
-        if self.queue.push(req).is_err() {
-            bail!("inference service is shut down");
+        let req = Request { image, enqueued: Instant::now(), deadline, respond: rtx };
+        match self.queue.push(req) {
+            Ok(()) => Ok(Pending { rx: rrx }),
+            Err((_req, e)) => {
+                if e == ReplyError::Overloaded {
+                    self.metrics.record_overload();
+                }
+                Err(e)
+            }
         }
-        Ok(Pending { rx: rrx })
+    }
+
+    /// Submit an image; returns a handle to wait on, or `Err` when the
+    /// service is shut down / over capacity (never panics).
+    pub fn submit(&self, image: Tensor) -> Result<Pending> {
+        self.try_submit(image, None).map_err(anyhow::Error::from)
+    }
+
+    /// Submit with a latency budget: the request is answered
+    /// `Err(Deadline)` if no worker dequeues it within `budget`.
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor,
+        budget: Duration,
+    ) -> std::result::Result<Pending, ReplyError> {
+        self.try_submit(image, Some(Instant::now() + budget))
     }
 
     /// Submit and wait (convenience).
@@ -540,12 +717,28 @@ impl InferenceService {
         self.submit(image)?.wait()
     }
 
+    /// Submit-and-wait with client-side retry: transient failures
+    /// ([`ReplyError::retryable`] — overload, worker crash) are retried up
+    /// to `attempts` times under exponential backoff starting at
+    /// `base_backoff`; terminal errors return immediately.
+    pub fn infer_with_retry(
+        &self,
+        image: &Tensor,
+        attempts: usize,
+        base_backoff: Duration,
+    ) -> std::result::Result<Reply, ReplyError> {
+        let mut backoff = Backoff::new(base_backoff, base_backoff * 16);
+        retry(attempts, &mut backoff, ReplyError::retryable, || {
+            self.try_submit(image.clone(), None)?.wait_reply()
+        })
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
     /// Stop accepting new requests; already-queued work still drains.
-    /// Subsequent `submit`/`infer` calls return `Err`.
+    /// Subsequent `submit`/`infer` calls return `Err`. Idempotent.
     pub fn close(&self) {
         self.queue.close();
     }
@@ -557,8 +750,13 @@ impl InferenceService {
     }
 
     fn stop_and_join(&mut self) {
+        self.sup.stopping.store(true, Ordering::SeqCst);
         self.queue.close();
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        let drained: Vec<JoinHandle<()>> = lock_clean(&self.handles).drain(..).collect();
+        for h in drained {
             let _ = h.join();
         }
     }
@@ -570,9 +768,96 @@ impl Drop for InferenceService {
     }
 }
 
+/// Register a worker as alive (on the caller's thread, so `start` returns
+/// with the count already correct) and spawn its serving thread.
+fn spawn_worker(id: usize, shared: &WorkerShared, cfg: &ServiceConfig) -> JoinHandle<()> {
+    shared.alive.fetch_add(1, Ordering::SeqCst);
+    let shared = shared.clone();
+    let cfg = cfg.clone();
+    std::thread::Builder::new()
+        .name(format!("cvapprox-worker-{id}"))
+        .spawn(move || worker_loop(id, shared, cfg))
+        .expect("spawn service worker")
+}
+
+/// Supervisor poll cadence; also bounds how long shutdown lags the last
+/// worker exit.
+const SUPERVISOR_TICK: Duration = Duration::from_millis(1);
+
+/// The supervision loop: reap finished worker threads and — while the
+/// service still has work to serve — respawn replacements (fresh id, fresh
+/// scratch) under exponential backoff, so a crash-looping fault cannot
+/// busy-spin the pool. On the way out (stop requested, queue drained, all
+/// workers joined) it closes and terminally drains the queue: after `done`
+/// is set, no accepted request can still be unanswered.
+fn supervisor_loop(
+    shared: WorkerShared,
+    cfg: ServiceConfig,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    next_id: Arc<AtomicUsize>,
+) {
+    let mut backoff = Backoff::new(Duration::from_millis(1), Duration::from_millis(50));
+    loop {
+        let stopping = shared.sup.stopping.load(Ordering::SeqCst);
+        let mut reaped = 0usize;
+        {
+            let mut hs = lock_clean(&handles);
+            let mut i = 0;
+            while i < hs.len() {
+                if hs[i].is_finished() {
+                    let h = hs.swap_remove(i);
+                    let _ = h.join();
+                    reaped += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Respawn while the service is open for business, or while queued
+        // requests still need a worker to drain them (a crash during
+        // shutdown must not strand the queue).
+        let must_serve = (!stopping && !shared.queue.is_closed()) || shared.queue.len() > 0;
+        if reaped > 0 && must_serve {
+            std::thread::sleep(backoff.next_delay());
+            for _ in 0..reaped {
+                shared.metrics.record_worker_restart();
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                let h = spawn_worker(id, &shared, &cfg);
+                lock_clean(&handles).push(h);
+            }
+        } else if reaped == 0 {
+            backoff.reset();
+        }
+        if stopping && lock_clean(&handles).is_empty() {
+            break;
+        }
+        std::thread::sleep(SUPERVISOR_TICK);
+    }
+    // Terminal drain: everything still queued (e.g. submitted in the close
+    // race window) gets a typed answer before `done` flips.
+    shared.queue.close();
+    shared.queue.drain_reject(ReplyError::Closed);
+    shared.sup.done.store(true, Ordering::SeqCst);
+}
+
+/// Batches between periodic full checksum sweeps in production mode
+/// (no fault plan attached). Chaos mode verifies every batch instead.
+const INTEGRITY_SWEEP_BATCHES: u64 = 64;
+
+/// Forward attempts per batch: 1 initial + replays after heals. Corruption
+/// arriving faster than once per attempt for this many attempts is a
+/// persistent fault — answered as [`ReplyError::Integrity`], never served
+/// silently wrong.
+const MAX_BATCH_ATTEMPTS: usize = 4;
+
 fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
-    let _guard = AliveGuard { alive: shared.alive.clone(), queue: shared.queue.clone() };
+    let _guard = AliveGuard {
+        alive: shared.alive.clone(),
+        queue: shared.queue.clone(),
+        sup: shared.sup.clone(),
+    };
     let macs = shared.engine.model.macs();
+    let mac_layers = shared.engine.model.mac_layers();
     let input_shape = shared.engine.model.input_shape();
     // One scratch arena per worker, pre-grown to the model's worst-case
     // GEMM footprint at this batch size, so steady-state batches allocate
@@ -587,72 +872,252 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
         if batch.is_empty() {
             continue;
         }
-        // Split malformed images out before fusing, so one bad request
-        // cannot poison the whole batched forward.
+        // Admission screens, cheapest first: expired deadlines (client has
+        // given up — don't spend a batch slot), then malformed images (one
+        // bad request cannot poison the whole batched forward).
+        let now = Instant::now();
         let mut good: Vec<Request> = Vec::with_capacity(batch.len());
         for req in batch {
+            if req.deadline.is_some_and(|d| now > d) {
+                shared.metrics.record_deadline_expired();
+                let _ = req.respond.send(Err(ReplyError::Deadline));
+                continue;
+            }
             let t = &req.image;
             if (t.h, t.w, t.c) == input_shape {
                 good.push(req);
             } else {
-                let _ = req.respond.send(Err(format!(
+                let msg = format!(
                     "input shape mismatch: got {}x{}x{}, model expects {}x{}x{}",
                     t.h, t.w, t.c, input_shape.0, input_shape.1, input_shape.2
-                )));
+                );
+                let _ = req.respond.send(Err(ReplyError::BadInput(msg)));
             }
         }
         if good.is_empty() {
             continue;
         }
-        // Capture the policy generation ONCE per batch: the whole batch
-        // runs under this epoch's policy (a concurrent install affects only
-        // later batches), which is exactly the hot-swap consistency
-        // invariant the property tests pin.
-        let stamped = shared.switch.load();
-        let opts = shared.resolve_opts(&stamped);
-        let power = shared.resolve_power(&stamped, &mut power_cache).clone();
-        // Raise the in-flight gauge before the forward: requests inside an
-        // executing batch are visible to neither the queue depth nor the
-        // completion count, and the governor must not mistake a pool
-        // saturated by long batches for an idle one.
-        shared.telemetry.batch_started(good.len());
-        let t0 = Instant::now();
-        let imgs: Vec<&Tensor> = good.iter().map(|r| &r.image).collect();
-        let result = shared.engine.forward_batch_with_scratch(&imgs, &opts, &mut scratch);
-        drop(imgs);
-        shared.metrics.record_batch(worker_id, good.len(), t0.elapsed());
-        shared.telemetry.record_batch(good.len(), batch_cap, depth);
-        match result {
-            Ok(all_logits) => {
-                for (req, logits) in good.into_iter().zip(all_logits) {
-                    let queue_wait = t0.saturating_duration_since(req.enqueued);
-                    let latency = req.enqueued.elapsed();
-                    shared.metrics.record(latency, queue_wait, macs, &power);
-                    shared.telemetry.record_latency(latency);
-                    let reply = if !logits.is_empty()
-                        && logits.iter().all(|v| v.is_nan())
-                    {
-                        Err("all logits are NaN (non-finite model output)".to_string())
-                    } else {
-                        Ok(Reply {
-                            top1: argmax(&logits),
-                            logits,
-                            latency,
-                            epoch: stamped.epoch,
-                        })
-                    };
-                    let _ = req.respond.send(reply);
-                }
+        // The ledger owns the batch's requests across the panic boundary:
+        // whatever `run_batch` has not answered when it unwinds is still in
+        // here, and each entry gets a typed `WorkerCrashed` before the
+        // thread retires — the exactly-one-reply invariant survives the
+        // crash.
+        let ledger = Mutex::new(good);
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            run_batch(
+                worker_id,
+                &shared,
+                &ledger,
+                &mut scratch,
+                &mut power_cache,
+                macs,
+                mac_layers,
+                batch_cap,
+                depth,
+            )
+        }));
+        if run.is_err() {
+            let stranded = ledger.into_inner().unwrap_or_else(|e| e.into_inner());
+            shared.metrics.record_crashed_replies(stranded.len());
+            for req in stranded {
+                let _ = req.respond.send(Err(ReplyError::WorkerCrashed));
             }
+            // Retire: scratch and caches may be mid-mutation; the
+            // supervisor respawns a clean replacement.
+            return;
+        }
+    }
+}
+
+/// Records batch-level metrics on scope exit so the books stay balanced
+/// even when the batch unwinds mid-forward (the in-flight gauge raised by
+/// `batch_started` must always come back down).
+struct BatchGauge<'a> {
+    shared: &'a WorkerShared,
+    worker_id: usize,
+    n: usize,
+    cap: usize,
+    depth: usize,
+    t0: Instant,
+}
+
+impl Drop for BatchGauge<'_> {
+    fn drop(&mut self) {
+        self.shared.metrics.record_batch(self.worker_id, self.n, self.t0.elapsed());
+        self.shared.telemetry.record_batch(self.n, self.cap, self.depth);
+    }
+}
+
+/// Serve one admitted batch: inject this batch's scheduled faults (chaos
+/// mode only), run the fused forward under the integrity loop — CV-band
+/// alarm → checksum arbitration → heal → replay — and answer every request
+/// in the ledger exactly once.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    worker_id: usize,
+    shared: &WorkerShared,
+    ledger: &Mutex<Vec<Request>>,
+    scratch: &mut Scratch,
+    power_cache: &mut (u64, PowerModel),
+    macs: u64,
+    mac_layers: usize,
+    batch_cap: usize,
+    depth: usize,
+) {
+    // Draw this batch's fault decision first: the corruption lands in the
+    // shared caches (where a real SRAM upset would) *before* the forward
+    // that must detect it.
+    let faults = match &shared.faults {
+        Some(plan) => plan.next_batch(),
+        None => BatchFaults::default(),
+    };
+    let seq = shared.batch_seq.fetch_add(1, Ordering::Relaxed);
+    if faults.any() {
+        let mut injected = 0usize;
+        if let Some(f) = faults.lut {
+            if shared.engine.corrupt_lut(f.pick, f.entry, f.span, f.bit).is_some() {
+                injected += 1;
+            }
+        }
+        if let Some(f) = faults.plan {
+            if shared.engine.corrupt_plan(f.pick, f.byte, f.bit).is_some() {
+                injected += 1;
+            }
+        }
+        injected += usize::from(faults.panic)
+            + usize::from(faults.spike.is_some())
+            + usize::from(faults.drop_replies);
+        if injected > 0 {
+            shared.metrics.record_injected_faults(injected);
+        }
+        if let Some(d) = faults.spike {
+            std::thread::sleep(d);
+        }
+        if faults.panic {
+            panic!("injected worker panic (chaos schedule)");
+        }
+    }
+    // Capture the policy generation ONCE per batch: the whole batch runs
+    // under this epoch's policy (a concurrent install affects only later
+    // batches), which is exactly the hot-swap consistency invariant the
+    // property tests pin.
+    let stamped = shared.switch.load();
+    let mut opts = shared.resolve_opts(&stamped);
+    // Batch-local CV sampler: its sums become the batch's integrity
+    // signature AND — only once the batch is trusted — the governor's
+    // telemetry. Replayed (corrupt) attempts drain into the void.
+    let local = Arc::new(CvProxySampler::new(mac_layers));
+    opts.cv_proxy = Some(local.clone());
+    let power = shared.resolve_power(&stamped, power_cache).clone();
+    let mut requests = lock_clean(ledger);
+    let n = requests.len();
+    // Raise the in-flight gauge before the forward: requests inside an
+    // executing batch are visible to neither the queue depth nor the
+    // completion count, and the governor must not mistake a pool
+    // saturated by long batches for an idle one.
+    shared.telemetry.batch_started(n);
+    let t0 = Instant::now();
+    let _gauge = BatchGauge { shared, worker_id, n, cap: batch_cap, depth, t0 };
+    let chaos = shared.faults.is_some();
+    let sweep_due = seq % INTEGRITY_SWEEP_BATCHES == 0;
+    let mut outcome = None;
+    let mut forward_err = None;
+    for _attempt in 0..MAX_BATCH_ATTEMPTS {
+        let gen0 = shared.engine.integrity_generation();
+        let result = {
+            let imgs: Vec<&Tensor> = requests.iter().map(|r| &r.image).collect();
+            shared.engine.forward_batch_with_scratch(&imgs, &opts, scratch)
+        };
+        let raw = local.drain_raw();
+        let all_logits = match result {
+            Ok(v) => v,
             Err(e) => {
-                let msg = format!("batched forward failed: {e:#}");
-                for req in good {
-                    let queue_wait = t0.saturating_duration_since(req.enqueued);
-                    let latency = req.enqueued.elapsed();
-                    shared.metrics.record(latency, queue_wait, macs, &power);
-                    shared.telemetry.record_latency(latency);
-                    let _ = req.respond.send(Err(msg.clone()));
-                }
+                forward_err = Some(e);
+                break;
+            }
+        };
+        // CV-residual band check: the paper's accuracy mechanism doubling
+        // as a corruption detector — a flipped high bit in a hot LUT
+        // stripe blows the live mean |V|/|G*| orders of magnitude out of
+        // its offline signed-moment band. The checksum pass arbitrates
+        // every alarm, so a band false positive costs one verify sweep,
+        // never a replay.
+        let alarm = !shared.monitor.suspects(&raw, |i| opts.assignment_for(i)).is_empty();
+        if alarm {
+            shared.metrics.record_integrity_alarm();
+        }
+        if chaos || sweep_due || alarm {
+            let report = shared.engine.verify_integrity();
+            if !report.is_clean() {
+                shared.metrics.record_heal(shared.engine.heal_integrity());
+                shared.metrics.record_replay();
+                continue;
+            }
+        }
+        if shared.engine.integrity_generation() != gen0 {
+            // Cache state moved under this forward (a sibling healed or
+            // chaos corrupted mid-batch): the logits may have read
+            // poisoned panels — recompute on the now-stable state.
+            shared.metrics.record_replay();
+            continue;
+        }
+        outcome = Some((all_logits, raw));
+        break;
+    }
+    match (outcome, forward_err) {
+        (Some((all_logits, raw)), _) => {
+            // The batch is trusted: fold its CV sums into the shared
+            // telemetry exactly once (replayed attempts never pollute the
+            // governor's windows).
+            shared.telemetry.record_cv(&raw);
+            if faults.drop_replies {
+                // Chaos "lost reply": drop every channel unanswered; each
+                // client observes a disconnect, typed as `WorkerCrashed` —
+                // the one injected fault clients must retry blind.
+                shared.metrics.record_crashed_replies(requests.len());
+                requests.clear();
+                return;
+            }
+            for (req, logits) in requests.drain(..).zip(all_logits) {
+                let queue_wait = t0.saturating_duration_since(req.enqueued);
+                let latency = req.enqueued.elapsed();
+                shared.metrics.record(latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency(latency);
+                let reply = if !logits.is_empty() && logits.iter().all(|v| v.is_nan()) {
+                    Err(ReplyError::BadInput(
+                        "all logits are NaN (non-finite model output)".to_string(),
+                    ))
+                } else {
+                    Ok(Reply {
+                        top1: argmax(&logits),
+                        logits,
+                        latency,
+                        epoch: stamped.epoch,
+                    })
+                };
+                let _ = req.respond.send(reply);
+            }
+        }
+        (None, Some(e)) => {
+            let msg = format!("batched forward failed: {e:#}");
+            for req in requests.drain(..) {
+                let queue_wait = t0.saturating_duration_since(req.enqueued);
+                let latency = req.enqueued.elapsed();
+                shared.metrics.record(latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency(latency);
+                let _ = req.respond.send(Err(ReplyError::BadInput(msg.clone())));
+            }
+        }
+        (None, None) => {
+            // Replay budget exhausted: corruption returned faster than
+            // healing for MAX_BATCH_ATTEMPTS straight attempts. Refuse
+            // rather than risk serving a silently wrong answer.
+            for req in requests.drain(..) {
+                let queue_wait = t0.saturating_duration_since(req.enqueued);
+                let latency = req.enqueued.elapsed();
+                shared.metrics.record(latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency(latency);
+                let _ = req.respond.send(Err(ReplyError::Integrity));
             }
         }
     }
@@ -1245,5 +1710,296 @@ mod tests {
         // ties keep last-max semantics, matching the old Iterator::max_by
         assert_eq!(argmax(&[2.0, 2.0, 1.0]), 1);
         assert_eq!(argmax(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), 1);
+    }
+
+    // ---- fault tolerance & self-healing (tentpole) -------------------------
+
+    #[test]
+    fn reply_error_typing_is_stable() {
+        assert!(ReplyError::Overloaded.retryable());
+        assert!(ReplyError::WorkerCrashed.retryable());
+        assert!(!ReplyError::Closed.retryable());
+        assert!(!ReplyError::Deadline.retryable());
+        assert!(!ReplyError::Integrity.retryable());
+        assert!(!ReplyError::BadInput("x".into()).retryable());
+        assert!(ReplyError::Overloaded.to_string().contains("overloaded"));
+        assert_eq!(ReplyError::BadInput("bad shape".into()).to_string(), "bad shape");
+    }
+
+    #[test]
+    fn close_twice_then_shutdown_is_clean() {
+        let svc = InferenceService::start(
+            Engine::new(testutil::tiny_model()),
+            ServiceConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        svc.close();
+        svc.close(); // idempotent: the second close is a no-op, not a panic
+        let err = svc.try_submit(testutil::tiny_image(0), None).unwrap_err();
+        assert_eq!(err, ReplyError::Closed);
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 0);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overload_with_typed_error() {
+        // One slow worker (every batch spikes 25 ms), queue capped at 2: a
+        // 12-burst must see typed Overloaded rejections, every accepted
+        // request must still resolve, and the rejection counter must match.
+        let cfg = ServiceConfig {
+            workers: 1,
+            batch_size: 1,
+            queue_cap: 2,
+            faults: Some(FaultConfig {
+                spike_per_mille: 1000,
+                spike: Duration::from_millis(25),
+                ..FaultConfig::quiet(5)
+            }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..12 {
+            match svc.try_submit(testutil::tiny_image(i), None) {
+                Ok(p) => accepted.push(p),
+                Err(e) => {
+                    assert_eq!(e, ReplyError::Overloaded);
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "queue_cap=2 must reject part of an instant 12-burst");
+        for p in accepted {
+            p.wait_reply().unwrap();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.rejected_overload, rejected);
+        assert!(snap.completed >= 1);
+    }
+
+    #[test]
+    fn deadline_expires_at_dequeue_with_typed_error() {
+        // Worker busy for 30 ms per batch; request B carries a 5 ms budget
+        // and can only be dequeued after A's batch — it must answer
+        // Err(Deadline) without ever spending a batch slot.
+        let cfg = ServiceConfig {
+            workers: 1,
+            batch_size: 1,
+            faults: Some(FaultConfig {
+                spike_per_mille: 1000,
+                spike: Duration::from_millis(30),
+                ..FaultConfig::quiet(6)
+            }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        let pa = svc.submit(testutil::tiny_image(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let pb = svc
+            .submit_with_deadline(testutil::tiny_image(1), Duration::from_millis(5))
+            .unwrap();
+        assert!(pa.wait().is_ok());
+        assert_eq!(pb.wait_reply().unwrap_err(), ReplyError::Deadline);
+        let snap = svc.shutdown();
+        assert_eq!(snap.expired_deadline, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn injected_panics_get_typed_replies_and_pool_respawns() {
+        // Under a 300‰ panic schedule the pool keeps serving: crashed
+        // batches answer WorkerCrashed (retryable), the supervisor respawns
+        // replacements, and retried requests come back bit-identical.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            workers: 2,
+            batch_size: 2,
+            faults: Some(FaultConfig { panic_per_mille: 300, ..FaultConfig::quiet(77) }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        for i in 0..40u64 {
+            let img = testutil::tiny_image(i);
+            let reply = svc
+                .infer_with_retry(&img, 20, Duration::from_micros(200))
+                .expect("retry must eventually land on a surviving worker");
+            assert_eq!(reply.logits, reference.forward(&img, &opts).unwrap(), "img {i}");
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 40);
+        assert!(snap.worker_restarts >= 1, "no crash was ever supervised");
+        assert!(snap.crashed_replies >= 1, "no in-flight batch was ever stranded");
+    }
+
+    #[test]
+    fn shutdown_drains_queue_while_workers_crash_loop() {
+        // Satellite: shutdown with a crash-looping pool (500‰ panics) must
+        // still resolve every one of 80 queued requests — Ok or typed — and
+        // never hang. The supervisor keeps respawning while queued work
+        // remains, even though the service is already stopping.
+        let cfg = ServiceConfig {
+            workers: 2,
+            batch_size: 2,
+            faults: Some(FaultConfig { panic_per_mille: 500, ..FaultConfig::quiet(4242) }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        let pendings: Vec<Pending> = (0..80)
+            .map(|i| svc.submit(testutil::tiny_image(i)).unwrap())
+            .collect();
+        let snap = svc.shutdown();
+        let (mut ok, mut typed) = (0u64, 0u64);
+        for p in pendings {
+            match p.wait_reply() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(
+                        matches!(
+                            e,
+                            ReplyError::WorkerCrashed
+                                | ReplyError::Closed
+                                | ReplyError::Integrity
+                        ),
+                        "unexpected terminal error: {e}"
+                    );
+                    typed += 1;
+                }
+            }
+        }
+        assert_eq!(ok + typed, 80, "every request resolves exactly once");
+        assert_eq!(snap.completed, ok);
+        assert!(snap.worker_restarts >= 1, "the supervisor never respawned");
+    }
+
+    #[test]
+    fn lut_corruption_heals_and_replies_stay_bit_identical() {
+        // Tentpole acceptance: poison a prepared LUT stripe behind a live
+        // pool's back; the next batch detects it (chaos mode verifies per
+        // batch), heals from the structural bitmodel, replays, and answers
+        // bit-identically to the fault-free reference.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let mut engine = Engine::new(model);
+        engine.prepare_lut(Family::Perforated, 2);
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            workers: 1,
+            batch_size: 4,
+            faults: Some(FaultConfig::quiet(9)),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(engine, cfg).unwrap();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        let img = testutil::tiny_image(31);
+        let want = reference.forward(&img, &opts).unwrap();
+        assert_eq!(svc.infer(img.clone()).unwrap().logits, want);
+        let hit = svc.engine().corrupt_lut(0, 0, 256, 22);
+        assert!(hit.is_some(), "a prepared LUT must exist to corrupt");
+        assert!(!svc.engine().verify_integrity().is_clean());
+        assert_eq!(svc.infer(img.clone()).unwrap().logits, want);
+        assert!(svc.engine().verify_integrity().is_clean(), "healing must stick");
+        let snap = svc.shutdown();
+        assert!(snap.heal_events >= 1, "corruption was never healed");
+        assert!(snap.replayed_batches >= 1, "the poisoned batch was never replayed");
+    }
+
+    #[test]
+    fn plan_corruption_heals_end_to_end() {
+        // Same tentpole path through the other cache: a flipped bit in a
+        // packed weight panel is caught by the plan checksum, the plan is
+        // invalidated (rebuilt from pristine weights on the replay), and
+        // the reply stays bit-identical.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            workers: 1,
+            batch_size: 4,
+            faults: Some(FaultConfig::quiet(10)),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        let img = testutil::tiny_image(32);
+        let want = reference.forward(&img, &opts).unwrap();
+        assert_eq!(svc.infer(img.clone()).unwrap().logits, want);
+        let hit = svc.engine().corrupt_plan(0, 3, 2);
+        assert!(hit.is_some(), "start() warms plans; the cache cannot be empty");
+        assert!(!svc.engine().verify_integrity().is_clean());
+        assert_eq!(svc.infer(img.clone()).unwrap().logits, want);
+        assert!(svc.engine().verify_integrity().is_clean(), "healing must stick");
+        let snap = svc.shutdown();
+        assert!(snap.heal_events >= 1);
+        assert!(snap.replayed_batches >= 1);
+    }
+
+    #[test]
+    fn chaos_every_request_gets_exactly_one_reply_ok_or_typed() {
+        // The chaos property pinned by ISSUE 6: under a mixed fault
+        // schedule (LUT/plan corruption, panics, spikes, dropped replies)
+        // every submitted request resolves to exactly one reply — Ok and
+        // bit-identical to the fault-free reference, or a typed error.
+        // No hang, no silent corruption.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let mut engine = Engine::new(model);
+        engine.prepare_lut(Family::Perforated, 2);
+        let cfg = ServiceConfig {
+            family: Family::Perforated,
+            m: 2,
+            use_cv: true,
+            workers: 2,
+            batch_size: 2,
+            faults: Some(FaultConfig {
+                seed: 20260808,
+                lut_flip_per_mille: 60,
+                plan_flip_per_mille: 40,
+                panic_per_mille: 60,
+                spike_per_mille: 40,
+                spike: Duration::from_millis(1),
+                drop_per_mille: 30,
+            }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(engine, cfg).unwrap();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        let imgs: Vec<Tensor> = (0..120).map(|i| testutil::tiny_image(i as u64)).collect();
+        let pendings: Vec<Pending> =
+            imgs.iter().map(|im| svc.submit(im.clone()).unwrap()).collect();
+        let (mut ok, mut typed) = (0u64, 0u64);
+        for (img, p) in imgs.iter().zip(pendings) {
+            match p.wait_reply() {
+                Ok(reply) => {
+                    assert_eq!(
+                        reply.logits,
+                        reference.forward(img, &opts).unwrap(),
+                        "silent corruption: an Ok reply diverged from the reference"
+                    );
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(e, ReplyError::WorkerCrashed | ReplyError::Integrity),
+                        "unexpected error under chaos: {e}"
+                    );
+                    typed += 1;
+                }
+            }
+        }
+        assert_eq!(ok + typed, 120, "exactly one reply per request");
+        assert!(ok > 0, "chaos at these rates must still serve most requests");
+        let snap = svc.shutdown();
+        assert!(snap.injected_faults > 0, "the schedule never fired across ~60+ batches");
+        assert!(snap.completed >= ok);
     }
 }

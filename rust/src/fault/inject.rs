@@ -1,0 +1,264 @@
+//! Deterministic fault injection.
+//!
+//! A [`FaultPlan`] is the serving plane's chaos source: each batch a worker
+//! picks up draws one [`BatchFaults`] decision from a PRNG seeded by
+//! `seed ^ f(batch_seq)`, so a given seed produces the same fault schedule
+//! across runs regardless of thread interleaving — the batch sequence
+//! number, not wall-clock, indexes the schedule. Probabilities are per
+//! mille per batch; everything is off (and free) when no plan is attached.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Fault-injection configuration. All probabilities are per-mille (‰) per
+/// batch; `0` everywhere still enables *chaos mode* in the service (per-
+/// batch checksum verification) without spontaneous faults.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Schedule seed — the only mandatory knob.
+    pub seed: u64,
+    /// ‰ chance per batch of burst-flipping a bit range in a prepared LUT.
+    pub lut_flip_per_mille: u32,
+    /// ‰ chance per batch of flipping a bit in a cached plan panel.
+    pub plan_flip_per_mille: u32,
+    /// ‰ chance per batch of the worker panicking mid-batch.
+    pub panic_per_mille: u32,
+    /// ‰ chance per batch of an injected latency spike.
+    pub spike_per_mille: u32,
+    /// Duration of an injected spike.
+    pub spike: Duration,
+    /// ‰ chance per batch of dropping every reply of the batch (clients
+    /// observe a closed channel, mapped to a typed error — never a hang).
+    pub drop_per_mille: u32,
+}
+
+impl FaultConfig {
+    /// The default chaos mix used by the chaos bench and `from_env`.
+    pub fn chaos(seed: u64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            lut_flip_per_mille: 10,
+            plan_flip_per_mille: 5,
+            panic_per_mille: 10,
+            spike_per_mille: 10,
+            spike: Duration::from_millis(2),
+            drop_per_mille: 5,
+        }
+    }
+
+    /// Chaos mode on (per-batch integrity verification in the service) but
+    /// no spontaneous faults — for targeted corruption tests.
+    pub fn quiet(seed: u64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            lut_flip_per_mille: 0,
+            plan_flip_per_mille: 0,
+            panic_per_mille: 0,
+            spike_per_mille: 0,
+            spike: Duration::ZERO,
+            drop_per_mille: 0,
+        }
+    }
+
+    /// Build from `CVAPPROX_FAULT_*` env knobs. `None` unless
+    /// `CVAPPROX_FAULT_SEED` is set (injection is strictly opt-in):
+    ///
+    /// * `CVAPPROX_FAULT_SEED` — schedule seed (enables injection)
+    /// * `CVAPPROX_FAULT_LUT` / `_PLAN` / `_PANIC` / `_SPIKE` / `_DROP` —
+    ///   per-mille rates (defaults: the [`FaultConfig::chaos`] mix)
+    /// * `CVAPPROX_FAULT_SPIKE_MS` — spike length in ms (default 2)
+    pub fn from_env() -> Option<FaultConfig> {
+        let seed = env_u64("CVAPPROX_FAULT_SEED")?;
+        let mut cfg = FaultConfig::chaos(seed);
+        if let Some(v) = env_u64("CVAPPROX_FAULT_LUT") {
+            cfg.lut_flip_per_mille = v.min(1000) as u32;
+        }
+        if let Some(v) = env_u64("CVAPPROX_FAULT_PLAN") {
+            cfg.plan_flip_per_mille = v.min(1000) as u32;
+        }
+        if let Some(v) = env_u64("CVAPPROX_FAULT_PANIC") {
+            cfg.panic_per_mille = v.min(1000) as u32;
+        }
+        if let Some(v) = env_u64("CVAPPROX_FAULT_SPIKE") {
+            cfg.spike_per_mille = v.min(1000) as u32;
+        }
+        if let Some(v) = env_u64("CVAPPROX_FAULT_SPIKE_MS") {
+            cfg.spike = Duration::from_millis(v);
+        }
+        if let Some(v) = env_u64("CVAPPROX_FAULT_DROP") {
+            cfg.drop_per_mille = v.min(1000) as u32;
+        }
+        Some(cfg)
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+/// LUT burst fault: flip `bit` in `span` consecutive entries starting at
+/// `entry` of the `pick`-th prepared table.
+#[derive(Clone, Copy, Debug)]
+pub struct LutFault {
+    pub pick: u64,
+    pub entry: usize,
+    pub span: usize,
+    pub bit: u32,
+}
+
+/// Plan panel fault: flip `bit` of byte `byte` in the `pick`-th cached plan.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanFault {
+    pub pick: u64,
+    pub byte: usize,
+    pub bit: u32,
+}
+
+/// The fault decision for one batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchFaults {
+    pub lut: Option<LutFault>,
+    pub plan: Option<PlanFault>,
+    pub panic: bool,
+    pub spike: Option<Duration>,
+    pub drop_replies: bool,
+}
+
+impl BatchFaults {
+    pub fn any(&self) -> bool {
+        self.lut.is_some()
+            || self.plan.is_some()
+            || self.panic
+            || self.spike.is_some()
+            || self.drop_replies
+    }
+}
+
+/// Seeded per-batch fault schedule, shared across a worker pool.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    seq: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan { cfg, seq: AtomicU64::new(0) }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Batches drawn so far.
+    pub fn batches(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Draw the fault decision for the next batch. The decision depends
+    /// only on `(seed, batch_seq)`, so schedules replay exactly.
+    pub fn next_batch(&self) -> BatchFaults {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.for_seq(seq)
+    }
+
+    fn for_seq(&self, seq: u64) -> BatchFaults {
+        let mut r = Rng::new(self.cfg.seed ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut f = BatchFaults::default();
+        if r.below(1000) < self.cfg.lut_flip_per_mille as u64 {
+            f.lut = Some(LutFault {
+                pick: r.next_u64(),
+                entry: r.below(65536) as usize,
+                // Burst of up to a full weight row: a single poisoned entry
+                // may never be hit by live operands, a burst usually is.
+                span: 1 + r.below(256) as usize,
+                bit: 16 + r.below(14) as u32, // high bits => loud corruption
+            });
+        }
+        if r.below(1000) < self.cfg.plan_flip_per_mille as u64 {
+            f.plan = Some(PlanFault {
+                pick: r.next_u64(),
+                byte: r.below(1 << 20) as usize,
+                bit: r.below(8) as u32,
+            });
+        }
+        if r.below(1000) < self.cfg.panic_per_mille as u64 {
+            f.panic = true;
+        }
+        if r.below(1000) < self.cfg.spike_per_mille as u64 {
+            f.spike = Some(self.cfg.spike);
+        }
+        if r.below(1000) < self.cfg.drop_per_mille as u64 {
+            f.drop_replies = true;
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = FaultPlan::new(FaultConfig::chaos(42));
+        let b = FaultPlan::new(FaultConfig::chaos(42));
+        for _ in 0..500 {
+            let (fa, fb) = (a.next_batch(), b.next_batch());
+            assert_eq!(fa.panic, fb.panic);
+            assert_eq!(fa.drop_replies, fb.drop_replies);
+            assert_eq!(fa.spike, fb.spike);
+            let key = |l: LutFault| (l.entry, l.span, l.bit);
+            assert_eq!(fa.lut.map(key), fb.lut.map(key));
+            assert_eq!(fa.plan.map(|p| (p.byte, p.bit)), fb.plan.map(|p| (p.byte, p.bit)));
+        }
+        assert_eq!(a.batches(), 500);
+    }
+
+    #[test]
+    fn chaos_mix_actually_fires_each_class() {
+        let plan = FaultPlan::new(FaultConfig::chaos(7));
+        let mut seen = (false, false, false, false, false);
+        for _ in 0..4000 {
+            let f = plan.next_batch();
+            seen.0 |= f.lut.is_some();
+            seen.1 |= f.plan.is_some();
+            seen.2 |= f.panic;
+            seen.3 |= f.spike.is_some();
+            seen.4 |= f.drop_replies;
+        }
+        assert!(seen.0 && seen.1 && seen.2 && seen.3 && seen.4, "{seen:?}");
+    }
+
+    #[test]
+    fn quiet_config_never_fires() {
+        let plan = FaultPlan::new(FaultConfig::quiet(3));
+        for _ in 0..1000 {
+            assert!(!plan.next_batch().any());
+        }
+    }
+
+    #[test]
+    fn lut_faults_use_loud_high_bits() {
+        let plan = FaultPlan::new(FaultConfig {
+            lut_flip_per_mille: 1000,
+            ..FaultConfig::quiet(11)
+        });
+        for _ in 0..200 {
+            let f = plan.next_batch().lut.expect("rate 1000\u{2030} always fires");
+            assert!((16..30).contains(&f.bit));
+            assert!(f.span >= 1 && f.span <= 256);
+            assert!(f.entry < 65536);
+        }
+    }
+
+    #[test]
+    fn env_config_requires_seed() {
+        // No CVAPPROX_FAULT_SEED in the test environment => disabled.
+        if std::env::var("CVAPPROX_FAULT_SEED").is_err() {
+            assert!(FaultConfig::from_env().is_none());
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! CV-residual integrity monitoring.
+//!
+//! The control variate V = C·ΣX + C₀ is the engine's *online estimate of
+//! the accumulated multiplier error*; the QoS layer already samples mean
+//! |V| / |G*| per layer as an error proxy. On healthy hardware that ratio
+//! is pinned to the approximation point's offline error profile — the
+//! exhaustive signed moments of `approx::stats` — so a live ratio that
+//! leaves a (generous) band around the offline expectation is evidence
+//! that the products feeding G* are *not* the products the profile was
+//! computed for: a corrupted LUT or weight panel. The monitor is the cheap
+//! always-on tier of detection (a few float ops per layer per batch);
+//! checksum recomputation (`Engine::verify_integrity`) arbitrates every
+//! alarm, so false positives cost one sweep and never a wrong heal.
+//!
+//! The band is deliberately wide (`slack` = 64× each way by default): live
+//! activations are not the uniform operands of the offline profile, and
+//! the denominator carries bias/zero-point mass. Sparse per-batch sampling
+//! (a handful of epilogue entries per layer) plus burst corruption of high
+//! LUT bits moves the ratio by *orders of magnitude*, so a wide band still
+//! detects everything loud while staying quiet on healthy traffic.
+
+use crate::approx::stats::signed_moments;
+use crate::approx::Family;
+use crate::nn::{LayerAssignment, LayerPoint};
+
+/// Expected |w·a| of uniform u8 operands — the scale the offline moments
+/// are normalized against.
+const E_PROD: f64 = 127.5 * 127.5;
+
+/// Acceptance band for one layer's live mean |V|/|G*| ratio.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProxyBand {
+    pub floor: f64,
+    pub ceil: f64,
+}
+
+impl ProxyBand {
+    pub fn contains(&self, ratio: f64) -> bool {
+        ratio >= self.floor && ratio <= self.ceil
+    }
+}
+
+/// Per-layer CV-residual band monitor.
+#[derive(Clone, Debug)]
+pub struct IntegrityMonitor {
+    /// Multiplicative band width (each side) around the offline estimate.
+    pub slack: f64,
+    /// Minimum samples in a window before the band is enforced.
+    pub min_samples: u64,
+}
+
+impl Default for IntegrityMonitor {
+    fn default() -> Self {
+        IntegrityMonitor { slack: 64.0, min_samples: 8 }
+    }
+}
+
+impl IntegrityMonitor {
+    pub fn new() -> IntegrityMonitor {
+        IntegrityMonitor::default()
+    }
+
+    /// The acceptance band for one layer assignment, or `None` when the
+    /// assignment yields no band-checkable signal:
+    ///
+    /// * exact layers and CV-off layers record no samples;
+    /// * paired layers do sample, but their halves cancel by construction,
+    ///   so only a ceiling is enforced (floor 0) — the checksum sweep
+    ///   remains their corruption backstop.
+    pub fn band_for(&self, assign: LayerAssignment) -> Option<ProxyBand> {
+        match assign.normalized() {
+            LayerAssignment::Point(p) => {
+                if p == LayerPoint::EXACT || !p.use_cv || p.family == Family::Exact || p.m == 0 {
+                    return None;
+                }
+                let est = point_ratio_estimate(p);
+                Some(ProxyBand { floor: est / self.slack, ceil: est * self.slack })
+            }
+            LayerAssignment::Paired(pp) => {
+                let (e, o) = (pp.even.normalized(), pp.odd.normalized());
+                if !e.use_cv && !o.use_cv {
+                    return None;
+                }
+                let est = point_ratio_estimate(e).max(point_ratio_estimate(o));
+                if est == 0.0 {
+                    return None;
+                }
+                Some(ProxyBand { floor: 0.0, ceil: est * self.slack })
+            }
+        }
+    }
+
+    /// Band-check one batch's raw proxy sums (`(Σ|V|, Σ|G*|, n)` per MAC
+    /// layer, from `CvProxySampler::drain_raw`) against the policy of that
+    /// batch; returns the indices of out-of-band (suspect) layers.
+    pub fn suspects(
+        &self,
+        raw: &[(u64, u64, u64)],
+        assign: impl Fn(usize) -> LayerAssignment,
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (i, &(num, den, n)) in raw.iter().enumerate() {
+            if n < self.min_samples || den == 0 {
+                continue;
+            }
+            if let Some(band) = self.band_for(assign(i)) {
+                let ratio = num as f64 / den as f64;
+                if !band.contains(ratio) {
+                    out.push(i);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Offline estimate of a point's |V|/|G*| scale: the magnitude of its
+/// per-product error moments over the uniform-operand product scale.
+fn point_ratio_estimate(p: LayerPoint) -> f64 {
+    let p = p.normalized();
+    if p.family == Family::Exact || p.m == 0 {
+        return 0.0;
+    }
+    let sm = signed_moments(p.family, p.m, p.polarity);
+    (sm.mean.abs() + sm.std) / E_PROD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::Polarity;
+    use crate::nn::PairedPoint;
+
+    fn pt(family: Family, m: u32) -> LayerPoint {
+        LayerPoint::new(family, m, true)
+    }
+
+    #[test]
+    fn exact_and_cv_off_layers_have_no_band() {
+        let mon = IntegrityMonitor::new();
+        assert!(mon.band_for(LayerAssignment::Point(LayerPoint::EXACT)).is_none());
+        let mut nocv = pt(Family::Perforated, 3);
+        nocv.use_cv = false;
+        assert!(mon.band_for(LayerAssignment::Point(nocv)).is_none());
+    }
+
+    #[test]
+    fn band_brackets_the_offline_estimate() {
+        let mon = IntegrityMonitor::new();
+        let p = pt(Family::Perforated, 3);
+        let band = mon.band_for(LayerAssignment::Point(p)).unwrap();
+        let est = point_ratio_estimate(p);
+        assert!(est > 0.0);
+        assert!(band.floor < est && est < band.ceil);
+        assert!(band.contains(est));
+        assert!(!band.contains(est / (mon.slack * 10.0)), "collapse is out of band");
+        assert!(!band.contains(est * mon.slack * 10.0), "blowup is out of band");
+    }
+
+    #[test]
+    fn band_grows_with_m() {
+        let mon = IntegrityMonitor::new();
+        let lo = point_ratio_estimate(pt(Family::Perforated, 1));
+        let hi = point_ratio_estimate(pt(Family::Perforated, 5));
+        assert!(hi > lo, "more perforation => larger residual scale");
+        let b = mon.band_for(LayerAssignment::Point(pt(Family::Perforated, 5))).unwrap();
+        assert!(b.ceil > b.floor);
+    }
+
+    #[test]
+    fn paired_band_is_ceiling_only() {
+        let mon = IntegrityMonitor::new();
+        let pair = PairedPoint::mirrored(Family::Perforated, 2, true);
+        let band = mon.band_for(LayerAssignment::Paired(pair)).unwrap();
+        assert_eq!(band.floor, 0.0);
+        assert!(band.ceil > 0.0);
+        assert!(band.contains(0.0), "cancelled residual is healthy for pairs");
+    }
+
+    #[test]
+    fn suspects_flags_only_sampled_out_of_band_layers() {
+        let mon = IntegrityMonitor::new();
+        let p = pt(Family::Perforated, 3);
+        let band = mon.band_for(LayerAssignment::Point(p)).unwrap();
+        let healthy = (band.floor * 2.0 + band.ceil / 2.0) / 2.0;
+        // Layer 0 healthy, layer 1 collapsed (den huge), layer 2 unsampled.
+        let raw = vec![
+            ((healthy * 1e9) as u64, 1_000_000_000, 16),
+            (1, 1_000_000_000, 16),
+            (0, 0, 0),
+        ];
+        let out = mon.suspects(&raw, |_| LayerAssignment::Point(p));
+        assert_eq!(out, vec![1]);
+        // Below min_samples nothing is flagged.
+        let thin = vec![(1, 1_000_000_000, 2)];
+        assert!(mon.suspects(&thin, |_| LayerAssignment::Point(p)).is_empty());
+    }
+
+    #[test]
+    fn polarity_profiles_are_respected() {
+        // Pos and Neg points of the same family/m can have different
+        // moment profiles; the estimate must consult the right one.
+        let neg = point_ratio_estimate(LayerPoint::new_pol(
+            Family::Truncated,
+            4,
+            Polarity::Neg,
+            true,
+        ));
+        let pos = point_ratio_estimate(LayerPoint::new_pol(
+            Family::Truncated,
+            4,
+            Polarity::Pos,
+            true,
+        ));
+        assert!(neg > 0.0 && pos > 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Fault injection, integrity checking and supervision primitives.
+//!
+//! The paper's premise is that the multiplier hardware computes *wrong
+//! products on purpose*; this module is about the products (and the serving
+//! plane around them) going wrong **by accident** — a flipped SRAM bit in a
+//! cached LUT or packed weight panel, a panicking worker, a latency spike, a
+//! lost reply. Three pieces cooperate:
+//!
+//! * [`inject`] — a seeded, deterministic [`FaultPlan`] (the chaos analog of
+//!   the hermetic golden generator): off by default, zero overhead when
+//!   disabled, reproducible batch-by-batch fault schedules when enabled via
+//!   builder or `CVAPPROX_FAULT_*` env knobs.
+//! * [`integrity`] — the detection side: build-time checksums live on
+//!   `MulLut` / `LayerPlan` (see `util::hash`), and the
+//!   [`IntegrityMonitor`] turns the live CV-residual proxy (mean |V|/|G*|
+//!   from `qos::Telemetry`) into a runtime integrity signature by banding it
+//!   against the offline signed-moment profiles from `approx::stats` — the
+//!   paper's accuracy mechanism reused as a fault detector.
+//! * [`supervise`] — restart backoff and retry helpers used by the
+//!   coordinator's supervisor thread and client-side retry path.
+//!
+//! Healing itself lives where the state lives: `Engine::heal_integrity`
+//! rebuilds corrupt LUTs from the structural bitmodel and drops poisoned
+//! plans for rebuild from pristine weights; `coordinator::service` replays
+//! the affected batch so no silently-corrupted reply ever leaves the pool.
+
+pub mod inject;
+pub mod integrity;
+pub mod supervise;
+
+pub use inject::{BatchFaults, FaultConfig, FaultPlan, LutFault, PlanFault};
+pub use integrity::{IntegrityMonitor, ProxyBand};
+pub use supervise::{Backoff, retry};

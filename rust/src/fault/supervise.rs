@@ -1,0 +1,118 @@
+//! Supervision primitives: restart backoff and bounded retry.
+//!
+//! Used by the coordinator's supervisor thread (worker respawn pacing) and
+//! by the client-side `infer_with_retry` helper. Kept deliberately tiny and
+//! synchronous — the serving plane is plain threads, so the backoff is a
+//! plain `thread::sleep`.
+
+use std::thread;
+use std::time::Duration;
+
+/// Exponential backoff: starts at `base`, doubles per step, capped at `max`.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    next: Duration,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, max: Duration) -> Backoff {
+        Backoff { base, max, next: base }
+    }
+
+    /// The delay to apply for the current step; advances the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        let d = self.next;
+        self.next = (self.next * 2).min(self.max);
+        d
+    }
+
+    /// Reset back to the base delay (call after a success).
+    pub fn reset(&mut self) {
+        self.next = self.base;
+    }
+}
+
+/// Run `f` up to `attempts` times, sleeping `backoff` between attempts.
+/// Stops early on success or on an error `retryable` rejects; the last
+/// error is returned when every attempt fails.
+pub fn retry<T, E>(
+    attempts: usize,
+    backoff: &mut Backoff,
+    retryable: impl Fn(&E) -> bool,
+    mut f: impl FnMut() -> Result<T, E>,
+) -> Result<T, E> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for i in 0..attempts {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if !retryable(&e) || i + 1 == attempts {
+                    return Err(e);
+                }
+                last = Some(e);
+                thread::sleep(backoff.next_delay());
+            }
+        }
+    }
+    Err(last.expect("attempts >= 1 guarantees at least one error"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(5));
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+        assert_eq!(b.next_delay(), Duration::from_millis(2));
+        assert_eq!(b.next_delay(), Duration::from_millis(4));
+        assert_eq!(b.next_delay(), Duration::from_millis(5));
+        assert_eq!(b.next_delay(), Duration::from_millis(5));
+        b.reset();
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn retry_succeeds_after_transient_errors() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(10));
+        let mut calls = 0;
+        let out: Result<u32, &str> = retry(5, &mut b, |_| true, || {
+            calls += 1;
+            if calls < 3 {
+                Err("transient")
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(out, Ok(99));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_stops_on_non_retryable() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(10));
+        let mut calls = 0;
+        let out: Result<u32, &str> = retry(5, &mut b, |e| *e != "fatal", || {
+            calls += 1;
+            Err("fatal")
+        });
+        assert_eq!(out, Err("fatal"));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn retry_exhausts_attempts() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(10));
+        let mut calls = 0;
+        let out: Result<u32, &str> = retry(3, &mut b, |_| true, || {
+            calls += 1;
+            Err("transient")
+        });
+        assert_eq!(out, Err("transient"));
+        assert_eq!(calls, 3);
+    }
+}

@@ -17,6 +17,7 @@
 //! * [`runtime`] — PJRT client running the AOT-compiled XLA tile kernels
 //! * [`coordinator`] — batching inference service + power/latency metrics
 //! * [`qos`] — adaptive QoS: policy ladders, telemetry, hot-swap governor
+//! * [`fault`] — fault injection, integrity checksums, self-healing helpers
 //! * [`report`] — paper-style table/figure renderers
 //!
 //! Python (JAX + Pallas) exists only on the build path (`make artifacts`);
@@ -26,6 +27,7 @@ pub mod approx;
 pub mod coordinator;
 pub mod cv;
 pub mod datasets;
+pub mod fault;
 pub mod hw;
 pub mod nn;
 pub mod qos;

@@ -8,20 +8,21 @@
 //! aggregate toggle statistics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use super::gemm::{approx_gemm_planned, paired_gemm_planned, GemmCtx, GemmKind};
 use super::graph::{Model, Node, Op, Tensor, Weights};
-use super::plan::{LayerPlan, PairedPlan, PlanCache, Scratch};
+use super::plan::{LayerPlan, PairedPlan, PlanCache, PlanKey, Scratch};
 use super::policy::{
     LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, SharedPolicy, MAX_M,
 };
-use crate::approx::{Family, MulLut, Polarity};
+use crate::approx::{bitmodel, Family, MulLut, Polarity};
 use crate::cv::{self, CvConstants};
 use crate::runtime::{TileGemm, Variant};
 use crate::systolic::{MulPoint, SystolicArray, ToggleStats};
+use crate::util::sync::lock_clean;
 use crate::util::threadpool::configured_workers;
 
 /// Forward-pass configuration.
@@ -132,6 +133,24 @@ impl CvProxySampler {
         }
     }
 
+    /// Take the raw per-layer sums accumulated since the last drain and
+    /// reset them: `(Σ|V|, Σ|G*|, n)` per MAC layer. The fault monitor uses
+    /// this on a batch-local sampler so it can band-check one batch and then
+    /// re-`record` the same sums into the pool-shared telemetry sampler
+    /// without disturbing the governor's window.
+    pub fn drain_raw(&self) -> Vec<(u64, u64, u64)> {
+        self.layers
+            .iter()
+            .map(|c| {
+                (
+                    c.num.swap(0, Ordering::Relaxed),
+                    c.den.swap(0, Ordering::Relaxed),
+                    c.n.swap(0, Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
     /// Take the window accumulated since the last drain and reset it.
     pub fn drain(&self) -> CvProxyWindow {
         let (mut tn, mut td, mut ts) = (0u64, 0u64, 0u64);
@@ -236,11 +255,81 @@ pub struct Engine {
     pub model: Model,
     /// Prepared LUTs, one per distinct (family, m, polarity) — a mixed or
     /// paired policy can route every approximate point through its own
-    /// table.
-    luts: Vec<MulLut>,
+    /// table. Registry-style (interior-mutable, `Arc`-shared tables) so the
+    /// fault subsystem can verify, corrupt (chaos) and heal tables on a
+    /// shared engine while workers keep serving.
+    luts: LutRegistry,
     systolic: Option<SystolicArray>,
     pjrt: Option<(Arc<TileGemm>, Variant)>,
     plans: PlanCache,
+}
+
+/// Interior-mutable LUT store. The generation counter has the same contract
+/// as `PlanCache::generation`: bumped on runtime *mutations* of table
+/// contents (corruption injection, healing, replacement via `attach_lut`),
+/// never on first-insert warming — so a serving worker can snapshot
+/// `Engine::integrity_generation` around a forward and know whether any
+/// table it may have read changed underneath it.
+#[derive(Default)]
+struct LutRegistry {
+    tables: Mutex<Vec<Arc<MulLut>>>,
+    generation: AtomicU64,
+}
+
+impl LutRegistry {
+    fn lookup(&self, family: Family, m: u32, pol: Polarity) -> Option<Arc<MulLut>> {
+        lock_clean(&self.tables)
+            .iter()
+            .find(|l| l.family == family && l.m == m && l.polarity == pol)
+            .cloned()
+    }
+
+    fn insert_if_absent(&self, family: Family, m: u32, pol: Polarity) {
+        if family == Family::Exact {
+            return;
+        }
+        let mut tables = lock_clean(&self.tables);
+        if tables.iter().any(|l| l.family == family && l.m == m && l.polarity == pol) {
+            return;
+        }
+        tables.push(Arc::new(MulLut::build_pol(family, m, pol)));
+    }
+
+    /// Replace (or add) the table for `lut`'s point; bumps the generation.
+    fn replace(&self, lut: MulLut) {
+        let mut tables = lock_clean(&self.tables);
+        tables.retain(|l| (l.family, l.m, l.polarity) != (lut.family, lut.m, lut.polarity));
+        tables.push(Arc::new(lut));
+        self.generation.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn snapshot(&self) -> Vec<Arc<MulLut>> {
+        lock_clean(&self.tables).clone()
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+}
+
+/// Result of an engine-wide checksum sweep ([`Engine::verify_integrity`]):
+/// the (family, m, polarity) of every corrupt LUT and the (node, key) of
+/// every corrupt cached plan. Empty on a healthy engine.
+#[derive(Clone, Debug, Default)]
+pub struct IntegrityReport {
+    pub luts: Vec<(Family, u32, Polarity)>,
+    pub plans: Vec<(usize, PlanKey)>,
+}
+
+impl IntegrityReport {
+    pub fn is_clean(&self) -> bool {
+        self.luts.is_empty() && self.plans.is_empty()
+    }
+
+    /// Total number of corrupt cached items.
+    pub fn dirty(&self) -> usize {
+        self.luts.len() + self.plans.len()
+    }
 }
 
 /// A MAC layer resolved to its executable form: the quantization context
@@ -252,7 +341,13 @@ enum LayerExec {
 
 impl Engine {
     pub fn new(model: Model) -> Engine {
-        Engine { model, luts: Vec::new(), systolic: None, pjrt: None, plans: PlanCache::new() }
+        Engine {
+            model,
+            luts: LutRegistry::default(),
+            systolic: None,
+            pjrt: None,
+            plans: PlanCache::new(),
+        }
     }
 
     /// Route MAC GEMMs through the PJRT runtime (the AOT XLA kernels).
@@ -269,18 +364,15 @@ impl Engine {
 
     /// Pre-build the LUT for a (family, m, polarity) point.
     pub fn prepare_lut_pol(&mut self, family: Family, m: u32, pol: Polarity) {
-        if family != Family::Exact && self.lut_lookup(family, m, pol).is_none() {
-            self.luts.push(MulLut::build_pol(family, m, pol));
-        }
+        self.luts.insert_if_absent(family, m, pol);
     }
 
     /// Attach an externally built table — e.g. one generated from the
     /// structural [`crate::approx::bitmodel`] by the differential harness —
     /// replacing any prepared table for the same (family, m, polarity).
+    /// Counts as a runtime mutation (bumps the integrity generation).
     pub fn attach_lut(&mut self, lut: MulLut) {
-        self.luts
-            .retain(|l| (l.family, l.m, l.polarity) != (lut.family, lut.m, lut.polarity));
-        self.luts.push(lut);
+        self.luts.replace(lut);
     }
 
     /// Prepare a LUT for every distinct approximate constituent point of
@@ -294,10 +386,76 @@ impl Engine {
         }
     }
 
-    fn lut_lookup(&self, family: Family, m: u32, pol: Polarity) -> Option<&MulLut> {
-        self.luts
+    fn lut_lookup(&self, family: Family, m: u32, pol: Polarity) -> Option<Arc<MulLut>> {
+        self.luts.lookup(family, m, pol)
+    }
+
+    /// Sum of the LUT and plan mutation generations — a cheap fingerprint a
+    /// worker snapshots around a forward: unchanged means no cached table
+    /// the forward may have read was corrupted or healed mid-flight, so a
+    /// clean checksum sweep makes the result trustworthy.
+    pub fn integrity_generation(&self) -> u64 {
+        self.luts.generation() + self.plans.generation()
+    }
+
+    /// Recompute every build-time checksum over the prepared LUTs and
+    /// cached plans. O(cached tables); runs at batch granularity, never on
+    /// the per-MAC path.
+    pub fn verify_integrity(&self) -> IntegrityReport {
+        let luts = self
+            .luts
+            .snapshot()
             .iter()
-            .find(|l| l.family == family && l.m == m && l.polarity == pol)
+            .filter(|l| !l.verify())
+            .map(|l| (l.family, l.m, l.polarity))
+            .collect();
+        IntegrityReport { luts, plans: self.plans.verify_all() }
+    }
+
+    /// Heal everything `verify_integrity` flags: corrupt LUTs are rebuilt
+    /// from the structural bitmodel (`am_bits_pol`, proven equal to the
+    /// closed forms) and replaced; poisoned plans are dropped from the
+    /// cache so the next fetch rebuilds them from the model's pristine
+    /// weights. Returns the number of healed items; each heal bumps the
+    /// integrity generation, which forces in-flight batches to replay.
+    pub fn heal_integrity(&self) -> usize {
+        let report = self.verify_integrity();
+        let mut healed = 0;
+        for &(family, m, pol) in &report.luts {
+            let fresh =
+                MulLut::from_fn(family, m, pol, |w, a| bitmodel::am_bits_pol(family, pol, w, a, m));
+            debug_assert!(fresh.verify());
+            self.luts.replace(fresh);
+            healed += 1;
+        }
+        healed += self.plans.invalidate(&report.plans);
+        healed
+    }
+
+    /// Chaos helper: flip `bit` in `span` consecutive entries of one
+    /// prepared LUT (picked deterministically by `pick`). Returns the
+    /// poisoned point, or `None` when no LUTs are prepared. Bumps the
+    /// integrity generation.
+    pub fn corrupt_lut(
+        &self,
+        pick: u64,
+        entry: usize,
+        span: usize,
+        bit: u32,
+    ) -> Option<(Family, u32, Polarity)> {
+        let tables = self.luts.snapshot();
+        if tables.is_empty() {
+            return None;
+        }
+        let victim = &tables[(pick % tables.len() as u64) as usize];
+        let key = (victim.family, victim.m, victim.polarity);
+        self.luts.replace(victim.with_flipped_bits(entry, span, bit));
+        Some(key)
+    }
+
+    /// Chaos helper: bit-flip one cached plan (see `PlanCache::corrupt_one`).
+    pub fn corrupt_plan(&self, pick: u64, byte: usize, bit: u32) -> Option<(usize, PlanKey)> {
+        self.plans.corrupt_one(pick, byte, bit)
     }
 
     /// Attach a systolic array simulator (enables `forward_systolic`) at a
@@ -1000,7 +1158,7 @@ impl Engine {
                     ctx,
                     plan,
                     row0,
-                    lut,
+                    lut.as_deref(),
                     w,
                     a,
                     m_rows,
@@ -1027,8 +1185,22 @@ impl Engine {
                     GemmKind::Identity
                 };
                 paired_gemm_planned(
-                    kind, pair, *zp_w, *zp_a, plan, row0, le, lo, w, a, m_rows, k, n,
-                    bias, scratch, threads,
+                    kind,
+                    pair,
+                    *zp_w,
+                    *zp_a,
+                    plan,
+                    row0,
+                    le.as_deref(),
+                    lo.as_deref(),
+                    w,
+                    a,
+                    m_rows,
+                    k,
+                    n,
+                    bias,
+                    scratch,
+                    threads,
                 );
             }
         }
@@ -2143,5 +2315,54 @@ mod tests {
         assert_eq!(engine.plan_builds(), 2, "pjrt route must reuse plans");
         assert_eq!(first, second);
         assert_eq!(second, third);
+    }
+
+    #[test]
+    fn lut_corruption_is_detected_and_healed_bit_exact() {
+        let mut engine = Engine::new(toy_model());
+        engine.prepare_lut(Family::Perforated, 2);
+        let img = toy_image();
+        let opts = ForwardOpts::approx(Family::Perforated, 2, true);
+        let clean = engine.forward(&img, &opts).unwrap();
+        assert!(engine.verify_integrity().is_clean());
+        let gen0 = engine.integrity_generation();
+
+        // Burst-corrupt a whole weight row of the LUT with a high bit: any
+        // hit distorts the accumulator massively.
+        let hit = engine.corrupt_lut(0, 0, 65536, 22).expect("one LUT prepared");
+        assert_eq!(hit, (Family::Perforated, 2, Polarity::Neg));
+        assert!(engine.integrity_generation() > gen0, "corruption bumps the generation");
+        let report = engine.verify_integrity();
+        assert_eq!(report.luts, vec![hit]);
+        assert!(report.plans.is_empty());
+        let poisoned = engine.forward(&img, &opts).unwrap();
+        assert_ne!(poisoned, clean, "full-table corruption must reach the logits");
+
+        // Heal: rebuilt from the structural bitmodel, bit-identical again.
+        assert_eq!(engine.heal_integrity(), 1);
+        assert!(engine.verify_integrity().is_clean());
+        let healed = engine.forward(&img, &opts).unwrap();
+        assert_eq!(healed, clean, "healed LUT restores bit-identical outputs");
+    }
+
+    #[test]
+    fn plan_corruption_is_detected_and_healed_bit_exact() {
+        let engine = Engine::new(toy_model());
+        let img = toy_image();
+        let opts = ForwardOpts::approx(Family::Recursive, 3, true);
+        let clean = engine.forward(&img, &opts).unwrap();
+        let builds = engine.plan_builds();
+
+        let hit = engine.corrupt_plan(1, 5, 6).expect("plans cached by the forward");
+        let report = engine.verify_integrity();
+        assert_eq!(report.plans, vec![hit]);
+        let poisoned = engine.forward(&img, &opts).unwrap();
+        assert_ne!(poisoned, clean, "panel corruption must reach the logits");
+
+        assert_eq!(engine.heal_integrity(), 1);
+        assert!(engine.verify_integrity().is_clean());
+        let healed = engine.forward(&img, &opts).unwrap();
+        assert_eq!(healed, clean, "rebuilt plan restores bit-identical outputs");
+        assert_eq!(engine.plan_builds(), builds + 1, "heal costs one plan rebuild");
     }
 }

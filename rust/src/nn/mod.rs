@@ -21,10 +21,10 @@ pub mod policy;
 #[cfg(test)]
 pub(crate) mod testutil;
 
-pub use engine::{CvProxySampler, CvProxyWindow, Engine, ForwardOpts};
+pub use engine::{CvProxySampler, CvProxyWindow, Engine, ForwardOpts, IntegrityReport};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
-pub use plan::{LayerPlan, PairedPlan, Scratch};
+pub use plan::{LayerPlan, PairedPlan, PlanKey, Scratch};
 pub use policy::{
     LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, PolicySwitch, SharedPolicy,
     StampedPolicy,

@@ -18,12 +18,14 @@
 //! buffers have grown to the largest layer.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::policy::{LayerPoint, PairedPoint};
 use crate::approx::{comp_low, Family, Polarity};
 use crate::cv::{self, CvConstants};
+use crate::util::hash::Hasher64;
+use crate::util::sync::lock_clean;
 
 /// Weight-side precomputation for one MAC layer at one (family, m,
 /// polarity) point.
@@ -46,6 +48,9 @@ pub struct LayerPlan {
     pub sum_w: Vec<i64>,
     /// Per-row control-variate constants (zeroes for the exact family).
     pub consts: Vec<CvConstants>,
+    /// Build-time digest of every derived table above (panels, Σw, C/C₀) —
+    /// the fault subsystem recomputes it to detect runtime corruption.
+    checksum: u64,
 }
 
 impl LayerPlan {
@@ -101,10 +106,11 @@ impl LayerPlan {
         } else {
             Vec::new()
         };
-        let sum_w =
+        let sum_w: Vec<i64> =
             (0..rows).map(|f| w[f * k..(f + 1) * k].iter().map(|&x| x as i64).sum()).collect();
         let consts = cv::constants_pol_for_rows(family, pol, m, w, rows, k, k_valid);
-        LayerPlan { family, m, pol, rows, k, w_low, w_planes, sum_w, consts }
+        let checksum = plan_digest(&w_low, &w_planes, &sum_w, &consts);
+        LayerPlan { family, m, pol, rows, k, w_low, w_planes, sum_w, consts, checksum }
     }
 
     /// Masked weights (recursive family) for rows `row0..row0+nrows`.
@@ -125,6 +131,80 @@ impl LayerPlan {
             + self.sum_w.len() * 8
             + self.consts.len() * std::mem::size_of::<CvConstants>()
     }
+
+    /// Content digest stamped at construction.
+    pub fn checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    /// Recompute the digest; `false` means some derived table no longer
+    /// matches what was built from the weights (corruption).
+    pub fn verify(&self) -> bool {
+        plan_digest(&self.w_low, &self.w_planes, &self.sum_w, &self.consts) == self.checksum
+    }
+
+    /// Chaos helper: a copy with one bit flipped in the most load-bearing
+    /// derived table (bit-plane panel > masked panel > Σw, whichever this
+    /// plan actually carries), keeping the *original* checksum so
+    /// [`LayerPlan::verify`] on the copy fails.
+    pub fn with_flipped_bit(&self, byte: usize, bit: u32) -> LayerPlan {
+        let mut w_low = self.w_low.clone();
+        let mut w_planes = self.w_planes.clone();
+        let mut sum_w = self.sum_w.clone();
+        if !w_planes.is_empty() {
+            let i = byte % w_planes.len();
+            w_planes[i] ^= 1u8 << (bit % 8);
+        } else if !w_low.is_empty() {
+            let i = byte % w_low.len();
+            w_low[i] ^= 1u8 << (bit % 8);
+        } else if !sum_w.is_empty() {
+            let i = byte % sum_w.len();
+            sum_w[i] ^= 1i64 << (8 + bit % 24);
+        }
+        LayerPlan {
+            family: self.family,
+            m: self.m,
+            pol: self.pol,
+            rows: self.rows,
+            k: self.k,
+            w_low,
+            w_planes,
+            sum_w,
+            consts: self.consts.clone(),
+            checksum: self.checksum,
+        }
+    }
+
+    /// Field-for-field copy (no `Clone` derive: plans are normally shared
+    /// by `Arc`, copies exist only for the chaos helpers above).
+    fn duplicate(&self) -> LayerPlan {
+        LayerPlan {
+            family: self.family,
+            m: self.m,
+            pol: self.pol,
+            rows: self.rows,
+            k: self.k,
+            w_low: self.w_low.clone(),
+            w_planes: self.w_planes.clone(),
+            sum_w: self.sum_w.clone(),
+            consts: self.consts.clone(),
+            checksum: self.checksum,
+        }
+    }
+}
+
+/// Digest of every derived table a [`LayerPlan`] carries.
+fn plan_digest(w_low: &[u8], w_planes: &[u8], sum_w: &[i64], consts: &[CvConstants]) -> u64 {
+    let mut h = Hasher64::new();
+    h.bytes(w_low);
+    h.bytes(w_planes);
+    h.i64s(sum_w);
+    for c in consts {
+        h.word(c.c_q4 as u64);
+        h.word(c.c0_q4 as u64);
+    }
+    h.word(consts.len() as u64);
+    h.finish()
 }
 
 /// Weight-side precomputation for one MAC layer running an even/odd
@@ -147,6 +227,9 @@ pub struct PairedPlan {
     pub even: LayerPlan,
     /// Partition plan for odd reduction indices.
     pub odd: LayerPlan,
+    /// Build-time digest of the parity-masked panels + full-row Σw (the
+    /// sub-plans carry their own digests).
+    checksum: u64,
 }
 
 impl PairedPlan {
@@ -172,8 +255,10 @@ impl PairedPlan {
         );
         // The masked panels partition the full panel, so the full-row Σw is
         // the sum of the partition sums the sub-plans already computed.
-        let sum_w = even.sum_w.iter().zip(&odd.sum_w).map(|(a, b)| a + b).collect();
-        PairedPlan { rows, k, sum_w, w_even, w_odd, even, odd }
+        let sum_w: Vec<i64> =
+            even.sum_w.iter().zip(&odd.sum_w).map(|(a, b)| a + b).collect();
+        let checksum = paired_digest(&w_even, &w_odd, &sum_w);
+        PairedPlan { rows, k, sum_w, w_even, w_odd, even, odd, checksum }
     }
 
     /// Approximate heap footprint (diagnostics).
@@ -184,6 +269,43 @@ impl PairedPlan {
             + self.even.bytes()
             + self.odd.bytes()
     }
+
+    /// Recompute all three digests (top-level panels plus both partition
+    /// plans); `false` means corruption somewhere in the paired state.
+    pub fn verify(&self) -> bool {
+        paired_digest(&self.w_even, &self.w_odd, &self.sum_w) == self.checksum
+            && self.even.verify()
+            && self.odd.verify()
+    }
+
+    /// Chaos helper: a copy with one bit flipped in the even parity panel,
+    /// keeping the original checksum (see [`LayerPlan::with_flipped_bit`]).
+    pub fn with_flipped_bit(&self, byte: usize, bit: u32) -> PairedPlan {
+        let mut w_even = self.w_even.clone();
+        if !w_even.is_empty() {
+            let i = byte % w_even.len();
+            w_even[i] ^= 1u8 << (bit % 8);
+        }
+        PairedPlan {
+            rows: self.rows,
+            k: self.k,
+            sum_w: self.sum_w.clone(),
+            w_even,
+            w_odd: self.w_odd.clone(),
+            even: self.even.duplicate(),
+            odd: self.odd.duplicate(),
+            checksum: self.checksum,
+        }
+    }
+}
+
+/// Digest of a [`PairedPlan`]'s own tables (sub-plans hash themselves).
+fn paired_digest(w_even: &[u8], w_odd: &[u8], sum_w: &[i64]) -> u64 {
+    let mut h = Hasher64::new();
+    h.bytes(w_even);
+    h.bytes(w_odd);
+    h.i64s(sum_w);
+    h.finish()
 }
 
 /// Cache key: the plan-relevant part of a layer assignment — `(family, m,
@@ -218,10 +340,18 @@ enum CachedPlan {
 /// Interior-mutable so `Engine::forward(&self)` can populate it lazily; the
 /// lock is held during builds, which keeps the build counter exact even when
 /// sweep harnesses drive one engine from many threads.
+///
+/// The cache doubles as the plan-side integrity domain: `verify_all` sweeps
+/// every cached digest, `invalidate` heals by dropping poisoned entries
+/// (the next `get_or_build*` rebuilds from the model's pristine weights),
+/// and `generation` counts runtime mutations so a worker can tell whether
+/// any cached table changed under a forward it just ran. Ordinary inserts
+/// do **not** bump the generation — only corruption and healing do.
 #[derive(Default)]
 pub struct PlanCache {
     map: Mutex<HashMap<(usize, PlanKey), CachedPlan>>,
     builds: AtomicUsize,
+    generation: AtomicU64,
 }
 
 impl PlanCache {
@@ -252,7 +382,7 @@ impl PlanCache {
         build: F,
     ) -> Arc<LayerPlan> {
         let key = (node, PlanKey::Point(family, m, pol));
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_clean(&self.map);
         if let Some(CachedPlan::Point(p)) = map.get(&key) {
             return p.clone();
         }
@@ -271,7 +401,7 @@ impl PlanCache {
         build: F,
     ) -> Arc<PairedPlan> {
         let key = (node, PlanKey::paired(pair));
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_clean(&self.map);
         if let Some(CachedPlan::Paired(p)) = map.get(&key) {
             return p.clone();
         }
@@ -289,7 +419,68 @@ impl PlanCache {
 
     /// Number of cached plans.
     pub fn cached(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_clean(&self.map).len()
+    }
+
+    /// Monotone count of runtime mutations (corruptions + invalidations).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Recompute every cached digest; returns the keys whose contents no
+    /// longer match their build-time checksum.
+    pub fn verify_all(&self) -> Vec<(usize, PlanKey)> {
+        let map = lock_clean(&self.map);
+        let mut bad: Vec<(usize, PlanKey)> = map
+            .iter()
+            .filter(|(_, v)| match v {
+                CachedPlan::Point(p) => !p.verify(),
+                CachedPlan::Paired(p) => !p.verify(),
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        bad.sort_by_key(|k| (k.0, format!("{:?}", k.1)));
+        bad
+    }
+
+    /// Heal by dropping the listed entries: the next `get_or_build*`
+    /// rebuilds them from the model's pristine weights. Returns how many
+    /// entries were actually removed; bumps the generation when > 0.
+    pub fn invalidate(&self, keys: &[(usize, PlanKey)]) -> usize {
+        let mut map = lock_clean(&self.map);
+        let mut n = 0;
+        for k in keys {
+            if map.remove(k).is_some() {
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.generation.fetch_add(1, Ordering::SeqCst);
+        }
+        n
+    }
+
+    /// Chaos helper: replace one cached entry (picked deterministically by
+    /// `pick` over a sorted key list) with a bit-flipped copy that keeps its
+    /// build-time checksum. Returns the poisoned key, or `None` when the
+    /// cache is empty. Bumps the generation.
+    pub fn corrupt_one(&self, pick: u64, byte: usize, bit: u32) -> Option<(usize, PlanKey)> {
+        let mut map = lock_clean(&self.map);
+        if map.is_empty() {
+            return None;
+        }
+        let mut keys: Vec<(usize, PlanKey)> = map.keys().copied().collect();
+        keys.sort_by_key(|k| (k.0, format!("{:?}", k.1)));
+        let key = keys[(pick % keys.len() as u64) as usize];
+        let poisoned = match map.get(&key).expect("key just listed") {
+            CachedPlan::Point(p) => CachedPlan::Point(Arc::new(p.with_flipped_bit(byte, bit))),
+            CachedPlan::Paired(p) => {
+                CachedPlan::Paired(Arc::new(p.with_flipped_bit(byte, bit)))
+            }
+        };
+        map.insert(key, poisoned);
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        Some(key)
     }
 }
 
@@ -546,6 +737,68 @@ mod tests {
         });
         assert_eq!(cache.builds(), 2);
         assert_eq!(cache.cached(), 2);
+    }
+
+    #[test]
+    fn plan_checksums_cover_every_family_shape() {
+        let mut rng = Rng::new(0xF1);
+        let (rows, k) = (4, 16);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+        for family in [Family::Perforated, Family::Recursive, Family::Truncated] {
+            let plan = LayerPlan::build(family, 3, &w, rows, k);
+            assert!(plan.verify(), "{family:?} fresh plan verifies");
+            let bad = plan.with_flipped_bit(7, 3);
+            assert!(!bad.verify(), "{family:?} flipped plan must fail");
+            assert_eq!(bad.checksum(), plan.checksum());
+        }
+        // Deterministic: same weights => same digest.
+        let a = LayerPlan::build(Family::Recursive, 2, &w, rows, k);
+        let b = LayerPlan::build(Family::Recursive, 2, &w, rows, k);
+        assert_eq!(a.checksum(), b.checksum());
+    }
+
+    #[test]
+    fn paired_plan_checksum_covers_partitions() {
+        use crate::nn::policy::PairedPoint;
+        let mut rng = Rng::new(0xF2);
+        let (rows, k) = (3, 10);
+        let w: Vec<u8> = (0..rows * k).map(|_| rng.u8()).collect();
+        let pair = PairedPoint::mirrored(Family::Recursive, 2, true);
+        let pp = PairedPlan::build(pair, &w, rows, k);
+        assert!(pp.verify());
+        let bad = pp.with_flipped_bit(5, 6);
+        assert!(!bad.verify(), "flipped even panel must fail verification");
+    }
+
+    #[test]
+    fn cache_corruption_heals_by_invalidation() {
+        let cache = PlanCache::new();
+        let w = vec![9u8; 24];
+        cache.get_or_build(0, Family::Recursive, 2, || {
+            LayerPlan::build(Family::Recursive, 2, &w, 4, 6)
+        });
+        cache.get_or_build(1, Family::Perforated, 3, || {
+            LayerPlan::build(Family::Perforated, 3, &w, 4, 6)
+        });
+        assert_eq!(cache.generation(), 0, "warming does not bump the generation");
+        assert!(cache.verify_all().is_empty());
+
+        let hit = cache.corrupt_one(0, 3, 2).expect("cache nonempty");
+        assert_eq!(cache.generation(), 1);
+        let dirty = cache.verify_all();
+        assert_eq!(dirty, vec![hit], "exactly the poisoned key is dirty");
+
+        let healed = cache.invalidate(&dirty);
+        assert_eq!(healed, 1);
+        assert_eq!(cache.generation(), 2);
+        assert!(cache.verify_all().is_empty(), "dropped entries cannot be dirty");
+        assert_eq!(cache.cached(), 1, "the poisoned entry is gone");
+        // Rebuild on next fetch is a fresh, verifying plan.
+        let again = cache.get_or_build(hit.0, Family::Recursive, 2, || {
+            LayerPlan::build(Family::Recursive, 2, &w, 4, 6)
+        });
+        assert!(again.verify());
+        assert_eq!(cache.builds(), 3, "heal costs exactly one rebuild");
     }
 
     #[test]

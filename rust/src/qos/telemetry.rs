@@ -50,8 +50,12 @@ pub struct Telemetry {
     occ_n: AtomicU64,
     /// Requests currently inside executing batches (live level gauge).
     inflight: AtomicU64,
-    /// Per-layer CV-magnitude error proxy (attached to every batch's
-    /// `ForwardOpts` by the worker; see [`CvProxySampler`]).
+    /// Per-layer CV-magnitude error proxy. Workers run each batch with a
+    /// *batch-local* [`CvProxySampler`] so the fault plane can band-check
+    /// that batch's raw sums in isolation (`fault::IntegrityMonitor`), then
+    /// re-record the trusted sums here via [`Telemetry::cv_sampler`] —
+    /// keeping the governor's drain-on-read windows intact and untainted by
+    /// batches that were rolled back and replayed after corruption.
     cv: Arc<CvProxySampler>,
 }
 
@@ -103,6 +107,17 @@ impl Telemetry {
     /// `ForwardOpts::cv_proxy`).
     pub fn cv_sampler(&self) -> Arc<CvProxySampler> {
         self.cv.clone()
+    }
+
+    /// Merge one batch's raw proxy sums (`(Σ|V|, Σ|G*|, n)` per layer, from
+    /// `CvProxySampler::drain_raw`) into the shared sampler. Workers call
+    /// this only after the batch passed integrity checks.
+    pub fn record_cv(&self, raw: &[(u64, u64, u64)]) {
+        for (i, &(num, den, n)) in raw.iter().enumerate() {
+            if n > 0 {
+                self.cv.record(i, num, den, n);
+            }
+        }
     }
 
     /// Record one completed request's end-to-end latency.
@@ -269,6 +284,20 @@ mod tests {
         assert!((w.cv_proxy_per_layer[1] - 0.3).abs() < 1e-12);
         assert_eq!(w.cv_samples, 8);
         assert_eq!(t.window().cv_samples, 0, "drained");
+    }
+
+    #[test]
+    fn record_cv_merges_raw_batch_sums() {
+        let t = Telemetry::new(3);
+        // A worker's batch-local sampler drained to raw sums: layer 1
+        // recorded nothing and must stay untouched.
+        t.record_cv(&[(10, 100, 4), (0, 0, 0), (30, 100, 4)]);
+        t.record_cv(&[(10, 100, 4), (0, 0, 0), (0, 0, 0)]);
+        let w = t.window();
+        assert!((w.cv_proxy_per_layer[0] - 0.1).abs() < 1e-12);
+        assert_eq!(w.cv_proxy_per_layer[1], 0.0);
+        assert!((w.cv_proxy_per_layer[2] - 0.3).abs() < 1e-12);
+        assert_eq!(w.cv_samples, 12);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Content checksums for cached numeric tables (no `crc`/`xxhash` offline).
+//!
+//! The fault subsystem stamps every `MulLut` and packed `LayerPlan` with a
+//! build-time checksum so runtime corruption (a flipped SRAM bit, a chaos
+//! injection) is detectable by recomputation. The hash is FNV-1a folded at
+//! u64-word granularity: position-sensitive (a swap of two words changes the
+//! digest), branch-free, and fast enough to sweep a full 256×256 i32 LUT in
+//! tens of microseconds — cheap at batch granularity, never on the per-MAC
+//! path.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental 64-bit FNV-1a over u64 words.
+#[derive(Clone, Debug)]
+pub struct Hasher64 {
+    h: u64,
+}
+
+impl Default for Hasher64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher64 {
+    pub fn new() -> Self {
+        Hasher64 { h: FNV_OFFSET }
+    }
+
+    #[inline]
+    pub fn word(&mut self, x: u64) {
+        self.h = (self.h ^ x).wrapping_mul(FNV_PRIME);
+    }
+
+    /// Fold a byte slice 8 bytes at a time (tail zero-padded into one word).
+    pub fn bytes(&mut self, xs: &[u8]) {
+        let mut it = xs.chunks_exact(8);
+        for c in it.by_ref() {
+            self.word(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = it.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.word(u64::from_le_bytes(tail));
+        }
+        // Length word so `[1,0]` and `[1]`+implicit-zero differ.
+        self.word(xs.len() as u64);
+    }
+
+    pub fn i32s(&mut self, xs: &[i32]) {
+        for &x in xs {
+            self.word(x as u32 as u64);
+        }
+        self.word(xs.len() as u64);
+    }
+
+    pub fn i64s(&mut self, xs: &[i64]) {
+        for &x in xs {
+            self.word(x as u64);
+        }
+        self.word(xs.len() as u64);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// One-shot checksum of an i32 table (LUT contents).
+pub fn checksum_i32s(xs: &[i32]) -> u64 {
+    let mut h = Hasher64::new();
+    h.i32s(xs);
+    h.finish()
+}
+
+/// One-shot checksum of a byte panel (packed weight planes).
+pub fn checksum_bytes(xs: &[u8]) -> u64 {
+    let mut h = Hasher64::new();
+    h.bytes(xs);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_content_sensitive() {
+        let a: Vec<i32> = (0..1000).collect();
+        let mut b = a.clone();
+        assert_eq!(checksum_i32s(&a), checksum_i32s(&b));
+        b[500] ^= 1 << 22; // single bit flip changes the digest
+        assert_ne!(checksum_i32s(&a), checksum_i32s(&b));
+    }
+
+    #[test]
+    fn position_sensitive() {
+        let a = [1i32, 2, 3];
+        let b = [3i32, 2, 1];
+        assert_ne!(checksum_i32s(&a), checksum_i32s(&b));
+    }
+
+    #[test]
+    fn byte_tail_and_length_matter() {
+        assert_ne!(checksum_bytes(&[1, 0]), checksum_bytes(&[1]));
+        assert_ne!(checksum_bytes(&[]), checksum_bytes(&[0]));
+        let long: Vec<u8> = (0..=255).cycle().take(4096).collect();
+        let mut flipped = long.clone();
+        flipped[4095] ^= 0x80;
+        assert_ne!(checksum_bytes(&long), checksum_bytes(&flipped));
+    }
+
+    #[test]
+    fn incremental_matches_composition() {
+        let mut h = Hasher64::new();
+        h.bytes(&[9, 8, 7]);
+        h.i64s(&[-1, 2]);
+        let d1 = h.finish();
+        let mut h2 = Hasher64::new();
+        h2.bytes(&[9, 8, 7]);
+        h2.i64s(&[-1, 2]);
+        assert_eq!(d1, h2.finish());
+        let mut h3 = Hasher64::new();
+        h3.bytes(&[9, 8, 7]);
+        h3.i64s(&[-1, 3]);
+        assert_ne!(d1, h3.finish());
+    }
+}

@@ -3,9 +3,11 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod io;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

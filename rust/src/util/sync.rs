@@ -1,0 +1,68 @@
+//! Poison-tolerant lock helpers.
+//!
+//! `std::sync::Mutex` poisons itself when a holder panics, and every later
+//! `lock().unwrap()` then panics too — one crashed worker wedges the whole
+//! serving plane. None of our guarded state relies on panic-interrupted
+//! invariants (queues of owned requests, counter structs, cache maps: each is
+//! valid after any partial mutation), so the right policy is to *keep going*:
+//! take the guard out of the `PoisonError` and continue. The supervisor layer
+//! (`fault::supervise`, `coordinator::service`) owns crash recovery; locks
+//! just stay usable.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` that survives poisoning.
+pub fn wait_clean<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` that survives poisoning; returns `(guard, timed_out)`.
+pub fn wait_timeout_clean<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(g, dur) {
+        Ok((g, to)) => (g, to.timed_out()),
+        Err(e) => {
+            let (g, to) = e.into_inner();
+            (g, to.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_clean_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_clean(&m);
+        *g += 1;
+        assert_eq!(*g, 8);
+    }
+
+    #[test]
+    fn wait_timeout_clean_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_clean(&m);
+        let (_g, timed_out) = wait_timeout_clean(&cv, g, Duration::from_millis(5));
+        assert!(timed_out);
+    }
+}

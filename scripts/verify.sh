@@ -11,11 +11,23 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Hang watchdog: the fault/chaos suites must never wedge CI, so the
+# long-running cargo invocations get GNU timeout when available (SIGTERM
+# at WATCHDOG_SECS, SIGKILL 15 s later). No-op where timeout is missing.
+WATCHDOG_SECS="${WATCHDOG_SECS:-900}"
+run_guarded() {
+    if command -v timeout >/dev/null 2>&1; then
+        timeout -k 15 "$WATCHDOG_SECS" "$@"
+    else
+        "$@"
+    fi
+}
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
 echo "== tier-1: cargo test -q =="
-cargo test -q
+run_guarded cargo test -q
 
 # The hermetic golden suite must EXECUTE (not skip): it runs on the
 # checked-in rust/tests/hermetic mini-artifacts, so a pass here proves the
@@ -35,10 +47,10 @@ cargo test -q -p cvapprox --test differential
 # The burst/NaN/default-config service tests size their pools from
 # CVAPPROX_SERVICE_WORKERS, so these two runs genuinely vary the pool.
 echo "== serving smoke: coordinator tests at 1 worker =="
-CVAPPROX_SERVICE_WORKERS=1 cargo test -q -p cvapprox --lib coordinator
+run_guarded env CVAPPROX_SERVICE_WORKERS=1 cargo test -q -p cvapprox --lib coordinator
 
 echo "== serving smoke: coordinator tests at 4 workers =="
-CVAPPROX_SERVICE_WORKERS=4 cargo test -q -p cvapprox --lib coordinator
+run_guarded env CVAPPROX_SERVICE_WORKERS=4 cargo test -q -p cvapprox --lib coordinator
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
     echo "== perf smoke: gemm_throughput (quick budgets) =="
@@ -96,6 +108,25 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
         echo "== BENCH_qos.json written =="
     else
         echo "error: bench did not write BENCH_qos.json" >&2
+        exit 1
+    fi
+
+    # Chaos suite: deterministic fault injection at two fixed seeds. The
+    # bench asserts the robustness contract itself (exactly one reply per
+    # request, zero silent corruption vs the fault-free reference, bounded
+    # time-to-heal, typed overload/deadline errors), so a nonzero exit is a
+    # real regression. CVAPPROX_FAULT_SEED is deliberately scoped to these
+    # two invocations only — ServiceConfig::default() reads it, and nothing
+    # else in this script should run in chaos mode.
+    for seed in 1002 7707; do
+        echo "== chaos smoke: fault injection @ seed $seed (quick budgets) =="
+        run_guarded env CVAPPROX_BENCH_QUICK=1 CVAPPROX_FAULT_SEED="$seed" \
+            cargo bench -p cvapprox --bench chaos
+    done
+    if [ -f BENCH_fault.json ]; then
+        echo "== BENCH_fault.json written =="
+    else
+        echo "error: bench did not write BENCH_fault.json" >&2
         exit 1
     fi
 fi
