@@ -1,0 +1,297 @@
+//! The checked-in invariant tables `srclint` enforces.
+//!
+//! The heart of this module is the **atomics-ordering contract**: an
+//! allowlist mapping (file, atomic field) → the memory orderings that
+//! field is permitted to use, each with a one-line rationale. Rule R2
+//! fails any `Ordering::` use that is not in this table, which turns
+//! "why is this Relaxed?" from a review nitpick into a lint error with a
+//! written-down answer. Adding an atomic to the codebase therefore
+//! requires adding a row here — i.e. writing down *why* its orderings
+//! are sufficient.
+
+/// One allowlist row: `file` is the repo-relative path, `atomic` the
+/// field/static name as it appears at the call site (`self.head.load(..)`
+/// → `"head"`), `allowed` the permitted orderings, `rationale` the
+/// one-line justification recorded in docs and `LINT_report.json`.
+pub struct AtomicRule {
+    pub file: &'static str,
+    pub atomic: &'static str,
+    pub allowed: &'static [&'static str],
+    pub rationale: &'static str,
+}
+
+/// The atomics-ordering contract. Every non-test `Ordering::` use in
+/// `rust/src` must match a row; `srclint` flags both unknown atomics and
+/// disallowed orderings.
+pub const ATOMIC_CONTRACT: &[AtomicRule] = &[
+    // --- coordinator/service.rs: pool lifecycle flags -----------------
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "alive",
+        allowed: &["SeqCst"],
+        rationale: "live-worker census read by supervisor respawn logic; \
+                    SeqCst keeps it totally ordered with stopping/done",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "stopping",
+        allowed: &["SeqCst"],
+        rationale: "shutdown latch raced by workers/supervisor/clients; \
+                    SeqCst for a single total order with alive/done",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "done",
+        allowed: &["SeqCst"],
+        rationale: "terminal latch observed by is_stopped(); SeqCst \
+                    pairs with stopping for join-free polling",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "next_id",
+        allowed: &["SeqCst"],
+        rationale: "unique request-id allocator; only uniqueness is \
+                    required, SeqCst retained from the admission design",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "batch_seq",
+        allowed: &["Relaxed"],
+        rationale: "monotonic batch counter feeding the fault injector's \
+                    seeded schedule; no data is published through it",
+    },
+    // --- fault/inject.rs: deterministic schedule cursor ---------------
+    AtomicRule {
+        file: "rust/src/fault/inject.rs",
+        atomic: "seq",
+        allowed: &["Relaxed"],
+        rationale: "per-site draw counter; each draw reseeds splitmix from \
+                    seed^seq so only atomicity matters, not ordering",
+    },
+    // --- util/threadpool.rs -------------------------------------------
+    AtomicRule {
+        file: "rust/src/util/threadpool.rs",
+        atomic: "CACHE",
+        allowed: &["Relaxed"],
+        rationale: "idempotent memo of CVAPPROX_THREADS; racing writers \
+                    store the same value, no ordering needed",
+    },
+    AtomicRule {
+        file: "rust/src/util/threadpool.rs",
+        atomic: "next",
+        allowed: &["Relaxed"],
+        rationale: "work-stealing chunk cursor; scope join provides the \
+                    final happens-before edge for results",
+    },
+    // --- nn/engine.rs --------------------------------------------------
+    AtomicRule {
+        file: "rust/src/nn/engine.rs",
+        atomic: "num",
+        allowed: &["Relaxed"],
+        rationale: "CvProxySampler commutative sum; swaps only snapshot, \
+                    readers tolerate a torn window by design",
+    },
+    AtomicRule {
+        file: "rust/src/nn/engine.rs",
+        atomic: "den",
+        allowed: &["Relaxed"],
+        rationale: "CvProxySampler commutative sum; see `num`",
+    },
+    AtomicRule {
+        file: "rust/src/nn/engine.rs",
+        atomic: "n",
+        allowed: &["Relaxed"],
+        rationale: "CvProxySampler sample counter; see `num`",
+    },
+    AtomicRule {
+        file: "rust/src/nn/engine.rs",
+        atomic: "generation",
+        allowed: &["SeqCst"],
+        rationale: "engine cache generation; publishes rebuilt plan state, \
+                    SeqCst for a total order with plan generation bumps",
+    },
+    // --- nn/plan.rs -----------------------------------------------------
+    AtomicRule {
+        file: "rust/src/nn/plan.rs",
+        atomic: "builds",
+        allowed: &["Relaxed"],
+        rationale: "build-count statistic for tests/benches only; never \
+                    guards data",
+    },
+    AtomicRule {
+        file: "rust/src/nn/plan.rs",
+        atomic: "generation",
+        allowed: &["SeqCst"],
+        rationale: "cache invalidation epoch; SeqCst so a bump is totally \
+                    ordered with the engine-side generation check",
+    },
+    // --- qos/governor.rs ------------------------------------------------
+    AtomicRule {
+        file: "rust/src/qos/governor.rs",
+        atomic: "rung",
+        allowed: &["Acquire"],
+        rationale: "reads the published rung index; pairs with the \
+                    Release store in rung_gauge/PolicySwitch install",
+    },
+    AtomicRule {
+        file: "rust/src/qos/governor.rs",
+        atomic: "stop",
+        allowed: &["Acquire", "Release"],
+        rationale: "governor-thread stop latch: Release store in stop(), \
+                    Acquire load in run_loop",
+    },
+    AtomicRule {
+        file: "rust/src/qos/governor.rs",
+        atomic: "rung_gauge",
+        allowed: &["Release"],
+        rationale: "publishes the rung decided this tick; Release pairs \
+                    with the Acquire load in report()",
+    },
+    // --- qos/telemetry.rs -----------------------------------------------
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "head",
+        allowed: &["Release", "Acquire"],
+        rationale: "ring head: Release fetch_add forms a release sequence \
+                    publishing prior slot stores to the Acquire load in \
+                    window() (fix for the all-Relaxed leak, PR 7)",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "lat_us",
+        allowed: &["Release", "Acquire"],
+        rationale: "latency slots: Release store / Acquire load bound \
+                    staleness to each worker's single in-flight sample",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "drained_head",
+        allowed: &["Relaxed"],
+        rationale: "single-consumer drain cursor; only the governor \
+                    thread touches it, swap is for reentrancy safety",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "inflight",
+        allowed: &["Relaxed"],
+        rationale: "gauge; instantaneous value only, never guards data",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "depth_sum",
+        allowed: &["Relaxed"],
+        rationale: "commutative sum drained by swap(0); tolerates torn \
+                    windows by design (documented in module doc)",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "depth_n",
+        allowed: &["Relaxed"],
+        rationale: "commutative count; see `depth_sum`",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "occ_pm_sum",
+        allowed: &["Relaxed"],
+        rationale: "commutative occupancy sum; see `depth_sum`",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "occ_n",
+        allowed: &["Relaxed"],
+        rationale: "commutative count; see `depth_sum`",
+    },
+];
+
+/// Files (repo-relative) that must stay wall-clock free (rule R4): their
+/// outputs are replay-exact functions of a seed, and an `Instant`/
+/// `SystemTime` read would silently break golden regeneration and fault
+/// schedule replay.
+pub const DETERMINISTIC_MODULES: &[&str] = &[
+    "rust/src/fault/inject.rs",
+    "rust/src/util/rng.rs",
+    "rust/src/util/prop.rs",
+    "rust/src/nn/testutil.rs",
+];
+
+/// Directory prefixes (repo-relative) forming the serving hot path (rule
+/// R3): a panic here either kills a worker (masked by the supervisor,
+/// costing replays) or poisons shared state, so fallible paths must
+/// return typed errors instead.
+pub const HOT_PATH_DIRS: &[&str] = &["rust/src/coordinator/", "rust/src/fault/"];
+
+/// The one file allowed to call bare `lock()/wait()` + `unwrap` (rule
+/// R1): it is where the poison-tolerant wrappers live.
+pub const SYNC_WRAPPER_FILE: &str = "rust/src/util/sync.rs";
+
+/// Identifiers that hold request-derived data in the hot path; direct
+/// `[]` indexing on them is an R3 finding (a malformed request must be a
+/// typed `BadInput`, not a panic).
+pub const USER_INPUT_RECEIVERS: &[&str] = &["image", "logits", "requests", "batch"];
+
+/// Markers delimiting the env-var registry in README.md (rule R5 scans
+/// between them).
+pub const ENV_REGISTRY_BEGIN: &str = "<!-- srclint:env-registry:begin -->";
+pub const ENV_REGISTRY_END: &str = "<!-- srclint:env-registry:end -->";
+
+/// The five memory orderings of `std::sync::atomic::Ordering`. Note these
+/// are disjoint from `std::cmp::Ordering`'s variants, which is what lets
+/// R2 match on the token pattern `Ordering :: <variant>` alone.
+pub const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Methods that take an `Ordering` argument; R2 requires the call
+/// enclosing an `Ordering::` token to be one of these so the contract
+/// lookup is anchored to a real atomic operation.
+pub const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_min",
+    "fetch_max",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// Look up the contract row for (file, atomic).
+pub fn lookup(file: &str, atomic: &str) -> Option<&'static AtomicRule> {
+    ATOMIC_CONTRACT
+        .iter()
+        .find(|r| r.file == file && r.atomic == atomic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contract_rows_are_unique_and_well_formed() {
+        for (i, a) in ATOMIC_CONTRACT.iter().enumerate() {
+            assert!(!a.allowed.is_empty(), "{}: empty allowlist", a.atomic);
+            assert!(!a.rationale.trim().is_empty(), "{}: no rationale", a.atomic);
+            for o in a.allowed {
+                assert!(ATOMIC_ORDERINGS.contains(o), "{}: bad ordering {o}", a.atomic);
+            }
+            for b in &ATOMIC_CONTRACT[i + 1..] {
+                assert!(
+                    !(a.file == b.file && a.atomic == b.atomic),
+                    "duplicate contract row {}:{}",
+                    a.file,
+                    a.atomic
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_finds_rows() {
+        let r = lookup("rust/src/qos/telemetry.rs", "head").unwrap();
+        assert!(r.allowed.contains(&"Release"));
+        assert!(lookup("rust/src/qos/telemetry.rs", "nope").is_none());
+    }
+}

@@ -1,0 +1,404 @@
+//! A small hand-rolled Rust tokenizer for the source linter (`srclint`).
+//!
+//! Same hermetic philosophy as `util::json`: no `syn`/`proc-macro2`
+//! offline, so the rules run on a loose token stream instead of a real
+//! AST. The lexer only needs to be exact about the things that would make
+//! a *lint* wrong — comments vs code, string contents vs code, lifetimes
+//! vs char literals, and line numbers — not about full Rust grammar.
+//! Numeric literals, for example, are scanned loosely (enough to not eat a
+//! `..` range or a method call on a literal), because no rule looks inside
+//! them.
+
+/// Token class. `Comment` and `Str` keep their text (suppression comments
+/// and the `CVAPPROX_*` env-var scan read it); everything else keeps text
+/// for pattern matching on idents/punctuation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`lock`, `Ordering`, `fn`, ...).
+    Ident,
+    /// Single punctuation character (`.`/`(`/`::` arrives as two `:`).
+    Punct,
+    /// Numeric literal, scanned loosely (`0x9E37_79B9`, `1.0e-3`, `2_u64`).
+    Num,
+    /// String literal: plain, raw (`r#"..."#`), byte, or C; text includes
+    /// the quotes.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`, `'\u{1F600}'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Line or block comment, text included (suppressions live here).
+    Comment,
+}
+
+/// One token with its 1-based source line (the line it *starts* on).
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.is(TokKind::Ident, name)
+    }
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become single-char
+/// `Punct` tokens, and unterminated literals/comments run to end of file —
+/// a linter must degrade gracefully on code it half-understands, not
+/// panic.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments `///` / `//!`).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.push(Token {
+                kind: TokKind::Comment,
+                text: cs[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                kind: TokKind::Comment,
+                text: cs[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Raw / byte string prefixes: r"..", r#".."#, b"..", br#".."#.
+        if let Some((body_at, hashes)) = raw_string_start(&cs, i) {
+            let start = i;
+            let start_line = line;
+            i = body_at; // first char after the opening quote
+            loop {
+                if i >= n {
+                    break;
+                }
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if cs[i] == '"' && i + hashes < n && cs[i + 1..i + 1 + hashes].iter().all(|&h| h == '#')
+                {
+                    i += 1 + hashes;
+                    break;
+                }
+                i += 1;
+            }
+            out.push(Token {
+                kind: TokKind::Str,
+                text: cs[start..i.min(n)].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Plain / byte string.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let start = i;
+            let start_line = line;
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                } else if cs[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                kind: TokKind::Str,
+                text: cs[start..i.min(n)].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Byte-char literal b'x'.
+        if c == 'b' && i + 1 < n && cs[i + 1] == '\'' {
+            let start = i;
+            i += 2;
+            i = scan_char_body(&cs, i);
+            out.push(Token {
+                kind: TokKind::Char,
+                text: cs[start..i.min(n)].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            // '\...' is always a char; 'X' (any single char, then a quote)
+            // is a char; otherwise an ident-ish tail is a lifetime.
+            if i + 1 < n && cs[i + 1] == '\\' {
+                let start = i;
+                i += 1;
+                i = scan_char_body(&cs, i);
+                out.push(Token {
+                    kind: TokKind::Char,
+                    text: cs[start..i.min(n)].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                let start = i;
+                i += 3;
+                out.push(Token {
+                    kind: TokKind::Char,
+                    text: cs[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            if i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_') {
+                let start = i;
+                i += 1;
+                while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                    i += 1;
+                }
+                out.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: cs[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            out.push(Token { kind: TokKind::Punct, text: "'".into(), line });
+            i += 1;
+            continue;
+        }
+        // Number (loose: hex/oct/bin, underscores, suffixes, exponents;
+        // never consumes `..` or a method-call dot).
+        if c.is_ascii_digit() {
+            let start = i;
+            let radix_prefixed = c == '0'
+                && i + 1 < n
+                && matches!(cs[i + 1], 'x' | 'X' | 'b' | 'B' | 'o' | 'O');
+            i += 1;
+            while i < n {
+                let ch = cs[i];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    i += 1;
+                } else if ch == '.'
+                    && i + 1 < n
+                    && cs[i + 1].is_ascii_digit()
+                    && !radix_prefixed
+                {
+                    i += 1;
+                } else if (ch == '+' || ch == '-')
+                    && !radix_prefixed
+                    && matches!(cs[i - 1], 'e' | 'E')
+                {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.push(Token {
+                kind: TokKind::Num,
+                text: cs[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            i += 1;
+            while i < n && (cs[i].is_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            out.push(Token {
+                kind: TokKind::Ident,
+                text: cs[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        out.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// `Some((index_after_opening_quote, hash_count))` when `cs[i..]` starts a
+/// raw (possibly byte) string literal.
+fn raw_string_start(cs: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = cs.len();
+    let mut j = i;
+    if j < n && cs[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || cs[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && cs[j] == '"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Scan a char-literal body starting at the char after the opening quote;
+/// returns the index after the closing quote (handles `\'`, `\u{..}`).
+fn scan_char_body(cs: &[char], mut i: usize) -> usize {
+    let n = cs.len();
+    while i < n {
+        if cs[i] == '\\' {
+            i += 2;
+        } else if cs[i] == '\'' {
+            return i + 1;
+        } else {
+            i += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn basic_stream() {
+        let ts = kinds("let x = m.lock().unwrap();");
+        let idents: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "m", "lock", "unwrap"]);
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_leak_code() {
+        let ts = kinds("// m.lock().unwrap()\nlet s = \"m.lock().unwrap()\";");
+        let idents: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "s"]);
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Comment && s.contains("unwrap")));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Str && s.contains("unwrap")));
+    }
+
+    #[test]
+    fn nested_block_comment_and_raw_string() {
+        let ts = kinds("/* a /* b */ c */ fn x() { r#\"q\"uo\"# }");
+        assert_eq!(ts[0].0, TokKind::Comment);
+        assert!(ts[0].1.ends_with("c */"));
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Str && s.contains("q\"uo")));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ts = kinds("fn f<'a>(x: &'a str) -> char { 'x' } // plus '\\n' and b'z'");
+        let lifes: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(lifes, ["'a", "'a"]);
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Char && s == "'x'"));
+        let ts2 = kinds("let c = '\\u{1F600}'; let b = b'q'; let s = 'static_oops");
+        assert!(ts2.iter().any(|(k, s)| *k == TokKind::Char && s.contains("1F600")));
+        assert!(ts2.iter().any(|(k, s)| *k == TokKind::Char && s == "b'q'"));
+        assert!(ts2.iter().any(|(k, s)| *k == TokKind::Lifetime && s == "'static_oops"));
+    }
+
+    #[test]
+    fn numbers_stay_loose_but_bounded() {
+        // Ranges and method calls on literals must not be eaten.
+        let ts = kinds("for i in 0..n { let x = 1.0e-3 + 0x9E37_79B9; let y = 7.max(2); }");
+        let nums: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "1.0e-3", "0x9E37_79B9", "7", "2"]);
+        assert!(ts.iter().any(|(k, s)| *k == TokKind::Ident && s == "max"));
+    }
+
+    #[test]
+    fn line_numbers_track_every_literal_form() {
+        let src = "a\n\"two\nlines\"\n/* c\nc */\nfinal";
+        let ts = tokenize(src);
+        let find = |txt: &str| ts.iter().find(|t| t.text.contains(txt)).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("two"), 2);
+        assert_eq!(find("c */"), 4);
+        assert_eq!(find("final"), 6);
+    }
+
+    #[test]
+    fn unterminated_inputs_do_not_panic() {
+        for src in ["\"abc", "/* abc", "r#\"abc", "'", "b'x", "0x"] {
+            let _ = tokenize(src);
+        }
+    }
+}

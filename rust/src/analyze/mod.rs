@@ -1,0 +1,45 @@
+//! `srclint` — a project-invariant static-analysis pass.
+//!
+//! The repo's headline claims are concurrency invariants (bit-identical
+//! engine tiers, exactly-one-reply, no silent corruption), and PRs 5–6
+//! grew a hand-rolled concurrent surface whose rules were previously
+//! enforced only by review. This module enforces them mechanically:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1   | locks/condvars go through `util::sync::*_clean` (poison tolerance) |
+//! | R2   | every atomic `Ordering::` use matches [`contract::ATOMIC_CONTRACT`] |
+//! | R3   | no panics / user-input indexing in the serving hot path |
+//! | R4   | deterministic modules never read the wall clock |
+//! | R5   | `CVAPPROX_*` env vars ⊆ README registry, both directions |
+//!
+//! Run as `cvapprox srclint [--json LINT_report.json] [--root PATH]`;
+//! exits non-zero on any finding. Suppress a single site with
+//! `// srclint: allow(Rn, reason)` — the reason is mandatory and the
+//! comment itself is linted (rule `SUP`).
+//!
+//! Like `util::json`, everything here is hermetic: a hand-rolled
+//! tokenizer ([`lexer`]) instead of `syn`, so the pass runs offline with
+//! zero new dependencies. It lints a *token stream*, not an AST — rules
+//! are written to be exact on this codebase's idioms and conservative
+//! elsewhere.
+
+pub mod contract;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::PathBuf;
+
+pub use report::{run_lint, LintReport};
+pub use rules::{Finding, Suppression};
+
+/// The repo root (the directory holding `rust/`, `benches/`, `README.md`),
+/// derived from the crate manifest dir so tests and the CLI agree.
+pub fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match manifest.parent() {
+        Some(p) => p.to_path_buf(),
+        None => PathBuf::from("."),
+    }
+}

@@ -1,0 +1,240 @@
+//! Tree walking, the cross-file R5 registry check, and the
+//! `LINT_report.json` artifact.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::contract::{ENV_REGISTRY_BEGIN, ENV_REGISTRY_END};
+use super::rules::{self, Finding, Suppression};
+use crate::util::json::Json;
+
+/// The complete result of linting a tree.
+pub struct LintReport {
+    pub root: PathBuf,
+    pub files_scanned: usize,
+    /// Findings that survived suppression, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// How many findings were silenced by `srclint: allow` comments.
+    pub suppressed: usize,
+    /// Every suppression comment in the tree (whether or not it fired).
+    pub suppressions: Vec<Suppression>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("tool", "srclint")
+            .field("root", self.root.display().to_string())
+            .field("files_scanned", self.files_scanned)
+            .field("suppressed", self.suppressed)
+            .field(
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj()
+                                .field("file", f.file.as_str())
+                                .field("line", f.line)
+                                .field("rule", f.rule)
+                                .field("message", f.message.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+            .field(
+                "suppressions",
+                Json::Arr(
+                    self.suppressions
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .field("file", s.file.as_str())
+                                .field("line", s.line)
+                                .field("rule", s.rule.as_str())
+                                .field("reason", s.reason.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Human-readable finding lines (`file:line [Rn] message`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out.push_str(&format!(
+            "srclint: {} finding(s), {} suppressed, {} file(s) scanned\n",
+            self.findings.len(),
+            self.suppressed,
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Lint the tree rooted at `root` (the repo root: the directory holding
+/// `rust/`, `benches/`, `scripts/`, `README.md`).
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    if !root.join("rust/src").is_dir() {
+        bail!("{} does not look like a repo root (no rust/src)", root.display());
+    }
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut suppressions: Vec<Suppression> = Vec::new();
+    // var -> first (file, line) that reads it, for R5 anchoring.
+    let mut code_vars: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    let mut files_scanned = 0usize;
+
+    let mut rs_files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut rs_files)?;
+    collect_rs(&root.join("rust/tests"), &mut rs_files)?;
+    collect_rs(&root.join("benches"), &mut rs_files)?;
+    rs_files.sort();
+
+    for path in &rs_files {
+        let rel = rel_unix(root, path);
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let lint = rules::lint_source(&rel, &src);
+        findings.extend(lint.findings);
+        suppressions.extend(lint.suppressions);
+        for (var, line) in lint.env_refs {
+            code_vars.entry(var).or_insert((rel.clone(), line));
+        }
+        files_scanned += 1;
+    }
+
+    // Shell scripts and workflow YAML read env vars too; they are plain
+    // text, not Rust, so only the R5 extractor runs on them.
+    let mut raw_files = Vec::new();
+    collect_ext(&root.join("scripts"), "sh", &mut raw_files)?;
+    collect_ext(&root.join(".github/workflows"), "yml", &mut raw_files)?;
+    raw_files.sort();
+    for path in &raw_files {
+        let rel = rel_unix(root, path);
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for (var, line) in rules::extract_env_vars(&text) {
+            code_vars.entry(var).or_insert((rel.clone(), line));
+        }
+        files_scanned += 1;
+    }
+
+    findings.extend(check_env_registry(root, &code_vars)?);
+
+    let (mut kept, suppressed) = rules::apply_suppressions(findings, &suppressions);
+    kept.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport {
+        root: root.to_path_buf(),
+        files_scanned,
+        findings: kept,
+        suppressed,
+        suppressions,
+    })
+}
+
+/// R5: the README registry between the srclint markers must list exactly
+/// the `CVAPPROX_*` vars the code reads — drift in either direction is a
+/// finding.
+fn check_env_registry(
+    root: &Path,
+    code_vars: &BTreeMap<String, (String, u32)>,
+) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let readme_path = root.join("README.md");
+    let readme = fs::read_to_string(&readme_path)
+        .with_context(|| format!("reading {}", readme_path.display()))?;
+    let begin = readme.find(ENV_REGISTRY_BEGIN);
+    let end = readme.find(ENV_REGISTRY_END);
+    let (Some(b), Some(e)) = (begin, end) else {
+        out.push(Finding {
+            file: "README.md".into(),
+            line: 1,
+            rule: "R5",
+            message: format!(
+                "env-var registry markers `{ENV_REGISTRY_BEGIN}` / \
+                 `{ENV_REGISTRY_END}` not found in README.md"
+            ),
+        });
+        return Ok(out);
+    };
+    if e < b {
+        bail!("README env-registry end marker precedes begin marker");
+    }
+    let base_line = readme[..b].lines().count() as u32;
+    let mut registry: BTreeMap<String, u32> = BTreeMap::new();
+    for (var, line) in rules::extract_env_vars(&readme[b..e]) {
+        registry.entry(var).or_insert(base_line + line - 1);
+    }
+    let reg_set: BTreeSet<&String> = registry.keys().collect();
+    for (var, (file, line)) in code_vars {
+        if !reg_set.contains(var) {
+            out.push(Finding {
+                file: file.clone(),
+                line: *line,
+                rule: "R5",
+                message: format!(
+                    "env var `{var}` is read here but missing from the README \
+                     env-var registry"
+                ),
+            });
+        }
+    }
+    for (var, line) in &registry {
+        if !code_vars.contains_key(var) {
+            out.push(Finding {
+                file: "README.md".into(),
+                line: *line,
+                rule: "R5",
+                message: format!(
+                    "registry lists `{var}` but nothing in the tree reads it \
+                     — stale entry"
+                ),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Recursively collect `.rs` files; missing directories are fine (fixture
+/// trees may omit `benches/`).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    collect_ext(dir, "rs", out)
+}
+
+fn collect_ext(dir: &Path, ext: &str, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_ext(&p, ext, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with `/` separators regardless of platform.
+fn rel_unix(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -1,0 +1,682 @@
+//! The srclint rules (R1–R5) over the token stream from [`super::lexer`].
+//!
+//! Per-file scanning lives here; the cross-file rule R5 (env-var
+//! registry drift) only *extracts* references here — the README
+//! comparison happens in [`super::report`], which sees every file.
+//!
+//! Rules (see README "Static analysis & concurrency verification"):
+//! - **R1** no bare `.lock().unwrap()/expect()` / `.wait*(..).unwrap()`
+//!   outside `util/sync.rs` and test code — use `util::sync::*_clean`.
+//! - **R2** every `Ordering::` use must match `contract::ATOMIC_CONTRACT`.
+//! - **R3** no `unwrap`/`expect`/`panic!`/user-input indexing in the
+//!   serving hot path outside tests and `catch_unwind` bodies.
+//! - **R4** no `Instant`/`SystemTime` in deterministic modules.
+//! - **R5** `CVAPPROX_*` env vars ⊆ README registry (and vice versa).
+//! - **SUP** a `// srclint: allow(Rn, reason)` comment must carry a
+//!   well-formed rule id and a non-empty reason.
+
+use super::contract;
+use super::lexer::{tokenize, TokKind, Token};
+
+/// One lint finding. `rule` is `"R1"`..`"R5"` or `"SUP"`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A parsed, well-formed suppression comment.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Per-file lint result; `env_refs` feeds the cross-file R5 check.
+#[derive(Default)]
+pub struct FileLint {
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+    pub env_refs: Vec<(String, u32)>,
+}
+
+const WAIT_METHODS: &[&str] = &["wait", "wait_timeout", "wait_while", "wait_timeout_while"];
+
+/// Lint one source file. `relpath` is repo-relative with `/` separators
+/// (it selects which rules apply and is the key into the contract).
+pub fn lint_source(relpath: &str, src: &str) -> FileLint {
+    let toks = tokenize(src);
+    let code: Vec<&Token> = toks.iter().filter(|t| t.kind != TokKind::Comment).collect();
+    let test_regions = find_test_regions(&code);
+    // Whole files under rust/tests/ are test context by definition.
+    let is_test_file = relpath.starts_with("rust/tests/");
+    let in_test = |line: u32| {
+        is_test_file || test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    };
+
+    let mut out = FileLint::default();
+
+    scan_suppressions(relpath, &toks, &mut out);
+    if relpath != contract::SYNC_WRAPPER_FILE {
+        scan_r1(relpath, &code, &in_test, &mut out.findings);
+    }
+    if relpath.starts_with("rust/src/") {
+        scan_r2(relpath, &code, &in_test, &mut out.findings);
+    }
+    if contract::HOT_PATH_DIRS.iter().any(|d| relpath.starts_with(d)) {
+        scan_r3(relpath, &code, &in_test, &mut out.findings);
+    }
+    if contract::DETERMINISTIC_MODULES.contains(&relpath) {
+        scan_r4(relpath, &code, &mut out.findings);
+    }
+    // Env refs come from string literals only: comments mentioning
+    // families like "CVAPPROX_QOS_*" are documentation, not reads. Test
+    // regions are excluded too — fixture literals in tests are not
+    // configuration surface (benches are real reads and stay in).
+    for t in toks.iter().filter(|t| t.kind == TokKind::Str) {
+        if in_test(t.line) {
+            continue;
+        }
+        for v in vars_in(&t.text) {
+            out.env_refs.push((v, t.line));
+        }
+    }
+    out
+}
+
+/// Extract `CVAPPROX_*` variable names (with line numbers) from raw,
+/// non-Rust text — shell scripts and workflow YAML.
+pub fn extract_env_vars(text: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        for v in vars_in(line) {
+            out.push((v, (i + 1) as u32));
+        }
+    }
+    out
+}
+
+/// `CVAPPROX` not preceded by a word character, then `[A-Z0-9_]*`, with
+/// trailing underscores trimmed; the bare prefix alone is skipped.
+fn vars_in(text: &str) -> Vec<String> {
+    let cs: Vec<char> = text.chars().collect();
+    let needle: Vec<char> = "CVAPPROX".chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + needle.len() <= cs.len() {
+        let word_before =
+            i > 0 && (cs[i - 1].is_ascii_alphanumeric() || cs[i - 1] == '_');
+        if !word_before && cs[i..i + needle.len()] == needle[..] {
+            let mut j = i + needle.len();
+            while j < cs.len() && (cs[j].is_ascii_uppercase() || cs[j].is_ascii_digit() || cs[j] == '_')
+            {
+                j += 1;
+            }
+            let name: String = cs[i..j].iter().collect();
+            let name = name.trim_end_matches('_').to_string();
+            if name != "CVAPPROX" {
+                out.push(name);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Drop findings covered by a suppression on the same or the preceding
+/// line; returns the surviving findings and how many were suppressed.
+/// `SUP` findings are never suppressible — the escape hatch cannot hide
+/// its own lint.
+pub fn apply_suppressions(
+    findings: Vec<Finding>,
+    sups: &[Suppression],
+) -> (Vec<Finding>, usize) {
+    let mut suppressed = 0usize;
+    let kept = findings
+        .into_iter()
+        .filter(|f| {
+            let hit = f.rule != "SUP"
+                && sups.iter().any(|s| {
+                    s.file == f.file
+                        && s.rule == f.rule
+                        && (f.line == s.line || f.line == s.line + 1)
+                });
+            if hit {
+                suppressed += 1;
+            }
+            !hit
+        })
+        .collect();
+    (kept, suppressed)
+}
+
+// ---------------------------------------------------------------------
+// test-region detection
+// ---------------------------------------------------------------------
+
+/// Line spans covered by `#[cfg(test)]` / `#[test]` items. Matches the
+/// attribute token pattern, skips any further attributes, then scans to
+/// the item's body `{` (tracking nesting) and records the span of its
+/// matching `}`. Items ending in `;` contribute no span.
+fn find_test_regions(code: &[&Token]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < code.len() {
+        if !(code[i].is_punct('#') && code[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let Some(close) = match_forward(code, i + 1, '[', ']') else { break };
+        let is_test_attr = code[i + 2..close]
+            .iter()
+            .any(|t| t.is_ident("test"));
+        let mut j = close + 1;
+        if is_test_attr {
+            // Skip any further attributes on the same item.
+            while j + 1 < code.len() && code[j].is_punct('#') && code[j + 1].is_punct('[') {
+                match match_forward(code, j + 1, '[', ']') {
+                    Some(c) => j = c + 1,
+                    None => break,
+                }
+            }
+            // Find the item body's `{` (or a terminating `;`), tracking
+            // paren/bracket depth so e.g. generic bounds don't confuse us.
+            let mut depth = 0i32;
+            let mut body = None;
+            while j < code.len() {
+                let t = code[j];
+                if t.is_punct('(') || t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(')') || t.is_punct(']') {
+                    depth -= 1;
+                } else if depth == 0 && t.is_punct('{') {
+                    body = Some(j);
+                    break;
+                } else if depth == 0 && t.is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(b) = body {
+                if let Some(end) = match_forward(code, b, '{', '}') {
+                    spans.push((code[b].line, code[end].line));
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i = close + 1;
+    }
+    spans
+}
+
+/// Index of the token closing the delimiter opened at `open_idx`.
+fn match_forward(code: &[&Token], open_idx: usize, open: char, close: char) -> Option<usize> {
+    let mut depth = 0i32;
+    for (k, t) in code.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// R1: bare lock()/wait*() + unwrap/expect
+// ---------------------------------------------------------------------
+
+fn scan_r1(
+    relpath: &str,
+    code: &[&Token],
+    in_test: &dyn Fn(u32) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    let mut i = 0usize;
+    while i + 2 < code.len() {
+        if !code[i].is_punct('.') || code[i + 1].kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let m = code[i + 1].text.as_str();
+        let is_lock = m == "lock";
+        let is_wait = WAIT_METHODS.contains(&m);
+        if !(is_lock || is_wait) || !code[i + 2].is_punct('(') {
+            i += 1;
+            continue;
+        }
+        let Some(close) = match_forward(code, i + 2, '(', ')') else { break };
+        // `Mutex::lock` takes no args; `Condvar::wait*` always takes the
+        // guard. This split keeps unrelated `wait()` methods (e.g. the
+        // retry client's `Pending::wait()`) out of scope.
+        let arity_ok = if is_lock { close == i + 3 } else { close > i + 3 };
+        let j = close + 1;
+        if arity_ok
+            && j + 2 < code.len()
+            && code[j].is_punct('.')
+            && (code[j + 1].is_ident("unwrap") || code[j + 1].is_ident("expect"))
+            && code[j + 2].is_punct('(')
+        {
+            let line = code[j + 1].line;
+            if !in_test(line) {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line,
+                    rule: "R1",
+                    message: format!(
+                        "bare `.{m}(..).{}()` — use util::sync::{} so a \
+                         poisoned lock cannot cascade",
+                        code[j + 1].text,
+                        if is_lock { "lock_clean" } else { "wait_clean/wait_timeout_clean" },
+                    ),
+                });
+            }
+        }
+        i = j;
+    }
+}
+
+// ---------------------------------------------------------------------
+// R2: atomics-ordering contract
+// ---------------------------------------------------------------------
+
+fn scan_r2(
+    relpath: &str,
+    code: &[&Token],
+    in_test: &dyn Fn(u32) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    for i in 0..code.len() {
+        if !(code[i].is_ident("Ordering")
+            && i + 3 < code.len()
+            && code[i + 1].is_punct(':')
+            && code[i + 2].is_punct(':')
+            && code[i + 3].kind == TokKind::Ident
+            && contract::ATOMIC_ORDERINGS.contains(&code[i + 3].text.as_str()))
+        {
+            continue;
+        }
+        let variant = code[i + 3].text.as_str();
+        let line = code[i].line;
+        if in_test(line) {
+            continue;
+        }
+        let mut fail = |msg: String| {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line,
+                rule: "R2",
+                message: msg,
+            })
+        };
+        // Walk back to the `(` of the enclosing call, over balanced parens.
+        let mut depth = 0i32;
+        let mut open = None;
+        for j in (0..i).rev() {
+            let t = code[j];
+            if t.is_punct(')') {
+                depth += 1;
+            } else if t.is_punct('(') {
+                if depth == 0 {
+                    open = Some(j);
+                    break;
+                }
+                depth -= 1;
+            } else if depth == 0 && (t.is_punct(';') || t.is_punct('{') || t.is_punct('}')) {
+                break;
+            }
+        }
+        let Some(open) = open else {
+            fail(format!("`Ordering::{variant}` outside any call expression"));
+            continue;
+        };
+        if open == 0 || code[open - 1].kind != TokKind::Ident {
+            fail(format!("`Ordering::{variant}` not anchored to a method call"));
+            continue;
+        }
+        let method = code[open - 1].text.as_str();
+        if !contract::ATOMIC_METHODS.contains(&method) {
+            fail(format!(
+                "`Ordering::{variant}` passed to `{method}`, which is not a \
+                 recognized atomic operation"
+            ));
+            continue;
+        }
+        // Receiver: `recv.method(` or `recv[..].method(`.
+        let recv = if open >= 3 && code[open - 2].is_punct('.') {
+            let mut r = open - 3;
+            if code[r].is_punct(']') {
+                // e.g. `self.lat_us[(j % cap) as usize].load(..)`
+                let mut d = 0i32;
+                let mut found = None;
+                for k in (0..=r).rev() {
+                    if code[k].is_punct(']') {
+                        d += 1;
+                    } else if code[k].is_punct('[') {
+                        d -= 1;
+                        if d == 0 {
+                            found = Some(k);
+                            break;
+                        }
+                    }
+                }
+                match found {
+                    Some(k) if k >= 1 => r = k - 1,
+                    _ => {
+                        fail(format!("cannot resolve indexed receiver of `{method}`"));
+                        continue;
+                    }
+                }
+            }
+            if code[r].kind == TokKind::Ident {
+                code[r].text.clone()
+            } else {
+                fail(format!("cannot resolve receiver of `{method}`"));
+                continue;
+            }
+        } else {
+            fail(format!("cannot resolve receiver of `{method}`"));
+            continue;
+        };
+        match contract::lookup(relpath, &recv) {
+            None => fail(format!(
+                "atomic `{recv}` has no row in analyze::contract::ATOMIC_CONTRACT \
+                 — add one with a rationale"
+            )),
+            Some(rule) if !rule.allowed.contains(&variant) => fail(format!(
+                "`{recv}.{method}(Ordering::{variant})` violates the contract \
+                 (allowed: {}) — {}",
+                rule.allowed.join("/"),
+                rule.rationale
+            )),
+            Some(_) => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R3: panics in the serving hot path
+// ---------------------------------------------------------------------
+
+fn scan_r3(
+    relpath: &str,
+    code: &[&Token],
+    in_test: &dyn Fn(u32) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    // Lines lexically inside a `catch_unwind(..)` argument are exempt:
+    // that is the one place a panic is contained by design.
+    let mut caught: Vec<(u32, u32)> = Vec::new();
+    for i in 0..code.len() {
+        if code[i].is_ident("catch_unwind") && i + 1 < code.len() && code[i + 1].is_punct('(') {
+            if let Some(close) = match_forward(code, i + 1, '(', ')') {
+                caught.push((code[i].line, code[close].line));
+            }
+        }
+    }
+    let exempt =
+        |line: u32| in_test(line) || caught.iter().any(|&(a, b)| a <= line && line <= b);
+
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.is_punct('.')
+            && i + 2 < code.len()
+            && (code[i + 1].is_ident("unwrap") || code[i + 1].is_ident("expect"))
+            && code[i + 2].is_punct('(')
+            && !exempt(code[i + 1].line)
+        {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: code[i + 1].line,
+                rule: "R3",
+                message: format!(
+                    "`.{}()` in the serving hot path — return a typed error \
+                     instead of panicking a worker",
+                    code[i + 1].text
+                ),
+            });
+        }
+        if t.is_ident("panic")
+            && i + 1 < code.len()
+            && code[i + 1].is_punct('!')
+            && !exempt(t.line)
+        {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: "R3",
+                message: "`panic!` in the serving hot path — workers must fail \
+                          through typed ReplyError, not unwinding"
+                    .to_string(),
+            });
+        }
+        if t.kind == TokKind::Ident
+            && contract::USER_INPUT_RECEIVERS.contains(&t.text.as_str())
+            && i + 1 < code.len()
+            && code[i + 1].is_punct('[')
+            && !exempt(t.line)
+        {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: "R3",
+                message: format!(
+                    "direct `{}[..]` indexing on request-derived data — a \
+                     malformed request must become BadInput, not a panic",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// R4: wall-clock reads in deterministic modules
+// ---------------------------------------------------------------------
+
+fn scan_r4(relpath: &str, code: &[&Token], findings: &mut Vec<Finding>) {
+    for t in code {
+        if t.is_ident("Instant") || t.is_ident("SystemTime") {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: "R4",
+                message: format!(
+                    "`{}` in a deterministic module — seeded schedules and \
+                     goldens must be replay-exact functions of the seed",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// suppression comments
+// ---------------------------------------------------------------------
+
+fn scan_suppressions(relpath: &str, toks: &[Token], out: &mut FileLint) {
+    for t in toks.iter().filter(|t| t.kind == TokKind::Comment) {
+        // Only comments that *start* with `srclint:` (after the comment
+        // sigils) are suppression candidates — docs may mention the syntax
+        // in backticks without becoming suppressions themselves.
+        let body = t
+            .text
+            .trim_start_matches(|c| matches!(c, '/' | '*' | '!' | ' ' | '\t'));
+        let Some(rest) = body.strip_prefix("srclint:") else { continue };
+        let rest = rest.trim();
+        match parse_allow(rest) {
+            Some((rule, reason)) => out.suppressions.push(Suppression {
+                file: relpath.to_string(),
+                line: t.line,
+                rule,
+                reason,
+            }),
+            None => out.findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: "SUP",
+                message: "malformed suppression — expected \
+                          `// srclint: allow(Rn, reason)` with a non-empty reason"
+                    .to_string(),
+            }),
+        }
+    }
+}
+
+/// Parse `allow(Rn, reason)`; the reason must be non-empty.
+fn parse_allow(s: &str) -> Option<(String, String)> {
+    let body = s.strip_prefix("allow(")?;
+    let close = body.rfind(')')?;
+    let inner = &body[..close];
+    let (rule, reason) = inner.split_once(',')?;
+    let rule = rule.trim();
+    let reason = reason.trim();
+    let known = matches!(rule, "R1" | "R2" | "R3" | "R4" | "R5");
+    if known && !reason.is_empty() {
+        Some((rule.to_string(), reason.to_string()))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(relpath: &str, src: &str) -> Vec<&'static str> {
+        let lint = lint_source(relpath, src);
+        let (kept, _) = apply_suppressions(lint.findings, &lint.suppressions);
+        kept.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_on_bare_lock_unwrap_only_outside_tests() {
+        let bad = "fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap() }";
+        assert_eq!(rules_of("rust/src/x.rs", bad), ["R1"]);
+        // Same code inside #[cfg(test)] or util/sync.rs is fine.
+        let test_wrapped = format!("#[cfg(test)]\nmod tests {{ {bad} }}");
+        assert!(rules_of("rust/src/x.rs", &test_wrapped).is_empty());
+        assert!(rules_of("rust/src/util/sync.rs", bad).is_empty());
+        // lock_clean passes; Pending-style `wait()` (no guard arg) passes.
+        assert!(rules_of("rust/src/x.rs", "fn f() { lock_clean(&m); p.wait().unwrap(); }")
+            .is_empty());
+        // Condvar wait with a guard arg fails.
+        assert_eq!(
+            rules_of("rust/src/x.rs", "fn f() { let g = cv.wait(g).unwrap(); }"),
+            ["R1"]
+        );
+    }
+
+    #[test]
+    fn r2_checks_the_contract() {
+        // Allowed by contract: inject.rs seq is Relaxed.
+        let ok = "fn f(&self) { self.seq.load(Ordering::Relaxed); }";
+        assert!(rules_of("rust/src/fault/inject.rs", ok).is_empty());
+        // Disallowed ordering on a known atomic.
+        let bad = "fn f(&self) { self.seq.load(Ordering::SeqCst); }";
+        assert_eq!(rules_of("rust/src/fault/inject.rs", bad), ["R2"]);
+        // Unknown atomic entirely.
+        let unknown = "fn f(&self) { self.mystery.load(Ordering::Relaxed); }";
+        assert_eq!(rules_of("rust/src/util/rng.rs", unknown), ["R2"]);
+        // cmp::Ordering variants never match.
+        assert!(rules_of("rust/src/x.rs", "fn f() { if o == Ordering::Less {} }").is_empty());
+    }
+
+    #[test]
+    fn r2_resolves_indexed_receivers_and_fetch_update() {
+        let src = "impl T { fn f(&self) { \
+                   self.lat_us[(j % cap) as usize].load(Ordering::Acquire); \
+                   self.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v)); } }";
+        assert!(rules_of("rust/src/qos/telemetry.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_hot_path_panics() {
+        let bad = "fn f(x: Option<u32>) { x.unwrap(); panic!(\"no\"); let v = image[i]; }";
+        assert_eq!(
+            rules_of("rust/src/coordinator/x.rs", bad),
+            ["R3", "R3", "R3"]
+        );
+        // Outside hot path: no findings.
+        assert!(rules_of("rust/src/nn/x.rs", bad).is_empty());
+        // Inside catch_unwind: exempt.
+        let caught = "fn f() { let r = catch_unwind(AssertUnwindSafe(|| x.unwrap())); }";
+        assert!(rules_of("rust/src/coordinator/x.rs", caught).is_empty());
+        // unwrap_or_else is not unwrap.
+        assert!(rules_of(
+            "rust/src/coordinator/x.rs",
+            "fn f() { g.unwrap_or_else(|e| e.into_inner()); }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn r4_wall_clock() {
+        let bad = "fn f() { let t = Instant::now(); }";
+        assert_eq!(rules_of("rust/src/util/rng.rs", bad), ["R4"]);
+        assert!(rules_of("rust/src/util/other.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn suppressions_round_trip() {
+        let src = "fn f(m: &Mutex<u32>) {\n\
+                   // srclint: allow(R1, poison is impossible here by construction)\n\
+                   m.lock().unwrap();\n}";
+        let lint = lint_source("rust/src/x.rs", src);
+        assert_eq!(lint.suppressions.len(), 1);
+        let (kept, suppressed) = apply_suppressions(lint.findings, &lint.suppressions);
+        assert!(kept.is_empty());
+        assert_eq!(suppressed, 1);
+        // Wrong rule id in the comment -> finding survives.
+        let src2 = src.replace("allow(R1,", "allow(R2,");
+        let lint2 = lint_source("rust/src/x.rs", &src2);
+        let (kept2, _) = apply_suppressions(lint2.findings, &lint2.suppressions);
+        assert_eq!(kept2.len(), 1);
+    }
+
+    #[test]
+    fn malformed_suppression_is_its_own_finding() {
+        for bad in [
+            "// srclint: allow(R1)",
+            "// srclint: allow(R1, )",
+            "// srclint: allow(R9, reason)",
+            "// srclint: allowed",
+        ] {
+            assert_eq!(rules_of("rust/src/x.rs", bad), ["SUP"], "{bad}");
+        }
+    }
+
+    #[test]
+    fn env_vars_extracted_from_strings_not_comments() {
+        let src = "// mentions CVAPPROX_FAKE_IN_COMMENT\n\
+                   fn f() { std::env::var(\"CVAPPROX_THREADS\"); }";
+        let lint = lint_source("rust/src/x.rs", src);
+        let names: Vec<&str> = lint.env_refs.iter().map(|(v, _)| v.as_str()).collect();
+        assert_eq!(names, ["CVAPPROX_THREADS"]);
+        // Raw-text extraction for shell scripts, ${VAR:-} form included.
+        let sh = "x=\"${CVAPPROX_SKIP_LINT:-}\"\n: \"${CVAPPROX_QOS_TICK_MS}\"";
+        let vars = extract_env_vars(sh);
+        assert_eq!(vars[0].0, "CVAPPROX_SKIP_LINT");
+        assert_eq!(vars[1], ("CVAPPROX_QOS_TICK_MS".to_string(), 2));
+    }
+
+    #[test]
+    fn test_region_detection_spans_nested_braces() {
+        let src = "fn live() { m.lock().unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n  fn inner() { if x { m.lock().unwrap(); } }\n}\n\
+                   fn live2() { m.lock().unwrap(); }";
+        let rules = rules_of("rust/src/x.rs", src);
+        assert_eq!(rules, ["R1", "R1"]); // only the two live fns
+    }
+}

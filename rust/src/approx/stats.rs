@@ -14,6 +14,7 @@ use std::sync::{Mutex, OnceLock};
 
 use super::{err, err_pol, Family, Polarity};
 use crate::util::rng::Rng;
+use crate::util::sync::lock_clean;
 use crate::util::stats::Welford;
 
 /// Input operand distribution used by the paper's Table 1.
@@ -118,7 +119,7 @@ pub fn signed_moments(family: Family, m: u32, pol: Polarity) -> SignedMoments {
     static CACHE: OnceLock<Mutex<HashMap<(Family, u32, Polarity), SignedMoments>>> =
         OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = cache.lock().unwrap();
+    let mut map = lock_clean(cache);
     *map.entry((family, m, pol))
         .or_insert_with(|| signed_moments_exhaustive(family, m, pol))
 }

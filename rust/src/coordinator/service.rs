@@ -490,7 +490,7 @@ impl PolicyInstaller {
         let epoch = self.switch.install(Some(policy));
         powers.insert(epoch, power);
         while powers.len() > POWER_EPOCHS_KEPT {
-            let oldest = *powers.keys().min().expect("nonempty map");
+            let Some(&oldest) = powers.keys().min() else { break };
             powers.remove(&oldest);
         }
         Ok(epoch)
@@ -598,18 +598,46 @@ impl InferenceService {
             monitor: IntegrityMonitor::new(),
             batch_seq: Arc::new(AtomicU64::new(0)),
         };
-        let handles: Vec<JoinHandle<()>> =
-            (0..n_workers).map(|id| spawn_worker(id, &shared, &cfg)).collect();
-        let handles = Arc::new(Mutex::new(handles));
+        let mut spawned: Vec<JoinHandle<()>> = Vec::with_capacity(n_workers);
+        for id in 0..n_workers {
+            match spawn_worker(id, &shared, &cfg) {
+                Ok(h) => spawned.push(h),
+                Err(e) => {
+                    // Startup must not leak live threads: release the
+                    // already-spawned workers (the queue is still empty, so
+                    // close() lets pop_batch return None) and surface a
+                    // typed error instead of panicking mid-construction.
+                    sup.stopping.store(true, Ordering::SeqCst);
+                    queue.close();
+                    for h in spawned {
+                        let _ = h.join();
+                    }
+                    sup.done.store(true, Ordering::SeqCst);
+                    return Err(e).context("spawning service worker");
+                }
+            }
+        }
+        let handles = Arc::new(Mutex::new(spawned));
         let next_id = Arc::new(AtomicUsize::new(n_workers));
         let supervisor = {
             let shared = shared.clone();
-            let cfg = cfg.clone();
-            let handles = handles.clone();
-            std::thread::Builder::new()
+            let cfg2 = cfg.clone();
+            let handles2 = handles.clone();
+            let spawn = std::thread::Builder::new()
                 .name("cvapprox-supervisor".to_string())
-                .spawn(move || supervisor_loop(shared, cfg, handles, next_id))
-                .expect("spawn service supervisor")
+                .spawn(move || supervisor_loop(shared, cfg2, handles2, next_id));
+            match spawn {
+                Ok(h) => h,
+                Err(e) => {
+                    sup.stopping.store(true, Ordering::SeqCst);
+                    queue.close();
+                    for h in lock_clean(&handles).drain(..) {
+                        let _ = h.join();
+                    }
+                    sup.done.store(true, Ordering::SeqCst);
+                    return Err(e).context("spawning service supervisor");
+                }
+            }
         };
         Ok(InferenceService {
             queue,
@@ -769,15 +797,25 @@ impl Drop for InferenceService {
 }
 
 /// Register a worker as alive (on the caller's thread, so `start` returns
-/// with the count already correct) and spawn its serving thread.
-fn spawn_worker(id: usize, shared: &WorkerShared, cfg: &ServiceConfig) -> JoinHandle<()> {
+/// with the count already correct) and spawn its serving thread. On spawn
+/// failure (thread exhaustion) the census is rolled back and the error
+/// returned for the caller to handle — `start` fails typed, the
+/// supervisor retries on a later tick.
+fn spawn_worker(
+    id: usize,
+    shared: &WorkerShared,
+    cfg: &ServiceConfig,
+) -> std::io::Result<JoinHandle<()>> {
     shared.alive.fetch_add(1, Ordering::SeqCst);
-    let shared = shared.clone();
+    let shared2 = shared.clone();
     let cfg = cfg.clone();
-    std::thread::Builder::new()
+    let spawned = std::thread::Builder::new()
         .name(format!("cvapprox-worker-{id}"))
-        .spawn(move || worker_loop(id, shared, cfg))
-        .expect("spawn service worker")
+        .spawn(move || worker_loop(id, shared2, cfg));
+    if spawned.is_err() {
+        shared.alive.fetch_sub(1, Ordering::SeqCst);
+    }
+    spawned
 }
 
 /// Supervisor poll cadence; also bounds how long shutdown lags the last
@@ -797,6 +835,10 @@ fn supervisor_loop(
     next_id: Arc<AtomicUsize>,
 ) {
     let mut backoff = Backoff::new(Duration::from_millis(1), Duration::from_millis(50));
+    // Workers reaped but not yet successfully replaced. Kept across ticks
+    // so a failed respawn (thread exhaustion) shrinks the pool only until
+    // the next tick, not permanently.
+    let mut deficit = 0usize;
     loop {
         let stopping = shared.sup.stopping.load(Ordering::SeqCst);
         let mut reaped = 0usize;
@@ -817,15 +859,23 @@ fn supervisor_loop(
         // requests still need a worker to drain them (a crash during
         // shutdown must not strand the queue).
         let must_serve = (!stopping && !shared.queue.is_closed()) || shared.queue.len() > 0;
-        if reaped > 0 && must_serve {
+        deficit += reaped;
+        if deficit > 0 && must_serve {
             std::thread::sleep(backoff.next_delay());
-            for _ in 0..reaped {
-                shared.metrics.record_worker_restart();
+            while deficit > 0 {
                 let id = next_id.fetch_add(1, Ordering::SeqCst);
-                let h = spawn_worker(id, &shared, &cfg);
-                lock_clean(&handles).push(h);
+                match spawn_worker(id, &shared, &cfg) {
+                    Ok(h) => {
+                        shared.metrics.record_worker_restart();
+                        lock_clean(&handles).push(h);
+                        deficit -= 1;
+                    }
+                    // Spawn failure: keep the deficit and retry next tick
+                    // under the same backoff that paces crash respawns.
+                    Err(_) => break,
+                }
             }
-        } else if reaped == 0 {
+        } else if deficit == 0 {
             backoff.reset();
         }
         if stopping && lock_clean(&handles).is_empty() {
@@ -994,6 +1044,7 @@ fn run_batch(
             std::thread::sleep(d);
         }
         if faults.panic {
+            // srclint: allow(R3, chaos injection must unwind for real so the ledger sweep + supervisor respawn path is exercised)
             panic!("injected worker panic (chaos schedule)");
         }
     }
@@ -1557,7 +1608,7 @@ mod tests {
                     let mut i = 1usize;
                     while !stop.load(Ordering::SeqCst) {
                         let r = (i * 7 + 3) % rungs.len();
-                        let mut map = epoch_map.lock().unwrap();
+                        let mut map = lock_clean(epoch_map);
                         let epoch = svc.install_policy(rungs[r].clone()).unwrap();
                         map.insert(epoch, r);
                         drop(map);
@@ -1581,7 +1632,7 @@ mod tests {
                             // The swapper publishes the mapping under the
                             // same lock it installs under, so the reply's
                             // epoch is always resolvable.
-                            let map = epoch_map.lock().unwrap();
+                            let map = lock_clean(epoch_map);
                             *map.get(&reply.epoch).unwrap_or_else(|| {
                                 panic!("reply epoch {} not in map", reply.epoch)
                             })

@@ -44,20 +44,19 @@ pub fn retry<T, E>(
     mut f: impl FnMut() -> Result<T, E>,
 ) -> Result<T, E> {
     let attempts = attempts.max(1);
-    let mut last = None;
-    for i in 0..attempts {
+    let mut tried = 0usize;
+    loop {
         match f() {
             Ok(v) => return Ok(v),
             Err(e) => {
-                if !retryable(&e) || i + 1 == attempts {
+                tried += 1;
+                if !retryable(&e) || tried == attempts {
                     return Err(e);
                 }
-                last = Some(e);
                 thread::sleep(backoff.next_delay());
             }
         }
     }
-    Err(last.expect("attempts >= 1 guarantees at least one error"))
 }
 
 #[cfg(test)]

@@ -18,11 +18,13 @@
 //! * [`coordinator`] — batching inference service + power/latency metrics
 //! * [`qos`] — adaptive QoS: policy ladders, telemetry, hot-swap governor
 //! * [`fault`] — fault injection, integrity checksums, self-healing helpers
+//! * [`analyze`] — `srclint`: project-invariant static analysis (R1–R5)
 //! * [`report`] — paper-style table/figure renderers
 //!
 //! Python (JAX + Pallas) exists only on the build path (`make artifacts`);
 //! this crate is self-contained at inference time.
 
+pub mod analyze;
 pub mod approx;
 pub mod coordinator;
 pub mod cv;

@@ -37,6 +37,7 @@ use anyhow::{bail, Context, Result};
 use super::graph::Model;
 use crate::approx::{Family, Polarity};
 use crate::util::json::Json;
+use crate::util::sync::lock_clean;
 
 /// Highest meaningful approximation level for 8-bit operands.
 pub const MAX_M: u32 = 7;
@@ -669,12 +670,12 @@ impl PolicySwitch {
 
     /// The current stamped generation (workers call this per batch).
     pub fn load(&self) -> Arc<StampedPolicy> {
-        self.cur.lock().unwrap().clone()
+        lock_clean(&self.cur).clone()
     }
 
     /// Publish a new generation; returns its (fresh, unique) epoch.
     pub fn install(&self, policy: Option<SharedPolicy>) -> u64 {
-        let mut g = self.cur.lock().unwrap();
+        let mut g = lock_clean(&self.cur);
         let epoch = g.epoch + 1;
         *g = Arc::new(StampedPolicy { epoch, policy });
         epoch
@@ -682,7 +683,7 @@ impl PolicySwitch {
 
     /// Epoch of the current generation.
     pub fn epoch(&self) -> u64 {
-        self.cur.lock().unwrap().epoch
+        lock_clean(&self.cur).epoch
     }
 }
 

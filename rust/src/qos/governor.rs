@@ -40,6 +40,7 @@ use anyhow::{Context, Result};
 use super::ladder::Ladder;
 use super::telemetry::{Telemetry, TelemetryWindow};
 use crate::coordinator::{InferenceService, PolicyInstaller};
+use crate::util::sync::lock_clean;
 
 /// Governor knobs. Every field has an env override (`CVAPPROX_QOS_*`, see
 /// [`QosConfig::from_env`]) so deployments tune without recompiling.
@@ -225,7 +226,7 @@ impl Governor {
 
     /// Snapshot of transitions/dwell so far (the governor keeps running).
     pub fn report(&self) -> GovernorReport {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         GovernorReport {
             transitions: g.transitions.clone(),
             dwell_secs: g.dwell_secs.clone(),
@@ -305,7 +306,7 @@ fn run_loop(
     while !stop.load(Ordering::Acquire) {
         std::thread::sleep(cfg.tick);
         let now = Instant::now();
-        inner.lock().unwrap().dwell_secs[cur] += (now - last_tick).as_secs_f64();
+        lock_clean(&inner).dwell_secs[cur] += (now - last_tick).as_secs_f64();
         last_tick = now;
         if now.duration_since(last_eval) < cfg.min_dwell {
             continue;
@@ -319,7 +320,7 @@ fn run_loop(
         if let Some((to, reason)) = decide(&ladder, cur, &w, outstanding, &cfg) {
             match installer.install(ladder.rung(to).policy.clone()) {
                 Ok(epoch) => {
-                    let mut g = inner.lock().unwrap();
+                    let mut g = lock_clean(&inner);
                     if g.transitions.len() >= LOG_CAP {
                         g.transitions.drain(..LOG_CAP / 2);
                     }
@@ -348,7 +349,7 @@ fn run_loop(
         }
     }
     let now = Instant::now();
-    inner.lock().unwrap().dwell_secs[cur] += (now - last_tick).as_secs_f64();
+    lock_clean(&inner).dwell_secs[cur] += (now - last_tick).as_secs_f64();
 }
 
 /// The pure control law (unit-tested without threads): given the current

@@ -13,10 +13,13 @@
 //! percentiles, which are computed over the samples recorded in the window
 //! (capped at the ring size; a window that overflows the ring keeps its
 //! most recent `window` samples). Stale burst latencies therefore cannot
-//! leak into later decisions and pin the governor at a wrong rung. Reads
-//! are racy by design — a sample landing on a window boundary counts in
-//! one window or the next, never corrupts. One poller is assumed (the
-//! governor); a second concurrent poller would split windows between them.
+//! leak into later decisions and pin the governor at a wrong rung — the
+//! latency ring's head and slots use Release/Acquire so the drain actually
+//! observes the stores behind the head it reads (see `record_latency`);
+//! the commutative sums stay Relaxed because a sample landing on a window
+//! boundary counts in one window or the next, never corrupts. One poller
+//! is assumed (the governor); a second concurrent poller would split
+//! windows between them.
 //! The `in_flight` gauge is the exception: it is a live level, not a
 //! window aggregate — requests popped into executing batches are invisible
 //! to both the queue depth and the completion count, and without this
@@ -121,10 +124,17 @@ impl Telemetry {
     }
 
     /// Record one completed request's end-to-end latency.
+    ///
+    /// Publication order matters here: each Release fetch_add on `head`
+    /// joins a release sequence, so the Acquire load in [`window`] makes
+    /// every slot store from *earlier* increments visible. The one store
+    /// that can still be in flight per worker is its own latest sample —
+    /// bounded staleness, versus the unbounded leak an all-Relaxed scheme
+    /// allows (head advanced, slots still stale).
     pub fn record_latency(&self, d: Duration) {
         let us = (d.as_secs_f64() * 1e6).round().max(1.0) as u64;
-        let slot = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.lat_us.len();
-        self.lat_us[slot].store(us, Ordering::Relaxed);
+        let slot = self.head.fetch_add(1, Ordering::Release) as usize % self.lat_us.len();
+        self.lat_us[slot].store(us, Ordering::Release);
     }
 
     /// A worker is about to run a batch of `requests`: raise the in-flight
@@ -161,12 +171,12 @@ impl Telemetry {
     /// ring-size samples when the window overflowed the ring), so a past
     /// burst's tail cannot haunt later decisions.
     pub fn window(&self) -> TelemetryWindow {
-        let head = self.head.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
         let prev = self.drained_head.swap(head, Ordering::Relaxed);
         let cap = self.lat_us.len() as u64;
         let take = head.saturating_sub(prev).min(cap);
         let mut lats: Vec<u64> = (head - take..head)
-            .map(|j| self.lat_us[(j % cap) as usize].load(Ordering::Relaxed))
+            .map(|j| self.lat_us[(j % cap) as usize].load(Ordering::Acquire))
             .filter(|&v| v > 0)
             .collect();
         lats.sort_unstable();

@@ -11,6 +11,7 @@
 //! cvapprox pareto   [--nets a,b] [--n 200]        # Fig 10
 //! cvapprox e2e      [--net resnet8] [--n 200]     # end-to-end service demo
 //! cvapprox qos-ladder [--hermetic] [--json l.json] # adaptive-QoS ladder artifact
+//! cvapprox srclint  [--json LINT_report.json] [--root PATH] # invariant linter
 //! cvapprox info                                   # artifact inventory
 //! ```
 
@@ -35,7 +36,7 @@ use crate::{artifacts_dir, runtime};
 const KNOWN_OPTS: &[&str] = &[
     "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
     "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
-    "policy", "paired", "hermetic",
+    "policy", "paired", "hermetic", "root",
 ];
 
 pub fn cli_main() {
@@ -63,12 +64,13 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("layerwise") => cmd_layerwise(&args),
         Some("qos-ladder") => cmd_qos_ladder(&args),
         Some("figure4") => cmd_figure4(&args),
+        Some("srclint") => cmd_srclint(&args),
         Some("info") => cmd_info(),
         other => {
             bail!(
                 "unknown or missing subcommand {:?}; try: table1 figure7 figure8 \
                  figure9 table5 accuracy pareto e2e layerwise qos-ladder figure4 \
-                 info",
+                 srclint info",
                 other
             )
         }
@@ -382,6 +384,33 @@ fn cmd_layerwise(args: &Args) -> Result<()> {
     // --paired upgrades the mixed result into the positive/negative paired
     // space and emits the paired policy as the JSON artifact.
     layerwise::run(&art, net, ds, family, m_hi, budget, n, args.flag("paired"), out)
+}
+
+/// `cvapprox srclint`: run the project-invariant linter over the repo
+/// tree (see `analyze/`). Exits non-zero (via the `Err` path of
+/// `cli_main`) when any finding survives suppression, which is what lets
+/// verify.sh and CI use it as a hard gate. `--json` (flag or
+/// `--json PATH`) writes the `LINT_report.json` artifact.
+fn cmd_srclint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => crate::analyze::repo_root(),
+    };
+    let report = crate::analyze::run_lint(&root)?;
+    print!("{}", report.render());
+    let json_path = args
+        .get("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "LINT_report.json".to_string()));
+    if let Some(path) = &json_path {
+        std::fs::write(path, report.to_json().render())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if !report.clean() {
+        bail!("srclint: {} finding(s) — see output above", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{TileOut, Variant, TK, TM, TN};
 use crate::approx::Family;
+use crate::util::sync::lock_clean;
 
 /// PJRT client + per-(family, variant) executable cache.
 pub struct TileGemm {
@@ -42,7 +43,7 @@ impl TileGemm {
 
     /// Compile (and cache) the executable for one (family, variant).
     pub fn warmup(&self, family: Family, variant: Variant) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_clean(&self.cache);
         if cache.contains_key(&(family, variant)) {
             return Ok(());
         }
@@ -74,7 +75,7 @@ impl TileGemm {
         assert_eq!(w_tile.len(), TM * TK);
         assert_eq!(a_tile.len(), TK * TN);
         self.warmup(family, variant)?;
-        let cache = self.cache.lock().unwrap();
+        let cache = lock_clean(&self.cache);
         let exe = cache.get(&(family, variant)).unwrap();
         let m_lit = xla::Literal::vec1(&[m as i32]);
         let w_lit = xla::Literal::vec1(w_tile).reshape(&[TM as i64, TK as i64])?;

@@ -1,5 +1,6 @@
-//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
-//! positional subcommand. Unknown flags are errors so typos surface.
+//! Tiny CLI argument parser (no clap offline): `--key value`,
+//! `--key=value`, `--flag`, positional subcommand. Unknown flags are
+//! errors so typos surface.
 
 use std::collections::BTreeMap;
 
@@ -20,6 +21,14 @@ impl Args {
         let mut it = args.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value` form, common in CI scripts.
+                if let Some((k, v)) = key.split_once('=') {
+                    if !known.contains(&k) {
+                        bail!("unknown option --{k} (known: {})", known.join(", "));
+                    }
+                    out.opts.insert(k.to_string(), v.to_string());
+                    continue;
+                }
                 if !known.contains(&key) {
                     bail!("unknown option --{key} (known: {})", known.join(", "));
                 }
@@ -83,6 +92,16 @@ mod tests {
     #[test]
     fn unknown_option_is_error() {
         assert!(parse("run --bogus 1").is_err());
+        assert!(parse("run --bogus=1").is_err());
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = parse("accuracy --family=perforated --n=0 --out=a=b").unwrap();
+        assert_eq!(a.get("family"), Some("perforated"));
+        assert_eq!(a.get_usize("n", 7).unwrap(), 0);
+        // Only the first `=` splits; values may contain `=`.
+        assert_eq!(a.get("out"), Some("a=b"));
     }
 
     #[test]

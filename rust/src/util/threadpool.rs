@@ -70,9 +70,11 @@ where
     let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
     for_each_index(n, workers, |i| {
         let v = f(i);
-        results.lock().unwrap().push((i, v));
+        crate::util::sync::lock_clean(&results).push((i, v));
     });
-    let mut pairs = results.into_inner().unwrap();
+    // A panicking `f` propagates out of the scoped join above, so the only
+    // poison we can see here is already-unwound — recover the data.
+    let mut pairs = results.into_inner().unwrap_or_else(|e| e.into_inner());
     pairs.sort_by_key(|(i, _)| *i);
     pairs.into_iter().map(|(_, v)| v).collect()
 }

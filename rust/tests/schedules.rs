@@ -1,0 +1,696 @@
+//! Schedule-exploring race harness for the serving plane.
+//!
+//! Thread interleavings in the real coordinator depend on the OS scheduler,
+//! so `cargo test` only ever sees a handful of them. This harness lifts the
+//! two protocols whose correctness the serving plane leans on into explicit
+//! state machines and drives them through *every* interleaving up to a step
+//! bound (exhaustive DFS) plus seeded random walks for configurations too
+//! large to enumerate:
+//!
+//! * **PolicySwitch install/read** (`nn/policy.rs`): installers bump the
+//!   epoch and swap the policy under the mutex; readers snapshot
+//!   `(epoch, policy)` pairs. Invariants: every observed pair was atomically
+//!   installed (no torn reads) and epochs are unique and gap-free. A
+//!   deliberately torn variant (epoch and policy written as two independent
+//!   non-atomic steps) must be *caught* by the same invariants.
+//! * **Worker request ledger** (`coordinator/service.rs` `run_batch`):
+//!   workers pop batches, compute (with corrupt/replay/exhaust faults from
+//!   the fault plane), reply, crash; the supervisor sweeps stranded entries
+//!   and respawns; shutdown closes the queue and drains. Invariant: exactly
+//!   one reply per request — never zero (a hang) and never two (a double
+//!   send on a consumed channel). A buggy-sweep variant (sweeping the
+//!   *original* batch instead of the ledger's not-yet-replied remainder,
+//!   the exact bug the per-worker ledger exists to prevent) must violate.
+//!
+//! Exploration is deterministic: exhaustive DFS visits leaves in a fixed
+//! order and random walks derive per-walk seeds with the same splitmix64
+//! discipline as `fault/inject.rs`, so the leaf-trace digest (FNV-1a over
+//! the action sequence) is stable run-to-run. A violation does NOT truncate
+//! its schedule — the explorer carries a sticky flag to the leaf — so leaf
+//! counts stay exact multinomials and are asserted exactly.
+//!
+//! `scripts/schedules_mirror.py` is an independent transliteration of these
+//! models; the exact counts asserted below were cross-checked against it.
+
+use cvapprox::util::hash::Hasher64;
+use cvapprox::util::rng::Rng;
+
+/// Per-walk seed derivation constant (splitmix64 increment), matching the
+/// per-worker stream split in `fault/inject.rs`.
+const SEED_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A protocol model: a finite state machine with explicit scheduler choice.
+///
+/// `actions` enumerates every enabled transition; `step` applies one;
+/// `violated` is a sticky invariant-failure flag; `done` says whether a
+/// state with no enabled actions is a clean terminal (anything else is a
+/// deadlock and counts as a violation).
+trait Model: Clone {
+    fn actions(&self) -> Vec<u32>;
+    fn step(&mut self, action: u32);
+    fn violated(&self) -> bool;
+    fn done(&self) -> bool;
+}
+
+/// Outcome of an exploration: schedule count, violation count, and an
+/// order-sensitive digest of every leaf's action trace (determinism probe).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Explored {
+    schedules: u64,
+    violated: u64,
+    digest: u64,
+}
+
+impl Explored {
+    fn leaf(&mut self, path: &[u32], bad: bool) {
+        self.schedules += 1;
+        if bad {
+            self.violated += 1;
+        }
+        let mut h = Hasher64::new();
+        for &a in path {
+            h.word(a as u64);
+        }
+        h.word(bad as u64);
+        self.digest = self.digest.rotate_left(1) ^ h.finish();
+    }
+}
+
+/// Exhaustive DFS over every schedule (sequence of enabled actions).
+fn explore<M: Model>(m0: &M) -> Explored {
+    fn dfs<M: Model>(m: &M, path: &mut Vec<u32>, out: &mut Explored) {
+        let acts = m.actions();
+        if acts.is_empty() {
+            out.leaf(path, m.violated() || !m.done());
+            return;
+        }
+        for a in acts {
+            let mut next = m.clone();
+            next.step(a);
+            path.push(a);
+            dfs(&next, path, out);
+            path.pop();
+        }
+    }
+    let mut out = Explored::default();
+    dfs(m0, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Seeded random walks for configurations too large to enumerate.
+fn random_walks<M: Model>(m0: &M, walks: u64, seed: u64) -> Explored {
+    let mut out = Explored::default();
+    let mut path = Vec::new();
+    for i in 0..walks {
+        let mut rng = Rng::new(seed ^ i.wrapping_mul(SEED_SPLIT));
+        let mut m = m0.clone();
+        path.clear();
+        loop {
+            let acts = m.actions();
+            if acts.is_empty() {
+                break;
+            }
+            let a = acts[rng.below(acts.len() as u64) as usize];
+            m.step(a);
+            path.push(a);
+            assert!(path.len() < 100_000, "schedule failed to terminate");
+        }
+        out.leaf(&path, m.violated() || !m.done());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Model 1: PolicySwitch install/read under the mutex (correct protocol).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct SwitchThread {
+    installer: bool,
+    /// Completed critical sections.
+    sec: u32,
+    /// Program counter within the current section.
+    step: u32,
+    /// Installer's register: the epoch read under the lock.
+    reg: u64,
+}
+
+/// Installers run `lock; read cur; write (epoch+1, pid); unlock` per
+/// section; readers run `lock; read (epoch, policy); unlock`. This mirrors
+/// `PolicySwitch::{install, current}` where the mutex makes the pair swap
+/// atomic.
+#[derive(Clone)]
+struct LockedSwitch {
+    threads: Vec<SwitchThread>,
+    sections: u32,
+    /// Which thread holds the mutex, if any.
+    lock: Option<usize>,
+    cur: (u64, u32),
+    /// Every (epoch, policy_id) pair ever installed, seeded with the boot
+    /// pair (0, 0). Readers must only ever observe members of this set.
+    installed: Vec<(u64, u32)>,
+    epochs: Vec<u64>,
+    bad: bool,
+}
+
+impl LockedSwitch {
+    fn new(installers: usize, readers: usize, sections: u32) -> Self {
+        let mut threads = Vec::new();
+        for _ in 0..installers {
+            threads.push(SwitchThread { installer: true, sec: 0, step: 0, reg: 0 });
+        }
+        for _ in 0..readers {
+            threads.push(SwitchThread { installer: false, sec: 0, step: 0, reg: 0 });
+        }
+        LockedSwitch {
+            threads,
+            sections,
+            lock: None,
+            cur: (0, 0),
+            installed: vec![(0, 0)],
+            epochs: vec![0],
+            bad: false,
+        }
+    }
+
+    fn install(&mut self, epoch: u64, pid: u32) {
+        self.cur = (epoch, pid);
+        if self.epochs.contains(&epoch) {
+            self.bad = true; // duplicate epoch: two installers raced the bump
+        }
+        self.epochs.push(epoch);
+        self.installed.push((epoch, pid));
+    }
+}
+
+impl Model for LockedSwitch {
+    fn actions(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (t, th) in self.threads.iter().enumerate() {
+            if th.sec >= self.sections {
+                continue;
+            }
+            let enabled = if th.step == 0 {
+                self.lock.is_none()
+            } else {
+                self.lock == Some(t)
+            };
+            if enabled {
+                out.push(t as u32);
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, action: u32) {
+        let t = action as usize;
+        let th = &mut self.threads[t];
+        if th.step == 0 {
+            self.lock = Some(t);
+            th.step = 1;
+            return;
+        }
+        if th.installer {
+            match th.step {
+                1 => {
+                    th.reg = self.cur.0;
+                    th.step = 2;
+                }
+                2 => {
+                    let (epoch, pid) = (th.reg + 1, (t as u32) * 10 + th.sec + 1);
+                    th.step = 3;
+                    self.install(epoch, pid);
+                }
+                _ => {
+                    self.lock = None;
+                    th.sec += 1;
+                    th.step = 0;
+                }
+            }
+        } else if th.step == 1 {
+            if !self.installed.contains(&self.cur) {
+                self.bad = true; // torn read: pair never atomically installed
+            }
+            th.step = 2;
+        } else {
+            self.lock = None;
+            th.sec += 1;
+            th.step = 0;
+        }
+    }
+
+    fn violated(&self) -> bool {
+        self.bad
+    }
+
+    fn done(&self) -> bool {
+        self.lock.is_none() && self.threads.iter().all(|th| th.sec >= self.sections)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: torn PolicySwitch — epoch and policy written as two independent
+// steps with no lock. The invariants must catch it.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct TornThread {
+    installer: bool,
+    step: u32,
+    reg: u64,
+}
+
+#[derive(Clone)]
+struct TornSwitch {
+    threads: Vec<TornThread>,
+    epoch: u64,
+    policy: u32,
+    installed: Vec<(u64, u32)>,
+    epochs: Vec<u64>,
+    bad: bool,
+}
+
+impl TornSwitch {
+    fn new(installers: usize, readers: usize) -> Self {
+        let mut threads = Vec::new();
+        for _ in 0..installers {
+            threads.push(TornThread { installer: true, step: 0, reg: 0 });
+        }
+        for _ in 0..readers {
+            threads.push(TornThread { installer: false, step: 0, reg: 0 });
+        }
+        TornSwitch {
+            threads,
+            epoch: 0,
+            policy: 0,
+            installed: vec![(0, 0)],
+            epochs: vec![0],
+            bad: false,
+        }
+    }
+
+    fn steps(th: &TornThread) -> u32 {
+        if th.installer {
+            3 // read epoch; write policy; write epoch (the tear)
+        } else {
+            2 // read epoch; read policy + validate the pair
+        }
+    }
+}
+
+impl Model for TornSwitch {
+    fn actions(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (t, th) in self.threads.iter().enumerate() {
+            if th.step < Self::steps(th) {
+                out.push(t as u32);
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, action: u32) {
+        let t = action as usize;
+        let th = &mut self.threads[t];
+        let pid = (t as u32) * 10 + 1;
+        if th.installer {
+            match th.step {
+                0 => th.reg = self.epoch,
+                1 => self.policy = pid,
+                _ => {
+                    let e = th.reg + 1;
+                    self.epoch = e;
+                    if self.epochs.contains(&e) {
+                        self.bad = true; // lost-update epoch collision
+                    }
+                    self.epochs.push(e);
+                    self.installed.push((e, pid));
+                }
+            }
+        } else if th.step == 0 {
+            th.reg = self.epoch;
+        } else {
+            let obs = (th.reg, self.policy);
+            if !self.installed.contains(&obs) {
+                self.bad = true; // torn read observed
+            }
+        }
+        self.threads[t].step += 1;
+    }
+
+    fn violated(&self) -> bool {
+        self.bad
+    }
+
+    fn done(&self) -> bool {
+        self.threads.iter().all(|th| th.step >= Self::steps(th))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: the worker request ledger (exactly-one-reply protocol).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WorkerState {
+    Idle,
+    Holding,
+    Crashed,
+    Retired,
+}
+
+#[derive(Clone)]
+struct Worker {
+    state: WorkerState,
+    /// Not-yet-replied remainder of the current batch (the ledger).
+    batch: Vec<u8>,
+    /// Original batch as popped — what the buggy sweep wrongly consults.
+    orig: Vec<u8>,
+    computed: bool,
+    attempts: u32,
+    /// Entries the supervisor must sweep after a crash.
+    stranded: Vec<u8>,
+}
+
+impl Worker {
+    fn idle() -> Self {
+        Worker {
+            state: WorkerState::Idle,
+            batch: Vec::new(),
+            orig: Vec::new(),
+            computed: false,
+            attempts: 0,
+            stranded: Vec::new(),
+        }
+    }
+}
+
+/// Faithful abstraction of `service.rs` `run_batch` + supervisor + close:
+/// clients submit (post-close submits get the typed reject, which *is* the
+/// request's one reply); workers pop FIFO batches, compute (integrity
+/// faults replay up to `max_attempts`, then the whole batch gets typed
+/// integrity replies), reply one-by-one, and may crash between any two
+/// steps; the supervisor sweeps a crashed worker's stranded entries then
+/// respawns (or retires it when the plane is closing); terminal drain
+/// rejects whatever is left once every worker retired.
+#[derive(Clone)]
+struct LedgerModel {
+    requests: u8,
+    batch_cap: usize,
+    max_attempts: u32,
+    /// Sweep `orig` instead of `batch`: double-replies already-sent entries.
+    buggy_sweep: bool,
+    queue: Vec<u8>,
+    next_submit: u8,
+    replies: Vec<u8>,
+    closed: bool,
+    workers: Vec<Worker>,
+    bad: bool,
+}
+
+const ACT_SUBMIT: u32 = 2000;
+const ACT_CLOSE: u32 = 2001;
+const ACT_DRAIN: u32 = 2002;
+
+const OP_POP: u32 = 0;
+const OP_RETIRE: u32 = 1;
+const OP_COMPUTE_OK: u32 = 2;
+const OP_CORRUPT_REPLAY: u32 = 3;
+const OP_EXHAUST: u32 = 4;
+const OP_REPLY_ONE: u32 = 5;
+const OP_FINISH: u32 = 6;
+const OP_CRASH: u32 = 7;
+const OP_SWEEP_ONE: u32 = 8;
+const OP_RESPAWN: u32 = 9;
+
+impl LedgerModel {
+    fn new(requests: u8, workers: usize, batch_cap: usize, max_attempts: u32) -> Self {
+        LedgerModel {
+            requests,
+            batch_cap,
+            max_attempts,
+            buggy_sweep: false,
+            queue: Vec::new(),
+            next_submit: 0,
+            replies: vec![0; requests as usize],
+            closed: false,
+            workers: vec![Worker::idle(); workers],
+            bad: false,
+        }
+    }
+
+    fn with_buggy_sweep(mut self) -> Self {
+        self.buggy_sweep = true;
+        self
+    }
+
+    fn reply(&mut self, k: u8) {
+        let slot = &mut self.replies[k as usize];
+        *slot += 1;
+        if *slot > 1 {
+            self.bad = true; // double reply
+        }
+    }
+}
+
+impl Model for LedgerModel {
+    fn actions(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.next_submit < self.requests {
+            out.push(ACT_SUBMIT);
+        }
+        if !self.closed {
+            out.push(ACT_CLOSE);
+        }
+        let all_retired = self.workers.iter().all(|w| w.state == WorkerState::Retired);
+        if self.closed && !self.queue.is_empty() && all_retired {
+            out.push(ACT_DRAIN);
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            let base = (i as u32) * 10;
+            match w.state {
+                WorkerState::Idle => {
+                    if !self.queue.is_empty() {
+                        out.push(base + OP_POP);
+                    } else if self.closed && self.next_submit >= self.requests {
+                        out.push(base + OP_RETIRE);
+                    }
+                }
+                WorkerState::Holding => {
+                    if !w.computed {
+                        out.push(base + OP_COMPUTE_OK);
+                        if w.attempts < self.max_attempts {
+                            out.push(base + OP_CORRUPT_REPLAY);
+                        } else {
+                            out.push(base + OP_EXHAUST);
+                        }
+                    } else if !w.batch.is_empty() {
+                        out.push(base + OP_REPLY_ONE);
+                    } else {
+                        out.push(base + OP_FINISH);
+                    }
+                    if !w.batch.is_empty() {
+                        out.push(base + OP_CRASH);
+                    }
+                }
+                WorkerState::Crashed => {
+                    if !w.stranded.is_empty() {
+                        out.push(base + OP_SWEEP_ONE);
+                    } else {
+                        out.push(base + OP_RESPAWN);
+                        if self.closed {
+                            out.push(base + OP_RETIRE);
+                        }
+                    }
+                }
+                WorkerState::Retired => {}
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, action: u32) {
+        match action {
+            ACT_SUBMIT => {
+                let k = self.next_submit;
+                self.next_submit += 1;
+                if self.closed {
+                    self.reply(k); // typed reject is the one reply
+                } else {
+                    self.queue.push(k);
+                }
+                return;
+            }
+            ACT_CLOSE => {
+                self.closed = true;
+                return;
+            }
+            ACT_DRAIN => {
+                let k = self.queue.remove(0);
+                self.reply(k);
+                return;
+            }
+            _ => {}
+        }
+        let (i, op) = ((action / 10) as usize, action % 10);
+        match op {
+            OP_POP => {
+                let take = self.batch_cap.min(self.queue.len());
+                let batch: Vec<u8> = self.queue.drain(..take).collect();
+                let w = &mut self.workers[i];
+                *w = Worker::idle();
+                w.state = WorkerState::Holding;
+                w.orig = batch.clone();
+                w.batch = batch;
+            }
+            OP_RETIRE => self.workers[i].state = WorkerState::Retired,
+            OP_COMPUTE_OK => self.workers[i].computed = true,
+            OP_CORRUPT_REPLAY => self.workers[i].attempts += 1,
+            OP_EXHAUST => {
+                let batch = std::mem::take(&mut self.workers[i].batch);
+                for k in batch {
+                    self.reply(k); // typed integrity reply for the whole batch
+                }
+                self.workers[i] = Worker::idle();
+            }
+            OP_REPLY_ONE => {
+                let k = self.workers[i].batch.remove(0);
+                self.reply(k);
+            }
+            OP_FINISH => self.workers[i] = Worker::idle(),
+            OP_CRASH => {
+                let w = &mut self.workers[i];
+                let stranded = if self.buggy_sweep {
+                    w.orig.clone()
+                } else {
+                    w.batch.clone()
+                };
+                *w = Worker::idle();
+                w.state = WorkerState::Crashed;
+                w.stranded = stranded;
+            }
+            OP_SWEEP_ONE => {
+                let k = self.workers[i].stranded.remove(0);
+                self.reply(k); // WorkerCrashed reply from the supervisor sweep
+            }
+            _ => self.workers[i] = Worker::idle(), // OP_RESPAWN
+        }
+    }
+
+    fn violated(&self) -> bool {
+        self.bad
+    }
+
+    fn done(&self) -> bool {
+        self.next_submit >= self.requests
+            && self.closed
+            && self.queue.is_empty()
+            && self.workers.iter().all(|w| w.state == WorkerState::Retired)
+            && self.replies.iter().all(|&r| r == 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exhaustive tier. Leaf counts are exact: violations never truncate a
+// schedule, so the totals are pure multinomials over the step sequences.
+// ---------------------------------------------------------------------------
+
+/// 2 installers x 2 sections + 2 readers x 2 sections under the lock:
+/// 8 critical sections -> 8!/(2!^4) = 2520 grant orders, zero violations.
+#[test]
+fn exhaustive_locked_policy_switch_is_race_free() {
+    let m = LockedSwitch::new(2, 2, 2);
+    let a = explore(&m);
+    assert_eq!(a.schedules, 2520);
+    assert_eq!(a.violated, 0);
+    let b = explore(&m);
+    assert_eq!(a, b, "exhaustive exploration must be deterministic");
+}
+
+/// The torn variant interleaves freely: (3,3,2,2) steps -> 10!/(3!3!2!2!)
+/// = 25200 schedules. The invariants must catch both failure modes (torn
+/// pair reads and lost-update epoch collisions) — and in most schedules:
+/// 25008 of 25200, cross-checked against scripts/schedules_mirror.py.
+#[test]
+fn exhaustive_torn_policy_switch_is_caught() {
+    let a = explore(&TornSwitch::new(2, 2));
+    assert_eq!(a.schedules, 25200);
+    assert_eq!(a.violated, 25008);
+    assert!(a.violated > 0 && a.violated < a.schedules);
+}
+
+/// 2 requests, 1 worker, batch cap 2, 1 replay attempt: 2899 schedules
+/// covering submit/close races, corrupt->replay->exhaust, crash-with-
+/// partial-replies, sweep, respawn-vs-retire, and terminal drain. The
+/// correct ledger never double-replies or drops a request.
+#[test]
+fn exhaustive_ledger_exactly_one_reply() {
+    let m = LedgerModel::new(2, 1, 2, 1);
+    let a = explore(&m);
+    assert_eq!(a.schedules, 2899);
+    assert_eq!(a.violated, 0);
+    let b = explore(&m);
+    assert_eq!(a, b, "exhaustive exploration must be deterministic");
+}
+
+/// Same configuration with the sweep consulting the original batch instead
+/// of the not-yet-replied remainder: every schedule that replies part of a
+/// batch and then crashes double-replies the already-sent entries. 32 of
+/// 2903 schedules violate — the harness proves the sweep must go through
+/// the ledger.
+#[test]
+fn exhaustive_buggy_sweep_is_caught() {
+    let a = explore(&LedgerModel::new(2, 1, 2, 1).with_buggy_sweep());
+    assert_eq!(a.schedules, 2903);
+    assert_eq!(a.violated, 32);
+}
+
+/// 3 requests through the same plane: 112269 schedules, still exactly one
+/// reply each. Together the exhaustive tier enumerates 145791 schedules —
+/// past the 10^4 coverage floor on exact counts alone.
+#[test]
+fn exhaustive_ledger_three_requests() {
+    let a = explore(&LedgerModel::new(3, 1, 2, 1));
+    assert_eq!(a.schedules, 112_269);
+    assert_eq!(a.violated, 0);
+    let total = 2520 + 25200 + 2899 + 2903 + a.schedules;
+    assert!(total >= 10_000, "exhaustive tier must cover >= 10^4 schedules");
+}
+
+// ---------------------------------------------------------------------------
+// Randomized tier: configurations too large to enumerate, driven by seeded
+// walks. Two runs from the same seed must agree bit-for-bit.
+// ---------------------------------------------------------------------------
+
+/// 6 requests, 3 workers, batch cap 2, 2 replay attempts — far past the
+/// exhaustive horizon. 3000 seeded walks, every one terminating cleanly
+/// with exactly one reply per request.
+#[test]
+fn randomized_ledger_large_configuration() {
+    let m = LedgerModel::new(6, 3, 2, 2);
+    let a = random_walks(&m, 3000, 0xC0FF_EE00);
+    assert_eq!(a.schedules, 3000);
+    assert_eq!(a.violated, 0);
+    let b = random_walks(&m, 3000, 0xC0FF_EE00);
+    assert_eq!(a, b, "seeded walks must be deterministic");
+    let c = random_walks(&m, 3000, 0xC0FF_EE01);
+    assert_ne!(a.digest, c.digest, "a different seed must explore differently");
+}
+
+/// Random walks over a wider torn configuration (3 installers, 3 readers)
+/// still catch the tear without exhaustive enumeration.
+#[test]
+fn randomized_torn_switch_finds_violations() {
+    let a = random_walks(&TornSwitch::new(3, 3), 1000, 0xDECAF);
+    assert_eq!(a.schedules, 1000);
+    assert!(a.violated > 0, "random walks must surface the torn install");
+}
+
+/// The locked protocol stays clean under random scheduling of a bigger
+/// thread set (3 installers x 2 sections, 3 readers x 2 sections).
+#[test]
+fn randomized_locked_switch_stays_clean() {
+    let a = random_walks(&LockedSwitch::new(3, 3, 2), 1000, 0xBEEF);
+    assert_eq!(a.schedules, 1000);
+    assert_eq!(a.violated, 0);
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Optional deep concurrency verification: cargo miri (UB/aliasing on the
+# unit-scoped util/approx/cv suites) and ThreadSanitizer (data races on
+# the coordinator tests). Both need nightly toolchain components, so each
+# stage skips-with-warning when its component is absent — mirroring the
+# clippy gate pattern in verify.sh. CI runs this in a separate
+# continue-on-error job; locally: CVAPPROX_CONCURRENCY_CHECKS=1
+# scripts/verify.sh, or invoke this script directly.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+
+# --- miri: unit-scoped interpreter run (no threads, no file I/O paths) --
+# Scope: the pure-computation modules whose invariants the rest leans on.
+if cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "== miri: util + approx + cv unit tests =="
+    # MIRIFLAGS: isolation off so env-var reads (CVAPPROX_THREADS) work.
+    MIRIFLAGS="-Zmiri-disable-isolation" \
+        cargo +nightly miri test -p cvapprox --lib util approx cv || status=1
+else
+    echo "warning: cargo miri not installed (rustup +nightly component add miri); skipping" >&2
+fi
+
+# --- ThreadSanitizer: coordinator pool under real threads ---------------
+# Needs -Zsanitizer (nightly) and the matching std; skip when absent.
+if cargo +nightly --version >/dev/null 2>&1 \
+    && rustup component list --toolchain nightly 2>/dev/null | grep -q "rust-src (installed)"; then
+    echo "== tsan: coordinator tests =="
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target "$(rustc -vV | sed -n 's/host: //p')" \
+        -p cvapprox --lib coordinator || status=1
+else
+    echo "warning: nightly rust-src not installed (rustup +nightly component add rust-src); skipping tsan" >&2
+fi
+
+if [ "$status" != "0" ]; then
+    echo "concurrency checks FAILED" >&2
+fi
+exit "$status"

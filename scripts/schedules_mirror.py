@@ -1,0 +1,274 @@
+#!/usr/bin/env python3
+"""Independent transliteration of the rust/tests/schedules.rs models.
+
+The Rust harness asserts *exact* exhaustive schedule counts (violations
+never truncate a schedule, so leaf totals are pure multinomials over the
+step sequences). This mirror re-derives those counts from an independent
+implementation of the same state machines, in the same spirit as
+scripts/srclint_mirror.py for the linter: if the two disagree, one of the
+transliterations drifted.
+
+    python3 scripts/schedules_mirror.py        # prints and checks all counts
+
+Only the exhaustive tier is mirrored; the randomized tier uses the crate's
+xoshiro256** stream and is covered in Rust by two-run digest equality.
+"""
+import sys
+from copy import deepcopy
+
+sys.setrecursionlimit(100000)
+
+# ---------------------------------------------------------------- explorer
+
+def explore(m0):
+    stats = {"schedules": 0, "violated": 0}
+
+    def dfs(m, violated):
+        acts = m.actions()
+        if not acts:
+            stats["schedules"] += 1
+            if violated or not m.done():
+                stats["violated"] += 1
+            return
+        for a in acts:
+            n = deepcopy(m)
+            n.step(a)
+            dfs(n, violated or n.bad)
+
+    dfs(m0, False)
+    return stats
+
+# ------------------------------------------- PolicySwitch, locked (correct)
+
+class PolicyLocked:
+    """Installers: lock; read cur; write (epoch+1, pid); unlock.
+    Readers: lock; read pair; unlock. Per-thread `sections` critical
+    sections. Invariants: observed pairs were installed; epochs unique."""
+
+    def __init__(self, installers=2, readers=2, sections=2):
+        # thread: [is_installer, sec, step, reg]
+        self.threads = [[True, 0, 0, 0] for _ in range(installers)] + \
+                       [[False, 0, 0, 0] for _ in range(readers)]
+        self.sections = sections
+        self.lock = None
+        self.cur = (0, 0)
+        self.installed = {(0, 0)}
+        self.epochs = {0}
+        self.bad = False
+
+    def actions(self):
+        out = []
+        for t, (_, sec, step, _) in enumerate(self.threads):
+            if sec >= self.sections:
+                continue
+            if (self.lock is None) if step == 0 else (self.lock == t):
+                out.append(t)
+        return out
+
+    def step(self, t):
+        th = self.threads[t]
+        if th[2] == 0:
+            self.lock = t
+            th[2] = 1
+            return
+        if th[0]:  # installer
+            if th[2] == 1:
+                th[3] = self.cur[0]
+                th[2] = 2
+            elif th[2] == 2:
+                epoch, pid = th[3] + 1, t * 10 + th[1] + 1
+                self.cur = (epoch, pid)
+                if epoch in self.epochs:
+                    self.bad = True
+                self.epochs.add(epoch)
+                self.installed.add((epoch, pid))
+                th[2] = 3
+            else:
+                self.lock, th[1], th[2] = None, th[1] + 1, 0
+        elif th[2] == 1:
+            if self.cur not in self.installed:
+                self.bad = True
+            th[2] = 2
+        else:
+            self.lock, th[1], th[2] = None, th[1] + 1, 0
+
+    def done(self):
+        return self.lock is None and all(th[1] >= self.sections for th in self.threads)
+
+# --------------------------------------------- PolicySwitch, torn (buggy)
+
+class PolicyTorn:
+    """Epoch and policy written as two independent unlocked steps.
+    Installer: read epoch; write policy; write epoch. Reader: read epoch;
+    read policy + validate the pair."""
+
+    def __init__(self, installers=2, readers=2):
+        # thread: [is_installer, step, reg]
+        self.threads = [[True, 0, 0] for _ in range(installers)] + \
+                       [[False, 0, 0] for _ in range(readers)]
+        self.epoch = 0
+        self.policy = 0
+        self.installed = {(0, 0)}
+        self.epochs = {0}
+        self.bad = False
+
+    @staticmethod
+    def nsteps(th):
+        return 3 if th[0] else 2
+
+    def actions(self):
+        return [t for t, th in enumerate(self.threads) if th[1] < self.nsteps(th)]
+
+    def step(self, t):
+        th = self.threads[t]
+        pid = t * 10 + 1
+        if th[0]:
+            if th[1] == 0:
+                th[2] = self.epoch
+            elif th[1] == 1:
+                self.policy = pid
+            else:
+                e = th[2] + 1
+                self.epoch = e
+                if e in self.epochs:
+                    self.bad = True
+                self.epochs.add(e)
+                self.installed.add((e, pid))
+        elif th[1] == 0:
+            th[2] = self.epoch
+        elif (th[2], self.policy) not in self.installed:
+            self.bad = True
+        th[1] += 1
+
+    def done(self):
+        return all(th[1] >= self.nsteps(th) for th in self.threads)
+
+# ------------------------------------------------- worker request ledger
+
+IDLE, HOLD, CRASH, RETIRED = range(4)
+
+class Ledger:
+    """run_batch + supervisor + close, abstracted. Exactly one reply per
+    request; the buggy sweep consults the original batch instead of the
+    not-yet-replied remainder and double-replies."""
+
+    def __init__(self, requests, workers, batch_cap, max_attempts, buggy_sweep=False):
+        self.R, self.B, self.MAX = requests, batch_cap, max_attempts
+        self.buggy = buggy_sweep
+        self.queue = []
+        self.next_submit = 0
+        self.replies = [0] * requests
+        self.closed = False
+        # worker: [state, batch, orig, computed, attempts, stranded]
+        self.workers = [[IDLE, [], [], False, 0, []] for _ in range(workers)]
+        self.bad = False
+
+    def actions(self):
+        out = []
+        if self.next_submit < self.R:
+            out.append(2000)
+        if not self.closed:
+            out.append(2001)
+        if self.closed and self.queue and all(w[0] == RETIRED for w in self.workers):
+            out.append(2002)
+        for i, w in enumerate(self.workers):
+            base = i * 10
+            if w[0] == IDLE:
+                if self.queue:
+                    out.append(base + 0)                     # pop
+                elif self.closed and self.next_submit >= self.R:
+                    out.append(base + 1)                     # retire
+            elif w[0] == HOLD:
+                if not w[3]:
+                    out.append(base + 2)                     # compute ok
+                    out.append(base + (3 if w[4] < self.MAX else 4))
+                elif w[1]:
+                    out.append(base + 5)                     # reply one
+                else:
+                    out.append(base + 6)                     # finish
+                if w[1]:
+                    out.append(base + 7)                     # crash
+            elif w[0] == CRASH:
+                if w[5]:
+                    out.append(base + 8)                     # sweep one
+                else:
+                    out.append(base + 9)                     # respawn
+                    if self.closed:
+                        out.append(base + 1)                 # retire
+        return out
+
+    def reply(self, k):
+        self.replies[k] += 1
+        if self.replies[k] > 1:
+            self.bad = True
+
+    def step(self, a):
+        if a == 2000:
+            k = self.next_submit
+            self.next_submit += 1
+            if self.closed:
+                self.reply(k)      # typed reject is the one reply
+            else:
+                self.queue.append(k)
+            return
+        if a == 2001:
+            self.closed = True
+            return
+        if a == 2002:
+            self.reply(self.queue.pop(0))
+            return
+        i, op = divmod(a, 10)
+        w = self.workers[i]
+        if op == 0:
+            take, self.queue = self.queue[: self.B], self.queue[self.B:]
+            self.workers[i] = [HOLD, list(take), list(take), False, 0, []]
+        elif op == 1:
+            w[0] = RETIRED
+        elif op == 2:
+            w[3] = True
+        elif op == 3:
+            w[4] += 1
+        elif op == 4:
+            for k in w[1]:
+                self.reply(k)
+            self.workers[i] = [IDLE, [], [], False, 0, []]
+        elif op == 5:
+            self.reply(w[1].pop(0))
+        elif op == 6:
+            self.workers[i] = [IDLE, [], [], False, 0, []]
+        elif op == 7:
+            stranded = list(w[2]) if self.buggy else list(w[1])
+            self.workers[i] = [CRASH, [], [], False, 0, stranded]
+        elif op == 8:
+            self.reply(w[5].pop(0))
+        else:
+            self.workers[i] = [IDLE, [], [], False, 0, []]
+
+    def done(self):
+        return (self.next_submit >= self.R and self.closed and not self.queue
+                and all(w[0] == RETIRED for w in self.workers)
+                and all(r == 1 for r in self.replies))
+
+
+# Exact counts asserted by rust/tests/schedules.rs.
+EXPECTED = [
+    ("locked 2x2 installers + 2x2 readers", PolicyLocked(), 2520, 0),
+    ("torn 2 installers + 2 readers", PolicyTorn(), 25200, 25008),
+    ("ledger R2 W1 B2 A1", Ledger(2, 1, 2, 1), 2899, 0),
+    ("ledger R2 W1 B2 A1 buggy sweep", Ledger(2, 1, 2, 1, buggy_sweep=True), 2903, 32),
+    ("ledger R3 W1 B2 A1", Ledger(3, 1, 2, 1), 112269, 0),
+]
+
+if __name__ == "__main__":
+    ok = True
+    total = 0
+    for name, model, schedules, violated in EXPECTED:
+        s = explore(model)
+        total += s["schedules"]
+        mark = "ok" if (s["schedules"], s["violated"]) == (schedules, violated) else "MISMATCH"
+        if mark != "ok":
+            ok = False
+        print(f"{name}: {s['schedules']} schedules, {s['violated']} violated "
+              f"(expect {schedules}/{violated}) {mark}")
+    print(f"exhaustive tier total: {total} schedules")
+    sys.exit(0 if ok else 1)

@@ -1,0 +1,639 @@
+#!/usr/bin/env python3
+"""Python mirror of `cvapprox srclint` (rust/src/analyze/).
+
+The build container has no Rust toolchain, so — like the hermetic golden
+generator — the linter keeps a python transliteration for offline
+cross-checks. Run it from anywhere:
+
+    python3 scripts/srclint_mirror.py [--root PATH] [--json out.json]
+
+It must agree with the Rust pass rule-for-rule; divergence is a bug in
+whichever side changed last. Keep the tokenizer and matchers in lockstep
+with rust/src/analyze/{lexer,rules,report}.rs.
+"""
+
+import json
+import os
+import sys
+
+# --- contract tables (mirror rust/src/analyze/contract.rs) -------------
+
+ATOMIC_CONTRACT = {
+    ("rust/src/coordinator/service.rs", "alive"): ["SeqCst"],
+    ("rust/src/coordinator/service.rs", "stopping"): ["SeqCst"],
+    ("rust/src/coordinator/service.rs", "done"): ["SeqCst"],
+    ("rust/src/coordinator/service.rs", "next_id"): ["SeqCst"],
+    ("rust/src/coordinator/service.rs", "batch_seq"): ["Relaxed"],
+    ("rust/src/fault/inject.rs", "seq"): ["Relaxed"],
+    ("rust/src/util/threadpool.rs", "CACHE"): ["Relaxed"],
+    ("rust/src/util/threadpool.rs", "next"): ["Relaxed"],
+    ("rust/src/nn/engine.rs", "num"): ["Relaxed"],
+    ("rust/src/nn/engine.rs", "den"): ["Relaxed"],
+    ("rust/src/nn/engine.rs", "n"): ["Relaxed"],
+    ("rust/src/nn/engine.rs", "generation"): ["SeqCst"],
+    ("rust/src/nn/plan.rs", "builds"): ["Relaxed"],
+    ("rust/src/nn/plan.rs", "generation"): ["SeqCst"],
+    ("rust/src/qos/governor.rs", "rung"): ["Acquire"],
+    ("rust/src/qos/governor.rs", "stop"): ["Acquire", "Release"],
+    ("rust/src/qos/governor.rs", "rung_gauge"): ["Release"],
+    ("rust/src/qos/telemetry.rs", "head"): ["Release", "Acquire"],
+    ("rust/src/qos/telemetry.rs", "lat_us"): ["Release", "Acquire"],
+    ("rust/src/qos/telemetry.rs", "drained_head"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "inflight"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "depth_sum"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "depth_n"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "occ_pm_sum"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "occ_n"): ["Relaxed"],
+}
+
+DETERMINISTIC_MODULES = [
+    "rust/src/fault/inject.rs",
+    "rust/src/util/rng.rs",
+    "rust/src/util/prop.rs",
+    "rust/src/nn/testutil.rs",
+]
+
+HOT_PATH_DIRS = ["rust/src/coordinator/", "rust/src/fault/"]
+SYNC_WRAPPER_FILE = "rust/src/util/sync.rs"
+USER_INPUT_RECEIVERS = ["image", "logits", "requests", "batch"]
+ENV_REGISTRY_BEGIN = "<!-- srclint:env-registry:begin -->"
+ENV_REGISTRY_END = "<!-- srclint:env-registry:end -->"
+ATOMIC_ORDERINGS = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"]
+ATOMIC_METHODS = [
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and",
+    "fetch_or", "fetch_xor", "fetch_min", "fetch_max", "fetch_update",
+    "compare_exchange", "compare_exchange_weak",
+]
+WAIT_METHODS = ["wait", "wait_timeout", "wait_while", "wait_timeout_while"]
+
+# --- tokenizer (mirror rust/src/analyze/lexer.rs) ----------------------
+
+IDENT, PUNCT, NUM, STR, CHAR, LIFETIME, COMMENT = range(7)
+
+
+def raw_string_start(cs, i):
+    n = len(cs)
+    j = i
+    if j < n and cs[j] == "b":
+        j += 1
+    if j >= n or cs[j] != "r":
+        return None
+    j += 1
+    hashes = 0
+    while j < n and cs[j] == "#":
+        hashes += 1
+        j += 1
+    if j < n and cs[j] == '"':
+        return (j + 1, hashes)
+    return None
+
+
+def scan_char_body(cs, i):
+    n = len(cs)
+    while i < n:
+        if cs[i] == "\\":
+            i += 2
+        elif cs[i] == "'":
+            return i + 1
+        else:
+            i += 1
+    return n
+
+
+def tokenize(src):
+    cs = src
+    n = len(cs)
+    out = []
+    i = 0
+    line = 1
+    while i < n:
+        c = cs[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "/":
+            start = i
+            while i < n and cs[i] != "\n":
+                i += 1
+            out.append((COMMENT, cs[start:i], line))
+            continue
+        if c == "/" and i + 1 < n and cs[i + 1] == "*":
+            start, start_line, depth = i, line, 1
+            i += 2
+            while i < n and depth > 0:
+                if cs[i] == "\n":
+                    line += 1
+                    i += 1
+                elif cs[i] == "/" and i + 1 < n and cs[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif cs[i] == "*" and i + 1 < n and cs[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            out.append((COMMENT, cs[start:i], start_line))
+            continue
+        raw = raw_string_start(cs, i)
+        if raw is not None:
+            body_at, hashes = raw
+            start, start_line = i, line
+            i = body_at
+            while i < n:
+                if cs[i] == "\n":
+                    line += 1
+                    i += 1
+                    continue
+                if cs[i] == '"' and i + hashes < n and all(
+                    h == "#" for h in cs[i + 1 : i + 1 + hashes]
+                ):
+                    i += 1 + hashes
+                    break
+                i += 1
+            out.append((STR, cs[start : min(i, n)], start_line))
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and cs[i + 1] == '"'):
+            start, start_line = i, line
+            i += 2 if c == "b" else 1
+            while i < n:
+                if cs[i] == "\\":
+                    i += 2
+                elif cs[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if cs[i] == "\n":
+                        line += 1
+                    i += 1
+            out.append((STR, cs[start : min(i, n)], start_line))
+            continue
+        if c == "b" and i + 1 < n and cs[i + 1] == "'":
+            start = i
+            i = scan_char_body(cs, i + 2)
+            out.append((CHAR, cs[start : min(i, n)], line))
+            continue
+        if c == "'":
+            if i + 1 < n and cs[i + 1] == "\\":
+                start = i
+                i = scan_char_body(cs, i + 1)
+                out.append((CHAR, cs[start : min(i, n)], line))
+                continue
+            if i + 2 < n and cs[i + 2] == "'" and cs[i + 1] != "'":
+                out.append((CHAR, cs[i : i + 3], line))
+                i += 3
+                continue
+            if i + 1 < n and (cs[i + 1].isalpha() or cs[i + 1] == "_"):
+                start = i
+                i += 1
+                while i < n and (cs[i].isalnum() or cs[i] == "_"):
+                    i += 1
+                out.append((LIFETIME, cs[start:i], line))
+                continue
+            out.append((PUNCT, "'", line))
+            i += 1
+            continue
+        if c.isdigit():
+            start = i
+            radix = c == "0" and i + 1 < n and cs[i + 1] in "xXbBoO"
+            i += 1
+            while i < n:
+                ch = cs[i]
+                if ch.isalnum() or ch == "_":
+                    i += 1
+                elif ch == "." and i + 1 < n and cs[i + 1].isdigit() and not radix:
+                    i += 1
+                elif ch in "+-" and not radix and cs[i - 1] in "eE":
+                    i += 1
+                else:
+                    break
+            out.append((NUM, cs[start:i], line))
+            continue
+        if c.isalpha() or c == "_":
+            start = i
+            i += 1
+            while i < n and (cs[i].isalnum() or cs[i] == "_"):
+                i += 1
+            out.append((IDENT, cs[start:i], line))
+            continue
+        out.append((PUNCT, c, line))
+        i += 1
+    return out
+
+
+# --- rules (mirror rust/src/analyze/rules.rs) --------------------------
+
+
+def match_forward(code, open_idx, op, cl):
+    depth = 0
+    for k in range(open_idx, len(code)):
+        kind, text, _ = code[k]
+        if kind == PUNCT and text == op:
+            depth += 1
+        elif kind == PUNCT and text == cl:
+            depth -= 1
+            if depth == 0:
+                return k
+    return None
+
+
+def find_test_regions(code):
+    spans = []
+    i = 0
+    while i + 1 < len(code):
+        if not (code[i][:2] == (PUNCT, "#") and code[i + 1][:2] == (PUNCT, "[")):
+            i += 1
+            continue
+        close = match_forward(code, i + 1, "[", "]")
+        if close is None:
+            break
+        is_test = any(t[0] == IDENT and t[1] == "test" for t in code[i + 2 : close])
+        j = close + 1
+        if is_test:
+            while (
+                j + 1 < len(code)
+                and code[j][:2] == (PUNCT, "#")
+                and code[j + 1][:2] == (PUNCT, "[")
+            ):
+                c2 = match_forward(code, j + 1, "[", "]")
+                if c2 is None:
+                    break
+                j = c2 + 1
+            depth = 0
+            body = None
+            while j < len(code):
+                kind, text, _ = code[j]
+                if kind == PUNCT and text in "([":
+                    depth += 1
+                elif kind == PUNCT and text in ")]":
+                    depth -= 1
+                elif depth == 0 and kind == PUNCT and text == "{":
+                    body = j
+                    break
+                elif depth == 0 and kind == PUNCT and text == ";":
+                    break
+                j += 1
+            if body is not None:
+                end = match_forward(code, body, "{", "}")
+                if end is not None:
+                    spans.append((code[body][2], code[end][2]))
+                    i = end + 1
+                    continue
+        i = close + 1
+    return spans
+
+
+def vars_in(text):
+    out = []
+    i = 0
+    needle = "CVAPPROX"
+    while i + len(needle) <= len(text):
+        before = i > 0 and (text[i - 1].isalnum() or text[i - 1] == "_")
+        if not before and text[i : i + len(needle)] == needle:
+            j = i + len(needle)
+            while j < len(text) and (
+                (text[j].isupper() and text[j].isascii()) or text[j].isdigit() or text[j] == "_"
+            ):
+                j += 1
+            name = text[i:j].rstrip("_")
+            if name != "CVAPPROX":
+                out.append(name)
+            i = j
+        else:
+            i += 1
+    return out
+
+
+def parse_allow(s):
+    if not s.startswith("allow("):
+        return None
+    body = s[len("allow(") :]
+    close = body.rfind(")")
+    if close < 0 or "," not in body[:close]:
+        return None
+    rule, reason = body[:close].split(",", 1)
+    rule, reason = rule.strip(), reason.strip()
+    if rule in ("R1", "R2", "R3", "R4", "R5") and reason:
+        return (rule, reason)
+    return None
+
+
+def lint_source(relpath, src):
+    toks = tokenize(src)
+    code = [t for t in toks if t[0] != COMMENT]
+    regions = find_test_regions(code)
+    is_test_file = relpath.startswith("rust/tests/")
+
+    def in_test(line):
+        return is_test_file or any(a <= line <= b for (a, b) in regions)
+
+    findings, sups, env_refs = [], [], []
+
+    for t in toks:
+        if t[0] != COMMENT:
+            continue
+        body = t[1].lstrip("/*! \t")
+        if not body.startswith("srclint:"):
+            continue
+        rest = body[len("srclint:") :].strip()
+        parsed = parse_allow(rest)
+        if parsed:
+            sups.append((relpath, t[2], parsed[0], parsed[1]))
+        else:
+            findings.append((relpath, t[2], "SUP", "malformed suppression"))
+
+    # R1
+    if relpath != SYNC_WRAPPER_FILE:
+        i = 0
+        while i + 2 < len(code):
+            if not (code[i][:2] == (PUNCT, ".") and code[i + 1][0] == IDENT):
+                i += 1
+                continue
+            m = code[i + 1][1]
+            is_lock = m == "lock"
+            is_wait = m in WAIT_METHODS
+            if not (is_lock or is_wait) or code[i + 2][:2] != (PUNCT, "("):
+                i += 1
+                continue
+            close = match_forward(code, i + 2, "(", ")")
+            if close is None:
+                break
+            arity_ok = close == i + 3 if is_lock else close > i + 3
+            j = close + 1
+            if (
+                arity_ok
+                and j + 2 < len(code)
+                and code[j][:2] == (PUNCT, ".")
+                and code[j + 1][0] == IDENT
+                and code[j + 1][1] in ("unwrap", "expect")
+                and code[j + 2][:2] == (PUNCT, "(")
+            ):
+                line = code[j + 1][2]
+                if not in_test(line):
+                    findings.append((relpath, line, "R1", f"bare .{m}().{code[j+1][1]}()"))
+            i = j
+
+    # R2
+    if relpath.startswith("rust/src/"):
+        for i in range(len(code)):
+            if not (
+                code[i][:2] == (IDENT, "Ordering")
+                and i + 3 < len(code)
+                and code[i + 1][:2] == (PUNCT, ":")
+                and code[i + 2][:2] == (PUNCT, ":")
+                and code[i + 3][0] == IDENT
+                and code[i + 3][1] in ATOMIC_ORDERINGS
+            ):
+                continue
+            variant = code[i + 3][1]
+            line = code[i][2]
+            if in_test(line):
+                continue
+            depth = 0
+            open_idx = None
+            for j in range(i - 1, -1, -1):
+                kind, text, _ = code[j]
+                if kind == PUNCT and text == ")":
+                    depth += 1
+                elif kind == PUNCT and text == "(":
+                    if depth == 0:
+                        open_idx = j
+                        break
+                    depth -= 1
+                elif depth == 0 and kind == PUNCT and text in ";{}":
+                    break
+            if open_idx is None:
+                findings.append((relpath, line, "R2", f"Ordering::{variant} outside call"))
+                continue
+            if open_idx == 0 or code[open_idx - 1][0] != IDENT:
+                findings.append((relpath, line, "R2", f"Ordering::{variant} not a method call"))
+                continue
+            method = code[open_idx - 1][1]
+            if method not in ATOMIC_METHODS:
+                findings.append((relpath, line, "R2", f"Ordering::{variant} passed to {method}"))
+                continue
+            recv = None
+            if open_idx >= 3 and code[open_idx - 2][:2] == (PUNCT, "."):
+                r = open_idx - 3
+                if code[r][:2] == (PUNCT, "]"):
+                    d = 0
+                    found = None
+                    for k in range(r, -1, -1):
+                        if code[k][:2] == (PUNCT, "]"):
+                            d += 1
+                        elif code[k][:2] == (PUNCT, "["):
+                            d -= 1
+                            if d == 0:
+                                found = k
+                                break
+                    if found is not None and found >= 1:
+                        r = found - 1
+                    else:
+                        r = None
+                if r is not None and code[r][0] == IDENT:
+                    recv = code[r][1]
+            if recv is None:
+                findings.append((relpath, line, "R2", f"cannot resolve receiver of {method}"))
+                continue
+            allowed = ATOMIC_CONTRACT.get((relpath, recv))
+            if allowed is None:
+                findings.append((relpath, line, "R2", f"atomic {recv} not in contract"))
+            elif variant not in allowed:
+                findings.append(
+                    (relpath, line, "R2", f"{recv}.{method}(Ordering::{variant}) not allowed")
+                )
+
+    # R3
+    if any(relpath.startswith(d) for d in HOT_PATH_DIRS):
+        caught = []
+        for i in range(len(code)):
+            if code[i][:2] == (IDENT, "catch_unwind") and i + 1 < len(code) and code[i + 1][
+                :2
+            ] == (PUNCT, "("):
+                close = match_forward(code, i + 1, "(", ")")
+                if close is not None:
+                    caught.append((code[i][2], code[close][2]))
+
+        def exempt(line):
+            return in_test(line) or any(a <= line <= b for (a, b) in caught)
+
+        for i in range(len(code)):
+            kind, text, line = code[i]
+            if (
+                kind == PUNCT
+                and text == "."
+                and i + 2 < len(code)
+                and code[i + 1][0] == IDENT
+                and code[i + 1][1] in ("unwrap", "expect")
+                and code[i + 2][:2] == (PUNCT, "(")
+                and not exempt(code[i + 1][2])
+            ):
+                findings.append((relpath, code[i + 1][2], "R3", f".{code[i+1][1]}() in hot path"))
+            if (
+                kind == IDENT
+                and text == "panic"
+                and i + 1 < len(code)
+                and code[i + 1][:2] == (PUNCT, "!")
+                and not exempt(line)
+            ):
+                findings.append((relpath, line, "R3", "panic! in hot path"))
+            if (
+                kind == IDENT
+                and text in USER_INPUT_RECEIVERS
+                and i + 1 < len(code)
+                and code[i + 1][:2] == (PUNCT, "[")
+                and not exempt(line)
+            ):
+                findings.append((relpath, line, "R3", f"{text}[..] indexing on user input"))
+
+    # R4
+    if relpath in DETERMINISTIC_MODULES:
+        for kind, text, line in code:
+            if kind == IDENT and text in ("Instant", "SystemTime"):
+                findings.append((relpath, line, "R4", f"{text} in deterministic module"))
+
+    for t in toks:
+        if t[0] == STR and not in_test(t[2]):
+            for v in vars_in(t[1]):
+                env_refs.append((v, t[2]))
+    return findings, sups, env_refs
+
+
+def apply_suppressions(findings, sups):
+    kept, suppressed = [], 0
+    for f in findings:
+        hit = f[2] != "SUP" and any(
+            s[0] == f[0] and s[2] == f[2] and f[1] in (s[1], s[1] + 1) for s in sups
+        )
+        if hit:
+            suppressed += 1
+        else:
+            kept.append(f)
+    return kept, suppressed
+
+
+def extract_env_vars(text):
+    out = []
+    for i, line in enumerate(text.splitlines()):
+        for v in vars_in(line):
+            out.append((v, i + 1))
+    return out
+
+
+# --- tree walk + R5 (mirror rust/src/analyze/report.rs) ----------------
+
+
+def collect(root, sub, ext):
+    base = os.path.join(root, sub)
+    found = []
+    if not os.path.isdir(base):
+        return found
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith("." + ext):
+                found.append(os.path.join(dirpath, f))
+    return found
+
+
+def run_lint(root):
+    findings, sups = [], []
+    code_vars = {}
+    files = 0
+    rs = collect(root, "rust/src", "rs") + collect(root, "rust/tests", "rs") + collect(
+        root, "benches", "rs"
+    )
+    for path in sorted(rs):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        f, s, env = lint_source(rel, src)
+        findings += f
+        sups += s
+        for v, line in env:
+            code_vars.setdefault(v, (rel, line))
+        files += 1
+    raw = collect(root, "scripts", "sh") + collect(root, ".github/workflows", "yml")
+    for path in sorted(raw):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for v, line in extract_env_vars(text):
+            code_vars.setdefault(v, (rel, line))
+        files += 1
+
+    readme = os.path.join(root, "README.md")
+    with open(readme, encoding="utf-8") as fh:
+        rd = fh.read()
+    b, e = rd.find(ENV_REGISTRY_BEGIN), rd.find(ENV_REGISTRY_END)
+    if b < 0 or e < 0:
+        findings.append(("README.md", 1, "R5", "registry markers missing"))
+        registry = {}
+    else:
+        base_line = rd[:b].count("\n") + 1
+        registry = {}
+        for v, line in extract_env_vars(rd[b:e]):
+            registry.setdefault(v, base_line + line - 1)
+        for v, (rel, line) in sorted(code_vars.items()):
+            if v not in registry:
+                findings.append((rel, line, "R5", f"env var {v} missing from registry"))
+        for v, line in sorted(registry.items()):
+            if v not in code_vars:
+                findings.append(("README.md", line, "R5", f"registry lists stale {v}"))
+
+    kept, suppressed = apply_suppressions(findings, sups)
+    kept.sort(key=lambda f: (f[0], f[1], f[2]))
+    return {
+        "files_scanned": files,
+        "findings": kept,
+        "suppressed": suppressed,
+        "suppressions": sups,
+        "code_vars": code_vars,
+    }
+
+
+def main():
+    argv = sys.argv[1:]
+    root = "."
+    out_json = None
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--root":
+            root = argv[i + 1]
+            i += 2
+        elif argv[i] == "--json":
+            out_json = argv[i + 1]
+            i += 2
+        else:
+            print(f"unknown arg {argv[i]}", file=sys.stderr)
+            return 2
+    rep = run_lint(root)
+    for f in rep["findings"]:
+        print(f"{f[0]}:{f[1]} [{f[2]}] {f[3]}")
+    print(
+        f"srclint(py): {len(rep['findings'])} finding(s), "
+        f"{rep['suppressed']} suppressed, {rep['files_scanned']} file(s) scanned"
+    )
+    if out_json:
+        with open(out_json, "w", encoding="utf-8") as fh:
+            json.dump(
+                {
+                    "tool": "srclint-mirror",
+                    "files_scanned": rep["files_scanned"],
+                    "suppressed": rep["suppressed"],
+                    "findings": [
+                        {"file": f[0], "line": f[1], "rule": f[2], "message": f[3]}
+                        for f in rep["findings"]
+                    ],
+                },
+                fh,
+                indent=2,
+            )
+    return 1 if rep["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,15 @@ run_guarded() {
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+# Project-invariant static analysis (rust/src/analyze/): a hard gate, run
+# right after the build and before anything slow, so an invariant
+# violation (bare lock().unwrap(), off-contract atomic ordering, hot-path
+# panic, wall-clock in a deterministic module, env-var registry drift)
+# fails fast. Writes LINT_report.json for the CI artifact upload. The
+# python mirror (scripts/srclint_mirror.py) must agree rule-for-rule.
+echo "== srclint: project invariants (R1-R5) =="
+./target/release/cvapprox srclint --json LINT_report.json
+
 echo "== tier-1: cargo test -q =="
 run_guarded cargo test -q
 
@@ -153,6 +162,13 @@ if [ "${CVAPPROX_SKIP_LINT:-0}" != "1" ]; then
     else
         echo "warning: clippy not installed; skipping clippy gate" >&2
     fi
+fi
+
+# Optional deep concurrency checks (miri + ThreadSanitizer). Off by
+# default — they need nightly components and a long budget — and run in
+# their own CI job; CVAPPROX_CONCURRENCY_CHECKS=1 opts in locally.
+if [ "${CVAPPROX_CONCURRENCY_CHECKS:-0}" = "1" ]; then
+    bash scripts/concurrency_checks.sh
 fi
 
 echo "== verify OK =="
