@@ -374,10 +374,10 @@ fn main() {
                 .field("deadline_expired", smoke.deadline_expired as i64)
                 .field("retry_served", smoke.retry_served as i64),
         );
-    let path = "BENCH_fault.json";
-    match std::fs::write(path, json.render()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("(could not write {path}: {e})"),
+    let path = cvapprox::util::bench::artifact_path("BENCH_fault.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("(could not write {}: {e})", path.display()),
     }
     println!("chaos OK");
 }

@@ -284,10 +284,10 @@ fn main() {
         .field("paired_dominates_strictly", strict)
         .field("mirrored_grid", Json::Arr(grid_rows))
         .field("serving", Json::Arr(served));
-    let path = "BENCH_paired.json";
-    match std::fs::write(path, json.render()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("(could not write {path}: {e})"),
+    let path = cvapprox::util::bench::artifact_path("BENCH_paired.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("(could not write {}: {e})", path.display()),
     }
     // On the hermetic set the upgrade is pinned (python mirror): at least
     // one layer pairs, so dominance is strict.

@@ -159,14 +159,16 @@ fn main() {
         policy.describe()
     );
     // Round-trip through the serialized artifact, like a deployment would.
-    let policy_path = "POLICY_hermnet_hsynth.json";
-    policy.save_json(std::path::Path::new(policy_path)).unwrap();
-    let policy = Arc::new(LayerPolicy::load(std::path::Path::new(policy_path)).unwrap());
+    let policy_path =
+        cvapprox::util::bench::artifact_path("POLICY_hermnet_hsynth.json");
+    policy.save_json(&policy_path).unwrap();
+    let policy = Arc::new(LayerPolicy::load(&policy_path).unwrap());
     println!(
-        "greedy {} m_hi={m_hi} budget={budget_pct}%: {} (acc {:.4}) -> {policy_path}",
+        "greedy {} m_hi={m_hi} budget={budget_pct}%: {} (acc {:.4}) -> {}",
         fam_hi.name(),
         policy.describe(),
-        pol.acc
+        pol.acc,
+        policy_path.display()
     );
 
     let policy_opts = ForwardOpts::with_policy(policy.clone());
@@ -286,10 +288,10 @@ fn main() {
             .field("policy_file", policy_path))
         .field("mixed_dominates_uniform", dominates)
         .field("results", Json::Arr(rows.into_iter().map(|r| r.json).collect()));
-    let path = "BENCH_policy.json";
-    match std::fs::write(path, json.render()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("(could not write {path}: {e})"),
+    let path = cvapprox::util::bench::artifact_path("BENCH_policy.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("(could not write {}: {e})", path.display()),
     }
     // The acceptance gate: on the hermetic set the greedy mixed policy must
     // strictly dominate (deterministic data + deterministic arithmetic, so

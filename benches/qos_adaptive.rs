@@ -174,10 +174,11 @@ fn main() {
     let engine = Engine::new(model.clone());
     let ladder = qos_ladder(&engine, &ds, Family::Perforated, 3, 0.8, ds.n, N_ARRAY)
         .expect("ladder search");
-    let ladder_path = "QOS_ladder_hermnet_hsynth.json";
-    ladder.save_json(std::path::Path::new(ladder_path)).expect("write ladder");
-    let ladder = Ladder::load(std::path::Path::new(ladder_path)).expect("reload ladder");
-    println!("ladder: {} -> {ladder_path}", ladder.describe());
+    let ladder_path =
+        cvapprox::util::bench::artifact_path("QOS_ladder_hermnet_hsynth.json");
+    ladder.save_json(&ladder_path).expect("write ladder");
+    let ladder = Ladder::load(&ladder_path).expect("reload ladder");
+    println!("ladder: {} -> {}", ladder.describe(), ladder_path.display());
     assert!(ladder.len() >= 3, "hermetic ladder should have >= 3 rungs");
 
     // ---- governed run ----------------------------------------------------
@@ -389,10 +390,10 @@ fn main() {
             Json::arr(by_rung.iter().map(|&n| n as i64)),
         )
         .field("results", Json::Arr(rows.iter().map(|r| r.json()).collect()));
-    let path = "BENCH_qos.json";
-    match std::fs::write(path, json.render()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("(could not write {path}: {e})"),
+    let path = cvapprox::util::bench::artifact_path("BENCH_qos.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("(could not write {}: {e})", path.display()),
     }
     println!("qos_adaptive OK");
 }

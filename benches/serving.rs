@@ -196,9 +196,9 @@ fn main() {
         .field("quick", quick)
         .field("gemm_threads", gemm_threads)
         .field("results", Json::Arr(records));
-    let path = "BENCH_serving.json";
-    match std::fs::write(path, json.render()) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => println!("\n(could not write {path}: {e})"),
+    let path = cvapprox::util::bench::artifact_path("BENCH_serving.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\n(could not write {}: {e})", path.display()),
     }
 }

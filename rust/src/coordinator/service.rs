@@ -560,11 +560,14 @@ impl InferenceService {
                 )
             }
             None => {
+                // Uniform serving gets the same start-time gate as a policy:
+                // an out-of-range m or an oversized-K layer (i32-headroom,
+                // e.g. positive polarity above MAX_K_POS) is a typed error
+                // here, never a worker panic mid-batch.
+                let opts = ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv);
+                engine.validate_opts(&opts).context("service config")?;
                 engine.prepare_plans(cfg.family, cfg.m);
-                (
-                    PowerModel::new(cfg.family, cfg.m, cfg.n_array),
-                    ForwardOpts::approx(cfg.family, cfg.m, cfg.use_cv),
-                )
+                (PowerModel::new(cfg.family, cfg.m, cfg.n_array), opts)
             }
         };
         // Generation 0 is the start configuration; its power model seeds
@@ -1520,6 +1523,50 @@ mod tests {
         .unwrap();
         assert!(svc.infer(testutil::tiny_image(5)).is_ok());
         svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_k_is_a_start_and_install_error_not_a_worker_crash() {
+        // K-headroom regression (see `nn::gemm::max_k_for_point`): a dense
+        // layer with K above MAX_K_POS used to panic a serving worker
+        // mid-batch when served at positive polarity — caught by
+        // catch_unwind, costing the whole batch a WorkerCrashed. It must be
+        // a typed error at start/install time instead.
+        use crate::nn::gemm::MAX_K_POS;
+        use crate::nn::policy::LayerPoint;
+        use crate::approx::Polarity;
+        let k = MAX_K_POS + 1_000;
+        let pos = std::sync::Arc::new(
+            LayerPolicy::new(vec![LayerPoint::new_pol(
+                Family::Perforated,
+                2,
+                Polarity::Pos,
+                true,
+            )])
+            .unwrap(),
+        );
+        // Starting straight onto the bad policy fails before any worker
+        // spawns.
+        let err = InferenceService::start(
+            Engine::new(testutil::big_k_model(k)),
+            ServiceConfig { policy: Some(pos.clone()), workers: 1, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("i32-headroom"), "{err:#}");
+        // Exact serving of the same model is fine; hot-swapping to the bad
+        // policy is rejected and the running generation keeps serving.
+        let svc = InferenceService::start(
+            Engine::new(testutil::big_k_model(k)),
+            ServiceConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let err = svc.install_policy(pos).unwrap_err();
+        assert!(format!("{err:#}").contains("i32-headroom"), "{err:#}");
+        let reply = svc.submit(testutil::big_k_image(k)).unwrap().wait().unwrap();
+        assert_eq!(reply.logits.len(), 2);
+        let snap = svc.shutdown();
+        assert_eq!(snap.worker_restarts, 0, "no worker may have panicked");
+        assert_eq!(snap.crashed_replies, 0);
     }
 
     #[test]

@@ -12,8 +12,11 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use super::gemm::{approx_gemm_planned, paired_gemm_planned, GemmCtx, GemmKind};
+use super::gemm::{
+    approx_gemm_planned_with_kernel, paired_gemm_planned_with_kernel, GemmCtx, GemmKind,
+};
 use super::graph::{Model, Node, Op, Tensor, Weights};
+use super::kernel::{self, Kernel};
 use super::plan::{LayerPlan, PairedPlan, PlanCache, PlanKey, Scratch};
 use super::policy::{
     LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, SharedPolicy, MAX_M,
@@ -262,6 +265,11 @@ pub struct Engine {
     systolic: Option<SystolicArray>,
     pjrt: Option<(Arc<TileGemm>, Variant)>,
     plans: PlanCache,
+    /// The compute backend every native GEMM on this engine runs — captured
+    /// at construction from [`kernel::active`] (`CVAPPROX_KERNEL`), or
+    /// pinned explicitly via [`Engine::with_kernel`] (what the differential
+    /// kernel axis and the bench scalar-vs-SIMD rows use).
+    kernel: &'static dyn Kernel,
 }
 
 /// Interior-mutable LUT store. The generation counter has the same contract
@@ -341,13 +349,27 @@ enum LayerExec {
 
 impl Engine {
     pub fn new(model: Model) -> Engine {
+        Engine::with_kernel(model, kernel::active())
+    }
+
+    /// Engine with an explicitly pinned compute backend (see
+    /// [`kernel::scalar`] / [`kernel::simd`]). [`Engine::new`] is this with
+    /// the process-wide [`kernel::active`] selection.
+    pub fn with_kernel(model: Model, kr: &'static dyn Kernel) -> Engine {
         Engine {
             model,
             luts: LutRegistry::default(),
             systolic: None,
             pjrt: None,
             plans: PlanCache::new(),
+            kernel: kr,
         }
+    }
+
+    /// Name of the compute backend this engine's native GEMMs run
+    /// (`scalar` / `simd`).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     /// Route MAC GEMMs through the PJRT runtime (the AOT XLA kernels).
@@ -530,14 +552,17 @@ impl Engine {
     }
 
     /// Validate the per-layer configuration against this model before any
-    /// GEMM runs: a policy must match the MAC layer count, and uniform /
-    /// `m_per_layer` levels must be in range. Returning `Err` here is what
-    /// keeps a bad policy from poisoning a serving worker mid-batch.
+    /// GEMM runs: a policy must match the MAC layer count, uniform /
+    /// `m_per_layer` levels must be in range, and every layer's reduction
+    /// depth must fit its assignment's i32-headroom ceiling
+    /// ([`super::gemm::max_k_for_point`]). Returning `Err` here is what
+    /// keeps a bad policy from poisoning a serving worker mid-batch — the
+    /// asserts in the GEMM core are unreachable backstops once this passes.
     fn check_opts(&self, opts: &ForwardOpts) -> Result<()> {
         match &opts.policy {
             Some(p) => p.validate_for(&self.model)?,
             None => {
-                for i in 0..self.model.mac_layers() {
+                for (i, k) in self.model.mac_layer_kdims().into_iter().enumerate() {
                     let m = opts.m_for(i);
                     if m > MAX_M {
                         bail!(
@@ -545,10 +570,28 @@ impl Engine {
                              for 8-bit operands)"
                         );
                     }
+                    let assignment = opts.assignment_for(i);
+                    let cap = assignment.max_k();
+                    if k > cap {
+                        bail!(
+                            "MAC layer {i} has K = {k}, above the i32-headroom \
+                             ceiling {cap} of {} — run this layer exact or at \
+                             negative polarity",
+                            assignment.describe()
+                        );
+                    }
                 }
             }
         }
         Ok(())
+    }
+
+    /// Public entry to the same validation every forward runs at entry, so
+    /// policy installers and service start-up can reject an out-of-range or
+    /// oversized-K configuration with a typed error *before* any worker
+    /// picks up a batch.
+    pub fn validate_opts(&self, opts: &ForwardOpts) -> Result<()> {
+        self.check_opts(opts)
     }
 
     /// How many layer plans have been built so far (a steady-state serving
@@ -1153,7 +1196,8 @@ impl Engine {
         match exec {
             LayerExec::Uniform { ctx, plan } => {
                 let lut = self.lut_lookup(ctx.family, ctx.m, plan.pol);
-                approx_gemm_planned(
+                approx_gemm_planned_with_kernel(
+                    self.kernel,
                     if lut.is_some() { GemmKind::Lut } else { GemmKind::Identity },
                     ctx,
                     plan,
@@ -1184,7 +1228,8 @@ impl Engine {
                 } else {
                     GemmKind::Identity
                 };
-                paired_gemm_planned(
+                paired_gemm_planned_with_kernel(
+                    self.kernel,
                     kind,
                     pair,
                     *zp_w,
@@ -2282,6 +2327,56 @@ mod tests {
         // m = 7 is the last valid level.
         let edge = ForwardOpts::approx(Family::Perforated, 7, true);
         engine.forward(&img, &edge).unwrap();
+    }
+
+    #[test]
+    fn oversized_k_is_a_typed_error_not_a_panic() {
+        // Headline satellite: a positive-polarity point on a layer whose K
+        // exceeds MAX_K_POS used to hit the i32-headroom assert mid-batch
+        // inside a serving worker; it must now surface as Err at validation
+        // time — forward entry, plan prewarm and policy install alike.
+        use crate::nn::gemm::{MAX_K_NEG, MAX_K_POS};
+        use crate::nn::testutil::{big_k_image, big_k_model};
+        let k = MAX_K_POS + 1_000;
+        let engine = Engine::new(big_k_model(k));
+        let img = big_k_image(k);
+        let pos = std::sync::Arc::new(
+            LayerPolicy::new(vec![LayerPoint::new_pol(
+                Family::Perforated,
+                2,
+                Polarity::Pos,
+                true,
+            )])
+            .unwrap(),
+        );
+        let opts_pos = ForwardOpts::with_policy(pos.clone());
+        let err = engine.forward(&img, &opts_pos).unwrap_err();
+        assert!(format!("{err:#}").contains("i32-headroom"), "{err:#}");
+        assert!(engine.forward_batch(&[&img], &opts_pos).is_err());
+        assert!(engine.prepare_plans_policy(&pos).is_err());
+        assert!(engine.validate_opts(&opts_pos).is_err());
+        assert_eq!(engine.plan_builds(), 0, "rejected configs cache nothing");
+        // The negative-polarity twin sits inside its larger ceiling and runs.
+        let neg = std::sync::Arc::new(
+            LayerPolicy::new(vec![LayerPoint::new_pol(
+                Family::Perforated,
+                2,
+                Polarity::Neg,
+                true,
+            )])
+            .unwrap(),
+        );
+        engine.forward(&img, &ForwardOpts::with_policy(neg)).unwrap();
+        // Beyond the universal i32 ceiling even exact/uniform opts are
+        // typed errors (the core would assert on any GEMM at this depth).
+        let huge_k = MAX_K_NEG + 1_000;
+        let huge = Engine::new(big_k_model(huge_k));
+        let img2 = big_k_image(huge_k);
+        let err2 = huge.forward(&img2, &ForwardOpts::exact()).unwrap_err();
+        assert!(format!("{err2:#}").contains("i32-headroom"), "{err2:#}");
+        assert!(huge
+            .validate_opts(&ForwardOpts::approx(Family::Truncated, 4, true))
+            .is_err());
     }
 
     #[test]

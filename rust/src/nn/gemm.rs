@@ -29,16 +29,24 @@
 //! 2. **Scratch reuse** ([`Scratch`]): widened/masked activation panels,
 //!    bit planes, Σa/Σx and both accumulators live in a caller-owned arena,
 //!    so steady-state forwards make no per-GEMM heap allocations.
-//! 3. **Blocked multithreaded core**: [`gemm_core_i32`] tiles N (`NC`) and
+//! 3. **Blocked multithreaded core**: `gemm_core_i32` tiles N (`NC`) and
 //!    K (`KC`) for L1/L2 residency around the 4-row register blocking, and
 //!    fans output-row blocks out over `CVAPPROX_THREADS` scoped threads
 //!    (shared by the Identity, LUT and epilogue paths). Small GEMMs stay
 //!    single-threaded (`PAR_THRESHOLD`) so spawn cost never dominates.
+//! 4. **Kernel backends** ([`super::kernel`]): the inner compute — operand
+//!    packing, masked transforms, the blocked i32 chunk, ΣA/ΣX column
+//!    reductions — runs behind the [`Kernel`] trait. This module keeps the
+//!    orchestration (plans, LUT dispatch, threading, the V epilogue); the
+//!    bare `approx_gemm_planned` / `paired_gemm_planned` entry points run
+//!    the process-wide [`kernel::active`] backend, and the `_with_kernel`
+//!    variants pin one explicitly (differential tests, bench rows).
 
-use crate::approx::{comp_low, xvar_pol, Family, MulLut, Polarity};
+use crate::approx::{Family, MulLut, Polarity};
 use crate::cv;
 use crate::util::threadpool::configured_workers;
 
+use super::kernel::{self, Kernel};
 use super::plan::{reset, LayerPlan, PairedPlan, Scratch};
 use super::policy::{LayerPoint, PairedPoint};
 
@@ -61,13 +69,37 @@ pub struct GemmCtx {
 
 /// Column-block width: `NC` i32 accumulator lanes per output row stay L1
 /// resident while activation rows stream.
-const NC: usize = 256;
+pub(crate) const NC: usize = 256;
 /// Reduction-block depth: one `KC × NC` activation block (~128 KiB) stays L2
 /// resident across all row quads of a thread's chunk.
-const KC: usize = 128;
+pub(crate) const KC: usize = 128;
 /// MAC count below which a GEMM runs single-threaded — scoped-thread spawn
 /// costs ~10–20 µs each, which only amortizes on non-trivial layers.
 const PAR_THRESHOLD: usize = 1 << 18;
+
+/// i32-headroom ceiling on the reduction depth K of one planned GEMM:
+/// |Σ_k w·a| ≤ K·255² must stay inside i32.
+pub const MAX_K_NEG: usize = 33_000;
+/// Tighter ceiling for positive-polarity approximate points: the exact
+/// pass (≤ K·255²) plus the upward compensation (≤ K·255·127) share one
+/// i32 accumulator.
+pub const MAX_K_POS: usize = 20_000;
+
+/// The K-headroom ceiling of one multiplier point. Enforced with a typed
+/// error at plan/policy-validation time (`LayerPolicy::validate_for`,
+/// `Engine::validate_opts`, `InferenceService::start`) so the asserts in
+/// the core below stay unreachable backstops — never a mid-batch panic
+/// inside a serving worker for a valid-but-large model.
+pub fn max_k_for_point(pt: LayerPoint) -> usize {
+    if pt.family == Family::Exact || pt.m == 0 {
+        MAX_K_NEG
+    } else {
+        match pt.polarity {
+            Polarity::Neg => MAX_K_NEG,
+            Polarity::Pos => MAX_K_POS,
+        }
+    }
+}
 
 /// Split `out` (an [rows × n] row-major panel) into contiguous row blocks
 /// (multiples of 4 rows, matching the register blocking) and run
@@ -106,85 +138,18 @@ where
     });
 }
 
-/// Cache-blocked exact i32 GEMM over one contiguous row chunk (`w` rows
-/// correspond 1:1 to `out` rows; the caller offsets both). 4-row register
-/// blocking: one pass over an activation block feeds 4 output rows, cutting
-/// A-panel traffic 4× (§Perf iteration 2); N/K blocking keeps the hot
-/// working set (4×NC out lanes + the streamed A rows) inside L1/L2.
-fn gemm_chunk_i32(
-    w: &[u8],
-    a: &[i32],
-    rows: usize,
-    k: usize,
-    n: usize,
-    sign: i32,
-    out: &mut [i32],
-) {
-    let mut n0 = 0;
-    while n0 < n {
-        let nc = NC.min(n - n0);
-        let mut k0 = 0;
-        while k0 < k {
-            let kc = KC.min(k - k0);
-            let mut f = 0;
-            while f + 4 <= rows {
-                let w0 = &w[f * k..(f + 1) * k];
-                let w1 = &w[(f + 1) * k..(f + 2) * k];
-                let w2 = &w[(f + 2) * k..(f + 3) * k];
-                let w3 = &w[(f + 3) * k..(f + 4) * k];
-                let (r0, rest) = out[f * n..].split_at_mut(n);
-                let (r1, rest) = rest.split_at_mut(n);
-                let (r2, r3full) = rest.split_at_mut(n);
-                let r0 = &mut r0[n0..n0 + nc];
-                let r1 = &mut r1[n0..n0 + nc];
-                let r2 = &mut r2[n0..n0 + nc];
-                let r3 = &mut r3full[n0..n0 + nc];
-                for kk in k0..k0 + kc {
-                    let v0 = sign * w0[kk] as i32;
-                    let v1 = sign * w1[kk] as i32;
-                    let v2 = sign * w2[kk] as i32;
-                    let v3 = sign * w3[kk] as i32;
-                    if (v0 | v1 | v2 | v3) == 0 {
-                        continue;
-                    }
-                    let arow = &a[kk * n + n0..kk * n + n0 + nc];
-                    for (j, &av) in arow.iter().enumerate() {
-                        r0[j] += v0 * av;
-                        r1[j] += v1 * av;
-                        r2[j] += v2 * av;
-                        r3[j] += v3 * av;
-                    }
-                }
-                f += 4;
-            }
-            while f < rows {
-                let wrow = &w[f * k..(f + 1) * k];
-                let orow = &mut out[f * n + n0..f * n + n0 + nc];
-                for kk in k0..k0 + kc {
-                    if wrow[kk] == 0 {
-                        continue;
-                    }
-                    let wv = sign * wrow[kk] as i32;
-                    let arow = &a[kk * n + n0..kk * n + n0 + nc];
-                    for (o, &av) in orow.iter_mut().zip(arow) {
-                        *o += wv * av;
-                    }
-                }
-                f += 1;
-            }
-            k0 += kc;
-        }
-        n0 += nc;
-    }
-}
-
 /// Exact u8×u8 GEMM core with **i32 accumulation** (`sign` = ±1 folds the
 /// error-term subtraction into the same kernel), blocked + multithreaded.
+/// The per-chunk compute is the backend's [`Kernel::gemm_chunk`]; this
+/// shell owns the row-block fan-out, which is backend-independent.
 ///
-/// Overflow safety: |Σ_k w·a| ≤ K·255² < 2^31 for K ≤ 33 000 — far beyond
-/// any layer this engine sees (max K here is 3×3×64 = 576; the coordinator
-/// would tile anything larger). Asserted below.
+/// Overflow safety: |Σ_k w·a| ≤ K·255² < 2^31 for K ≤ [`MAX_K_NEG`].
+/// Oversized layers are rejected with a typed error at plan/policy
+/// validation time (see [`max_k_for_point`]); the assert here is the
+/// unreachable backstop.
+#[allow(clippy::too_many_arguments)]
 fn gemm_core_i32(
+    kr: &dyn Kernel,
     w: &[u8],
     a_i32: &[i32],
     m_rows: usize,
@@ -197,11 +162,11 @@ fn gemm_core_i32(
     debug_assert_eq!(w.len(), m_rows * k);
     debug_assert_eq!(a_i32.len(), k * n);
     debug_assert_eq!(out.len(), m_rows * n);
-    assert!(k <= 33_000, "K too large for i32 accumulation — tile it");
+    assert!(k <= MAX_K_NEG, "K too large for i32 accumulation — tile it");
     let threads = if m_rows * k * n < PAR_THRESHOLD { 1 } else { threads };
     par_row_blocks(out, n, threads, 8, |row0, chunk| {
         let rows = chunk.len() / n;
-        gemm_chunk_i32(&w[row0 * k..(row0 + rows) * k], a_i32, rows, k, n, sign, chunk);
+        kr.gemm_chunk(&w[row0 * k..(row0 + rows) * k], a_i32, rows, k, n, sign, chunk);
     });
 }
 
@@ -211,7 +176,9 @@ fn gemm_core_i32(
 /// `row0` (the perforated expansion streams it directly; paired partitions
 /// pass their parity-masked panel, whose zeros contribute nothing to any
 /// family's ε term).
+#[allow(clippy::too_many_arguments)]
 fn eps_identity_into(
+    kr: &dyn Kernel,
     plan: &LayerPlan,
     row0: usize,
     w: &[u8],
@@ -234,14 +201,14 @@ fn eps_identity_into(
     };
     if pol == Polarity::Pos {
         // i32 headroom: exact (≤ K·255²) plus the compensation (≤ K·255·127)
-        // must stay inside i32 — tighter than the Neg bound.
+        // must stay inside i32 — tighter than the Neg bound. Validated with
+        // a typed error at plan/policy time; unreachable backstop here.
         assert!(
-            k <= 20_000,
+            k <= MAX_K_POS,
             "K too large for i32 accumulation with positive-polarity \
              compensation — tile it"
         );
     }
-    let mask = ((1u32 << m) - 1) as u8;
     match family {
         Family::Perforated | Family::Recursive => {
             // Shared activation transform (low bits for Neg, their modular
@@ -249,21 +216,11 @@ fn eps_identity_into(
             // family — raw weights for perforated, the plan's prebuilt
             // low/complement panel for recursive.
             reset(&mut scratch.a_mask, k * n);
-            match pol {
-                Polarity::Neg => {
-                    for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                        *dst = (src & mask) as i32;
-                    }
-                }
-                Polarity::Pos => {
-                    for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                        *dst = comp_low(src as i32, m);
-                    }
-                }
-            }
+            kr.mask_low(pol, m, a, &mut scratch.a_mask);
             let w_panel =
                 if family == Family::Recursive { plan.w_low(row0, m_rows) } else { w };
             gemm_core_i32(
+                kr,
                 w_panel,
                 &scratch.a_mask,
                 m_rows,
@@ -283,11 +240,10 @@ fn eps_identity_into(
             reset(&mut scratch.a_mask, k * n);
             reset(&mut scratch.term, m_rows * n);
             for i in 0..m {
-                for (dst, &src) in scratch.a_mask.iter_mut().zip(a) {
-                    *dst = ((src >> i) & 1) as i32;
-                }
+                kr.bit_plane(i, a, &mut scratch.a_mask);
                 scratch.term.fill(0);
                 gemm_core_i32(
+                    kr,
                     plan.w_plane(i as usize, row0, m_rows),
                     &scratch.a_mask,
                     m_rows,
@@ -297,9 +253,7 @@ fn eps_identity_into(
                     &mut scratch.term,
                     threads,
                 );
-                for (o, &t) in scratch.acc32.iter_mut().zip(&scratch.term) {
-                    *o += sign * (t << i);
-                }
+                kr.merge_shifted(sign, i, &scratch.term, &mut scratch.acc32);
             }
         }
         Family::Exact => unreachable!(),
@@ -310,7 +264,9 @@ fn eps_identity_into(
 /// path). `plan` supplies the precomputed masked weight panels; `row0`
 /// selects the filter-row window within the plan (conv groups) and `w` is
 /// the matching window of the raw weights.
+#[allow(clippy::too_many_arguments)]
 fn am_acc_identity_into(
+    kr: &dyn Kernel,
     plan: &LayerPlan,
     row0: usize,
     w: &[u8],
@@ -323,15 +279,11 @@ fn am_acc_identity_into(
 ) {
     reset(&mut scratch.acc32, m_rows * n);
     reset(&mut scratch.a_wide, k * n);
-    for (dst, &src) in scratch.a_wide.iter_mut().zip(a) {
-        *dst = src as i32;
-    }
-    gemm_core_i32(w, &scratch.a_wide, m_rows, k, n, 1, &mut scratch.acc32, threads);
-    eps_identity_into(plan, row0, w, a, m_rows, k, n, scratch, threads);
+    kr.widen_u8(a, &mut scratch.a_wide);
+    gemm_core_i32(kr, w, &scratch.a_wide, m_rows, k, n, 1, &mut scratch.acc32, threads);
+    eps_identity_into(kr, plan, row0, w, a, m_rows, k, n, scratch, threads);
     reset(&mut scratch.acc, m_rows * n);
-    for (o, &v) in scratch.acc.iter_mut().zip(&scratch.acc32) {
-        *o = v as i64;
-    }
+    kr.widen_acc(&scratch.acc32, &mut scratch.acc);
 }
 
 /// Σ_k AM(W,A) via the closed-form identities (fast path). Compatibility
@@ -347,7 +299,18 @@ pub fn am_acc_identity(
 ) -> Vec<i64> {
     let plan = LayerPlan::build(family, m, w, m_rows, k);
     let mut scratch = Scratch::new();
-    am_acc_identity_into(&plan, 0, w, a, m_rows, k, n, &mut scratch, configured_workers());
+    am_acc_identity_into(
+        kernel::active(),
+        &plan,
+        0,
+        w,
+        a,
+        m_rows,
+        k,
+        n,
+        &mut scratch,
+        configured_workers(),
+    );
     std::mem::take(&mut scratch.acc)
 }
 
@@ -527,6 +490,49 @@ pub fn paired_gemm_planned(
     scratch: &mut Scratch,
     threads: usize,
 ) {
+    paired_gemm_planned_with_kernel(
+        kernel::active(),
+        kind,
+        pair,
+        zp_w,
+        zp_a,
+        plan,
+        row0,
+        lut_even,
+        lut_odd,
+        w,
+        a,
+        m_rows,
+        k,
+        n,
+        bias,
+        scratch,
+        threads,
+    );
+}
+
+/// [`paired_gemm_planned`] with an explicitly pinned compute backend (the
+/// bare entry point runs the process-wide [`kernel::active`] one).
+#[allow(clippy::too_many_arguments)]
+pub fn paired_gemm_planned_with_kernel(
+    kr: &dyn Kernel,
+    kind: GemmKind,
+    pair: &PairedPoint,
+    zp_w: i64,
+    zp_a: i64,
+    plan: &PairedPlan,
+    row0: usize,
+    lut_even: Option<&MulLut>,
+    lut_odd: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    scratch: &mut Scratch,
+    threads: usize,
+) {
     debug_assert!(row0 + m_rows <= plan.rows);
     debug_assert_eq!(k, plan.k);
     let even_pt = pair.even.normalized();
@@ -535,18 +541,28 @@ pub fn paired_gemm_planned(
         GemmKind::Identity => {
             reset(&mut scratch.acc32, m_rows * n);
             reset(&mut scratch.a_wide, k * n);
-            for (dst, &src) in scratch.a_wide.iter_mut().zip(a) {
-                *dst = src as i32;
-            }
-            gemm_core_i32(w, &scratch.a_wide, m_rows, k, n, 1, &mut scratch.acc32, threads);
+            kr.widen_u8(a, &mut scratch.a_wide);
+            gemm_core_i32(
+                kr,
+                w,
+                &scratch.a_wide,
+                m_rows,
+                k,
+                n,
+                1,
+                &mut scratch.acc32,
+                threads,
+            );
             let w_even = &plan.w_even[row0 * k..(row0 + m_rows) * k];
             let w_odd = &plan.w_odd[row0 * k..(row0 + m_rows) * k];
-            eps_identity_into(&plan.even, row0, w_even, a, m_rows, k, n, scratch, threads);
-            eps_identity_into(&plan.odd, row0, w_odd, a, m_rows, k, n, scratch, threads);
+            eps_identity_into(
+                kr, &plan.even, row0, w_even, a, m_rows, k, n, scratch, threads,
+            );
+            eps_identity_into(
+                kr, &plan.odd, row0, w_odd, a, m_rows, k, n, scratch, threads,
+            );
             reset(&mut scratch.acc, m_rows * n);
-            for (o, &v) in scratch.acc.iter_mut().zip(&scratch.acc32) {
-                *o = v as i64;
-            }
+            kr.widen_acc(&scratch.acc32, &mut scratch.acc);
         }
         GemmKind::Lut => {
             let mut built_even: Option<MulLut> = None;
@@ -562,29 +578,34 @@ pub fn paired_gemm_planned(
     let cv_odd = odd_pt.use_cv && odd_pt != LayerPoint::EXACT;
     if cv_even {
         reset(&mut scratch.sum_x, n);
-        for kk in (0..k).step_by(2) {
-            let arow = &a[kk * n..(kk + 1) * n];
-            for (sx, &av) in scratch.sum_x.iter_mut().zip(arow) {
-                *sx += xvar_pol(even_pt.family, even_pt.polarity, av, even_pt.m) as i64;
-            }
-        }
+        kr.col_sum_x(
+            even_pt.family,
+            even_pt.polarity,
+            even_pt.m,
+            0,
+            2,
+            a,
+            k,
+            n,
+            &mut scratch.sum_x,
+        );
     }
     if cv_odd {
         reset(&mut scratch.sum_x2, n);
-        for kk in (1..k).step_by(2) {
-            let arow = &a[kk * n..(kk + 1) * n];
-            for (sx, &av) in scratch.sum_x2.iter_mut().zip(arow) {
-                *sx += xvar_pol(odd_pt.family, odd_pt.polarity, av, odd_pt.m) as i64;
-            }
-        }
+        kr.col_sum_x(
+            odd_pt.family,
+            odd_pt.polarity,
+            odd_pt.m,
+            1,
+            2,
+            a,
+            k,
+            n,
+            &mut scratch.sum_x2,
+        );
     }
     reset(&mut scratch.sum_a, n);
-    for kk in 0..k {
-        let arow = &a[kk * n..(kk + 1) * n];
-        for (sa, &av) in scratch.sum_a.iter_mut().zip(arow) {
-            *sa += av as i64;
-        }
-    }
+    kr.col_sum_a(a, k, n, &mut scratch.sum_a);
     // Fused per-partition V + shared zero-point/bias epilogue, parallelized
     // over the same row blocks as the core. Σw (full-row) and each half's
     // C/C₀ come from the paired plan.
@@ -645,6 +666,43 @@ pub fn approx_gemm_planned(
     scratch: &mut Scratch,
     threads: usize,
 ) {
+    approx_gemm_planned_with_kernel(
+        kernel::active(),
+        kind,
+        ctx,
+        plan,
+        row0,
+        lut,
+        w,
+        a,
+        m_rows,
+        k,
+        n,
+        bias,
+        scratch,
+        threads,
+    );
+}
+
+/// [`approx_gemm_planned`] with an explicitly pinned compute backend (the
+/// bare entry point runs the process-wide [`kernel::active`] one).
+#[allow(clippy::too_many_arguments)]
+pub fn approx_gemm_planned_with_kernel(
+    kr: &dyn Kernel,
+    kind: GemmKind,
+    ctx: &GemmCtx,
+    plan: &LayerPlan,
+    row0: usize,
+    lut: Option<&MulLut>,
+    w: &[u8],
+    a: &[u8],
+    m_rows: usize,
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    scratch: &mut Scratch,
+    threads: usize,
+) {
     debug_assert_eq!(plan.family, ctx.family, "plan/ctx family mismatch");
     debug_assert_eq!(plan.m, ctx.m, "plan/ctx m mismatch");
     debug_assert!(row0 + m_rows <= plan.rows);
@@ -653,11 +711,13 @@ pub fn approx_gemm_planned(
     let mut built: Option<MulLut> = None;
     match kind {
         GemmKind::Identity => {
-            am_acc_identity_into(plan, row0, w, a, m_rows, k, n, scratch, threads);
+            am_acc_identity_into(kr, plan, row0, w, a, m_rows, k, n, scratch, threads);
         }
         GemmKind::Lut => {
             if ctx.family == Family::Exact || ctx.m == 0 {
-                am_acc_identity_into(plan, row0, w, a, m_rows, k, n, scratch, threads);
+                am_acc_identity_into(
+                    kr, plan, row0, w, a, m_rows, k, n, scratch, threads,
+                );
             } else {
                 let l: &MulLut = match lut {
                     Some(l)
@@ -680,20 +740,10 @@ pub fn approx_gemm_planned(
     let use_cv = ctx.use_cv && ctx.family != Family::Exact && ctx.m > 0;
     if use_cv {
         reset(&mut scratch.sum_x, n);
-        for kk in 0..k {
-            let arow = &a[kk * n..(kk + 1) * n];
-            for (sx, &av) in scratch.sum_x.iter_mut().zip(arow) {
-                *sx += xvar_pol(ctx.family, plan.pol, av, ctx.m) as i64;
-            }
-        }
+        kr.col_sum_x(ctx.family, plan.pol, ctx.m, 0, 1, a, k, n, &mut scratch.sum_x);
     }
     reset(&mut scratch.sum_a, n);
-    for kk in 0..k {
-        let arow = &a[kk * n..(kk + 1) * n];
-        for (sa, &av) in scratch.sum_a.iter_mut().zip(arow) {
-            *sa += av as i64;
-        }
-    }
+    kr.col_sum_a(a, k, n, &mut scratch.sum_a);
     // Control variate (MAC+ column) + zero-point/bias epilogue, fused into
     // one pass over the accumulator and parallelized over the same row
     // blocks as the core. Σw and C/C₀ come from the plan.
@@ -760,7 +810,7 @@ pub fn approx_gemm(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::approx::am_pol;
+    use crate::approx::{am_pol, xvar_pol};
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -979,18 +1029,21 @@ mod tests {
                 let want = naive_full_gemm(&ctx, w, a, *m_rows, *k, *n, bias);
                 let plan = LayerPlan::build(*fam, *m, w, *m_rows, *k);
                 let mut scratch = Scratch::new();
-                for kind in [GemmKind::Identity, GemmKind::Lut] {
-                    for threads in [1usize, 2, 3, 8] {
-                        approx_gemm_planned(
-                            kind, &ctx, &plan, 0, None, w, a, *m_rows, *k, *n, bias,
-                            &mut scratch, threads,
-                        );
-                        if scratch.acc != want {
-                            return Err(format!(
-                                "{} m={m} cv={use_cv} {kind:?} threads={threads}: \
-                                 planned != naive",
-                                fam.name()
-                            ));
+                for kr in [kernel::scalar(), kernel::simd()] {
+                    for kind in [GemmKind::Identity, GemmKind::Lut] {
+                        for threads in [1usize, 2, 3, 8] {
+                            approx_gemm_planned_with_kernel(
+                                kr, kind, &ctx, &plan, 0, None, w, a, *m_rows, *k,
+                                *n, bias, &mut scratch, threads,
+                            );
+                            if scratch.acc != want {
+                                return Err(format!(
+                                    "{} m={m} cv={use_cv} {kind:?} kernel={} \
+                                     threads={threads}: planned != naive",
+                                    fam.name(),
+                                    kr.name()
+                                ));
+                            }
                         }
                     }
                 }
@@ -1095,17 +1148,21 @@ mod tests {
                     naive_paired_gemm(pair, *zp_w, *zp_a, w, a, *m_rows, *k, *n, bias);
                 let plan = PairedPlan::build(*pair, w, *m_rows, *k);
                 let mut scratch = Scratch::new();
-                for kind in [GemmKind::Identity, GemmKind::Lut] {
-                    for threads in [1usize, 2, 5] {
-                        paired_gemm_planned(
-                            kind, pair, *zp_w, *zp_a, &plan, 0, None, None, w, a,
-                            *m_rows, *k, *n, bias, &mut scratch, threads,
-                        );
-                        if scratch.acc != want {
-                            return Err(format!(
-                                "{} {kind:?} threads={threads}: paired != naive",
-                                pair.describe()
-                            ));
+                for kr in [kernel::scalar(), kernel::simd()] {
+                    for kind in [GemmKind::Identity, GemmKind::Lut] {
+                        for threads in [1usize, 2, 5] {
+                            paired_gemm_planned_with_kernel(
+                                kr, kind, pair, *zp_w, *zp_a, &plan, 0, None, None,
+                                w, a, *m_rows, *k, *n, bias, &mut scratch, threads,
+                            );
+                            if scratch.acc != want {
+                                return Err(format!(
+                                    "{} {kind:?} kernel={} threads={threads}: \
+                                     paired != naive",
+                                    pair.describe(),
+                                    kr.name()
+                                ));
+                            }
                         }
                     }
                 }

@@ -1,0 +1,1121 @@
+//! Pluggable GEMM kernel backends (§Perf, ROADMAP item 1).
+//!
+//! [`Kernel`] abstracts the inner planned-GEMM compute that
+//! [`super::gemm`] orchestrates: operand packing (u8 → i32), the
+//! masked-operand transforms of the error identities (low bits / modular
+//! complements / bit planes), the blocked i32 multiply-accumulate chunk
+//! that runs under `par_row_blocks`, and the per-image ΣA/ΣX column
+//! reductions that feed the CV + zero-point epilogue. Everything above the
+//! trait — layer plans, LUT dispatch, threading, the V epilogue — is
+//! backend-independent.
+//!
+//! Two implementations ship:
+//!
+//! * [`ScalarKernel`] — the PR-1 blocked scalar loops, unchanged: the
+//!   portable reference every other backend must match bit for bit.
+//! * [`SimdKernel`] — closed-form lanes: AVX2 via `std::arch` where the
+//!   cpu has it (probed once at construction), an autovectorizer-friendly
+//!   chunked-i32 path elsewhere. Approximate products never touch a
+//!   256×256 LUT gather here — the masked-operand GEMMs *are* the closed
+//!   form of the bitmodel (`approx::err_pol` / `approx::xvar_pol`).
+//!
+//! Bit-exactness argument: every backend computes the **same i32 term per
+//! (row, column, k) triple** — only the association of the wrapping
+//! integer additions differs, and wrapping addition is associative and
+//! commutative, so any lane blocking or accumulation order produces
+//! identical bytes. The differential harness
+//! (`rust/tests/differential.rs`) enforces this across every family ×
+//! m ≤ 7 × polarity × paired assignment; unit tests below pin each op on
+//! ragged tails.
+//!
+//! Selection: `CVAPPROX_KERNEL` ∈ {`auto`, `scalar`, `simd`} resolved once
+//! per process ([`active`]); `auto` picks the SIMD backend exactly when
+//! its AVX2 lanes are live, otherwise the scalar fallback. Engines capture
+//! the active kernel at construction (`Engine::with_kernel` pins one
+//! explicitly — what the differential kernel axis and the bench rows use).
+
+use std::sync::OnceLock;
+
+use crate::approx::{comp_low, xvar_pol, Family, Polarity};
+
+/// The inner planned-GEMM compute surface. All methods are exact integer
+/// transforms: implementations may reorder additions freely (wrapping i32
+/// adds commute) but must produce the same per-element terms as
+/// [`ScalarKernel`].
+pub trait Kernel: Send + Sync {
+    /// Backend name (`scalar` / `simd`) — what benches and replies report.
+    fn name(&self) -> &'static str;
+
+    /// Widen u8 operands to i32 (the packing step of the identity core).
+    fn widen_u8(&self, src: &[u8], dst: &mut [i32]);
+
+    /// Masked-operand transform of the ε identities: `dst = src & (2^m−1)`
+    /// for `Neg`, its modular complement (`comp_low`) for `Pos`.
+    fn mask_low(&self, pol: Polarity, m: u32, src: &[u8], dst: &mut [i32]);
+
+    /// Bit-plane extract for the truncated expansion: `dst = (src>>bit)&1`.
+    fn bit_plane(&self, bit: u32, src: &[u8], dst: &mut [i32]);
+
+    /// Cache-blocked i32 GEMM over one contiguous row chunk (the body run
+    /// under `par_row_blocks`): `out[f,j] += sign · w[f,kk] · a[kk,j]`.
+    /// Additions per output element must run in ascending `kk` within the
+    /// same NC/KC tile walk as the scalar core (debug builds check
+    /// overflow on the scalar path; identical order keeps both in the same
+    /// headroom envelope).
+    fn gemm_chunk(
+        &self,
+        w: &[u8],
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        sign: i32,
+        out: &mut [i32],
+    );
+
+    /// Merge one truncated bit-plane term: `out += sign · (t << shift)`.
+    fn merge_shifted(&self, sign: i32, shift: u32, t: &[i32], out: &mut [i32]);
+
+    /// Widen the i32 accumulator into the i64 epilogue accumulator.
+    fn widen_acc(&self, src: &[i32], dst: &mut [i64]) {
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = v as i64;
+        }
+    }
+
+    /// Activation column sums: `sums[j] += Σ_k a[k,j]` (zero-point term).
+    fn col_sum_a(&self, a: &[u8], k: usize, n: usize, sums: &mut [i64]);
+
+    /// CV regressor column sums over one reduction-parity partition:
+    /// `sums[j] += Σ_{kk = start, start+step, …} xvar_pol(family, pol,
+    /// a[kk,j], m)`. Uniform layers pass `(0, 1)`; paired layers `(0, 2)`
+    /// and `(1, 2)`.
+    #[allow(clippy::too_many_arguments)]
+    fn col_sum_x(
+        &self,
+        family: Family,
+        pol: Polarity,
+        m: u32,
+        start: usize,
+        step: usize,
+        a: &[u8],
+        k: usize,
+        n: usize,
+        sums: &mut [i64],
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Scalar backend (the reference).
+
+/// The PR-1 blocked scalar kernel, moved verbatim out of `gemm.rs` — the
+/// portable reference every other backend must match bit for bit.
+#[derive(Debug)]
+pub struct ScalarKernel;
+
+impl Kernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn widen_u8(&self, src: &[u8], dst: &mut [i32]) {
+        for (dst, &src) in dst.iter_mut().zip(src) {
+            *dst = src as i32;
+        }
+    }
+
+    fn mask_low(&self, pol: Polarity, m: u32, src: &[u8], dst: &mut [i32]) {
+        let mask = ((1u32 << m) - 1) as u8;
+        match pol {
+            Polarity::Neg => {
+                for (dst, &src) in dst.iter_mut().zip(src) {
+                    *dst = (src & mask) as i32;
+                }
+            }
+            Polarity::Pos => {
+                for (dst, &src) in dst.iter_mut().zip(src) {
+                    *dst = comp_low(src as i32, m);
+                }
+            }
+        }
+    }
+
+    fn bit_plane(&self, bit: u32, src: &[u8], dst: &mut [i32]) {
+        for (dst, &src) in dst.iter_mut().zip(src) {
+            *dst = ((src >> bit) & 1) as i32;
+        }
+    }
+
+    fn gemm_chunk(
+        &self,
+        w: &[u8],
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        sign: i32,
+        out: &mut [i32],
+    ) {
+        scalar_gemm_chunk(w, a, rows, k, n, sign, out);
+    }
+
+    fn merge_shifted(&self, sign: i32, shift: u32, t: &[i32], out: &mut [i32]) {
+        for (o, &t) in out.iter_mut().zip(t) {
+            *o += sign * (t << shift);
+        }
+    }
+
+    fn col_sum_a(&self, a: &[u8], k: usize, n: usize, sums: &mut [i64]) {
+        for kk in 0..k {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (sa, &av) in sums.iter_mut().zip(arow) {
+                *sa += av as i64;
+            }
+        }
+    }
+
+    fn col_sum_x(
+        &self,
+        family: Family,
+        pol: Polarity,
+        m: u32,
+        start: usize,
+        step: usize,
+        a: &[u8],
+        k: usize,
+        n: usize,
+        sums: &mut [i64],
+    ) {
+        for kk in (start..k).step_by(step) {
+            let arow = &a[kk * n..(kk + 1) * n];
+            for (sx, &av) in sums.iter_mut().zip(arow) {
+                *sx += xvar_pol(family, pol, av, m) as i64;
+            }
+        }
+    }
+}
+
+/// Cache-blocked scalar GEMM chunk (`w` rows correspond 1:1 to `out` rows;
+/// the caller offsets both). 4-row register blocking: one pass over an
+/// activation block feeds 4 output rows, cutting A-panel traffic 4×; N/K
+/// blocking keeps the hot working set (4×NC out lanes + the streamed A
+/// rows) inside L1/L2. This is the PR-1 loop nest, unchanged.
+fn scalar_gemm_chunk(
+    w: &[u8],
+    a: &[i32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    sign: i32,
+    out: &mut [i32],
+) {
+    let mut n0 = 0;
+    while n0 < n {
+        let nc = NC.min(n - n0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let mut f = 0;
+            while f + 4 <= rows {
+                let w0 = &w[f * k..(f + 1) * k];
+                let w1 = &w[(f + 1) * k..(f + 2) * k];
+                let w2 = &w[(f + 2) * k..(f + 3) * k];
+                let w3 = &w[(f + 3) * k..(f + 4) * k];
+                let (r0, rest) = out[f * n..].split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3full) = rest.split_at_mut(n);
+                let r0 = &mut r0[n0..n0 + nc];
+                let r1 = &mut r1[n0..n0 + nc];
+                let r2 = &mut r2[n0..n0 + nc];
+                let r3 = &mut r3full[n0..n0 + nc];
+                for kk in k0..k0 + kc {
+                    let v0 = sign * w0[kk] as i32;
+                    let v1 = sign * w1[kk] as i32;
+                    let v2 = sign * w2[kk] as i32;
+                    let v3 = sign * w3[kk] as i32;
+                    if (v0 | v1 | v2 | v3) == 0 {
+                        continue;
+                    }
+                    let arow = &a[kk * n + n0..kk * n + n0 + nc];
+                    for (j, &av) in arow.iter().enumerate() {
+                        r0[j] += v0 * av;
+                        r1[j] += v1 * av;
+                        r2[j] += v2 * av;
+                        r3[j] += v3 * av;
+                    }
+                }
+                f += 4;
+            }
+            while f < rows {
+                let wrow = &w[f * k..(f + 1) * k];
+                let orow = &mut out[f * n + n0..f * n + n0 + nc];
+                for kk in k0..k0 + kc {
+                    if wrow[kk] == 0 {
+                        continue;
+                    }
+                    let wv = sign * wrow[kk] as i32;
+                    let arow = &a[kk * n + n0..kk * n + n0 + nc];
+                    for (o, &av) in orow.iter_mut().zip(arow) {
+                        *o += wv * av;
+                    }
+                }
+                f += 1;
+            }
+            k0 += kc;
+        }
+        n0 += nc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form operand transforms shared by the SIMD lanes and their tails.
+
+/// Branch-free shape of [`xvar_pol`] — resolved once per GEMM call so the
+/// per-element work is a couple of and/sub/cmp lane ops.
+#[derive(Clone, Copy, Debug)]
+enum XForm {
+    /// Exact family or m = 0: the regressor is identically zero.
+    Zero,
+    /// `a & mask` (Neg perforated/recursive).
+    Low(i32),
+    /// `(2^m − (a & mask)) & mask` (Pos perforated/recursive).
+    Comp(i32, i32),
+    /// `((a & mask) != 0) as i32` (truncated, either polarity).
+    Indicator(i32),
+}
+
+fn xform_for(family: Family, pol: Polarity, m: u32) -> XForm {
+    if family == Family::Exact || m == 0 {
+        return XForm::Zero;
+    }
+    let mask = (1i32 << m) - 1;
+    match (family, pol) {
+        (Family::Truncated, _) => XForm::Indicator(mask),
+        (_, Polarity::Neg) => XForm::Low(mask),
+        (_, Polarity::Pos) => XForm::Comp(1i32 << m, mask),
+    }
+}
+
+fn xform_eval(xf: XForm, a: u8) -> i32 {
+    let a = a as i32;
+    match xf {
+        XForm::Zero => 0,
+        XForm::Low(mask) => a & mask,
+        XForm::Comp(pow, mask) => (pow - (a & mask)) & mask,
+        XForm::Indicator(mask) => ((a & mask) != 0) as i32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD backend.
+
+/// SIMD kernel: AVX2 lanes when the cpu reports them (cpuid probed once at
+/// construction), the portable chunked-i32 path otherwise. Either way the
+/// per-element terms equal the scalar kernel's, so outputs are
+/// bit-identical (see the module docs for the argument; the differential
+/// harness for the proof-by-test).
+#[derive(Debug)]
+pub struct SimdKernel {
+    avx2: bool,
+}
+
+impl SimdKernel {
+    fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        let avx2 = is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let avx2 = false;
+        SimdKernel { avx2 }
+    }
+
+    /// True when the AVX2 lanes are live (false = portable chunked path).
+    pub fn is_accelerated(&self) -> bool {
+        self.avx2
+    }
+}
+
+impl Kernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn widen_u8(&self, src: &[u8], dst: &mut [i32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::widen_u8(src, dst) };
+            return;
+        }
+        portable::widen_u8(src, dst);
+    }
+
+    fn mask_low(&self, pol: Polarity, m: u32, src: &[u8], dst: &mut [i32]) {
+        // mask_low is xform Low/Comp applied over the full operand range.
+        let xf = match pol {
+            Polarity::Neg => XForm::Low((1i32 << m) - 1),
+            Polarity::Pos => XForm::Comp(1i32 << m, (1i32 << m) - 1),
+        };
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::transform(xf, src, dst) };
+            return;
+        }
+        portable::transform(xf, src, dst);
+    }
+
+    fn bit_plane(&self, bit: u32, src: &[u8], dst: &mut [i32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::bit_plane(bit, src, dst) };
+            return;
+        }
+        portable::bit_plane(bit, src, dst);
+    }
+
+    fn gemm_chunk(
+        &self,
+        w: &[u8],
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        sign: i32,
+        out: &mut [i32],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::gemm_chunk(w, a, rows, k, n, sign, out) };
+            return;
+        }
+        portable::gemm_chunk(w, a, rows, k, n, sign, out);
+    }
+
+    fn merge_shifted(&self, sign: i32, shift: u32, t: &[i32], out: &mut [i32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::merge_shifted(sign, shift, t, out) };
+            return;
+        }
+        portable::merge_shifted(sign, shift, t, out);
+    }
+
+    fn col_sum_a(&self, a: &[u8], k: usize, n: usize, sums: &mut [i64]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::col_sum_a(a, k, n, sums) };
+            return;
+        }
+        portable::col_sum_a(a, k, n, sums);
+    }
+
+    fn col_sum_x(
+        &self,
+        family: Family,
+        pol: Polarity,
+        m: u32,
+        start: usize,
+        step: usize,
+        a: &[u8],
+        k: usize,
+        n: usize,
+        sums: &mut [i64],
+    ) {
+        let xf = xform_for(family, pol, m);
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            unsafe { avx2::col_sum_x(xf, start, step, a, k, n, sums) };
+            return;
+        }
+        portable::col_sum_x(xf, start, step, a, k, n, sums);
+    }
+}
+
+/// Portable chunked-i32 lanes: fixed 8-wide column blocks over local
+/// arrays — the shape LLVM keeps autovectorized on targets without the
+/// AVX2 path. Per-element terms and per-element add order match the
+/// scalar kernel exactly.
+mod portable {
+    use super::{xform_eval, XForm};
+    use crate::nn::gemm::{KC, NC};
+
+    const LANES: usize = 8;
+
+    pub fn widen_u8(src: &[u8], dst: &mut [i32]) {
+        for (d, s) in dst.chunks_exact_mut(LANES).zip(src.chunks_exact(LANES)) {
+            for i in 0..LANES {
+                d[i] = s[i] as i32;
+            }
+        }
+        let done = (src.len() / LANES) * LANES;
+        for (d, &s) in dst[done..].iter_mut().zip(&src[done..]) {
+            *d = s as i32;
+        }
+    }
+
+    pub fn transform(xf: XForm, src: &[u8], dst: &mut [i32]) {
+        for (d, s) in dst.chunks_exact_mut(LANES).zip(src.chunks_exact(LANES)) {
+            for i in 0..LANES {
+                d[i] = xform_eval(xf, s[i]);
+            }
+        }
+        let done = (src.len() / LANES) * LANES;
+        for (d, &s) in dst[done..].iter_mut().zip(&src[done..]) {
+            *d = xform_eval(xf, s);
+        }
+    }
+
+    pub fn bit_plane(bit: u32, src: &[u8], dst: &mut [i32]) {
+        for (d, s) in dst.chunks_exact_mut(LANES).zip(src.chunks_exact(LANES)) {
+            for i in 0..LANES {
+                d[i] = ((s[i] >> bit) & 1) as i32;
+            }
+        }
+        let done = (src.len() / LANES) * LANES;
+        for (d, &s) in dst[done..].iter_mut().zip(&src[done..]) {
+            *d = ((s >> bit) & 1) as i32;
+        }
+    }
+
+    pub fn gemm_chunk(
+        w: &[u8],
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        sign: i32,
+        out: &mut [i32],
+    ) {
+        // Same NC/KC tile walk as the scalar core, j-blocked: 8 column
+        // accumulators live in a local array across the kk loop, so every
+        // output element still sums ascending kk within each tile.
+        let mut n0 = 0;
+        while n0 < n {
+            let nc = NC.min(n - n0);
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                for f in 0..rows {
+                    let wrow = &w[f * k..(f + 1) * k];
+                    let mut j = 0;
+                    while j + LANES <= nc {
+                        let p = n0 + j;
+                        let mut acc = [0i32; LANES];
+                        acc.copy_from_slice(&out[f * n + p..f * n + p + LANES]);
+                        for kk in k0..k0 + kc {
+                            let wv = wrow[kk];
+                            if wv == 0 {
+                                continue;
+                            }
+                            let v = sign * wv as i32;
+                            let arow = &a[kk * n + p..kk * n + p + LANES];
+                            for i in 0..LANES {
+                                acc[i] += v * arow[i];
+                            }
+                        }
+                        out[f * n + p..f * n + p + LANES].copy_from_slice(&acc);
+                        j += LANES;
+                    }
+                    while j < nc {
+                        let p = n0 + j;
+                        let mut acc = out[f * n + p];
+                        for kk in k0..k0 + kc {
+                            let wv = wrow[kk];
+                            if wv == 0 {
+                                continue;
+                            }
+                            acc += sign * wv as i32 * a[kk * n + p];
+                        }
+                        out[f * n + p] = acc;
+                        j += 1;
+                    }
+                }
+                k0 += kc;
+            }
+            n0 += nc;
+        }
+    }
+
+    pub fn merge_shifted(sign: i32, shift: u32, t: &[i32], out: &mut [i32]) {
+        for (o, s) in out.chunks_exact_mut(LANES).zip(t.chunks_exact(LANES)) {
+            for i in 0..LANES {
+                o[i] += sign * (s[i] << shift);
+            }
+        }
+        let done = (t.len() / LANES) * LANES;
+        for (o, &s) in out[done..].iter_mut().zip(&t[done..]) {
+            *o += sign * (s << shift);
+        }
+    }
+
+    pub fn col_sum_a(a: &[u8], k: usize, n: usize, sums: &mut [i64]) {
+        // i32 partials per column block: K ≤ 33 000 (asserted by the core
+        // that runs first in every GEMM call) keeps Σ ≤ K·255 < 2^31.
+        let mut j = 0;
+        while j + LANES <= n {
+            let mut acc = [0i32; LANES];
+            for kk in 0..k {
+                let arow = &a[kk * n + j..kk * n + j + LANES];
+                for i in 0..LANES {
+                    acc[i] += arow[i] as i32;
+                }
+            }
+            for i in 0..LANES {
+                sums[j + i] += acc[i] as i64;
+            }
+            j += LANES;
+        }
+        while j < n {
+            let mut s = 0i64;
+            for kk in 0..k {
+                s += a[kk * n + j] as i64;
+            }
+            sums[j] += s;
+            j += 1;
+        }
+    }
+
+    pub fn col_sum_x(
+        xf: XForm,
+        start: usize,
+        step: usize,
+        a: &[u8],
+        k: usize,
+        n: usize,
+        sums: &mut [i64],
+    ) {
+        // i32 partials: xvar ≤ 2^m − 1 ≤ 127, so K ≤ 33 000 keeps the
+        // block sums far inside i32 (same envelope as col_sum_a).
+        let mut j = 0;
+        while j + LANES <= n {
+            let mut acc = [0i32; LANES];
+            let mut kk = start;
+            while kk < k {
+                let arow = &a[kk * n + j..kk * n + j + LANES];
+                for i in 0..LANES {
+                    acc[i] += xform_eval(xf, arow[i]);
+                }
+                kk += step;
+            }
+            for i in 0..LANES {
+                sums[j + i] += acc[i] as i64;
+            }
+            j += LANES;
+        }
+        while j < n {
+            let mut s = 0i64;
+            let mut kk = start;
+            while kk < k {
+                s += xform_eval(xf, a[kk * n + j]) as i64;
+                kk += step;
+            }
+            sums[j] += s;
+            j += 1;
+        }
+    }
+}
+
+/// AVX2 lanes. Every fn is `#[target_feature(enable = "avx2")]` and only
+/// reachable through `SimdKernel` after its constructor observed a true
+/// `is_x86_feature_detected!("avx2")`; all vector memory ops are unaligned
+/// intrinsics over in-bounds slice ranges (8-lane main loops, scalar
+/// tails).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{xform_eval, XForm};
+    use crate::nn::gemm::{KC, NC};
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn loadu(s: &[i32], at: usize) -> __m256i {
+        debug_assert!(at + 8 <= s.len());
+        _mm256_loadu_si256(s.as_ptr().add(at) as *const __m256i)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn storeu(s: &mut [i32], at: usize, v: __m256i) {
+        debug_assert!(at + 8 <= s.len());
+        _mm256_storeu_si256(s.as_mut_ptr().add(at) as *mut __m256i, v)
+    }
+
+    /// 8 consecutive u8s widened to one i32×8 lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen8(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn apply(xf: XForm, v: __m256i) -> __m256i {
+        match xf {
+            XForm::Zero => _mm256_setzero_si256(),
+            XForm::Low(mask) => _mm256_and_si256(v, _mm256_set1_epi32(mask)),
+            XForm::Comp(pow, mask) => {
+                let m = _mm256_set1_epi32(mask);
+                let low = _mm256_and_si256(v, m);
+                _mm256_and_si256(_mm256_sub_epi32(_mm256_set1_epi32(pow), low), m)
+            }
+            XForm::Indicator(mask) => {
+                let low = _mm256_and_si256(v, _mm256_set1_epi32(mask));
+                let eq0 = _mm256_cmpeq_epi32(low, _mm256_setzero_si256());
+                _mm256_andnot_si256(eq0, _mm256_set1_epi32(1))
+            }
+        }
+    }
+
+    /// i32×8 partial sums widened and added into 8 consecutive i64 slots.
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_i32x8_to_i64(sums: &mut [i64], at: usize, v: __m256i) {
+        debug_assert!(at + 8 <= sums.len());
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(v));
+        let p = sums.as_mut_ptr().add(at) as *mut __m256i;
+        let s0 = _mm256_loadu_si256(p as *const __m256i);
+        let s1 = _mm256_loadu_si256(p.add(1) as *const __m256i);
+        _mm256_storeu_si256(p, _mm256_add_epi64(s0, lo));
+        _mm256_storeu_si256(p.add(1), _mm256_add_epi64(s1, hi));
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn widen_u8(src: &[u8], dst: &mut [i32]) {
+        let len = src.len();
+        let mut i = 0;
+        while i + 8 <= len {
+            storeu(dst, i, widen8(src.as_ptr().add(i)));
+            i += 8;
+        }
+        while i < len {
+            dst[i] = src[i] as i32;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn transform(xf: XForm, src: &[u8], dst: &mut [i32]) {
+        let len = src.len();
+        let mut i = 0;
+        while i + 8 <= len {
+            storeu(dst, i, apply(xf, widen8(src.as_ptr().add(i))));
+            i += 8;
+        }
+        while i < len {
+            dst[i] = xform_eval(xf, src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bit_plane(bit: u32, src: &[u8], dst: &mut [i32]) {
+        let cnt = _mm_cvtsi32_si128(bit as i32);
+        let one = _mm256_set1_epi32(1);
+        let len = src.len();
+        let mut i = 0;
+        while i + 8 <= len {
+            let v = widen8(src.as_ptr().add(i));
+            storeu(dst, i, _mm256_and_si256(_mm256_srl_epi32(v, cnt), one));
+            i += 8;
+        }
+        while i < len {
+            dst[i] = ((src[i] >> bit) & 1) as i32;
+            i += 1;
+        }
+    }
+
+    /// Blocked GEMM chunk: the scalar core's NC/KC tile walk with 8-lane
+    /// column blocks and 4-row register accumulators. Per output element
+    /// the additions run in the same ascending-kk order per tile as the
+    /// scalar kernel; `_mm256_mullo_epi32` is wrapping i32 multiply, the
+    /// same operation the release-mode scalar core performs.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_chunk(
+        w: &[u8],
+        a: &[i32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        sign: i32,
+        out: &mut [i32],
+    ) {
+        let mut n0 = 0;
+        while n0 < n {
+            let nc = NC.min(n - n0);
+            let mut k0 = 0;
+            while k0 < k {
+                let kc = KC.min(k - k0);
+                let mut f = 0;
+                while f + 4 <= rows {
+                    let mut j = 0;
+                    while j + 8 <= nc {
+                        let p = n0 + j;
+                        let mut acc0 = loadu(out, f * n + p);
+                        let mut acc1 = loadu(out, (f + 1) * n + p);
+                        let mut acc2 = loadu(out, (f + 2) * n + p);
+                        let mut acc3 = loadu(out, (f + 3) * n + p);
+                        for kk in k0..k0 + kc {
+                            let w0 = w[f * k + kk];
+                            let w1 = w[(f + 1) * k + kk];
+                            let w2 = w[(f + 2) * k + kk];
+                            let w3 = w[(f + 3) * k + kk];
+                            if (w0 | w1 | w2 | w3) == 0 {
+                                continue;
+                            }
+                            let av = loadu(a, kk * n + p);
+                            if w0 != 0 {
+                                let v = _mm256_set1_epi32(sign * w0 as i32);
+                                acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(v, av));
+                            }
+                            if w1 != 0 {
+                                let v = _mm256_set1_epi32(sign * w1 as i32);
+                                acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(v, av));
+                            }
+                            if w2 != 0 {
+                                let v = _mm256_set1_epi32(sign * w2 as i32);
+                                acc2 = _mm256_add_epi32(acc2, _mm256_mullo_epi32(v, av));
+                            }
+                            if w3 != 0 {
+                                let v = _mm256_set1_epi32(sign * w3 as i32);
+                                acc3 = _mm256_add_epi32(acc3, _mm256_mullo_epi32(v, av));
+                            }
+                        }
+                        storeu(out, f * n + p, acc0);
+                        storeu(out, (f + 1) * n + p, acc1);
+                        storeu(out, (f + 2) * n + p, acc2);
+                        storeu(out, (f + 3) * n + p, acc3);
+                        j += 8;
+                    }
+                    while j < nc {
+                        let p = n0 + j;
+                        for fr in f..f + 4 {
+                            let mut acc = out[fr * n + p];
+                            for kk in k0..k0 + kc {
+                                let wv = w[fr * k + kk];
+                                if wv == 0 {
+                                    continue;
+                                }
+                                acc += sign * wv as i32 * a[kk * n + p];
+                            }
+                            out[fr * n + p] = acc;
+                        }
+                        j += 1;
+                    }
+                    f += 4;
+                }
+                while f < rows {
+                    let mut j = 0;
+                    while j + 8 <= nc {
+                        let p = n0 + j;
+                        let mut acc = loadu(out, f * n + p);
+                        for kk in k0..k0 + kc {
+                            let wv = w[f * k + kk];
+                            if wv == 0 {
+                                continue;
+                            }
+                            let v = _mm256_set1_epi32(sign * wv as i32);
+                            let av = loadu(a, kk * n + p);
+                            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(v, av));
+                        }
+                        storeu(out, f * n + p, acc);
+                        j += 8;
+                    }
+                    while j < nc {
+                        let p = n0 + j;
+                        let mut acc = out[f * n + p];
+                        for kk in k0..k0 + kc {
+                            let wv = w[f * k + kk];
+                            if wv == 0 {
+                                continue;
+                            }
+                            acc += sign * wv as i32 * a[kk * n + p];
+                        }
+                        out[f * n + p] = acc;
+                        j += 1;
+                    }
+                    f += 1;
+                }
+                k0 += kc;
+            }
+            n0 += nc;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn merge_shifted(sign: i32, shift: u32, t: &[i32], out: &mut [i32]) {
+        let cnt = _mm_cvtsi32_si128(shift as i32);
+        let len = t.len();
+        let mut i = 0;
+        if sign >= 0 {
+            while i + 8 <= len {
+                let v = _mm256_sll_epi32(loadu(t, i), cnt);
+                storeu(out, i, _mm256_add_epi32(loadu(out, i), v));
+                i += 8;
+            }
+        } else {
+            while i + 8 <= len {
+                let v = _mm256_sll_epi32(loadu(t, i), cnt);
+                storeu(out, i, _mm256_sub_epi32(loadu(out, i), v));
+                i += 8;
+            }
+        }
+        while i < len {
+            out[i] += sign * (t[i] << shift);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn col_sum_a(a: &[u8], k: usize, n: usize, sums: &mut [i64]) {
+        // i32 block partials (K ≤ 33 000 · 255 < 2^31, see the core
+        // assert), widened to i64 once per column block.
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_setzero_si256();
+            for kk in 0..k {
+                acc = _mm256_add_epi32(acc, widen8(a.as_ptr().add(kk * n + j)));
+            }
+            add_i32x8_to_i64(sums, j, acc);
+            j += 8;
+        }
+        while j < n {
+            let mut s = 0i64;
+            for kk in 0..k {
+                s += a[kk * n + j] as i64;
+            }
+            sums[j] += s;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn col_sum_x(
+        xf: XForm,
+        start: usize,
+        step: usize,
+        a: &[u8],
+        k: usize,
+        n: usize,
+        sums: &mut [i64],
+    ) {
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_setzero_si256();
+            let mut kk = start;
+            while kk < k {
+                acc = _mm256_add_epi32(acc, apply(xf, widen8(a.as_ptr().add(kk * n + j))));
+                kk += step;
+            }
+            add_i32x8_to_i64(sums, j, acc);
+            j += 8;
+        }
+        while j < n {
+            let mut s = 0i64;
+            let mut kk = start;
+            while kk < k {
+                s += xform_eval(xf, a[kk * n + j]) as i64;
+                kk += step;
+            }
+            sums[j] += s;
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection.
+
+static SCALAR: ScalarKernel = ScalarKernel;
+static SIMD: OnceLock<SimdKernel> = OnceLock::new();
+static ACTIVE: OnceLock<&'static dyn Kernel> = OnceLock::new();
+
+/// The portable scalar reference kernel.
+pub fn scalar() -> &'static dyn Kernel {
+    &SCALAR
+}
+
+/// The SIMD kernel (AVX2 lanes when the cpu has them, portable chunked
+/// lanes otherwise — cpuid probed once per process).
+pub fn simd() -> &'static dyn Kernel {
+    SIMD.get_or_init(SimdKernel::detect)
+}
+
+/// True when the SIMD kernel runs real AVX2 lanes on this host — what
+/// benches and CI use to annotate speedup rows honestly.
+pub fn simd_is_accelerated() -> bool {
+    SIMD.get_or_init(SimdKernel::detect).is_accelerated()
+}
+
+/// Resolve a backend by name: `scalar` / `simd` pin that backend
+/// (`simd` is valid on every host — without AVX2 it runs its portable
+/// chunked lanes); `auto` and anything unrecognized pick simd exactly
+/// when its AVX2 lanes are live, else the scalar fallback.
+pub fn select(name: &str) -> &'static dyn Kernel {
+    match name {
+        "scalar" => scalar(),
+        "simd" => simd(),
+        _ => {
+            if simd_is_accelerated() {
+                simd()
+            } else {
+                scalar()
+            }
+        }
+    }
+}
+
+/// The process-wide kernel: `CVAPPROX_KERNEL` (`auto` / `scalar` / `simd`)
+/// resolved once on first use. Engines capture this at construction; the
+/// transient gemm wrappers route through it on every call.
+pub fn active() -> &'static dyn Kernel {
+    *ACTIVE.get_or_init(|| match std::env::var("CVAPPROX_KERNEL") {
+        Ok(v) => select(v.trim()),
+        Err(_) => select("auto"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every backend worth pinning against the scalar reference: the
+    /// detected SIMD kernel plus a forced-portable one, so the chunked
+    /// path is exercised even on AVX2 hosts (and vice versa the AVX2 path
+    /// wherever CI has it).
+    fn simd_variants() -> Vec<(&'static str, SimdKernel)> {
+        vec![
+            ("simd-detected", SimdKernel::detect()),
+            ("simd-portable", SimdKernel { avx2: false }),
+        ]
+    }
+
+    #[test]
+    fn xform_matches_xvar_pol_exhaustively() {
+        for family in Family::ALL {
+            for pol in Polarity::ALL {
+                for m in 0..=7u32 {
+                    let xf = xform_for(family, pol, m);
+                    for a in 0..=255u8 {
+                        assert_eq!(
+                            xform_eval(xf, a),
+                            xvar_pol(family, pol, a, m),
+                            "{} {} m={m} a={a}",
+                            family.name(),
+                            pol.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_match_scalar_on_ragged_lengths() {
+        let mut rng = Rng::new(0x51D0);
+        let sk = ScalarKernel;
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let src: Vec<u8> = (0..len).map(|_| rng.u8()).collect();
+            for (name, kr) in simd_variants() {
+                let mut want = vec![0i32; len];
+                let mut got = vec![0i32; len];
+                sk.widen_u8(&src, &mut want);
+                kr.widen_u8(&src, &mut got);
+                assert_eq!(got, want, "{name} widen len={len}");
+                for m in 1..=7u32 {
+                    for pol in Polarity::ALL {
+                        sk.mask_low(pol, m, &src, &mut want);
+                        kr.mask_low(pol, m, &src, &mut got);
+                        assert_eq!(got, want, "{name} mask_low m={m} len={len}");
+                    }
+                    let bit = m - 1;
+                    sk.bit_plane(bit, &src, &mut want);
+                    kr.bit_plane(bit, &src, &mut got);
+                    assert_eq!(got, want, "{name} bit_plane bit={bit} len={len}");
+                }
+                let t: Vec<i32> = (0..len).map(|_| rng.range_i64(-9000, 9000) as i32).collect();
+                let mut wo: Vec<i32> = (0..len).map(|_| rng.range_i64(-500, 500) as i32).collect();
+                let mut go = wo.clone();
+                for (sign, shift) in [(1i32, 0u32), (-1, 3), (1, 6), (-1, 7)] {
+                    sk.merge_shifted(sign, shift, &t, &mut wo);
+                    kr.merge_shifted(sign, shift, &t, &mut go);
+                    assert_eq!(go, wo, "{name} merge sign={sign} shift={shift} len={len}");
+                }
+                let mut wacc = vec![0i64; len];
+                let mut gacc = vec![0i64; len];
+                sk.widen_acc(&t, &mut wacc);
+                kr.widen_acc(&t, &mut gacc);
+                assert_eq!(gacc, wacc, "{name} widen_acc len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_sums_match_scalar_over_parities_and_tails() {
+        let mut rng = Rng::new(0x51D1);
+        let sk = ScalarKernel;
+        for (k, n) in [(1usize, 1usize), (5, 7), (8, 8), (9, 17), (31, 24), (64, 33)] {
+            let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+            for (name, kr) in simd_variants() {
+                let mut want = vec![0i64; n];
+                let mut got = vec![0i64; n];
+                sk.col_sum_a(&a, k, n, &mut want);
+                kr.col_sum_a(&a, k, n, &mut got);
+                assert_eq!(got, want, "{name} col_sum_a {k}x{n}");
+                for family in Family::ALL {
+                    for pol in Polarity::ALL {
+                        let m = if family == Family::Exact { 0 } else { 1 + rng.below(7) as u32 };
+                        for (start, step) in [(0usize, 1usize), (0, 2), (1, 2)] {
+                            want.fill(0);
+                            got.fill(0);
+                            sk.col_sum_x(family, pol, m, start, step, &a, k, n, &mut want);
+                            kr.col_sum_x(family, pol, m, start, step, &a, k, n, &mut got);
+                            assert_eq!(
+                                got, want,
+                                "{name} col_sum_x {} {} m={m} {start}+{step} {k}x{n}",
+                                family.name(),
+                                pol.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_chunk_matches_scalar_over_lane_tails() {
+        // Shapes straddling the 8-lane and 4-row block edges, both signs,
+        // with zero-heavy weights so the skip paths are exercised.
+        let mut rng = Rng::new(0x51D2);
+        let sk = ScalarKernel;
+        for (rows, k, n) in
+            [(1usize, 1usize, 1usize), (3, 7, 5), (4, 8, 8), (5, 9, 9), (7, 17, 23), (12, 33, 40)]
+        {
+            let w: Vec<u8> =
+                (0..rows * k).map(|_| if rng.below(3) == 0 { 0 } else { rng.u8() }).collect();
+            let a: Vec<i32> = (0..k * n).map(|_| rng.range_i64(-128, 255) as i32).collect();
+            let init: Vec<i32> = (0..rows * n).map(|_| rng.range_i64(-99, 99) as i32).collect();
+            for sign in [1i32, -1] {
+                let mut want = init.clone();
+                sk.gemm_chunk(&w, &a, rows, k, n, sign, &mut want);
+                for (name, kr) in simd_variants() {
+                    let mut got = init.clone();
+                    kr.gemm_chunk(&w, &a, rows, k, n, sign, &mut got);
+                    assert_eq!(got, want, "{name} gemm_chunk {rows}x{k}x{n} sign={sign}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selection_pins_names_and_auto_follows_cpuid() {
+        assert_eq!(select("scalar").name(), "scalar");
+        assert_eq!(select("simd").name(), "simd");
+        let auto = select("auto");
+        if simd_is_accelerated() {
+            assert_eq!(auto.name(), "simd");
+        } else {
+            assert_eq!(auto.name(), "scalar");
+        }
+        // Unrecognized values degrade to auto, never to a panic.
+        assert_eq!(select("???").name(), auto.name());
+        // The process-wide choice is one of the two real backends.
+        assert!(matches!(active().name(), "scalar" | "simd"));
+    }
+}

@@ -8,6 +8,7 @@
 //! * [`graph`] — the node IR (shared with python's nets.py) + model struct
 //! * [`loader`] — .cvm binary parser/writer
 //! * [`gemm`] — the approximate GEMM engines (identity / LUT / systolic)
+//! * [`kernel`] — pluggable compute backends (scalar reference / SIMD)
 //! * [`plan`] — precomputed layer plans + the reusable scratch arena
 //! * [`policy`] — per-layer heterogeneous approximation policies
 //! * [`engine`] — the graph executor
@@ -15,6 +16,7 @@
 pub mod engine;
 pub mod gemm;
 pub mod graph;
+pub mod kernel;
 pub mod loader;
 pub mod plan;
 pub mod policy;
@@ -24,6 +26,7 @@ pub(crate) mod testutil;
 pub use engine::{CvProxySampler, CvProxyWindow, Engine, ForwardOpts, IntegrityReport};
 pub use gemm::GemmKind;
 pub use graph::{Model, Node, Op, Tensor};
+pub use kernel::Kernel;
 pub use plan::{LayerPlan, PairedPlan, PlanKey, Scratch};
 pub use policy::{
     LayerAssignment, LayerPoint, LayerPolicy, PairedPoint, PolicySwitch, SharedPolicy,

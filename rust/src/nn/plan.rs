@@ -16,6 +16,16 @@
 //! `Σa`/`Σx`, accumulators), so a steady-state `Engine::forward` performs
 //! no weight-side recomputation and no per-GEMM heap allocation once the
 //! buffers have grown to the largest layer.
+//!
+//! Plans and scratch are **kernel-backend neutral** (see
+//! [`crate::nn::kernel`]): panels and buffers are plain contiguous
+//! row-major slices with no alignment or padding contract, so the scalar
+//! reference and the SIMD backend consume the same plan bit-for-bit —
+//! the backend choice (`CVAPPROX_KERNEL`) changes how a panel is
+//! traversed, never what is stored in it. Oversized reduction depths are
+//! rejected before any plan is built
+//! ([`crate::nn::gemm::max_k_for_point`]), so a cached plan always
+//! describes a layer every backend can accumulate in i32.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

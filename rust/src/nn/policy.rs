@@ -296,6 +296,17 @@ impl LayerAssignment {
         }
     }
 
+    /// The i32-headroom ceiling on the reduction depth K of a layer running
+    /// this assignment: the tightest [`super::gemm::max_k_for_point`] over
+    /// the constituents (a pairing is as constrained as its tighter half —
+    /// both halves accumulate over the full-K panel layout).
+    pub fn max_k(self) -> usize {
+        self.constituents()
+            .map(|p| super::gemm::max_k_for_point(p.normalized()))
+            .min()
+            .expect("an assignment has at least one constituent")
+    }
+
     /// The constituent points (one for a plain layer, two for a pairing) —
     /// what LUT preparation and power labeling iterate over.
     pub fn constituents(self) -> impl Iterator<Item = LayerPoint> {
@@ -458,7 +469,12 @@ impl LayerPolicy {
             .count()
     }
 
-    /// Check this policy against a concrete model: one entry per MAC layer.
+    /// Check this policy against a concrete model: one entry per MAC layer,
+    /// and every layer's reduction depth K inside the i32-headroom ceiling
+    /// of its assignment ([`LayerAssignment::max_k`]). Rejecting oversized
+    /// K here — at engine entry, plan prewarm and policy install — is what
+    /// keeps the accumulation asserts in `nn/gemm.rs` unreachable backstops
+    /// instead of mid-batch panics inside a serving worker.
     pub fn validate_for(&self, model: &Model) -> Result<()> {
         let want = model.mac_layers();
         if self.layers.len() != want {
@@ -468,6 +484,19 @@ impl LayerPolicy {
                 model.name,
                 want
             );
+        }
+        for (i, (assignment, k)) in
+            self.assignments().zip(model.mac_layer_kdims()).enumerate()
+        {
+            let cap = assignment.max_k();
+            if k > cap {
+                bail!(
+                    "MAC layer {i} has K = {k}, above the i32-headroom \
+                     ceiling {cap} of {} — run this layer exact or at \
+                     negative polarity",
+                    assignment.describe()
+                );
+            }
         }
         Ok(())
     }

@@ -64,6 +64,36 @@ pub fn nan_logit_model() -> Model {
     m
 }
 
+/// input(1,1,k) → dense(2): one MAC layer with reduction depth `k`.
+/// The K-headroom regression tests (engine + service) size `k` just past
+/// [`crate::nn::gemm::MAX_K_POS`] / [`crate::nn::gemm::MAX_K_NEG`] to
+/// assert oversized layers are typed errors, not worker panics.
+pub fn big_k_model(k: usize) -> Model {
+    let input = Node { out_shape: (1, 1, k), ..Node::default() };
+    let dense = Node {
+        op: Op::Dense,
+        inputs: vec![0],
+        out_shape: (1, 1, 2),
+        out_scale: 1.0e9,
+        out_zp: 128,
+        cout: 2,
+        weights: Some(Weights {
+            w_q: vec![1u8; 2 * k],
+            k_dim: k,
+            b_q: vec![0; 2],
+            s_w: 1.0,
+            zp_w: 0,
+        }),
+        ..Node::default()
+    };
+    Model { name: "bigk".into(), n_classes: 2, nodes: vec![input, dense] }
+}
+
+/// All-ones image matching [`big_k_model`]'s input shape.
+pub fn big_k_image(k: usize) -> Tensor {
+    Tensor::from_data(1, 1, k, vec![1u8; k])
+}
+
 /// Deterministic random image matching [`tiny_model`]'s input shape.
 pub fn tiny_image(seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);

@@ -4,7 +4,20 @@
 //! hit, reporting median/mean/p95 per-iteration times. Used by the
 //! `benches/*.rs` targets (`harness = false`) and the CLI perf commands.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Repo-root path for a `BENCH_*.json` artifact.
+///
+/// The bench targets belong to the `cvapprox` package, so cargo runs them
+/// with `rust/` as the working directory — a bare relative write lands the
+/// JSON next to `Cargo.toml` instead of the repo root where the
+/// perf-trajectory tooling (and `scripts/verify.sh`'s existence checks)
+/// look. Anchoring on `CARGO_MANIFEST_DIR/..` is deterministic regardless
+/// of invocation directory.
+pub fn artifact_path(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/..")).join(name)
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -139,6 +152,15 @@ mod tests {
         assert!(r.samples > 0);
         assert!(r.median_ns >= 0.0);
         assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn artifact_path_is_the_repo_root() {
+        let p = artifact_path("BENCH_probe.json");
+        assert_eq!(p.file_name().unwrap(), "BENCH_probe.json");
+        // The repo root is the directory holding the crate (`rust/`).
+        let root = p.parent().unwrap();
+        assert!(root.join("rust/Cargo.toml").exists(), "{root:?}");
     }
 
     #[test]

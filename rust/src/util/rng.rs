@@ -39,8 +39,16 @@ impl Rng {
     }
 
     /// Uniform in [0, n) without modulo bias (Lemire's method).
+    ///
+    /// Contract: `below(0)` returns 0 — an empty range is "no choice", not
+    /// UB. The guard is unconditional because release builds used to reach
+    /// `0u64.wrapping_neg() % 0` (a divide-by-zero panic) on the rejection
+    /// path; a `debug_assert!` alone would make the behaviour differ by
+    /// profile.
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        if n == 0 {
+            return 0;
+        }
         let mut x = self.next_u64();
         let mut m = (x as u128) * (n as u128);
         let mut l = m as u64;
@@ -114,6 +122,22 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_zero_is_zero_in_every_profile() {
+        // Runs in release too (`cargo test --release`): before the
+        // unconditional guard this divided by zero on the rejection path
+        // once debug_assert! compiled out.
+        let mut r = Rng::new(9);
+        for _ in 0..64 {
+            assert_eq!(r.below(0), 0);
+        }
+        // The stream is unperturbed: an empty range consumes no randomness.
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        a.below(0);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -21,10 +21,15 @@ use std::sync::Arc;
 use cvapprox::approx::{bitmodel, Family, MulLut, Polarity};
 use cvapprox::datasets::Dataset;
 use cvapprox::hermetic_dir;
-use cvapprox::nn::{
-    loader, Engine, ForwardOpts, LayerAssignment, LayerPoint, LayerPolicy, Model,
-    PairedPoint, Tensor,
+use cvapprox::nn::gemm::{
+    approx_gemm_planned_with_kernel, paired_gemm_planned_with_kernel, GemmCtx, GemmKind,
 };
+use cvapprox::nn::kernel;
+use cvapprox::nn::{
+    loader, Engine, ForwardOpts, Kernel, LayerAssignment, LayerPlan, LayerPoint,
+    LayerPolicy, Model, PairedPlan, PairedPoint, Scratch, Tensor,
+};
+use cvapprox::util::rng::Rng;
 
 fn hermetic() -> (Model, Dataset) {
     let root = hermetic_dir();
@@ -197,5 +202,151 @@ fn paired_assignments_agree_across_engines() {
         let (sys, stats) = e_sys.forward_systolic(&imgs[0], &opts).unwrap();
         assert_eq!(sys, identity[0], "systolic {describe}");
         assert!(stats.cycles > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-backend axis: the pluggable compute backends (`nn::kernel`) must be
+// bit-identical — scalar vs SIMD vs the LUT gather — at the planned-GEMM
+// level over shapes the engine never produces (lane tails, tiny panels), on
+// every approximate point.
+
+/// The backends × GEMM kinds of the axis: both identity-expansion kernels
+/// plus the LUT gather (whose inner loop is kernel-independent but shares
+/// the packing and ΣX/Σa epilogues under test).
+fn kernel_axis() -> [(&'static dyn Kernel, GemmKind, &'static str); 3] {
+    [
+        (kernel::scalar(), GemmKind::Identity, "scalar"),
+        (kernel::simd(), GemmKind::Identity, "simd"),
+        (kernel::scalar(), GemmKind::Lut, "lut"),
+    ]
+}
+
+#[test]
+fn kernel_backends_agree_on_random_shapes() {
+    // Shapes straddle the SIMD geometry: 8-wide lanes and 4-row register
+    // blocks, so prime / odd K and N exercise every tail path.
+    let mut rng = Rng::new(0xD1FF);
+    let shapes =
+        [(1usize, 1usize, 1usize), (3, 7, 5), (4, 16, 8), (5, 33, 17), (9, 127, 31), (12, 258, 63)];
+    for &(m_rows, k, n) in &shapes {
+        let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+        let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let bias: Vec<i32> = (0..m_rows).map(|_| rng.below(100) as i32 - 50).collect();
+        for (family, m, pol) in all_points() {
+            let ctx = GemmCtx { family, m, use_cv: true, zp_w: 9, zp_a: 101 };
+            let plan = LayerPlan::build_pol(family, m, pol, &w, m_rows, k, k);
+            let lut = MulLut::build_pol(family, m, pol);
+            let mut outs: Vec<Vec<i64>> = Vec::new();
+            for (kr, kind, _) in kernel_axis() {
+                let mut scratch = Scratch::new();
+                approx_gemm_planned_with_kernel(
+                    kr, kind, &ctx, &plan, 0, Some(&lut), &w, &a, m_rows, k, n,
+                    &bias, &mut scratch, 1,
+                );
+                outs.push(scratch.acc[..m_rows * n].to_vec());
+            }
+            let label = format!("{} m={m} {} {m_rows}x{k}x{n}", family.name(), pol.name());
+            assert_eq!(outs[0], outs[1], "simd vs scalar {label}");
+            assert_eq!(outs[0], outs[2], "lut vs scalar {label}");
+        }
+    }
+}
+
+#[test]
+fn kernel_backends_agree_on_masked_partitions_and_odd_k_pairings() {
+    let mut rng = Rng::new(0xC0DE);
+    // k_valid-masked rows: a weight panel zeroed off an even partition,
+    // with the plan's CV averages divided by the partition population —
+    // exactly the panels paired plans build internally.
+    let (m_rows, k, n) = (6usize, 51usize, 19usize);
+    let a: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+    let bias: Vec<i32> = (0..m_rows).map(|_| rng.below(100) as i32 - 50).collect();
+    let mut w_even: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+    for (i, x) in w_even.iter_mut().enumerate() {
+        if (i % k) % 2 == 1 {
+            *x = 0;
+        }
+    }
+    let k_valid = k.div_ceil(2);
+    for (family, m, pol) in all_points() {
+        let ctx = GemmCtx { family, m, use_cv: true, zp_w: 0, zp_a: 101 };
+        let plan = LayerPlan::build_pol(family, m, pol, &w_even, m_rows, k, k_valid);
+        let lut = MulLut::build_pol(family, m, pol);
+        let mut outs: Vec<Vec<i64>> = Vec::new();
+        for (kr, kind, _) in kernel_axis() {
+            let mut scratch = Scratch::new();
+            approx_gemm_planned_with_kernel(
+                kr, kind, &ctx, &plan, 0, Some(&lut), &w_even, &a, m_rows, k, n,
+                &bias, &mut scratch, 1,
+            );
+            outs.push(scratch.acc[..m_rows * n].to_vec());
+        }
+        let label = format!("masked {} m={m} {}", family.name(), pol.name());
+        assert_eq!(outs[0], outs[1], "simd vs scalar {label}");
+        assert_eq!(outs[0], outs[2], "lut vs scalar {label}");
+    }
+    // Odd-k paired parity: the even partition owns one more reduction index
+    // than the odd, on both kernels, through identity and LUT kinds.
+    let w: Vec<u8> = (0..m_rows * k).map(|_| rng.u8()).collect();
+    let pairings = [
+        PairedPoint::mirrored(Family::Perforated, 2, true),
+        PairedPoint::mirrored(Family::Truncated, 6, true),
+        PairedPoint::new(
+            LayerPoint::EXACT,
+            LayerPoint::new_pol(Family::Recursive, 3, Polarity::Pos, true),
+        ),
+    ];
+    for pair in pairings {
+        let plan = PairedPlan::build(pair, &w, m_rows, k);
+        let mut outs: Vec<Vec<i64>> = Vec::new();
+        for (kr, kind, _) in kernel_axis() {
+            let mut scratch = Scratch::new();
+            paired_gemm_planned_with_kernel(
+                kr, kind, &pair, 3, 101, &plan, 0, None, None, &w, &a, m_rows, k,
+                n, &bias, &mut scratch, 1,
+            );
+            outs.push(scratch.acc[..m_rows * n].to_vec());
+        }
+        let label = pair.describe();
+        assert_eq!(outs[0], outs[1], "simd vs scalar paired {label}");
+        assert_eq!(outs[0], outs[2], "lut vs scalar paired {label}");
+    }
+}
+
+#[test]
+fn kernel_selection_is_reflected_in_replies_bit_identically() {
+    // `CVAPPROX_KERNEL` resolves once per process; CI runs this suite under
+    // `=scalar` and `=simd`. Whatever the ambient selection, engines pinned
+    // to either backend must reply bit-identically to it — the env knob can
+    // change speed, never logits.
+    let (model, ds) = hermetic();
+    let img = ds.image(0);
+    let ambient = Engine::new(model.clone());
+    let want = match std::env::var("CVAPPROX_KERNEL") {
+        Ok(v) => kernel::select(v.trim()).name(),
+        Err(_) => kernel::select("auto").name(),
+    };
+    assert_eq!(ambient.kernel_name(), want, "env selection must be honored");
+    let probe_points = [
+        (Family::Perforated, 2, Polarity::Neg),
+        (Family::Truncated, 6, Polarity::Pos),
+        (Family::Recursive, 3, Polarity::Neg),
+    ];
+    for (family, m, pol) in probe_points {
+        let opts = uniform_opts(&model, family, m, pol);
+        let reference = ambient.forward(&img, &opts).unwrap();
+        for kr in [kernel::scalar(), kernel::simd()] {
+            let pinned = Engine::with_kernel(model.clone(), kr);
+            assert_eq!(pinned.kernel_name(), kr.name());
+            assert_eq!(
+                pinned.forward(&img, &opts).unwrap(),
+                reference,
+                "{} backend, {} m={m} {}",
+                kr.name(),
+                family.name(),
+                pol.name()
+            );
+        }
     }
 }

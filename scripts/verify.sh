@@ -51,6 +51,20 @@ cargo test -q -p cvapprox --test golden hermetic
 echo "== tier-1: differential engine harness =="
 cargo test -q -p cvapprox --test differential
 
+# Kernel-backend matrix: the same differential + golden suites with the
+# GEMM backend pinned each way. CVAPPROX_KERNEL resolves once per process,
+# so each pin needs its own cargo invocation. `simd` is valid on every
+# host — without AVX2 it runs its portable chunked lanes (bit-identical by
+# the same tests); the warning just makes the reduced coverage visible.
+if ! grep -q avx2 /proc/cpuinfo 2>/dev/null; then
+    echo "warning: no AVX2 on this host — CVAPPROX_KERNEL=simd exercises the portable lanes only" >&2
+fi
+for kernel in scalar simd; do
+    echo "== kernel matrix: differential + golden @ CVAPPROX_KERNEL=$kernel =="
+    run_guarded env CVAPPROX_KERNEL="$kernel" cargo test -q -p cvapprox --test differential
+    run_guarded env CVAPPROX_KERNEL="$kernel" cargo test -q -p cvapprox --test golden hermetic
+done
+
 # The coordinator worker pool must behave identically at 1 worker and at a
 # small pool (bit-exact replies, batch fusion, clean shutdown, no panics).
 # The burst/NaN/default-config service tests size their pools from
