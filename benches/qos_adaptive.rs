@@ -25,6 +25,13 @@
 //! envelope affords, where the governor dominates static-exact because its
 //! bursts ran on cheaper rungs).
 //!
+//! 4. **Mixed tenants** (PR 9): a light and a heavy class share one pool,
+//!    each with its own governor stepping its own ladder. The heavy flood
+//!    must drive the heavy governor down while the light governor never
+//!    leaves rung 0 and every light reply stays bit-identical to the exact
+//!    rung's forward — per-class p99 and both rung trajectories land in
+//!    the artifact.
+//!
 //! Env knobs: `CVAPPROX_BENCH_QUICK=1` (fewer cycles, smaller first burst);
 //! `CVAPPROX_THREADS` pinned to 1 unless set.
 
@@ -33,7 +40,7 @@ use std::time::{Duration, Instant};
 
 use cvapprox::approx::Family;
 use cvapprox::coordinator::service::Reply;
-use cvapprox::coordinator::{InferenceService, MetricsSnapshot, ServiceConfig};
+use cvapprox::coordinator::{InferenceService, MetricsSnapshot, ServiceConfig, TenantClass};
 use cvapprox::datasets::Dataset;
 use cvapprox::hermetic_dir;
 use cvapprox::nn::{loader, Engine, ForwardOpts, Model};
@@ -331,6 +338,147 @@ fn main() {
         100.0 * ladder.rung(last).est_loss
     );
 
+    // ---- mixed tenants: one pool, two classes, two governors -------------
+    // The heavy tenant floods until ITS governor steps down; the light
+    // tenant trickles throughout. Class isolation means the light governor
+    // never moves and light replies never change bits.
+    println!("\n-- mixed tenants: light trickle + heavy flood, per-class governors --");
+    let svc_mt = InferenceService::start(
+        Engine::new(model.clone()),
+        ServiceConfig {
+            n_array: N_ARRAY,
+            workers: WORKERS,
+            batch_size: BATCH,
+            batch_timeout: Duration::from_micros(500),
+            tenants: vec![TenantClass::new("light"), TenantClass::new("heavy")],
+            ..Default::default()
+        },
+    )
+    .expect("tenant service starts");
+    let light_gov = Governor::start_for_class(
+        &svc_mt,
+        0,
+        ladder.clone(),
+        QosConfig {
+            // Same control law, untrippable target: the light class shares
+            // the pool, so its *latency* does see the heavy backlog (queue
+            // wait is FIFO-fair, not preemptive) — what must NOT move is
+            // its rung, epoch and bits, which is exactly what per-class
+            // governors guarantee and this section asserts.
+            latency_target: Duration::from_secs(3600),
+            step_up_frac: 0.5,
+            error_ceiling: f64::INFINITY,
+            max_est_loss: 0.2,
+            min_dwell: Duration::from_millis(40),
+            tick: Duration::from_millis(8),
+            min_window: 8,
+        },
+    )
+    .expect("light governor starts");
+    let heavy_gov = Governor::start_for_class(
+        &svc_mt,
+        1,
+        ladder.clone(),
+        QosConfig {
+            latency_target: Duration::from_millis(2),
+            step_up_frac: 0.5,
+            error_ceiling: f64::INFINITY,
+            max_est_loss: 0.2,
+            min_dwell: Duration::from_millis(40),
+            tick: Duration::from_millis(8),
+            min_window: 8,
+        },
+    )
+    .expect("heavy governor starts");
+    let flood_done = std::sync::atomic::AtomicBool::new(false);
+    let (light_replies, light_rung_max, heavy_waves, heavy_stepped) = std::thread::scope(|s| {
+        let svc = &svc_mt;
+        let heavy = s.spawn(|| {
+            let mut waves = 0usize;
+            let mut wave = first_wave;
+            while heavy_gov.rung() == 0 && waves < 24 {
+                let pend: Vec<_> = (0..wave)
+                    .map(|i| svc.submit_for(1, ds.image(i % ds.n)).expect("heavy accepted"))
+                    .collect();
+                for p in pend {
+                    p.wait().expect("heavy reply");
+                }
+                waves += 1;
+                wave = (wave * 2).min(16 * 1024);
+            }
+            // Sample before the flood stops: idle-recovery could lift the
+            // rung back to 0 between here and the post-scope asserts.
+            let stepped = heavy_gov.rung() > 0;
+            flood_done.store(true, std::sync::atomic::Ordering::Release);
+            (waves, stepped)
+        });
+        let light = s.spawn(|| {
+            let mut replies = Vec::new();
+            let mut rung_max = 0usize;
+            let mut i = 0usize;
+            while !flood_done.load(std::sync::atomic::Ordering::Acquire) || i < 8 {
+                let img = i % ds.n;
+                let r = svc
+                    .submit_for(0, ds.image(img))
+                    .expect("light accepted")
+                    .wait()
+                    .expect("light reply");
+                assert_eq!(r.tenant, 0, "light reply routed to the wrong tenant");
+                replies.push((img, r));
+                rung_max = rung_max.max(light_gov.rung());
+                i += 1;
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            (replies, rung_max)
+        });
+        let (heavy_waves, heavy_stepped) = heavy.join().expect("heavy producer");
+        let (light_replies, light_rung_max) = light.join().expect("light producer");
+        (light_replies, light_rung_max, heavy_waves, heavy_stepped)
+    });
+    assert!(
+        heavy_stepped,
+        "heavy flood never drove the heavy governor off rung 0 ({heavy_waves} waves)"
+    );
+    assert_eq!(light_rung_max, 0, "light governor moved under the heavy flood");
+    let light_report = light_gov.stop();
+    let heavy_report = heavy_gov.stop();
+    assert!(
+        light_report.transitions.is_empty(),
+        "light class must log zero transitions, got {:?}",
+        light_report.transitions.len()
+    );
+    assert!(
+        heavy_report.transitions.iter().any(|t| t.reason == "latency-over-target"),
+        "heavy class never stepped down under its own load"
+    );
+    // Light bit-identity + epoch stability: every light reply matches the
+    // exact rung's static forward and carries the install epoch of rung 0.
+    let light_epoch = light_replies.first().map(|(_, r)| r.epoch).unwrap_or(0);
+    for (img, r) in &light_replies {
+        assert_eq!(r.epoch, light_epoch, "light epoch moved during the flood");
+        let want = reference
+            .forward(
+                &ds.image(*img),
+                &ForwardOpts::with_policy(ladder.rung(0).policy.clone()),
+            )
+            .unwrap();
+        assert_eq!(
+            r.logits, want,
+            "light reply (img {img}) not bit-identical to the exact rung"
+        );
+    }
+    let snap_mt = svc_mt.shutdown();
+    assert_eq!(snap_mt.classes.len(), 2);
+    println!(
+        "light: {} replies, rung stayed 0, p99 {:.2} ms; heavy: {} waves, \
+         {} transitions, p99 {:.2} ms",
+        light_replies.len(),
+        snap_mt.classes[0].p99_latency.as_secs_f64() * 1e3,
+        heavy_waves,
+        heavy_report.transitions.len(),
+        snap_mt.classes[1].p99_latency.as_secs_f64() * 1e3
+    );
+
     let json = Json::obj()
         .field("bench", "qos_adaptive")
         .field("model", "hermnet_hsynth (hermetic)")
@@ -388,6 +536,47 @@ fn main() {
         .field(
             "replies_by_rung",
             Json::arr(by_rung.iter().map(|&n| n as i64)),
+        )
+        .field(
+            "mixed_tenant",
+            Json::obj()
+                .field("heavy_waves", heavy_waves as i64)
+                .field("heavy_transitions", heavy_report.transitions.len() as i64)
+                .field(
+                    "heavy_rung_trajectory",
+                    Json::Arr(
+                        heavy_report
+                            .transitions
+                            .iter()
+                            .map(|t| {
+                                Json::obj()
+                                    .field("at_s", t.at.as_secs_f64())
+                                    .field("from", t.from as i64)
+                                    .field("to", t.to as i64)
+                                    .field("reason", t.reason)
+                            })
+                            .collect(),
+                    ),
+                )
+                .field("light_transitions", light_report.transitions.len() as i64)
+                .field("light_rung_max", light_rung_max as i64)
+                .field("light_replies", light_replies.len() as i64)
+                .field(
+                    "classes",
+                    Json::Arr(
+                        snap_mt
+                            .classes
+                            .iter()
+                            .map(|c| {
+                                Json::obj()
+                                    .field("name", c.name.as_str())
+                                    .field("completed", c.completed as i64)
+                                    .field("p99_ms", c.p99_latency.as_secs_f64() * 1e3)
+                                    .field("images_s", c.throughput_rps)
+                            })
+                            .collect(),
+                    ),
+                ),
         )
         .field("results", Json::Arr(rows.iter().map(|r| r.json()).collect()));
     let path = cvapprox::util::bench::artifact_path("BENCH_qos.json");

@@ -5,9 +5,21 @@
 //!
 //! Uses a synthetic conv net (no artifacts needed, so CI always runs it)
 //! and emits `BENCH_serving.json` next to the stdout report: one record per
-//! configuration with images/s, mean/~p95 latency, batch statistics and
-//! per-worker occupancy. Acceptance signal across PRs: at a fixed batch
-//! size, `images_s` should increase with `workers`.
+//! configuration with images/s, mean/~p95 latency, batch statistics,
+//! per-worker occupancy and per-tenant-class rows (name, completed, p99,
+//! throughput). Acceptance signal across PRs: at a fixed batch size,
+//! `images_s` should increase with `workers`.
+//!
+//! Two PR 9 sections ride along:
+//!
+//! * **queue scaling** — the same load pushed by 4 concurrent producer
+//!   threads through shards ∈ {1, 4} at 4 workers. shards=1 is the legacy
+//!   single-mutex queue; the sharded work-stealing layout must not lose
+//!   throughput to it (asserted with a 15% noise floor).
+//! * **mixed tenants** — a heavy flood and a light trickle on separate
+//!   tenant classes over one pool, recording per-class p99 so the
+//!   class-isolation claim has a serving-plane row (the governed rung
+//!   isolation itself is asserted by `qos_adaptive`).
 //!
 //! Env knobs: `CVAPPROX_BENCH_QUICK=1` (short CI budgets);
 //! `CVAPPROX_THREADS` is pinned to 1 (unless already set) so the sweep
@@ -16,11 +28,31 @@
 use std::time::Duration;
 
 use cvapprox::approx::Family;
-use cvapprox::coordinator::{InferenceService, ServiceConfig};
+use cvapprox::coordinator::{InferenceService, MetricsSnapshot, ServiceConfig, TenantClass};
 use cvapprox::nn::graph::Weights;
 use cvapprox::nn::{Engine, Model, Node, Op, Tensor};
 use cvapprox::util::json::Json;
 use cvapprox::util::rng::Rng;
+
+/// Per-tenant-class rows for the JSON artifact (one even for the default
+/// single-class configs, so downstream tooling can always key on it).
+fn class_rows(snap: &MetricsSnapshot) -> Json {
+    Json::Arr(
+        snap.classes
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .field("name", c.name.as_str())
+                    .field("completed", c.completed as i64)
+                    .field("p50_ms", c.p50_latency.as_secs_f64() * 1e3)
+                    .field("p99_ms", c.p99_latency.as_secs_f64() * 1e3)
+                    .field("images_s", c.throughput_rps)
+                    .field("rejected_overload", c.rejected_overload as i64)
+                    .field("expired_deadline", c.expired_deadline as i64)
+            })
+            .collect(),
+    )
+}
 
 /// Synthetic serving model (~2.2 MMAC/img): 16x16x3 input → conv3x3(24)
 /// → maxpool → conv3x3(48) → conv3x3(48) → gap → dense(10). Shapes are
@@ -146,6 +178,7 @@ fn main() {
                 };
                 let svc = InferenceService::start(Engine::new(bench_model()), cfg)
                     .expect("service starts");
+                let shards = svc.n_shards();
                 let pending: Vec<_> = imgs
                     .iter()
                     .map(|im| svc.submit(im.clone()).expect("service accepting"))
@@ -167,10 +200,12 @@ fn main() {
                 );
                 records.push(
                     Json::obj()
+                        .field("section", "sweep")
                         .field("family", family.name())
                         .field("m", m as i64)
                         .field("use_cv", use_cv)
                         .field("workers", workers)
+                        .field("shards", shards)
                         .field("batch_size", batch_size)
                         .field("requests", n_images)
                         .field("images_s", snap.throughput_rps)
@@ -183,11 +218,153 @@ fn main() {
                             "worker_occupancy",
                             Json::arr(snap.worker_occupancy.clone()),
                         )
-                        .field("energy_vs_exact", snap.energy_vs_exact),
+                        .field("energy_vs_exact", snap.energy_vs_exact)
+                        .field("classes", class_rows(&snap)),
                 );
             }
         }
     }
+
+    // ---- queue scaling: sharded work-stealing vs the legacy single queue.
+    // 4 producer threads hammer the admission path concurrently (the
+    // per-client submit loop above never contends on push), so this is the
+    // contention-wall measurement: shards=1 is the old single-mutex queue
+    // bit-for-bit, shards=4 the work-stealing layout.
+    println!("\n-- queue scaling: 4 workers, 4 producer threads --");
+    println!("{:<8} {:>10} {:>10} {:>10}", "shards", "img/s", "p99 ms", "steals?");
+    let producers = 4usize;
+    let per_producer = n_images.div_ceil(2);
+    let mut tput = [0.0f64; 2];
+    for (idx, &shards) in [1usize, 4].iter().enumerate() {
+        let cfg = ServiceConfig {
+            n_array: 64,
+            workers: 4,
+            shards,
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let svc =
+            InferenceService::start(Engine::new(bench_model()), cfg).expect("service starts");
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let svc = &svc;
+                let imgs = &imgs;
+                s.spawn(move || {
+                    let pending: Vec<_> = (0..per_producer)
+                        .map(|i| {
+                            svc.submit(imgs[(p + i) % imgs.len()].clone())
+                                .expect("service accepting")
+                        })
+                        .collect();
+                    for pend in pending {
+                        pend.wait().expect("reply");
+                    }
+                });
+            }
+        });
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, (producers * per_producer) as u64);
+        tput[idx] = snap.throughput_rps;
+        println!(
+            "{:<8} {:>10.1} {:>10.2} {:>10}",
+            shards,
+            snap.throughput_rps,
+            snap.p99_latency.as_secs_f64() * 1e3,
+            if shards > 1 { "yes" } else { "-" }
+        );
+        records.push(
+            Json::obj()
+                .field("section", "queue_scaling")
+                .field("family", "exact")
+                .field("workers", 4)
+                .field("shards", shards)
+                .field("batch_size", 8)
+                .field("producer_threads", producers)
+                .field("requests", producers * per_producer)
+                .field("images_s", snap.throughput_rps)
+                .field("p99_ms", snap.p99_latency.as_secs_f64() * 1e3)
+                .field("mean_queue_ms", snap.mean_queue.as_secs_f64() * 1e3)
+                .field("mean_batch_size", snap.mean_batch_size)
+                .field("classes", class_rows(&snap)),
+        );
+    }
+    assert!(
+        tput[1] >= tput[0] * 0.85,
+        "sharded queue ({:.1}/s) fell more than 15% below the single-queue \
+         baseline ({:.1}/s) at 4 workers",
+        tput[1],
+        tput[0]
+    );
+
+    // ---- mixed tenants: heavy flood + light trickle on one pool ----------
+    // Two classes share the workers but never share a batch; the per-class
+    // rows land in BENCH_serving.json so the isolation claim is tracked
+    // across PRs (rung isolation under governors is qos_adaptive's assert).
+    println!("\n-- mixed tenants: light trickle + heavy flood, 4 workers --");
+    let light_n = 32usize;
+    let heavy_n = n_images * 2;
+    let cfg = ServiceConfig {
+        n_array: 64,
+        workers: 4,
+        batch_size: 8,
+        batch_timeout: Duration::from_millis(1),
+        tenants: vec![TenantClass::new("light"), TenantClass::new("heavy")],
+        ..Default::default()
+    };
+    let svc = InferenceService::start(Engine::new(bench_model()), cfg).expect("service starts");
+    let mt_shards = svc.n_shards();
+    std::thread::scope(|s| {
+        let svc_ref = &svc;
+        let imgs_ref = &imgs;
+        s.spawn(move || {
+            let pending: Vec<_> = (0..heavy_n)
+                .map(|i| {
+                    svc_ref
+                        .submit_for(1, imgs_ref[i % imgs_ref.len()].clone())
+                        .expect("heavy accepted")
+                })
+                .collect();
+            for pend in pending {
+                pend.wait().expect("heavy reply");
+            }
+        });
+        s.spawn(move || {
+            for i in 0..light_n {
+                let reply = svc_ref
+                    .submit_for(0, imgs_ref[i % imgs_ref.len()].clone())
+                    .expect("light accepted")
+                    .wait()
+                    .expect("light reply");
+                assert_eq!(reply.tenant, 0);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+    });
+    let snap = svc.shutdown();
+    assert_eq!(snap.classes.len(), 2);
+    assert_eq!(snap.classes[0].completed, light_n as u64);
+    assert_eq!(snap.classes[1].completed, heavy_n as u64);
+    for c in &snap.classes {
+        println!(
+            "{:<8} completed {:>6}  p99 {:>8.2} ms  {:>8.1} img/s",
+            c.name,
+            c.completed,
+            c.p99_latency.as_secs_f64() * 1e3,
+            c.throughput_rps
+        );
+    }
+    records.push(
+        Json::obj()
+            .field("section", "mixed_tenants")
+            .field("workers", 4)
+            .field("shards", mt_shards)
+            .field("batch_size", 8)
+            .field("light_requests", light_n)
+            .field("heavy_requests", heavy_n)
+            .field("images_s", snap.throughput_rps)
+            .field("classes", class_rows(&snap)),
+    );
 
     let json = Json::obj()
         .field("bench", "serving")

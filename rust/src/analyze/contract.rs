@@ -60,6 +60,30 @@ pub const ATOMIC_CONTRACT: &[AtomicRule] = &[
         rationale: "monotonic batch counter feeding the fault injector's \
                     seeded schedule; no data is published through it",
     },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "class_queued",
+        allowed: &["SeqCst"],
+        rationale: "global per-class admission ticket: fetch_update CAS \
+                    keeps the bound exact across shards, SeqCst for a \
+                    single total order of admits vs. pops vs. close-drain",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "rr",
+        allowed: &["Relaxed"],
+        rationale: "round-robin shard cursor for pushes; any interleaving \
+                    is a valid placement, requests publish via the shard \
+                    mutex",
+    },
+    AtomicRule {
+        file: "rust/src/coordinator/service.rs",
+        atomic: "idle_workers",
+        allowed: &["Relaxed"],
+        rationale: "advisory parked-worker gauge for the fill-wait skip; \
+                    a stale read only costs one batch window, correctness \
+                    never depends on it",
+    },
     // --- fault/inject.rs: deterministic schedule cursor ---------------
     AtomicRule {
         file: "rust/src/fault/inject.rs",
@@ -200,6 +224,13 @@ pub const ATOMIC_CONTRACT: &[AtomicRule] = &[
         atomic: "occ_n",
         allowed: &["Relaxed"],
         rationale: "commutative count; see `depth_sum`",
+    },
+    AtomicRule {
+        file: "rust/src/qos/telemetry.rs",
+        atomic: "expired",
+        allowed: &["Relaxed"],
+        rationale: "commutative deadline-expiry count drained by swap(0); \
+                    see `depth_sum`",
     },
 ];
 

@@ -149,6 +149,16 @@ struct WorkerCounters {
     busy_secs: f64,
 }
 
+/// Per-tenant-class counters (indexed by class id).
+#[derive(Clone, Debug, Default)]
+struct ClassCounters {
+    name: String,
+    completed: u64,
+    lat_hist: LatencyHistogram,
+    rejected_overload: u64,
+    expired_deadline: u64,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     completed: u64,
@@ -160,9 +170,27 @@ struct Inner {
     energy_units: f64,
     energy_units_exact: f64,
     workers: Vec<WorkerCounters>,
+    classes: Vec<ClassCounters>,
     started: Option<Instant>,
     finished: Option<Instant>,
     faults: FaultCounters,
+}
+
+impl Inner {
+    /// Class row for `class`, grown on demand so metrics stay usable even
+    /// when `init_classes` was never called (single-tenant tests).
+    fn class_mut(&mut self, class: usize) -> &mut ClassCounters {
+        if self.classes.len() <= class {
+            let start = self.classes.len();
+            self.classes.resize(class + 1, ClassCounters::default());
+            for (i, c) in self.classes.iter_mut().enumerate().skip(start) {
+                if c.name.is_empty() {
+                    c.name = format!("class{i}");
+                }
+            }
+        }
+        &mut self.classes[class]
+    }
 }
 
 /// Robustness counters for the fault/self-healing plane.
@@ -219,6 +247,24 @@ pub struct MetricsSnapshot {
     pub crashed_replies: u64,
     /// Faults the injection plan actually applied.
     pub injected_faults: u64,
+    /// Per-tenant-class rows (index = class id; empty when the service
+    /// never declared classes and nothing was recorded per class).
+    pub classes: Vec<ClassSnapshot>,
+}
+
+/// Point-in-time per-tenant-class metrics.
+#[derive(Clone, Debug)]
+pub struct ClassSnapshot {
+    pub name: String,
+    pub completed: u64,
+    pub p50_latency: Duration,
+    pub p95_latency: Duration,
+    pub p99_latency: Duration,
+    /// Throughput over the service wall-clock (same anchor as the global
+    /// `throughput_rps`).
+    pub throughput_rps: f64,
+    pub rejected_overload: u64,
+    pub expired_deadline: u64,
 }
 
 impl Metrics {
@@ -247,8 +293,32 @@ impl Metrics {
         }
     }
 
+    /// Declare the tenant classes up front so every class reports a row
+    /// (idle classes appear as zeros) under its configured name.
+    pub fn init_classes(&self, names: &[String]) {
+        let mut g = lock_clean(&self.inner);
+        if g.classes.len() < names.len() {
+            g.classes.resize(names.len(), ClassCounters::default());
+        }
+        for (c, name) in g.classes.iter_mut().zip(names) {
+            name.clone_into(&mut c.name);
+        }
+    }
+
     pub fn record(
         &self,
+        latency: Duration,
+        queue_wait: Duration,
+        macs: u64,
+        power: &PowerModel,
+    ) {
+        self.record_for(0, latency, queue_wait, macs, power);
+    }
+
+    /// Record one completed request of tenant class `class`.
+    pub fn record_for(
+        &self,
+        class: usize,
         latency: Duration,
         queue_wait: Duration,
         macs: u64,
@@ -262,6 +332,9 @@ impl Metrics {
         g.macs += macs;
         g.energy_units += power.energy_units(macs);
         g.energy_units_exact += macs as f64;
+        let row = g.class_mut(class);
+        row.completed += 1;
+        row.lat_hist.record(latency);
         let now = Instant::now();
         if g.started.is_none() {
             g.started = Some(now);
@@ -285,12 +358,27 @@ impl Metrics {
 
     /// Count a request rejected at admission (bounded queue full).
     pub fn record_overload(&self) {
-        lock_clean(&self.inner).faults.rejected_overload += 1;
+        self.record_overload_for(0);
+    }
+
+    /// Count a class-`class` request rejected at admission.
+    pub fn record_overload_for(&self, class: usize) {
+        let mut g = lock_clean(&self.inner);
+        g.faults.rejected_overload += 1;
+        g.class_mut(class).rejected_overload += 1;
     }
 
     /// Count a request whose deadline expired before execution.
     pub fn record_deadline_expired(&self) {
-        lock_clean(&self.inner).faults.expired_deadline += 1;
+        self.record_deadline_expired_for(0);
+    }
+
+    /// Count a class-`class` request whose deadline expired before
+    /// execution.
+    pub fn record_deadline_expired_for(&self, class: usize) {
+        let mut g = lock_clean(&self.inner);
+        g.faults.expired_deadline += 1;
+        g.class_mut(class).expired_deadline += 1;
     }
 
     /// Count a crashed worker respawned by the supervisor.
@@ -367,6 +455,27 @@ impl Metrics {
             replayed_batches: g.faults.replayed_batches,
             crashed_replies: g.faults.crashed_replies,
             injected_faults: g.faults.injected_faults,
+            classes: g
+                .classes
+                .iter()
+                .map(|c| {
+                    let q = c.lat_hist.quantiles(&[0.50, 0.95, 0.99]);
+                    ClassSnapshot {
+                        name: c.name.clone(),
+                        completed: c.completed,
+                        p50_latency: q[0],
+                        p95_latency: q[1],
+                        p99_latency: q[2],
+                        throughput_rps: if wall > 0.0 {
+                            c.completed as f64 / wall
+                        } else {
+                            0.0
+                        },
+                        rejected_overload: c.rejected_overload,
+                        expired_deadline: c.expired_deadline,
+                    }
+                })
+                .collect(),
         }
     }
 }
@@ -549,6 +658,43 @@ mod tests {
         // A fresh snapshot starts all-zero.
         let z = Metrics::new().snapshot();
         assert_eq!(z.rejected_overload + z.heal_events + z.worker_restarts, 0);
+    }
+
+    #[test]
+    fn per_class_counters_partition_the_snapshot() {
+        let m = Metrics::new();
+        m.init_classes(&["interactive".into(), "batchy".into()]);
+        let pm = PowerModel::new(Family::Exact, 0, 64);
+        m.mark_started();
+        std::thread::sleep(Duration::from_millis(1));
+        m.record_for(0, Duration::from_millis(1), Duration::ZERO, 100, &pm);
+        m.record_for(0, Duration::from_millis(2), Duration::ZERO, 100, &pm);
+        m.record_for(1, Duration::from_millis(50), Duration::ZERO, 100, &pm);
+        m.record_overload_for(1);
+        m.record_deadline_expired_for(0);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3, "global view spans all classes");
+        assert_eq!(s.rejected_overload, 1);
+        assert_eq!(s.expired_deadline, 1);
+        assert_eq!(s.classes.len(), 2);
+        assert_eq!(s.classes[0].name, "interactive");
+        assert_eq!(s.classes[0].completed, 2);
+        assert_eq!(s.classes[0].expired_deadline, 1);
+        assert_eq!(s.classes[0].rejected_overload, 0);
+        assert_eq!(s.classes[1].name, "batchy");
+        assert_eq!(s.classes[1].completed, 1);
+        assert_eq!(s.classes[1].rejected_overload, 1);
+        // Tails are per class: the batchy class's p99 reflects its own
+        // 50 ms sample, not the interactive class's.
+        assert!(s.classes[1].p99_latency >= Duration::from_millis(40));
+        assert!(s.classes[0].p99_latency <= Duration::from_millis(5));
+        assert!(s.classes[0].throughput_rps > s.classes[1].throughput_rps);
+        // Recording to an undeclared class grows a named placeholder row.
+        m.record_deadline_expired_for(3);
+        let s2 = m.snapshot();
+        assert_eq!(s2.classes.len(), 4);
+        assert_eq!(s2.classes[3].name, "class3");
+        assert_eq!(s2.classes[2].completed, 0);
     }
 
     #[test]

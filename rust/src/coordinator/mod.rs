@@ -9,11 +9,20 @@
 //! cost model + array occupancy into per-inference modeled energy (how the
 //! e2e example reports the paper's headline "45% power, <1% loss").
 //!
-//! The serving policy is **hot-swappable**: every batch captures an
-//! epoch-stamped policy generation ([`crate::nn::PolicySwitch`]), and a
-//! [`PolicyInstaller`] (held by the [`crate::qos`] governor) can validate,
-//! warm and install new generations into a live pool without stalling it —
-//! in-flight batches complete on their captured epoch, replies carry it.
+//! The serving plane is **sharded and multi-tenant** (PR 9): requests land
+//! on work-stealing queue shards (`CVAPPROX_SHARDS`, auto = one per
+//! worker) instead of a single contended lock, and every request carries a
+//! tenant/SLO class ([`TenantClass`]) with its own admission bound,
+//! default deadline and policy plane. The dynamic batcher is
+//! deadline-aware: its fill-wait is capped at the earliest deadline in the
+//! batch, so a lone tight-deadline request is served, not expired.
+//!
+//! The serving policy is **hot-swappable per tenant**: every batch
+//! captures an epoch-stamped policy generation of its class's plane
+//! ([`crate::nn::PolicySwitch`]), and a [`PolicyInstaller`] (held by that
+//! class's [`crate::qos`] governor) can validate, warm and install new
+//! generations into a live pool without stalling it — in-flight batches
+//! complete on their captured epoch, replies carry it.
 //!
 //! The serving plane is **supervised and self-healing** (see
 //! [`crate::fault`]): workers run their batches under `catch_unwind`, a
@@ -28,8 +37,8 @@
 pub mod metrics;
 pub mod service;
 
-pub use metrics::{LatencyHistogram, MetricsSnapshot, PowerModel};
+pub use metrics::{ClassSnapshot, LatencyHistogram, MetricsSnapshot, PowerModel};
 pub use service::{
     default_service_workers, InferenceService, Pending, PolicyInstaller, Reply, ReplyError,
-    ServiceConfig,
+    ServiceConfig, TenantClass,
 };

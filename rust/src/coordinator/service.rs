@@ -1,12 +1,37 @@
-//! The inference service: request queue → dynamic batcher → supervised,
-//! self-healing worker pool.
+//! The inference service: sharded work-stealing request queues → dynamic
+//! batcher → supervised, self-healing worker pool, with multi-tenant QoS
+//! classes.
 //!
-//! std-threads + a Mutex/Condvar queue (no tokio in the offline vendor
-//! set). Requests are submitted from any thread; each pool worker drains
-//! the shared queue into batches of up to `batch_size`, fuses the batch
-//! through [`Engine::forward_batch_with_scratch`] — **one wide GEMM per
-//! layer**, the weight-side plan amortized over every image — and answers
-//! each request through its own oneshot channel.
+//! std-threads + Mutex/Condvar shards (no tokio in the offline vendor
+//! set). Requests are submitted from any thread and land on a shard by
+//! round-robin; each pool worker drains its **home shard** (worker id mod
+//! shard count) into batches of up to `batch_size`, **steals** from
+//! sibling shards when its own is empty, fuses the batch through
+//! [`Engine::forward_batch_with_scratch`] — **one wide GEMM per layer**,
+//! the weight-side plan amortized over every image — and answers each
+//! request through its own oneshot channel. `CVAPPROX_SHARDS` (or
+//! [`ServiceConfig::shards`]) sets the shard count; `auto`/unset means one
+//! shard per worker, and `shards == 1` reproduces the single-queue
+//! serving order exactly.
+//!
+//! **Multi-tenant classes:** every request carries a tenant/SLO class
+//! ([`TenantClass`], class 0 = the default tenant). Each class gets its
+//! own admission bound, its own default deadline, its own
+//! [`PolicySwitch`] (so a per-class QoS governor can step one tenant down
+//! its ladder without touching another's accuracy), and its own partition
+//! of the shared [`Telemetry`] plane. Batches never mix classes — a batch
+//! runs under exactly one class's policy generation, which is what keeps
+//! the PR 5 hot-swap bit-identity invariant *per tenant*.
+//!
+//! **Deadline-aware batching (the PR 9 headline bugfix):** the dynamic
+//! batcher's fill-wait used to run the full `batch_timeout` even when a
+//! request already in the batch had a deadline due sooner — a lone
+//! tight-deadline request was held past its budget and then rejected at
+//! the dequeue screen. The fill-wait is now capped at the earliest
+//! deadline in the batch (minus [`DEADLINE_FILL_MARGIN`] so the screen
+//! and forward still fit), and skipped outright when nothing else is
+//! queued and another worker sits idle (batching gains nothing when spare
+//! capacity exists).
 //!
 //! Hardening invariants (tested below):
 //! * Every accepted request gets **exactly one reply**: `Ok(Reply)` or a
@@ -74,6 +99,84 @@ pub fn default_service_workers() -> usize {
         .clamp(1, 256)
 }
 
+/// One tenant/SLO class served by the pool. Class index 0 is the default
+/// tenant every plain `submit` lands on; additional classes get their own
+/// admission bound, default deadline, policy switch (ladder rung) and
+/// telemetry window, so one tenant degrading under load never moves
+/// another tenant's accuracy.
+#[derive(Clone, Debug)]
+pub struct TenantClass {
+    /// Human-readable name (surfaces in metrics snapshots and bench rows).
+    pub name: String,
+    /// Per-class admission bound across all shards; `0` = unbounded.
+    pub queue_cap: usize,
+    /// Latency budget applied when a submit for this class carries no
+    /// explicit deadline; `None` = no implicit deadline.
+    pub default_deadline: Option<Duration>,
+}
+
+impl TenantClass {
+    pub fn new(name: &str) -> TenantClass {
+        TenantClass { name: name.to_string(), queue_cap: 0, default_deadline: None }
+    }
+}
+
+/// Parse a `CVAPPROX_TENANT_CLASSES` spec: comma-separated
+/// `name[:cap=N][:deadline_ms=N]` entries, e.g.
+/// `interactive:cap=64:deadline_ms=20,batchy:cap=256`. Invalid entries are
+/// rejected (the service refuses to start on a malformed spec rather than
+/// silently serving the wrong QoS contract).
+fn parse_tenant_spec(spec: &str) -> Result<Vec<TenantClass>> {
+    let mut classes = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let name = parts.next().unwrap_or_default().trim();
+        if name.is_empty() {
+            anyhow::bail!("CVAPPROX_TENANT_CLASSES: empty class name in {entry:?}");
+        }
+        let mut class = TenantClass::new(name);
+        for opt in parts {
+            match opt.split_once('=') {
+                Some(("cap", v)) => {
+                    class.queue_cap = v
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("CVAPPROX_TENANT_CLASSES: bad cap in {entry:?}"))?;
+                }
+                Some(("deadline_ms", v)) => {
+                    let ms: u64 = v.trim().parse().with_context(|| {
+                        format!("CVAPPROX_TENANT_CLASSES: bad deadline_ms in {entry:?}")
+                    })?;
+                    class.default_deadline = Some(Duration::from_millis(ms));
+                }
+                _ => anyhow::bail!("CVAPPROX_TENANT_CLASSES: unknown option in {entry:?}"),
+            }
+        }
+        classes.push(class);
+    }
+    if classes.is_empty() {
+        anyhow::bail!("CVAPPROX_TENANT_CLASSES: no classes in {spec:?}");
+    }
+    Ok(classes)
+}
+
+/// Resolve the shard count: an explicit positive `ServiceConfig::shards`
+/// wins, else `CVAPPROX_SHARDS` (a positive integer, or `auto`), else one
+/// shard per worker. Clamped to the worker count — a shard with no home
+/// worker would only ever drain through steals.
+fn resolve_shards(configured: usize, workers: usize) -> usize {
+    let v = if configured > 0 {
+        configured
+    } else {
+        std::env::var("CVAPPROX_SHARDS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&v| v >= 1)
+            .unwrap_or(workers)
+    };
+    v.clamp(1, workers.max(1))
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -98,7 +201,17 @@ pub struct ServiceConfig {
     /// Admission-queue bound: `0` (default) keeps the historic unbounded
     /// queue; a positive cap rejects excess submits with
     /// [`ReplyError::Overloaded`] instead of buffering without bound.
+    /// Applies to the default tenant class when `tenants` is empty.
     pub queue_cap: usize,
+    /// Work-stealing shard count: `0` (default) consults `CVAPPROX_SHARDS`
+    /// (`auto`/unset = one shard per worker); `1` reproduces the legacy
+    /// single-queue serving order exactly. Always clamped to `workers`.
+    pub shards: usize,
+    /// Tenant/SLO classes. Empty (default) means one class named
+    /// `default` whose admission bound is `queue_cap`; `start` also
+    /// consults `CVAPPROX_TENANT_CLASSES` when empty (see
+    /// [`TenantClass`]). Class 0 serves plain `submit` calls.
+    pub tenants: Vec<TenantClass>,
     /// Deterministic fault injection (chaos testing). `None` — the default
     /// unless `CVAPPROX_FAULT_SEED` is set — costs nothing on the batch
     /// path. `Some` attaches a seeded [`FaultPlan`] and switches the pool
@@ -119,6 +232,8 @@ impl Default for ServiceConfig {
             batch_size: 8,
             batch_timeout: Duration::from_millis(2),
             queue_cap: 0,
+            shards: 0,
+            tenants: Vec::new(),
             faults: FaultConfig::from_env(),
         }
     }
@@ -212,6 +327,9 @@ pub struct Reply {
     /// bit-identical to a static forward under that generation — the
     /// hot-swap consistency anchor (property-tested below).
     pub epoch: u64,
+    /// Tenant class that served this request (0 = default tenant). The
+    /// fused batch ran under exactly this class's policy generation.
+    pub tenant: usize,
 }
 
 struct Request {
@@ -220,6 +338,8 @@ struct Request {
     /// Absolute deadline; enforced at dequeue time (a worker never spends a
     /// batch slot on a request its client has already abandoned).
     deadline: Option<Instant>,
+    /// Tenant class index (validated at submit; always < the class count).
+    class: usize,
     respond: SyncSender<std::result::Result<Reply, ReplyError>>,
 }
 
@@ -246,119 +366,301 @@ impl Pending {
     }
 }
 
-/// MPMC request queue feeding the worker pool: a Mutex'd VecDeque plus a
-/// Condvar, with the dynamic-batching wait built into [`SharedQueue::pop_batch`].
-/// All lock operations are poison-tolerant — a worker that panics while a
-/// sibling waits must not wedge the queue.
-struct SharedQueue {
-    inner: Mutex<QueueInner>,
+/// How often a worker with an empty home shard re-polls its siblings for
+/// stealable work while parked (multi-shard pools use a timed wait so a
+/// push to a foreign shard is never missed; `shards == 1` with a single
+/// tenant class keeps the legacy untimed wait).
+const STEAL_POLL: Duration = Duration::from_micros(200);
+
+/// Safety margin subtracted from the earliest in-batch deadline when
+/// capping the fill-wait: the batch must leave the wait early enough to
+/// pass the dequeue-time deadline screen and still execute.
+const DEADLINE_FILL_MARGIN: Duration = Duration::from_millis(1);
+
+/// One work-stealing shard: a Mutex'd set of per-class FIFOs plus a
+/// Condvar for the workers homed on it. All lock operations are
+/// poison-tolerant — a worker that panics while a sibling waits must not
+/// wedge the queue.
+struct Shard {
+    inner: Mutex<ShardInner>,
     cv: Condvar,
-    /// Admission bound; 0 = unbounded.
-    cap: usize,
 }
 
-#[derive(Default)]
-struct QueueInner {
-    queue: VecDeque<Request>,
+struct ShardInner {
+    /// One FIFO per tenant class. Batches never mix classes (each class
+    /// runs its own policy generation), so the batcher drains exactly one
+    /// of these per pop — the one whose head request is oldest.
+    lanes: Vec<VecDeque<Request>>,
     closed: bool,
 }
 
-impl SharedQueue {
-    fn new(cap: usize) -> SharedQueue {
-        SharedQueue { inner: Mutex::new(QueueInner::default()), cv: Condvar::new(), cap }
+/// Sharded MPMC request queue feeding the worker pool. Submitters place
+/// requests on shards round-robin; each worker drains its home shard
+/// (worker id mod shard count) and steals from siblings when home is
+/// empty, so a hot submitter never serializes the whole pool on one lock.
+/// Admission bounds are per tenant class and global across shards
+/// (enforced with an atomic ticket, so the cap is exact even under
+/// concurrent multi-shard pushes). The dynamic-batching fill-wait is
+/// deadline-aware — see [`ShardedQueue::pop_batch`].
+struct ShardedQueue {
+    shards: Vec<Shard>,
+    /// Per-class admission bounds (`0` = unbounded), fixed at start.
+    class_caps: Vec<usize>,
+    /// Per-class queued counts across all shards: the admission ticket
+    /// (incremented on push, decremented when a request leaves a lane) and
+    /// the depth probes read by governors.
+    class_queued: Vec<AtomicUsize>,
+    /// Round-robin push cursor.
+    rr: AtomicUsize,
+    /// Workers currently parked waiting for work — the pool-idle signal
+    /// that lets `pop_batch` skip a pointless fill-wait.
+    idle_workers: AtomicUsize,
+}
+
+/// Index of the lane whose head request has waited longest (FIFO-fair
+/// across tenant classes), or `None` when every lane is empty.
+fn oldest_lane(lanes: &[VecDeque<Request>]) -> Option<usize> {
+    lanes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, q)| q.front().map(|r| (r.enqueued, i)))
+        .min_by_key(|&(t, _)| t)
+        .map(|(_, i)| i)
+}
+
+impl ShardedQueue {
+    fn new(shards: usize, class_caps: Vec<usize>) -> ShardedQueue {
+        let n_classes = class_caps.len().max(1);
+        let shard = || Shard {
+            inner: Mutex::new(ShardInner {
+                lanes: (0..n_classes).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        };
+        ShardedQueue {
+            shards: (0..shards.max(1)).map(|_| shard()).collect(),
+            class_queued: (0..n_classes).map(|_| AtomicUsize::new(0)).collect(),
+            class_caps,
+            rr: AtomicUsize::new(0),
+            idle_workers: AtomicUsize::new(0),
+        }
     }
 
-    /// Enqueue unless closed or full; hands the request back with the
-    /// rejection reason so the caller can answer it. (Checked under the
-    /// same lock as `close`, so no request can slip in after the drain
-    /// decision.)
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.class_caps.len()
+    }
+
+    /// Whether more than one tenant class or shard is live — the
+    /// single-class single-shard case keeps the legacy untimed park (a
+    /// fill-waiting sibling always consumes the wakeups it is handed);
+    /// every other shape parks with a [`STEAL_POLL`] timeout so work on a
+    /// foreign shard or lane is never stranded behind a consumed
+    /// `notify_one` token.
+    fn timed_park(&self) -> bool {
+        self.shards.len() > 1 || self.class_caps.len() > 1
+    }
+
+    /// Enqueue unless closed or the class is at its admission bound; hands
+    /// the request back with the rejection reason so the caller can answer
+    /// it. Closed is checked under the target shard's lock (same lock as
+    /// `close`, so no request can slip in after the drain decision); the
+    /// cap is an atomic compare-and-swap ticket, exact across shards.
     fn push(&self, req: Request) -> std::result::Result<(), (Request, ReplyError)> {
-        let mut g = lock_clean(&self.inner);
+        let class = req.class;
+        let idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let shard = &self.shards[idx];
+        let mut g = lock_clean(&shard.inner);
         if g.closed {
             return Err((req, ReplyError::Closed));
         }
-        if self.cap > 0 && g.queue.len() >= self.cap {
-            return Err((req, ReplyError::Overloaded));
+        let cap = self.class_caps[class];
+        if cap > 0 {
+            let admitted = self.class_queued[class]
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| (v < cap).then_some(v + 1));
+            if admitted.is_err() {
+                return Err((req, ReplyError::Overloaded));
+            }
+        } else {
+            self.class_queued[class].fetch_add(1, Ordering::SeqCst);
         }
-        g.queue.push_back(req);
+        g.lanes[class].push_back(req);
         drop(g);
-        self.cv.notify_one();
+        shard.cv.notify_one();
         Ok(())
     }
 
     /// Stop accepting; queued work still drains. Wakes every worker so
     /// idle ones can exit.
     fn close(&self) {
-        lock_clean(&self.inner).closed = true;
-        self.cv.notify_all();
+        for shard in &self.shards {
+            lock_clean(&shard.inner).closed = true;
+            shard.cv.notify_all();
+        }
     }
 
     fn is_closed(&self) -> bool {
-        lock_clean(&self.inner).closed
+        lock_clean(&self.shards[0].inner).closed
     }
 
-    /// Current queue depth (governor telemetry; racy by nature).
+    /// Total queued depth across shards and classes (governor telemetry;
+    /// racy by nature, no locks taken).
     fn len(&self) -> usize {
-        lock_clean(&self.inner).queue.len()
+        (0..self.class_queued.len())
+            .map(|i| self.class_queued[i].load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Queued depth of one tenant class across all shards.
+    fn class_len(&self, class: usize) -> usize {
+        if class < self.class_queued.len() {
+            self.class_queued[class].load(Ordering::SeqCst)
+        } else {
+            0
+        }
     }
 
     /// Answer every still-queued request with the given typed error — used
-    /// when the pool drains its last worker during shutdown.
+    /// when the pool drains its last worker during shutdown. Call after
+    /// `close` so no push can land behind the drain.
     fn drain_reject(&self, err: ReplyError) {
-        let drained: Vec<Request> = {
-            let mut g = lock_clean(&self.inner);
-            g.queue.drain(..).collect()
-        };
-        for req in drained {
-            let _ = req.respond.send(Err(err.clone()));
+        for shard in &self.shards {
+            let drained: Vec<Request> = {
+                let mut g = lock_clean(&shard.inner);
+                let mut v = Vec::new();
+                for lane in g.lanes.iter_mut() {
+                    v.extend(lane.drain(..));
+                }
+                v
+            };
+            for req in drained {
+                self.class_queued[req.class].fetch_sub(1, Ordering::SeqCst);
+                let _ = req.respond.send(Err(err.clone()));
+            }
         }
     }
 
-    /// Dynamic batcher: block for the first request (`None` once closed
-    /// *and* drained — the worker-exit signal), then wait up to `timeout`
-    /// for the batch to fill to `max`. Also returns the queue depth left
-    /// behind (read under the same lock — the telemetry gauge costs no
-    /// extra acquisition on the hot path).
-    fn pop_batch(&self, max: usize, timeout: Duration) -> Option<(Vec<Request>, usize)> {
-        let mut g = lock_clean(&self.inner);
-        loop {
-            if !g.queue.is_empty() {
-                break;
+    /// Drain up to `max` requests of one class from one shard: the lane
+    /// whose head has waited longest wins (FIFO-fair across tenants).
+    fn try_take(&self, idx: usize, max: usize) -> Option<(Vec<Request>, usize)> {
+        let mut g = lock_clean(&self.shards[idx].inner);
+        let class = oldest_lane(&g.lanes)?;
+        let lane = &mut g.lanes[class];
+        let take = max.min(lane.len());
+        let taken: Vec<Request> = lane.drain(..take).collect();
+        drop(g);
+        self.class_queued[class].fetch_sub(take, Ordering::SeqCst);
+        Some((taken, class))
+    }
+
+    /// Dynamic batcher: block for the first request — home shard first,
+    /// then steal from siblings — returning `None` once the queue is
+    /// closed *and* globally drained (the worker-exit signal). After the
+    /// first take, drains same-class arrivals on the home shard for up to
+    /// `timeout`, **capped at the earliest deadline already in the batch**
+    /// (minus [`DEADLINE_FILL_MARGIN`]) and skipped entirely when nothing
+    /// is queued anywhere and another worker is already parked — holding a
+    /// lone request to "fill" a batch that has no other source is exactly
+    /// the deadline-blind bug this replaces. Returns the batch, the global
+    /// depth left behind, and the batch's tenant class.
+    fn pop_batch(
+        &self,
+        home: usize,
+        max: usize,
+        timeout: Duration,
+    ) -> Option<(Vec<Request>, usize, usize)> {
+        let nshards = self.shards.len();
+        let home = home % nshards;
+        // Phase 1: acquire the first request(s), parking on the home
+        // condvar when every shard is empty.
+        let (mut batch, class) = 'first: loop {
+            if let Some(t) = self.try_take(home, max) {
+                break 'first t;
             }
-            if g.closed {
-                return None;
+            for k in 1..nshards {
+                if let Some(t) = self.try_take((home + k) % nshards, max) {
+                    break 'first t;
+                }
             }
-            g = wait_clean(&self.cv, g);
-        }
-        let mut batch = Vec::with_capacity(max);
-        while batch.len() < max {
-            match g.queue.pop_front() {
-                Some(r) => batch.push(r),
-                None => break,
-            }
-        }
-        if batch.len() < max && !g.closed {
-            let deadline = Instant::now() + timeout;
+            let shard = &self.shards[home];
+            let mut g = lock_clean(&shard.inner);
             loop {
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
+                if g.lanes.iter().any(|q| !q.is_empty()) {
+                    break; // re-check home under its lock before parking
                 }
-                let (g2, timed_out) = wait_timeout_clean(&self.cv, g, left);
-                g = g2;
-                while batch.len() < max {
-                    match g.queue.pop_front() {
-                        Some(r) => batch.push(r),
-                        None => break,
+                if g.closed {
+                    if self.len() == 0 {
+                        return None;
                     }
+                    break; // closed but a sibling still holds work: steal it
                 }
-                if batch.len() >= max || g.closed || timed_out {
-                    break;
+                self.idle_workers.fetch_add(1, Ordering::Relaxed);
+                if self.timed_park() {
+                    let (g2, timed_out) = wait_timeout_clean(&shard.cv, g, STEAL_POLL);
+                    g = g2;
+                    self.idle_workers.fetch_sub(1, Ordering::Relaxed);
+                    if timed_out {
+                        break; // go retry the steal sweep
+                    }
+                } else {
+                    g = wait_clean(&shard.cv, g);
+                    self.idle_workers.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        };
+        // Phase 2: deadline-aware fill-wait on the home shard. The wait cap
+        // is re-derived each iteration from the earliest in-batch deadline
+        // so a tight-deadline arrival mid-wait shortens the remaining wait.
+        if batch.len() < max {
+            let fill_until = Instant::now() + timeout;
+            let skip = self.len() == 0 && self.idle_workers.load(Ordering::Relaxed) > 0;
+            if !skip {
+                let shard = &self.shards[home];
+                let mut g = lock_clean(&shard.inner);
+                loop {
+                    let mut took = 0usize;
+                    while batch.len() < max {
+                        match g.lanes[class].pop_front() {
+                            Some(r) => {
+                                batch.push(r);
+                                took += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                    if took > 0 {
+                        self.class_queued[class].fetch_sub(took, Ordering::SeqCst);
+                    }
+                    if batch.len() >= max || g.closed {
+                        break;
+                    }
+                    // A foreign-class arrival may have consumed our wakeup
+                    // token; pass it along so a parked sibling serves it.
+                    if g.lanes.iter().enumerate().any(|(i, q)| i != class && !q.is_empty()) {
+                        shard.cv.notify_one();
+                    }
+                    let now = Instant::now();
+                    let cap_at = batch
+                        .iter()
+                        .filter_map(|r| r.deadline)
+                        .min()
+                        .map(|d| d.checked_sub(DEADLINE_FILL_MARGIN).unwrap_or(now))
+                        .map_or(fill_until, |d| d.min(fill_until));
+                    let left = cap_at.saturating_duration_since(now);
+                    if left.is_zero() {
+                        break;
+                    }
+                    let (g2, _timed_out) = wait_timeout_clean(&shard.cv, g, left);
+                    g = g2;
                 }
             }
         }
-        let depth = g.queue.len();
-        Some((batch, depth))
+        let depth = self.len();
+        Some((batch, depth, class))
     }
 }
 
@@ -381,7 +683,7 @@ struct SupervisorState {
 /// the queue so no `Pending::wait` can block forever.
 struct AliveGuard {
     alive: Arc<AtomicUsize>,
-    queue: Arc<SharedQueue>,
+    queue: Arc<ShardedQueue>,
     sup: Arc<SupervisorState>,
 }
 
@@ -396,22 +698,33 @@ impl Drop for AliveGuard {
     }
 }
 
+/// Per-tenant hot-swap surface: each class carries its own
+/// [`PolicySwitch`] (so a governor stepping one tenant's ladder never
+/// moves another tenant's rung) and its own epoch → [`PowerModel`] map so
+/// energy accounting follows the rung that actually served the batch.
+/// Every class starts on the service's start policy as generation 0.
+struct ClassPlane {
+    switch: Arc<PolicySwitch>,
+    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+}
+
 /// Everything a pool worker shares with its siblings (one `Arc` bundle per
 /// worker instead of a parameter per handle). The policy half is the
-/// hot-swap surface: `switch` is loaded once per batch, `powers` maps each
-/// installed epoch to its precomputed [`PowerModel`] so energy accounting
-/// follows the rung that actually served the batch. The fault half is the
-/// chaos surface: `faults` (when attached) draws the per-batch injection
-/// schedule, `monitor` bands the live CV residual, `batch_seq` numbers
-/// batches pool-wide for the periodic integrity sweep.
+/// hot-swap surface: the batch's class plane `switch` is loaded once per
+/// batch, its `powers` maps each installed epoch to its precomputed
+/// [`PowerModel`]. The fault half is the chaos surface: `faults` (when
+/// attached) draws the per-batch injection schedule, `monitor` bands the
+/// live CV residual, `batch_seq` numbers batches pool-wide — shard- and
+/// class-agnostic, so a chaos schedule addresses sharded pools exactly
+/// like the single queue.
 #[derive(Clone)]
 struct WorkerShared {
     engine: Arc<Engine>,
-    queue: Arc<SharedQueue>,
+    queue: Arc<ShardedQueue>,
     metrics: Arc<Metrics>,
     telemetry: Arc<Telemetry>,
-    switch: Arc<PolicySwitch>,
-    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+    /// One policy plane per tenant class (index = class id).
+    planes: Arc<Vec<ClassPlane>>,
     /// Uniform fallback for generations installed with `policy == None`.
     base_opts: ForwardOpts,
     base_power: PowerModel,
@@ -434,19 +747,27 @@ impl WorkerShared {
         }
     }
 
-    /// Power model for a captured generation, memoized per worker: epochs
-    /// change at governor-dwell cadence (hundreds of ms), so the shared
-    /// `powers` lock is only touched when the epoch actually moved — the
-    /// steady-state batch path never contends on it.
+    /// Power model for a captured generation of one class, memoized per
+    /// worker: epochs change at governor-dwell cadence (hundreds of ms),
+    /// so the class's shared `powers` lock is only touched when that
+    /// class's epoch actually moved — the steady-state batch path never
+    /// contends on it.
     fn resolve_power<'c>(
         &self,
+        class: usize,
         stamped: &StampedPolicy,
         cache: &'c mut (u64, PowerModel),
     ) -> &'c PowerModel {
         if cache.0 != stamped.epoch {
-            let power = lock_clean(&self.powers)
-                .get(&stamped.epoch)
-                .cloned()
+            let power = self
+                .planes
+                .get(class)
+                .map(|plane| {
+                    lock_clean(&plane.powers)
+                        .get(&stamped.epoch)
+                        .cloned()
+                        .unwrap_or_else(|| self.base_power.clone())
+                })
                 .unwrap_or_else(|| self.base_power.clone());
             *cache = (stamped.epoch, power);
         }
@@ -510,7 +831,7 @@ impl PolicyInstaller {
 /// A running inference service: a supervised worker pool over one shared
 /// engine.
 pub struct InferenceService {
-    queue: Arc<SharedQueue>,
+    queue: Arc<ShardedQueue>,
     /// Live worker handles; shared with the supervisor, which reaps crashed
     /// entries and pushes respawned ones.
     handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
@@ -518,8 +839,9 @@ pub struct InferenceService {
     sup: Arc<SupervisorState>,
     alive: Arc<AtomicUsize>,
     engine: Arc<Engine>,
-    switch: Arc<PolicySwitch>,
-    powers: Arc<Mutex<HashMap<u64, PowerModel>>>,
+    planes: Arc<Vec<ClassPlane>>,
+    /// Resolved tenant classes (index = class id; 0 = default tenant).
+    tenants: Vec<TenantClass>,
     n_array: u32,
     pub metrics: Arc<Metrics>,
     /// Power model of the generation the service STARTED with (epoch 0);
@@ -542,9 +864,33 @@ impl InferenceService {
             cfg.policy.as_ref(),
             std::env::var("CVAPPROX_SERVICE_POLICY").ok().as_deref(),
         )?;
+        // Resolve tenant classes: explicit config wins, else the
+        // CVAPPROX_TENANT_CLASSES spec, else one default class carrying the
+        // legacy queue_cap. A malformed spec fails here, before any thread.
+        let tenants: Vec<TenantClass> = if !cfg.tenants.is_empty() {
+            cfg.tenants.clone()
+        } else {
+            match std::env::var("CVAPPROX_TENANT_CLASSES") {
+                Ok(spec) if !spec.trim().is_empty() => parse_tenant_spec(&spec)?,
+                _ => {
+                    let mut class = TenantClass::new("default");
+                    class.queue_cap = cfg.queue_cap;
+                    vec![class]
+                }
+            }
+        };
+        let n_workers = cfg.workers.max(1);
+        let shards = resolve_shards(cfg.shards, n_workers);
         let metrics = Arc::new(Metrics::new());
-        let queue = Arc::new(SharedQueue::new(cfg.queue_cap));
-        let telemetry = Arc::new(Telemetry::new(engine.model.mac_layers()));
+        let queue = Arc::new(ShardedQueue::new(
+            shards,
+            tenants.iter().map(|t| t.queue_cap).collect(),
+        ));
+        let telemetry = Arc::new(Telemetry::with_classes(
+            tenants.len(),
+            crate::qos::telemetry::DEFAULT_WINDOW,
+            engine.model.mac_layers(),
+        ));
         // Warm the weight-side plans once, before any worker spawns: the
         // pool shares one PlanCache through the Arc'd engine, so no request
         // on any worker pays the one-time build. With a policy, each layer
@@ -570,19 +916,27 @@ impl InferenceService {
                 (PowerModel::new(cfg.family, cfg.m, cfg.n_array), opts)
             }
         };
-        // Generation 0 is the start configuration; its power model seeds
-        // the epoch → power map the workers consult per batch.
-        let switch = Arc::new(PolicySwitch::new(policy));
-        let powers = Arc::new(Mutex::new(HashMap::from([(0u64, power.clone())])));
+        // Generation 0 is the start configuration; every tenant class gets
+        // its own policy plane seeded with it, so per-class governors can
+        // step their ladders independently from the same origin.
+        let planes: Arc<Vec<ClassPlane>> = Arc::new(
+            (0..tenants.len())
+                .map(|_| ClassPlane {
+                    switch: Arc::new(PolicySwitch::new(policy.clone())),
+                    powers: Arc::new(Mutex::new(HashMap::from([(0u64, power.clone())]))),
+                })
+                .collect(),
+        );
         // Anchor the throughput clock at "service ready" — after the plan
         // warm-up, so the one-time build does not deflate throughput /
         // occupancy, but before any request can complete, so even a
         // one-request session reports a rate. Also size the per-worker
-        // counters for the whole pool so idle workers show up as zeros.
+        // counters for the whole pool so idle workers show up as zeros,
+        // and name the per-class rows.
         metrics.mark_started();
-        metrics.init_workers(cfg.workers.max(1));
+        metrics.init_workers(n_workers);
+        metrics.init_classes(&tenants.iter().map(|t| t.name.clone()).collect::<Vec<_>>());
         let engine = Arc::new(engine);
-        let n_workers = cfg.workers.max(1);
         let alive = Arc::new(AtomicUsize::new(0));
         let sup = Arc::new(SupervisorState::default());
         let faults = cfg.faults.clone().map(|c| Arc::new(FaultPlan::new(c)));
@@ -591,8 +945,7 @@ impl InferenceService {
             queue: queue.clone(),
             metrics: metrics.clone(),
             telemetry: telemetry.clone(),
-            switch: switch.clone(),
-            powers: powers.clone(),
+            planes: planes.clone(),
             base_opts,
             base_power: power.clone(),
             alive: alive.clone(),
@@ -649,8 +1002,8 @@ impl InferenceService {
             sup,
             alive,
             engine,
-            switch,
-            powers,
+            planes,
+            tenants,
             n_array: cfg.n_array,
             metrics,
             power,
@@ -658,26 +1011,64 @@ impl InferenceService {
         })
     }
 
-    /// Hot-swap handle for governors/tests (see [`PolicyInstaller`]).
-    pub fn installer(&self) -> PolicyInstaller {
-        PolicyInstaller {
-            engine: self.engine.clone(),
-            switch: self.switch.clone(),
-            powers: self.powers.clone(),
-            n_array: self.n_array,
-        }
+    /// The resolved tenant classes (index = class id; 0 = default).
+    pub fn tenants(&self) -> &[TenantClass] {
+        &self.tenants
     }
 
-    /// Validate, warm and atomically install a new per-layer policy; new
-    /// batches serve it immediately, in-flight batches complete on their
-    /// captured generation. Returns the new epoch.
+    /// Number of queue shards this pool resolved to (explicit config >
+    /// `CVAPPROX_SHARDS` > one per worker, clamped to the worker count).
+    pub fn n_shards(&self) -> usize {
+        self.queue.n_shards()
+    }
+
+    /// Hot-swap handle for the default tenant (see [`PolicyInstaller`]).
+    pub fn installer(&self) -> PolicyInstaller {
+        self.installer_for(0).unwrap_or_else(|| PolicyInstaller {
+            engine: self.engine.clone(),
+            switch: Arc::new(PolicySwitch::new(None)),
+            powers: Arc::new(Mutex::new(HashMap::new())),
+            n_array: self.n_array,
+        })
+    }
+
+    /// Hot-swap handle for one tenant class: what that class's QoS
+    /// governor holds. `None` for an out-of-range class id.
+    pub fn installer_for(&self, class: usize) -> Option<PolicyInstaller> {
+        self.planes.get(class).map(|plane| PolicyInstaller {
+            engine: self.engine.clone(),
+            switch: plane.switch.clone(),
+            powers: plane.powers.clone(),
+            n_array: self.n_array,
+        })
+    }
+
+    /// Validate, warm and atomically install a new per-layer policy for
+    /// the default tenant; new batches serve it immediately, in-flight
+    /// batches complete on their captured generation. Returns the new
+    /// epoch.
     pub fn install_policy(&self, policy: SharedPolicy) -> Result<u64> {
         self.installer().install(policy)
     }
 
-    /// Epoch of the currently serving policy generation.
+    /// Install a policy into one tenant class's plane (other classes are
+    /// untouched — the per-tenant isolation anchor).
+    pub fn install_policy_for(&self, class: usize, policy: SharedPolicy) -> Result<u64> {
+        match self.installer_for(class) {
+            Some(installer) => installer.install(policy),
+            None => anyhow::bail!("unknown tenant class {class}"),
+        }
+    }
+
+    /// Epoch of the default tenant's currently serving generation.
     pub fn current_epoch(&self) -> u64 {
-        self.switch.epoch()
+        self.current_epoch_for(0)
+    }
+
+    /// Epoch of one tenant class's serving generation (0 for an unknown
+    /// class — epoch 0 is the start generation every class began on).
+    pub fn current_epoch_for(&self, class: usize) -> u64 {
+        self.planes.get(class).map_or(0, |plane| plane.switch.epoch())
     }
 
     /// The shared engine: integrity probes (`verify_integrity`,
@@ -699,8 +1090,15 @@ impl InferenceService {
         Arc::new(move || queue.len())
     }
 
+    /// Per-class queue-depth probe — what each tenant's governor polls, so
+    /// one tenant's backlog never reads as another's load.
+    pub fn class_depth_probe(&self, class: usize) -> Arc<dyn Fn() -> usize + Send + Sync> {
+        let queue = self.queue.clone();
+        Arc::new(move || queue.class_len(class))
+    }
+
     /// Submit an image with typed rejection: `Err(Closed)` after shutdown,
-    /// `Err(Overloaded)` when the bounded queue is full (counted in
+    /// `Err(Overloaded)` when the class's bounded queue is full (counted in
     /// `MetricsSnapshot::rejected_overload`). Never panics, never hangs.
     ///
     /// A momentarily empty pool (every worker crashed at once) is NOT
@@ -711,16 +1109,41 @@ impl InferenceService {
         image: Tensor,
         deadline: Option<Instant>,
     ) -> std::result::Result<Pending, ReplyError> {
+        self.try_submit_for(0, image, deadline)
+    }
+
+    /// Submit for one tenant class. An unknown class id is a typed
+    /// `BadInput` (never a panic); a `None` deadline picks up the class's
+    /// [`TenantClass::default_deadline`].
+    pub fn try_submit_for(
+        &self,
+        class: usize,
+        image: Tensor,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Pending, ReplyError> {
+        if class >= self.tenants.len() {
+            return Err(ReplyError::BadInput(format!(
+                "unknown tenant class {class} (service has {})",
+                self.tenants.len()
+            )));
+        }
         if self.alive.load(Ordering::SeqCst) == 0 && self.sup.done.load(Ordering::SeqCst) {
             return Err(ReplyError::Closed);
         }
+        let enqueued = Instant::now();
+        let deadline = deadline.or_else(|| {
+            self.tenants
+                .get(class)
+                .and_then(|t| t.default_deadline)
+                .map(|budget| enqueued + budget)
+        });
         let (rtx, rrx) = mpsc::sync_channel(1);
-        let req = Request { image, enqueued: Instant::now(), deadline, respond: rtx };
+        let req = Request { image, enqueued, deadline, class, respond: rtx };
         match self.queue.push(req) {
             Ok(()) => Ok(Pending { rx: rrx }),
             Err((_req, e)) => {
                 if e == ReplyError::Overloaded {
-                    self.metrics.record_overload();
+                    self.metrics.record_overload_for(class);
                 }
                 Err(e)
             }
@@ -733,6 +1156,11 @@ impl InferenceService {
         self.try_submit(image, None).map_err(anyhow::Error::from)
     }
 
+    /// Submit for one tenant class (see [`InferenceService::try_submit_for`]).
+    pub fn submit_for(&self, class: usize, image: Tensor) -> Result<Pending> {
+        self.try_submit_for(class, image, None).map_err(anyhow::Error::from)
+    }
+
     /// Submit with a latency budget: the request is answered
     /// `Err(Deadline)` if no worker dequeues it within `budget`.
     pub fn submit_with_deadline(
@@ -741,6 +1169,16 @@ impl InferenceService {
         budget: Duration,
     ) -> std::result::Result<Pending, ReplyError> {
         self.try_submit(image, Some(Instant::now() + budget))
+    }
+
+    /// Submit for one tenant class with an explicit latency budget.
+    pub fn submit_with_deadline_for(
+        &self,
+        class: usize,
+        image: Tensor,
+        budget: Duration,
+    ) -> std::result::Result<Pending, ReplyError> {
+        self.try_submit_for(class, image, Some(Instant::now() + budget))
     }
 
     /// Submit and wait (convenience).
@@ -919,9 +1357,15 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
     let mut scratch = Scratch::new();
     let (panel, acc) = shared.engine.model.max_gemm_footprint();
     scratch.reserve(panel * batch_cap, acc * batch_cap);
-    // Per-worker (epoch → power) memo: epoch 0 is the start generation.
-    let mut power_cache: (u64, PowerModel) = (0, shared.base_power.clone());
-    while let Some((batch, depth)) = shared.queue.pop_batch(batch_cap, cfg.batch_timeout) {
+    // Per-worker, per-class (epoch → power) memo: every class starts on
+    // epoch 0, the start generation.
+    let mut power_caches: Vec<(u64, PowerModel)> =
+        vec![(0, shared.base_power.clone()); shared.planes.len()];
+    // Home shard: worker groups map onto shards round-robin, so respawned
+    // workers (monotonic ids) keep the shard coverage balanced.
+    let home = worker_id % shared.queue.n_shards();
+    while let Some((batch, depth, class)) = shared.queue.pop_batch(home, batch_cap, cfg.batch_timeout)
+    {
         if batch.is_empty() {
             continue;
         }
@@ -929,10 +1373,12 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
         // given up — don't spend a batch slot), then malformed images (one
         // bad request cannot poison the whole batched forward).
         let now = Instant::now();
+        let mut expired = 0usize;
         let mut good: Vec<Request> = Vec::with_capacity(batch.len());
         for req in batch {
             if req.deadline.is_some_and(|d| now > d) {
-                shared.metrics.record_deadline_expired();
+                shared.metrics.record_deadline_expired_for(class);
+                expired += 1;
                 let _ = req.respond.send(Err(ReplyError::Deadline));
                 continue;
             }
@@ -947,7 +1393,16 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
                 let _ = req.respond.send(Err(ReplyError::BadInput(msg)));
             }
         }
+        if expired > 0 {
+            // Screened-out requests never executed: count them in their own
+            // telemetry column instead of letting them inflate (or silently
+            // vanish from) the occupancy books — see `qos::telemetry`.
+            shared.telemetry.record_expired_for(class, expired);
+        }
         if good.is_empty() {
+            // The pop still observed real queue pressure; record the depth
+            // sample without an occupancy sample (nothing executed).
+            shared.telemetry.record_depth_for(class, depth);
             continue;
         }
         // The ledger owns the batch's requests across the panic boundary:
@@ -959,10 +1414,11 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
         let run = catch_unwind(AssertUnwindSafe(|| {
             run_batch(
                 worker_id,
+                class,
                 &shared,
                 &ledger,
                 &mut scratch,
-                &mut power_cache,
+                &mut power_caches,
                 macs,
                 mac_layers,
                 batch_cap,
@@ -988,6 +1444,7 @@ fn worker_loop(worker_id: usize, shared: WorkerShared, cfg: ServiceConfig) {
 struct BatchGauge<'a> {
     shared: &'a WorkerShared,
     worker_id: usize,
+    class: usize,
     n: usize,
     cap: usize,
     depth: usize,
@@ -997,7 +1454,7 @@ struct BatchGauge<'a> {
 impl Drop for BatchGauge<'_> {
     fn drop(&mut self) {
         self.shared.metrics.record_batch(self.worker_id, self.n, self.t0.elapsed());
-        self.shared.telemetry.record_batch(self.n, self.cap, self.depth);
+        self.shared.telemetry.record_batch_for(self.class, self.n, self.cap, self.depth);
     }
 }
 
@@ -1008,10 +1465,11 @@ impl Drop for BatchGauge<'_> {
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     worker_id: usize,
+    class: usize,
     shared: &WorkerShared,
     ledger: &Mutex<Vec<Request>>,
     scratch: &mut Scratch,
-    power_cache: &mut (u64, PowerModel),
+    power_caches: &mut [(u64, PowerModel)],
     macs: u64,
     mac_layers: usize,
     batch_cap: usize,
@@ -1051,27 +1509,33 @@ fn run_batch(
             panic!("injected worker panic (chaos schedule)");
         }
     }
-    // Capture the policy generation ONCE per batch: the whole batch runs
-    // under this epoch's policy (a concurrent install affects only later
-    // batches), which is exactly the hot-swap consistency invariant the
-    // property tests pin.
-    let stamped = shared.switch.load();
+    // Capture the batch class's policy generation ONCE per batch: the
+    // whole batch runs under this epoch's policy (a concurrent install
+    // affects only later batches of this class, and other classes' planes
+    // are untouched), which is exactly the per-tenant hot-swap consistency
+    // invariant the property tests pin.
+    let stamped = match shared.planes.get(class) {
+        Some(plane) => plane.switch.load(),
+        None => return, // unreachable: submits validate the class id
+    };
     let mut opts = shared.resolve_opts(&stamped);
     // Batch-local CV sampler: its sums become the batch's integrity
     // signature AND — only once the batch is trusted — the governor's
     // telemetry. Replayed (corrupt) attempts drain into the void.
     let local = Arc::new(CvProxySampler::new(mac_layers));
     opts.cv_proxy = Some(local.clone());
-    let power = shared.resolve_power(&stamped, power_cache).clone();
+    let mut fallback = (0u64, shared.base_power.clone());
+    let cache = power_caches.get_mut(class).unwrap_or(&mut fallback);
+    let power = shared.resolve_power(class, &stamped, cache).clone();
     let mut requests = lock_clean(ledger);
     let n = requests.len();
     // Raise the in-flight gauge before the forward: requests inside an
     // executing batch are visible to neither the queue depth nor the
     // completion count, and the governor must not mistake a pool
     // saturated by long batches for an idle one.
-    shared.telemetry.batch_started(n);
+    shared.telemetry.batch_started_for(class, n);
     let t0 = Instant::now();
-    let _gauge = BatchGauge { shared, worker_id, n, cap: batch_cap, depth, t0 };
+    let _gauge = BatchGauge { shared, worker_id, class, n, cap: batch_cap, depth, t0 };
     let chaos = shared.faults.is_some();
     let sweep_due = seq % INTEGRITY_SWEEP_BATCHES == 0;
     let mut outcome = None;
@@ -1120,10 +1584,10 @@ fn run_batch(
     }
     match (outcome, forward_err) {
         (Some((all_logits, raw)), _) => {
-            // The batch is trusted: fold its CV sums into the shared
-            // telemetry exactly once (replayed attempts never pollute the
-            // governor's windows).
-            shared.telemetry.record_cv(&raw);
+            // The batch is trusted: fold its CV sums into this class's
+            // partition of the shared telemetry exactly once (replayed
+            // attempts never pollute any governor's windows).
+            shared.telemetry.record_cv_for(class, &raw);
             if faults.drop_replies {
                 // Chaos "lost reply": drop every channel unanswered; each
                 // client observes a disconnect, typed as `WorkerCrashed` —
@@ -1135,8 +1599,8 @@ fn run_batch(
             for (req, logits) in requests.drain(..).zip(all_logits) {
                 let queue_wait = t0.saturating_duration_since(req.enqueued);
                 let latency = req.enqueued.elapsed();
-                shared.metrics.record(latency, queue_wait, macs, &power);
-                shared.telemetry.record_latency(latency);
+                shared.metrics.record_for(class, latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency_for(class, latency);
                 let reply = if !logits.is_empty() && logits.iter().all(|v| v.is_nan()) {
                     Err(ReplyError::BadInput(
                         "all logits are NaN (non-finite model output)".to_string(),
@@ -1147,6 +1611,7 @@ fn run_batch(
                         logits,
                         latency,
                         epoch: stamped.epoch,
+                        tenant: class,
                     })
                 };
                 let _ = req.respond.send(reply);
@@ -1157,8 +1622,8 @@ fn run_batch(
             for req in requests.drain(..) {
                 let queue_wait = t0.saturating_duration_since(req.enqueued);
                 let latency = req.enqueued.elapsed();
-                shared.metrics.record(latency, queue_wait, macs, &power);
-                shared.telemetry.record_latency(latency);
+                shared.metrics.record_for(class, latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency_for(class, latency);
                 let _ = req.respond.send(Err(ReplyError::BadInput(msg.clone())));
             }
         }
@@ -1169,8 +1634,8 @@ fn run_batch(
             for req in requests.drain(..) {
                 let queue_wait = t0.saturating_duration_since(req.enqueued);
                 let latency = req.enqueued.elapsed();
-                shared.metrics.record(latency, queue_wait, macs, &power);
-                shared.telemetry.record_latency(latency);
+                shared.metrics.record_for(class, latency, queue_wait, macs, &power);
+                shared.telemetry.record_latency_for(class, latency);
                 let _ = req.respond.send(Err(ReplyError::Integrity));
             }
         }
@@ -2041,13 +2506,13 @@ mod tests {
         assert!(snap.replayed_batches >= 1);
     }
 
-    #[test]
-    fn chaos_every_request_gets_exactly_one_reply_ok_or_typed() {
-        // The chaos property pinned by ISSUE 6: under a mixed fault
-        // schedule (LUT/plan corruption, panics, spikes, dropped replies)
-        // every submitted request resolves to exactly one reply — Ok and
-        // bit-identical to the fault-free reference, or a typed error.
-        // No hang, no silent corruption.
+    /// Body of the chaos property, parameterized over the queue shape so
+    /// the sharded work-stealing path is held to exactly the ISSUE 6 bar
+    /// the single queue was: under a mixed fault schedule every submitted
+    /// request resolves to exactly one reply — Ok and bit-identical to the
+    /// fault-free reference, or a typed error. No hang, no silent
+    /// corruption.
+    fn chaos_roundtrip(shards: usize, workers: usize) {
         let model = testutil::tiny_model();
         let reference = Engine::new(model.clone());
         let mut engine = Engine::new(model);
@@ -2056,7 +2521,8 @@ mod tests {
             family: Family::Perforated,
             m: 2,
             use_cv: true,
-            workers: 2,
+            workers,
+            shards,
             batch_size: 2,
             faults: Some(FaultConfig {
                 seed: 20260808,
@@ -2099,5 +2565,236 @@ mod tests {
         let snap = svc.shutdown();
         assert!(snap.injected_faults > 0, "the schedule never fired across ~60+ batches");
         assert!(snap.completed >= ok);
+    }
+
+    #[test]
+    fn chaos_every_request_gets_exactly_one_reply_ok_or_typed() {
+        // shards=1 reproduces the legacy single-queue shape.
+        chaos_roundtrip(1, 2);
+    }
+
+    #[test]
+    fn chaos_property_holds_on_sharded_queue() {
+        // Acceptance: the same property at shards=4 — fault schedules
+        // address the sharded pool (pool-wide batch_seq) exactly like the
+        // single queue.
+        chaos_roundtrip(4, 4);
+    }
+
+    #[test]
+    fn lone_tight_deadline_request_is_served_not_expired() {
+        // PR 9 headline regression: a lone request with a 5 ms budget
+        // under a 50 ms batch window. The deadline-blind batcher held it
+        // the full window and then rejected it at the dequeue screen; the
+        // deadline-aware fill-wait must cap the wait at the deadline and
+        // serve it in time.
+        let cfg = ServiceConfig {
+            workers: 1,
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        let t0 = Instant::now();
+        let p = svc
+            .submit_with_deadline(testutil::tiny_image(0), Duration::from_millis(5))
+            .unwrap();
+        let reply = p.wait_reply();
+        let elapsed = t0.elapsed();
+        assert!(
+            reply.is_ok(),
+            "tight-deadline request under a long batch window must be served, got {reply:?}"
+        );
+        assert!(
+            elapsed < Duration::from_millis(45),
+            "reply took {elapsed:?}: the fill-wait ran the full 50 ms window \
+             instead of capping at the 5 ms deadline"
+        );
+        let snap = svc.shutdown();
+        assert_eq!(snap.expired_deadline, 0, "nothing may expire");
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn idle_pool_skips_the_fill_wait() {
+        // Companion satellite: when nothing else is queued and another
+        // worker sits parked, filling the batch gains nothing — the
+        // batcher must run the singleton immediately instead of sleeping
+        // out the window. Four sequential no-deadline requests under a
+        // 150 ms window would cost >= 600 ms deadline-blind; with the
+        // idle-skip they return almost instantly.
+        let cfg = ServiceConfig {
+            workers: 2,
+            batch_size: 8,
+            batch_timeout: Duration::from_millis(150),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // let both workers park
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            svc.infer(testutil::tiny_image(i)).unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(450),
+            "4 sequential singleton requests took {elapsed:?}: the idle-skip \
+             never engaged (deadline-blind cost would be >= 600 ms)"
+        );
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 4);
+    }
+
+    #[test]
+    fn sharded_pool_serves_concurrent_clients_bit_identically() {
+        // The work-stealing tentpole under real concurrency: explicit
+        // shards=4 / workers=4, six hammering clients, every reply
+        // bit-equal to a single-threaded forward on an identical engine.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let cfg = ServiceConfig {
+            family: Family::Truncated,
+            m: 6,
+            use_cv: true,
+            workers: 4,
+            shards: 4,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let opts = ForwardOpts::approx(Family::Truncated, 6, true);
+        let clients = 6usize;
+        let per_client = 8usize;
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let svc = &svc;
+                let reference = &reference;
+                let opts = &opts;
+                s.spawn(move || {
+                    for i in 0..per_client {
+                        let img = testutil::tiny_image((t * 1000 + i) as u64);
+                        let reply = svc.infer(img.clone()).unwrap();
+                        let want = reference.forward(&img, opts).unwrap();
+                        assert_eq!(reply.logits, want, "client {t} img {i}");
+                        assert_eq!(reply.tenant, 0);
+                    }
+                });
+            }
+        });
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, (clients * per_client) as u64);
+        assert_eq!(snap.worker_requests.iter().sum::<u64>(), snap.completed);
+    }
+
+    #[test]
+    fn tenant_classes_isolate_policies_and_metrics() {
+        // Two tenants over one pool: installing an approximate policy into
+        // class 1 must leave class 0 serving exact, both bit-identical to
+        // their own references, with partitioned per-class metrics rows.
+        let model = testutil::tiny_model();
+        let reference = Engine::new(model.clone());
+        let cfg = ServiceConfig {
+            workers: 2,
+            batch_size: 4,
+            tenants: vec![TenantClass::new("light"), TenantClass::new("heavy")],
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+        let approx: SharedPolicy =
+            Arc::new(crate::nn::LayerPolicy::uniform(Family::Perforated, 2, true, 2).unwrap());
+        let epoch1 = svc.install_policy_for(1, approx.clone()).unwrap();
+        assert_eq!(epoch1, 1);
+        assert_eq!(svc.current_epoch_for(0), 0, "class 0's plane must not move");
+        assert_eq!(svc.current_epoch_for(1), 1);
+        let exact_opts = ForwardOpts::default();
+        let approx_opts = ForwardOpts::with_policy(approx);
+        for i in 0..12u64 {
+            let img = testutil::tiny_image(i);
+            let r0 = svc.submit_for(0, img.clone()).unwrap().wait().unwrap();
+            assert_eq!(r0.logits, reference.forward(&img, &exact_opts).unwrap(), "light {i}");
+            assert_eq!((r0.tenant, r0.epoch), (0, 0));
+            let r1 = svc.submit_for(1, img.clone()).unwrap().wait().unwrap();
+            assert_eq!(r1.logits, reference.forward(&img, &approx_opts).unwrap(), "heavy {i}");
+            assert_eq!((r1.tenant, r1.epoch), (1, 1));
+        }
+        // Unknown class: typed rejection, never a panic.
+        assert!(matches!(
+            svc.try_submit_for(7, testutil::tiny_image(0), None),
+            Err(ReplyError::BadInput(_))
+        ));
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 24);
+        assert_eq!(snap.classes.len(), 2);
+        assert_eq!(snap.classes[0].name, "light");
+        assert_eq!(snap.classes[1].name, "heavy");
+        assert_eq!(snap.classes[0].completed, 12);
+        assert_eq!(snap.classes[1].completed, 12);
+    }
+
+    #[test]
+    fn tenant_default_deadline_and_admission_bound_apply_per_class() {
+        // Class 1 carries a 5 ms default deadline; with every batch
+        // spiking 30 ms its submit (no explicit deadline) must expire at
+        // dequeue while class 0's request is served — and the expiry lands
+        // in class 1's metrics row only.
+        let mut tight = TenantClass::new("tight");
+        tight.default_deadline = Some(Duration::from_millis(5));
+        let cfg = ServiceConfig {
+            workers: 1,
+            batch_size: 1,
+            tenants: vec![TenantClass::new("lax"), tight],
+            faults: Some(FaultConfig {
+                spike_per_mille: 1000,
+                spike: Duration::from_millis(30),
+                ..FaultConfig::quiet(6)
+            }),
+            ..Default::default()
+        };
+        let svc = InferenceService::start(Engine::new(testutil::tiny_model()), cfg).unwrap();
+        let pa = svc.submit_for(0, testutil::tiny_image(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let pb = svc.submit_for(1, testutil::tiny_image(1)).unwrap();
+        assert!(pa.wait().is_ok());
+        assert_eq!(pb.wait_reply().unwrap_err(), ReplyError::Deadline);
+        let snap = svc.shutdown();
+        assert_eq!(snap.expired_deadline, 1);
+        assert_eq!(snap.classes[1].expired_deadline, 1);
+        assert_eq!(snap.classes[0].expired_deadline, 0);
+        assert_eq!(snap.classes[0].completed, 1);
+    }
+
+    #[test]
+    fn tenant_spec_parses_and_rejects() {
+        let classes =
+            parse_tenant_spec("interactive:cap=64:deadline_ms=20, batchy:cap=256 ,best_effort")
+                .unwrap();
+        assert_eq!(classes.len(), 3);
+        assert_eq!(classes[0].name, "interactive");
+        assert_eq!(classes[0].queue_cap, 64);
+        assert_eq!(classes[0].default_deadline, Some(Duration::from_millis(20)));
+        assert_eq!(classes[1].name, "batchy");
+        assert_eq!(classes[1].queue_cap, 256);
+        assert_eq!(classes[1].default_deadline, None);
+        assert_eq!(classes[2].name, "best_effort");
+        assert_eq!(classes[2].queue_cap, 0);
+        assert!(parse_tenant_spec("").is_err());
+        assert!(parse_tenant_spec(":cap=4").is_err());
+        assert!(parse_tenant_spec("a:cap=notanumber").is_err());
+        assert!(parse_tenant_spec("a:wat=4").is_err());
+    }
+
+    #[test]
+    fn shard_count_resolution_clamps_to_workers() {
+        // Explicit config wins and clamps; 0 falls through to the env/auto
+        // path, which defaults to one shard per worker. (The env read
+        // itself is exercised by the CI serving matrix, not here — tests
+        // must not mutate process-global env.)
+        assert_eq!(resolve_shards(1, 8), 1);
+        assert_eq!(resolve_shards(4, 8), 4);
+        assert_eq!(resolve_shards(16, 4), 4, "shards clamp to the worker count");
+        assert_eq!(resolve_shards(3, 0), 1, "workers floor is 1");
+        if std::env::var("CVAPPROX_SHARDS").is_err() {
+            assert_eq!(resolve_shards(0, 6), 6, "auto = one shard per worker");
+        }
     }
 }

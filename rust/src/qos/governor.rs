@@ -186,15 +186,32 @@ pub struct Governor {
 
 impl Governor {
     /// Validate the ladder against the served model, install rung 0, and
-    /// start governing. The governor holds only `Arc` handles into the
-    /// service (telemetry + installer), so the service can be shut down
-    /// independently; an install into a torn-down pool simply has no one
-    /// left to serve it.
+    /// start governing the **default tenant** (class 0). The governor
+    /// holds only `Arc` handles into the service (telemetry + installer),
+    /// so the service can be shut down independently; an install into a
+    /// torn-down pool simply has no one left to serve it.
     pub fn start(svc: &InferenceService, ladder: Ladder, cfg: QosConfig) -> Result<Governor> {
-        let installer = svc.installer();
+        Governor::start_for_class(svc, 0, ladder, cfg)
+    }
+
+    /// Start a governor bound to ONE tenant class: it polls that class's
+    /// telemetry partition (`window_for`), its queue depth and in-flight
+    /// gauge, and installs rungs into that class's policy plane only.
+    /// Running one governor per class satisfies the telemetry poller
+    /// contract — each class's window has exactly one drainer — and one
+    /// tenant stepping down its ladder never moves another tenant's rung.
+    pub fn start_for_class(
+        svc: &InferenceService,
+        class: usize,
+        ladder: Ladder,
+        cfg: QosConfig,
+    ) -> Result<Governor> {
+        let installer = svc
+            .installer_for(class)
+            .with_context(|| format!("unknown tenant class {class}"))?;
         ladder.validate_for(installer.model()).context("qos ladder")?;
         let telemetry = svc.telemetry.clone();
-        let depth = svc.depth_probe();
+        let depth = svc.class_depth_probe(class);
         let stop = Arc::new(AtomicBool::new(false));
         let rung = Arc::new(AtomicUsize::new(0));
         let mut inner0 =
@@ -205,14 +222,15 @@ impl Governor {
         inner0.epoch_rungs.push((epoch, 0));
         let inner = Arc::new(Mutex::new(inner0));
         // Installing rung 0 may race telemetry left over from pre-governor
-        // traffic; start from a clean window.
-        let _ = telemetry.window();
+        // traffic; start from a clean window (this class's partition only —
+        // other classes' governors own theirs).
+        let _ = telemetry.window_for(class);
         let handle = {
             let (stop, rung, inner) = (stop.clone(), rung.clone(), inner.clone());
             std::thread::Builder::new()
-                .name("cvapprox-qos-governor".into())
+                .name(format!("cvapprox-qos-governor-{class}"))
                 .spawn(move || {
-                    run_loop(installer, telemetry, depth, ladder, cfg, stop, rung, inner)
+                    run_loop(installer, telemetry, class, depth, ladder, cfg, stop, rung, inner)
                 })
                 .context("spawning governor thread")?
         };
@@ -287,6 +305,7 @@ const LOG_CAP: usize = 65_536;
 fn run_loop(
     installer: PolicyInstaller,
     telemetry: Arc<Telemetry>,
+    class: usize,
     depth: Arc<dyn Fn() -> usize + Send + Sync>,
     ladder: Ladder,
     cfg: QosConfig,
@@ -311,12 +330,13 @@ fn run_loop(
         if now.duration_since(last_eval) < cfg.min_dwell {
             continue;
         }
-        let w = telemetry.window();
+        let w = telemetry.window_for(class);
         last_eval = now;
         // Outstanding work = still queued + already inside executing
         // batches; either kind makes "no completions" mean saturation,
-        // not idleness.
-        let outstanding = depth() + telemetry.in_flight() as usize;
+        // not idleness. Both signals are this class's own — another
+        // tenant's backlog must not read as our load.
+        let outstanding = depth() + telemetry.in_flight_for(class) as usize;
         if let Some((to, reason)) = decide(&ladder, cur, &w, outstanding, &cfg) {
             match installer.install(ladder.rung(to).policy.clone()) {
                 Ok(epoch) => {
@@ -432,6 +452,7 @@ mod tests {
             p95,
             mean_queue_depth: 0.0,
             mean_batch_occupancy: 0.5,
+            expired: 0,
             cv_proxy,
             cv_proxy_per_layer: vec![],
             cv_samples: completions,

@@ -1,30 +1,51 @@
-//! Lock-light serving telemetry for the adaptive governor.
+//! Lock-light serving telemetry for the adaptive governors.
 //!
-//! The governor needs four live signals — queue depth, batch occupancy,
+//! A governor needs four live signals — queue depth, batch occupancy,
 //! tail latency, and the CV-magnitude error proxy — sampled on the serving
 //! hot path without adding a contended lock to it. Everything here is
 //! atomics: workers `fetch_add` counters and overwrite a fixed ring of
-//! recent latency samples; the (single) governor thread drains windows with
-//! `swap(0)`. The only non-O(1) work is in [`Telemetry::window`], which the
-//! governor pays, not the pool.
+//! recent latency samples; governor threads drain windows with `swap(0)`.
+//! The only non-O(1) work is in the drain calls, which the governor pays,
+//! not the pool.
 //!
-//! Every signal is **drain-on-read**: each `window()` call covers exactly
-//! what accumulated since the previous call — including the latency
+//! Every signal is **drain-on-read**: each drain covers exactly what
+//! accumulated since the previous drain — including the latency
 //! percentiles, which are computed over the samples recorded in the window
 //! (capped at the ring size; a window that overflows the ring keeps its
 //! most recent `window` samples). Stale burst latencies therefore cannot
-//! leak into later decisions and pin the governor at a wrong rung — the
+//! leak into later decisions and pin a governor at a wrong rung — the
 //! latency ring's head and slots use Release/Acquire so the drain actually
 //! observes the stores behind the head it reads (see `record_latency`);
 //! the commutative sums stay Relaxed because a sample landing on a window
-//! boundary counts in one window or the next, never corrupts. One poller
-//! is assumed (the governor); a second concurrent poller would split
-//! windows between them.
-//! The `in_flight` gauge is the exception: it is a live level, not a
-//! window aggregate — requests popped into executing batches are invisible
-//! to both the queue depth and the completion count, and without this
-//! gauge a saturated pool whose batches outlast a whole window would be
-//! indistinguishable from an idle one.
+//! boundary counts in one window or the next, never corrupts.
+//!
+//! **Poller contract (partitioned per class).** One `Telemetry` instance
+//! serves a whole multi-tenant pool, but its counters are *partitioned by
+//! tenant class*: workers record into the class a batch belongs to, and
+//! each class's governor drains only its own partition via
+//! [`Telemetry::window_for`]. N governors are therefore N single-pollers
+//! over disjoint state — the "one poller assumed" caveat of the original
+//! single-window design no longer stacks up with tenant count. The
+//! un-suffixed [`Telemetry::window`] is the single-tenant convenience: it
+//! drains and merges *every* class, so a deployment must use either one
+//! global `window()` poller or one `window_for(c)` poller per class,
+//! never both at once.
+//!
+//! The `in_flight` gauge is the exception to drain-on-read: it is a live
+//! level, not a window aggregate — requests popped into executing batches
+//! are invisible to both the queue depth and the completion count, and
+//! without this gauge a saturated pool whose batches outlast a whole
+//! window would be indistinguishable from an idle one.
+//!
+//! **Deadline-expired requests** are counted consistently (the PR 9
+//! bugfix): a request screened out at dequeue because its deadline passed
+//! executed no work, so it must not appear in the occupancy numerator *or*
+//! inflate the batch denominator — a pop whose requests all expired
+//! contributes **no** occupancy sample (it was never an executed batch)
+//! while its queue-depth observation is still recorded via
+//! [`Telemetry::record_depth_for`] (a deadline storm must not blind the
+//! depth signal), and the drop itself lands in [`TelemetryWindow::expired`]
+//! so governors see deadline pressure directly.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -35,65 +56,39 @@ use crate::nn::CvProxySampler;
 /// Default sliding-window size for the latency percentile ring.
 pub const DEFAULT_WINDOW: usize = 1024;
 
-/// Shared serving telemetry: one instance per [`crate::coordinator::InferenceService`],
-/// recorded into by every pool worker, drained by the governor.
+/// One tenant class's partition of the telemetry plane. Field names and
+/// orderings are identical to the pre-sharding single-window design; the
+/// atomics contract (srclint R2) applies per field across all cells.
 #[derive(Debug)]
-pub struct Telemetry {
+struct ClassCell {
     /// Ring of recent per-request latencies in µs (0 = never written).
     lat_us: Vec<AtomicU64>,
     /// Total latency samples ever pushed (ring slot = head % len).
     head: AtomicU64,
-    /// `head` at the last `window()` call (completion-rate bookkeeping).
+    /// `head` at the last drain (completion-rate bookkeeping).
     drained_head: AtomicU64,
     /// Σ queue depth observed at batch pop / number of observations.
     depth_sum: AtomicU64,
     depth_n: AtomicU64,
-    /// Σ batch occupancy (fused requests / batch capacity) in per-mille.
+    /// Σ batch occupancy (executed requests / batch capacity) in per-mille.
     occ_pm_sum: AtomicU64,
     occ_n: AtomicU64,
+    /// Deadline-expired requests dropped at dequeue (window counter).
+    expired: AtomicU64,
     /// Requests currently inside executing batches (live level gauge).
     inflight: AtomicU64,
-    /// Per-layer CV-magnitude error proxy. Workers run each batch with a
-    /// *batch-local* [`CvProxySampler`] so the fault plane can band-check
-    /// that batch's raw sums in isolation (`fault::IntegrityMonitor`), then
-    /// re-record the trusted sums here via [`Telemetry::cv_sampler`] —
+    /// Per-layer CV-magnitude error proxy for this class. Workers run each
+    /// batch with a *batch-local* [`CvProxySampler`] so the fault plane can
+    /// band-check that batch's raw sums in isolation
+    /// (`fault::IntegrityMonitor`), then re-record the trusted sums here —
     /// keeping the governor's drain-on-read windows intact and untainted by
     /// batches that were rolled back and replayed after corruption.
     cv: Arc<CvProxySampler>,
 }
 
-/// One drained telemetry window.
-#[derive(Clone, Debug)]
-pub struct TelemetryWindow {
-    /// Requests completed since the previous `window()` call.
-    pub completions: u64,
-    /// Batches executed since the previous call.
-    pub batches: u64,
-    /// Latency percentiles over THIS window's completions (up to the ring
-    /// size; zero when nothing completed in the window).
-    pub p50: Duration,
-    pub p95: Duration,
-    /// Mean queue depth observed at batch pop since the previous call.
-    pub mean_queue_depth: f64,
-    /// Mean batch occupancy (0..1) since the previous call.
-    pub mean_batch_occupancy: f64,
-    /// Pooled CV error proxy Σ|V| / Σ|G*| since the previous call.
-    pub cv_proxy: f64,
-    /// Per-MAC-layer error proxy (0 for layers that recorded nothing).
-    pub cv_proxy_per_layer: Vec<f64>,
-    /// Epilogue entries the proxy averaged over.
-    pub cv_samples: u64,
-}
-
-impl Telemetry {
-    /// Telemetry for a model with `mac_layers` MAC layers, default window.
-    pub fn new(mac_layers: usize) -> Telemetry {
-        Telemetry::with_window(DEFAULT_WINDOW, mac_layers)
-    }
-
-    /// Explicit ring size (tests shrink it to exercise wraparound).
-    pub fn with_window(window: usize, mac_layers: usize) -> Telemetry {
-        Telemetry {
+impl ClassCell {
+    fn new(window: usize, mac_layers: usize) -> ClassCell {
+        ClassCell {
             lat_us: (0..window.max(1)).map(|_| AtomicU64::new(0)).collect(),
             head: AtomicU64::new(0),
             drained_head: AtomicU64::new(0),
@@ -101,118 +96,324 @@ impl Telemetry {
             depth_n: AtomicU64::new(0),
             occ_pm_sum: AtomicU64::new(0),
             occ_n: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
             inflight: AtomicU64::new(0),
             cv: Arc::new(CvProxySampler::new(mac_layers)),
         }
     }
 
-    /// The shared error-proxy sampler (workers attach it to
-    /// `ForwardOpts::cv_proxy`).
-    pub fn cv_sampler(&self) -> Arc<CvProxySampler> {
-        self.cv.clone()
-    }
-
-    /// Merge one batch's raw proxy sums (`(Σ|V|, Σ|G*|, n)` per layer, from
-    /// `CvProxySampler::drain_raw`) into the shared sampler. Workers call
-    /// this only after the batch passed integrity checks.
-    pub fn record_cv(&self, raw: &[(u64, u64, u64)]) {
-        for (i, &(num, den, n)) in raw.iter().enumerate() {
-            if n > 0 {
-                self.cv.record(i, num, den, n);
-            }
-        }
-    }
-
-    /// Record one completed request's end-to-end latency.
-    ///
-    /// Publication order matters here: each Release fetch_add on `head`
-    /// joins a release sequence, so the Acquire load in [`window`] makes
-    /// every slot store from *earlier* increments visible. The one store
-    /// that can still be in flight per worker is its own latest sample —
-    /// bounded staleness, versus the unbounded leak an all-Relaxed scheme
-    /// allows (head advanced, slots still stale).
-    pub fn record_latency(&self, d: Duration) {
-        let us = (d.as_secs_f64() * 1e6).round().max(1.0) as u64;
-        let slot = self.head.fetch_add(1, Ordering::Release) as usize % self.lat_us.len();
-        self.lat_us[slot].store(us, Ordering::Release);
-    }
-
-    /// A worker is about to run a batch of `requests`: raise the in-flight
-    /// level ([`Telemetry::record_batch`] lowers it when the batch lands).
-    pub fn batch_started(&self, requests: usize) {
-        self.inflight.fetch_add(requests as u64, Ordering::Relaxed);
-    }
-
-    /// Record one executed batch: how many requests fused (of `cap`
-    /// possible) and the queue depth left behind at pop time.
-    pub fn record_batch(&self, requests: usize, cap: usize, queue_depth: usize) {
-        // Saturating decrement: a record_batch without a matching
-        // batch_started (unit tests drive them independently) must not
-        // wrap the gauge.
-        let _ = self.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
-            Some(v.saturating_sub(requests as u64))
-        });
-        self.depth_sum.fetch_add(queue_depth as u64, Ordering::Relaxed);
-        self.depth_n.fetch_add(1, Ordering::Relaxed);
-        let pm = (1000 * requests / cap.max(1)).min(1000) as u64;
-        self.occ_pm_sum.fetch_add(pm, Ordering::Relaxed);
-        self.occ_n.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Requests currently inside executing batches (live level, not a
-    /// window aggregate).
-    pub fn in_flight(&self) -> u64 {
-        self.inflight.load(Ordering::Relaxed)
-    }
-
-    /// Drain the window accumulated since the last call: depth, occupancy,
-    /// error proxy, completion count, AND the latency percentiles — which
-    /// cover only the samples recorded in this window (most recent
-    /// ring-size samples when the window overflowed the ring), so a past
-    /// burst's tail cannot haunt later decisions.
-    pub fn window(&self) -> TelemetryWindow {
+    /// Drain this cell's window into raw parts (latency samples in µs,
+    /// counters, and raw CV sums) so the caller can either report them
+    /// directly or merge several cells into one aggregate window.
+    fn drain_parts(&self) -> CellParts {
         let head = self.head.load(Ordering::Acquire);
         let prev = self.drained_head.swap(head, Ordering::Relaxed);
         let cap = self.lat_us.len() as u64;
         let take = head.saturating_sub(prev).min(cap);
-        let mut lats: Vec<u64> = (head - take..head)
+        let lats: Vec<u64> = (head - take..head)
             .map(|j| self.lat_us[(j % cap) as usize].load(Ordering::Acquire))
             .filter(|&v| v > 0)
             .collect();
-        lats.sort_unstable();
-        let pick = |q: f64| -> Duration {
-            if lats.is_empty() {
-                Duration::ZERO
-            } else {
-                let idx = ((lats.len() - 1) as f64 * q).round() as usize;
-                Duration::from_micros(lats[idx])
-            }
-        };
-        let (p50, p95) = (pick(0.50), pick(0.95));
-        let depth_n = self.depth_n.swap(0, Ordering::Relaxed);
-        let depth_sum = self.depth_sum.swap(0, Ordering::Relaxed);
-        let occ_n = self.occ_n.swap(0, Ordering::Relaxed);
-        let occ_pm = self.occ_pm_sum.swap(0, Ordering::Relaxed);
-        let cvw = self.cv.drain();
-        TelemetryWindow {
+        CellParts {
             completions: head.saturating_sub(prev),
-            batches: occ_n,
-            p50,
-            p95,
-            mean_queue_depth: if depth_n > 0 {
-                depth_sum as f64 / depth_n as f64
-            } else {
-                0.0
-            },
-            mean_batch_occupancy: if occ_n > 0 {
-                occ_pm as f64 / (1000.0 * occ_n as f64)
-            } else {
-                0.0
-            },
-            cv_proxy: cvw.aggregate,
-            cv_proxy_per_layer: cvw.per_layer,
-            cv_samples: cvw.samples,
+            lats,
+            depth_sum: self.depth_sum.swap(0, Ordering::Relaxed),
+            depth_n: self.depth_n.swap(0, Ordering::Relaxed),
+            occ_pm_sum: self.occ_pm_sum.swap(0, Ordering::Relaxed),
+            occ_n: self.occ_n.swap(0, Ordering::Relaxed),
+            expired: self.expired.swap(0, Ordering::Relaxed),
+            cv_raw: self.cv.drain_raw(),
         }
+    }
+}
+
+/// Raw drained counters for one class (pre-percentile).
+struct CellParts {
+    completions: u64,
+    lats: Vec<u64>,
+    depth_sum: u64,
+    depth_n: u64,
+    occ_pm_sum: u64,
+    occ_n: u64,
+    expired: u64,
+    cv_raw: Vec<(u64, u64, u64)>,
+}
+
+/// Shared serving telemetry: one instance per
+/// [`crate::coordinator::InferenceService`], recorded into by every pool
+/// worker, partitioned by tenant class, drained by per-class governors.
+#[derive(Debug)]
+pub struct Telemetry {
+    classes: Vec<ClassCell>,
+}
+
+/// One drained telemetry window (a single class, or every class merged).
+#[derive(Clone, Debug)]
+pub struct TelemetryWindow {
+    /// Requests completed since the previous drain.
+    pub completions: u64,
+    /// Batches *executed* since the previous drain. A pop whose requests
+    /// all expired at the deadline screen is not an executed batch and
+    /// does not count here (nor in the occupancy mean's denominator).
+    pub batches: u64,
+    /// Latency percentiles over THIS window's completions (up to the ring
+    /// size; zero when nothing completed in the window).
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Mean queue depth observed at batch pop since the previous drain.
+    /// Includes pops that went on to expire wholesale — queue pressure is
+    /// real whether or not the work was ultimately executed.
+    pub mean_queue_depth: f64,
+    /// Mean batch occupancy (0..1) over *executed* batches since the
+    /// previous drain; deadline-expired requests never contribute.
+    pub mean_batch_occupancy: f64,
+    /// Requests dropped at dequeue because their deadline had passed.
+    pub expired: u64,
+    /// Pooled CV error proxy Σ|V| / Σ|G*| since the previous drain.
+    pub cv_proxy: f64,
+    /// Per-MAC-layer error proxy (0 for layers that recorded nothing).
+    pub cv_proxy_per_layer: Vec<f64>,
+    /// Epilogue entries the proxy averaged over.
+    pub cv_samples: u64,
+}
+
+fn window_from_parts(parts: Vec<CellParts>, mac_layers: usize) -> TelemetryWindow {
+    let mut completions = 0u64;
+    let mut lats: Vec<u64> = Vec::new();
+    let (mut depth_sum, mut depth_n) = (0u64, 0u64);
+    let (mut occ_pm, mut occ_n) = (0u64, 0u64);
+    let mut expired = 0u64;
+    let mut cv_raw = vec![(0u64, 0u64, 0u64); mac_layers];
+    for p in parts {
+        completions += p.completions;
+        lats.extend(p.lats);
+        depth_sum += p.depth_sum;
+        depth_n += p.depth_n;
+        occ_pm += p.occ_pm_sum;
+        occ_n += p.occ_n;
+        expired += p.expired;
+        for (acc, raw) in cv_raw.iter_mut().zip(p.cv_raw) {
+            acc.0 += raw.0;
+            acc.1 += raw.1;
+            acc.2 += raw.2;
+        }
+    }
+    lats.sort_unstable();
+    let pick = |q: f64| -> Duration {
+        if lats.is_empty() {
+            Duration::ZERO
+        } else {
+            let idx = ((lats.len() - 1) as f64 * q).round() as usize;
+            Duration::from_micros(lats[idx])
+        }
+    };
+    let (p50, p95) = (pick(0.50), pick(0.95));
+    let (mut tn, mut td, mut ts) = (0u64, 0u64, 0u64);
+    let per_layer: Vec<f64> = cv_raw
+        .iter()
+        .map(|&(num, den, n)| {
+            tn += num;
+            td += den;
+            ts += n;
+            if den > 0 { num as f64 / den as f64 } else { 0.0 }
+        })
+        .collect();
+    TelemetryWindow {
+        completions,
+        batches: occ_n,
+        p50,
+        p95,
+        mean_queue_depth: if depth_n > 0 {
+            depth_sum as f64 / depth_n as f64
+        } else {
+            0.0
+        },
+        mean_batch_occupancy: if occ_n > 0 {
+            occ_pm as f64 / (1000.0 * occ_n as f64)
+        } else {
+            0.0
+        },
+        expired,
+        cv_proxy: if td > 0 { tn as f64 / td as f64 } else { 0.0 },
+        cv_proxy_per_layer: per_layer,
+        cv_samples: ts,
+    }
+}
+
+impl Telemetry {
+    /// Single-class telemetry for a model with `mac_layers` MAC layers,
+    /// default window.
+    pub fn new(mac_layers: usize) -> Telemetry {
+        Telemetry::with_window(DEFAULT_WINDOW, mac_layers)
+    }
+
+    /// Single-class with an explicit ring size (tests shrink it to
+    /// exercise wraparound).
+    pub fn with_window(window: usize, mac_layers: usize) -> Telemetry {
+        Telemetry::with_classes(1, window, mac_layers)
+    }
+
+    /// Telemetry partitioned into `classes` tenant classes, each with its
+    /// own latency ring, counters, and CV sampler.
+    pub fn with_classes(classes: usize, window: usize, mac_layers: usize) -> Telemetry {
+        Telemetry {
+            classes: (0..classes.max(1))
+                .map(|_| ClassCell::new(window, mac_layers))
+                .collect(),
+        }
+    }
+
+    /// Number of tenant-class partitions.
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    fn cell(&self, class: usize) -> &ClassCell {
+        // Out-of-range classes fold to class 0 rather than panicking on
+        // the hot path; the service validates class ids at admission.
+        self.classes.get(class).unwrap_or(&self.classes[0])
+    }
+
+    /// Class 0's error-proxy sampler (single-tenant convenience).
+    pub fn cv_sampler(&self) -> Arc<CvProxySampler> {
+        self.cv_sampler_for(0)
+    }
+
+    /// Class `class`'s error-proxy sampler (workers attach it to
+    /// `ForwardOpts::cv_proxy`).
+    pub fn cv_sampler_for(&self, class: usize) -> Arc<CvProxySampler> {
+        self.cell(class).cv.clone()
+    }
+
+    /// Merge one batch's raw proxy sums (`(Σ|V|, Σ|G*|, n)` per layer, from
+    /// `CvProxySampler::drain_raw`) into class 0's sampler.
+    pub fn record_cv(&self, raw: &[(u64, u64, u64)]) {
+        self.record_cv_for(0, raw);
+    }
+
+    /// Merge one batch's raw proxy sums into class `class`'s sampler.
+    /// Workers call this only after the batch passed integrity checks.
+    pub fn record_cv_for(&self, class: usize, raw: &[(u64, u64, u64)]) {
+        let cv = &self.cell(class).cv;
+        for (i, &(num, den, n)) in raw.iter().enumerate() {
+            if n > 0 {
+                cv.record(i, num, den, n);
+            }
+        }
+    }
+
+    /// Record one completed class-0 request's end-to-end latency.
+    pub fn record_latency(&self, d: Duration) {
+        self.record_latency_for(0, d);
+    }
+
+    /// Record one completed request's end-to-end latency for `class`.
+    ///
+    /// Publication order matters here: each Release fetch_add on `head`
+    /// joins a release sequence, so the Acquire load in the drain makes
+    /// every slot store from *earlier* increments visible. The one store
+    /// that can still be in flight per worker is its own latest sample —
+    /// bounded staleness, versus the unbounded leak an all-Relaxed scheme
+    /// allows (head advanced, slots still stale).
+    pub fn record_latency_for(&self, class: usize, d: Duration) {
+        let cell = self.cell(class);
+        let us = (d.as_secs_f64() * 1e6).round().max(1.0) as u64;
+        let slot = cell.head.fetch_add(1, Ordering::Release) as usize % cell.lat_us.len();
+        cell.lat_us[slot].store(us, Ordering::Release);
+    }
+
+    /// A worker is about to run a class-0 batch of `requests`.
+    pub fn batch_started(&self, requests: usize) {
+        self.batch_started_for(0, requests);
+    }
+
+    /// A worker is about to run a class-`class` batch of `requests`: raise
+    /// the in-flight level ([`Telemetry::record_batch_for`] lowers it when
+    /// the batch lands).
+    pub fn batch_started_for(&self, class: usize, requests: usize) {
+        self.cell(class)
+            .inflight
+            .fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// Record one executed class-0 batch (single-tenant convenience).
+    pub fn record_batch(&self, requests: usize, cap: usize, queue_depth: usize) {
+        self.record_batch_for(0, requests, cap, queue_depth);
+    }
+
+    /// Record one *executed* batch for `class`: how many requests actually
+    /// ran (of `cap` possible) and the queue depth left behind at pop
+    /// time. Deadline-expired requests screened out before execution must
+    /// not be in `executed` — report them via
+    /// [`Telemetry::record_expired_for`] instead, and report an
+    /// all-expired pop's depth via [`Telemetry::record_depth_for`] so the
+    /// occupancy mean's denominator only ever counts executed batches.
+    pub fn record_batch_for(&self, class: usize, executed: usize, cap: usize, queue_depth: usize) {
+        let cell = self.cell(class);
+        // Saturating decrement: a record_batch without a matching
+        // batch_started (unit tests drive them independently) must not
+        // wrap the gauge.
+        let _ = cell.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(executed as u64))
+        });
+        cell.depth_sum.fetch_add(queue_depth as u64, Ordering::Relaxed);
+        cell.depth_n.fetch_add(1, Ordering::Relaxed);
+        if executed > 0 {
+            let pm = (1000 * executed / cap.max(1)).min(1000) as u64;
+            cell.occ_pm_sum.fetch_add(pm, Ordering::Relaxed);
+            cell.occ_n.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a queue-depth observation for a pop that executed nothing
+    /// (every popped request expired at the deadline screen).
+    pub fn record_depth_for(&self, class: usize, queue_depth: usize) {
+        let cell = self.cell(class);
+        cell.depth_sum.fetch_add(queue_depth as u64, Ordering::Relaxed);
+        cell.depth_n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` requests dropped at dequeue because their deadline had
+    /// already passed.
+    pub fn record_expired_for(&self, class: usize, n: usize) {
+        self.cell(class).expired.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Requests currently inside executing batches, summed over classes
+    /// (live level, not a window aggregate).
+    pub fn in_flight(&self) -> u64 {
+        self.classes
+            .iter()
+            .map(|c| c.inflight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Requests of `class` currently inside executing batches.
+    pub fn in_flight_for(&self, class: usize) -> u64 {
+        self.cell(class).inflight.load(Ordering::Relaxed)
+    }
+
+    /// Drain **every** class's window and merge (single-tenant
+    /// convenience; percentiles are computed over the merged samples).
+    /// Must not race [`Telemetry::window_for`] pollers — a deployment uses
+    /// one global poller or one per class, never both.
+    pub fn window(&self) -> TelemetryWindow {
+        let mac_layers = self.classes[0].cv.layers();
+        let parts = self.classes.iter().map(|c| c.drain_parts()).collect();
+        window_from_parts(parts, mac_layers)
+    }
+
+    /// Drain the window accumulated for `class` since its last drain:
+    /// depth, occupancy, expired count, error proxy, completion count, AND
+    /// the latency percentiles — which cover only the samples recorded in
+    /// this window (most recent ring-size samples when the window
+    /// overflowed the ring), so a past burst's tail cannot haunt later
+    /// decisions. Partitioned: concurrent pollers on *different* classes
+    /// never split each other's windows.
+    pub fn window_for(&self, class: usize) -> TelemetryWindow {
+        let cell = self.cell(class);
+        let mac_layers = cell.cv.layers();
+        window_from_parts(vec![cell.drain_parts()], mac_layers)
     }
 }
 
@@ -257,6 +458,81 @@ mod tests {
     }
 
     #[test]
+    fn expired_requests_do_not_inflate_occupancy() {
+        // The PR 9 accounting bugfix, pinned: deadline-expired requests are
+        // dropped from a popped batch before execution, so they must not
+        // count as executed batches (occupancy denominator) or occupancy
+        // numerator — while their depth observation and expired count are
+        // still visible in the window.
+        let t = Telemetry::with_window(8, 1);
+        // One clean batch: 4 of 8 slots, depth 6 behind it.
+        t.record_batch_for(0, 4, 8, 6);
+        // One pop where every request expired: no executed batch, but the
+        // depth observation (2) and the expired count (3) must land.
+        t.record_expired_for(0, 3);
+        t.record_depth_for(0, 2);
+        let w = t.window_for(0);
+        assert_eq!(w.batches, 1, "all-expired pop is not an executed batch");
+        assert!(
+            (w.mean_batch_occupancy - 0.5).abs() < 1e-3,
+            "occupancy counts the executed batch only, got {}",
+            w.mean_batch_occupancy
+        );
+        assert_eq!(w.expired, 3);
+        assert!((w.mean_queue_depth - 4.0).abs() < 1e-9, "both depth obs count");
+        // Drained: the next window is clean.
+        let w2 = t.window_for(0);
+        assert_eq!(w2.expired, 0);
+        assert_eq!(w2.batches, 0);
+    }
+
+    #[test]
+    fn class_windows_are_partitioned() {
+        // Two tenant classes, one Telemetry plane: each class's poller
+        // sees only its own traffic, and polling one class does not drain
+        // the other (the N-governor contract).
+        let t = Telemetry::with_classes(2, 8, 2);
+        t.record_latency_for(0, Duration::from_millis(2));
+        t.record_latency_for(1, Duration::from_millis(40));
+        t.record_batch_for(0, 2, 4, 1);
+        t.record_batch_for(1, 4, 4, 9);
+        t.cv_sampler_for(1).record(0, 30, 100, 4);
+        let w0 = t.window_for(0);
+        assert_eq!(w0.completions, 1);
+        assert_eq!(w0.p95, Duration::from_millis(2));
+        assert!((w0.mean_batch_occupancy - 0.5).abs() < 1e-3);
+        assert_eq!(w0.cv_samples, 0);
+        // Class 1 is untouched by class 0's drain.
+        let w1 = t.window_for(1);
+        assert_eq!(w1.completions, 1);
+        assert_eq!(w1.p95, Duration::from_millis(40));
+        assert!((w1.mean_queue_depth - 9.0).abs() < 1e-9);
+        assert!((w1.cv_proxy - 0.3).abs() < 1e-12);
+        assert_eq!(t.window_for(1).completions, 0, "drained");
+    }
+
+    #[test]
+    fn merged_window_spans_all_classes() {
+        let t = Telemetry::with_classes(2, 8, 1);
+        t.record_latency_for(0, Duration::from_millis(1));
+        t.record_latency_for(1, Duration::from_millis(3));
+        t.record_batch_for(0, 1, 2, 0);
+        t.record_batch_for(1, 2, 2, 4);
+        t.cv_sampler_for(0).record(0, 10, 100, 2);
+        t.cv_sampler_for(1).record(0, 30, 100, 2);
+        let w = t.window();
+        assert_eq!(w.completions, 2);
+        assert_eq!(w.batches, 2);
+        assert_eq!(w.p95, Duration::from_millis(3));
+        assert!((w.mean_batch_occupancy - 0.75).abs() < 1e-3);
+        assert!((w.cv_proxy - 40.0 / 200.0).abs() < 1e-12);
+        assert_eq!(w.cv_samples, 4);
+        // The merge drained every class.
+        assert_eq!(t.window_for(0).completions, 0);
+        assert_eq!(t.window_for(1).completions, 0);
+    }
+
+    #[test]
     fn in_flight_gauge_tracks_executing_batches() {
         let t = Telemetry::with_window(8, 1);
         assert_eq!(t.in_flight(), 0);
@@ -270,6 +546,13 @@ mod tests {
         // Unmatched record_batch saturates instead of wrapping.
         t.record_batch(4, 8, 0);
         assert_eq!(t.in_flight(), 0);
+        // Per-class gauges are independent levels.
+        let t2 = Telemetry::with_classes(2, 8, 1);
+        t2.batch_started_for(0, 3);
+        t2.batch_started_for(1, 5);
+        assert_eq!(t2.in_flight_for(0), 3);
+        assert_eq!(t2.in_flight_for(1), 5);
+        assert_eq!(t2.in_flight(), 8);
     }
 
     #[test]
@@ -278,6 +561,7 @@ mod tests {
         let w = t.window();
         assert_eq!(w.completions, 0);
         assert_eq!(w.p95, Duration::ZERO);
+        assert_eq!(w.expired, 0);
         assert_eq!(w.cv_proxy, 0.0);
         assert_eq!(w.cv_proxy_per_layer.len(), 3);
         assert_eq!(w.cv_samples, 0);

@@ -21,6 +21,19 @@
 //!   send on a consumed channel). A buggy-sweep variant (sweeping the
 //!   *original* batch instead of the ledger's not-yet-replied remainder,
 //!   the exact bug the per-worker ledger exists to prevent) must violate.
+//! * **Sharded steal queue** (`coordinator/service.rs` `ShardedQueue`,
+//!   PR 9): round-robin pushes land on shards, workers take from their
+//!   home shard and steal from the first non-empty shard in sweep order
+//!   when home is empty. Invariant: across every steal interleaving no
+//!   request is lost (stranded in a shard at shutdown) or double-popped.
+//!   A racy variant (peek the victim's head, then commit without
+//!   re-checking under the lock — the race the per-shard mutex closes)
+//!   must be caught by the same invariants.
+//!
+//! A randomized *stress* tier drives the real `ShardedQueue` through the
+//! public service API: multiple producer threads, mixed tight/generous/no
+//! deadlines, shards = workers = 4, asserting exactly one typed reply per
+//! request and bit-identical logits on every `Ok`.
 //!
 //! Exploration is deterministic: exhaustive DFS visits leaves in a fixed
 //! order and random walks derive per-walk seeds with the same splitmix64
@@ -591,6 +604,162 @@ impl Model for LedgerModel {
 }
 
 // ---------------------------------------------------------------------------
+// Model 4: the sharded work-stealing queue (PR 9 `ShardedQueue`).
+// ---------------------------------------------------------------------------
+
+const OP_TAKE_HOME: u32 = 0;
+const OP_STEAL: u32 = 1;
+const OP_COMMIT: u32 = 2;
+const OP_W_RETIRE: u32 = 3;
+
+/// Round-robin pushes over `n_shards` shards; each worker's home shard is
+/// `worker % n_shards`; a worker with an empty home steals from the first
+/// non-empty shard in sweep order (matching `ShardedQueue::pop_batch`).
+/// The correct variant's steal is one atomic action (the pop happens under
+/// the victim shard's lock); the `racy` variant splits it into peek
+/// (record the victim's head) and commit (serve the recorded id without
+/// re-checking), so a schedule where another worker takes that request
+/// between the two steps double-serves it. Requests left in a shard at
+/// shutdown fail `done` — losses and double-pops are both caught.
+#[derive(Clone)]
+struct StealModel {
+    requests: u8,
+    n_shards: usize,
+    racy: bool,
+    shards: Vec<Vec<u8>>,
+    /// Round-robin push cursor (the `rr` atomic).
+    rr: usize,
+    next_submit: u8,
+    replies: Vec<u8>,
+    closed: bool,
+    /// Per worker: (retired, peeked (victim, id) if mid-racy-steal).
+    workers: Vec<(bool, Option<(usize, u8)>)>,
+    bad: bool,
+}
+
+impl StealModel {
+    fn new(requests: u8, workers: usize, shards: usize, racy: bool) -> Self {
+        StealModel {
+            requests,
+            n_shards: shards,
+            racy,
+            shards: vec![Vec::new(); shards],
+            rr: 0,
+            next_submit: 0,
+            replies: vec![0; requests as usize],
+            closed: false,
+            workers: vec![(false, None); workers],
+            bad: false,
+        }
+    }
+
+    /// First non-empty shard in worker `i`'s sweep order, skipping home.
+    fn victim(&self, i: usize) -> Option<usize> {
+        let home = i % self.n_shards;
+        (1..self.n_shards)
+            .map(|k| (home + k) % self.n_shards)
+            .find(|&j| !self.shards[j].is_empty())
+    }
+
+    fn reply(&mut self, k: u8) {
+        let slot = &mut self.replies[k as usize];
+        *slot += 1;
+        if *slot > 1 {
+            self.bad = true; // double-pop: one request served twice
+        }
+    }
+}
+
+impl Model for StealModel {
+    fn actions(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.next_submit < self.requests {
+            out.push(ACT_SUBMIT);
+        }
+        if !self.closed {
+            out.push(ACT_CLOSE);
+        }
+        let drained = self.shards.iter().all(|s| s.is_empty());
+        for (i, &(retired, peek)) in self.workers.iter().enumerate() {
+            if retired {
+                continue;
+            }
+            let base = (i as u32) * 10;
+            if peek.is_some() {
+                out.push(base + OP_COMMIT);
+                continue;
+            }
+            if !self.shards[i % self.n_shards].is_empty() {
+                out.push(base + OP_TAKE_HOME);
+            } else if self.victim(i).is_some() {
+                out.push(base + OP_STEAL);
+            } else if self.closed && self.next_submit >= self.requests && drained {
+                out.push(base + OP_W_RETIRE);
+            }
+        }
+        out
+    }
+
+    fn step(&mut self, action: u32) {
+        match action {
+            ACT_SUBMIT => {
+                let k = self.next_submit;
+                self.next_submit += 1;
+                if self.closed {
+                    self.reply(k); // typed Closed reject is the one reply
+                } else {
+                    let shard = self.rr % self.n_shards;
+                    self.rr += 1;
+                    self.shards[shard].push(k);
+                }
+                return;
+            }
+            ACT_CLOSE => {
+                self.closed = true;
+                return;
+            }
+            _ => {}
+        }
+        let (i, op) = ((action / 10) as usize, action % 10);
+        match op {
+            OP_TAKE_HOME => {
+                let k = self.shards[i % self.n_shards].remove(0);
+                self.reply(k);
+            }
+            OP_STEAL => {
+                let j = self.victim(i).expect("steal only enabled with a victim");
+                if self.racy {
+                    self.workers[i].1 = Some((j, self.shards[j][0]));
+                } else {
+                    let k = self.shards[j].remove(0);
+                    self.reply(k);
+                }
+            }
+            OP_COMMIT => {
+                let (j, k) = self.workers[i].1.take().expect("commit needs a peek");
+                if let Some(pos) = self.shards[j].iter().position(|&q| q == k) {
+                    self.shards[j].remove(pos);
+                }
+                self.reply(k); // served even when already taken: the race
+            }
+            _ => self.workers[i].0 = true, // OP_W_RETIRE
+        }
+    }
+
+    fn violated(&self) -> bool {
+        self.bad
+    }
+
+    fn done(&self) -> bool {
+        self.next_submit >= self.requests
+            && self.closed
+            && self.shards.iter().all(|s| s.is_empty())
+            && self.workers.iter().all(|&(retired, _)| retired)
+            && self.replies.iter().all(|&r| r == 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Exhaustive tier. Leaf counts are exact: violations never truncate a
 // schedule, so the totals are pure multinomials over the step sequences.
 // ---------------------------------------------------------------------------
@@ -646,15 +815,47 @@ fn exhaustive_buggy_sweep_is_caught() {
 }
 
 /// 3 requests through the same plane: 112269 schedules, still exactly one
-/// reply each. Together the exhaustive tier enumerates 145791 schedules —
+/// reply each. Together the exhaustive tier enumerates 220662 schedules —
 /// past the 10^4 coverage floor on exact counts alone.
 #[test]
 fn exhaustive_ledger_three_requests() {
     let a = explore(&LedgerModel::new(3, 1, 2, 1));
     assert_eq!(a.schedules, 112_269);
     assert_eq!(a.violated, 0);
-    let total = 2520 + 25200 + 2899 + 2903 + a.schedules;
+    let total = 2520 + 25200 + 2899 + 2903 + 314 + 4722 + 1926 + 67909 + a.schedules;
     assert!(total >= 10_000, "exhaustive tier must cover >= 10^4 schedules");
+}
+
+/// Sharded steal queue, 3 then 4 requests round-robined over 2 shards with
+/// 2 workers: every interleaving of home takes, steals, closes and late
+/// submits serves each request exactly once — 314 and 1926 schedules, zero
+/// violations (counts cross-checked against scripts/schedules_mirror.py).
+#[test]
+fn exhaustive_sharded_steal_no_loss_no_double_pop() {
+    let m = StealModel::new(3, 2, 2, false);
+    let a = explore(&m);
+    assert_eq!(a.schedules, 314);
+    assert_eq!(a.violated, 0);
+    assert_eq!(a, explore(&m), "exhaustive exploration must be deterministic");
+    let b = explore(&StealModel::new(4, 2, 2, false));
+    assert_eq!(b.schedules, 1926);
+    assert_eq!(b.violated, 0);
+}
+
+/// The racy steal (peek the victim's head, commit without re-checking)
+/// must be caught: 4134 of 4722 schedules at 3 requests and 63549 of
+/// 67909 at 4 requests double-serve a stolen request. This is exactly the
+/// interleaving `ShardedQueue` closes by popping under the victim shard's
+/// lock.
+#[test]
+fn exhaustive_racy_steal_is_caught() {
+    let a = explore(&StealModel::new(3, 2, 2, true));
+    assert_eq!(a.schedules, 4722);
+    assert_eq!(a.violated, 4134);
+    let b = explore(&StealModel::new(4, 2, 2, true));
+    assert_eq!(b.schedules, 67_909);
+    assert_eq!(b.violated, 63_549);
+    assert!(a.violated < a.schedules && b.violated < b.schedules);
 }
 
 // ---------------------------------------------------------------------------
@@ -693,4 +894,144 @@ fn randomized_locked_switch_stays_clean() {
     let a = random_walks(&LockedSwitch::new(3, 3, 2), 1000, 0xBEEF);
     assert_eq!(a.schedules, 1000);
     assert_eq!(a.violated, 0);
+}
+
+/// Sharded steal queue past the exhaustive horizon: 6 requests over 3
+/// shards with 3 workers, 2000 seeded walks, no loss and no double-pop.
+#[test]
+fn randomized_steal_large_configuration() {
+    let m = StealModel::new(6, 3, 3, false);
+    let a = random_walks(&m, 2000, 0x5EA1);
+    assert_eq!(a.schedules, 2000);
+    assert_eq!(a.violated, 0);
+    let b = random_walks(&m, 2000, 0x5EA1);
+    assert_eq!(a, b, "seeded walks must be deterministic");
+}
+
+/// Random walks over the racy steal still surface double-pops without
+/// exhaustive enumeration.
+#[test]
+fn randomized_racy_steal_finds_double_pops() {
+    let a = random_walks(&StealModel::new(6, 3, 3, true), 2000, 0xD05E);
+    assert_eq!(a.schedules, 2000);
+    assert!(a.violated > 0, "random walks must surface the stale commit");
+}
+
+// ---------------------------------------------------------------------------
+// Stress tier: the real ShardedQueue through the public service API.
+// ---------------------------------------------------------------------------
+
+/// Minimal public-API model for the stress tier (input(1,1,16) →
+/// dense(4)): `nn::testutil` is crate-private, so the integration test
+/// builds its own graph the way the serving bench does.
+fn stress_model() -> cvapprox::nn::Model {
+    use cvapprox::nn::graph::Weights;
+    use cvapprox::nn::{Model, Node, Op};
+    let input = Node { out_shape: (1, 1, 16), ..Node::default() };
+    let dense = Node {
+        op: Op::Dense,
+        inputs: vec![0],
+        out_shape: (1, 1, 4),
+        out_scale: 1.0e6,
+        out_zp: 128,
+        cout: 4,
+        weights: Some(Weights {
+            w_q: (0..4 * 16).map(|i| (i * 7 % 251) as u8).collect(),
+            k_dim: 16,
+            b_q: vec![0; 4],
+            s_w: 1.0,
+            zp_w: 3,
+        }),
+        ..Node::default()
+    };
+    Model { name: "steal-stress".into(), n_classes: 4, nodes: vec![input, dense] }
+}
+
+/// Multi-producer mixed-deadline stress over the real sharded queue:
+/// 4 producer threads × 25 requests at shards = workers = 4, deadlines
+/// cycling tight (200 µs, may expire) / generous (5 s) / none. Every
+/// request gets exactly one reply — `Ok` (bit-identical to the exact
+/// reference forward) or typed `Deadline`/`Overloaded` — and the pool
+/// shuts down clean.
+#[test]
+fn stress_sharded_queue_multi_producer_mixed_deadlines() {
+    use cvapprox::coordinator::{InferenceService, ReplyError, ServiceConfig};
+    use cvapprox::nn::{Engine, ForwardOpts, Tensor};
+    use std::time::{Duration, Instant};
+
+    let model = stress_model();
+    let reference = Engine::new(model.clone());
+    let cfg = ServiceConfig {
+        workers: 4,
+        shards: 4,
+        batch_size: 2,
+        batch_timeout: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let svc = InferenceService::start(Engine::new(model), cfg).unwrap();
+    let producers = 4usize;
+    let per = 25usize;
+    let mut ok = 0u64;
+    let mut expired = 0u64;
+    let mut overloaded = 0u64;
+    let exact = ForwardOpts::default();
+    let counts: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let svc = &svc;
+                let reference = &reference;
+                let exact = &exact;
+                s.spawn(move || {
+                    let (mut ok, mut expired, mut overloaded) = (0u64, 0u64, 0u64);
+                    for i in 0..per {
+                        let seed = (p * per + i) as u8;
+                        let img = Tensor::from_data(
+                            1,
+                            1,
+                            16,
+                            (0..16u8).map(|j| j.wrapping_mul(31).wrapping_add(seed)).collect(),
+                        );
+                        let deadline = match i % 3 {
+                            0 => Some(Instant::now() + Duration::from_micros(200)),
+                            1 => Some(Instant::now() + Duration::from_secs(5)),
+                            _ => None,
+                        };
+                        match svc.try_submit(img.clone(), deadline) {
+                            Ok(pending) => match pending.wait_reply() {
+                                Ok(reply) => {
+                                    let want = reference.forward(&img, exact).unwrap();
+                                    assert_eq!(
+                                        reply.logits, want,
+                                        "producer {p} request {i}: stolen batch corrupted"
+                                    );
+                                    ok += 1;
+                                }
+                                Err(ReplyError::Deadline) => expired += 1,
+                                Err(e) => panic!("producer {p} request {i}: {e}"),
+                            },
+                            // Admission reject is the request's one reply.
+                            Err(ReplyError::Overloaded) => overloaded += 1,
+                            Err(e) => panic!("producer {p} admission {i}: {e}"),
+                        }
+                    }
+                    (ok, expired, overloaded)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (o, e, v) in counts {
+        ok += o;
+        expired += e;
+        overloaded += v;
+    }
+    assert_eq!(
+        ok + expired + overloaded,
+        (producers * per) as u64,
+        "every request resolved exactly once"
+    );
+    assert!(ok > 0, "the pool must serve at least the generous/no-deadline mix");
+    let snap = svc.shutdown();
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.expired_deadline, expired);
 }

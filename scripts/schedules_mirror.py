@@ -250,6 +250,102 @@ class Ledger:
                 and all(r == 1 for r in self.replies))
 
 
+# ------------------------------------------------- sharded steal queue
+
+class Steal:
+    """Sharded work-stealing pop (PR 9 `ShardedQueue`): round-robin pushes,
+    workers take from their home shard and steal from the first non-empty
+    shard in sweep order when home is empty. The correct variant takes
+    under the victim's lock (one atomic action); the racy variant peeks the
+    victim's head and commits without re-checking — a stale commit serves a
+    request another worker already took (double-pop), which the sticky
+    invariant must catch. Requests left behind strand the run (`done`
+    fails), so losses are caught too."""
+
+    def __init__(self, requests=3, workers=2, shards=2, racy=False):
+        self.R, self.S = requests, shards
+        self.racy = racy
+        self.shards = [[] for _ in range(shards)]
+        self.rr = 0
+        self.next_submit = 0
+        self.replies = [0] * requests
+        self.closed = False
+        # worker: [retired, peeked (victim, id) or None]
+        self.workers = [[False, None] for _ in range(workers)]
+        self.bad = False
+
+    def victim(self, i):
+        home = i % self.S
+        for k in range(1, self.S):
+            j = (home + k) % self.S
+            if self.shards[j]:
+                return j
+        return None
+
+    def actions(self):
+        out = []
+        if self.next_submit < self.R:
+            out.append(2000)
+        if not self.closed:
+            out.append(2001)
+        for i, (retired, peek) in enumerate(self.workers):
+            if retired:
+                continue
+            base = i * 10
+            if peek is not None:
+                out.append(base + 2)                     # commit stolen
+                continue
+            if self.shards[i % self.S]:
+                out.append(base + 0)                     # take home
+            elif self.victim(i) is not None:
+                out.append(base + 1)                     # steal (peek if racy)
+            elif self.closed and self.next_submit >= self.R and not any(self.shards):
+                out.append(base + 3)                     # retire
+        return out
+
+    def reply(self, k):
+        self.replies[k] += 1
+        if self.replies[k] > 1:
+            self.bad = True
+
+    def step(self, a):
+        if a == 2000:
+            if self.closed:
+                self.reply(self.next_submit)  # typed reject is the one reply
+            else:
+                self.shards[self.rr % self.S].append(self.next_submit)
+                self.rr += 1
+            self.next_submit += 1
+            return
+        if a == 2001:
+            self.closed = True
+            return
+        i, op = divmod(a, 10)
+        w = self.workers[i]
+        if op == 0:
+            self.reply(self.shards[i % self.S].pop(0))
+        elif op == 1:
+            j = self.victim(i)
+            if self.racy:
+                w[1] = (j, self.shards[j][0])
+            else:
+                self.reply(self.shards[j].pop(0))
+        elif op == 2:
+            j, k = w[1]
+            w[1] = None
+            if k in self.shards[j]:
+                self.shards[j].remove(k)
+            self.reply(k)
+        else:
+            w[0] = True
+
+    def done(self):
+        return (self.next_submit >= self.R and self.closed
+                and not any(self.shards)
+                and all(w[0] for w in self.workers)
+                and all(r == 1 for r in self.replies))
+
+
 # Exact counts asserted by rust/tests/schedules.rs.
 EXPECTED = [
     ("locked 2x2 installers + 2x2 readers", PolicyLocked(), 2520, 0),
@@ -257,6 +353,10 @@ EXPECTED = [
     ("ledger R2 W1 B2 A1", Ledger(2, 1, 2, 1), 2899, 0),
     ("ledger R2 W1 B2 A1 buggy sweep", Ledger(2, 1, 2, 1, buggy_sweep=True), 2903, 32),
     ("ledger R3 W1 B2 A1", Ledger(3, 1, 2, 1), 112269, 0),
+    ("steal R3 W2 S2", Steal(3, 2, 2), 314, 0),
+    ("steal R3 W2 S2 racy", Steal(3, 2, 2, racy=True), 4722, 4134),
+    ("steal R4 W2 S2", Steal(4, 2, 2), 1926, 0),
+    ("steal R4 W2 S2 racy", Steal(4, 2, 2, racy=True), 67909, 63549),
 ]
 
 if __name__ == "__main__":

@@ -24,6 +24,9 @@ ATOMIC_CONTRACT = {
     ("rust/src/coordinator/service.rs", "done"): ["SeqCst"],
     ("rust/src/coordinator/service.rs", "next_id"): ["SeqCst"],
     ("rust/src/coordinator/service.rs", "batch_seq"): ["Relaxed"],
+    ("rust/src/coordinator/service.rs", "class_queued"): ["SeqCst"],
+    ("rust/src/coordinator/service.rs", "rr"): ["Relaxed"],
+    ("rust/src/coordinator/service.rs", "idle_workers"): ["Relaxed"],
     ("rust/src/fault/inject.rs", "seq"): ["Relaxed"],
     ("rust/src/util/threadpool.rs", "CACHE"): ["Relaxed"],
     ("rust/src/util/threadpool.rs", "next"): ["Relaxed"],
@@ -44,6 +47,7 @@ ATOMIC_CONTRACT = {
     ("rust/src/qos/telemetry.rs", "depth_n"): ["Relaxed"],
     ("rust/src/qos/telemetry.rs", "occ_pm_sum"): ["Relaxed"],
     ("rust/src/qos/telemetry.rs", "occ_n"): ["Relaxed"],
+    ("rust/src/qos/telemetry.rs", "expired"): ["Relaxed"],
 }
 
 DETERMINISTIC_MODULES = [

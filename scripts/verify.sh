@@ -23,6 +23,29 @@ run_guarded() {
     fi
 }
 
+# Bench artifact gate: every bench smoke must leave its JSON at the repo
+# root (that is where CI's upload step and cross-PR perf tracking look),
+# non-empty and parseable — a bench that "passed" but wrote a truncated or
+# empty artifact is a silent CI regression, so fail loudly here instead.
+require_artifact() {
+    local f="$1"
+    if [ ! -f "$f" ]; then
+        echo "error: bench did not write $f (expected at repo root)" >&2
+        exit 1
+    fi
+    if [ ! -s "$f" ]; then
+        echo "error: $f is empty" >&2
+        exit 1
+    fi
+    if command -v python3 >/dev/null 2>&1; then
+        if ! python3 -c "import json,sys; json.load(open(sys.argv[1]))" "$f"; then
+            echo "error: $f is not valid JSON" >&2
+            exit 1
+        fi
+    fi
+    echo "== $f written ($(wc -c <"$f") bytes) =="
+}
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
@@ -75,24 +98,26 @@ run_guarded env CVAPPROX_SERVICE_WORKERS=1 cargo test -q -p cvapprox --lib coord
 echo "== serving smoke: coordinator tests at 4 workers =="
 run_guarded env CVAPPROX_SERVICE_WORKERS=4 cargo test -q -p cvapprox --lib coordinator
 
+# Sharded-queue smoke: the same suite with the shard count pinned to the
+# legacy single-queue shape and to one-shard-per-worker. CVAPPROX_SHARDS=1
+# must be bit-for-bit the pre-PR-9 behavior; 4 exercises work stealing on
+# every pooled test.
+echo "== serving smoke: coordinator tests at 4 workers, 1 shard (legacy queue) =="
+run_guarded env CVAPPROX_SERVICE_WORKERS=4 CVAPPROX_SHARDS=1 \
+    cargo test -q -p cvapprox --lib coordinator
+
+echo "== serving smoke: coordinator tests at 4 workers, 4 shards =="
+run_guarded env CVAPPROX_SERVICE_WORKERS=4 CVAPPROX_SHARDS=4 \
+    cargo test -q -p cvapprox --lib coordinator
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
     echo "== perf smoke: gemm_throughput (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench gemm_throughput
-    if [ -f BENCH_gemm_throughput.json ]; then
-        echo "== BENCH_gemm_throughput.json written =="
-    else
-        echo "error: bench did not write BENCH_gemm_throughput.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_gemm_throughput.json
 
     echo "== perf smoke: serving (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench serving
-    if [ -f BENCH_serving.json ]; then
-        echo "== BENCH_serving.json written =="
-    else
-        echo "error: bench did not write BENCH_serving.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_serving.json
 
     # Heterogeneous-policy serving: hermetic (no artifacts needed). The
     # bench itself asserts the acceptance claim — the greedy mixed policy
@@ -101,12 +126,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     # forward, so a nonzero exit here is a real regression.
     echo "== policy smoke: policy_serving (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench policy_serving
-    if [ -f BENCH_policy.json ]; then
-        echo "== BENCH_policy.json written =="
-    else
-        echo "error: bench did not write BENCH_policy.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_policy.json
 
     # Positive/negative pairing: the bench asserts the paired ladder search
     # dominates-or-matches the mixed policy on the (power, loss) plane
@@ -114,12 +134,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     # bit-identical to per-image paired forwards.
     echo "== pairing smoke: paired_policy (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench paired_policy
-    if [ -f BENCH_paired.json ]; then
-        echo "== BENCH_paired.json written =="
-    else
-        echo "error: bench did not write BENCH_paired.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_paired.json
 
     # Adaptive QoS: a bursty trace must drive the governor down the ladder
     # and back up (>= 2 transitions recorded in BENCH_qos.json), with every
@@ -127,12 +142,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     # bench asserts all of it and emits the ladder artifact too.
     echo "== qos smoke: qos_adaptive (quick budgets) =="
     CVAPPROX_BENCH_QUICK=1 cargo bench -p cvapprox --bench qos_adaptive
-    if [ -f BENCH_qos.json ]; then
-        echo "== BENCH_qos.json written =="
-    else
-        echo "error: bench did not write BENCH_qos.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_qos.json
 
     # Chaos suite: deterministic fault injection at two fixed seeds. The
     # bench asserts the robustness contract itself (exactly one reply per
@@ -146,12 +156,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
         run_guarded env CVAPPROX_BENCH_QUICK=1 CVAPPROX_FAULT_SEED="$seed" \
             cargo bench -p cvapprox --bench chaos
     done
-    if [ -f BENCH_fault.json ]; then
-        echo "== BENCH_fault.json written =="
-    else
-        echo "error: bench did not write BENCH_fault.json" >&2
-        exit 1
-    fi
+    require_artifact BENCH_fault.json
 fi
 
 # Lint gates (after the correctness gates, so a style failure never masks a
