@@ -1,0 +1,286 @@
+//! Co-design search bench: the seeded NSGA-II genome search vs the greedy
+//! ladder, end to end on the checked-in hermetic artifacts (no `make
+//! artifacts`, no network — CI always executes it).
+//!
+//! Emits `BENCH_search.json` and the `SEARCH_pareto.json` front artifact
+//! the `cvapprox qos-ladder --search` path consumes. Asserted, not just
+//! reported:
+//! * the same seed produces a **byte-identical** `SEARCH_pareto.json` at
+//!   1 worker and at N workers (the determinism contract the integration
+//!   suite pins per-commit; here it is also timed);
+//! * some searched front member **strictly dominates** the greedy-paired
+//!   rung on the (est_loss, power) plane — the search starts from the
+//!   greedy ladder's own policies (plus per-layer deepenings of them), so
+//!   it can only add to that baseline, never lose it;
+//! * the searched front's hypervolume is **no smaller** than the greedy
+//!   ladder's (guaranteed by the same seeding: every greedy rung's genome
+//!   is in the archive the front is drawn from);
+//! * the merged ladder (`qos_ladder_with_search`) keeps every greedy rung,
+//!   installs at least one searched rung, and stays power-monotone.
+//!
+//! Env knobs: `CVAPPROX_BENCH_QUICK=1` (smaller population/fewer
+//! generations); `CVAPPROX_THREADS` pinned to 1 unless set.
+
+use std::time::Instant;
+
+use cvapprox::approx::Family;
+use cvapprox::datasets::Dataset;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::policy::MAX_M;
+use cvapprox::nn::{loader, Engine};
+use cvapprox::report::layerwise::{qos_ladder, qos_ladder_with_search};
+use cvapprox::search::{self, nsga, Gene, Genome, Objectives, SearchConfig, SearchResult};
+use cvapprox::util::json::Json;
+
+const N_ARRAY: u32 = 64;
+const FAMILY: Family = Family::Perforated;
+const M_HI: u32 = 3;
+const BUDGET_PCT: f64 = 0.8;
+/// Hypervolume reference point: both axes of every rung stay inside it
+/// (power_norm <= 1.0 == exact, est_loss < 1.0).
+const REF_LOSS: f64 = 1.0;
+const REF_POWER: f64 = 1.25;
+
+/// Per-layer deepenings of a seed genome: for every approximate gene, the
+/// same shape at every deeper m (as the gene is, and as a mirrored pair),
+/// plus the power-neutral pairing of the gene itself. These are the moves
+/// the greedy searches cannot make, handed to generation 0 so the front
+/// explores strictly beyond the baseline from the start.
+fn deepened(seed: &Genome) -> Vec<Genome> {
+    let mut out = Vec::new();
+    for (i, g) in seed.genes.iter().enumerate() {
+        if g.m() == 0 {
+            continue;
+        }
+        for m in g.m() + 1..=MAX_M {
+            for paired in [g.paired, true] {
+                let mut v = seed.clone();
+                v.genes[i] = Gene::approx(g.shape, m, g.polarity, g.use_cv, paired);
+                out.push(v);
+            }
+        }
+        if !g.paired {
+            let mut v = seed.clone();
+            v.genes[i] = Gene::approx(g.shape, g.m(), g.polarity, g.use_cv, true);
+            out.push(v);
+        }
+    }
+    out
+}
+
+fn timed_run(engine: &Engine, ds: &Dataset, cfg: &SearchConfig) -> (SearchResult, f64) {
+    let t0 = Instant::now();
+    let result = search::run_search(engine, ds, cfg).expect("search runs hermetically");
+    (result, t0.elapsed().as_secs_f64())
+}
+
+fn objectives(est_loss: f64, power_norm: f64) -> Objectives {
+    Objectives { est_loss, power_norm }
+}
+
+fn main() {
+    if std::env::var("CVAPPROX_THREADS").is_err() {
+        std::env::set_var("CVAPPROX_THREADS", "1");
+    }
+    println!("== bench: codesign_search (hermetic) ==");
+    let quick = std::env::var("CVAPPROX_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm"))
+        .expect("hermetic model (regenerate with scripts/gen_hermetic_golden.py)");
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).expect("hermetic dataset");
+    let engine = Engine::new(model);
+    let n_eval = ds.n;
+
+    // ---- the greedy baseline the search must beat ------------------------
+    let base = qos_ladder(&engine, &ds, FAMILY, M_HI, BUDGET_PCT, n_eval, N_ARRAY)
+        .expect("greedy ladder");
+    println!("greedy ladder ({} rungs):", base.len());
+    for r in base.rungs() {
+        println!("  {:<18} loss {:.4}  power {:.3}x", r.name, r.est_loss, r.power_norm);
+    }
+    let gp = base
+        .rungs()
+        .iter()
+        .find(|r| r.name == "greedy-paired")
+        .expect("hermetic ladder pins a greedy-paired rung");
+
+    // ---- the search, seeded from the ladder it must dominate ------------
+    let mut cfg = SearchConfig::new(n_eval);
+    cfg.generations = if quick { 4 } else { 8 };
+    cfg.pop = if quick { 12 } else { 20 };
+    cfg.seed = 2024;
+    for r in base.rungs() {
+        if let Some(g) = Genome::from_policy(&r.policy) {
+            for d in deepened(&g) {
+                cfg.seeds.push(d);
+            }
+            cfg.seeds.push(g);
+        }
+    }
+    println!(
+        "search: {} generations, pop {}, seed {}, {} ladder-derived seeds",
+        cfg.generations,
+        cfg.pop,
+        cfg.seed,
+        cfg.seeds.len()
+    );
+
+    cfg.workers = 1;
+    let (result, secs_1) = timed_run(&engine, &ds, &cfg);
+    let render_1 = result.to_json().render();
+    let workers_n = 4usize;
+    cfg.workers = workers_n;
+    let (result_n, secs_n) = timed_run(&engine, &ds, &cfg);
+    assert_eq!(
+        render_1,
+        result_n.to_json().render(),
+        "SEARCH_pareto.json must be byte-identical at 1 and {workers_n} workers"
+    );
+    let gens_total = (cfg.generations + 1) as f64; // generation 0 included
+    println!(
+        "front: {} members from {} evals ({} memo hits); {:.2}s/gen at 1 worker, \
+         {:.2}s/gen at {workers_n} (byte-identical artifacts)",
+        result.front.len(),
+        result.evals,
+        result.memo_hits,
+        secs_1 / gens_total,
+        secs_n / gens_total
+    );
+    for (i, m) in result.front.iter().enumerate() {
+        println!(
+            "  search-{i}: loss {:.4}  power {:.3}x  {}",
+            m.est_loss,
+            m.power_norm,
+            m.genome.describe()
+        );
+    }
+
+    // ---- acceptance gate: strict dominance over greedy-paired ------------
+    let dominator = result.front.iter().find(|m| {
+        let s = objectives(m.est_loss, m.power_norm);
+        let g = objectives(gp.est_loss, gp.power_norm);
+        nsga::dominates(s, g)
+    });
+    let dominator = dominator.unwrap_or_else(|| {
+        panic!(
+            "no searched front member strictly dominates greedy-paired \
+             (loss {:.4}, power {:.3})",
+            gp.est_loss, gp.power_norm
+        )
+    });
+    println!(
+        "dominance: search (loss {:.4}, power {:.3}) STRICTLY dominates greedy-paired \
+         (loss {:.4}, power {:.3})",
+        dominator.est_loss, dominator.power_norm, gp.est_loss, gp.power_norm
+    );
+
+    // ---- hypervolume: searched front vs the greedy staircase -------------
+    let front_pts: Vec<Objectives> =
+        result.front.iter().map(|m| objectives(m.est_loss, m.power_norm)).collect();
+    let base_pts: Vec<Objectives> =
+        base.rungs().iter().map(|r| objectives(r.est_loss, r.power_norm)).collect();
+    let hv_search = nsga::hypervolume(&front_pts, REF_LOSS, REF_POWER);
+    let hv_base = nsga::hypervolume(&base_pts, REF_LOSS, REF_POWER);
+    println!("hypervolume: search {hv_search:.4} vs greedy ladder {hv_base:.4}");
+    assert!(
+        hv_search >= hv_base - 1e-12,
+        "searched front hypervolume {hv_search} fell below the greedy ladder's {hv_base} \
+         despite being seeded with its rungs"
+    );
+
+    // ---- the merge: searched rungs installed through the QoS ladder ------
+    let merged = qos_ladder_with_search(
+        &engine,
+        &ds,
+        FAMILY,
+        M_HI,
+        BUDGET_PCT,
+        n_eval,
+        N_ARRAY,
+        &result.front,
+    )
+    .expect("merged ladder");
+    let searched_kept =
+        merged.rungs().iter().filter(|r| r.name.starts_with("search-")).count();
+    println!("merged ladder ({} rungs, {} searched):", merged.len(), searched_kept);
+    for r in merged.rungs() {
+        println!("  {:<18} loss {:.4}  power {:.3}x", r.name, r.est_loss, r.power_norm);
+    }
+    for b in base.rungs() {
+        assert!(
+            merged.rungs().iter().any(|r| r.name == b.name),
+            "merge must keep every greedy rung (lost {:?})",
+            b.name
+        );
+    }
+    assert!(searched_kept >= 1, "merge must install at least one searched rung");
+    for w in merged.rungs().windows(2) {
+        assert!(
+            w[1].power_norm < w[0].power_norm + 1e-12,
+            "merged ladder must stay power-monotone"
+        );
+    }
+
+    // ---- artifacts -------------------------------------------------------
+    let pareto_path = cvapprox::util::bench::artifact_path("SEARCH_pareto.json");
+    match std::fs::write(&pareto_path, &render_1) {
+        Ok(()) => println!("wrote {}", pareto_path.display()),
+        Err(e) => println!("(could not write {}: {e})", pareto_path.display()),
+    }
+    let rungs_json = |rungs: &[cvapprox::qos::Rung]| {
+        Json::Arr(
+            rungs
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .field("name", r.name.as_str())
+                        .field("est_loss", r.est_loss)
+                        .field("power_norm", r.power_norm)
+                })
+                .collect(),
+        )
+    };
+    let json = Json::obj()
+        .field("bench", "codesign_search")
+        .field("model", "hermnet_hsynth (hermetic)")
+        .field("eval_images", n_eval)
+        .field("quick", quick)
+        .field("generations", cfg.generations)
+        .field("pop", cfg.pop)
+        .field("seed", format!("{}", cfg.seed))
+        .field("front_size", result.front.len())
+        .field("evals", result.evals as i64)
+        .field("memo_hits", result.memo_hits as i64)
+        .field("hypervolume_search", hv_search)
+        .field("hypervolume_greedy", hv_base)
+        .field(
+            "greedy_paired",
+            Json::obj().field("est_loss", gp.est_loss).field("power_norm", gp.power_norm),
+        )
+        .field(
+            "dominator",
+            Json::obj()
+                .field("est_loss", dominator.est_loss)
+                .field("power_norm", dominator.power_norm)
+                .field("describe", dominator.genome.describe()),
+        )
+        .field("dominates_greedy_paired", true)
+        .field("byte_identical_across_workers", true)
+        .field(
+            "walltime",
+            Json::obj()
+                .field("workers_n", workers_n)
+                .field("total_s_1w", secs_1)
+                .field("total_s_nw", secs_n)
+                .field("per_generation_s_1w", secs_1 / gens_total)
+                .field("per_generation_s_nw", secs_n / gens_total),
+        )
+        .field("greedy_ladder", rungs_json(base.rungs()))
+        .field("merged_ladder", rungs_json(merged.rungs()))
+        .field("searched_kept", searched_kept);
+    let path = cvapprox::util::bench::artifact_path("BENCH_search.json");
+    match std::fs::write(&path, json.render()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("(could not write {}: {e})", path.display()),
+    }
+}

@@ -243,6 +243,10 @@ pub const DETERMINISTIC_MODULES: &[&str] = &[
     "rust/src/util/rng.rs",
     "rust/src/util/prop.rs",
     "rust/src/nn/testutil.rs",
+    "rust/src/search/mod.rs",
+    "rust/src/search/genome.rs",
+    "rust/src/search/evaluate.rs",
+    "rust/src/search/nsga.rs",
 ];
 
 /// Directory prefixes (repo-relative) forming the serving hot path (rule

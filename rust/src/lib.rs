@@ -19,6 +19,7 @@
 //! * [`qos`] — adaptive QoS: policy ladders, telemetry, hot-swap governor
 //! * [`fault`] — fault injection, integrity checksums, self-healing helpers
 //! * [`analyze`] — `srclint`: project-invariant static analysis (R1–R5)
+//! * [`search`] — seeded Pareto co-design search over drop-mask genomes
 //! * [`report`] — paper-style table/figure renderers
 //!
 //! Python (JAX + Pallas) exists only on the build path (`make artifacts`);
@@ -35,6 +36,7 @@ pub mod nn;
 pub mod qos;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod systolic;
 pub mod util;
 

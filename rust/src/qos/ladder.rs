@@ -20,13 +20,61 @@
 //!             "policy": {"layers": [...]}}, ...]}
 //! ```
 
+use std::fmt;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::nn::{LayerPolicy, Model, SharedPolicy};
 use crate::util::json::Json;
+
+/// Typed ladder-construction failure. Callers feeding externally produced
+/// rung sets (e.g. a `SEARCH_pareto.json` front) match on this instead of
+/// string-scraping — a malformed artifact degrades to an error, never a
+/// panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LadderError {
+    /// No rungs at all.
+    Empty,
+    /// Rung `index` has a blank name.
+    EmptyName { index: usize },
+    /// Rung `index` carries a negative / non-finite estimated loss.
+    BadLoss { index: usize, name: String, est_loss: f64 },
+    /// Rung `index` carries a non-positive / non-finite power.
+    BadPower { index: usize, name: String, power_norm: f64 },
+    /// Rung `index` costs more power than its predecessor.
+    PowerRise { index: usize, name: String, power_norm: f64, prev: f64 },
+    /// Two rungs share a name.
+    DuplicateName { name: String },
+}
+
+impl fmt::Display for LadderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LadderError::Empty => write!(f, "a QoS ladder needs at least one rung"),
+            LadderError::EmptyName { index } => {
+                write!(f, "rung {index} has an empty name")
+            }
+            LadderError::BadLoss { index, name, est_loss } => {
+                write!(f, "rung {index} ({name}) has invalid est_loss {est_loss}")
+            }
+            LadderError::BadPower { index, name, power_norm } => {
+                write!(f, "rung {index} ({name}) has invalid power_norm {power_norm}")
+            }
+            LadderError::PowerRise { index, name, power_norm, prev } => write!(
+                f,
+                "rung {index} ({name}) raises power over its predecessor \
+                 ({power_norm:.4} > {prev:.4}); a ladder must descend the power axis"
+            ),
+            LadderError::DuplicateName { name } => {
+                write!(f, "duplicate rung name {name:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LadderError {}
 
 /// One operating point of the ladder.
 #[derive(Clone, Debug)]
@@ -54,33 +102,68 @@ impl Ladder {
     /// nonnegative losses, positive power, and power nonincreasing down the
     /// ladder.
     pub fn new(rungs: Vec<Rung>) -> Result<Ladder> {
+        Self::check(&rungs)?;
+        Ok(Ladder { rungs })
+    }
+
+    /// Order-independent construction: sort rungs by power descending
+    /// (ties broken by name, then est_loss — fully deterministic for any
+    /// input order), then validate. This is how searched rungs merge into
+    /// a ladder: callers never have to pre-sort, and a front that is
+    /// *inherently* unladderable (duplicate names, bad numbers) comes back
+    /// as a typed [`LadderError`] instead of a panic.
+    pub fn sorted(mut rungs: Vec<Rung>) -> Result<Ladder, LadderError> {
+        rungs.sort_by(|a, b| {
+            b.power_norm
+                .partial_cmp(&a.power_norm)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.name.cmp(&b.name))
+                .then_with(|| {
+                    a.est_loss
+                        .partial_cmp(&b.est_loss)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+        });
+        Self::check(&rungs)?;
+        Ok(Ladder { rungs })
+    }
+
+    /// The ladder invariants as a pure, typed check over a rung sequence.
+    pub fn check(rungs: &[Rung]) -> Result<(), LadderError> {
         if rungs.is_empty() {
-            bail!("a QoS ladder needs at least one rung");
+            return Err(LadderError::Empty);
         }
         for (i, r) in rungs.iter().enumerate() {
             if r.name.trim().is_empty() {
-                bail!("rung {i} has an empty name");
+                return Err(LadderError::EmptyName { index: i });
             }
             if !(r.est_loss >= 0.0 && r.est_loss.is_finite()) {
-                bail!("rung {i} ({}) has invalid est_loss {}", r.name, r.est_loss);
+                return Err(LadderError::BadLoss {
+                    index: i,
+                    name: r.name.clone(),
+                    est_loss: r.est_loss,
+                });
             }
             if !(r.power_norm > 0.0 && r.power_norm.is_finite()) {
-                bail!("rung {i} ({}) has invalid power_norm {}", r.name, r.power_norm);
+                return Err(LadderError::BadPower {
+                    index: i,
+                    name: r.name.clone(),
+                    power_norm: r.power_norm,
+                });
             }
             if i > 0 && r.power_norm > rungs[i - 1].power_norm + 1e-9 {
-                bail!(
-                    "rung {i} ({}) raises power over its predecessor \
-                     ({:.4} > {:.4}); a ladder must descend the power axis",
-                    r.name,
-                    r.power_norm,
-                    rungs[i - 1].power_norm
-                );
+                return Err(LadderError::PowerRise {
+                    index: i,
+                    name: r.name.clone(),
+                    power_norm: r.power_norm,
+                    prev: rungs[i - 1].power_norm,
+                });
             }
             if rungs[..i].iter().any(|p| p.name == r.name) {
-                bail!("duplicate rung name {:?}", r.name);
+                return Err(LadderError::DuplicateName { name: r.name.clone() });
             }
         }
-        Ok(Ladder { rungs })
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -250,6 +333,54 @@ mod tests {
             rung("b", 0.01, 0.9, p),
         ])
         .is_ok());
+    }
+
+    #[test]
+    fn sorted_is_order_independent_and_typed() {
+        let exact = LayerPolicy::uniform(Family::Exact, 0, false, 2).unwrap();
+        let p = LayerPolicy::uniform(Family::Perforated, 3, true, 2).unwrap();
+        // any insertion order yields the same ladder
+        let mk = || {
+            vec![
+                rung("low", 0.05, 0.6, p.clone()),
+                rung("exact", 0.0, 1.0, exact.clone()),
+                rung("mid", 0.01, 0.8, p.clone()),
+            ]
+        };
+        let a = Ladder::sorted(mk()).unwrap();
+        let mut shuffled = mk();
+        shuffled.reverse();
+        let b = Ladder::sorted(shuffled).unwrap();
+        assert_eq!(a.describe(), b.describe());
+        assert_eq!(
+            a.rungs().iter().map(|r| r.name.as_str()).collect::<Vec<_>>(),
+            vec!["exact", "mid", "low"]
+        );
+        // equal power ties break by name, then est_loss — deterministically
+        let t1 = Ladder::sorted(vec![
+            rung("b", 0.02, 0.8, p.clone()),
+            rung("a", 0.01, 0.8, p.clone()),
+        ])
+        .unwrap();
+        assert_eq!(t1.rung(0).name, "a");
+        // an unladderable front is a typed error, not a panic
+        assert_eq!(Ladder::sorted(vec![]).unwrap_err(), LadderError::Empty);
+        let dup = Ladder::sorted(vec![
+            rung("x", 0.0, 1.0, exact.clone()),
+            rung("x", 0.01, 0.9, p.clone()),
+        ])
+        .unwrap_err();
+        assert!(matches!(dup, LadderError::DuplicateName { ref name } if name == "x"));
+        let bad = Ladder::sorted(vec![rung("x", 0.0, f64::NAN, exact.clone())]).unwrap_err();
+        assert!(matches!(bad, LadderError::BadPower { .. }));
+        // the PowerRise display keeps the invariant's wording
+        let rise = LadderError::PowerRise {
+            index: 1,
+            name: "x".into(),
+            power_norm: 0.9,
+            prev: 0.6,
+        };
+        assert!(rise.to_string().contains("descend"), "{rise}");
     }
 
     #[test]

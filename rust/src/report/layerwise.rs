@@ -276,6 +276,48 @@ pub fn qos_ladder(
     Ladder::new(rungs)
 }
 
+/// [`qos_ladder`] extended with a searched Pareto front: the co-design
+/// search's nondominated candidates (`cvapprox search`) become `search-{i}`
+/// rungs wherever no greedy rung already matches them on both axes.
+///
+/// Every searched rung is validated against the model first (a front from
+/// the wrong network is a contextual error, not a panic), then dropped if
+/// any rung kept so far — greedy or searched — weakly dominates it
+/// (equal-or-lower power AND equal-or-lower est_loss), which also collapses
+/// exact ties. The merge goes through the order-independent
+/// [`crate::qos::Ladder::sorted`] constructor, so rung order in the
+/// artifact never matters and an unladderable merge surfaces as a typed
+/// [`crate::qos::LadderError`].
+#[allow(clippy::too_many_arguments)]
+pub fn qos_ladder_with_search(
+    engine: &Engine,
+    ds: &Dataset,
+    family: Family,
+    m_hi: u32,
+    budget_pct: f64,
+    n_images: usize,
+    n_array: u32,
+    front: &[crate::search::FrontMember],
+) -> Result<crate::qos::Ladder> {
+    use anyhow::Context;
+    use crate::qos::Rung;
+    let base = qos_ladder(engine, ds, family, m_hi, budget_pct, n_images, n_array)?;
+    let searched = crate::search::to_rungs(front)?;
+    let mut rungs: Vec<Rung> = base.rungs().to_vec();
+    for r in searched {
+        r.policy
+            .validate_for(&engine.model)
+            .with_context(|| format!("searched rung {:?} does not fit this model", r.name))?;
+        let dominated = rungs.iter().any(|b| {
+            b.power_norm <= r.power_norm + 1e-12 && b.est_loss <= r.est_loss + 1e-12
+        });
+        if !dominated {
+            rungs.push(r);
+        }
+    }
+    crate::qos::Ladder::sorted(rungs).map_err(anyhow::Error::from)
+}
+
 /// CLI driver: sensitivity table + greedy policy for one (net, family).
 /// When `paired` is set, the mixed result seeds the paired greedy search
 /// and the paired policy becomes the artifact. When `policy_out` is set,
@@ -526,6 +568,76 @@ mod tests {
         let back = crate::qos::Ladder::parse(&ladder.to_json().render()).unwrap();
         assert_eq!(back.describe(), ladder.describe());
         back.validate_for(&engine.model).unwrap();
+    }
+
+    #[test]
+    fn hermetic_search_merge_filters_dominated_and_stays_monotone() {
+        use crate::search::{self, Evaluator, FrontMember, Gene, Genome, Shape};
+        let (engine, ds) = hermetic_engine_and_ds();
+        let n_layers = engine.model.mac_layers();
+        // A front whose first member ties the base exact rung (weakly
+        // dominated → dropped) and whose second is the pinned all-layers
+        // mirrored perforated m=1 pairing — a point the greedy ladder never
+        // emits, cheaper than exact at a small measured loss, that must
+        // merge in whenever no greedy rung matches it on both axes.
+        let ev = Evaluator::new(&engine, &ds, ds.n, 64).unwrap();
+        let exact = Genome::exact(n_layers);
+        let paired = Genome::uniform(
+            Gene::approx(Shape::Rows, 1, crate::approx::Polarity::Neg, true, true),
+            n_layers,
+        );
+        let member = |g: &Genome| {
+            let o = ev.evaluate_genome(g).unwrap();
+            FrontMember {
+                genome: g.clone(),
+                est_loss: o.est_loss,
+                power_norm: o.power_norm,
+                hash: g.hash(),
+            }
+        };
+        let front = vec![member(&exact), member(&paired)];
+        assert_eq!(front[1].est_loss, 4.0 / 64.0, "pinned paired-m1 loss");
+        let merged = qos_ladder_with_search(
+            &engine, &ds, Family::Perforated, 3, 0.8, ds.n, 64, &front,
+        )
+        .unwrap();
+        let base =
+            qos_ladder(&engine, &ds, Family::Perforated, 3, 0.8, ds.n, 64).unwrap();
+        let names: Vec<&str> =
+            merged.rungs().iter().map(|r| r.name.as_str()).collect();
+        // the exact-tie searched rung is gone; every base rung survives
+        assert!(!names.contains(&"search-0"), "{names:?}");
+        for b in base.rungs() {
+            assert!(names.contains(&b.name.as_str()), "{names:?}");
+        }
+        // whether the paired-m1 rung merges depends on base dominance; on
+        // the hermetic set nothing on the base ladder weakly dominates it
+        // unless a base rung reaches its power at no more loss.
+        let kept = names.contains(&"search-1");
+        let dominated = base.rungs().iter().any(|b| {
+            b.power_norm <= front[1].power_norm + 1e-12
+                && b.est_loss <= front[1].est_loss + 1e-12
+        });
+        assert_eq!(kept, !dominated, "{names:?}");
+        // the merged ladder still descends the power axis
+        for w in merged.rungs().windows(2) {
+            assert!(w[1].power_norm <= w[0].power_norm + 1e-9);
+        }
+        // a front for the wrong model is a contextual error, not a panic
+        let wrong = Genome::exact(n_layers + 1);
+        let bad = vec![FrontMember {
+            genome: wrong.clone(),
+            est_loss: 0.0,
+            power_norm: 1.0,
+            hash: wrong.hash(),
+        }];
+        let err = qos_ladder_with_search(
+            &engine, &ds, Family::Perforated, 3, 0.8, ds.n, 64, &bad,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("does not fit"), "{err:#}");
+        // unrelated: search::parse_front round-trips what to_rungs consumes
+        let _ = search::to_rungs(&front).unwrap();
     }
 
     #[test]

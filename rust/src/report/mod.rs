@@ -10,7 +10,10 @@
 //!                   [--lut] [--json out.json]     # Tables 2-4
 //! cvapprox pareto   [--nets a,b] [--n 200]        # Fig 10
 //! cvapprox e2e      [--net resnet8] [--n 200]     # end-to-end service demo
-//! cvapprox qos-ladder [--hermetic] [--json l.json] # adaptive-QoS ladder artifact
+//! cvapprox qos-ladder [--hermetic] [--json l.json] [--search SEARCH_pareto.json]
+//!                                                  # adaptive-QoS ladder artifact
+//! cvapprox search   [--hermetic] [--generations N] [--pop N] [--seed S]
+//!                   [--json [out.json]]            # co-design Pareto search
 //! cvapprox srclint  [--json LINT_report.json] [--root PATH] # invariant linter
 //! cvapprox info                                   # artifact inventory
 //! ```
@@ -36,7 +39,7 @@ use crate::{artifacts_dir, runtime};
 const KNOWN_OPTS: &[&str] = &[
     "samples", "family", "nets", "datasets", "n", "lut", "json", "net", "batch",
     "array", "m", "cv", "engine", "variant", "workers", "max-loss", "budget",
-    "policy", "paired", "hermetic", "root",
+    "policy", "paired", "hermetic", "root", "generations", "pop", "seed", "search",
 ];
 
 pub fn cli_main() {
@@ -63,14 +66,15 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         Some("e2e") => cmd_e2e(&args),
         Some("layerwise") => cmd_layerwise(&args),
         Some("qos-ladder") => cmd_qos_ladder(&args),
+        Some("search") => cmd_search(&args),
         Some("figure4") => cmd_figure4(&args),
         Some("srclint") => cmd_srclint(&args),
         Some("info") => cmd_info(),
         other => {
             bail!(
                 "unknown or missing subcommand {:?}; try: table1 figure7 figure8 \
-                 figure9 table5 accuracy pareto e2e layerwise qos-ladder figure4 \
-                 srclint info",
+                 figure9 table5 accuracy pareto e2e layerwise qos-ladder search \
+                 figure4 srclint info",
                 other
             )
         }
@@ -349,7 +353,23 @@ fn cmd_qos_ladder(args: &Args) -> Result<()> {
          ({n} images, {n_array}x{n_array} array)\n",
         family.name()
     );
-    let ladder = layerwise::qos_ladder(&engine, &ds, family, m_hi, budget, n, n_array)?;
+    // --search FILE merges a `cvapprox search` front into the greedy
+    // ladder; its genomes re-validate on load, so a bad artifact is a
+    // clean error here, never a panic or a crooked ladder.
+    let ladder = match args.get("search") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading search front {path}"))?;
+            let front = crate::search::parse_front(
+                &Json::parse(&text).context("search artifact JSON")?,
+            )?;
+            println!("merging {} searched front member(s) from {path}\n", front.len());
+            layerwise::qos_ladder_with_search(
+                &engine, &ds, family, m_hi, budget, n, n_array, &front,
+            )?
+        }
+        None => layerwise::qos_ladder(&engine, &ds, family, m_hi, budget, n, n_array)?,
+    };
     println!(
         "{:<20} {:>10} {:>12}  policy",
         "rung", "power", "est_loss"
@@ -366,6 +386,85 @@ fn cmd_qos_ladder(args: &Args) -> Result<()> {
     if let Some(path) = args.get("json") {
         ladder.save_json(std::path::Path::new(path))?;
         println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+/// `cvapprox search`: the seeded multiplier/assignment co-design search
+/// (see `search/`). Evolves per-layer drop-mask genomes jointly with
+/// assignment under (est. accuracy loss, MAC-weighted power) and emits the
+/// Pareto front as `SEARCH_pareto.json` — the artifact `qos-ladder
+/// --search` merges into the governor's ladder. The evolution is seeded
+/// from the greedy ladder's own policies, so the search starts from the
+/// baseline it must dominate. Reproducible from `--seed` at any
+/// `--workers` count.
+fn cmd_search(args: &Args) -> Result<()> {
+    use crate::search::{self, SearchConfig};
+    let hermetic = args.flag("hermetic");
+    let (root, net, ds_name) = if hermetic {
+        (crate::hermetic_dir(), "hermnet".to_string(), "hsynth".to_string())
+    } else {
+        (
+            artifacts_dir(),
+            args.get_or("net", "resnet8").to_string(),
+            args.get_or("datasets", "synth10").to_string(),
+        )
+    };
+    let family = Family::from_name(args.get_or("family", "perforated"))
+        .context("bad family")?;
+    let m_hi: u32 = args.get_or("m", "3").parse()?;
+    let budget: f64 = args.get_or("budget", "0.8").parse()?;
+    let model = loader::load_model(&root.join(format!("models/{net}_{ds_name}.cvm")))?;
+    let ds = Dataset::load(&root.join(format!("data/{ds_name}_test.cvd")))?;
+    let n = args.get_usize("n", if hermetic { 64 } else { 150 })?.min(ds.n);
+    let engine = Engine::new(model);
+    let mut cfg = SearchConfig::from_env(n);
+    cfg.generations = args.get_usize("generations", cfg.generations)?;
+    cfg.pop = args.get_usize("pop", cfg.pop)?.max(2);
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("bad --seed")?;
+    }
+    cfg.n_array = args.get_usize("array", cfg.n_array as usize)? as u32;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    let base = layerwise::qos_ladder(&engine, &ds, family, m_hi, budget, n, cfg.n_array)?;
+    for r in base.rungs() {
+        if let Some(g) = search::Genome::from_policy(&r.policy) {
+            cfg.seeds.push(g);
+        }
+    }
+    println!(
+        "co-design search: {net}/{ds_name}, seed {} gens {} pop {} \
+         ({n} images, {}x{} array, {} workers)\n",
+        cfg.seed, cfg.generations, cfg.pop, cfg.n_array, cfg.n_array, cfg.workers
+    );
+    let result = search::run_search(&engine, &ds, &cfg)?;
+    println!(
+        "{:<12} {:>10} {:>12}  genome",
+        "member", "power", "est_loss"
+    );
+    for (i, m) in result.front.iter().enumerate() {
+        println!(
+            "{:<12} {:>9.3}x {:>11.2}%  {}",
+            format!("search-{i}"),
+            m.power_norm,
+            100.0 * m.est_loss,
+            m.genome.describe()
+        );
+    }
+    println!(
+        "\n{} front member(s) from {} evaluation(s) ({} memoized)",
+        result.front.len(),
+        result.evals,
+        result.memo_hits
+    );
+    let json_path = args
+        .get("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "SEARCH_pareto.json".to_string()));
+    if let Some(path) = &json_path {
+        std::fs::write(path, result.to_json().render())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -462,6 +561,53 @@ mod tests {
         for cmd in ["figure7", "figure8", "figure9", "table5"] {
             run(vec![cmd.into()]).unwrap();
         }
+    }
+
+    #[test]
+    fn search_cli_smoke_emits_valid_front() {
+        // Tiny search on the hermetic set, then feed the artifact straight
+        // back through `qos-ladder --search` — the full CLI loop.
+        let tmp = std::env::temp_dir();
+        let front_path =
+            tmp.join(format!("cvapprox_search_{}.json", std::process::id()));
+        run(vec![
+            "search".into(),
+            "--hermetic".into(),
+            "--n".into(),
+            "16".into(),
+            "--generations".into(),
+            "1".into(),
+            "--pop".into(),
+            "6".into(),
+            "--seed".into(),
+            "7".into(),
+            "--workers".into(),
+            "2".into(),
+            "--json".into(),
+            front_path.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&front_path).unwrap();
+        let front =
+            crate::search::parse_front(&Json::parse(&text).unwrap()).unwrap();
+        assert!(!front.is_empty());
+        let ladder_path =
+            tmp.join(format!("cvapprox_search_ladder_{}.json", std::process::id()));
+        run(vec![
+            "qos-ladder".into(),
+            "--hermetic".into(),
+            "--n".into(),
+            "16".into(),
+            "--search".into(),
+            front_path.to_str().unwrap().into(),
+            "--json".into(),
+            ladder_path.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let ladder = crate::qos::Ladder::load(&ladder_path).unwrap();
+        assert!(ladder.len() >= 2, "{}", ladder.describe());
+        let _ = std::fs::remove_file(&front_path);
+        let _ = std::fs::remove_file(&ladder_path);
     }
 
     #[test]

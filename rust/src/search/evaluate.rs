@@ -1,0 +1,259 @@
+//! Candidate fitness evaluation: typed feasibility gating, the CV-epilogue
+//! accuracy path, the MAC-weighted power model, and hash-keyed memoization.
+//!
+//! The order of checks is a correctness contract, not an optimization:
+//! a genome is (1) mask-validated, (2) checked against every layer's i32
+//! K-headroom ceiling ([`LayerAssignment::max_k`]), and only then (3)
+//! decoded into a [`LayerPolicy`] and run through the standard
+//! [`crate::report::accuracy::evaluate`] forward path. An infeasible-K
+//! candidate therefore dies with a typed [`EvalError::InfeasibleK`] *at
+//! evaluation* — it can never reach a GEMM whose accumulator headroom it
+//! would overflow mid-batch.
+//!
+//! Fitness is memoized per genome hash (FNV-1a) under a mutex, and
+//! batches parallelize across candidates over the shared thread pool
+//! ([`crate::util::threadpool::par_map`], ordered results). Each
+//! candidate evaluates single-threaded, so objective values are identical
+//! at every worker count.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::genome::{Genome, GenomeError};
+use crate::datasets::Dataset;
+use crate::nn::{Engine, ForwardOpts};
+use crate::report::accuracy::evaluate;
+use crate::util::sync::lock_clean;
+use crate::util::threadpool::par_map;
+
+/// The two minimized objectives of a feasible candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Estimated accuracy loss vs the exact design on the evaluation set
+    /// (fraction, clamped at 0).
+    pub est_loss: f64,
+    /// MAC-weighted normalized power ([`crate::nn::LayerPolicy::power_norm`]).
+    pub power_norm: f64,
+}
+
+/// Typed evaluation failure. Infeasible candidates stay in the population
+/// (ranked behind every feasible front) instead of aborting the search.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EvalError {
+    /// The genome failed mask/structural validation.
+    Invalid(GenomeError),
+    /// Layer `layer` reduces over `k` elements but the candidate's
+    /// assignment only guarantees i32 headroom up to `max_k`.
+    InfeasibleK { layer: usize, k: usize, max_k: usize },
+    /// The decoded policy failed to build or to evaluate.
+    Eval(String),
+}
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::Invalid(e) => write!(f, "invalid genome: {e}"),
+            EvalError::InfeasibleK { layer, k, max_k } => write!(
+                f,
+                "layer {layer} reduces over K = {k}, above the i32-headroom \
+                 ceiling {max_k} of its assignment"
+            ),
+            EvalError::Eval(msg) => write!(f, "evaluation failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
+
+impl From<GenomeError> for EvalError {
+    fn from(e: GenomeError) -> EvalError {
+        EvalError::Invalid(e)
+    }
+}
+
+/// Pure feasibility gate: mask validation plus the per-layer K-headroom
+/// check against the model's reduction depths. Runs before any forward.
+pub fn check_feasible(genome: &Genome, kdims: &[usize]) -> Result<(), EvalError> {
+    genome.validate()?;
+    if genome.len() != kdims.len() {
+        return Err(EvalError::Invalid(GenomeError::LayerCount {
+            expected: kdims.len(),
+            got: genome.len(),
+        }));
+    }
+    for (layer, (gene, &k)) in genome.genes.iter().zip(kdims).enumerate() {
+        let max_k = gene.to_assignment().max_k();
+        if k > max_k {
+            return Err(EvalError::InfeasibleK { layer, k, max_k });
+        }
+    }
+    Ok(())
+}
+
+struct MemoState {
+    map: HashMap<u64, Result<Objectives, EvalError>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Shared fitness evaluator for one (engine, dataset) pair.
+pub struct Evaluator<'a> {
+    engine: &'a Engine,
+    ds: &'a Dataset,
+    n_images: usize,
+    n_array: u32,
+    exact_acc: f64,
+    kdims: Vec<usize>,
+    memo: Mutex<MemoState>,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Build an evaluator, measuring the exact baseline accuracy once.
+    pub fn new(
+        engine: &'a Engine,
+        ds: &'a Dataset,
+        n_images: usize,
+        n_array: u32,
+    ) -> Result<Evaluator<'a>> {
+        let exact_acc = evaluate(engine, ds, &ForwardOpts::exact(), n_images, 1)?;
+        Ok(Self::with_exact_acc(engine, ds, n_images, n_array, exact_acc))
+    }
+
+    /// Build an evaluator around an already-measured exact baseline (no
+    /// forward pass — what the infeasibility tests use so rejection can be
+    /// observed without any GEMM ever running).
+    pub fn with_exact_acc(
+        engine: &'a Engine,
+        ds: &'a Dataset,
+        n_images: usize,
+        n_array: u32,
+        exact_acc: f64,
+    ) -> Evaluator<'a> {
+        Evaluator {
+            engine,
+            ds,
+            n_images,
+            n_array,
+            exact_acc,
+            kdims: engine.model.mac_layer_kdims(),
+            memo: Mutex::new(MemoState { map: HashMap::new(), hits: 0, misses: 0 }),
+        }
+    }
+
+    pub fn exact_acc(&self) -> f64 {
+        self.exact_acc
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.kdims.len()
+    }
+
+    /// `(memo hits, actual evaluations)` so far.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        let memo = lock_clean(&self.memo);
+        (memo.hits, memo.misses)
+    }
+
+    fn compute(&self, genome: &Genome) -> Result<Objectives, EvalError> {
+        check_feasible(genome, &self.kdims)?;
+        let policy =
+            genome.to_policy().map_err(|e| EvalError::Eval(format!("{e:#}")))?;
+        let power_norm = policy.power_norm(&self.engine.model, self.n_array);
+        let acc = evaluate(
+            self.engine,
+            self.ds,
+            &ForwardOpts::with_policy(Arc::new(policy)),
+            self.n_images,
+            1,
+        )
+        .map_err(|e| EvalError::Eval(format!("{e:#}")))?;
+        Ok(Objectives { est_loss: (self.exact_acc - acc).max(0.0), power_norm })
+    }
+
+    /// Evaluate one genome, memoized by its FNV-1a hash.
+    pub fn evaluate_genome(&self, genome: &Genome) -> Result<Objectives, EvalError> {
+        let h = genome.hash();
+        {
+            let mut memo = lock_clean(&self.memo);
+            if let Some(r) = memo.map.get(&h) {
+                memo.hits += 1;
+                return r.clone();
+            }
+        }
+        // Computed outside the lock: a second thread racing on the same
+        // hash recomputes the identical pure result, which is cheaper than
+        // serializing every forward behind the memo mutex.
+        let r = self.compute(genome);
+        let mut memo = lock_clean(&self.memo);
+        memo.misses += 1;
+        memo.map.insert(h, r.clone());
+        r
+    }
+
+    /// Evaluate a batch in parallel over the shared pool. Results come
+    /// back in input order regardless of worker count.
+    pub fn evaluate_all(
+        &self,
+        genomes: &[Genome],
+        workers: usize,
+    ) -> Vec<Result<Objectives, EvalError>> {
+        par_map(genomes.len(), workers, |i| self.evaluate_genome(&genomes[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::Polarity;
+    use crate::nn::gemm::{MAX_K_NEG, MAX_K_POS};
+    use crate::search::genome::{Gene, Shape};
+
+    #[test]
+    fn feasibility_gate_is_typed_and_ordered() {
+        // mask validation fires before the K check
+        let mut holey = Genome::exact(2);
+        holey.genes[0] = Gene {
+            mask: 0b101,
+            ..Gene::approx(Shape::Rows, 1, Polarity::Neg, true, false)
+        };
+        assert!(matches!(
+            check_feasible(&holey, &[10, 10]),
+            Err(EvalError::Invalid(GenomeError::Mask { layer: 0, .. }))
+        ));
+        // layer-count mismatch is typed
+        assert!(matches!(
+            check_feasible(&Genome::exact(2), &[10, 10, 10]),
+            Err(EvalError::Invalid(GenomeError::LayerCount { expected: 3, got: 2 }))
+        ));
+        // a Pos-polarity point has the tighter ceiling
+        let mut pos = Genome::exact(2);
+        pos.genes[1] = Gene::approx(Shape::Cols, 2, Polarity::Pos, true, false);
+        let k_over_pos = MAX_K_POS + 1;
+        match check_feasible(&pos, &[10, k_over_pos]) {
+            Err(EvalError::InfeasibleK { layer: 1, k, max_k }) => {
+                assert_eq!(k, k_over_pos);
+                assert_eq!(max_k, MAX_K_POS);
+            }
+            other => panic!("wrong result {other:?}"),
+        }
+        // the same depth under a Neg point is fine
+        let mut neg = pos.clone();
+        neg.genes[1] = Gene::approx(Shape::Cols, 2, Polarity::Neg, true, false);
+        assert!(check_feasible(&neg, &[10, k_over_pos]).is_ok());
+        // a mirrored pair inherits the tighter (Pos) half's ceiling
+        let mut pair = Genome::exact(2);
+        pair.genes[1] = Gene::approx(Shape::Rows, 1, Polarity::Neg, true, true);
+        assert!(matches!(
+            check_feasible(&pair, &[10, k_over_pos]),
+            Err(EvalError::InfeasibleK { layer: 1, .. })
+        ));
+        // nothing is feasible beyond the Neg ceiling either
+        assert!(matches!(
+            check_feasible(&Genome::exact(1), &[MAX_K_NEG + 1]),
+            Err(EvalError::InfeasibleK { .. })
+        ));
+    }
+}

@@ -1,0 +1,772 @@
+//! Genome encoding for the multiplier/assignment co-design search.
+//!
+//! One [`Gene`] per MAC layer describes *which partial products the
+//! layer's multipliers drop* and *how the layer is assigned*:
+//!
+//! * `shape` — which structural dimension of the 8×8 AND array the drop
+//!   mask removes: whole PP **rows** (the perforated family), low product
+//!   **columns** (the truncated family), or the low×low **sub-array**
+//!   (the recursive family). `Exact` drops nothing.
+//! * `mask` — the per-column/row drop mask. Bit *i* set means position
+//!   *i* is never generated; `m = mask.count_ones()` recovers the
+//!   family's approximation level. Only contiguous low prefixes
+//!   (`0b1`, `0b11`, …, `0b111_1111`) are structurally realizable — a
+//!   holey mask would leave floating compressor inputs in the Dadda
+//!   tree — so anything else is a typed [`GenomeError`], never a panic.
+//! * `polarity` — round-down ([`Polarity::Neg`], the paper's ε ≥ 0
+//!   designs) or the round-up mirror ([`Polarity::Pos`]).
+//! * `paired` — run the layer as a mirrored Neg/Pos pair
+//!   ([`PairedPoint::mirrored`]) so accumulated error cancels.
+//! * `use_cv` — add the control-variate epilogue.
+//!
+//! [`Genome::structural_check`] re-derives every gene against the
+//! structural models: the masked Dadda column heights must account for
+//! exactly the dropped partial products ([`crate::hw::dadda`]), and the
+//! gate-level AND-array model must agree with the fast arithmetic
+//! multiplier on sampled operands ([`crate::approx::bitmodel`]).
+
+use std::fmt;
+
+use crate::approx::{am_pol, bitmodel, Family, Polarity};
+use crate::hw::dadda;
+use crate::nn::policy::MAX_M;
+use crate::nn::{LayerAssignment, LayerPoint, LayerPolicy, PairedPoint};
+use crate::util::hash::Hasher64;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Typed genome validation failure. The search and the `qos-ladder
+/// --search` loader surface these as errors instead of panicking on a
+/// malformed candidate or artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GenomeError {
+    /// A genome must carry one gene per MAC layer; zero genes is not a
+    /// policy.
+    Empty,
+    /// Gene count does not match the model's MAC layer count.
+    LayerCount { expected: usize, got: usize },
+    /// The drop mask is not structurally realizable (see variants of
+    /// `reason`: holey, too wide, or inconsistent with the exact shape).
+    Mask { layer: usize, mask: u8, reason: &'static str },
+    /// The gene failed re-validation against the `dadda`/`bitmodel`
+    /// structural circuit models.
+    Structural { layer: usize, detail: String },
+}
+
+impl fmt::Display for GenomeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GenomeError::Empty => write!(f, "genome has no genes"),
+            GenomeError::LayerCount { expected, got } => write!(
+                f,
+                "genome has {got} genes but the model has {expected} MAC layers"
+            ),
+            GenomeError::Mask { layer, mask, reason } => {
+                write!(f, "gene {layer}: drop mask {mask:#010b} invalid: {reason}")
+            }
+            GenomeError::Structural { layer, detail } => {
+                write!(f, "gene {layer}: structural model mismatch: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GenomeError {}
+
+/// Which structural dimension of the partial-product array the drop mask
+/// removes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Nothing dropped: the exact multiplier.
+    Exact,
+    /// Drop whole PP rows (the perforated family, paper Fig. 1b).
+    Rows,
+    /// Drop low product columns (the truncated family, paper Fig. 3).
+    Cols,
+    /// Prune the low×low sub-product (the recursive family).
+    SubArray,
+}
+
+impl Shape {
+    pub const APPROX: [Shape; 3] = [Shape::Rows, Shape::Cols, Shape::SubArray];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Shape::Exact => "exact",
+            Shape::Rows => "rows",
+            Shape::Cols => "cols",
+            Shape::SubArray => "subarray",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Shape> {
+        match name {
+            "exact" => Some(Shape::Exact),
+            "rows" => Some(Shape::Rows),
+            "cols" => Some(Shape::Cols),
+            "subarray" => Some(Shape::SubArray),
+            _ => None,
+        }
+    }
+
+    /// The multiplier family this drop dimension realizes.
+    pub fn family(self) -> Family {
+        match self {
+            Shape::Exact => Family::Exact,
+            Shape::Rows => Family::Perforated,
+            Shape::Cols => Family::Truncated,
+            Shape::SubArray => Family::Recursive,
+        }
+    }
+
+    pub fn from_family(family: Family) -> Shape {
+        match family {
+            Family::Exact => Shape::Exact,
+            Family::Perforated => Shape::Rows,
+            Family::Truncated => Shape::Cols,
+            Family::Recursive => Shape::SubArray,
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            Shape::Exact => 0,
+            Shape::Rows => 1,
+            Shape::Cols => 2,
+            Shape::SubArray => 3,
+        }
+    }
+}
+
+/// The contiguous low-prefix mask dropping `m` positions.
+pub fn prefix_mask(m: u32) -> u8 {
+    ((1u32 << m.min(MAX_M)) - 1) as u8
+}
+
+/// One layer's slot in the genome (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Gene {
+    pub shape: Shape,
+    pub mask: u8,
+    pub polarity: Polarity,
+    pub use_cv: bool,
+    pub paired: bool,
+}
+
+impl Gene {
+    /// The exact gene in normal form: nothing dropped, canonical flags.
+    pub fn exact() -> Gene {
+        Gene {
+            shape: Shape::Exact,
+            mask: 0,
+            polarity: Polarity::Neg,
+            use_cv: false,
+            paired: false,
+        }
+    }
+
+    /// A non-exact gene dropping `m` positions of `shape`.
+    pub fn approx(shape: Shape, m: u32, polarity: Polarity, use_cv: bool, paired: bool) -> Gene {
+        Gene { shape, mask: prefix_mask(m), polarity, use_cv, paired }.normalized()
+    }
+
+    /// Approximation level: how many rows/columns/sub-positions the mask
+    /// drops.
+    pub fn m(self) -> u32 {
+        self.mask.count_ones()
+    }
+
+    /// Canonical form: an empty mask (or the exact shape) collapses to
+    /// [`Gene::exact`]; a mirrored pair carries both polarities, so its
+    /// stored polarity is canonically `Neg`.
+    pub fn normalized(self) -> Gene {
+        if self.shape == Shape::Exact || self.mask == 0 {
+            Gene::exact()
+        } else if self.paired {
+            Gene { polarity: Polarity::Neg, ..self }
+        } else {
+            self
+        }
+    }
+
+    /// Mask-level validation: typed errors for every structurally
+    /// unrealizable encoding (holey masks in particular).
+    pub fn validate(self, layer: usize) -> Result<(), GenomeError> {
+        if self.shape == Shape::Exact {
+            if self.mask != 0 {
+                return Err(GenomeError::Mask {
+                    layer,
+                    mask: self.mask,
+                    reason: "the exact shape drops nothing, so its mask must be empty",
+                });
+            }
+            if self.paired || self.use_cv || self.polarity != Polarity::Neg {
+                return Err(GenomeError::Mask {
+                    layer,
+                    mask: self.mask,
+                    reason: "exact gene out of normal form (pair/CV/polarity flags set)",
+                });
+            }
+            return Ok(());
+        }
+        if self.mask == 0 {
+            return Err(GenomeError::Mask {
+                layer,
+                mask: self.mask,
+                reason: "an approximate gene must drop at least one position",
+            });
+        }
+        let m = self.m();
+        if m > MAX_M {
+            return Err(GenomeError::Mask {
+                layer,
+                mask: self.mask,
+                reason: "mask drops more than MAX_M positions",
+            });
+        }
+        if self.mask != prefix_mask(m) {
+            return Err(GenomeError::Mask {
+                layer,
+                mask: self.mask,
+                reason: "holey drop mask: only a contiguous low prefix leaves a \
+                         reducible Dadda array",
+            });
+        }
+        Ok(())
+    }
+
+    /// Decode into the runtime assignment the engine executes.
+    pub fn to_assignment(self) -> LayerAssignment {
+        let g = self.normalized();
+        if g.shape == Shape::Exact {
+            return LayerAssignment::Point(LayerPoint::EXACT);
+        }
+        let family = g.shape.family();
+        if g.paired {
+            LayerAssignment::Paired(PairedPoint::mirrored(family, g.m(), g.use_cv))
+        } else {
+            LayerAssignment::Point(LayerPoint::new_pol(family, g.m(), g.polarity, g.use_cv))
+        }
+    }
+
+    /// Re-encode a runtime assignment. Returns `None` for assignments the
+    /// genome cannot express (non-mirrored pairings).
+    pub fn from_assignment(a: LayerAssignment) -> Option<Gene> {
+        match a.normalized() {
+            LayerAssignment::Point(p) if p == LayerPoint::EXACT => Some(Gene::exact()),
+            LayerAssignment::Point(p) => Some(Gene {
+                shape: Shape::from_family(p.family),
+                mask: prefix_mask(p.m),
+                polarity: p.polarity,
+                use_cv: p.use_cv,
+                paired: false,
+            }),
+            LayerAssignment::Paired(p) => {
+                let mirrored = p.even.family == p.odd.family
+                    && p.even.m == p.odd.m
+                    && p.even.use_cv == p.odd.use_cv
+                    && p.even.polarity == Polarity::Neg
+                    && p.odd.polarity == Polarity::Pos;
+                if !mirrored {
+                    return None;
+                }
+                Some(Gene {
+                    shape: Shape::from_family(p.even.family),
+                    mask: prefix_mask(p.even.m),
+                    polarity: Polarity::Neg,
+                    use_cv: p.even.use_cv,
+                    paired: true,
+                })
+            }
+        }
+    }
+
+    fn pack(self) -> u64 {
+        let g = self.normalized();
+        g.shape.code()
+            | (g.mask as u64) << 8
+            | (match g.polarity {
+                Polarity::Neg => 0u64,
+                Polarity::Pos => 1,
+            }) << 16
+            | (g.use_cv as u64) << 24
+            | (g.paired as u64) << 25
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj()
+            .field("shape", self.shape.name())
+            .field("mask", self.mask as i64)
+            .field(
+                "polarity",
+                match self.polarity {
+                    Polarity::Neg => "neg",
+                    Polarity::Pos => "pos",
+                },
+            )
+            .field("cv", self.use_cv)
+            .field("paired", self.paired)
+    }
+
+    fn from_json(j: &Json, layer: usize) -> anyhow::Result<Gene> {
+        use anyhow::Context;
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_str())
+            .and_then(Shape::from_name)
+            .with_context(|| format!("gene {layer}: bad or missing \"shape\""))?;
+        let mask = j
+            .get("mask")
+            .and_then(|m| m.as_f64())
+            .with_context(|| format!("gene {layer}: missing \"mask\""))?;
+        if !(0.0..=255.0).contains(&mask) || mask.fract() != 0.0 {
+            anyhow::bail!("gene {layer}: mask {mask} is not a byte");
+        }
+        let polarity = match j.get("polarity").and_then(|p| p.as_str()) {
+            Some("neg") | None => Polarity::Neg,
+            Some("pos") => Polarity::Pos,
+            Some(other) => anyhow::bail!("gene {layer}: unknown polarity {other:?}"),
+        };
+        let use_cv = j.get("cv").and_then(|c| c.as_bool()).unwrap_or(false);
+        let paired = j.get("paired").and_then(|c| c.as_bool()).unwrap_or(false);
+        Ok(Gene { shape, mask: mask as u8, polarity, use_cv, paired })
+    }
+}
+
+/// A full per-layer drop-mask configuration: one [`Gene`] per MAC layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Genome {
+    pub genes: Vec<Gene>,
+}
+
+impl Genome {
+    pub fn exact(n_layers: usize) -> Genome {
+        Genome { genes: vec![Gene::exact(); n_layers.max(1)] }
+    }
+
+    pub fn uniform(gene: Gene, n_layers: usize) -> Genome {
+        Genome { genes: vec![gene.normalized(); n_layers.max(1)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.genes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.genes.is_empty()
+    }
+
+    /// FNV-1a digest of the normalized genome — the memoization key and
+    /// the artifact provenance id.
+    pub fn hash(&self) -> u64 {
+        let mut h = Hasher64::new();
+        h.word(self.genes.len() as u64);
+        for g in &self.genes {
+            h.word(g.pack());
+        }
+        h.finish()
+    }
+
+    pub fn normalized(&self) -> Genome {
+        Genome { genes: self.genes.iter().map(|g| g.normalized()).collect() }
+    }
+
+    /// Mask-level validation of every gene (typed, no panics).
+    pub fn validate(&self) -> Result<(), GenomeError> {
+        if self.genes.is_empty() {
+            return Err(GenomeError::Empty);
+        }
+        for (layer, g) in self.genes.iter().enumerate() {
+            g.validate(layer)?;
+        }
+        Ok(())
+    }
+
+    /// Full structural re-validation: masks must be realizable, the
+    /// masked Dadda column heights must drop exactly the masked partial
+    /// products, and the gate-level AND-array model must agree with the
+    /// arithmetic multiplier on operands sampled from a genome-seeded
+    /// stream (so the check itself is deterministic per genome).
+    pub fn structural_check(&self) -> Result<(), GenomeError> {
+        self.validate()?;
+        let full = dadda::reduce(&dadda::full_heights(8));
+        for (layer, g) in self.genes.iter().enumerate() {
+            let g = g.normalized();
+            if g.shape == Shape::Exact {
+                continue;
+            }
+            let m = g.m();
+            // Dadda height accounting: rows drop m full 8-bit PP rows,
+            // cols drop the m low columns (heights 1..=m). The recursive
+            // sub-array has no column-mask equivalent, so it is covered
+            // by the AND-array sampling below only.
+            let dropped = match g.shape {
+                Shape::Rows => Some((dadda::perforated_heights(8, m), 8 * m)),
+                Shape::Cols => Some((dadda::truncated_heights(8, m), m * (m + 1) / 2)),
+                _ => None,
+            };
+            if let Some((heights, want_dropped)) = dropped {
+                let red = dadda::reduce(&heights);
+                if red.pp_bits + want_dropped != full.pp_bits {
+                    return Err(GenomeError::Structural {
+                        layer,
+                        detail: format!(
+                            "{} m={m}: masked array keeps {} pp bits, expected {}",
+                            g.shape.name(),
+                            red.pp_bits,
+                            full.pp_bits - want_dropped
+                        ),
+                    });
+                }
+                if red.stages > full.stages {
+                    return Err(GenomeError::Structural {
+                        layer,
+                        detail: format!(
+                            "{} m={m}: masked reduction takes {} stages, exact takes {}",
+                            g.shape.name(),
+                            red.stages,
+                            full.stages
+                        ),
+                    });
+                }
+            }
+            // Gate-level / arithmetic agreement on sampled operands.
+            let family = g.shape.family();
+            let polarities: &[Polarity] = if g.paired {
+                &[Polarity::Neg, Polarity::Pos]
+            } else {
+                std::slice::from_ref(&g.polarity)
+            };
+            let mut rng = Rng::new(self.hash() ^ (layer as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            for _ in 0..32 {
+                let (w, a) = (rng.u8(), rng.u8());
+                for &pol in polarities {
+                    let bits = bitmodel::am_bits_pol(family, pol, w, a, m);
+                    let fast = am_pol(family, pol, w, a, m);
+                    if bits != fast {
+                        return Err(GenomeError::Structural {
+                            layer,
+                            detail: format!(
+                                "{} m={m} pol={pol:?}: AND-array model gives {bits} \
+                                 for {w}*{a}, arithmetic model gives {fast}",
+                                g.shape.name()
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode into the runtime [`LayerPolicy`] (validating first).
+    pub fn to_policy(&self) -> anyhow::Result<LayerPolicy> {
+        self.validate()?;
+        LayerPolicy::from_assignments(self.genes.iter().map(|g| g.to_assignment()).collect())
+    }
+
+    /// Re-encode a runtime policy. `None` when the policy uses an
+    /// assignment the genome cannot express (a non-mirrored pairing).
+    pub fn from_policy(policy: &LayerPolicy) -> Option<Genome> {
+        let genes: Option<Vec<Gene>> =
+            policy.assignments().map(Gene::from_assignment).collect();
+        genes.map(|genes| Genome { genes })
+    }
+
+    /// Human-readable one-liner, e.g. `rows:3·cv | pair(cols:2) | exact`.
+    pub fn describe(&self) -> String {
+        self.genes
+            .iter()
+            .map(|g| {
+                let g = g.normalized();
+                if g.shape == Shape::Exact {
+                    "exact".to_string()
+                } else {
+                    let pol = match (g.paired, g.polarity) {
+                        (true, _) => "±",
+                        (false, Polarity::Neg) => "-",
+                        (false, Polarity::Pos) => "+",
+                    };
+                    let cv = if g.use_cv { "·cv" } else { "" };
+                    let pair = if g.paired { "pair:" } else { "" };
+                    format!("{pair}{}{pol}{}{cv}", g.shape.name(), g.m())
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    // ---- variation operators (all seeded-rng driven) -------------------
+
+    /// A random genome. Masks are always generated as low prefixes, so
+    /// random candidates are structurally valid by construction.
+    pub fn random(rng: &mut Rng, n_layers: usize) -> Genome {
+        let genes = (0..n_layers.max(1))
+            .map(|_| match rng.below(4) {
+                0 => Gene::exact(),
+                k => {
+                    let shape = Shape::APPROX[(k - 1) as usize];
+                    let m = 1 + rng.below(MAX_M as u64) as u32;
+                    let paired = rng.below(2) == 1;
+                    let polarity = if !paired && rng.below(2) == 1 {
+                        Polarity::Pos
+                    } else {
+                        Polarity::Neg
+                    };
+                    let use_cv = rng.below(4) != 0;
+                    Gene::approx(shape, m, polarity, use_cv, paired)
+                }
+            })
+            .collect();
+        Genome { genes }
+    }
+
+    /// Uniform per-gene crossover.
+    pub fn crossover(a: &Genome, b: &Genome, rng: &mut Rng) -> Genome {
+        let genes = a
+            .genes
+            .iter()
+            .zip(&b.genes)
+            .map(|(&ga, &gb)| if rng.below(2) == 0 { ga } else { gb })
+            .collect();
+        Genome { genes }
+    }
+
+    /// Mutate 1–2 genes. Mask edits move along the prefix ladder
+    /// (repair-to-prefix), so mutation can never produce a holey mask.
+    pub fn mutate(&self, rng: &mut Rng) -> Genome {
+        let mut genes = self.genes.clone();
+        let edits = 1 + rng.below(2);
+        for _ in 0..edits {
+            let layer = rng.below(genes.len() as u64) as usize;
+            let g = genes[layer].normalized();
+            let exact = g.shape == Shape::Exact;
+            genes[layer] = match rng.below(6) {
+                // aggressify: drop one more position (an exact layer
+                // enters the space at rows/m=1)
+                0 => {
+                    if exact {
+                        Gene::approx(Shape::Rows, 1, Polarity::Neg, true, false)
+                    } else {
+                        Gene { mask: prefix_mask(g.m() + 1), ..g }
+                    }
+                }
+                // soften: drop one fewer (m=1 collapses to exact)
+                1 => {
+                    if exact {
+                        g
+                    } else {
+                        Gene { mask: prefix_mask(g.m() - 1), ..g }
+                    }
+                }
+                // re-shape: same mask, different drop dimension
+                2 => {
+                    let shape = Shape::APPROX[rng.below(3) as usize];
+                    if exact {
+                        Gene::approx(shape, 1 + rng.below(3) as u32, Polarity::Neg, true, false)
+                    } else {
+                        Gene { shape, ..g }
+                    }
+                }
+                // toggle mirrored pairing
+                3 => {
+                    if exact {
+                        Gene::approx(Shape::Rows, 1, Polarity::Neg, true, true)
+                    } else {
+                        Gene { paired: !g.paired, ..g }
+                    }
+                }
+                // flip polarity (a pair already carries both: flip CV)
+                4 => {
+                    if exact {
+                        g
+                    } else if g.paired {
+                        Gene { use_cv: !g.use_cv, ..g }
+                    } else {
+                        let polarity = match g.polarity {
+                            Polarity::Neg => Polarity::Pos,
+                            Polarity::Pos => Polarity::Neg,
+                        };
+                        Gene { polarity, ..g }
+                    }
+                }
+                // toggle the CV epilogue
+                _ => {
+                    if exact {
+                        g
+                    } else {
+                        Gene { use_cv: !g.use_cv, ..g }
+                    }
+                }
+            }
+            .normalized();
+        }
+        Genome { genes }
+    }
+
+    // ---- serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().field(
+            "genes",
+            Json::Arr(self.genes.iter().map(|g| g.to_json()).collect()),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Genome> {
+        use anyhow::Context;
+        let genes = j
+            .get("genes")
+            .and_then(|g| g.as_arr())
+            .context("genome JSON missing \"genes\" array")?;
+        let genes = genes
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Gene::from_json(e, i))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let genome = Genome { genes };
+        genome.validate()?;
+        Ok(genome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_masks_are_contiguous() {
+        for m in 0..=MAX_M {
+            assert_eq!(prefix_mask(m).count_ones(), m);
+            assert_eq!(prefix_mask(m).leading_zeros() + m, 8);
+        }
+        assert_eq!(prefix_mask(99), prefix_mask(MAX_M));
+    }
+
+    #[test]
+    fn holey_mask_is_a_typed_error() {
+        let mut g = Gene::approx(Shape::Rows, 3, Polarity::Neg, true, false);
+        g.mask = 0b101; // same popcount, but holey
+        let err = g.validate(2).unwrap_err();
+        match err {
+            GenomeError::Mask { layer: 2, mask: 0b101, .. } => {}
+            other => panic!("wrong error {other:?}"),
+        }
+        assert!(format!("{err}").contains("holey"), "{err}");
+        // too-wide masks are typed too
+        g.mask = 0xff;
+        assert!(matches!(g.validate(0), Err(GenomeError::Mask { .. })));
+        // the genome-level walk reports the offending layer
+        let mut genome = Genome::exact(3);
+        genome.genes[1] = Gene { mask: 0b1010, ..Gene::approx(Shape::Cols, 1, Polarity::Neg, false, false) };
+        assert!(matches!(
+            genome.validate(),
+            Err(GenomeError::Mask { layer: 1, .. })
+        ));
+        assert!(matches!(Genome { genes: vec![] }.validate(), Err(GenomeError::Empty)));
+    }
+
+    #[test]
+    fn normalization_collapses_exact_and_canonicalizes_pairs() {
+        let z = Gene { shape: Shape::Rows, mask: 0, polarity: Polarity::Pos, use_cv: true, paired: true };
+        assert_eq!(z.normalized(), Gene::exact());
+        let p = Gene { shape: Shape::Cols, mask: 0b11, polarity: Polarity::Pos, use_cv: true, paired: true };
+        assert_eq!(p.normalized().polarity, Polarity::Neg);
+        assert!(p.normalized().paired);
+    }
+
+    #[test]
+    fn assignment_roundtrip_covers_the_space() {
+        for shape in Shape::APPROX {
+            for m in 1..=MAX_M {
+                for &paired in &[false, true] {
+                    for &pol in &[Polarity::Neg, Polarity::Pos] {
+                        let g = Gene::approx(shape, m, pol, true, paired);
+                        let back = Gene::from_assignment(g.to_assignment()).unwrap();
+                        assert_eq!(back, g, "{shape:?} m={m} paired={paired}");
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            Gene::from_assignment(Gene::exact().to_assignment()).unwrap(),
+            Gene::exact()
+        );
+        // A non-mirrored pairing is inexpressible — and says so.
+        let odd = PairedPoint::new(
+            LayerPoint::new_pol(Family::Perforated, 2, Polarity::Neg, true),
+            LayerPoint::new_pol(Family::Truncated, 2, Polarity::Pos, true),
+        );
+        assert_eq!(Gene::from_assignment(LayerAssignment::Paired(odd)), None);
+    }
+
+    #[test]
+    fn structural_check_accepts_every_prefix_gene() {
+        for shape in Shape::APPROX {
+            for m in 1..=MAX_M {
+                let genome = Genome::uniform(
+                    Gene::approx(shape, m, Polarity::Neg, true, m % 2 == 0),
+                    2,
+                );
+                genome.structural_check().unwrap_or_else(|e| {
+                    panic!("{shape:?} m={m}: {e}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_normal_form_insensitive() {
+        let a = Genome::uniform(Gene::approx(Shape::Rows, 2, Polarity::Neg, true, false), 3);
+        assert_eq!(a.hash(), a.clone().hash());
+        // a denormalized zero-mask gene hashes like the exact gene
+        let mut b = a.clone();
+        b.genes[0] = Gene { shape: Shape::Cols, mask: 0, polarity: Polarity::Pos, use_cv: true, paired: true };
+        let mut c = a.clone();
+        c.genes[0] = Gene::exact();
+        assert_eq!(b.hash(), c.hash());
+        assert_ne!(a.hash(), c.hash());
+        // length participates (padding is not free)
+        assert_ne!(Genome::exact(2).hash(), Genome::exact(3).hash());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut genome = Genome::exact(3);
+        genome.genes[0] = Gene::approx(Shape::Rows, 3, Polarity::Neg, true, false);
+        genome.genes[2] = Gene::approx(Shape::SubArray, 2, Polarity::Pos, true, false);
+        genome.genes[1] = Gene::approx(Shape::Cols, 1, Polarity::Neg, true, true);
+        let back = Genome::from_json(&Json::parse(&genome.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, genome);
+        assert_eq!(back.hash(), genome.hash());
+        // holey masks in an artifact are rejected on load (typed, not a panic)
+        let bad = r#"{"genes": [{"shape": "rows", "mask": 5}]}"#;
+        let err = Genome::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("holey"), "{err:#}");
+    }
+
+    #[test]
+    fn variation_operators_stay_structurally_valid() {
+        let mut rng = Rng::new(7);
+        let mut g = Genome::random(&mut rng, 4);
+        g.validate().unwrap();
+        for _ in 0..200 {
+            let h = Genome::random(&mut rng, 4);
+            let x = Genome::crossover(&g, &h, &mut rng);
+            g = x.mutate(&mut rng);
+            g.validate().unwrap();
+            g.structural_check().unwrap();
+        }
+    }
+
+    #[test]
+    fn policy_roundtrip_through_genome() {
+        let mut genome = Genome::exact(2);
+        genome.genes[0] = Gene::approx(Shape::Rows, 3, Polarity::Neg, true, false);
+        genome.genes[1] = Gene::approx(Shape::Rows, 1, Polarity::Neg, true, true);
+        let policy = genome.to_policy().unwrap();
+        assert_eq!(policy.approx_layers(), 2);
+        assert_eq!(policy.paired_layers(), 1);
+        assert_eq!(Genome::from_policy(&policy).unwrap(), genome);
+    }
+}

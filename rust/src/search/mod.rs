@@ -1,0 +1,498 @@
+//! Automated multiplier/assignment co-design search (ROADMAP item 4).
+//!
+//! A seeded, deterministic NSGA-II-style Pareto search over per-column
+//! partial-product drop masks **jointly** with per-layer assignment. The
+//! genome ([`genome::Genome`]) encodes, per MAC layer, which structural
+//! family the drop mask carves out of the 8×8 Dadda array (row
+//! perforation, column truncation, recursive sub-array), how many
+//! positions it drops, the error polarity, whether the layer runs a
+//! mirrored Neg/Pos pairing, and whether the CV epilogue is on. Candidates
+//! are validated against the `bitmodel`/`dadda` structural models before
+//! they are ever executed, scored on (estimated accuracy loss, MAC-
+//! weighted normalized power) via the standard CV-epilogue evaluation
+//! path, and gated on i32 K-headroom feasibility ([`evaluate`]).
+//!
+//! The whole run is reproducible from one seed: every random draw comes
+//! from a single [`Rng`] stream on the main thread, fitness evaluation
+//! parallelizes over [`crate::util::threadpool`] with order-preserving
+//! results and per-candidate memoization keyed by the FNV-1a genome hash,
+//! and every sort breaks ties on candidate index or genome hash. The same
+//! seed therefore produces a byte-identical `SEARCH_pareto.json` at any
+//! worker count (pinned by the integration suite). No `Instant`/
+//! `SystemTime` anywhere in this subsystem — srclint R4 applies to all
+//! four files.
+//!
+//! The search feeds the QoS ladder: [`to_rungs`] turns the front into
+//! named `search-{i}` rungs and
+//! `report::layerwise::qos_ladder_with_search` merges the ones no greedy
+//! rung dominates into the governor's ladder via the order-independent
+//! [`crate::qos::Ladder::sorted`] constructor.
+
+pub mod evaluate;
+pub mod genome;
+pub mod nsga;
+
+pub use evaluate::{check_feasible, EvalError, Evaluator, Objectives};
+pub use genome::{Gene, Genome, GenomeError, Shape};
+pub use nsga::{dominates, fast_nondominated_sort, hypervolume, survivors};
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::datasets::Dataset;
+use crate::nn::policy::MAX_M;
+use crate::nn::Engine;
+use crate::qos::Rung;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool::configured_workers;
+
+use crate::approx::Polarity;
+
+/// Tunables of one search run. CLI flags override the `CVAPPROX_SEARCH_*`
+/// environment knobs, which override the defaults.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Number of generations after the seeded generation 0.
+    pub generations: usize,
+    /// Population size (survivor count per generation).
+    pub pop: usize,
+    /// The single seed every random draw derives from.
+    pub seed: u64,
+    /// Images of the evaluation set scored per candidate.
+    pub n_images: usize,
+    /// Systolic array width for the MAC-weighted power model.
+    pub n_array: u32,
+    /// Worker threads for fitness evaluation (objective values are
+    /// identical at every setting; only wall-clock changes).
+    pub workers: usize,
+    /// Extra caller-provided seed genomes (e.g. the greedy ladder's
+    /// policies re-encoded via [`Genome::from_policy`]).
+    pub seeds: Vec<Genome>,
+}
+
+impl SearchConfig {
+    /// Defaults only — no environment reads.
+    pub fn new(n_images: usize) -> SearchConfig {
+        SearchConfig {
+            generations: 12,
+            pop: 24,
+            seed: 2024,
+            n_images,
+            n_array: 64,
+            workers: configured_workers(),
+            seeds: Vec::new(),
+        }
+    }
+
+    /// Defaults overridden by the `CVAPPROX_SEARCH_GENERATIONS`,
+    /// `CVAPPROX_SEARCH_POP` and `CVAPPROX_SEARCH_SEED` knobs (all
+    /// registered in the README env registry).
+    pub fn from_env(n_images: usize) -> SearchConfig {
+        let mut cfg = SearchConfig::new(n_images);
+        if let Some(g) = env_u64("CVAPPROX_SEARCH_GENERATIONS") {
+            cfg.generations = g as usize;
+        }
+        if let Some(p) = env_u64("CVAPPROX_SEARCH_POP") {
+            cfg.pop = (p as usize).max(2);
+        }
+        if let Some(s) = env_u64("CVAPPROX_SEARCH_SEED") {
+            cfg.seed = s;
+        }
+        cfg
+    }
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+}
+
+/// One member of the final Pareto front.
+#[derive(Clone, Debug)]
+pub struct FrontMember {
+    pub genome: Genome,
+    pub est_loss: f64,
+    pub power_norm: f64,
+    /// FNV-1a genome hash — the memo key and the artifact provenance id.
+    pub hash: u64,
+}
+
+/// A completed search run: the front plus its provenance.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    /// Pareto front, sorted by power descending (est_loss, then hash, as
+    /// tie-breaks) — ladder insertion order.
+    pub front: Vec<FrontMember>,
+    pub seed: u64,
+    pub generations: usize,
+    pub pop: usize,
+    pub n_images: usize,
+    pub n_array: u32,
+    /// Distinct genomes actually evaluated (memo misses).
+    pub evals: u64,
+    /// Evaluations answered from the genome-hash memo.
+    pub memo_hits: u64,
+    pub exact_acc: f64,
+}
+
+impl SearchResult {
+    /// The `SEARCH_pareto.json` document: provenance block + full front
+    /// (hashes as hex strings — u64 does not survive a f64 JSON number).
+    pub fn to_json(&self) -> Json {
+        let provenance = Json::obj()
+            .field("seed", format!("{}", self.seed))
+            .field("generations", self.generations)
+            .field("pop", self.pop)
+            .field("n_images", self.n_images)
+            .field("n_array", self.n_array)
+            .field("evals", self.evals as i64)
+            .field("memo_hits", self.memo_hits as i64)
+            .field("exact_acc", self.exact_acc);
+        let front = self
+            .front
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                Json::obj()
+                    .field("name", format!("search-{i}"))
+                    .field("hash", format!("{:016x}", m.hash))
+                    .field("est_loss", m.est_loss)
+                    .field("power_norm", m.power_norm)
+                    .field("describe", m.genome.describe())
+                    .field("genome", m.genome.to_json())
+            })
+            .collect();
+        Json::obj().field("provenance", provenance).field("front", Json::Arr(front))
+    }
+}
+
+/// Parse the front out of a `SEARCH_pareto.json` document, re-validating
+/// every genome against the structural bitmodel and its recorded hash.
+/// A tampered or hand-edited artifact fails here with a typed/contextual
+/// error — it can never reach the ladder or the engine.
+pub fn parse_front(j: &Json) -> Result<Vec<FrontMember>> {
+    let arr = j
+        .get("front")
+        .and_then(|f| f.as_arr())
+        .context("search artifact missing \"front\" array")?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, e)| -> Result<FrontMember> {
+            let genome = e
+                .get("genome")
+                .with_context(|| format!("front member {i} missing \"genome\""))
+                .and_then(Genome::from_json)
+                .with_context(|| format!("front member {i}"))?;
+            genome
+                .structural_check()
+                .map_err(anyhow::Error::from)
+                .with_context(|| format!("front member {i} failed structural re-validation"))?;
+            let est_loss = e
+                .get("est_loss")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("front member {i} missing \"est_loss\""))?;
+            let power_norm = e
+                .get("power_norm")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("front member {i} missing \"power_norm\""))?;
+            let hash = genome.hash();
+            if let Some(recorded) = e.get("hash").and_then(|h| h.as_str()) {
+                let recorded = u64::from_str_radix(recorded, 16)
+                    .with_context(|| format!("front member {i}: bad hash {recorded:?}"))?;
+                if recorded != hash {
+                    anyhow::bail!(
+                        "front member {i}: recorded hash {recorded:016x} does not match \
+                         its genome ({hash:016x})"
+                    );
+                }
+            }
+            Ok(FrontMember { genome, est_loss, power_norm, hash })
+        })
+        .collect()
+}
+
+/// Turn a front into named QoS rungs, power-descending (`search-0` is the
+/// most power-hungry / most accurate searched point). Decoding re-runs
+/// policy validation, so a front that validates here always installs.
+pub fn to_rungs(front: &[FrontMember]) -> Result<Vec<Rung>> {
+    let mut sorted: Vec<&FrontMember> = front.iter().collect();
+    sorted.sort_by(|a, b| order_front(a, b));
+    sorted
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let policy = m
+                .genome
+                .to_policy()
+                .with_context(|| format!("searched rung {i} ({:016x})", m.hash))?;
+            Ok(Rung {
+                name: format!("search-{i}"),
+                est_loss: m.est_loss,
+                power_norm: m.power_norm,
+                policy: Arc::new(policy),
+            })
+        })
+        .collect()
+}
+
+fn order_front(a: &FrontMember, b: &FrontMember) -> std::cmp::Ordering {
+    b.power_norm
+        .partial_cmp(&a.power_norm)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then_with(|| {
+            a.est_loss.partial_cmp(&b.est_loss).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .then_with(|| a.hash.cmp(&b.hash))
+}
+
+/// The directed half of generation 0: the exact genome, every
+/// family × m uniform (as a Neg point with CV and as a mirrored pairing —
+/// the paper's grid plus its pairing extension), and every single-layer
+/// perforated variant (point and pair, the rest exact) — the same axes
+/// the greedy searches walk, so the evolution starts at least as informed
+/// as the baseline it must dominate.
+pub fn directed_seeds(n_layers: usize) -> Vec<Genome> {
+    let mut seeds = vec![Genome::exact(n_layers)];
+    for shape in Shape::APPROX {
+        for m in 1..=MAX_M {
+            let point = Gene::approx(shape, m, Polarity::Neg, true, false);
+            let pair = Gene::approx(shape, m, Polarity::Neg, true, true);
+            seeds.push(Genome::uniform(point, n_layers));
+            seeds.push(Genome::uniform(pair, n_layers));
+        }
+    }
+    for layer in 0..n_layers {
+        for m in 1..=MAX_M {
+            for paired in [false, true] {
+                let mut g = Genome::exact(n_layers);
+                g.genes[layer] = Gene::approx(Shape::Rows, m, Polarity::Neg, true, paired);
+                seeds.push(g);
+            }
+        }
+    }
+    seeds
+}
+
+fn push_unique(pop: &mut Vec<Genome>, seen: &mut HashSet<u64>, g: Genome, n_layers: usize) {
+    let g = g.normalized();
+    if g.len() == n_layers && seen.insert(g.hash()) {
+        pop.push(g);
+    }
+}
+
+/// Run the co-design search against an already-constructed evaluator.
+/// Split out so benches/tests can inject [`Evaluator::with_exact_acc`].
+pub fn run_search_with(ev: &Evaluator<'_>, cfg: &SearchConfig) -> Result<SearchResult> {
+    let n_layers = ev.n_layers();
+    let mut rng = Rng::new(cfg.seed);
+
+    // Generation 0: directed seeds + caller seeds + random fill, deduped
+    // by genome hash in insertion order.
+    let mut pop: Vec<Genome> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    for g in directed_seeds(n_layers) {
+        push_unique(&mut pop, &mut seen, g, n_layers);
+    }
+    for g in &cfg.seeds {
+        push_unique(&mut pop, &mut seen, g.clone(), n_layers);
+    }
+    for _ in 0..cfg.pop * 10 {
+        if pop.len() >= cfg.pop {
+            break;
+        }
+        push_unique(&mut pop, &mut seen, Genome::random(&mut rng, n_layers), n_layers);
+    }
+
+    // The archive accumulates every *feasible* evaluation ever made, in
+    // deterministic submission order; the final front is computed over it
+    // so no nondominated point can be lost to generational truncation.
+    let mut archive: Vec<(Genome, Objectives)> = Vec::new();
+    let mut archived: HashSet<u64> = HashSet::new();
+
+    let mut objs = eval_into_archive(ev, cfg, &pop, &mut archive, &mut archived);
+    for _generation in 0..cfg.generations {
+        let (rank, crowd) = nsga::rank_and_crowding(&objs);
+        let mut combined = pop.clone();
+        let mut combined_seen: HashSet<u64> =
+            combined.iter().map(|g| g.hash()).collect();
+        let mut attempts = 0usize;
+        while combined.len() < pop.len() + cfg.pop && attempts < cfg.pop * 20 {
+            attempts += 1;
+            let a = nsga::tournament(&mut rng, &rank, &crowd);
+            let b = nsga::tournament(&mut rng, &rank, &crowd);
+            let child =
+                Genome::crossover(&pop[a], &pop[b], &mut rng).mutate(&mut rng).normalized();
+            if combined_seen.insert(child.hash()) {
+                combined.push(child);
+            }
+        }
+        let cobjs = eval_into_archive(ev, cfg, &combined, &mut archive, &mut archived);
+        let keep = nsga::survivors(&cobjs, cfg.pop);
+        pop = keep.iter().map(|&i| combined[i].clone()).collect();
+        objs = keep.iter().map(|&i| cobjs[i]).collect();
+    }
+
+    // Final front: front 0 of the whole archive, power-descending, exact
+    // objective ties collapsed to the lowest-hash representative.
+    let aobjs: Vec<Option<Objectives>> = archive.iter().map(|&(_, o)| Some(o)).collect();
+    let fronts = nsga::fast_nondominated_sort(&aobjs);
+    let mut front: Vec<FrontMember> = fronts
+        .first()
+        .map(|f| {
+            f.iter()
+                .map(|&i| FrontMember {
+                    genome: archive[i].0.clone(),
+                    est_loss: archive[i].1.est_loss,
+                    power_norm: archive[i].1.power_norm,
+                    hash: archive[i].0.hash(),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    front.sort_by(|a, b| order_front(a, b));
+    front.dedup_by(|a, b| a.est_loss == b.est_loss && a.power_norm == b.power_norm);
+
+    let (memo_hits, evals) = ev.memo_stats();
+    Ok(SearchResult {
+        front,
+        seed: cfg.seed,
+        generations: cfg.generations,
+        pop: cfg.pop,
+        n_images: cfg.n_images,
+        n_array: cfg.n_array,
+        evals,
+        memo_hits,
+        exact_acc: ev.exact_acc(),
+    })
+}
+
+/// Run the co-design search for one (engine, dataset) pair.
+pub fn run_search(engine: &Engine, ds: &Dataset, cfg: &SearchConfig) -> Result<SearchResult> {
+    let ev = Evaluator::new(engine, ds, cfg.n_images, cfg.n_array)?;
+    run_search_with(&ev, cfg)
+}
+
+fn eval_into_archive(
+    ev: &Evaluator<'_>,
+    cfg: &SearchConfig,
+    genomes: &[Genome],
+    archive: &mut Vec<(Genome, Objectives)>,
+    archived: &mut HashSet<u64>,
+) -> Vec<Option<Objectives>> {
+    let results = ev.evaluate_all(genomes, cfg.workers);
+    let objs: Vec<Option<Objectives>> =
+        results.iter().map(|r| r.as_ref().ok().copied()).collect();
+    for (g, o) in genomes.iter().zip(&objs) {
+        if let Some(o) = o {
+            if archived.insert(g.hash()) {
+                archive.push((g.clone(), *o));
+            }
+        }
+    }
+    objs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_seeds_are_structurally_valid_and_deduped() {
+        let seeds = directed_seeds(3);
+        assert!(seeds.contains(&Genome::exact(3)));
+        let mut hashes = HashSet::new();
+        for g in &seeds {
+            assert_eq!(g.len(), 3);
+            g.validate().unwrap();
+            g.structural_check().unwrap();
+            assert!(hashes.insert(g.hash()), "duplicate seed {}", g.describe());
+        }
+        // the paper grid (3 shapes × MAX_M levels × point/pair) + exact +
+        // per-layer singles (layers × MAX_M × point/pair)
+        let expected = 1 + 3 * MAX_M as usize * 2 + 3 * MAX_M as usize * 2;
+        assert_eq!(seeds.len(), expected);
+    }
+
+    #[test]
+    fn config_env_knobs_override_defaults() {
+        let base = SearchConfig::new(64);
+        assert_eq!((base.generations, base.pop, base.seed), (12, 24, 2024));
+        std::env::set_var("CVAPPROX_SEARCH_GENERATIONS", "3");
+        std::env::set_var("CVAPPROX_SEARCH_POP", "9");
+        std::env::set_var("CVAPPROX_SEARCH_SEED", "77");
+        let cfg = SearchConfig::from_env(32);
+        std::env::remove_var("CVAPPROX_SEARCH_GENERATIONS");
+        std::env::remove_var("CVAPPROX_SEARCH_POP");
+        std::env::remove_var("CVAPPROX_SEARCH_SEED");
+        assert_eq!((cfg.generations, cfg.pop, cfg.seed, cfg.n_images), (3, 9, 77, 32));
+    }
+
+    #[test]
+    fn to_rungs_sorts_power_descending_and_names_in_order() {
+        let lo = Genome::uniform(
+            Gene::approx(Shape::Rows, 4, Polarity::Neg, true, true),
+            2,
+        );
+        let hi = Genome::exact(2);
+        let front = vec![
+            FrontMember {
+                genome: lo.clone(),
+                est_loss: 0.05,
+                power_norm: 0.6,
+                hash: lo.hash(),
+            },
+            FrontMember {
+                genome: hi.clone(),
+                est_loss: 0.0,
+                power_norm: 1.0,
+                hash: hi.hash(),
+            },
+        ];
+        let rungs = to_rungs(&front).unwrap();
+        assert_eq!(rungs.len(), 2);
+        assert_eq!(rungs[0].name, "search-0");
+        assert_eq!(rungs[0].power_norm, 1.0);
+        assert_eq!(rungs[1].name, "search-1");
+        assert_eq!(rungs[1].power_norm, 0.6);
+        assert_eq!(rungs[1].policy.paired_layers(), 2);
+    }
+
+    #[test]
+    fn artifact_roundtrip_revalidates_genomes_and_hashes() {
+        let g = Genome::uniform(
+            Gene::approx(Shape::Cols, 3, Polarity::Neg, true, false),
+            2,
+        );
+        let result = SearchResult {
+            front: vec![FrontMember {
+                genome: g.clone(),
+                est_loss: 0.015625,
+                power_norm: 0.75,
+                hash: g.hash(),
+            }],
+            seed: 2024,
+            generations: 12,
+            pop: 24,
+            n_images: 64,
+            n_array: 64,
+            evals: 10,
+            memo_hits: 3,
+            exact_acc: 1.0,
+        };
+        let text = result.to_json().render();
+        let back = parse_front(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].hash, g.hash());
+        assert_eq!(back[0].est_loss, 0.015625);
+        assert_eq!(back[0].genome, g);
+        // a tampered hash is rejected
+        let tampered = text.replace(&format!("{:016x}", g.hash()), "00000000deadbeef");
+        assert!(parse_front(&Json::parse(&tampered).unwrap()).is_err());
+        // a holey mask in the artifact is a typed load error, not a panic
+        let holey = text.replace("\"mask\": 7", "\"mask\": 5");
+        let err = parse_front(&Json::parse(&holey).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("holey"), "{err:#}");
+    }
+}

@@ -1,0 +1,287 @@
+//! Deterministic NSGA-II machinery: fast non-dominated sort, crowding
+//! distance, survivor selection and binary tournaments over the
+//! two-objective (est. accuracy loss, normalized power) plane.
+//!
+//! Everything here is pure integer/float bookkeeping with explicit index
+//! tie-breaks, so the same inputs produce the same fronts on every
+//! platform and at every thread count — the property the byte-identical
+//! `SEARCH_pareto.json` tests pin. Infeasible candidates (`None`
+//! objectives: K-headroom or validation failures) are not discarded but
+//! ranked together *behind* every feasible front, the standard
+//! constraint-domination treatment.
+//!
+//! `scripts/search_mirror.py` transliterates this module and cross-checks
+//! it against the fixture front in `rust/tests/fixtures/search_front.json`
+//! — keep the two in lockstep.
+
+use super::evaluate::Objectives;
+use crate::util::rng::Rng;
+
+/// Strict Pareto dominance on (est_loss, power_norm), both minimized:
+/// `a` is no worse on both axes and strictly better on at least one.
+pub fn dominates(a: Objectives, b: Objectives) -> bool {
+    a.est_loss <= b.est_loss
+        && a.power_norm <= b.power_norm
+        && (a.est_loss < b.est_loss || a.power_norm < b.power_norm)
+}
+
+/// Fast non-dominated sort. Returns fronts of candidate indices, each
+/// front in ascending index order; front 0 is the Pareto front of the
+/// feasible candidates. All infeasible candidates form one final front.
+pub fn fast_nondominated_sort(objs: &[Option<Objectives>]) -> Vec<Vec<usize>> {
+    let feasible: Vec<usize> = (0..objs.len()).filter(|&i| objs[i].is_some()).collect();
+    let infeasible: Vec<usize> = (0..objs.len()).filter(|&i| objs[i].is_none()).collect();
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    if !feasible.is_empty() {
+        let mut dominated_by = vec![0usize; objs.len()];
+        let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); objs.len()];
+        for (ai, &a) in feasible.iter().enumerate() {
+            for &b in &feasible[ai + 1..] {
+                let (oa, ob) = (objs[a].unwrap(), objs[b].unwrap());
+                if dominates(oa, ob) {
+                    dominates_list[a].push(b);
+                    dominated_by[b] += 1;
+                } else if dominates(ob, oa) {
+                    dominates_list[b].push(a);
+                    dominated_by[a] += 1;
+                }
+            }
+        }
+        let mut current: Vec<usize> =
+            feasible.iter().copied().filter(|&i| dominated_by[i] == 0).collect();
+        while !current.is_empty() {
+            let mut next: Vec<usize> = Vec::new();
+            for &i in &current {
+                for &j in &dominates_list[i] {
+                    dominated_by[j] -= 1;
+                    if dominated_by[j] == 0 {
+                        next.push(j);
+                    }
+                }
+            }
+            next.sort_unstable();
+            fronts.push(std::mem::replace(&mut current, next));
+        }
+    }
+    if !infeasible.is_empty() {
+        fronts.push(infeasible);
+    }
+    fronts
+}
+
+/// Crowding distance of one front, aligned with `front`'s positions.
+/// Boundary members get `f64::INFINITY`; interior members accumulate the
+/// normalized neighbour gap per objective. Objective sorts tie-break on
+/// candidate index, so equal-objective members get deterministic
+/// distances. An all-infeasible front has no objectives to spread over —
+/// every member gets `INFINITY` (truncation then falls back to index
+/// order).
+pub fn crowding_distance(objs: &[Option<Objectives>], front: &[usize]) -> Vec<f64> {
+    let mut d = vec![0.0f64; front.len()];
+    if front.is_empty() {
+        return d;
+    }
+    if objs[front[0]].is_none() {
+        return vec![f64::INFINITY; front.len()];
+    }
+    for axis in 0..2 {
+        let value = |pos: usize| -> f64 {
+            let o = objs[front[pos]].unwrap();
+            if axis == 0 {
+                o.est_loss
+            } else {
+                o.power_norm
+            }
+        };
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            value(a)
+                .partial_cmp(&value(b))
+                .unwrap()
+                .then_with(|| front[a].cmp(&front[b]))
+        });
+        let (first, last) = (order[0], order[order.len() - 1]);
+        d[first] = f64::INFINITY;
+        d[last] = f64::INFINITY;
+        let range = value(last) - value(first);
+        if range > 0.0 {
+            for w in order.windows(3) {
+                let (prev, mid, next) = (w[0], w[1], w[2]);
+                d[mid] += (value(next) - value(prev)) / range;
+            }
+        }
+    }
+    d
+}
+
+/// Per-candidate (rank, crowding) over the whole population: rank is the
+/// front number; crowding is within that front.
+pub fn rank_and_crowding(objs: &[Option<Objectives>]) -> (Vec<usize>, Vec<f64>) {
+    let fronts = fast_nondominated_sort(objs);
+    let mut rank = vec![usize::MAX; objs.len()];
+    let mut crowd = vec![0.0f64; objs.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(objs, front);
+        for (pos, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[pos];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Elitist survivor selection: take whole fronts (in index order) while
+/// they fit, then fill the remainder from the next front by crowding
+/// distance descending, ties broken by ascending index.
+pub fn survivors(objs: &[Option<Objectives>], n: usize) -> Vec<usize> {
+    let mut keep: Vec<usize> = Vec::with_capacity(n);
+    for front in fast_nondominated_sort(objs) {
+        if keep.len() >= n {
+            break;
+        }
+        let room = n - keep.len();
+        if front.len() <= room {
+            keep.extend(front);
+            continue;
+        }
+        let d = crowding_distance(objs, &front);
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            d[b].partial_cmp(&d[a]).unwrap().then_with(|| front[a].cmp(&front[b]))
+        });
+        keep.extend(order[..room].iter().map(|&pos| front[pos]));
+    }
+    keep
+}
+
+/// Binary tournament on (rank asc, crowding desc, index asc).
+pub fn tournament(rng: &mut Rng, rank: &[usize], crowd: &[f64]) -> usize {
+    let a = rng.below(rank.len() as u64) as usize;
+    let b = rng.below(rank.len() as u64) as usize;
+    if rank[a] != rank[b] {
+        return if rank[a] < rank[b] { a } else { b };
+    }
+    if crowd[a] != crowd[b] {
+        return if crowd[a] > crowd[b] { a } else { b };
+    }
+    a.min(b)
+}
+
+/// 2-D hypervolume of a candidate set against a reference point that both
+/// objectives stay below: the area the set's Pareto front carves out of
+/// the rectangle toward `(ref_loss, ref_power)`. Members outside the
+/// reference box contribute nothing.
+pub fn hypervolume(points: &[Objectives], ref_loss: f64, ref_power: f64) -> f64 {
+    let mut pts: Vec<Objectives> = points
+        .iter()
+        .copied()
+        .filter(|p| p.est_loss < ref_loss && p.power_norm < ref_power)
+        .collect();
+    pts.sort_by(|a, b| {
+        a.est_loss
+            .partial_cmp(&b.est_loss)
+            .unwrap()
+            .then_with(|| a.power_norm.partial_cmp(&b.power_norm).unwrap())
+    });
+    let mut hv = 0.0;
+    let mut best_power = ref_power;
+    for p in pts {
+        if p.power_norm < best_power {
+            hv += (ref_loss - p.est_loss) * (best_power - p.power_norm);
+            best_power = p.power_norm;
+        }
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(loss: f64, power: f64) -> Option<Objectives> {
+        Some(Objectives { est_loss: loss, power_norm: power })
+    }
+
+    #[test]
+    fn dominance_is_strict_and_partial() {
+        let a = Objectives { est_loss: 0.0, power_norm: 0.5 };
+        let b = Objectives { est_loss: 0.25, power_norm: 0.5 };
+        let c = Objectives { est_loss: 0.5, power_norm: 0.25 };
+        assert!(dominates(a, b));
+        assert!(!dominates(b, a));
+        assert!(!dominates(a, a), "equal points do not dominate each other");
+        assert!(!dominates(b, c) && !dominates(c, b), "incomparable pair");
+    }
+
+    #[test]
+    fn sort_ranks_infeasible_last() {
+        let objs = vec![o(0.0, 1.0), None, o(0.5, 0.5), o(0.5, 0.75), None];
+        let fronts = fast_nondominated_sort(&objs);
+        assert_eq!(fronts, vec![vec![0, 2], vec![3], vec![1, 4]]);
+        let (rank, _) = rank_and_crowding(&objs);
+        assert_eq!(rank, vec![0, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn crowding_boundaries_are_infinite_and_interior_exact() {
+        // Objectives on exact binary fractions so the expected distances
+        // are exact — the same numbers the python mirror checks.
+        let objs = vec![o(0.0, 1.125), o(0.125, 0.75), o(0.25, 0.5), o(0.5, 0.25), o(1.0, 0.125)];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&objs, &front);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[4], f64::INFINITY);
+        assert_eq!(d[1], 0.875);
+        assert_eq!(d[2], 0.875);
+        assert_eq!(d[3], 1.125);
+    }
+
+    #[test]
+    fn survivor_truncation_prefers_spread_then_index() {
+        let objs = vec![o(0.0, 1.125), o(0.125, 0.75), o(0.25, 0.5), o(0.5, 0.25), o(1.0, 0.125)];
+        assert_eq!(survivors(&objs, 5), vec![0, 1, 2, 3, 4]);
+        // boundaries first (index tie-break 0 before 4), then d=1.125,
+        // then the 0.875 tie resolved by index.
+        assert_eq!(survivors(&objs, 4), vec![0, 4, 3, 1]);
+        assert_eq!(survivors(&objs, 2), vec![0, 4]);
+    }
+
+    #[test]
+    fn tournament_is_deterministic_per_seed() {
+        let objs = vec![o(0.0, 1.0), o(0.5, 0.5), o(0.75, 0.75), None];
+        let (rank, crowd) = rank_and_crowding(&objs);
+        let picks: Vec<usize> = {
+            let mut rng = Rng::new(11);
+            (0..20).map(|_| tournament(&mut rng, &rank, &crowd)).collect()
+        };
+        let again: Vec<usize> = {
+            let mut rng = Rng::new(11);
+            (0..20).map(|_| tournament(&mut rng, &rank, &crowd)).collect()
+        };
+        assert_eq!(picks, again);
+        // the infeasible candidate (worst rank) never beats a feasible one
+        // it is drawn against
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let w = tournament(&mut rng, &rank, &crowd);
+            assert!(w < 3 || rank[w] == rank.iter().copied().max().unwrap());
+        }
+    }
+
+    #[test]
+    fn hypervolume_rewards_wider_fronts() {
+        let narrow = [Objectives { est_loss: 0.0, power_norm: 0.5 }];
+        let wide = [
+            Objectives { est_loss: 0.0, power_norm: 0.5 },
+            Objectives { est_loss: 0.25, power_norm: 0.25 },
+        ];
+        let hn = hypervolume(&narrow, 1.0, 1.25);
+        let hw = hypervolume(&wide, 1.0, 1.25);
+        assert_eq!(hn, 0.75);
+        assert_eq!(hw, 0.75 + 0.75 * 0.25);
+        assert!(hw > hn);
+        // points outside the reference box contribute nothing
+        let dom = [Objectives { est_loss: 2.0, power_norm: 2.0 }];
+        assert_eq!(hypervolume(&dom, 1.0, 1.25), 0.0);
+    }
+}

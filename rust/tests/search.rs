@@ -1,0 +1,230 @@
+//! Integration suite for the co-design search subsystem (`search/`).
+//!
+//! Pins the ISSUE-level guarantees end to end on the hermetic
+//! mini-artifacts: the same seed produces a byte-identical
+//! `SEARCH_pareto.json` at any worker count; every front member's genome
+//! re-validates against the structural bitmodel and the model's K-depths;
+//! no front member is dominated by any other (exact re-check); an
+//! infeasible-K genome dies with a typed error at evaluation — provably
+//! before any GEMM, because the model it runs against carries a reduction
+//! depth its weight buffer cannot serve (a forward would panic); and the
+//! NSGA machinery agrees number-for-number with the checked-in fixture
+//! that `scripts/search_mirror.py` cross-checks from Python.
+
+use cvapprox::datasets::Dataset;
+use cvapprox::hermetic_dir;
+use cvapprox::nn::gemm::MAX_K_POS;
+use cvapprox::nn::{loader, Engine};
+use cvapprox::search::{
+    self, check_feasible, dominates, nsga, EvalError, Evaluator, Gene, Genome,
+    Objectives, SearchConfig, Shape,
+};
+use cvapprox::util::json::Json;
+
+fn hermetic_engine_and_ds() -> (Engine, Dataset) {
+    let root = hermetic_dir();
+    let model = loader::load_model(&root.join("models/hermnet_hsynth.cvm")).unwrap();
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).unwrap();
+    (Engine::new(model), ds)
+}
+
+fn small_cfg(n_images: usize, seed: u64, workers: usize) -> SearchConfig {
+    let mut cfg = SearchConfig::new(n_images);
+    cfg.generations = 2;
+    cfg.pop = 8;
+    cfg.seed = seed;
+    cfg.workers = workers;
+    cfg
+}
+
+/// Same seed ⇒ byte-identical SEARCH_pareto.json at 1, 2 and 4 workers.
+#[test]
+fn seeded_front_is_byte_identical_across_thread_counts() {
+    let (engine, ds) = hermetic_engine_and_ds();
+    let render = |workers: usize| {
+        let cfg = small_cfg(32, 42, workers);
+        search::run_search(&engine, &ds, &cfg).unwrap().to_json().render()
+    };
+    let one = render(1);
+    assert_eq!(one, render(2), "1 vs 2 workers");
+    assert_eq!(one, render(4), "1 vs 4 workers");
+    assert_eq!(one, render(1), "repeat run from the same seed");
+    // a different seed explores differently (provenance at minimum)
+    let other = {
+        let cfg = small_cfg(32, 43, 1);
+        search::run_search(&engine, &ds, &cfg).unwrap().to_json().render()
+    };
+    assert_ne!(one, other);
+}
+
+/// Every front member re-validates (mask + structural bitmodel + K-depth
+/// feasibility) and no member is dominated by any other.
+#[test]
+fn front_members_revalidate_and_are_mutually_nondominated() {
+    let (engine, ds) = hermetic_engine_and_ds();
+    let cfg = small_cfg(32, 7, 2);
+    let result = search::run_search(&engine, &ds, &cfg).unwrap();
+    assert!(!result.front.is_empty());
+    let kdims = engine.model.mac_layer_kdims();
+    for m in &result.front {
+        m.genome.validate().unwrap();
+        m.genome.structural_check().unwrap();
+        check_feasible(&m.genome, &kdims).unwrap();
+        assert_eq!(m.hash, m.genome.hash());
+        assert!(m.est_loss >= 0.0 && m.est_loss.is_finite());
+        assert!(m.power_norm > 0.0 && m.power_norm.is_finite());
+    }
+    for (i, a) in result.front.iter().enumerate() {
+        for (j, b) in result.front.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let (oa, ob) = (
+                Objectives { est_loss: a.est_loss, power_norm: a.power_norm },
+                Objectives { est_loss: b.est_loss, power_norm: b.power_norm },
+            );
+            assert!(
+                !dominates(oa, ob),
+                "front member {j} is dominated by {i}: {oa:?} < {ob:?}"
+            );
+        }
+    }
+    // power-descending artifact order
+    for w in result.front.windows(2) {
+        assert!(w[1].power_norm <= w[0].power_norm + 1e-12);
+    }
+    // the artifact parses back and survives its own integrity checks
+    let back =
+        search::parse_front(&Json::parse(&result.to_json().render()).unwrap()).unwrap();
+    assert_eq!(back.len(), result.front.len());
+}
+
+/// An infeasible-K genome is rejected with a typed error AT EVALUATION.
+/// The engine here carries a doctored reduction depth its weight buffer
+/// cannot serve, so any GEMM on that layer would panic on a slice
+/// overrun — the clean typed error therefore proves the K gate fires
+/// before any GEMM is reached.
+#[test]
+fn infeasible_k_genome_rejected_at_evaluation_not_mid_gemm() {
+    let root = hermetic_dir();
+    let mut model = loader::load_model(&root.join("models/hermnet_hsynth.cvm")).unwrap();
+    let ds = Dataset::load(&root.join("data/hsynth_test.cvd")).unwrap();
+    // Doctor one MAC layer's reduction depth past the Pos-polarity i32
+    // headroom ceiling without growing its weights.
+    let mac_node = model
+        .nodes
+        .iter()
+        .position(|n| n.weights.is_some())
+        .expect("hermetic model has MAC layers");
+    model.nodes[mac_node].weights.as_mut().unwrap().k_dim = MAX_K_POS + 1;
+    let n_layers = model.mac_layers();
+    let engine = Engine::new(model);
+    let ev = Evaluator::with_exact_acc(&engine, &ds, ds.n, 64, 1.0);
+    let mut genome = Genome::exact(n_layers);
+    genome.genes[0] = Gene::approx(
+        Shape::Cols,
+        2,
+        cvapprox::approx::Polarity::Pos,
+        true,
+        false,
+    );
+    match ev.evaluate_genome(&genome) {
+        Err(EvalError::InfeasibleK { layer, k, max_k }) => {
+            assert_eq!(layer, 0);
+            assert_eq!(k, MAX_K_POS + 1);
+            assert_eq!(max_k, MAX_K_POS);
+        }
+        other => panic!("expected typed InfeasibleK, got {other:?}"),
+    }
+    // a mirrored pairing inherits the Pos half's ceiling — same typed path
+    let mut paired = Genome::exact(n_layers);
+    paired.genes[0] =
+        Gene::approx(Shape::Rows, 1, cvapprox::approx::Polarity::Neg, true, true);
+    assert!(matches!(
+        ev.evaluate_genome(&paired),
+        Err(EvalError::InfeasibleK { layer: 0, .. })
+    ));
+    // and the search as a whole survives the poisoned space: infeasible
+    // candidates rank behind every feasible front instead of aborting.
+    let objs = vec![
+        Some(Objectives { est_loss: 0.0, power_norm: 1.0 }),
+        None,
+    ];
+    assert_eq!(nsga::fast_nondominated_sort(&objs), vec![vec![0], vec![1]]);
+}
+
+/// The NSGA machinery agrees number-for-number with the checked-in
+/// fixture — the same file `scripts/search_mirror.py` checks from Python.
+#[test]
+fn nsga_matches_checked_in_fixture() {
+    let text = std::fs::read_to_string(
+        hermetic_dir().parent().unwrap().join("fixtures/search_front.json"),
+    )
+    .unwrap();
+    let j = Json::parse(&text).unwrap();
+    let objs: Vec<Option<Objectives>> = j
+        .get("candidates")
+        .and_then(|c| c.as_arr())
+        .unwrap()
+        .iter()
+        .map(|e| match e {
+            Json::Null => None,
+            e => Some(Objectives {
+                est_loss: e.get("est_loss").and_then(|v| v.as_f64()).unwrap(),
+                power_norm: e.get("power_norm").and_then(|v| v.as_f64()).unwrap(),
+            }),
+        })
+        .collect();
+    let want_fronts: Vec<Vec<usize>> = j
+        .get("expected_fronts")
+        .and_then(|f| f.as_arr())
+        .unwrap()
+        .iter()
+        .map(|f| {
+            f.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as usize).collect()
+        })
+        .collect();
+    let fronts = nsga::fast_nondominated_sort(&objs);
+    assert_eq!(fronts, want_fronts);
+    let want_crowding: Vec<Vec<Option<f64>>> = j
+        .get("expected_crowding")
+        .and_then(|c| c.as_arr())
+        .unwrap()
+        .iter()
+        .map(|f| f.as_arr().unwrap().iter().map(|v| v.as_f64()).collect())
+        .collect();
+    for (front, want) in fronts.iter().zip(&want_crowding) {
+        let d = nsga::crowding_distance(&objs, front);
+        assert_eq!(d.len(), want.len());
+        for (got, want) in d.iter().zip(want) {
+            match want {
+                None => assert_eq!(*got, f64::INFINITY),
+                Some(w) => assert_eq!(got, w, "crowding must be bit-exact"),
+            }
+        }
+    }
+    let survivors_of = |n: usize, key: &str| {
+        let want: Vec<usize> = j
+            .get(key)
+            .and_then(|s| s.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as usize)
+            .collect();
+        assert_eq!(nsga::survivors(&objs, n), want, "{key}");
+    };
+    survivors_of(4, "expected_survivors_4");
+    survivors_of(7, "expected_survivors_7");
+    let front0: Vec<Objectives> = fronts[0].iter().map(|&i| objs[i].unwrap()).collect();
+    let ref_point = j.get("ref_point").unwrap();
+    let hv = nsga::hypervolume(
+        &front0,
+        ref_point.get("est_loss").and_then(|v| v.as_f64()).unwrap(),
+        ref_point.get("power_norm").and_then(|v| v.as_f64()).unwrap(),
+    );
+    assert_eq!(
+        hv,
+        j.get("expected_hypervolume_front0").and_then(|v| v.as_f64()).unwrap(),
+        "hypervolume must be bit-exact"
+    );
+}

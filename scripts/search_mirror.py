@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Independent transliteration of the NSGA machinery in
+rust/src/search/nsga.rs, cross-checked against the checked-in fixture
+rust/tests/fixtures/search_front.json — the same file the Rust test
+`nsga_matches_checked_in_fixture` pins. If the two disagree, one of the
+transliterations drifted (same spirit as scripts/srclint_mirror.py and
+scripts/schedules_mirror.py).
+
+    python3 scripts/search_mirror.py           # prints and checks everything
+
+All fixture objectives are exact binary fractions, so Rust and Python
+float arithmetic cannot diverge: every comparison below is exact
+equality, not tolerance-based.
+"""
+import json
+import math
+import os
+import sys
+
+INF = math.inf
+
+# ------------------------------------------------------------- machinery
+# Candidates are (est_loss, power_norm) tuples or None (infeasible).
+
+
+def dominates(a, b):
+    """Strict Pareto dominance, both axes minimized."""
+    return a[0] <= b[0] and a[1] <= b[1] and (a[0] < b[0] or a[1] < b[1])
+
+
+def fast_nondominated_sort(objs):
+    """Fronts of candidate indices, each in ascending index order; all
+    infeasible candidates form one final front."""
+    feasible = [i for i, o in enumerate(objs) if o is not None]
+    infeasible = [i for i, o in enumerate(objs) if o is None]
+    fronts = []
+    if feasible:
+        dominated_by = [0] * len(objs)
+        dominates_list = [[] for _ in objs]
+        for ai, a in enumerate(feasible):
+            for b in feasible[ai + 1:]:
+                if dominates(objs[a], objs[b]):
+                    dominates_list[a].append(b)
+                    dominated_by[b] += 1
+                elif dominates(objs[b], objs[a]):
+                    dominates_list[b].append(a)
+                    dominated_by[a] += 1
+        current = [i for i in feasible if dominated_by[i] == 0]
+        while current:
+            nxt = []
+            for i in current:
+                for j in dominates_list[i]:
+                    dominated_by[j] -= 1
+                    if dominated_by[j] == 0:
+                        nxt.append(j)
+            nxt.sort()
+            fronts.append(current)
+            current = nxt
+    if infeasible:
+        fronts.append(infeasible)
+    return fronts
+
+
+def crowding_distance(objs, front):
+    """Crowding distances aligned with `front`'s positions. Boundaries are
+    +inf; interior members accumulate normalized neighbour gaps per axis;
+    objective sorts tie-break on candidate index."""
+    d = [0.0] * len(front)
+    if not front:
+        return d
+    if objs[front[0]] is None:
+        return [INF] * len(front)
+    for axis in range(2):
+        def value(pos):
+            return objs[front[pos]][axis]
+        order = sorted(range(len(front)), key=lambda p: (value(p), front[p]))
+        first, last = order[0], order[-1]
+        d[first] = INF
+        d[last] = INF
+        rng = value(last) - value(first)
+        if rng > 0.0:
+            for w in range(len(order) - 2):
+                prev, mid, nxt = order[w], order[w + 1], order[w + 2]
+                d[mid] += (value(nxt) - value(prev)) / rng
+    return d
+
+
+def survivors(objs, n):
+    """Whole fronts while they fit, then crowding-descending truncation
+    with ascending-index tie-breaks."""
+    keep = []
+    for front in fast_nondominated_sort(objs):
+        if len(keep) >= n:
+            break
+        room = n - len(keep)
+        if len(front) <= room:
+            keep.extend(front)
+            continue
+        d = crowding_distance(objs, front)
+        order = sorted(range(len(front)), key=lambda p: (-d[p], front[p]))
+        keep.extend(front[p] for p in order[:room])
+    return keep
+
+
+def hypervolume(points, ref_loss, ref_power):
+    """2-D staircase area toward the reference point; members outside the
+    reference box contribute nothing."""
+    pts = sorted(p for p in points if p[0] < ref_loss and p[1] < ref_power)
+    hv = 0.0
+    best_power = ref_power
+    for loss, power in pts:
+        if power < best_power:
+            hv += (ref_loss - loss) * (best_power - power)
+            best_power = power
+    return hv
+
+
+# ------------------------------------------------------------ cross-check
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "rust", "tests", "fixtures", "search_front.json")
+    with open(path) as f:
+        fx = json.load(f)
+
+    objs = [None if c is None else (c["est_loss"], c["power_norm"])
+            for c in fx["candidates"]]
+    ok = True
+
+    def check(name, got, want):
+        nonlocal ok
+        mark = "ok" if got == want else "MISMATCH"
+        if mark != "ok":
+            ok = False
+        print(f"{name}: {got} (expect {want}) {mark}")
+
+    fronts = fast_nondominated_sort(objs)
+    check("fronts", fronts, fx["expected_fronts"])
+
+    want_crowding = [[INF if v is None else v for v in front]
+                     for front in fx["expected_crowding"]]
+    got_crowding = [crowding_distance(objs, front) for front in fronts]
+    check("crowding", got_crowding, want_crowding)
+
+    check("survivors(4)", survivors(objs, 4), fx["expected_survivors_4"])
+    check("survivors(7)", survivors(objs, 7), fx["expected_survivors_7"])
+
+    ref = fx["ref_point"]
+    front0 = [objs[i] for i in fronts[0]]
+    check("hypervolume(front0)",
+          hypervolume(front0, ref["est_loss"], ref["power_norm"]),
+          fx["expected_hypervolume_front0"])
+
+    # internal consistency, independent of the fixture: no front member is
+    # dominated by another member of the same or a later front
+    for r, front in enumerate(fronts):
+        for i in front:
+            if objs[i] is None:
+                continue
+            for later in fronts[r:]:
+                for j in later:
+                    if j != i and objs[j] is not None and dominates(objs[j], objs[i]):
+                        print(f"MISMATCH: candidate {i} in front {r} "
+                              f"dominated by {j}")
+                        ok = False
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

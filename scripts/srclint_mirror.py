@@ -55,6 +55,10 @@ DETERMINISTIC_MODULES = [
     "rust/src/util/rng.rs",
     "rust/src/util/prop.rs",
     "rust/src/nn/testutil.rs",
+    "rust/src/search/mod.rs",
+    "rust/src/search/genome.rs",
+    "rust/src/search/evaluate.rs",
+    "rust/src/search/nsga.rs",
 ]
 
 HOT_PATH_DIRS = ["rust/src/coordinator/", "rust/src/fault/"]

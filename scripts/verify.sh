@@ -58,6 +58,18 @@ cargo build --release
 echo "== srclint: project invariants (R1-R5) =="
 ./target/release/cvapprox srclint --json LINT_report.json
 
+# NSGA machinery mirror: scripts/search_mirror.py independently re-derives
+# the non-dominated fronts, crowding distances, survivor selection and
+# hypervolume from the checked-in fixture
+# (rust/tests/fixtures/search_front.json) — the same numbers the Rust
+# search suite pins — so a drift in either transliteration fails fast.
+if command -v python3 >/dev/null 2>&1; then
+    echo "== search mirror: NSGA fixture cross-check =="
+    python3 scripts/search_mirror.py
+else
+    echo "warning: python3 not installed; skipping search mirror" >&2
+fi
+
 echo "== tier-1: cargo test -q =="
 run_guarded cargo test -q
 
@@ -157,6 +169,18 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
             cargo bench -p cvapprox --bench chaos
     done
     require_artifact BENCH_fault.json
+
+    # Co-design search: the seeded NSGA-II genome/assignment search vs the
+    # greedy ladder. The bench asserts a byte-identical SEARCH_pareto.json
+    # at 1 and 4 workers, strict dominance over the greedy-paired rung, a
+    # hypervolume no smaller than the greedy ladder's, and a power-monotone
+    # merged ladder with at least one searched rung installed — so a
+    # nonzero exit here is a real regression.
+    echo "== search smoke: codesign_search (quick budgets) =="
+    run_guarded env CVAPPROX_BENCH_QUICK=1 \
+        cargo bench -p cvapprox --bench codesign_search
+    require_artifact BENCH_search.json
+    require_artifact SEARCH_pareto.json
 fi
 
 # Lint gates (after the correctness gates, so a style failure never masks a
